@@ -1,0 +1,96 @@
+//! End-to-end driver: quantized ResNet-18 (CIFAR variant, batch 1) inference
+//! through the full system — functional + cycle simulation on every layer,
+//! all paper precisions, plus the PJRT golden cross-check when artifacts are
+//! present. This is the run recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example resnet18_e2e
+//! ```
+
+use quark::arch::MachineConfig;
+use quark::nn::model::{ModelRunner, Precision};
+use quark::nn::resnet::resnet18_cifar;
+use quark::sim::{Sim, SimMode};
+
+fn run(cfg: MachineConfig, precision: Precision, full: bool) -> (Vec<quark::nn::LayerReport>, f64) {
+    let net = resnet18_cifar(100);
+    let mut sim = Sim::new(cfg);
+    // `Full` executes every instruction functionally (data really flows);
+    // TimingOnly produces identical cycle counts (asserted in the tests).
+    sim.set_mode(if full { SimMode::Full } else { SimMode::TimingOnly });
+    let t0 = std::time::Instant::now();
+    let reports = ModelRunner::run(&mut sim, &net, precision, full);
+    (reports, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    println!("=== quantized ResNet-18 / CIFAR-100-scale input, batch 1 ===\n");
+    let configs: Vec<(MachineConfig, Precision, bool)> = vec![
+        // Full functional execution for the two headline configs; the rest
+        // timing-only (identical cycles, ~5x faster wall-clock).
+        (MachineConfig::ara(4), Precision::Int8, true),
+        (MachineConfig::ara(4), Precision::Fp32, false),
+        (MachineConfig::quark(4), Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true }, false),
+        (MachineConfig::quark(4), Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true }, true),
+        (MachineConfig::quark(4), Precision::Sub { abits: 2, wbits: 2, use_vbitpack: false }, false),
+    ];
+
+    let mut table: Vec<(String, String, Vec<(String, u64)>, u64, f64, f64)> = Vec::new();
+    for (cfg, prec, full) in configs {
+        let name = cfg.name.clone();
+        let freq = cfg.freq_ghz;
+        eprintln!("running {} {} ({})…", name, prec.label(), if full { "full" } else { "timing" });
+        let (reports, wall) = run(cfg, prec, full);
+        let total: u64 = reports.iter().map(|r| r.run.cycles).sum();
+        let per_layer: Vec<(String, u64)> = reports
+            .iter()
+            .filter(|r| r.quantized)
+            .map(|r| (r.name.clone(), r.run.cycles))
+            .collect();
+        let ms = total as f64 / (freq * 1e6);
+        table.push((name, prec.label(), per_layer, total, ms, wall));
+    }
+
+    // Per-layer speedups vs Ara int8 (paper Fig. 3's view).
+    let base = table[0].2.clone();
+    println!("\nper-layer speedup over ara-4l int8:");
+    println!("{:<18} {:>12} {:>8} {:>8} {:>8} {:>12}", "layer", "int8 cyc", "fp32", "w1a1", "w2a2", "w2a2-novbp");
+    for (li, (lname, bcyc)) in base.iter().enumerate() {
+        print!("{:<18} {:>12}", lname, bcyc);
+        for entry in &table[1..] {
+            let c = entry.2[li].1;
+            print!(" {:>7.2}x", *bcyc as f64 / c as f64);
+        }
+        println!();
+    }
+
+    println!("\nend-to-end (all layers incl. stem/pool):");
+    println!("{:<12} {:<12} {:>14} {:>10} {:>12}", "machine", "precision", "device cycles", "device ms", "host sim s");
+    for (name, prec, _, total, ms, wall) in &table {
+        println!("{name:<12} {prec:<12} {total:>14} {ms:>10.3} {wall:>12.1}");
+    }
+    let int8 = table[0].3 as f64;
+    println!("\nnetwork speedups vs ara-4l int8 (quantized layers + glue):");
+    for (name, prec, _, total, _, _) in &table[1..] {
+        println!("  {name} {prec}: {:.2}x", int8 / *total as f64);
+    }
+
+    // Golden cross-check through PJRT, if the AOT artifacts exist.
+    if std::path::Path::new("artifacts/qgemm.hlo.txt").exists() {
+        println!("\nPJRT golden cross-check (L1 Pallas → AOT → xla crate):");
+        match quark::runtime::Runtime::cpu() {
+            Ok(rt) => match quark::coordinator::golden::crosscheck_qgemm(&rt, "artifacts/qgemm.hlo.txt", 7) {
+                Ok(r) => println!(
+                    "  {} accumulators, {} mismatches — simulator == JAX == oracle {}",
+                    r.checked,
+                    r.mismatches,
+                    if r.mismatches == 0 { "✓" } else { "✗" }
+                ),
+                Err(e) => println!("  crosscheck failed: {e}"),
+            },
+            Err(e) => println!("  PJRT unavailable: {e}"),
+        }
+    } else {
+        println!("\n(run `make artifacts` to enable the PJRT golden cross-check)");
+    }
+}

@@ -1,0 +1,32 @@
+//! Roofline sweep (paper Fig. 4): conv2d 3×3 over input sizes,
+//! Quark-8-lane (2-bit bit-serial) vs Ara-4-lane (int8) — the two designs
+//! occupy the same 1.09 mm² die and power budget (Table II), so raw GOPS is
+//! the fair comparison.
+//!
+//! ```sh
+//! cargo run --release --offline --example roofline_sweep
+//! ```
+
+use quark::report::fig4;
+
+fn main() {
+    let fig = fig4::generate(&[4, 8, 16, 32, 56]);
+    println!("{}", fig.markdown());
+
+    // ASCII roofline, log-log-ish.
+    println!("roofline sketch (log AI → attainable GOPS):");
+    for roof in &fig.roofs {
+        println!("\n{} (peak {:.0} GOPS, BW {:.0} GB/s, ridge {:.1} ops/B)", roof.name, roof.peak_gops, roof.mem_gbs, roof.ridge());
+        let mut ai = 0.125f64;
+        while ai <= 512.0 {
+            let g = roof.attainable(ai);
+            let bar = "#".repeat(((g / roof.peak_gops) * 50.0) as usize);
+            println!("  {:>7.2} ops/B | {bar} {:.0}", ai, g);
+            ai *= 4.0;
+        }
+    }
+    println!("\nmeasured points:");
+    for p in &fig.points {
+        println!("  {:<22} AI {:>6.2}  {:>7.1} GOPS  ({:.0}% of roof)", p.label, p.ai, p.gops, p.efficiency * 100.0);
+    }
+}

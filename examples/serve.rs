@@ -1,0 +1,50 @@
+//! Serving demo: start the coordinator (pool of simulated Quark cores +
+//! dynamic batcher) and drive it with an in-process client load, reporting
+//! throughput and latency percentiles — the L3 runtime in action.
+//!
+//! ```sh
+//! cargo run --release --offline --example serve
+//! ```
+//! (For the TCP front-end use `repro serve` and talk to it with netcat.)
+
+use std::time::{Duration, Instant};
+
+use quark::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+
+fn main() {
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.workers = 2;
+    cfg.batch_size = 4;
+    cfg.batch_timeout = Duration::from_millis(10);
+    println!(
+        "coordinator: {} workers ({}), precision {:?}, batch ≤ {}",
+        cfg.workers, cfg.machine.name, cfg.precision, cfg.batch_size
+    );
+    let coord = Coordinator::start(cfg);
+
+    let n = 24u64;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|id| coord.submit(InferenceRequest { id, input: vec![(id % 4) as u8; 32 * 32 * 3] }))
+        .collect();
+    let mut responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let wall = t0.elapsed();
+    responses.sort_by_key(|r| r.id);
+
+    let mut lat: Vec<f64> =
+        responses.iter().map(|r| (r.queue_time + r.service_time).as_secs_f64() * 1e3).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((lat.len() as f64 - 1.0) * p) as usize];
+    let device_us: f64 = responses.iter().map(|r| r.device_us).sum::<f64>() / n as f64;
+    let batches: std::collections::HashSet<u64> = responses.iter().map(|r| r.batch_id).collect();
+
+    println!("\nserved {n} requests in {:.2}s → {:.1} req/s (host)", wall.as_secs_f64(), n as f64 / wall.as_secs_f64());
+    println!("batches formed : {} (avg {:.1} req/batch)", batches.len(), n as f64 / batches.len() as f64);
+    println!("device latency : {:.0} us/request (simulated {} @ {:.2} GHz)", device_us, coord.config().machine.name, coord.config().machine.freq_ghz);
+    println!("host latency   : p50 {:.0} ms, p90 {:.0} ms, p99 {:.0} ms", pct(0.5), pct(0.9), pct(0.99));
+    let per_worker: Vec<usize> = (0..coord.config().workers)
+        .map(|w| responses.iter().filter(|r| r.worker == w).count())
+        .collect();
+    println!("per-worker load: {per_worker:?}");
+    coord.shutdown();
+}

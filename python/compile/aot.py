@@ -1,0 +1,88 @@
+"""AOT export: lower the L2/L1 computations once, write HLO **text**.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). Lowered with ``return_tuple=True``;
+the Rust runtime unwraps with ``to_tuple``.
+
+Artifacts (under ``artifacts/``):
+  qgemm.hlo.txt   — bit-serial quantized GEMM (ACC, ASUM), M=8 K=128 N=16,
+                    W2A2. The coordinator's golden cross-check target — its
+                    shapes are mirrored in rust/src/coordinator/golden.rs.
+  qconv.hlo.txt   — one quantized conv layer (ACC, ASUM), 8×8×64 → 64, 3×3.
+  qnet.hlo.txt    — the small end-to-end quantized net (logits), weights
+                    baked as constants (seed 0).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.bitserial import qgemm
+
+# Cross-check shapes (mirrored in rust/src/coordinator/golden.rs).
+QGEMM_M, QGEMM_K, QGEMM_N, QGEMM_BITS = 8, 128, 16, 2
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_qgemm() -> str:
+    a = jax.ShapeDtypeStruct((QGEMM_M, QGEMM_K), jnp.int32)
+    w = jax.ShapeDtypeStruct((QGEMM_K, QGEMM_N), jnp.int32)
+    fn = lambda a, w: qgemm(a, w, QGEMM_BITS, QGEMM_BITS)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(a, w))
+
+
+def lower_qconv() -> str:
+    net = model.make_qnet(seed=0)
+    conv = net.convs[0]._replace(stride=1)  # 16x16x64 → 64, full K=576
+    x = jax.ShapeDtypeStruct((16, 16, 64), jnp.int32)
+    fn = lambda x: model.qconv2d_acc(x, conv)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(x))
+
+
+def lower_qnet() -> str:
+    net = model.make_qnet(seed=0)
+    x = jax.ShapeDtypeStruct((16, 16, 64), jnp.int32)
+    fn = lambda x: (model.qnet_forward(net, x),)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(x))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="qgemm|qconv|qnet")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    jobs = {
+        "qgemm": lower_qgemm,
+        "qconv": lower_qconv,
+        "qnet": lower_qnet,
+    }
+    if args.only:
+        jobs = {args.only: jobs[args.only]}
+    for name, fn in jobs.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = fn()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""L1 — the bit-serial sub-byte GEMM as a Pallas kernel.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): Quark implements
+paper Eq. (1) with per-lane `vand`/`vpopcnt`/`vshacc` over 64-bit VRF words;
+a TPU has no per-lane popcount and wants dense tiles in VMEM, so the same
+insight — replace an m×n-bit multiply by AND+popcount over bit planes —
+is re-expressed as:
+
+* activations and weights are *bit-plane packed* into uint32 words (the
+  bit-stream format `vbitpack` produces in hardware; here packing is a few
+  reshape/shift ops in the surrounding jax function),
+* the kernel tiles the output (BlockSpec over [bm, bn] tiles, the full packed
+  K dimension resident per tile — the VMEM analogue of Quark's weights-
+  resident VRF schedule),
+* AND + a SWAR popcount (no native popcount op in XLA:CPU → the classic
+  bit-twiddling reduction, fully vectorizable on the VPU) + shift-accumulate
+  over the ≤4 plane pairs.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO which both jax and the Rust
+runtime's PJRT client execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def popcount32(x):
+    """SWAR popcount of a uint32 tensor (Hacker's Delight 5-2)."""
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
+
+
+def pack_rows(codes, bits: int):
+    """Pack unsigned codes row-wise into bit planes.
+
+    codes: int32 [R, K] → uint32 [bits, R, ceil(K/32)], little-endian bits
+    (bit k%32 of word k//32 = bit p of codes[r, k]) — the jnp mirror of the
+    hardware `vbitpack` layout and of rust `pack_bit_planes`.
+    """
+    r, k = codes.shape
+    kw = -(-k // 32)
+    padded = jnp.zeros((r, kw * 32), jnp.uint32).at[:, :k].set(codes.astype(jnp.uint32))
+    lanes = padded.reshape(r, kw, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, None, :]
+    planes = [
+        jnp.sum(((lanes >> jnp.uint32(p)) & jnp.uint32(1)) * weights, axis=2, dtype=jnp.uint32)
+        for p in range(bits)
+    ]
+    return jnp.stack(planes)  # [bits, R, KW]
+
+
+def _qgemm_kernel(a_ref, w_ref, o_ref, *, abits: int, wbits: int):
+    """One [bm, bn] output tile: Σ_p Σ_q 2^(p+q) Σ_kw popcount(a & w)."""
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for p in range(abits):
+        a = a_ref[p]  # [bm, KW] uint32
+        for q in range(wbits):
+            w = w_ref[q]  # [KW, bn] uint32
+            anded = a[:, :, None] & w[None, :, :]  # [bm, KW, bn]
+            pc = popcount32(anded).astype(jnp.int32)
+            part = jnp.sum(pc, axis=1)  # [bm, bn]
+            acc = acc + (part << (p + q))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("abits", "wbits", "bm", "bn"))
+def qgemm_bitserial(a_codes, w_codes, abits: int, wbits: int, bm: int = 8, bn: int = 64):
+    """Bit-serial integer GEMM: ACC[M,N] = a_codes[M,K] @ w_codes[K,N].
+
+    Inputs are unsigned codes (int32, values < 2**bits). Exact integer result,
+    identical to `ref.qgemm_ref`'s ACC.
+    """
+    m, k = a_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2
+    a_planes = pack_rows(a_codes, abits)  # [abits, M, KW]
+    w_planes = pack_rows(w_codes.T, wbits).transpose(0, 2, 1)  # [wbits, KW, N]
+    kw = a_planes.shape[2]
+
+    bm = min(bm, m)
+    bn = min(bn, n)
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    a_planes = jnp.pad(a_planes, ((0, 0), (0, mp - m), (0, 0)))
+    w_planes = jnp.pad(w_planes, ((0, 0), (0, 0), (0, np_ - n)))
+
+    acc = pl.pallas_call(
+        functools.partial(_qgemm_kernel, abits=abits, wbits=wbits),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((abits, bm, kw), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((wbits, kw, bn), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(a_planes, w_planes)
+    return acc[:m, :n]
+
+
+def qgemm(a_codes, w_codes, abits: int, wbits: int):
+    """The L2-facing op: (ACC, ASUM) — everything the requant step needs."""
+    acc = qgemm_bitserial(a_codes, w_codes, abits, wbits)
+    asum = jnp.sum(a_codes.astype(jnp.int32), axis=1)
+    return acc, asum

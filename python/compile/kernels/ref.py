@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the bit-serial kernels.
+
+These are the CORE correctness signal: the Pallas kernel (bitserial.py) must
+match them exactly (integer arithmetic — `assert_array_equal`, not allclose),
+and the Rust simulator's `vand`/`vpopcnt`/`vshacc` pipeline is cross-checked
+against the same numbers through the AOT artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qgemm_ref(a_codes, w_codes):
+    """Integer GEMM over unsigned codes.
+
+    a_codes: int32 [M, K] (values < 2**abits)
+    w_codes: int32 [K, N] (values < 2**wbits)
+    Returns (acc int32 [M, N], asum int32 [M]).
+    """
+    acc = jnp.matmul(a_codes.astype(jnp.int32), w_codes.astype(jnp.int32))
+    asum = jnp.sum(a_codes.astype(jnp.int32), axis=1)
+    return acc, asum
+
+
+def pack_planes_ref(codes, bits: int):
+    """Bit-plane packing oracle (mirrors rust `pack_bit_planes`).
+
+    codes: int32 [K] → uint32 planes [bits, ceil(K/32)] little-endian bits.
+    (32-bit words here: jnp has no uint64 enabled by default.)
+    """
+    k = codes.shape[0]
+    kw = -(-k // 32)
+    padded = jnp.zeros((kw * 32,), jnp.uint32).at[:k].set(codes.astype(jnp.uint32))
+    lanes = padded.reshape(kw, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[None, :]
+    planes = []
+    for p in range(bits):
+        bitsp = (lanes >> jnp.uint32(p)) & jnp.uint32(1)
+        planes.append(jnp.sum(bitsp * weights, axis=1, dtype=jnp.uint32))
+    return jnp.stack(planes)
+
+
+def bitserial_expand_ref(a_codes, w_codes, abits: int, wbits: int):
+    """Eq. (1) evaluated literally: Σ_p Σ_q 2^(p+q) · (plane_p(a) @ plane_q(w)).
+
+    Validates that the plane decomposition itself is exact."""
+    m, k = a_codes.shape
+    _, n = w_codes.shape
+    acc = jnp.zeros((m, n), jnp.int32)
+    for p in range(abits):
+        ap = (a_codes >> p) & 1
+        for q in range(wbits):
+            wq = (w_codes >> q) & 1
+            acc = acc + (2 ** (p + q)) * jnp.matmul(ap, wq)
+    return acc

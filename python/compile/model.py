@@ -1,0 +1,171 @@
+"""L2 — quantized model forward passes in JAX, calling the L1 kernel.
+
+Mirrors the computation graph of paper Fig. 2: integer conv/linear via the
+bit-serial kernel (`kernels.bitserial.qgemm`), followed by the full-precision
+re-scale + clip + round (the step Quark keeps on the CVA6 scalar FPU), layer
+after layer. All tensors on the integer path are unsigned codes (int32 here;
+u8 in the Rust runtime).
+
+Python never runs at inference time: `aot.py` lowers these functions once to
+HLO text and the Rust runtime executes them through PJRT as the golden model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.bitserial import qgemm
+from .quantize import quantize_weights_unsigned, requantize
+
+
+def im2col(x, kh: int, kw: int, stride: int, pad: int):
+    """NHWC im2col: x [H, W, C] → patches [OH*OW, kh*kw*C] (zero-padded).
+
+    Patch element order is (kh, kw, c) — identical to the Rust kernels'
+    patch layout, so K-dim indices line up across the stack.
+    """
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    idx_y = (jnp.arange(oh) * stride)[:, None] + jnp.arange(kh)[None, :]  # [OH, KH]
+    idx_x = (jnp.arange(ow) * stride)[:, None] + jnp.arange(kw)[None, :]  # [OW, KW]
+    # Gather [OH, KH, OW, KW, C] then reorder to [OH, OW, KH, KW, C].
+    patches = xp[idx_y][:, :, idx_x]  # [OH, KH, OW, KW, C]
+    patches = patches.transpose(0, 2, 1, 3, 4)
+    return patches.reshape(oh * ow, kh * kw * c), oh, ow
+
+
+class QConvParams(NamedTuple):
+    """One quantized conv layer (codes + folded scales)."""
+
+    w_codes: jax.Array  # int32 [K, N]
+    w_alpha: float
+    w_beta: float
+    bias: jax.Array  # f32 [N]
+    kh: int
+    kw: int
+    stride: int
+    pad: int
+    abits: int
+    wbits: int
+    out_bits: int
+
+
+def qconv2d(x_codes, act_scale, p: QConvParams, out_scale):
+    """Quantized conv: integer ACC/ASUM via the Pallas kernel, then the
+    scalar-style requant. Returns (codes int32 [OH, OW, N], out_scale)."""
+    patches, oh, ow = im2col(x_codes, p.kh, p.kw, p.stride, p.pad)
+    acc, asum = qgemm(patches, p.w_codes, p.abits, p.wbits)
+    out = requantize(
+        acc, asum[:, None], act_scale, p.w_alpha, p.w_beta, p.bias[None, :], out_scale, p.out_bits
+    )
+    n = p.w_codes.shape[1]
+    return out.reshape(oh, ow, n)
+
+
+def qconv2d_acc(x_codes, p: QConvParams):
+    """The pre-requant integer result (ACC, ASUM) — what the Rust coordinator
+    cross-checks against the simulated `vand`/`vpopcnt`/`vshacc` pipeline."""
+    patches, _, _ = im2col(x_codes, p.kh, p.kw, p.stride, p.pad)
+    return qgemm(patches, p.w_codes, p.abits, p.wbits)
+
+
+# ---------------------------------------------------------------------------
+# A small end-to-end quantized network (the AOT e2e artifact).
+# ---------------------------------------------------------------------------
+
+
+class QNet(NamedTuple):
+    convs: tuple
+    act_scales: tuple  # input scale per conv
+    out_scales: tuple
+    fc_w: jax.Array  # int32 [C, classes]
+    fc_alpha: float
+    fc_beta: float
+    fc_in_scale: float
+
+
+def make_qnet(seed: int = 0, abits: int = 2, wbits: int = 2, classes: int = 10) -> QNet:
+    """3 quantized convs (64→64→128 with stride-2 downsampling from 16×16)
+    + GAP + quantized FC. Weights are seeded random floats quantized with the
+    same affine scheme the Rust side uses."""
+    rng = np.random.default_rng(seed)
+    convs = []
+    shapes = [
+        (16, 64, 64, 3, 1),  # (hw_in, cin, cout, ksize, stride)
+        (16, 64, 128, 3, 2),
+        (8, 128, 128, 3, 1),
+    ]
+    for _, cin, cout, ksz, stride in shapes:
+        k = ksz * ksz * cin
+        wf = rng.normal(0, 0.1, (k, cout)).astype(np.float32)
+        codes, alpha, beta = quantize_weights_unsigned(jnp.asarray(wf), wbits)
+        convs.append(
+            QConvParams(
+                w_codes=codes,
+                w_alpha=float(alpha),
+                w_beta=float(beta),
+                bias=jnp.asarray(rng.normal(0, 0.01, cout).astype(np.float32)),
+                kh=ksz,
+                kw=ksz,
+                stride=stride,
+                pad=1,
+                abits=abits,
+                wbits=wbits,
+                out_bits=abits,
+            )
+        )
+    fcf = rng.normal(0, 0.1, (128, classes)).astype(np.float32)
+    fc_codes, fc_alpha, fc_beta = quantize_weights_unsigned(jnp.asarray(fcf), wbits)
+    return QNet(
+        convs=tuple(convs),
+        act_scales=(0.05, 0.05, 0.05),
+        out_scales=(0.05, 0.05, 0.05),
+        fc_w=fc_codes,
+        fc_alpha=float(fc_alpha),
+        fc_beta=float(fc_beta),
+        fc_in_scale=0.05,
+    )
+
+
+def qnet_forward(net: QNet, x_codes):
+    """x_codes: int32 [16, 16, 64] activation codes → f32 logits [classes]."""
+    x = x_codes
+    for conv, s_in, s_out in zip(net.convs, net.act_scales, net.out_scales):
+        x = qconv2d(x, s_in, conv, s_out)
+    # Global average pool in the integer domain (sum; the 1/HW folds into
+    # the FC input scale like the Rust avgpool's requant).
+    h, w, c = x.shape
+    pooled = jnp.sum(x.reshape(h * w, c), axis=0) // (h * w)
+    acc, asum = qgemm(pooled[None, :], net.fc_w, net.convs[0].abits, net.convs[0].wbits)
+    logits = net.fc_in_scale * (
+        net.fc_alpha * acc[0].astype(jnp.float32) + net.fc_beta * asum[0].astype(jnp.float32)
+    )
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Float reference for the quantized conv (sanity: codes → reals agreement).
+# ---------------------------------------------------------------------------
+
+
+def qconv2d_float_ref(x_codes, act_scale, p: QConvParams):
+    """Dequantize codes and convolve in f32 — the real-valued function the
+    integer pipeline approximates. Used by tests to bound the requant error."""
+    patches, oh, ow = im2col(x_codes, p.kh, p.kw, p.stride, p.pad)
+    a_real = act_scale * patches.astype(jnp.float32)
+    w_real = p.w_alpha * p.w_codes.astype(jnp.float32) + p.w_beta
+    out = a_real @ w_real + p.bias[None, :]
+    return out.reshape(oh, ow, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("abits", "wbits"))
+def qgemm_with_asum(a_codes, w_codes, abits: int, wbits: int):
+    """The artifact entry point for the Rust cross-check."""
+    return qgemm(a_codes, w_codes, abits, wbits)

@@ -1,0 +1,104 @@
+"""LSQ-style quantizers (L2, build-time only).
+
+The integer semantics here mirror ``rust/src/quant`` exactly — the
+coordinator's golden cross-check depends on both sides producing identical
+codes:
+
+* activations: unsigned ``n``-bit codes, ``a_real = s_a * a_u`` (zero-point 0,
+  post-ReLU);
+* weights: affine unsigned codes ``w_real = alpha * w_u + beta`` with
+  ``alpha = s_w``, ``beta = -s_w * 2**(m-1)`` for ``m >= 2`` (offset binary)
+  and ``alpha = 2 s_w``, ``beta = -s_w`` for binary weights;
+* a quantized matmul/conv then decomposes as
+  ``out = s_a * (alpha * ACC + beta * ASUM)`` with integer
+  ``ACC = sum w_u a_u`` (the bit-serial kernel) and ``ASUM = sum a_u``.
+
+LSQ [Esser et al., ICLR'20] learns the step sizes ``s_a, s_w`` by gradient
+descent with a straight-through estimator and the 1/sqrt(Q·N) gradient scale;
+``lsq_quantize`` implements that for ``train_lsq.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def round_ste(x):
+    """Round with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "signed"))
+def lsq_quantize(x, step, bits: int, signed: bool):
+    """LSQ fake-quantization of `x` with learnable `step`.
+
+    Returns the dequantized tensor; gradients flow to both `x` (STE) and
+    `step` (LSQ's scaled gradient).
+    """
+    if signed:
+        qn, qp = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        if bits == 1:
+            # Binary weights {-s, +s}; straight-through gradient to x.
+            g = 1.0 / math.sqrt(x.size)
+            s = step * g + jax.lax.stop_gradient(step * (1.0 - g))
+            sign = jnp.where(x >= 0, 1.0, -1.0)
+            sign_ste = x + jax.lax.stop_gradient(sign - x)
+            return s * sign_ste
+    else:
+        qn, qp = 0, 2**bits - 1
+    grad_scale = 1.0 / math.sqrt(x.size * qp) if qp > 0 else 1.0
+    s = step * grad_scale + jax.lax.stop_gradient(step * (1.0 - grad_scale))
+    v = jnp.clip(x / s, qn, qp)
+    return round_ste(v) * s
+
+
+# ---------------------------------------------------------------------------
+# Inference-side static quantizers (exact mirrors of rust/src/quant/lsq.rs).
+# ---------------------------------------------------------------------------
+
+
+def quantize_activations(a, bits: int):
+    """Unsigned activation codes + scale. Mirrors `quantize_activations`."""
+    maxv = jnp.maximum(jnp.max(a), 1e-8)
+    qmax = 2**bits - 1
+    scale = maxv / qmax
+    # jnp.round implements round-half-to-even, like the Rust side.
+    codes = jnp.clip(jnp.round(a / scale), 0, qmax).astype(jnp.int32)
+    return codes, scale
+
+
+def quantize_weights_unsigned(w, bits: int):
+    """Affine unsigned weight codes. Mirrors `quantize_weights_unsigned`.
+
+    Returns (codes int32, alpha, beta).
+    """
+    if bits == 1:
+        s = jnp.maximum(jnp.mean(jnp.abs(w)), 1e-8)
+        codes = (w >= 0).astype(jnp.int32)
+        return codes, 2.0 * s, -s
+    absmax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    qmax_side = 2 ** (bits - 1) - 1
+    s = absmax / qmax_side
+    offset = 2 ** (bits - 1)
+    q = jnp.clip(jnp.round(w / s), -offset, qmax_side).astype(jnp.int32)
+    return q + offset, s, -s * offset
+
+
+def dequantize_weights(codes, alpha, beta):
+    return alpha * codes.astype(jnp.float32) + beta
+
+
+def requantize(acc, asum, act_scale, w_alpha, w_beta, bias, out_scale, out_bits: int):
+    """Fig. 2's "Div/Mul + Clip + Round" (the scalar-FPU step on Quark).
+
+    Mirrors `requantize_golden` in rust/src/quant/requant.rs.
+    """
+    alpha = act_scale * w_alpha / out_scale
+    beta = act_scale * w_beta / out_scale
+    t = alpha * acc.astype(jnp.float32) + beta * asum.astype(jnp.float32) + bias / out_scale
+    qmax = 2**out_bits - 1
+    return jnp.clip(jnp.round(t), 0, qmax).astype(jnp.int32)

@@ -1,0 +1,197 @@
+"""Table I substitution: LSQ quantization-aware training at W/A ∈
+{FP32, 8/8, 2/2, 1/1}.
+
+The paper trains ResNet-18 on CIFAR-100 (a multi-GPU-hour job); neither the
+dataset nor the compute exists in this environment, so per DESIGN.md we
+reproduce the *shape* of Table I at reduced scale: a ResNet-style CNN trained
+on a synthetic CIFAR-like task (32×32×3, 10 classes, class templates +
+noise + random affine distortion — hard enough that capacity matters). The
+qualitative result to reproduce: W1A1 loses significant accuracy, W2A2 is
+within a point or two of FP32, W8A8 ≈ FP32.
+
+First and last layers stay full precision, as in the paper.
+
+Writes `artifacts/table1.tsv` (precision<TAB>accuracy), consumed by
+`repro report table1`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quantize import lsq_quantize
+
+
+# ---------------------------------------------------------------------------
+# Synthetic CIFAR-scale dataset.
+# ---------------------------------------------------------------------------
+
+
+def make_dataset(n_train=4096, n_test=1024, classes=10, seed=0):
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(0, 1, (classes, 32, 32, 3)).astype(np.float32)
+    # Smooth the templates so shifts matter (low-frequency class structure).
+    for _ in range(2):
+        templates = (
+            templates
+            + np.roll(templates, 1, 1)
+            + np.roll(templates, -1, 1)
+            + np.roll(templates, 1, 2)
+            + np.roll(templates, -1, 2)
+        ) / 5.0
+
+    def sample(n, rng):
+        y = rng.integers(0, classes, n)
+        x = templates[y]
+        # Random shift ±3 px + per-sample gain + strong noise.
+        for i in range(n):
+            x[i] = np.roll(x[i], rng.integers(-3, 4), axis=0)
+            x[i] = np.roll(x[i], rng.integers(-3, 4), axis=1)
+        gain = rng.uniform(0.7, 1.3, (n, 1, 1, 1)).astype(np.float32)
+        noise = rng.normal(0, 0.6, x.shape).astype(np.float32)
+        return (x * gain + noise).astype(np.float32), y.astype(np.int32)
+
+    xtr, ytr = sample(n_train, rng)
+    xte, yte = sample(n_test, rng)
+    return (jnp.asarray(xtr), jnp.asarray(ytr)), (jnp.asarray(xte), jnp.asarray(yte))
+
+
+# ---------------------------------------------------------------------------
+# ResNet-style model with LSQ fake-quantization.
+# ---------------------------------------------------------------------------
+
+WIDTHS = (16, 32, 64)
+
+
+def init_params(key, classes=10):
+    params = {}
+    keys = jax.random.split(key, 16)
+    ki = iter(keys)
+
+    def conv_init(k, kh, kw, cin, cout):
+        fan = kh * kw * cin
+        return jax.random.normal(k, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan)
+
+    params["stem"] = conv_init(next(ki), 3, 3, 3, WIDTHS[0])
+    for s, w in enumerate(WIDTHS):
+        cin = WIDTHS[max(s - 1, 0)]
+        params[f"conv{s}a"] = conv_init(next(ki), 3, 3, cin, w)
+        params[f"conv{s}b"] = conv_init(next(ki), 3, 3, w, w)
+        if cin != w:
+            params[f"proj{s}"] = conv_init(next(ki), 1, 1, cin, w)
+    params["fc"] = jax.random.normal(next(ki), (WIDTHS[-1], classes)) * 0.01
+    # One LSQ step per quantized tensor. Init per the LSQ paper's heuristic
+    # (s0 ≈ 2·E|x|/√qp): weights are He-init (E|w| ≈ 0.03–0.08), activations
+    # post-BN-ReLU (E|a| ≈ 0.4).
+    steps = {}
+    for s in range(len(WIDTHS)):
+        for ab in "ab":
+            steps[f"w_{s}{ab}"] = jnp.asarray(0.05)
+            steps[f"a_{s}{ab}"] = jnp.asarray(0.5)
+        steps[f"w_proj{s}"] = jnp.asarray(0.05)
+    params["steps"] = steps
+    return params
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def bn(x):
+    """Parameter-free batch standardization (BN without affine): stabilizes
+    the no-normalization net the way folded BN does at inference."""
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5)
+
+
+def forward(params, x, bits: int):
+    """bits=0 → FP32; otherwise W/A at `bits` (stem + fc stay FP32)."""
+    steps = params["steps"]
+
+    def qw(w, name):
+        if bits == 0:
+            return w
+        return lsq_quantize(w, steps[name], bits, signed=True)
+
+    def qa(a, name):
+        if bits == 0:
+            return a
+        return lsq_quantize(a, steps[name], bits, signed=False)
+
+    h = jax.nn.relu(bn(conv(x, params["stem"])))
+    for s, width in enumerate(WIDTHS):
+        stride = 1 if s == 0 else 2
+        inp = h
+        h = jax.nn.relu(bn(conv(qa(h, f"a_{s}a"), qw(params[f"conv{s}a"], f"w_{s}a"), stride)))
+        h = bn(conv(qa(h, f"a_{s}b"), qw(params[f"conv{s}b"], f"w_{s}b")))
+        if f"proj{s}" in params:
+            inp = conv(inp, qw(params[f"proj{s}"], f"w_proj{s}"), stride)
+        h = jax.nn.relu(h + inp)
+    pooled = jnp.mean(h, axis=(1, 2))
+    return pooled @ params["fc"]
+
+
+def loss_fn(params, x, y, bits):
+    logits = forward(params, x, bits)
+    onehot = jax.nn.one_hot(y, logits.shape[-1])
+    return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+
+
+def train(bits: int, steps: int, seed=0, batch=64, lr=0.02, log=print):
+    (xtr, ytr), (xte, yte) = make_dataset(seed=seed)
+    params = init_params(jax.random.PRNGKey(seed))
+    # Plain SGD with momentum (no optax in this environment).
+    momentum = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step_fn(params, momentum, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, bits)
+        momentum = jax.tree.map(lambda m, g: 0.9 * m + g, momentum, grads)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, momentum)
+        return params, momentum, loss
+
+    @jax.jit
+    def accuracy(params, x, y):
+        logits = forward(params, x, bits)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+    rng = np.random.default_rng(seed)
+    n = xtr.shape[0]
+    for i in range(steps):
+        idx = rng.integers(0, n, batch)
+        params, momentum, loss = step_fn(params, momentum, xtr[idx], ytr[idx])
+        if (i + 1) % max(1, steps // 5) == 0:
+            log(f"  [bits={bits}] step {i + 1}/{steps} loss {float(loss):.3f}")
+    acc = float(accuracy(params, xte, yte)) * 100.0
+    return acc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--out", default="../artifacts/table1.tsv")
+    args = ap.parse_args()
+    rows = []
+    for label, bits in [("fp32", 0), ("w8a8", 8), ("w2a2", 2), ("w1a1", 1)]:
+        print(f"training {label} ({args.steps} steps)…")
+        acc = train(bits, args.steps)
+        print(f"  {label}: {acc:.2f}%")
+        rows.append((label, acc))
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("# precision\taccuracy (synthetic CIFAR-scale task — see DESIGN.md)\n")
+        for label, acc in rows:
+            f.write(f"{label}\t{acc:.2f}\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

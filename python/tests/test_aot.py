@@ -1,0 +1,61 @@
+"""AOT path tests: lowering produces valid HLO text and the lowered
+computations agree with the oracles (via jax execution of the same jits)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels.bitserial import qgemm
+from compile.kernels.ref import qgemm_ref
+
+
+def test_qgemm_hlo_text_shape():
+    text = aot.lower_qgemm()
+    assert text.startswith("HloModule"), text[:80]
+    # Two int32 outputs in a tuple: (acc [8,16], asum [8]).
+    assert "s32[8,16]" in text
+    assert "s32[8]" in text
+
+
+def test_qconv_hlo_text_shape():
+    text = aot.lower_qconv()
+    assert text.startswith("HloModule")
+    assert "s32[256,64]" in text  # 16·16 output pixels × 64 channels
+
+
+def test_qnet_hlo_text_shape():
+    text = aot.lower_qnet()
+    assert text.startswith("HloModule")
+    assert "f32[10]" in text  # logits
+
+
+def test_qgemm_artifact_semantics_match_ref():
+    """The function that gets lowered is byte-for-byte the one tested here."""
+    rng = np.random.default_rng(123)
+    a = jnp.asarray(rng.integers(0, 4, (aot.QGEMM_M, aot.QGEMM_K)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 4, (aot.QGEMM_K, aot.QGEMM_N)), jnp.int32)
+    acc, asum = qgemm(a, w, aot.QGEMM_BITS, aot.QGEMM_BITS)
+    racc, rasum = qgemm_ref(a, w)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(racc))
+    np.testing.assert_array_equal(np.asarray(asum), np.asarray(rasum))
+
+
+def test_lowering_is_deterministic():
+    assert aot.lower_qgemm() == aot.lower_qgemm()
+
+
+def test_qnet_constants_are_baked():
+    """The qnet artifact takes only the input tensor — weights are constants
+    (Python must never be needed at serving time)."""
+    net = model.make_qnet(seed=0)
+    lowered = jax.jit(lambda x: (model.qnet_forward(net, x),)).lower(
+        jax.ShapeDtypeStruct((16, 16, 64), jnp.int32)
+    )
+    # Exactly one parameter in the ENTRY computation (sub-computations of
+    # fusions/reductions have their own parameters — ignore those).
+    text = aot.to_hlo_text(lowered)
+    entry = text[text.index("ENTRY") :]
+    entry = entry[: entry.index("\n}")]
+    assert "parameter(0)" in entry
+    assert "parameter(1)" not in entry

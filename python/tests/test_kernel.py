@@ -1,0 +1,98 @@
+"""L1 correctness: the Pallas bit-serial kernel vs the pure-jnp oracle.
+
+Integer arithmetic → exact equality (`assert_array_equal`), with hypothesis
+sweeping shapes and precisions (the pytest signal `make test` gates on).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bitserial import pack_rows, popcount32, qgemm, qgemm_bitserial
+from compile.kernels.ref import bitserial_expand_ref, pack_planes_ref, qgemm_ref
+
+
+def rand_codes(rng, shape, bits):
+    return jnp.asarray(rng.integers(0, 2**bits, shape), jnp.int32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 200),
+    n=st.integers(1, 80),
+    abits=st.integers(1, 2),
+    wbits=st.integers(1, 2),
+    seed=st.integers(0, 2**31),
+)
+def test_qgemm_matches_ref_swept(m, k, n, abits, wbits, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_codes(rng, (m, k), abits)
+    w = rand_codes(rng, (k, n), wbits)
+    acc, asum = qgemm(a, w, abits, wbits)
+    racc, rasum = qgemm_ref(a, w)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(racc))
+    np.testing.assert_array_equal(np.asarray(asum), np.asarray(rasum))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    k=st.integers(1, 300),
+    bits=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_pack_rows_matches_ref(k, bits, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**bits, (k,)), jnp.int32)
+    ours = pack_rows(codes[None, :], bits)[:, 0, :]
+    ref = pack_planes_ref(codes, bits)
+    np.testing.assert_array_equal(np.asarray(ours), np.asarray(ref))
+
+
+def test_popcount32_exhaustive_structure():
+    rng = np.random.default_rng(7)
+    xs = rng.integers(0, 2**32, 4096, dtype=np.uint32)
+    got = np.asarray(popcount32(jnp.asarray(xs)))
+    want = np.array([bin(int(x)).count("1") for x in xs], dtype=np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_popcount32_edge_values():
+    xs = jnp.asarray([0, 1, 0xFFFFFFFF, 0x80000000, 0x55555555, 0xAAAAAAAA], jnp.uint32)
+    got = np.asarray(popcount32(xs))
+    np.testing.assert_array_equal(got, [0, 1, 32, 1, 16, 16])
+
+
+def test_eq1_plane_decomposition_is_exact():
+    """Paper Eq. (1): the plane-pair expansion equals the integer product."""
+    rng = np.random.default_rng(3)
+    for abits, wbits in [(1, 1), (1, 2), (2, 1), (2, 2)]:
+        a = rand_codes(rng, (6, 77), abits)
+        w = rand_codes(rng, (77, 13), wbits)
+        np.testing.assert_array_equal(
+            np.asarray(bitserial_expand_ref(a, w, abits, wbits)),
+            np.asarray(qgemm_ref(a, w)[0]),
+        )
+
+
+@pytest.mark.parametrize("bm,bn", [(1, 1), (4, 16), (8, 64), (16, 128)])
+def test_tile_size_independence(bm, bn):
+    """The BlockSpec tiling must not change the numbers."""
+    rng = np.random.default_rng(11)
+    a = rand_codes(rng, (10, 96), 2)
+    w = rand_codes(rng, (96, 33), 2)
+    base = np.asarray(qgemm_ref(a, w)[0])
+    got = np.asarray(qgemm_bitserial(a, w, 2, 2, bm=bm, bn=bn))
+    np.testing.assert_array_equal(got, base)
+
+
+def test_max_code_values_no_overflow():
+    """All-max codes at the paper's largest layer K: accumulators stay exact
+    (K=4608 × 3 × 3 = 41472 ≪ 2^31)."""
+    k = 4608
+    a = jnp.full((2, k), 3, jnp.int32)
+    w = jnp.full((k, 8), 3, jnp.int32)
+    acc, asum = qgemm(a, w, 2, 2)
+    assert int(acc[0, 0]) == 9 * k
+    assert int(asum[0]) == 3 * k

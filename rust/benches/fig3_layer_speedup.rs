@@ -1,0 +1,27 @@
+//! Bench: regenerates paper Fig. 3 — per-layer ResNet-18 speedups of Quark
+//! Int1 / Int2 (± vbitpack) over Ara Int8 (plus Ara FP32).
+//!
+//! Plain `harness = false` binary (criterion is unavailable offline); prints
+//! the full figure and the wall-clock cost of regenerating it.
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let fig = quark::report::fig3::generate_default();
+    let elapsed = t0.elapsed();
+    println!("{}", fig.markdown());
+    let _ = quark::report::write_report("fig3.md", &fig.markdown());
+    let _ = quark::report::write_report("fig3.csv", &fig.csv());
+
+    println!("--- bench meta ---");
+    println!("fig3 regeneration wall time: {:.1}s (5 full-network simulations)", elapsed.as_secs_f64());
+    // Paper targets for the record (conclusion §V): Int1 5.7x, Int2 3.5x.
+    let (int1, _) = fig.mean_speedup(1);
+    let (int2, _) = fig.mean_speedup(2);
+    let (novbp, _) = fig.mean_speedup(3);
+    println!("paper: Int1 5.7x | measured {int1:.2}x");
+    println!("paper: Int2 3.5x | measured {int2:.2}x");
+    println!("paper: Int2-no-vbitpack ≈ Int8 (\"not significant\") | measured {novbp:.2}x");
+    assert!(fig.speedups(1).iter().all(|(_, s)| *s > 1.0), "Int1 must beat Int8 on every layer");
+}

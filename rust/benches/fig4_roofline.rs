@@ -1,0 +1,22 @@
+//! Bench: regenerates paper Fig. 4 — conv2d 3×3 roofline, Quark-8L vs Ara-4L
+//! (iso die area / power budget, Table II).
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let fig = quark::report::fig4::generate_default();
+    let elapsed = t0.elapsed();
+    println!("{}", fig.markdown());
+    let _ = quark::report::write_report("fig4.md", &fig.markdown());
+    let _ = quark::report::write_report("fig4.csv", &fig.csv());
+
+    println!("--- bench meta ---");
+    println!("fig4 regeneration wall time: {:.1}s", elapsed.as_secs_f64());
+    let wins = fig.sweep.iter().all(|(_, q, a)| q > a);
+    println!(
+        "paper: Quark outperforms Ara at ALL input sizes | measured: {}",
+        if wins { "yes" } else { "NO" }
+    );
+    assert!(wins);
+}

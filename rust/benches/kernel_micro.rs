@@ -1,0 +1,117 @@
+//! Microbenchmarks: per-kernel simulated MAC/cycle at each precision and
+//! shape, plus the *host-side* simulation throughput (instructions emitted
+//! per second) — the L3 perf metric tracked in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use quark::arch::MachineConfig;
+use quark::kernels::bitpack::setup_index_vector;
+use quark::kernels::conv2d::{conv2d_bitserial, conv2d_f32, conv2d_int8};
+use quark::kernels::requantize::RqBuf;
+use quark::kernels::Conv2dParams;
+use quark::quant::pack_weight_planes;
+use quark::sim::{Sim, SimMode};
+
+struct Row {
+    label: String,
+    cycles: u64,
+    macs: u64,
+    instrs: u64,
+    wall: f64,
+}
+
+fn bench_conv(cfg: &MachineConfig, p: &Conv2dParams, precision: &str, mode: SimMode) -> Row {
+    let mut sim = Sim::new(cfg.clone());
+    sim.set_mode(mode);
+    let idx = setup_index_vector(&mut sim);
+    let (k, n) = (p.k(), p.c_out);
+    let fm_in = sim.alloc((p.h * p.w * p.c_in * 4) as u64);
+    let out = sim.alloc((p.out_h() * p.out_w() * n * 4) as u64);
+    let before = sim.stats().clone();
+    let c0 = sim.cycles();
+    let t0 = Instant::now();
+    let run = match precision {
+        "fp32" => {
+            let w = sim.alloc((k * n * 4) as u64);
+            let b = sim.alloc((n * 4) as u64);
+            conv2d_f32(&mut sim, p, fm_in, w, b, out, true, None)
+        }
+        "int8" => {
+            let w = sim.alloc((k * n) as u64);
+            let rq = RqBuf::create(&mut sim, &vec![0.01; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+            conv2d_int8(&mut sim, p, fm_in, w, &rq, out, None)
+        }
+        other => {
+            let (bits, vbp) = match other {
+                "w1a1" => (1, true),
+                "w2a2" => (2, true),
+                "w2a2-novbp" => (2, false),
+                _ => unreachable!(),
+            };
+            let wpk = pack_weight_planes(&vec![0u8; k * n], k, n, bits, quark::kernels::conv2d::bitserial_block(cfg.vlen_bits, n));
+            let w = sim.alloc(wpk.byte_len() as u64);
+            let rq = RqBuf::create(&mut sim, &vec![0.01; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+            conv2d_bitserial(&mut sim, p, bits, fm_in, &wpk, w, &rq, out, None, vbp, idx)
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = sim.stats().delta_since(&before);
+    Row {
+        label: format!("{} {} {}x{}x{}", cfg.name, precision, p.h, p.w, p.c_in),
+        cycles: sim.cycles() - c0,
+        macs: run.macs,
+        instrs: stats.scalar_instrs + stats.vector_instrs + stats.vcfg_instrs,
+        wall,
+    }
+}
+
+fn main() {
+    let shapes = [
+        Conv2dParams { h: 8, w: 8, c_in: 64, c_out: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
+        Conv2dParams { h: 16, w: 16, c_in: 64, c_out: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
+        Conv2dParams { h: 8, w: 8, c_in: 256, c_out: 256, kh: 3, kw: 3, stride: 1, pad: 1 },
+    ];
+    let ara = MachineConfig::ara(4);
+    let quark = MachineConfig::quark(4);
+    println!(
+        "{:<32} {:>12} {:>12} {:>9} {:>11} {:>10}",
+        "kernel", "cycles", "eff. MACs", "MAC/cyc", "sim instrs", "Minstr/s"
+    );
+    let mut rows = Vec::new();
+    for p in &shapes {
+        for (cfg, prec) in [
+            (&ara, "fp32"),
+            (&ara, "int8"),
+            (&quark, "w1a1"),
+            (&quark, "w2a2"),
+            (&quark, "w2a2-novbp"),
+        ] {
+            let r = bench_conv(cfg, p, prec, SimMode::TimingOnly);
+            println!(
+                "{:<32} {:>12} {:>12} {:>9.2} {:>11} {:>10.2}",
+                r.label,
+                r.cycles,
+                r.macs,
+                r.macs as f64 / r.cycles as f64,
+                r.instrs,
+                r.instrs as f64 / r.wall / 1e6
+            );
+            rows.push(r);
+        }
+        println!();
+    }
+
+    // Host-side throughput comparison Full vs TimingOnly (the §Perf metric).
+    println!("--- host simulation throughput (Full vs TimingOnly) ---");
+    let p = shapes[0];
+    for mode in [SimMode::Full, SimMode::TimingOnly] {
+        let r = bench_conv(&quark, &p, "w2a2", mode);
+        println!(
+            "{:?}: {:.2} Minstr/s ({:.2}s for {} instrs)",
+            mode,
+            r.instrs as f64 / r.wall / 1e6,
+            r.wall,
+            r.instrs
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerates paper Table II (physical implementation) + Fig. 5
+//! (area breakdown) from the analytical tech model, and runs the ablations
+//! DESIGN.md calls out: what if the FPU stayed? what do 2/4/8/16 lanes cost?
+
+use quark::arch::MachineConfig;
+use quark::phys::TechModel;
+
+fn main() {
+    let reports = quark::report::table2::generate();
+    println!("{}", quark::report::table2::markdown(&reports));
+    println!("{}", quark::report::table2::fig5_markdown(&reports));
+    let _ = quark::report::write_report("table2.md", &quark::report::table2::markdown(&reports));
+    let _ = quark::report::write_report("fig5.md", &quark::report::table2::fig5_markdown(&reports));
+
+    // Ablation 1: lane scaling (the paper's 4→8 lane step, extended).
+    let m = TechModel::default();
+    println!("## Ablation: Quark lane scaling\n");
+    println!("| lanes | lane mm² | die mm² | GHz | power/lane mW | peak 1b-GOPS |");
+    println!("|---|---|---|---|---|---|");
+    for lanes in [2usize, 4, 8, 16] {
+        let cfg = MachineConfig::quark(lanes);
+        let r = m.report(&cfg);
+        let gops = 2.0 * cfg.peak_bitserial_macs_per_cycle() * m.freq_ghz(lanes);
+        println!(
+            "| {lanes} | {:.3} | {:.2} | {:.2} | {:.0} | {:.0} |",
+            r.lane_area_mm2, r.die_area_mm2, r.freq_ghz, r.lane_power_mw, gops
+        );
+    }
+
+    // Ablation 2: keep the FPU but add the bit-serial units ("Ara++").
+    println!("\n## Ablation: Ara + bit-serial units (keeping the vector FPU)\n");
+    let ara = m.report(&MachineConfig::ara(4));
+    let hybrid_lane = ara.lane_area_mm2 + m.a_bitserial;
+    let quark = m.report(&MachineConfig::quark(4));
+    println!(
+        "hybrid lane = {:.3} mm² vs quark {:.3} mm² → dropping the FPU buys {:.1}% of the lane",
+        hybrid_lane,
+        quark.lane_area_mm2,
+        100.0 * (hybrid_lane - quark.lane_area_mm2) / hybrid_lane
+    );
+}

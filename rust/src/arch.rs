@@ -1,0 +1,168 @@
+//! Machine configurations for the simulated systems.
+//!
+//! The paper evaluates three configurations (Table II):
+//!
+//! | config    | lanes | VRF    | vector FPU | Quark ISA | TT freq  |
+//! |-----------|-------|--------|------------|-----------|----------|
+//! | Ara-4L    | 4     | 16 KiB | yes        | no        | 1.05 GHz |
+//! | Quark-4L  | 4     | 16 KiB | no         | yes       | 1.05 GHz |
+//! | Quark-8L  | 8     | 32 KiB | no         | yes       | 1.00 GHz |
+//!
+//! VLEN is VRF/32 registers: 4096 bits for the 4-lane configs (16 KiB / 32)
+//! and 8192 bits for Quark-8L. All structural timing parameters live here so
+//! the simulator, the physical model, and the roofline analytics agree on the
+//! machine they are describing.
+
+
+/// One simulated CVA6 + vector-unit system.
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    /// Human-readable name ("ara-4l", "quark-4l", "quark-8l").
+    pub name: String,
+    /// Number of vector lanes (each with a 64-bit datapath per unit).
+    pub lanes: usize,
+    /// Vector register length in bits (VRF = 32 × VLEN).
+    pub vlen_bits: usize,
+    /// Whether the lanes contain a vector FPU (Ara yes, Quark no).
+    pub has_vfpu: bool,
+    /// Whether the Quark custom instructions decode (`vpopcnt`, `vshacc`,
+    /// `vbitpack`).
+    pub has_quark_isa: bool,
+    /// Typical-corner clock frequency in GHz (for GOPS/roofline conversion;
+    /// the cycle model itself is frequency-independent).
+    pub freq_ghz: f64,
+    /// AXI data-bus width between the vector unit and L2, in bytes per cycle
+    /// (Ara uses a 32B/cycle bus for 4 lanes: 64 bit/lane memory interface).
+    pub axi_bytes_per_cycle: usize,
+    /// Flat memory latency for the first beat of a vector memory operation
+    /// (L2-hit-ish; the paper's workloads stream from L2/SPM).
+    pub mem_latency: u64,
+    /// CVA6 → vector-unit dispatch + acknowledge overhead per instruction.
+    pub dispatch_latency: u64,
+    /// Start-up latency of a vector instruction on its functional unit
+    /// (sequencer + operand-requester pipeline fill).
+    pub vstartup_latency: u64,
+    /// Extra latency before a chained consumer may start after its producer
+    /// (operand-queue depth worth of slack).
+    pub chain_latency: u64,
+    /// Mask-unit throughput in *elements* per lane per cycle. Mask-producing
+    /// compares on Ara serialize on the MASKU; 1 elem/lane/cycle models that
+    /// (vs 64/SEW elem/lane/cycle on the main ALU datapath).
+    pub mask_elems_per_lane_cycle: f64,
+    /// Scalar FP latency (CVA6 FPU, cycles) — re-scaling cost lives here.
+    pub scalar_fp_latency: u64,
+    /// Scalar integer multiply latency.
+    pub scalar_mul_latency: u64,
+    /// Scalar load-to-use latency (L1 D-cache hit).
+    pub scalar_load_latency: u64,
+    /// CVA6→Ara dispatch-queue depth: the scalar core can run at most this
+    /// many undispatched vector instructions ahead (bounds the decoupling).
+    pub vq_depth: usize,
+}
+
+impl MachineConfig {
+    /// Bytes per vector register.
+    pub fn vreg_bytes(&self) -> usize {
+        self.vlen_bits / 8
+    }
+
+    /// Total VRF capacity in KiB (32 registers).
+    pub fn vrf_kib(&self) -> usize {
+        32 * self.vreg_bytes() / 1024
+    }
+
+    /// Peak element throughput for a vector op at `sew_bits`:
+    /// `lanes × 64 / SEW` elements per cycle.
+    pub fn elems_per_cycle(&self, sew_bits: usize) -> f64 {
+        (self.lanes * 64) as f64 / sew_bits as f64
+    }
+
+    /// Peak int8 MAC/cycle (MACs with 32-bit accumulation: the datapath
+    /// processes 64/32 = 2 accumulator elements per lane per cycle).
+    pub fn peak_int8_macs_per_cycle(&self) -> f64 {
+        self.elems_per_cycle(32)
+    }
+
+    /// Peak 1-bit "MAC"/cycle via AND+popcount+shacc (3 ALU ops per 64-bit
+    /// word, each word holding 64 bit-products).
+    pub fn peak_bitserial_macs_per_cycle(&self) -> f64 {
+        self.elems_per_cycle(64) * 64.0 / 3.0
+    }
+
+    /// Ara: the baseline, RVV 1.0 with vector FPU, no custom ISA.
+    pub fn ara(lanes: usize) -> Self {
+        MachineConfig {
+            name: format!("ara-{lanes}l"),
+            lanes,
+            vlen_bits: 1024 * lanes,
+            has_vfpu: true,
+            has_quark_isa: false,
+            freq_ghz: 1.05,
+            axi_bytes_per_cycle: 8 * lanes,
+            mem_latency: 20,
+            dispatch_latency: 3,
+            vstartup_latency: 4,
+            chain_latency: 2,
+            mask_elems_per_lane_cycle: 1.0,
+            scalar_fp_latency: 4,
+            scalar_mul_latency: 2,
+            scalar_load_latency: 2,
+            vq_depth: 8,
+        }
+    }
+
+    /// Quark: integer-only lanes + custom sub-byte ISA.
+    pub fn quark(lanes: usize) -> Self {
+        let freq_ghz = if lanes >= 8 { 1.00 } else { 1.05 };
+        MachineConfig {
+            name: format!("quark-{lanes}l"),
+            lanes,
+            vlen_bits: 1024 * lanes,
+            has_vfpu: false,
+            has_quark_isa: true,
+            freq_ghz,
+            axi_bytes_per_cycle: 8 * lanes,
+            mem_latency: 20,
+            dispatch_latency: 3,
+            vstartup_latency: 4,
+            chain_latency: 2,
+            mask_elems_per_lane_cycle: 1.0,
+            scalar_fp_latency: 4,
+            scalar_mul_latency: 2,
+            scalar_load_latency: 2,
+            vq_depth: 8,
+        }
+    }
+
+    /// The paper's three evaluated configurations.
+    pub fn paper_configs() -> Vec<MachineConfig> {
+        vec![Self::ara(4), Self::quark(4), Self::quark(8)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_structural_parameters() {
+        let ara = MachineConfig::ara(4);
+        assert_eq!(ara.vrf_kib(), 16);
+        assert_eq!(ara.vlen_bits, 4096);
+        let q8 = MachineConfig::quark(8);
+        assert_eq!(q8.vrf_kib(), 32);
+        assert!((q8.freq_ghz - 1.0).abs() < 1e-9);
+        assert!(!q8.has_vfpu && q8.has_quark_isa);
+    }
+
+    #[test]
+    fn peak_rates() {
+        let q = MachineConfig::quark(4);
+        // 4 lanes × 64 bit = 4 elem/cycle at SEW=64.
+        assert!((q.elems_per_cycle(64) - 4.0).abs() < 1e-9);
+        // int8 MACs at 8/cycle; 1-bit MACs at 85.3/cycle → the raw bit-serial
+        // advantage the paper exploits.
+        assert!((q.peak_int8_macs_per_cycle() - 8.0).abs() < 1e-9);
+        assert!(q.peak_bitserial_macs_per_cycle() > 80.0);
+    }
+}

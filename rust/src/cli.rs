@@ -1,0 +1,281 @@
+//! Hand-rolled CLI (no clap in this offline environment).
+//!
+//! ```text
+//! repro report <fig3|fig4|table1|table2|fig5|summary|all> [--fast]
+//! repro simulate --kernel <conv2d|gemm> --precision <fp32|int8|w1a1|w2a2|w2a2-novbp>
+//!                [--machine <ara-4l|quark-4l|quark-8l>] [--size N] [--channels C]
+//! repro crosscheck [--artifact artifacts/qgemm.hlo.txt] [--seed S]
+//! repro serve [--addr 127.0.0.1:7070] [--workers N] [--batch B]
+//! repro phys
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::MachineConfig;
+use crate::coordinator::{server, Coordinator, CoordinatorConfig};
+use crate::nn::resnet::resnet18_cifar;
+use crate::report;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn machine_by_name(name: &str) -> Result<MachineConfig> {
+    Ok(match name {
+        "ara-4l" => MachineConfig::ara(4),
+        "quark-4l" => MachineConfig::quark(4),
+        "quark-8l" => MachineConfig::quark(8),
+        other => bail!("unknown machine {other} (ara-4l, quark-4l, quark-8l)"),
+    })
+}
+
+pub fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    match pos.first().map(|s| s.as_str()) {
+        Some("report") => cmd_report(pos.get(1).map(|s| s.as_str()).unwrap_or("all"), &flags),
+        Some("simulate") => cmd_simulate(&flags),
+        Some("crosscheck") => cmd_crosscheck(&flags),
+        Some("serve") => cmd_serve(&flags),
+        Some("phys") => {
+            let reports = report::table2::generate();
+            println!("{}", report::table2::markdown(&reports));
+            println!("{}", report::table2::fig5_markdown(&reports));
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: repro <report|simulate|crosscheck|serve|phys> …\n\
+                 see rust/src/cli.rs or README.md for full syntax"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_report(which: &str, flags: &HashMap<String, String>) -> Result<()> {
+    let fast = flags.contains_key("fast");
+    let net = if fast {
+        // Truncated graph for quick smoke runs.
+        resnet18_cifar(100).into_iter().take(8).collect()
+    } else {
+        resnet18_cifar(100)
+    };
+    let run_fig3 = || {
+        eprintln!("[fig3] simulating ResNet-18 at 5 precisions (this is the long one)…");
+        report::fig3::generate(&net)
+    };
+    let run_fig4 = || {
+        eprintln!("[fig4] conv2d 3x3 roofline sweep…");
+        if fast {
+            report::fig4::generate(&[4, 8])
+        } else {
+            report::fig4::generate_default()
+        }
+    };
+    match which {
+        "fig3" => {
+            let fig = run_fig3();
+            println!("{}", fig.markdown());
+            report::write_report("fig3.md", &fig.markdown())?;
+            report::write_report("fig3.csv", &fig.csv())?;
+        }
+        "fig4" => {
+            let fig = run_fig4();
+            println!("{}", fig.markdown());
+            report::write_report("fig4.md", &fig.markdown())?;
+            report::write_report("fig4.csv", &fig.csv())?;
+        }
+        "table1" => {
+            let rows = report::table1::generate(std::path::Path::new("artifacts/table1.tsv"));
+            println!("{}", report::table1::markdown(&rows));
+            report::write_report("table1.md", &report::table1::markdown(&rows))?;
+        }
+        "table2" => {
+            let reports = report::table2::generate();
+            println!("{}", report::table2::markdown(&reports));
+            report::write_report("table2.md", &report::table2::markdown(&reports))?;
+            report::write_report("table2.csv", &report::table2::csv(&reports))?;
+        }
+        "fig5" => {
+            let reports = report::table2::generate();
+            println!("{}", report::table2::fig5_markdown(&reports));
+            report::write_report("fig5.md", &report::table2::fig5_markdown(&reports))?;
+        }
+        "summary" | "all" => {
+            let fig3 = run_fig3();
+            let fig4 = run_fig4();
+            let phys = report::table2::generate();
+            let rows = report::table1::generate(std::path::Path::new("artifacts/table1.tsv"));
+            let s = report::summary::generate(&fig3, &fig4);
+            if which == "all" {
+                println!("{}", fig3.markdown());
+                println!("{}", fig4.markdown());
+                println!("{}", report::table1::markdown(&rows));
+                println!("{}", report::table2::markdown(&phys));
+                println!("{}", report::table2::fig5_markdown(&phys));
+                report::write_report("fig3.md", &fig3.markdown())?;
+                report::write_report("fig3.csv", &fig3.csv())?;
+                report::write_report("fig4.md", &fig4.markdown())?;
+                report::write_report("fig4.csv", &fig4.csv())?;
+                report::write_report("table1.md", &report::table1::markdown(&rows))?;
+                report::write_report("table2.md", &report::table2::markdown(&phys))?;
+                report::write_report("fig5.md", &report::table2::fig5_markdown(&phys))?;
+            }
+            println!("{}", report::summary::markdown(&s));
+            report::write_report("summary.md", &report::summary::markdown(&s))?;
+        }
+        other => bail!("unknown report {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::kernels::bitpack::setup_index_vector;
+    use crate::kernels::conv2d::{conv2d_bitserial, conv2d_f32, conv2d_int8};
+    use crate::kernels::requantize::RqBuf;
+    use crate::kernels::Conv2dParams;
+    use crate::quant::pack_weight_planes;
+    use crate::sim::{Sim, SimMode};
+
+    let precision = flags.get("precision").map(|s| s.as_str()).unwrap_or("w2a2");
+    let default_machine = if precision == "fp32" || precision == "int8" { "ara-4l" } else { "quark-4l" };
+    let machine = machine_by_name(flags.get("machine").map(|s| s.as_str()).unwrap_or(default_machine))?;
+    let hw: usize = flags.get("size").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let c: usize = flags.get("channels").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let kernel = flags.get("kernel").map(|s| s.as_str()).unwrap_or("conv2d");
+    let p = match kernel {
+        "conv2d" => Conv2dParams { h: hw, w: hw, c_in: c, c_out: c, kh: 3, kw: 3, stride: 1, pad: 1 },
+        "gemm" => crate::kernels::matmul::gemm_params(hw, c * 9, c),
+        other => bail!("unknown kernel {other}"),
+    };
+
+    let mut sim = Sim::new(machine.clone());
+    sim.set_mode(SimMode::TimingOnly);
+    let idx = setup_index_vector(&mut sim);
+    let (k, n) = (p.k(), p.c_out);
+    let fm_in = sim.alloc((p.h * p.w * p.c_in * 4) as u64);
+    let out = sim.alloc((p.out_h() * p.out_w() * n * 4) as u64);
+    let before = sim.stats().clone();
+    let c0 = sim.cycles();
+    let run = match precision {
+        "fp32" => {
+            let w = sim.alloc((k * n * 4) as u64);
+            let b = sim.alloc((n * 4) as u64);
+            conv2d_f32(&mut sim, &p, fm_in, w, b, out, true, None)
+        }
+        "int8" => {
+            let w = sim.alloc((k * n) as u64);
+            let rq = RqBuf::create(&mut sim, &vec![0.01; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+            conv2d_int8(&mut sim, &p, fm_in, w, &rq, out, None)
+        }
+        w => {
+            let (bits, vbp): (u8, bool) = match w {
+                "w1a1" => (1, true),
+                "w2a2" => (2, true),
+                "w2a2-novbp" => (2, false),
+                other => bail!("unknown precision {other}"),
+            };
+            let block = crate::kernels::conv2d::bitserial_block(machine.vlen_bits, n);
+            let wpk = pack_weight_planes(&vec![0u8; k * n], k, n, bits, block);
+            let w = sim.alloc(wpk.byte_len() as u64);
+            let rq = RqBuf::create(&mut sim, &vec![0.01; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+            conv2d_bitserial(&mut sim, &p, bits, fm_in, &wpk, w, &rq, out, None, vbp, idx)
+        }
+    };
+    let stats = sim.stats().delta_since(&before);
+    let cycles = sim.cycles() - c0;
+    let secs = cycles as f64 / (machine.freq_ghz * 1e9);
+    println!("machine       : {}", machine.name);
+    println!("kernel        : {kernel} {}x{}x{} k={}", p.h, p.w, p.c_in, p.k());
+    println!("precision     : {precision}");
+    println!("cycles        : {cycles}");
+    println!("device time   : {:.1} us", secs * 1e6);
+    println!("effective MACs: {}", run.macs);
+    println!("MAC/cycle     : {:.2}", run.macs_per_cycle());
+    println!("GOPS          : {:.1}", 2.0 * run.macs as f64 / secs / 1e9);
+    println!("AI            : {:.2} ops/byte", stats.arithmetic_intensity());
+    println!(
+        "instrs        : {} scalar, {} vector ({} vcfg)",
+        stats.scalar_instrs, stats.vector_instrs, stats.vcfg_instrs
+    );
+    Ok(())
+}
+
+fn cmd_crosscheck(flags: &HashMap<String, String>) -> Result<()> {
+    let artifact = flags
+        .get("artifact")
+        .cloned()
+        .unwrap_or_else(|| "artifacts/qgemm.hlo.txt".to_string());
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let runtime = crate::runtime::Runtime::cpu().context("creating PJRT CPU client")?;
+    println!("PJRT platform: {}", runtime.platform());
+    let r = crate::coordinator::golden::crosscheck_qgemm(&runtime, &artifact, seed)?;
+    println!(
+        "crosscheck: {} accumulators checked, {} mismatches (sim cycles {})",
+        r.checked, r.mismatches, r.sim_cycles
+    );
+    if r.mismatches > 0 {
+        bail!("{} mismatches between simulator / JAX-AOT / oracle", r.mismatches);
+    }
+    println!("simulator == JAX(Pallas)-AOT-PJRT == host oracle ✓");
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7070".to_string());
+    let mut cfg = CoordinatorConfig::demo();
+    if let Some(w) = flags.get("workers") {
+        cfg.workers = w.parse()?;
+    }
+    if let Some(b) = flags.get("batch") {
+        cfg.batch_size = b.parse()?;
+    }
+    if let Some(m) = flags.get("machine") {
+        cfg.machine = machine_by_name(m)?;
+    }
+    let coord = Arc::new(Coordinator::start(cfg));
+    server::serve(coord, &addr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parsing() {
+        let args: Vec<String> =
+            ["report", "fig3", "--fast", "--machine", "quark-4l"].iter().map(|s| s.to_string()).collect();
+        let (pos, flags) = parse_flags(&args);
+        assert_eq!(pos, vec!["report", "fig3"]);
+        assert_eq!(flags.get("fast").map(|s| s.as_str()), Some("true"));
+        assert_eq!(flags.get("machine").map(|s| s.as_str()), Some("quark-4l"));
+    }
+
+    #[test]
+    fn machine_lookup() {
+        assert!(machine_by_name("quark-8l").is_ok());
+        assert!(machine_by_name("bogus").is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Golden-model cross-check: simulated Quark kernels vs the AOT-compiled JAX
+//! computation executed through PJRT.
+//!
+//! The Python build step (`make artifacts`) lowers the *same* bit-serial
+//! quantized matmul (L1 Pallas kernel inside an L2 JAX function) to HLO text;
+//! here we execute it on the PJRT CPU client and demand **integer equality**
+//! of the accumulators with the simulated `vand`/`vpopcnt`/`vshacc` pipeline.
+//! This closes the loop across all three layers of the stack.
+
+use anyhow::{bail, Context, Result};
+
+use crate::arch::MachineConfig;
+use crate::kernels::bitpack::setup_index_vector;
+use crate::kernels::conv2d::conv2d_bitserial_ext;
+use crate::kernels::matmul::gemm_codes_golden;
+use crate::kernels::requantize::RqBuf;
+use crate::quant::pack_weight_planes;
+use crate::runtime::Runtime;
+use crate::sim::Sim;
+
+/// Shapes must match `python/compile/aot.py` (`qgemm` artifact).
+pub const GOLDEN_M: usize = 8;
+pub const GOLDEN_K: usize = 128;
+pub const GOLDEN_N: usize = 16;
+pub const GOLDEN_BITS: u8 = 2;
+
+/// Result of one cross-check.
+#[derive(Debug, Clone)]
+pub struct CrossCheck {
+    pub checked: usize,
+    pub mismatches: usize,
+    /// Simulated cycles for the kernel under check.
+    pub sim_cycles: u64,
+}
+
+/// Run the cross-check: random codes → (a) simulated bit-serial GEMM on a
+/// Quark core, (b) AOT JAX artifact via PJRT, (c) host oracle. All three
+/// must agree exactly on the integer accumulators.
+pub fn crosscheck_qgemm(runtime: &Runtime, artifact_path: &str, seed: u64) -> Result<CrossCheck> {
+    let (m, k, n, bits) = (GOLDEN_M, GOLDEN_K, GOLDEN_N, GOLDEN_BITS);
+    let mut s = seed.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+    let mut lcg = move || {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        s >> 33
+    };
+    let a_codes: Vec<u8> = (0..m * k).map(|_| (lcg() % (1 << bits)) as u8).collect();
+    let w_codes: Vec<u8> = (0..k * n).map(|_| (lcg() % (1 << bits)) as u8).collect();
+
+    // (a) Simulated Quark core.
+    let mut sim = Sim::new(MachineConfig::quark(4));
+    let idx = setup_index_vector(&mut sim);
+    let block = sim.cfg.vlen_bits / 64;
+    let wpk = pack_weight_planes(&w_codes, k, n, bits, block);
+    let a_addr = sim.alloc((m * k) as u64);
+    sim.write_bytes(a_addr, &a_codes);
+    let w_addr = sim.alloc(wpk.byte_len() as u64);
+    for (i, &w) in wpk.words.iter().enumerate() {
+        sim.machine.mem.write_u64_le(w_addr + (i * 8) as u64, w, 8);
+    }
+    let rq = RqBuf::create(&mut sim, &vec![1.0; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+    let out = sim.alloc((m * n) as u64);
+    let n_padded = wpk.blocks() * block;
+    let acc_dump = sim.alloc((m * n_padded * 8) as u64);
+    let p = crate::kernels::matmul::gemm_params(m, k, n);
+    let c0 = sim.cycles();
+    conv2d_bitserial_ext(
+        &mut sim, &p, bits, a_addr, &wpk, w_addr, &rq, out, None, true, idx,
+        Some(acc_dump),
+    );
+    let sim_cycles = sim.cycles() - c0;
+    let sim_acc: Vec<i64> = (0..m)
+        .flat_map(|i| {
+            let sim = &sim;
+            (0..n).map(move |j| {
+                sim.machine.mem.read_u64_le(acc_dump + ((i * n_padded + j) * 8) as u64, 8) as i64
+            })
+        })
+        .collect();
+
+    // (b) AOT JAX artifact through PJRT.
+    let artifact = runtime
+        .load(artifact_path)
+        .with_context(|| format!("loading golden artifact {artifact_path} (run `make artifacts`)"))?;
+    let a_i32: Vec<i32> = a_codes.iter().map(|&v| v as i32).collect();
+    let w_i32: Vec<i32> = w_codes.iter().map(|&v| v as i32).collect();
+    let outputs = artifact.run_i32(&[(&a_i32, &[m, k]), (&w_i32, &[k, n])])?;
+    let jax_acc = &outputs[0];
+    if jax_acc.len() != m * n {
+        bail!("artifact output shape mismatch: got {} values, want {}", jax_acc.len(), m * n);
+    }
+
+    // (c) Host oracle.
+    let (oracle_acc, _) = gemm_codes_golden(&a_codes, &w_codes, m, k, n);
+
+    let mut mismatches = 0;
+    for i in 0..m * n {
+        let s = sim_acc[i];
+        let j = jax_acc[i] as i64;
+        let o = oracle_acc[i];
+        if s != j || s != o {
+            mismatches += 1;
+            if mismatches <= 5 {
+                eprintln!("mismatch at {i}: sim={s} jax={j} oracle={o}");
+            }
+        }
+    }
+    Ok(CrossCheck { checked: m * n, mismatches, sim_cycles })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Simulator vs host oracle only (the PJRT leg needs `make artifacts`
+    /// and is covered by the integration test + `repro crosscheck`).
+    #[test]
+    fn sim_acc_dump_matches_oracle() {
+        let (m, k, n, bits) = (4usize, 64usize, 8usize, 2u8);
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        let idx = setup_index_vector(&mut sim);
+        let a_codes: Vec<u8> = (0..m * k).map(|i| ((i * 13 + 5) % 4) as u8).collect();
+        let w_codes: Vec<u8> = (0..k * n).map(|i| ((i * 7 + 1) % 4) as u8).collect();
+        let block = sim.cfg.vlen_bits / 64;
+        let wpk = pack_weight_planes(&w_codes, k, n, bits, block);
+        let a_addr = sim.alloc((m * k) as u64);
+        sim.write_bytes(a_addr, &a_codes);
+        let w_addr = sim.alloc(wpk.byte_len() as u64);
+        for (i, &w) in wpk.words.iter().enumerate() {
+            sim.machine.mem.write_u64_le(w_addr + (i * 8) as u64, w, 8);
+        }
+        let rq = RqBuf::create(&mut sim, &vec![1.0; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+        let out = sim.alloc((m * n) as u64);
+        let n_padded = wpk.blocks() * block;
+        let acc_dump = sim.alloc((m * n_padded * 8) as u64);
+        let p = crate::kernels::matmul::gemm_params(m, k, n);
+        conv2d_bitserial_ext(
+            &mut sim, &p, bits, a_addr, &wpk, w_addr, &rq, out, None, true, idx,
+            Some(acc_dump),
+        );
+        let (oracle, _) = gemm_codes_golden(&a_codes, &w_codes, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let got =
+                    sim.machine.mem.read_u64_le(acc_dump + ((i * n_padded + j) * 8) as u64, 8) as i64;
+                assert_eq!(got, oracle[i * n + j], "({i},{j})");
+            }
+        }
+    }
+}

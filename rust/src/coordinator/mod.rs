@@ -1,0 +1,274 @@
+//! Batching inference coordinator — the L3 serving layer.
+//!
+//! The paper's contribution is the core itself, so L3 is the "thin driver
+//! plus" the workspace mandates: a request router + dynamic batcher in front
+//! of a pool of simulated Quark cores (std threads; the environment has no
+//! async runtime available — see Cargo.toml), with an optional PJRT
+//! golden-model cross-check ([`golden`]) wired into the data path.
+//!
+//! Flow:
+//! ```text
+//! clients → submit() → queue → batcher (size/timeout) → worker pool
+//!                                                (one simulated core each)
+//! ```
+//! Each worker owns a [`Sim`] and runs the configured model per request,
+//! reporting simulated cycles (device time at `freq_ghz`) plus host-side
+//! queueing/service times.
+
+pub mod golden;
+pub mod server;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::arch::MachineConfig;
+use crate::nn::model::{ModelRunner, Precision};
+use crate::nn::NetLayer;
+use crate::sim::{Sim, SimMode};
+
+/// One inference request (CIFAR-sized input codes).
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub input: Vec<u8>,
+}
+
+/// Completed inference.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// Simulated device cycles for the whole network.
+    pub sim_cycles: u64,
+    /// Simulated device latency in microseconds (cycles / freq).
+    pub device_us: f64,
+    /// Wall-clock time spent queued before a worker picked the batch up.
+    pub queue_time: Duration,
+    /// Wall-clock simulation (service) time.
+    pub service_time: Duration,
+    /// Which worker/core served it.
+    pub worker: usize,
+    /// Batch this request was grouped into.
+    pub batch_id: u64,
+}
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    pub machine: MachineConfig,
+    pub precision: Precision,
+    /// Simulated cores (worker threads).
+    pub workers: usize,
+    /// Max requests per batch.
+    pub batch_size: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub batch_timeout: Duration,
+    /// Model graph to serve.
+    pub net: Arc<Vec<NetLayer>>,
+}
+
+impl CoordinatorConfig {
+    /// A small default: Quark-4L, 2-bit, a reduced net for snappy serving.
+    pub fn demo() -> Self {
+        CoordinatorConfig {
+            machine: MachineConfig::quark(4),
+            precision: Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true },
+            workers: 2,
+            batch_size: 4,
+            batch_timeout: Duration::from_millis(20),
+            net: Arc::new(demo_net()),
+        }
+    }
+}
+
+/// A 4-conv CIFAR-scale classifier for serving demos (full ResNet-18 per
+/// request is a multi-second simulation; this keeps the serving path
+/// interactive while exercising every kernel).
+pub fn demo_net() -> Vec<NetLayer> {
+    use crate::kernels::Conv2dParams;
+    use crate::nn::{ConvLayer, LayerKind};
+    let conv = |name: &str, h: usize, cin: usize, cout: usize, stride: usize, q: bool| ConvLayer {
+        name: name.into(),
+        params: Conv2dParams { h, w: h, c_in: cin, c_out: cout, kh: 3, kw: 3, stride, pad: 1 },
+        relu: true,
+        residual: false,
+        quantized: q,
+    };
+    vec![
+        NetLayer { kind: LayerKind::Conv(conv("stem", 32, 3, 64, 1, false)), input: 0, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c1", 32, 64, 64, 2, true)), input: 1, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c2", 16, 64, 128, 2, true)), input: 2, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c3", 8, 128, 128, 2, true)), input: 3, residual_from: None },
+        NetLayer { kind: LayerKind::AvgPool { h: 4, w: 4, c: 128 }, input: 4, residual_from: None },
+        NetLayer { kind: LayerKind::Fc { k: 128, n: 100, name: "fc".into() }, input: 5, residual_from: None },
+    ]
+}
+
+struct Queued {
+    req: InferenceRequest,
+    enqueued: Instant,
+    reply: mpsc::Sender<InferenceResponse>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Queued>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    batch_counter: AtomicU64,
+    served: AtomicU64,
+}
+
+/// The coordinator: owns the batcher + worker threads.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    cfg: CoordinatorConfig,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            batch_counter: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+        });
+        let workers = (0..cfg.workers)
+            .map(|wid| {
+                let shared = shared.clone();
+                let cfg = cfg.clone();
+                std::thread::Builder::new()
+                    .name(format!("quark-core-{wid}"))
+                    .spawn(move || worker_loop(wid, shared, cfg))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Coordinator { shared, cfg, workers }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: InferenceRequest) -> mpsc::Receiver<InferenceResponse> {
+        let (tx, rx) = mpsc::channel();
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Queued { req, enqueued: Instant::now(), reply: tx });
+        drop(q);
+        self.shared.available.notify_one();
+        rx
+    }
+
+    /// Requests served so far.
+    pub fn served(&self) -> u64 {
+        self.shared.served.load(Ordering::Relaxed)
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Stop workers and join.
+    pub fn shutdown(self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Worker: claims batches (size- or timeout-bounded) and simulates them on
+/// its own core.
+fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
+    loop {
+        // Claim a batch.
+        let mut batch = Vec::new();
+        {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if !q.is_empty() {
+                    break;
+                }
+                q = shared.available.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+            }
+            // First request in hand; wait up to batch_timeout for more.
+            batch.push(q.pop_front().unwrap());
+            let deadline = Instant::now() + cfg.batch_timeout;
+            while batch.len() < cfg.batch_size {
+                if let Some(item) = q.pop_front() {
+                    batch.push(item);
+                    continue;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (nq, timeout) =
+                    shared.available.wait_timeout(q, deadline - now).unwrap();
+                q = nq;
+                if timeout.timed_out() && q.is_empty() {
+                    break;
+                }
+            }
+        }
+        let batch_id = shared.batch_counter.fetch_add(1, Ordering::Relaxed);
+
+        // Serve the batch on this worker's simulated core.
+        for item in batch {
+            let queue_time = item.enqueued.elapsed();
+            let t0 = Instant::now();
+            let mut sim = Sim::new(cfg.machine.clone());
+            sim.set_mode(SimMode::TimingOnly);
+            let reports = ModelRunner::run(&mut sim, &cfg.net, cfg.precision, false);
+            let sim_cycles: u64 = reports.iter().map(|r| r.run.cycles).sum();
+            let resp = InferenceResponse {
+                id: item.req.id,
+                sim_cycles,
+                device_us: sim_cycles as f64 / (cfg.machine.freq_ghz * 1e3),
+                queue_time,
+                service_time: t0.elapsed(),
+                worker: wid,
+                batch_id,
+            };
+            shared.served.fetch_add(1, Ordering::Relaxed);
+            let _ = item.reply.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_requests_and_batches() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 2;
+        cfg.batch_size = 4;
+        let coord = Coordinator::start(cfg);
+        let rxs: Vec<_> = (0..6)
+            .map(|i| coord.submit(InferenceRequest { id: i, input: vec![0u8; 32 * 32 * 3] }))
+            .collect();
+        let mut responses: Vec<_> =
+            rxs.into_iter().map(|rx| rx.recv_timeout(Duration::from_secs(120)).unwrap()).collect();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 6);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.sim_cycles > 0);
+            assert!(r.device_us > 0.0);
+        }
+        // Batching grouped at least two requests somewhere.
+        let max_batch = responses
+            .iter()
+            .map(|r| responses.iter().filter(|o| o.batch_id == r.batch_id).count())
+            .max()
+            .unwrap();
+        assert!(max_batch >= 2, "expected some batching, got max batch {max_batch}");
+        assert_eq!(coord.served(), 6);
+        coord.shutdown();
+    }
+}

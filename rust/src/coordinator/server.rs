@@ -1,0 +1,114 @@
+//! Line-protocol TCP front-end for the coordinator.
+//!
+//! Protocol (text, one request per line):
+//! ```text
+//! PING                      → PONG
+//! STATS                     → STATS served=<n>
+//! INFER <id>                → OK <id> cycles=<c> device_us=<t> worker=<w> batch=<b>
+//! INFER <id> <b0,b1,...>    → same, with explicit input bytes (comma-separated u8)
+//! QUIT                      → closes the connection
+//! ```
+//! (No JSON library exists in this offline environment; a line protocol keeps
+//! the wire format trivially testable with netcat.)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::{Coordinator, InferenceRequest};
+
+/// Serve until the process is killed. Binds `addr` (e.g. "127.0.0.1:7070").
+pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!(
+        "quark coordinator listening on {addr} ({} workers, machine {}, batch≤{})",
+        coord.config().workers,
+        coord.config().machine.name,
+        coord.config().batch_size
+    );
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let coord = coord.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_client(coord, stream) {
+                eprintln!("client error: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(300)))?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match parts.next().unwrap_or("") {
+            "PING" => writeln!(writer, "PONG")?,
+            "STATS" => writeln!(writer, "STATS served={}", coord.served())?,
+            "QUIT" => break,
+            "INFER" => {
+                let id: u64 = match parts.next().and_then(|s| s.parse().ok()) {
+                    Some(id) => id,
+                    None => {
+                        writeln!(writer, "ERR missing/invalid id")?;
+                        continue;
+                    }
+                };
+                let input: Vec<u8> = parts
+                    .next()
+                    .map(|csv| csv.split(',').filter_map(|v| v.parse().ok()).collect())
+                    .unwrap_or_else(|| vec![0u8; 32 * 32 * 3]);
+                let rx = coord.submit(InferenceRequest { id, input });
+                match rx.recv() {
+                    Ok(r) => writeln!(
+                        writer,
+                        "OK {} cycles={} device_us={:.1} worker={} batch={}",
+                        r.id, r.sim_cycles, r.device_us, r.worker, r.batch_id
+                    )?,
+                    Err(_) => writeln!(writer, "ERR worker dropped")?,
+                }
+            }
+            other => writeln!(writer, "ERR unknown command {other}")?,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+
+    #[test]
+    fn tcp_roundtrip() {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig::demo()));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server_coord = coord.clone();
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = handle_client(server_coord, stream);
+        });
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, "PING").unwrap();
+        writeln!(client, "INFER 7").unwrap();
+        writeln!(client, "STATS").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(3).map(|l| l.unwrap()).collect();
+        assert_eq!(lines[0], "PONG");
+        assert!(lines[1].starts_with("OK 7 cycles="), "{}", lines[1]);
+        assert!(lines[2].starts_with("STATS served="), "{}", lines[2]);
+    }
+}

@@ -1,0 +1,384 @@
+//! Decoder: inverse of [`crate::isa::encode`].
+//!
+//! Canonicalization notes (real assembly aliases):
+//! * `addi rd, x0, imm` decodes to [`ScalarOp::Li`] (the canonical form the
+//!   kernels emit); `addi x0, x0, 0` decodes to [`ScalarOp::Nop`].
+//! * `vsetivli` decodes to [`Instr::VSetVli`] with the immediate AVL.
+
+use super::encode::{
+    fld, freg_at, reg_at, vreg_at, OPCFG, OPC_BRANCH, OPC_LOAD, OPC_LOAD_FP, OPC_MADD, OPC_OP,
+    OPC_OP_FP, OPC_OP_IMM, OPC_OP_V, OPC_STORE, OPC_STORE_FP, OPC_SYSTEM, OPFVF, OPFVV, OPIVI,
+    OPIVV, OPIVX, OPMVV, OPMVX,
+};
+use super::instr::{AluOp, FAluOp, Instr, MemWidth, ScalarOp, VIOp, VMemKind, VOp};
+use super::quark::{F6_VBITPACK, F6_VPOPCNT, F6_VSHACC, OPC_CUSTOM2};
+use super::vtype::{Sew, VType};
+
+fn sext(v: u32, bits: u32) -> i64 {
+    let shift = 64 - bits;
+    (((v as i64) << shift) >> shift) as i64
+}
+
+fn i_imm(w: u32) -> i64 {
+    sext(fld(w, 20, 12), 12)
+}
+
+fn s_imm(w: u32) -> i64 {
+    sext((fld(w, 25, 7) << 5) | fld(w, 7, 5), 12)
+}
+
+fn viop_from_funct6_i(f6: u32) -> Option<VIOp> {
+    Some(match f6 {
+        0b000000 => VIOp::Add,
+        0b000010 => VIOp::Sub,
+        0b000011 => VIOp::Rsub,
+        0b000100 => VIOp::Minu,
+        0b000101 => VIOp::Min,
+        0b000110 => VIOp::Maxu,
+        0b000111 => VIOp::Max,
+        0b001001 => VIOp::And,
+        0b001010 => VIOp::Or,
+        0b001011 => VIOp::Xor,
+        0b100101 => VIOp::Sll,
+        0b101000 => VIOp::Srl,
+        0b101001 => VIOp::Sra,
+        _ => return None,
+    })
+}
+
+fn mem_eew(f3: u32) -> Option<Sew> {
+    Some(match f3 {
+        0b000 => Sew::E8,
+        0b101 => Sew::E16,
+        0b110 => Sew::E32,
+        0b111 => Sew::E64,
+        _ => return None,
+    })
+}
+
+/// Decode one 32-bit word. Returns `None` for words outside the implemented
+/// subset (a real core would trap with an illegal-instruction exception).
+pub fn decode(w: u32) -> Option<Instr> {
+    let opc = fld(w, 0, 7);
+    let f3 = fld(w, 12, 3);
+    match opc {
+        OPC_OP_IMM => {
+            let rd = reg_at(w, 7);
+            let rs1 = reg_at(w, 15);
+            match f3 {
+                0b000 => {
+                    let imm = i_imm(w);
+                    if rd.0 == 0 && rs1.0 == 0 && imm == 0 {
+                        Some(Instr::Scalar(ScalarOp::Nop))
+                    } else if rs1.0 == 0 {
+                        Some(Instr::Scalar(ScalarOp::Li { rd, imm }))
+                    } else {
+                        Some(Instr::Scalar(ScalarOp::AluImm { op: AluOp::Add, rd, rs1, imm }))
+                    }
+                }
+                0b001 => Some(Instr::Scalar(ScalarOp::AluImm {
+                    op: AluOp::Sll,
+                    rd,
+                    rs1,
+                    imm: fld(w, 20, 6) as i64,
+                })),
+                0b101 => {
+                    let op = if fld(w, 26, 6) == 0b010000 { AluOp::Sra } else { AluOp::Srl };
+                    Some(Instr::Scalar(ScalarOp::AluImm { op, rd, rs1, imm: fld(w, 20, 6) as i64 }))
+                }
+                0b010 => Some(Instr::Scalar(ScalarOp::AluImm { op: AluOp::Slt, rd, rs1, imm: i_imm(w) })),
+                0b011 => Some(Instr::Scalar(ScalarOp::AluImm { op: AluOp::Sltu, rd, rs1, imm: i_imm(w) })),
+                0b100 => Some(Instr::Scalar(ScalarOp::AluImm { op: AluOp::Xor, rd, rs1, imm: i_imm(w) })),
+                0b110 => Some(Instr::Scalar(ScalarOp::AluImm { op: AluOp::Or, rd, rs1, imm: i_imm(w) })),
+                0b111 => Some(Instr::Scalar(ScalarOp::AluImm { op: AluOp::And, rd, rs1, imm: i_imm(w) })),
+                _ => None,
+            }
+        }
+        OPC_OP => {
+            let rd = reg_at(w, 7);
+            let rs1 = reg_at(w, 15);
+            let rs2 = reg_at(w, 20);
+            let f7 = fld(w, 25, 7);
+            let op = match (f3, f7) {
+                (0b000, 0b0000000) => AluOp::Add,
+                (0b000, 0b0100000) => AluOp::Sub,
+                (0b001, 0b0000000) => AluOp::Sll,
+                (0b010, 0b0000000) => AluOp::Slt,
+                (0b011, 0b0000000) => AluOp::Sltu,
+                (0b100, 0b0000000) => AluOp::Xor,
+                (0b101, 0b0000000) => AluOp::Srl,
+                (0b101, 0b0100000) => AluOp::Sra,
+                (0b110, 0b0000000) => AluOp::Or,
+                (0b111, 0b0000000) => AluOp::And,
+                (0b000, 0b0000001) => AluOp::Mul,
+                (0b001, 0b0000001) => AluOp::Mulh,
+                (0b100, 0b0000001) => AluOp::Div,
+                (0b110, 0b0000001) => AluOp::Rem,
+                _ => return None,
+            };
+            Some(Instr::Scalar(ScalarOp::Alu { op, rd, rs1, rs2 }))
+        }
+        OPC_LOAD => {
+            let (width, signed) = match f3 {
+                0b000 => (MemWidth::B, true),
+                0b001 => (MemWidth::H, true),
+                0b010 => (MemWidth::W, true),
+                0b011 => (MemWidth::D, true),
+                0b100 => (MemWidth::B, false),
+                0b101 => (MemWidth::H, false),
+                0b110 => (MemWidth::W, false),
+                _ => return None,
+            };
+            Some(Instr::Scalar(ScalarOp::Load {
+                width,
+                signed,
+                rd: reg_at(w, 7),
+                base: reg_at(w, 15),
+                offset: i_imm(w),
+            }))
+        }
+        OPC_STORE => {
+            let width = match f3 {
+                0b000 => MemWidth::B,
+                0b001 => MemWidth::H,
+                0b010 => MemWidth::W,
+                0b011 => MemWidth::D,
+                _ => return None,
+            };
+            Some(Instr::Scalar(ScalarOp::Store {
+                width,
+                rs2: reg_at(w, 20),
+                base: reg_at(w, 15),
+                offset: s_imm(w),
+            }))
+        }
+        OPC_BRANCH => Some(Instr::Scalar(ScalarOp::Branch { taken: fld(w, 20, 5) != 0 })),
+        OPC_LOAD_FP => {
+            // Scalar flw (f3=010 with no vector width meaning) vs vector load.
+            if f3 == 0b010 {
+                return Some(Instr::Scalar(ScalarOp::FLoad {
+                    rd: freg_at(w, 7),
+                    base: reg_at(w, 15),
+                    offset: i_imm(w),
+                }));
+            }
+            let eew = mem_eew(f3)?;
+            let mop = fld(w, 26, 2);
+            let kind = match mop {
+                0b00 => VMemKind::UnitStride,
+                0b10 => VMemKind::Strided { stride: reg_at(w, 20) },
+                _ => return None,
+            };
+            Some(Instr::Vector(VOp::Load { kind, eew, vd: vreg_at(w, 7), base: reg_at(w, 15) }))
+        }
+        OPC_STORE_FP => {
+            if f3 == 0b010 {
+                return Some(Instr::Scalar(ScalarOp::FStore {
+                    rs2: freg_at(w, 20),
+                    base: reg_at(w, 15),
+                    offset: s_imm(w),
+                }));
+            }
+            let eew = mem_eew(f3)?;
+            let mop = fld(w, 26, 2);
+            let kind = match mop {
+                0b00 => VMemKind::UnitStride,
+                0b10 => VMemKind::Strided { stride: reg_at(w, 20) },
+                _ => return None,
+            };
+            Some(Instr::Vector(VOp::Store { kind, eew, vs3: vreg_at(w, 7), base: reg_at(w, 15) }))
+        }
+        OPC_OP_FP => {
+            let f7 = fld(w, 25, 7);
+            match f7 {
+                0b1100000 => Some(Instr::Scalar(ScalarOp::FCvtWS { rd: reg_at(w, 7), rs1: freg_at(w, 15) })),
+                0b1101000 => Some(Instr::Scalar(ScalarOp::FCvtSW { rd: freg_at(w, 7), rs1: reg_at(w, 15) })),
+                0b1110000 => Some(Instr::Scalar(ScalarOp::FMvXW { rd: reg_at(w, 7), rs1: freg_at(w, 15) })),
+                0b1111000 => Some(Instr::Scalar(ScalarOp::FMvWX { rd: freg_at(w, 7), rs1: reg_at(w, 15) })),
+                _ => {
+                    let op = match (f7, f3) {
+                        (0b0000000, _) => FAluOp::Add,
+                        (0b0000100, _) => FAluOp::Sub,
+                        (0b0001000, _) => FAluOp::Mul,
+                        (0b0001100, _) => FAluOp::Div,
+                        (0b0010100, 0b000) => FAluOp::Min,
+                        (0b0010100, 0b001) => FAluOp::Max,
+                        _ => return None,
+                    };
+                    Some(Instr::Scalar(ScalarOp::FAlu {
+                        op,
+                        rd: freg_at(w, 7),
+                        rs1: freg_at(w, 15),
+                        rs2: freg_at(w, 20),
+                    }))
+                }
+            }
+        }
+        OPC_MADD => Some(Instr::Scalar(ScalarOp::FMadd {
+            rd: freg_at(w, 7),
+            rs1: freg_at(w, 15),
+            rs2: freg_at(w, 20),
+            rs3: freg_at(w, 27),
+        })),
+        OPC_SYSTEM => {
+            if f3 == 0b010 && fld(w, 20, 12) == 0xC00 {
+                Some(Instr::Scalar(ScalarOp::CsrReadCycle { rd: reg_at(w, 7) }))
+            } else {
+                None
+            }
+        }
+        OPC_OP_V => decode_opv(w, f3),
+        OPC_CUSTOM2 => decode_custom(w, f3),
+        _ => None,
+    }
+}
+
+fn decode_opv(w: u32, f3: u32) -> Option<Instr> {
+    let f6 = fld(w, 26, 6);
+    let vd = vreg_at(w, 7);
+    let vs1 = vreg_at(w, 15);
+    let vs2 = vreg_at(w, 20);
+    let rs1 = reg_at(w, 15);
+    let fs1 = freg_at(w, 15);
+    let imm = sext(fld(w, 15, 5), 5);
+    match f3 {
+        OPCFG => {
+            // Only vsetivli (bits 31:30 == 11) is in the subset.
+            if fld(w, 30, 2) != 0b11 {
+                return None;
+            }
+            let vtype = VType::from_encoding(fld(w, 20, 10))?;
+            Some(Instr::VSetVli { rd: reg_at(w, 7), avl: fld(w, 15, 5) as u64, vtype })
+        }
+        OPIVV => Some(Instr::Vector(VOp::IVV { op: viop_from_funct6_i(f6)?, vd, vs2, vs1 })),
+        OPIVX => {
+            if f6 == 0b010111 && vs2.0 == 0 {
+                return Some(Instr::Vector(VOp::MvVX { vd, rs1 }));
+            }
+            Some(Instr::Vector(VOp::IVX { op: viop_from_funct6_i(f6)?, vd, vs2, rs1 }))
+        }
+        OPIVI => match f6 {
+            0b010111 if vs2.0 == 0 => Some(Instr::Vector(VOp::MvVI { vd, imm })),
+            0b011000 => Some(Instr::Vector(VOp::MseqVI { vd, vs2, imm })),
+            0b011001 => Some(Instr::Vector(VOp::MsneVI { vd, vs2, imm })),
+            _ => {
+                let op = viop_from_funct6_i(f6)?;
+                let imm = if matches!(op, VIOp::Sll | VIOp::Srl | VIOp::Sra) {
+                    fld(w, 15, 5) as i64
+                } else {
+                    imm
+                };
+                Some(Instr::Vector(VOp::IVI { op, vd, vs2, imm }))
+            }
+        },
+        OPMVV => match f6 {
+            0b000000 => Some(Instr::Vector(VOp::RedSum { vd, vs2, vs1 })),
+            0b010000 if vs1.0 == 0 => Some(Instr::Vector(VOp::MvXS { rd: reg_at(w, 7), vs2 })),
+            0b010010 => match vs1.0 {
+                0b00010 => Some(Instr::Vector(VOp::Zext { vd, vs2, frac: 8 })),
+                0b00011 => Some(Instr::Vector(VOp::Sext { vd, vs2, frac: 8 })),
+                0b00100 => Some(Instr::Vector(VOp::Zext { vd, vs2, frac: 4 })),
+                0b00101 => Some(Instr::Vector(VOp::Sext { vd, vs2, frac: 4 })),
+                0b00110 => Some(Instr::Vector(VOp::Zext { vd, vs2, frac: 2 })),
+                0b00111 => Some(Instr::Vector(VOp::Sext { vd, vs2, frac: 2 })),
+                _ => None,
+            },
+            0b100101 => Some(Instr::Vector(VOp::IVV { op: VIOp::Mul, vd, vs2, vs1 })),
+            0b100111 => Some(Instr::Vector(VOp::IVV { op: VIOp::Mulh, vd, vs2, vs1 })),
+            0b101101 => Some(Instr::Vector(VOp::MaccVV { vd, vs1, vs2 })),
+            _ => None,
+        },
+        OPMVX => match f6 {
+            0b010000 if vs2.0 == 0 => Some(Instr::Vector(VOp::MvSX { vd, rs1 })),
+            0b100101 => Some(Instr::Vector(VOp::IVX { op: VIOp::Mul, vd, vs2, rs1 })),
+            0b100111 => Some(Instr::Vector(VOp::IVX { op: VIOp::Mulh, vd, vs2, rs1 })),
+            0b101101 => Some(Instr::Vector(VOp::MaccVX { vd, rs1, vs2 })),
+            _ => None,
+        },
+        OPFVV => match f6 {
+            0b000000 => Some(Instr::Vector(VOp::FAddVV { vd, vs2, vs1 })),
+            0b000001 => Some(Instr::Vector(VOp::FRedSum { vd, vs2, vs1 })),
+            _ => None,
+        },
+        OPFVF => match f6 {
+            0b101100 => Some(Instr::Vector(VOp::FMaccVF { vd, rs1: fs1, vs2 })),
+            0b100100 => Some(Instr::Vector(VOp::FMulVF { vd, vs2, rs1: fs1 })),
+            0b000110 => Some(Instr::Vector(VOp::FMaxVF { vd, vs2, rs1: fs1 })),
+            0b010111 if vs2.0 == 0 => Some(Instr::Vector(VOp::FMvVF { vd, rs1: fs1 })),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+fn decode_custom(w: u32, f3: u32) -> Option<Instr> {
+    let f6 = fld(w, 26, 6);
+    let vd = vreg_at(w, 7);
+    let vs2 = vreg_at(w, 20);
+    let uimm = fld(w, 15, 5) as u8;
+    match (f6, f3) {
+        (F6_VPOPCNT, OPIVV) => Some(Instr::Vector(VOp::Popcnt { vd, vs2 })),
+        (F6_VSHACC, OPIVI) => Some(Instr::Vector(VOp::Shacc { vd, vs2, shamt: uimm })),
+        (F6_VBITPACK, OPIVI) => Some(Instr::Vector(VOp::Bitpack { vd, vs2, bit: uimm })),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encode::encode;
+    use super::*;
+    use crate::isa::reg::{FReg, Reg, VReg};
+
+    fn rt(i: Instr) {
+        let w = encode(&i).unwrap_or_else(|| panic!("{i:?} should encode"));
+        assert_eq!(decode(w), Some(i), "roundtrip failed for {i:?} (word {w:#010x})");
+    }
+
+    #[test]
+    fn custom_instruction_roundtrip() {
+        rt(Instr::Vector(VOp::Popcnt { vd: VReg(3), vs2: VReg(7) }));
+        rt(Instr::Vector(VOp::Shacc { vd: VReg(1), vs2: VReg(2), shamt: 1 }));
+        rt(Instr::Vector(VOp::Bitpack { vd: VReg(31), vs2: VReg(30), bit: 7 }));
+    }
+
+    #[test]
+    fn scalar_roundtrip_spotchecks() {
+        rt(Instr::Scalar(ScalarOp::Li { rd: Reg(5), imm: -7 }));
+        rt(Instr::Scalar(ScalarOp::Alu { op: AluOp::Mul, rd: Reg(1), rs1: Reg(2), rs2: Reg(3) }));
+        rt(Instr::Scalar(ScalarOp::Load {
+            width: MemWidth::B,
+            signed: false,
+            rd: Reg(9),
+            base: Reg(10),
+            offset: 33,
+        }));
+        rt(Instr::Scalar(ScalarOp::Store { width: MemWidth::D, rs2: Reg(4), base: Reg(2), offset: -8 }));
+        rt(Instr::Scalar(ScalarOp::FMadd { rd: FReg(1), rs1: FReg(2), rs2: FReg(3), rs3: FReg(4) }));
+        rt(Instr::Scalar(ScalarOp::CsrReadCycle { rd: Reg(14) }));
+    }
+
+    #[test]
+    fn vector_roundtrip_spotchecks() {
+        rt(Instr::Vector(VOp::IVV { op: VIOp::And, vd: VReg(1), vs2: VReg(2), vs1: VReg(3) }));
+        rt(Instr::Vector(VOp::IVX { op: VIOp::Mul, vd: VReg(1), vs2: VReg(2), rs1: Reg(3) }));
+        rt(Instr::Vector(VOp::MaccVX { vd: VReg(8), rs1: Reg(11), vs2: VReg(16) }));
+        rt(Instr::Vector(VOp::Load {
+            kind: VMemKind::Strided { stride: Reg(6) },
+            eew: Sew::E8,
+            vd: VReg(2),
+            base: Reg(10),
+        }));
+        rt(Instr::VSetVli {
+            rd: Reg(1),
+            avl: 16,
+            vtype: VType::new(Sew::E64, crate::isa::vtype::Lmul::M1),
+        });
+    }
+
+    #[test]
+    fn illegal_words_decode_to_none() {
+        assert_eq!(decode(0xFFFF_FFFF), None);
+        assert_eq!(decode(0), None);
+    }
+}

@@ -1,0 +1,416 @@
+//! 32-bit instruction encodings.
+//!
+//! Scalar instructions use the real RV64IMF formats; vector instructions use
+//! the real RVV 1.0 OP-V layouts (funct6 / vm / vs2 / vs1 / funct3 / vd);
+//! Quark's custom instructions use the custom-2 major opcode with an
+//! OP-V-like layout (see [`crate::isa::quark`]).
+//!
+//! `encode` returns `None` for dynamic-form instructions that have no
+//! single-word encoding (e.g. `li` with a >12-bit immediate, which a real
+//! assembler expands to `lui+addi`, or `vsetvli` with AVL ≥ 32, which takes
+//! AVL from a register the trace no longer names). Round-trip
+//! (`decode(encode(i)) == i`) holds for everything encodable — see the
+//! proptest suite in `rust/tests/isa_roundtrip.rs`.
+
+use super::instr::{AluOp, FAluOp, Instr, MemWidth, ScalarOp, VIOp, VMemKind, VOp};
+use super::quark::{F6_VBITPACK, F6_VPOPCNT, F6_VSHACC, OPC_CUSTOM2};
+use super::reg::{FReg, Reg, VReg};
+use super::vtype::Sew;
+
+// Major opcodes.
+pub(crate) const OPC_OP: u32 = 0x33;
+pub(crate) const OPC_OP_IMM: u32 = 0x13;
+pub(crate) const OPC_LOAD: u32 = 0x03;
+pub(crate) const OPC_STORE: u32 = 0x23;
+pub(crate) const OPC_BRANCH: u32 = 0x63;
+pub(crate) const OPC_LOAD_FP: u32 = 0x07;
+pub(crate) const OPC_STORE_FP: u32 = 0x27;
+pub(crate) const OPC_OP_FP: u32 = 0x53;
+pub(crate) const OPC_MADD: u32 = 0x43;
+pub(crate) const OPC_SYSTEM: u32 = 0x73;
+pub(crate) const OPC_OP_V: u32 = 0x57;
+
+fn r_type(funct7: u32, rs2: u32, rs1: u32, funct3: u32, rd: u32, opc: u32) -> u32 {
+    (funct7 << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opc
+}
+
+fn i_type(imm: i64, rs1: u32, funct3: u32, rd: u32, opc: u32) -> Option<u32> {
+    if !(-2048..=2047).contains(&imm) {
+        return None;
+    }
+    let imm12 = (imm as u32) & 0xFFF;
+    Some((imm12 << 20) | (rs1 << 15) | (funct3 << 12) | (rd << 7) | opc)
+}
+
+fn s_type(imm: i64, rs2: u32, rs1: u32, funct3: u32, opc: u32) -> Option<u32> {
+    if !(-2048..=2047).contains(&imm) {
+        return None;
+    }
+    let imm = (imm as u32) & 0xFFF;
+    Some(((imm >> 5) << 25) | (rs2 << 20) | (rs1 << 15) | (funct3 << 12) | ((imm & 0x1F) << 7) | opc)
+}
+
+fn alu_f3f7(op: AluOp) -> (u32, u32) {
+    match op {
+        AluOp::Add => (0b000, 0b0000000),
+        AluOp::Sub => (0b000, 0b0100000),
+        AluOp::Sll => (0b001, 0b0000000),
+        AluOp::Slt => (0b010, 0b0000000),
+        AluOp::Sltu => (0b011, 0b0000000),
+        AluOp::Xor => (0b100, 0b0000000),
+        AluOp::Srl => (0b101, 0b0000000),
+        AluOp::Sra => (0b101, 0b0100000),
+        AluOp::Or => (0b110, 0b0000000),
+        AluOp::And => (0b111, 0b0000000),
+        AluOp::Mul => (0b000, 0b0000001),
+        AluOp::Mulh => (0b001, 0b0000001),
+        AluOp::Div => (0b100, 0b0000001),
+        AluOp::Rem => (0b110, 0b0000001),
+    }
+}
+
+fn load_f3(width: MemWidth, signed: bool) -> u32 {
+    match (width, signed) {
+        (MemWidth::B, true) => 0b000,
+        (MemWidth::H, true) => 0b001,
+        (MemWidth::W, true) => 0b010,
+        (MemWidth::D, _) => 0b011,
+        (MemWidth::B, false) => 0b100,
+        (MemWidth::H, false) => 0b101,
+        (MemWidth::W, false) => 0b110,
+    }
+}
+
+fn store_f3(width: MemWidth) -> u32 {
+    match width {
+        MemWidth::B => 0b000,
+        MemWidth::H => 0b001,
+        MemWidth::W => 0b010,
+        MemWidth::D => 0b011,
+    }
+}
+
+fn falu_f7f3(op: FAluOp) -> (u32, u32) {
+    // rm=dyn (0b111) for arithmetic; fmin/fmax use funct3 as the selector.
+    match op {
+        FAluOp::Add => (0b0000000, 0b111),
+        FAluOp::Sub => (0b0000100, 0b111),
+        FAluOp::Mul => (0b0001000, 0b111),
+        FAluOp::Div => (0b0001100, 0b111),
+        FAluOp::Min => (0b0010100, 0b000),
+        FAluOp::Max => (0b0010100, 0b001),
+    }
+}
+
+// RVV funct3 (instruction class within OP-V).
+pub(crate) const OPIVV: u32 = 0b000;
+pub(crate) const OPFVV: u32 = 0b001;
+pub(crate) const OPMVV: u32 = 0b010;
+pub(crate) const OPIVI: u32 = 0b011;
+pub(crate) const OPIVX: u32 = 0b100;
+pub(crate) const OPFVF: u32 = 0b101;
+pub(crate) const OPMVX: u32 = 0b110;
+pub(crate) const OPCFG: u32 = 0b111;
+
+pub(crate) fn viop_funct6(op: VIOp) -> u32 {
+    match op {
+        VIOp::Add => 0b000000,
+        VIOp::Sub => 0b000010,
+        VIOp::Rsub => 0b000011,
+        VIOp::Minu => 0b000100,
+        VIOp::Min => 0b000101,
+        VIOp::Maxu => 0b000110,
+        VIOp::Max => 0b000111,
+        VIOp::And => 0b001001,
+        VIOp::Or => 0b001010,
+        VIOp::Xor => 0b001011,
+        VIOp::Sll => 0b100101,
+        VIOp::Srl => 0b101000,
+        VIOp::Sra => 0b101001,
+        // vmul/vmulh live in the OPMVV/OPMVX space.
+        VIOp::Mul => 0b100101,
+        VIOp::Mulh => 0b100111,
+    }
+}
+
+fn vop_v(funct6: u32, vm: u32, vs2: u32, vs1: u32, funct3: u32, vd: u32, opc: u32) -> u32 {
+    (funct6 << 26) | (vm << 25) | (vs2 << 20) | (vs1 << 15) | (funct3 << 12) | (vd << 7) | opc
+}
+
+fn imm5(imm: i64) -> Option<u32> {
+    if !(-16..=15).contains(&imm) {
+        return None;
+    }
+    Some((imm as u32) & 0x1F)
+}
+
+fn vmem_width_f3(eew: Sew) -> u32 {
+    match eew {
+        Sew::E8 => 0b000,
+        Sew::E16 => 0b101,
+        Sew::E32 => 0b110,
+        Sew::E64 => 0b111,
+    }
+}
+
+/// Encode one instruction to its 32-bit word, or `None` if this dynamic form
+/// has no single-word encoding (see module docs).
+pub fn encode(instr: &Instr) -> Option<u32> {
+    match *instr {
+        Instr::Scalar(op) => encode_scalar(op),
+        Instr::VSetVli { rd, avl, vtype } => {
+            // vsetivli: bits 31:30 = 11, zimm10 = vtype, uimm5 (AVL) in rs1.
+            if avl >= 32 {
+                return None;
+            }
+            let zimm = vtype.encoding() & 0x3FF;
+            Some(
+                (0b11 << 30)
+                    | (zimm << 20)
+                    | ((avl as u32) << 15)
+                    | (OPCFG << 12)
+                    | ((rd.0 as u32) << 7)
+                    | OPC_OP_V,
+            )
+        }
+        Instr::Vector(v) => encode_vector(v),
+    }
+}
+
+fn encode_scalar(op: ScalarOp) -> Option<u32> {
+    use ScalarOp::*;
+    match op {
+        Li { rd, imm } => i_type(imm, 0, 0b000, rd.0 as u32, OPC_OP_IMM),
+        Alu { op, rd, rs1, rs2 } => {
+            let (f3, f7) = alu_f3f7(op);
+            Some(r_type(f7, rs2.0 as u32, rs1.0 as u32, f3, rd.0 as u32, OPC_OP))
+        }
+        AluImm { op, rd, rs1, imm } => {
+            let (f3, f7) = alu_f3f7(op);
+            match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => {
+                    // RV64 shifts: 6-bit shamt, funct7[6:1] selects the op.
+                    if !(0..64).contains(&imm) {
+                        return None;
+                    }
+                    Some(
+                        ((f7 >> 1) << 26)
+                            | ((imm as u32) << 20)
+                            | ((rs1.0 as u32) << 15)
+                            | (f3 << 12)
+                            | ((rd.0 as u32) << 7)
+                            | OPC_OP_IMM,
+                    )
+                }
+                AluOp::Add | AluOp::And | AluOp::Or | AluOp::Xor | AluOp::Slt | AluOp::Sltu => {
+                    i_type(imm, rs1.0 as u32, f3, rd.0 as u32, OPC_OP_IMM)
+                }
+                // No immediate forms exist.
+                _ => None,
+            }
+        }
+        Load { width, signed, rd, base, offset } => {
+            // `ld`/`lwu` etc.; unsigned `ld` is canonicalized to signed.
+            let signed = signed || width == MemWidth::D;
+            i_type(offset, base.0 as u32, load_f3(width, signed), rd.0 as u32, OPC_LOAD)
+        }
+        Store { width, rs2, base, offset } => {
+            s_type(offset, rs2.0 as u32, base.0 as u32, store_f3(width), OPC_STORE)
+        }
+        // Pseudo-marker: beq/bne x0,x0 with `taken` carried in rs2.
+        Branch { taken } => Some(r_type(0, taken as u32, 0, 0b000, 0, OPC_BRANCH)),
+        FLoad { rd, base, offset } => i_type(offset, base.0 as u32, 0b010, rd.0 as u32, OPC_LOAD_FP),
+        FStore { rs2, base, offset } => {
+            s_type(offset, rs2.0 as u32, base.0 as u32, 0b010, OPC_STORE_FP)
+        }
+        FAlu { op, rd, rs1, rs2 } => {
+            let (f7, f3) = falu_f7f3(op);
+            Some(r_type(f7, rs2.0 as u32, rs1.0 as u32, f3, rd.0 as u32, OPC_OP_FP))
+        }
+        FMadd { rd, rs1, rs2, rs3 } => Some(
+            ((rs3.0 as u32) << 27)
+                | ((rs2.0 as u32) << 20)
+                | ((rs1.0 as u32) << 15)
+                | (0b111 << 12)
+                | ((rd.0 as u32) << 7)
+                | OPC_MADD,
+        ),
+        FCvtWS { rd, rs1 } => Some(r_type(0b1100000, 0, rs1.0 as u32, 0b111, rd.0 as u32, OPC_OP_FP)),
+        FCvtSW { rd, rs1 } => Some(r_type(0b1101000, 0, rs1.0 as u32, 0b111, rd.0 as u32, OPC_OP_FP)),
+        FMvXW { rd, rs1 } => Some(r_type(0b1110000, 0, rs1.0 as u32, 0b000, rd.0 as u32, OPC_OP_FP)),
+        FMvWX { rd, rs1 } => Some(r_type(0b1111000, 0, rs1.0 as u32, 0b000, rd.0 as u32, OPC_OP_FP)),
+        // csrrs rd, cycle(0xC00), x0
+        CsrReadCycle { rd } => i_type(-1024, 0, 0b010, rd.0 as u32, OPC_SYSTEM),
+        Nop => i_type(0, 0, 0b000, 0, OPC_OP_IMM),
+    }
+}
+
+fn encode_vector(v: VOp) -> Option<u32> {
+    use VOp::*;
+    let vm = 1; // kernels run unmasked
+    match v {
+        Load { kind, eew, vd, base } => {
+            let w = vmem_width_f3(eew);
+            let (mop, rs2) = match kind {
+                VMemKind::UnitStride => (0b00u32, 0u32),
+                VMemKind::Strided { stride } => (0b10, stride.0 as u32),
+            };
+            Some(
+                (mop << 26)
+                    | (vm << 25)
+                    | (rs2 << 20)
+                    | ((base.0 as u32) << 15)
+                    | (w << 12)
+                    | ((vd.0 as u32) << 7)
+                    | OPC_LOAD_FP,
+            )
+        }
+        Store { kind, eew, vs3, base } => {
+            let w = vmem_width_f3(eew);
+            let (mop, rs2) = match kind {
+                VMemKind::UnitStride => (0b00u32, 0u32),
+                VMemKind::Strided { stride } => (0b10, stride.0 as u32),
+            };
+            Some(
+                (mop << 26)
+                    | (vm << 25)
+                    | (rs2 << 20)
+                    | ((base.0 as u32) << 15)
+                    | (w << 12)
+                    | ((vs3.0 as u32) << 7)
+                    | OPC_STORE_FP,
+            )
+        }
+        IVV { op, vd, vs2, vs1 } => {
+            let (f6, f3) = match op {
+                VIOp::Mul => (0b100101, OPMVV),
+                VIOp::Mulh => (0b100111, OPMVV),
+                _ => (viop_funct6(op), OPIVV),
+            };
+            Some(vop_v(f6, vm, vs2.0 as u32, vs1.0 as u32, f3, vd.0 as u32, OPC_OP_V))
+        }
+        IVX { op, vd, vs2, rs1 } => {
+            let (f6, f3) = match op {
+                VIOp::Mul => (0b100101, OPMVX),
+                VIOp::Mulh => (0b100111, OPMVX),
+                _ => (viop_funct6(op), OPIVX),
+            };
+            Some(vop_v(f6, vm, vs2.0 as u32, rs1.0 as u32, f3, vd.0 as u32, OPC_OP_V))
+        }
+        IVI { op, vd, vs2, imm } => {
+            // No vi forms for sub/min/max/mul families we use them with.
+            let ok = matches!(
+                op,
+                VIOp::Add | VIOp::Rsub | VIOp::And | VIOp::Or | VIOp::Xor | VIOp::Sll
+                    | VIOp::Srl | VIOp::Sra
+            );
+            if !ok {
+                return None;
+            }
+            let imm = if matches!(op, VIOp::Sll | VIOp::Srl | VIOp::Sra) {
+                if !(0..32).contains(&imm) {
+                    return None;
+                }
+                (imm as u32) & 0x1F
+            } else {
+                imm5(imm)?
+            };
+            Some(vop_v(viop_funct6(op), vm, vs2.0 as u32, imm, OPIVI, vd.0 as u32, OPC_OP_V))
+        }
+        MaccVX { vd, rs1, vs2 } => {
+            Some(vop_v(0b101101, vm, vs2.0 as u32, rs1.0 as u32, OPMVX, vd.0 as u32, OPC_OP_V))
+        }
+        MaccVV { vd, vs1, vs2 } => {
+            Some(vop_v(0b101101, vm, vs2.0 as u32, vs1.0 as u32, OPMVV, vd.0 as u32, OPC_OP_V))
+        }
+        RedSum { vd, vs2, vs1 } => {
+            Some(vop_v(0b000000, vm, vs2.0 as u32, vs1.0 as u32, OPMVV, vd.0 as u32, OPC_OP_V))
+        }
+        MvXS { rd, vs2 } => {
+            Some(vop_v(0b010000, vm, vs2.0 as u32, 0, OPMVV, rd.0 as u32, OPC_OP_V))
+        }
+        MvSX { vd, rs1 } => {
+            Some(vop_v(0b010000, vm, 0, rs1.0 as u32, OPMVX, vd.0 as u32, OPC_OP_V))
+        }
+        MvVX { vd, rs1 } => {
+            Some(vop_v(0b010111, vm, 0, rs1.0 as u32, OPIVX, vd.0 as u32, OPC_OP_V))
+        }
+        MvVI { vd, imm } => {
+            Some(vop_v(0b010111, vm, 0, imm5(imm)?, OPIVI, vd.0 as u32, OPC_OP_V))
+        }
+        Sext { vd, vs2, frac } => {
+            let vs1 = match frac {
+                8 => 0b00011,
+                4 => 0b00101,
+                2 => 0b00111,
+                _ => return None,
+            };
+            Some(vop_v(0b010010, vm, vs2.0 as u32, vs1, OPMVV, vd.0 as u32, OPC_OP_V))
+        }
+        Zext { vd, vs2, frac } => {
+            let vs1 = match frac {
+                8 => 0b00010,
+                4 => 0b00100,
+                2 => 0b00110,
+                _ => return None,
+            };
+            Some(vop_v(0b010010, vm, vs2.0 as u32, vs1, OPMVV, vd.0 as u32, OPC_OP_V))
+        }
+        MseqVI { vd, vs2, imm } => {
+            Some(vop_v(0b011000, vm, vs2.0 as u32, imm5(imm)?, OPIVI, vd.0 as u32, OPC_OP_V))
+        }
+        MsneVI { vd, vs2, imm } => {
+            Some(vop_v(0b011001, vm, vs2.0 as u32, imm5(imm)?, OPIVI, vd.0 as u32, OPC_OP_V))
+        }
+        FMaccVF { vd, rs1, vs2 } => {
+            Some(vop_v(0b101100, vm, vs2.0 as u32, rs1.0 as u32, OPFVF, vd.0 as u32, OPC_OP_V))
+        }
+        FAddVV { vd, vs2, vs1 } => {
+            Some(vop_v(0b000000, vm, vs2.0 as u32, vs1.0 as u32, OPFVV, vd.0 as u32, OPC_OP_V))
+        }
+        FMulVF { vd, vs2, rs1 } => {
+            Some(vop_v(0b100100, vm, vs2.0 as u32, rs1.0 as u32, OPFVF, vd.0 as u32, OPC_OP_V))
+        }
+        FMaxVF { vd, vs2, rs1 } => {
+            Some(vop_v(0b000110, vm, vs2.0 as u32, rs1.0 as u32, OPFVF, vd.0 as u32, OPC_OP_V))
+        }
+        FMvVF { vd, rs1 } => {
+            Some(vop_v(0b010111, vm, 0, rs1.0 as u32, OPFVF, vd.0 as u32, OPC_OP_V))
+        }
+        FRedSum { vd, vs2, vs1 } => {
+            Some(vop_v(0b000001, vm, vs2.0 as u32, vs1.0 as u32, OPFVV, vd.0 as u32, OPC_OP_V))
+        }
+        Popcnt { vd, vs2 } => {
+            Some(vop_v(F6_VPOPCNT, vm, vs2.0 as u32, 0, OPIVV, vd.0 as u32, OPC_CUSTOM2))
+        }
+        Shacc { vd, vs2, shamt } => {
+            if shamt >= 32 {
+                return None;
+            }
+            Some(vop_v(F6_VSHACC, vm, vs2.0 as u32, shamt as u32, OPIVI, vd.0 as u32, OPC_CUSTOM2))
+        }
+        Bitpack { vd, vs2, bit } => {
+            if bit >= 32 {
+                return None;
+            }
+            Some(vop_v(F6_VBITPACK, vm, vs2.0 as u32, bit as u32, OPIVI, vd.0 as u32, OPC_CUSTOM2))
+        }
+    }
+}
+
+// Re-exported field helpers for the decoder.
+pub(crate) fn fld(word: u32, lo: u32, len: u32) -> u32 {
+    (word >> lo) & ((1 << len) - 1)
+}
+
+pub(crate) fn reg_at(word: u32, lo: u32) -> Reg {
+    Reg(fld(word, lo, 5) as u8)
+}
+
+pub(crate) fn freg_at(word: u32, lo: u32) -> FReg {
+    FReg(fld(word, lo, 5) as u8)
+}
+
+pub(crate) fn vreg_at(word: u32, lo: u32) -> VReg {
+    VReg(fld(word, lo, 5) as u8)
+}

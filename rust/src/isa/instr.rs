@@ -1,0 +1,397 @@
+//! The instruction vocabulary shared by the assembler-style kernel emitters,
+//! the functional executor, and the timing model.
+//!
+//! This is the *dynamic* form: the simulator is trace-driven, so loop control
+//! appears as explicit [`ScalarOp::Branch`] markers (still charged cycles by
+//! the timing model) rather than as resolved PC arithmetic. Everything else
+//! has full architectural semantics.
+
+use super::reg::{FReg, Reg, VReg};
+use super::vtype::{Sew, VType};
+
+/// Memory access width for scalar loads/stores.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MemWidth {
+    B,
+    H,
+    W,
+    D,
+}
+
+impl MemWidth {
+    pub fn bytes(self) -> usize {
+        match self {
+            MemWidth::B => 1,
+            MemWidth::H => 2,
+            MemWidth::W => 4,
+            MemWidth::D => 8,
+        }
+    }
+}
+
+/// Scalar integer ALU operations (RV64IM subset used by the kernels).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AluOp {
+    Add,
+    Sub,
+    And,
+    Or,
+    Xor,
+    Sll,
+    Srl,
+    Sra,
+    Slt,
+    Sltu,
+    Mul,
+    Mulh,
+    Div,
+    Rem,
+}
+
+/// Scalar FP ALU operations (CVA6's scalar FPU — this is where quantized
+/// re-scaling runs, per the paper's architecture).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FAluOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+}
+
+/// Scalar-side instructions (executed by the CVA6 model).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ScalarOp {
+    /// `li rd, imm` pseudo-instruction (lui+addi pair; charged 1 cycle, as
+    /// CVA6 fuses or the common case is addi).
+    Li { rd: Reg, imm: i64 },
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    AluImm { op: AluOp, rd: Reg, rs1: Reg, imm: i64 },
+    Load { width: MemWidth, signed: bool, rd: Reg, base: Reg, offset: i64 },
+    Store { width: MemWidth, rs2: Reg, base: Reg, offset: i64 },
+    /// Control-flow marker emitted once per dynamic branch; `taken` feeds the
+    /// (static) branch-cost model.
+    Branch { taken: bool },
+    /// f32 load/store.
+    FLoad { rd: FReg, base: Reg, offset: i64 },
+    FStore { rs2: FReg, base: Reg, offset: i64 },
+    FAlu { op: FAluOp, rd: FReg, rs1: FReg, rs2: FReg },
+    /// `fmadd.s rd, rs1, rs2, rs3` → rd = rs1*rs2 + rs3.
+    FMadd { rd: FReg, rs1: FReg, rs2: FReg, rs3: FReg },
+    /// `fcvt.w.s` (f32 → i32, round-to-nearest-even) — the quantizing cast.
+    FCvtWS { rd: Reg, rs1: FReg },
+    /// `fcvt.s.w` (i32 → f32) — dequantizing cast for accumulator re-scale.
+    FCvtSW { rd: FReg, rs1: Reg },
+    /// `fmv.x.w` — move f32 bits to integer register.
+    FMvXW { rd: Reg, rs1: FReg },
+    /// `fmv.w.x` — move integer bits to f32 register.
+    FMvWX { rd: FReg, rs1: Reg },
+    /// `csrrs rd, cycle, x0` — read the cycle CSR (how the paper measures).
+    CsrReadCycle { rd: Reg },
+    Nop,
+}
+
+/// Vector memory addressing kinds.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum VMemKind {
+    /// `vle<eew>.v` / `vse<eew>.v`
+    UnitStride,
+    /// `vlse<eew>.v` / `vsse<eew>.v` with byte stride in a scalar register.
+    Strided { stride: Reg },
+}
+
+/// Vector integer two-source ops (element-wise).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum VIOp {
+    Add,
+    Sub,
+    Rsub,
+    And,
+    Or,
+    Xor,
+    Sll,
+    Srl,
+    Sra,
+    Min,
+    Max,
+    Minu,
+    Maxu,
+    Mul,
+    Mulh,
+}
+
+/// Vector-side instructions (dispatched by CVA6 to the Ara/Quark unit).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum VOp {
+    /// Unit-stride / strided vector load.
+    Load { kind: VMemKind, eew: Sew, vd: VReg, base: Reg },
+    /// Unit-stride / strided vector store.
+    Store { kind: VMemKind, eew: Sew, vs3: VReg, base: Reg },
+    /// vv-form integer op: `vd = vs2 op vs1`.
+    IVV { op: VIOp, vd: VReg, vs2: VReg, vs1: VReg },
+    /// vx-form integer op: `vd = vs2 op x[rs1]`.
+    IVX { op: VIOp, vd: VReg, vs2: VReg, rs1: Reg },
+    /// vi-form integer op: `vd = vs2 op imm`.
+    IVI { op: VIOp, vd: VReg, vs2: VReg, imm: i64 },
+    /// `vmacc.vx vd, rs1, vs2` → vd += x[rs1] * vs2.
+    MaccVX { vd: VReg, rs1: Reg, vs2: VReg },
+    /// `vmacc.vv vd, vs1, vs2` → vd += vs1 * vs2.
+    MaccVV { vd: VReg, vs1: VReg, vs2: VReg },
+    /// `vredsum.vs vd, vs2, vs1` → vd[0] = vs1[0] + Σ vs2[0..vl].
+    RedSum { vd: VReg, vs2: VReg, vs1: VReg },
+    /// `vmv.x.s rd, vs2` — element 0 to scalar (synchronizes scalar on vector).
+    MvXS { rd: Reg, vs2: VReg },
+    /// `vmv.s.x vd, rs1` — scalar into element 0.
+    MvSX { vd: VReg, rs1: Reg },
+    /// `vmv.v.x vd, rs1` — broadcast splat.
+    MvVX { vd: VReg, rs1: Reg },
+    /// `vmv.v.i vd, imm` — immediate splat.
+    MvVI { vd: VReg, imm: i64 },
+    /// `vsext.vf{2,4,8}` — sign-extend from SEW/frac to SEW.
+    Sext { vd: VReg, vs2: VReg, frac: u8 },
+    /// `vzext.vf{2,4,8}`.
+    Zext { vd: VReg, vs2: VReg, frac: u8 },
+    /// `vmseq.vi vd, vs2, imm` — mask-producing compare (result in mask
+    /// layout: bit i of vd = (vs2[i] == imm)). Used by the pure-RVV bitpack
+    /// fallback; runs on the (slow) mask unit.
+    MseqVI { vd: VReg, vs2: VReg, imm: i64 },
+    /// `vmsne.vi vd, vs2, imm` — mask-producing compare (≠).
+    MsneVI { vd: VReg, vs2: VReg, imm: i64 },
+    /// `vfmacc.vf vd, rs1, vs2` → vd += f[rs1] * vs2 (f32; Ara only).
+    FMaccVF { vd: VReg, rs1: FReg, vs2: VReg },
+    /// `vfadd.vv` (f32; Ara only).
+    FAddVV { vd: VReg, vs2: VReg, vs1: VReg },
+    /// `vfmul.vf` (f32; Ara only).
+    FMulVF { vd: VReg, vs2: VReg, rs1: FReg },
+    /// `vfmax.vf` (f32 relu; Ara only).
+    FMaxVF { vd: VReg, vs2: VReg, rs1: FReg },
+    /// `vfmv.v.f` splat (f32; Ara only).
+    FMvVF { vd: VReg, rs1: FReg },
+    /// `vfredsum.vs` (f32; Ara only).
+    FRedSum { vd: VReg, vs2: VReg, vs1: VReg },
+
+    // ---- Quark custom instructions (paper §III-A) ----
+    /// `vpopcnt.v vd, vs2` — per-element popcount. The base RVV `vcpop.m`
+    /// only counts bits over the whole mask register; bit-serial dot products
+    /// need a per-element count, which this supplies.
+    Popcnt { vd: VReg, vs2: VReg },
+    /// `vshacc.vi vd, vs2, shamt` — fused shift-accumulate:
+    /// `vd[i] = (vd[i] << shamt) + vs2[i]`. Implements the `2^(n+m)` weighting
+    /// of Eq. (1) as a Horner recurrence over bit planes.
+    Shacc { vd: VReg, vs2: VReg, shamt: u8 },
+    /// `vbitpack.vi vd, vs2, b` — slice bit `b` out of each of the `vl`
+    /// elements of `vs2` and pack the resulting `vl`-bit plane into the low
+    /// bits of `vd` (viewed as a VLEN-bit vector), after shifting `vd` left by
+    /// `vl` bits: `vd = (vd << vl) | plane(vs2, b)`. Consecutive calls
+    /// accumulate bit slices exactly as paper Fig. 1 describes. See
+    /// [`crate::isa::quark`] for the interpretation notes.
+    Bitpack { vd: VReg, vs2: VReg, bit: u8 },
+}
+
+/// One dynamic instruction.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Instr {
+    Scalar(ScalarOp),
+    /// `vsetvli rd, avl, e<sew>,m<lmul>` — trace-driven, so the requested AVL
+    /// is carried as a value; the executor computes `vl = min(avl, VLMAX)`.
+    VSetVli { rd: Reg, avl: u64, vtype: VType },
+    Vector(VOp),
+}
+
+/// Functional unit that executes an instruction — the timing model's routing
+/// key (one busy-until clock per unit; see [`crate::sim::timing`]).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum FUnit {
+    ScalarAlu,
+    ScalarMul,
+    ScalarMem,
+    ScalarFpu,
+    ScalarCtl,
+    /// Vector config (vsetvli) — handled in the dispatcher.
+    VCfg,
+    VAlu,
+    VMul,
+    VFpu,
+    /// Mask unit (mask-producing compares) — deliberately slow in Ara.
+    VMask,
+    /// Reductions (inter-lane tree).
+    VRed,
+    VLsu,
+    /// Slide/permute unit; Quark's `vbitpack` lives here (cross-lane bit
+    /// permutation network).
+    VSld,
+}
+
+impl VOp {
+    /// Which functional unit executes this op.
+    pub fn unit(&self) -> FUnit {
+        use VOp::*;
+        match self {
+            Load { .. } | Store { .. } => FUnit::VLsu,
+            IVV { op, .. } | IVX { op, .. } | IVI { op, .. } => match op {
+                VIOp::Mul | VIOp::Mulh => FUnit::VMul,
+                _ => FUnit::VAlu,
+            },
+            MaccVX { .. } | MaccVV { .. } => FUnit::VMul,
+            RedSum { .. } | FRedSum { .. } => FUnit::VRed,
+            MvXS { .. } | MvSX { .. } | MvVX { .. } | MvVI { .. } => FUnit::VAlu,
+            Sext { .. } | Zext { .. } => FUnit::VAlu,
+            MseqVI { .. } | MsneVI { .. } => FUnit::VMask,
+            FMaccVF { .. } | FAddVV { .. } | FMulVF { .. } | FMaxVF { .. } | FMvVF { .. } => {
+                FUnit::VFpu
+            }
+            // Quark's dedicated popcount tree sits in the ex-multiplier/FPU
+            // slot of the lane (the area Fig. 5 labels "bit-serial units"),
+            // so AND/accumulate (VALU) and popcount overlap via chaining.
+            Popcnt { .. } => FUnit::VMul,
+            Shacc { .. } => FUnit::VAlu,
+            Bitpack { .. } => FUnit::VSld,
+        }
+    }
+
+    /// True if this op requires the vector FPU (absent in Quark).
+    pub fn needs_vfpu(&self) -> bool {
+        self.unit() == FUnit::VFpu
+    }
+
+    /// True if this op is one of Quark's custom instructions (absent in Ara).
+    pub fn is_quark_custom(&self) -> bool {
+        matches!(self, VOp::Popcnt { .. } | VOp::Shacc { .. } | VOp::Bitpack { .. })
+    }
+
+    /// Destination vector register, if any.
+    pub fn vreg_write(&self) -> Option<VReg> {
+        use VOp::*;
+        match *self {
+            Load { vd, .. } => Some(vd),
+            Store { .. } => None,
+            IVV { vd, .. } | IVX { vd, .. } | IVI { vd, .. } => Some(vd),
+            MaccVX { vd, .. } | MaccVV { vd, .. } => Some(vd),
+            RedSum { vd, .. } | FRedSum { vd, .. } => Some(vd),
+            MvXS { .. } => None,
+            MvSX { vd, .. } | MvVX { vd, .. } | MvVI { vd, .. } => Some(vd),
+            Sext { vd, .. } | Zext { vd, .. } => Some(vd),
+            MseqVI { vd, .. } | MsneVI { vd, .. } => Some(vd),
+            FMaccVF { vd, .. } | FAddVV { vd, .. } | FMulVF { vd, .. } | FMaxVF { vd, .. }
+            | FMvVF { vd, .. } => Some(vd),
+            Popcnt { vd, .. } | Shacc { vd, .. } | Bitpack { vd, .. } => Some(vd),
+        }
+    }
+
+    /// Source vector registers (up to 3: vs1, vs2, and vd-as-accumulator).
+    pub fn vreg_reads(&self) -> [Option<VReg>; 3] {
+        use VOp::*;
+        match *self {
+            Load { .. } => [None; 3],
+            Store { vs3, .. } => [Some(vs3), None, None],
+            IVV { vs2, vs1, .. } => [Some(vs2), Some(vs1), None],
+            IVX { vs2, .. } | IVI { vs2, .. } => [Some(vs2), None, None],
+            MaccVX { vd, vs2, .. } => [Some(vs2), Some(vd), None],
+            MaccVV { vd, vs1, vs2 } => [Some(vs2), Some(vs1), Some(vd)],
+            RedSum { vs2, vs1, .. } | FRedSum { vs2, vs1, .. } => [Some(vs2), Some(vs1), None],
+            MvXS { vs2, .. } => [Some(vs2), None, None],
+            MvSX { .. } | MvVX { .. } | MvVI { .. } | FMvVF { .. } => [None; 3],
+            Sext { vs2, .. } | Zext { vs2, .. } => [Some(vs2), None, None],
+            MseqVI { vs2, .. } | MsneVI { vs2, .. } => [Some(vs2), None, None],
+            FMaccVF { vd, vs2, .. } => [Some(vs2), Some(vd), None],
+            FAddVV { vs2, vs1, .. } => [Some(vs2), Some(vs1), None],
+            FMulVF { vs2, .. } | FMaxVF { vs2, .. } => [Some(vs2), None, None],
+            Popcnt { vs2, .. } => [Some(vs2), None, None],
+            Shacc { vd, vs2, .. } => [Some(vs2), Some(vd), None],
+            Bitpack { vd, vs2, .. } => [Some(vs2), Some(vd), None],
+        }
+    }
+
+    /// Scalar register consumed (address base, stride, or vx operand), if any.
+    pub fn sreg_read(&self) -> Option<Reg> {
+        use VOp::*;
+        match *self {
+            Load { base, .. } | Store { base, .. } => Some(base),
+            IVX { rs1, .. } | MaccVX { rs1, .. } | MvSX { rs1, .. } | MvVX { rs1, .. } => {
+                Some(rs1)
+            }
+            _ => None,
+        }
+    }
+
+    /// Scalar register produced (vector → scalar sync point), if any.
+    pub fn sreg_write(&self) -> Option<Reg> {
+        match *self {
+            VOp::MvXS { rd, .. } => Some(rd),
+            _ => None,
+        }
+    }
+}
+
+impl Instr {
+    pub fn is_vector(&self) -> bool {
+        matches!(self, Instr::Vector(_) | Instr::VSetVli { .. })
+    }
+
+    /// Functional unit routing for the timing model.
+    pub fn unit(&self) -> FUnit {
+        match self {
+            Instr::Scalar(op) => {
+                use ScalarOp::*;
+                match op {
+                    Li { .. } | Alu { .. } | AluImm { .. } | Nop => FUnit::ScalarAlu,
+                    Load { .. } | Store { .. } | FLoad { .. } | FStore { .. } => FUnit::ScalarMem,
+                    Branch { .. } => FUnit::ScalarCtl,
+                    FAlu { .. } | FMadd { .. } | FCvtWS { .. } | FCvtSW { .. } | FMvXW { .. }
+                    | FMvWX { .. } => FUnit::ScalarFpu,
+                    CsrReadCycle { .. } => FUnit::ScalarCtl,
+                }
+            }
+            Instr::VSetVli { .. } => FUnit::VCfg,
+            Instr::Vector(v) => v.unit(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quark_custom_ops_are_flagged() {
+        let v = VOp::Popcnt { vd: VReg(1), vs2: VReg(2) };
+        assert!(v.is_quark_custom());
+        assert!(!v.needs_vfpu());
+        let v = VOp::FMaccVF { vd: VReg(1), rs1: FReg(0), vs2: VReg(2) };
+        assert!(v.needs_vfpu());
+        assert!(!v.is_quark_custom());
+    }
+
+    #[test]
+    fn macc_reads_its_accumulator() {
+        let v = VOp::MaccVX { vd: VReg(4), rs1: Reg(5), vs2: VReg(6) };
+        let reads = v.vreg_reads();
+        assert!(reads.contains(&Some(VReg(4))));
+        assert!(reads.contains(&Some(VReg(6))));
+        assert_eq!(v.vreg_write(), Some(VReg(4)));
+        assert_eq!(v.sreg_read(), Some(Reg(5)));
+    }
+
+    #[test]
+    fn unit_routing() {
+        assert_eq!(
+            Instr::Vector(VOp::Bitpack { vd: VReg(0), vs2: VReg(1), bit: 0 }).unit(),
+            FUnit::VSld
+        );
+        assert_eq!(
+            Instr::Vector(VOp::MseqVI { vd: VReg(0), vs2: VReg(1), imm: 0 }).unit(),
+            FUnit::VMask
+        );
+        assert_eq!(
+            Instr::Scalar(ScalarOp::FAlu {
+                op: FAluOp::Mul,
+                rd: FReg(0),
+                rs1: FReg(1),
+                rs2: FReg(2)
+            })
+            .unit(),
+            FUnit::ScalarFpu
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Instruction-set definitions: the RV64 scalar subset CVA6 executes, the
+//! RVV 1.0 vector subset Ara implements, and Quark's three custom vector
+//! instructions (`vpopcnt.v`, `vshacc.vi`, `vbitpack.vi`).
+//!
+//! The simulator is *trace-driven*: kernels (see [`crate::kernels`]) emit the
+//! dynamic instruction stream straight into the simulator, with loop control
+//! represented by explicit [`Instr::Branch`] markers so control-flow overhead
+//! is still charged. Encodings ([`encode`]/[`decode`]) exist so the custom
+//! instructions have concrete, testable 32-bit formats (they occupy the
+//! custom-2 major opcode, as a real Ara-derived design would).
+
+pub mod decode;
+pub mod disasm;
+pub mod encode;
+pub mod instr;
+pub mod quark;
+pub mod reg;
+pub mod vtype;
+
+pub use instr::{FUnit, Instr, MemWidth, ScalarOp, VMemKind, VOp};
+pub use reg::{FReg, Reg, VReg};
+pub use vtype::{Lmul, Sew, VType};

@@ -1,0 +1,75 @@
+//! Quark's custom-instruction definitions and interpretation notes.
+//!
+//! The paper (§III-A) adds three instructions to the RVV 1.0 ISA:
+//!
+//! | mnemonic       | semantics                                                        |
+//! |----------------|------------------------------------------------------------------|
+//! | `vpopcnt.v`    | per-element population count                                     |
+//! | `vshacc.vi`    | fused shift-accumulate: `vd[i] = (vd[i] << shamt) + vs2[i]`      |
+//! | `vbitpack.vi`  | `vd = (vd << vl) \| plane(vs2, b)` — bit-slice + pack            |
+//!
+//! ## Why each exists
+//!
+//! The bit-serial inner product (paper Eq. 1)
+//!
+//! ```text
+//! w · a = Σₘ Σₙ 2^(n+m) · popcount(wₘ AND aₙ)
+//! ```
+//!
+//! needs three operators beyond the base ISA:
+//!
+//! * **per-element popcount** — base RVV only has `vcpop.m`, a *whole-register*
+//!   count over a mask; bit-serial needs one count per packed word.
+//! * **shift-and-accumulate** — the `2^(n+m)` weights become a Horner
+//!   recurrence over bit planes (MSB→LSB): `acc = (acc << 1) + partial`.
+//!   Fusing saves one instruction and one VRF round-trip per plane.
+//! * **bit-packing** — activations arrive element-per-byte from the previous
+//!   layer and must be transposed to bit-plane (bit-stream) layout *at every
+//!   layer*; without hardware support this runs on the mask unit and eats the
+//!   entire bit-serial advantage (paper Fig. 3, "Int2 w/o vbitpack").
+//!
+//! ## `vbitpack` interpretation
+//!
+//! Paper Fig. 1 shows consecutive `vbitpack` calls accumulating bit slices of
+//! `v1` into `v2`, "shift[ing] the target register to the left and then
+//! perform[ing] the packing". The figure is 8 elements wide and leaves the
+//! exact shift amount implicit. We pin down the semantics as:
+//!
+//! ```text
+//! vd = (vd << vl) | plane(vs2, b)        (vd viewed as a VLEN-bit vector,
+//!                                         plane bit i = bit b of vs2[i])
+//! ```
+//!
+//! i.e. the register shifts left by one *plane width* so that `n` consecutive
+//! calls with `b = n-1 … 0` leave `n` bit planes packed plane-major in `vd`.
+//! This matches the figure (two colored slices sitting side by side after two
+//! calls at 2-bit precision) and is what the bit-serial kernels want: each
+//! plane is a contiguous `vl`-bit stream. One call into a zeroed register
+//! extracts a single plane.
+//!
+//! ## Encodings
+//!
+//! The three instructions occupy the *custom-2* major opcode (`0x5B`), which
+//! RISC-V reserves for vendor extensions, with an OP-V-like layout:
+//! `funct6 | vm=1 | vs2 | rs1/imm5 | funct3 | vd | opcode`. See
+//! [`crate::isa::encode`].
+
+/// Major opcode used by the custom instructions (RISC-V custom-2 space).
+pub const OPC_CUSTOM2: u32 = 0x5B;
+
+/// funct6 assignments within custom-2.
+pub const F6_VPOPCNT: u32 = 0b000001;
+pub const F6_VSHACC: u32 = 0b000010;
+pub const F6_VBITPACK: u32 = 0b000011;
+
+/// Cost model notes (used by `sim::timing`):
+///
+/// * `vshacc.vi` executes on the lane ALUs at the full 64 bit/lane/cycle
+///   rate; `vpopcnt.v` has its own popcount tree in the lane slot freed by
+///   the FPU removal (Fig. 5's "bit-serial units"), so the AND→popcount→
+///   accumulate triple overlaps across two units via chaining. Both are
+///   single-cycle at 22FDX/1 GHz (the paper reports no frequency loss: both
+///   designs close at 1.05 GHz TT).
+/// * `vbitpack.vi` is a cross-lane bit permutation and runs on the slide unit
+///   at `lanes × 64` input bits per cycle.
+pub const _COST_MODEL_DOC: () = ();

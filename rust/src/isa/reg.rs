@@ -1,0 +1,103 @@
+//! Architectural register names.
+
+use std::fmt;
+
+/// Scalar integer register `x0..x31` (`x0` is hard-wired zero).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct Reg(pub u8);
+
+/// Scalar floating-point register `f0..f31` (CVA6's FPU — used by the
+/// re-scaling step of quantized inference, which Quark keeps on the scalar
+/// core precisely so the *vector* FPU can be dropped).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct FReg(pub u8);
+
+/// Vector register `v0..v31`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct VReg(pub u8);
+
+impl Reg {
+    pub const ZERO: Reg = Reg(0);
+
+    /// Panics on out-of-range register numbers.
+    pub fn new(n: u8) -> Self {
+        assert!(n < 32, "x{n} out of range");
+        Reg(n)
+    }
+}
+
+impl FReg {
+    pub fn new(n: u8) -> Self {
+        assert!(n < 32, "f{n} out of range");
+        FReg(n)
+    }
+}
+
+impl VReg {
+    pub fn new(n: u8) -> Self {
+        assert!(n < 32, "v{n} out of range");
+        VReg(n)
+    }
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "x{}", self.0)
+    }
+}
+
+impl fmt::Display for FReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "f{}", self.0)
+    }
+}
+
+impl fmt::Display for VReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "v{}", self.0)
+    }
+}
+
+/// Conventional ABI aliases used by the kernel emitters for readability.
+pub mod abi {
+    use super::{FReg, Reg};
+
+    pub const ZERO: Reg = Reg(0);
+    pub const RA: Reg = Reg(1);
+    pub const SP: Reg = Reg(2);
+    /// Temporaries t0..t6.
+    pub const T0: Reg = Reg(5);
+    pub const T1: Reg = Reg(6);
+    pub const T2: Reg = Reg(7);
+    pub const T3: Reg = Reg(28);
+    pub const T4: Reg = Reg(29);
+    pub const T5: Reg = Reg(30);
+    pub const T6: Reg = Reg(31);
+    /// Argument registers a0..a7.
+    pub const A0: Reg = Reg(10);
+    pub const A1: Reg = Reg(11);
+    pub const A2: Reg = Reg(12);
+    pub const A3: Reg = Reg(13);
+    pub const A4: Reg = Reg(14);
+    pub const A5: Reg = Reg(15);
+    pub const A6: Reg = Reg(16);
+    pub const A7: Reg = Reg(17);
+    /// Saved registers s2..s11 (s0/s1 reserved for frame in real ABIs).
+    pub const S2: Reg = Reg(18);
+    pub const S3: Reg = Reg(19);
+    pub const S4: Reg = Reg(20);
+    pub const S5: Reg = Reg(21);
+    pub const S6: Reg = Reg(22);
+    pub const S7: Reg = Reg(23);
+    pub const S8: Reg = Reg(24);
+    pub const S9: Reg = Reg(25);
+    pub const S10: Reg = Reg(26);
+    pub const S11: Reg = Reg(27);
+
+    pub const FT0: FReg = FReg(0);
+    pub const FT1: FReg = FReg(1);
+    pub const FT2: FReg = FReg(2);
+    pub const FT3: FReg = FReg(3);
+    pub const FA0: FReg = FReg(10);
+    pub const FA1: FReg = FReg(11);
+}

@@ -1,0 +1,151 @@
+//! RVV `vtype` state: selected element width (SEW) and register grouping
+//! (LMUL). Quark/Ara use VLEN = 4096 bits (16 KiB VRF for 4 lanes — paper
+//! Table II), so a single vector register holds e.g. 512 bytes.
+
+use std::fmt;
+
+/// Selected element width.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub enum Sew {
+    E8,
+    E16,
+    E32,
+    E64,
+}
+
+impl Sew {
+    /// Element width in bits.
+    pub fn bits(self) -> usize {
+        match self {
+            Sew::E8 => 8,
+            Sew::E16 => 16,
+            Sew::E32 => 32,
+            Sew::E64 => 64,
+        }
+    }
+
+    /// Element width in bytes.
+    pub fn bytes(self) -> usize {
+        self.bits() / 8
+    }
+
+    /// `vsew` encoding per RVV 1.0.
+    pub fn encoding(self) -> u32 {
+        match self {
+            Sew::E8 => 0,
+            Sew::E16 => 1,
+            Sew::E32 => 2,
+            Sew::E64 => 3,
+        }
+    }
+
+    pub fn from_encoding(v: u32) -> Option<Self> {
+        Some(match v {
+            0 => Sew::E8,
+            1 => Sew::E16,
+            2 => Sew::E32,
+            3 => Sew::E64,
+            _ => return None,
+        })
+    }
+}
+
+/// Register group multiplier (integral LMUL only — the kernels never need
+/// fractional grouping).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub enum Lmul {
+    M1,
+    M2,
+    M4,
+    M8,
+}
+
+impl Lmul {
+    pub fn factor(self) -> usize {
+        match self {
+            Lmul::M1 => 1,
+            Lmul::M2 => 2,
+            Lmul::M4 => 4,
+            Lmul::M8 => 8,
+        }
+    }
+
+    /// `vlmul` encoding per RVV 1.0.
+    pub fn encoding(self) -> u32 {
+        match self {
+            Lmul::M1 => 0,
+            Lmul::M2 => 1,
+            Lmul::M4 => 2,
+            Lmul::M8 => 3,
+        }
+    }
+
+    pub fn from_encoding(v: u32) -> Option<Self> {
+        Some(match v {
+            0 => Lmul::M1,
+            1 => Lmul::M2,
+            2 => Lmul::M4,
+            3 => Lmul::M8,
+            _ => return None,
+        })
+    }
+}
+
+/// The dynamic vector-type configuration set by `vsetvli`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct VType {
+    pub sew: Sew,
+    pub lmul: Lmul,
+}
+
+impl VType {
+    pub fn new(sew: Sew, lmul: Lmul) -> Self {
+        VType { sew, lmul }
+    }
+
+    /// VLMAX for a given VLEN (bits): `LMUL * VLEN / SEW`.
+    pub fn vlmax(&self, vlen_bits: usize) -> usize {
+        self.lmul.factor() * vlen_bits / self.sew.bits()
+    }
+
+    /// Raw `vtype` CSR encoding (ta/ma assumed set, as Ara's runtime does).
+    pub fn encoding(&self) -> u32 {
+        (1 << 7) | (1 << 6) | (self.sew.encoding() << 3) | self.lmul.encoding()
+    }
+
+    pub fn from_encoding(v: u32) -> Option<Self> {
+        Some(VType {
+            sew: Sew::from_encoding((v >> 3) & 0x7)?,
+            lmul: Lmul::from_encoding(v & 0x7)?,
+        })
+    }
+}
+
+impl fmt::Display for VType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "e{},m{}", self.sew.bits(), self.lmul.factor())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vlmax_matches_vlen4096() {
+        // VLEN=4096: one register holds 512 int8 / 64 int64 elements.
+        assert_eq!(VType::new(Sew::E8, Lmul::M1).vlmax(4096), 512);
+        assert_eq!(VType::new(Sew::E64, Lmul::M1).vlmax(4096), 64);
+        assert_eq!(VType::new(Sew::E32, Lmul::M8).vlmax(4096), 1024);
+    }
+
+    #[test]
+    fn vtype_encoding_roundtrip() {
+        for sew in [Sew::E8, Sew::E16, Sew::E32, Sew::E64] {
+            for lmul in [Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8] {
+                let vt = VType::new(sew, lmul);
+                assert_eq!(VType::from_encoding(vt.encoding()), Some(vt));
+            }
+        }
+    }
+}

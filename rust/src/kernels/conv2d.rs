@@ -1,0 +1,584 @@
+//! Direct convolution kernels, NHWC, three precisions:
+//!
+//! * [`conv2d_bitserial`] — sub-byte weights × sub-byte activations via
+//!   AND + `vpopcnt` + `vshacc` over bit planes (paper Eq. 1). Quark only.
+//!   Activations are packed per im2col patch (with `vbitpack` or the pure-RVV
+//!   fallback — the Fig. 3 ablation), weights are packed offline
+//!   ([`crate::quant::pack_weight_planes`]).
+//! * [`conv2d_int8`] — the Ara baseline: u8 activations × i8 weights with
+//!   SEW=32 `vmacc.vx` accumulation (also runs on Quark — it is integer).
+//! * [`conv2d_f32`] — the FP32 baseline (Ara only; Quark traps on vector FP).
+//!
+//! All three share the same structure: per output pixel, gather the zero-
+//! padded patch into a scratch row (the im2col copy the paper's runtime
+//! performs), then reduce against the weight matrix vectorized over output
+//! channels, then re-quantize on the scalar FPU ([`super::requantize`]).
+//!
+//! ## Bit-serial schedule (§Perf-tuned)
+//!
+//! Channel blocks are `wpk.block = 64·LMUL` wide (LMUL ∈ {1,2,4} picked by
+//! [`bitserial_block`] from `c_out`) — wider blocks amortize the per-block
+//! zero/combine/store overhead that dominates small (1×1) convs. Weight
+//! vectors stay *resident* in v0–v11 across the whole pixel loop when
+//! `planes × K-words × LMUL ≤ 12` registers (always true for the 1×1
+//! projection shortcuts and 1-bit 3×3 layers); otherwise they stream through
+//! v0–v7 in grouped `vle64` chunks. Broadcast activation words use offset
+//! addressing off per-plane base registers. Register map (phase 2):
+//!
+//! ```text
+//! v0–v11   weight vectors (resident or streaming chunks)
+//! v12–v15  AND/popcount temporary (LMUL regs)
+//! v16+4i   plane-pair accumulators acc[p·pw+q] (LMUL regs each)
+//! ```
+
+use crate::isa::instr::{MemWidth, ScalarOp, VIOp, VMemKind, VOp};
+use crate::isa::reg::{abi, FReg, VReg};
+use crate::isa::vtype::{Lmul, Sew};
+use crate::quant::PackedWeights;
+use crate::sim::Sim;
+
+use super::bitpack::{emit_pack_planes, emit_row_sum_u8, PackedBuf};
+use super::requantize::{
+    emit_asum_preload, emit_requant_channel_block, emit_requant_setup, RqBuf,
+};
+use super::{Conv2dParams, KernelRun};
+
+/// Pixels processed per requant block (accumulators buffered in memory).
+const PIXEL_BLOCK: usize = 8;
+
+/// Weight registers available for residency / streaming chunks.
+const W_REGS: usize = 12;
+
+/// Channel-vector width for the bit-serial kernel on a machine: 64·LMUL with
+/// LMUL ∈ {1,2,4}, sized to cover `c_out` in as few blocks as possible.
+pub fn bitserial_block(vlen_bits: usize, c_out: usize) -> usize {
+    let base = vlen_bits / 64;
+    for lmul in [1usize, 2, 4] {
+        if base * lmul >= c_out {
+            return base * lmul;
+        }
+    }
+    base * 4
+}
+
+fn lmul_of(factor: usize) -> Lmul {
+    match factor {
+        1 => Lmul::M1,
+        2 => Lmul::M2,
+        4 => Lmul::M4,
+        8 => Lmul::M8,
+        _ => panic!("unsupported LMUL {factor}"),
+    }
+}
+
+/// Copy the zero-padded im2col patch for output pixel `(oy, ox)` from the
+/// NHWC feature map at `fm` (element size `esz` bytes) into `patch`
+/// (`k·esz` bytes). Interior pixels copy `kh` contiguous row segments;
+/// edge pixels zero the out-of-bounds parts first.
+fn emit_im2col_patch(
+    sim: &mut Sim,
+    p: &Conv2dParams,
+    fm: u64,
+    esz: usize,
+    oy: usize,
+    ox: usize,
+    patch: u64,
+) {
+    let eew = match esz {
+        1 => Sew::E8,
+        4 => Sew::E32,
+        _ => panic!("unsupported element size"),
+    };
+    let row_len = p.kw * p.c_in; // elements per kernel row
+    let full_edge = p.valid_taps(oy, ox).len() != p.kh * p.kw;
+    if full_edge {
+        // Zero the whole patch, then overwrite the valid spans.
+        let k = p.k();
+        let per_reg = sim.cfg.vlen_bits / (8 * esz);
+        let mut off = 0usize;
+        while off < k {
+            let chunk = (k - off).min(per_reg * 8);
+            sim.vsetvli(chunk as u64, eew, lmul_for(chunk, per_reg));
+            sim.v(VOp::MvVI { vd: VReg(0), imm: 0 });
+            sim.li(abi::A1, (patch + (off * esz) as u64) as i64);
+            sim.v(VOp::Store { kind: VMemKind::UnitStride, eew, vs3: VReg(0), base: abi::A1 });
+            off += chunk;
+        }
+    }
+    for dy in 0..p.kh {
+        let iy = (oy * p.stride + dy) as isize - p.pad as isize;
+        if iy < 0 || iy >= p.h as isize {
+            continue;
+        }
+        // Valid dx range for this row.
+        let mut dx0 = 0usize;
+        while dx0 < p.kw && (ox * p.stride + dx0) as isize - (p.pad as isize) < 0 {
+            dx0 += 1;
+        }
+        let mut dx1 = p.kw;
+        while dx1 > dx0 && (ox * p.stride + dx1 - 1) as isize - (p.pad as isize) >= p.w as isize {
+            dx1 -= 1;
+        }
+        if dx1 <= dx0 {
+            continue;
+        }
+        let ix0 = (ox * p.stride + dx0) - p.pad;
+        let span = (dx1 - dx0) * p.c_in; // contiguous elements in NHWC
+        let src = fm + (((iy as usize) * p.w + ix0) * p.c_in * esz) as u64;
+        let dst = patch + ((dy * row_len + dx0 * p.c_in) * esz) as u64;
+        let per_reg = sim.cfg.vlen_bits / (8 * esz);
+        let mut off = 0usize;
+        while off < span {
+            let chunk = (span - off).min(per_reg * 8);
+            sim.vsetvli(chunk as u64, eew, lmul_for(chunk, per_reg));
+            sim.li(abi::A0, (src + (off * esz) as u64) as i64);
+            sim.v(VOp::Load { kind: VMemKind::UnitStride, eew, vd: VReg(0), base: abi::A0 });
+            sim.li(abi::A1, (dst + (off * esz) as u64) as i64);
+            sim.v(VOp::Store { kind: VMemKind::UnitStride, eew, vs3: VReg(0), base: abi::A1 });
+            off += chunk;
+        }
+    }
+    sim.loop_edge(abi::T4);
+}
+
+fn lmul_for(elems: usize, per_reg: usize) -> Lmul {
+    match elems.div_ceil(per_reg) {
+        0 | 1 => Lmul::M1,
+        2 => Lmul::M2,
+        3 | 4 => Lmul::M4,
+        _ => Lmul::M8,
+    }
+}
+
+/// Bit-serial sub-byte convolution (Quark). `abits` = activation precision,
+/// weight precision comes from `wpk`. Both must be ≤ 2 (the paper's range;
+/// the accumulator-register schedule holds pa·pw ≤ 4 plane pairs).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bitserial(
+    sim: &mut Sim,
+    p: &Conv2dParams,
+    abits: u8,
+    fm_in: u64,
+    wpk: &PackedWeights,
+    wbuf: u64,
+    rq: &RqBuf,
+    fm_out: u64,
+    residual: Option<u64>,
+    use_vbitpack: bool,
+    idx_vec: u64,
+) -> KernelRun {
+    conv2d_bitserial_ext(
+        sim, p, abits, fm_in, wpk, wbuf, rq, fm_out, residual, use_vbitpack, idx_vec, None,
+    )
+}
+
+/// [`conv2d_bitserial`] with an optional accumulator dump: when `acc_dump` is
+/// `Some(addr)`, every output's integer ACC (Eq. 1 result, pre-requant) is
+/// written as an i64 at `addr + (pixel·c_out_padded + channel)·8`, where
+/// `c_out_padded = ceil(c_out/block)·block`. The coordinator's golden-model
+/// cross-check reads these for integer-exact comparison against the AOT JAX
+/// kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bitserial_ext(
+    sim: &mut Sim,
+    p: &Conv2dParams,
+    abits: u8,
+    fm_in: u64,
+    wpk: &PackedWeights,
+    wbuf: u64,
+    rq: &RqBuf,
+    fm_out: u64,
+    residual: Option<u64>,
+    use_vbitpack: bool,
+    idx_vec: u64,
+    acc_dump: Option<u64>,
+) -> KernelRun {
+    assert!(sim.cfg.has_quark_isa, "bit-serial conv requires the Quark ISA");
+    assert!(abits <= 2 && wpk.bits <= 2, "plane-pair schedule supports ≤2-bit");
+    assert_eq!(wpk.k, p.k(), "packed weights must match conv K");
+    let k = p.k();
+    let kw_words = wpk.kw();
+    let nb = wpk.block; // output-channel vector length (SEW=64 × LMUL)
+    let lmul = nb / (sim.cfg.vlen_bits / 64);
+    assert!(
+        matches!(lmul, 1 | 2 | 4),
+        "channel block {nb} must be 1/2/4 vregs at SEW=64 (VLEN {})",
+        sim.cfg.vlen_bits
+    );
+    let vl_lmul = lmul_of(lmul);
+    let pa = abits as usize;
+    let pw = wpk.bits as usize;
+    let (oh, ow) = (p.out_h(), p.out_w());
+    let c0 = sim.cycles();
+
+    // Weight residency: all pw×Kw channel-vectors in v0..v11, loaded once per
+    // channel block; otherwise stream chunks of `chunk_kw` words per plane
+    // through v0..v7.
+    let resident = pw * kw_words * lmul <= W_REGS;
+    let chunk_kw = (8 / lmul).min(kw_words.max(1));
+    let w_reg = |q: usize, kw_i: usize| -> VReg {
+        if resident {
+            VReg((lmul * (q * kw_words + kw_i)) as u8)
+        } else {
+            VReg((lmul * (kw_i % chunk_kw)) as u8)
+        }
+    };
+    let tmp = VReg(12);
+    let acc_reg = |pq: usize| VReg(16 + 4 * pq as u8);
+
+    // Scratch: patch rows, packed patches, row sums, accumulators, consts.
+    let patch = sim.alloc((PIXEL_BLOCK * k) as u64);
+    let packed: Vec<PackedBuf> =
+        (0..PIXEL_BLOCK).map(|_| PackedBuf::alloc(sim, k, abits)).collect();
+    let asumbuf = sim.alloc((PIXEL_BLOCK * 4) as u64);
+    let accbuf = sim.alloc((PIXEL_BLOCK * nb * 8) as u64);
+    let consts = sim.alloc(16);
+    emit_requant_setup(sim, rq, consts);
+
+    let pixels: Vec<(usize, usize)> =
+        (0..oh).flat_map(|y| (0..ow).map(move |x| (y, x))).collect();
+    let c_out_padded = wpk.blocks() * nb;
+    // Where pixel t of the current block stores its ACC vector for channel
+    // block jb: the rotating scratch buffer, or the caller's dump region.
+    let acc_addr = |blk: &[(usize, usize)], t: usize, jb: usize| -> u64 {
+        match acc_dump {
+            Some(dump) => {
+                let (oy, ox) = blk[t];
+                dump + (((oy * ow + ox) * c_out_padded + jb * nb) * 8) as u64
+            }
+            None => accbuf + (t * nb * 8) as u64,
+        }
+    };
+
+    for blk in pixels.chunks(PIXEL_BLOCK) {
+        // Phase 1: im2col + pack + row-sum for each pixel of the block.
+        for (t, &(oy, ox)) in blk.iter().enumerate() {
+            let patch_t = patch + (t * k) as u64;
+            emit_im2col_patch(sim, p, fm_in, 1, oy, ox, patch_t);
+            emit_pack_planes(sim, patch_t, &packed[t], use_vbitpack, idx_vec);
+            emit_row_sum_u8(sim, patch_t, k, asumbuf + (t * 4) as u64);
+        }
+        // ASUMs → f32 registers, reused across all channel blocks.
+        emit_asum_preload(sim, blk.len(), |t| asumbuf + (t * 4) as u64);
+
+        // Phase 2: per channel block, per pixel: ACC via Eq. 1.
+        for jb in 0..wpk.blocks() {
+            sim.vsetvli(nb as u64, Sew::E64, vl_lmul);
+            if resident {
+                // Load all weight vectors for this channel block once.
+                for q in 0..pw {
+                    for kw_i in 0..kw_words {
+                        sim.li(abi::A0, (wbuf + wpk.vec_byte_offset(jb, q, kw_i)) as i64);
+                        sim.v(VOp::Load {
+                            kind: VMemKind::UnitStride,
+                            eew: Sew::E64,
+                            vd: w_reg(q, kw_i),
+                            base: abi::A0,
+                        });
+                    }
+                }
+            }
+            for (t, _) in blk.iter().enumerate() {
+                // acc_pq := 0
+                for i in 0..(pa * pw) {
+                    sim.v(VOp::MvVI { vd: acc_reg(i), imm: 0 });
+                }
+                // Per-plane base registers for offset-addressed a-word loads.
+                let abase = [abi::S2, abi::S3];
+                for (pl, &reg) in abase.iter().enumerate().take(pa) {
+                    sim.li(reg, packed[t].plane_addr(pl) as i64);
+                }
+                for q in 0..pw {
+                    let mut kw_i = 0;
+                    while kw_i < kw_words {
+                        if !resident && kw_i % chunk_kw == 0 {
+                            // Stream the next chunk of weight vectors with one
+                            // grouped load (contiguous kw range per plane).
+                            let words = chunk_kw.min(kw_words - kw_i);
+                            sim.vsetvli((words * nb) as u64, Sew::E64, lmul_for(words * nb, sim.cfg.vlen_bits / 64));
+                            sim.li(abi::A0, (wbuf + wpk.vec_byte_offset(jb, q, kw_i)) as i64);
+                            sim.v(VOp::Load {
+                                kind: VMemKind::UnitStride,
+                                eew: Sew::E64,
+                                vd: VReg(0),
+                                base: abi::A0,
+                            });
+                            sim.vsetvli(nb as u64, Sew::E64, vl_lmul);
+                        }
+                        for pl in 0..pa {
+                            // Broadcast activation word (p, kw) of pixel t.
+                            sim.s(ScalarOp::Load {
+                                width: MemWidth::D,
+                                signed: false,
+                                rd: abi::T1,
+                                base: abase[pl],
+                                offset: (kw_i * 8) as i64,
+                            });
+                            // AND + per-element popcount + accumulate.
+                            sim.v(VOp::IVX {
+                                op: VIOp::And,
+                                vd: tmp,
+                                vs2: w_reg(q, kw_i),
+                                rs1: abi::T1,
+                            });
+                            sim.v(VOp::Popcnt { vd: tmp, vs2: tmp });
+                            let acc = acc_reg(pl * pw + q);
+                            sim.v(VOp::IVV { op: VIOp::Add, vd: acc, vs2: acc, vs1: tmp });
+                        }
+                        kw_i += 1;
+                    }
+                    sim.loop_edge(abi::T2);
+                }
+                // Combine plane pairs: ACC = Σ 2^(p+q)·acc_pq via vshacc
+                // (the fused shift-accumulate the paper adds).
+                let acc_final = match (pa, pw) {
+                    (1, 1) => acc_reg(0),
+                    (1, 2) | (2, 1) => {
+                        // ACC = 2·acc_hi + acc_lo.
+                        let (hi, lo) = (acc_reg(1), acc_reg(0));
+                        sim.v(VOp::Shacc { vd: hi, vs2: lo, shamt: 1 });
+                        hi
+                    }
+                    (2, 2) => {
+                        // acc[p·2+q]: 0=00, 1=01, 2=10, 3=11.
+                        // ACC = 4·a11 + 2·(a01 + a10) + a00.
+                        let (a00, a01, a10, a11) = (acc_reg(0), acc_reg(1), acc_reg(2), acc_reg(3));
+                        sim.v(VOp::IVV { op: VIOp::Add, vd: a01, vs2: a01, vs1: a10 });
+                        sim.v(VOp::Shacc { vd: a11, vs2: a01, shamt: 1 });
+                        sim.v(VOp::Shacc { vd: a11, vs2: a00, shamt: 1 });
+                        a11
+                    }
+                    _ => unreachable!(),
+                };
+                sim.li(abi::A1, acc_addr(blk, t, jb) as i64);
+                sim.v(VOp::Store {
+                    kind: VMemKind::UnitStride,
+                    eew: Sew::E64,
+                    vs3: acc_final,
+                    base: abi::A1,
+                });
+            }
+            // Phase 3: re-quantize this channel block on the scalar FPU.
+            let n_here = nb.min(p.c_out - jb * nb);
+            let blk_coords: Vec<(usize, usize)> = blk.to_vec();
+            let c_out = p.c_out;
+            for j in 0..n_here {
+                let ch = jb * nb + j;
+                emit_requant_channel_block(
+                    sim,
+                    rq,
+                    ch,
+                    blk.len(),
+                    |t| acc_addr(blk, t, jb) + (j * 8) as u64,
+                    true,
+                    residual
+                        .map(|r| {
+                            let bc = blk_coords.clone();
+                            move |t: usize| {
+                                let (oy, ox) = bc[t];
+                                r + ((oy * ow + ox) * c_out + ch) as u64
+                            }
+                        })
+                        .as_ref()
+                        .map(|f| f as &dyn Fn(usize) -> u64),
+                    |t| {
+                        let (oy, ox) = blk_coords[t];
+                        fm_out + ((oy * ow + ox) * c_out + ch) as u64
+                    },
+                );
+            }
+        }
+    }
+
+    let macs = p.macs();
+    sim.stats_mut().effective_macs += macs;
+    KernelRun { cycles: sim.cycles() - c0, macs }
+}
+
+/// Int8 convolution (the Ara baseline; integer-only, so Quark runs it too).
+/// u8 activation codes × i8 weights, SEW=32 accumulation.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_int8(
+    sim: &mut Sim,
+    p: &Conv2dParams,
+    fm_in: u64,
+    wbuf: u64, // i8 weights, [K][N] row-major
+    rq: &RqBuf,
+    fm_out: u64,
+    residual: Option<u64>,
+) -> KernelRun {
+    let k = p.k();
+    let nb = p.c_out.min(sim.cfg.vlen_bits / 32);
+    let blocks = p.c_out.div_ceil(nb);
+    let (oh, ow) = (p.out_h(), p.out_w());
+    let c0 = sim.cycles();
+
+    let patch = sim.alloc((PIXEL_BLOCK * k) as u64);
+    let accbuf = sim.alloc((PIXEL_BLOCK * nb * 4) as u64);
+    let consts = sim.alloc(16);
+    emit_requant_setup(sim, rq, consts);
+
+    let pixels: Vec<(usize, usize)> =
+        (0..oh).flat_map(|y| (0..ow).map(move |x| (y, x))).collect();
+
+    for blk in pixels.chunks(PIXEL_BLOCK) {
+        for (t, &(oy, ox)) in blk.iter().enumerate() {
+            emit_im2col_patch(sim, p, fm_in, 1, oy, ox, patch + (t * k) as u64);
+        }
+        for jb in 0..blocks {
+            let n_here = nb.min(p.c_out - jb * nb);
+            sim.vsetvli(n_here as u64, Sew::E32, Lmul::M1);
+            // acc_t := 0 (v16 + t)
+            for t in 0..blk.len() {
+                sim.v(VOp::MvVI { vd: VReg(16 + t as u8), imm: 0 });
+            }
+            for kk in 0..k {
+                // Load + widen one weight row for this channel block.
+                sim.li(abi::A0, (wbuf + (kk * p.c_out + jb * nb) as u64) as i64);
+                sim.v(VOp::Load {
+                    kind: VMemKind::UnitStride,
+                    eew: Sew::E8,
+                    vd: VReg(8),
+                    base: abi::A0,
+                });
+                sim.v(VOp::Sext { vd: VReg(9), vs2: VReg(8), frac: 4 });
+                for (t, _) in blk.iter().enumerate() {
+                    sim.li(abi::T0, (patch + (t * k + kk) as u64) as i64);
+                    sim.s(ScalarOp::Load {
+                        width: MemWidth::B,
+                        signed: false,
+                        rd: abi::T1,
+                        base: abi::T0,
+                        offset: 0,
+                    });
+                    sim.v(VOp::MaccVX { vd: VReg(16 + t as u8), rs1: abi::T1, vs2: VReg(9) });
+                }
+                sim.loop_edge(abi::T2);
+            }
+            for t in 0..blk.len() {
+                sim.li(abi::A1, (accbuf + (t * nb * 4) as u64) as i64);
+                sim.v(VOp::Store {
+                    kind: VMemKind::UnitStride,
+                    eew: Sew::E32,
+                    vs3: VReg(16 + t as u8),
+                    base: abi::A1,
+                });
+            }
+            let blk_coords: Vec<(usize, usize)> = blk.to_vec();
+            let c_out = p.c_out;
+            for j in 0..n_here {
+                let ch = jb * nb + j;
+                emit_requant_channel_block(
+                    sim,
+                    rq,
+                    ch,
+                    blk.len(),
+                    |t| accbuf + ((t * nb + j) * 4) as u64,
+                    false,
+                    residual
+                        .map(|r| {
+                            let bc = blk_coords.clone();
+                            move |t: usize| {
+                                let (oy, ox) = bc[t];
+                                r + ((oy * ow + ox) * c_out + ch) as u64
+                            }
+                        })
+                        .as_ref()
+                        .map(|f| f as &dyn Fn(usize) -> u64),
+                    |t| {
+                        let (oy, ox) = blk_coords[t];
+                        fm_out + ((oy * ow + ox) * c_out + ch) as u64
+                    },
+                );
+            }
+        }
+    }
+
+    let macs = p.macs();
+    sim.stats_mut().effective_macs += macs;
+    KernelRun { cycles: sim.cycles() - c0, macs }
+}
+
+/// FP32 convolution (Ara only): f32 NHWC activations × f32 `[K][N]` weights,
+/// `vfmacc.vf` accumulation, optional fused bias + ReLU, f32 output.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32(
+    sim: &mut Sim,
+    p: &Conv2dParams,
+    fm_in: u64,
+    wbuf: u64,
+    bias: u64, // f32[c_out]
+    fm_out: u64,
+    relu: bool,
+    residual: Option<u64>, // f32 NHWC map added before ReLU
+) -> KernelRun {
+    assert!(sim.cfg.has_vfpu, "fp32 conv requires the vector FPU (Ara)");
+    let k = p.k();
+    let nb = p.c_out.min(sim.cfg.vlen_bits / 32);
+    let blocks = p.c_out.div_ceil(nb);
+    let (oh, ow) = (p.out_h(), p.out_w());
+    let c0 = sim.cycles();
+
+    let patch = sim.alloc((PIXEL_BLOCK * k * 4) as u64);
+    let fzero_addr = sim.alloc(4);
+    sim.write_f32s(fzero_addr, &[0.0]);
+    sim.li(abi::T6, fzero_addr as i64);
+    sim.s(ScalarOp::FLoad { rd: FReg(6), base: abi::T6, offset: 0 });
+
+    let pixels: Vec<(usize, usize)> =
+        (0..oh).flat_map(|y| (0..ow).map(move |x| (y, x))).collect();
+
+    for blk in pixels.chunks(PIXEL_BLOCK) {
+        for (t, &(oy, ox)) in blk.iter().enumerate() {
+            emit_im2col_patch(sim, p, fm_in, 4, oy, ox, patch + (t * k * 4) as u64);
+        }
+        for jb in 0..blocks {
+            let n_here = nb.min(p.c_out - jb * nb);
+            sim.vsetvli(n_here as u64, Sew::E32, Lmul::M1);
+            for t in 0..blk.len() {
+                sim.v(VOp::MvVI { vd: VReg(16 + t as u8), imm: 0 });
+            }
+            for kk in 0..k {
+                sim.li(abi::A0, (wbuf + ((kk * p.c_out + jb * nb) * 4) as u64) as i64);
+                sim.v(VOp::Load {
+                    kind: VMemKind::UnitStride,
+                    eew: Sew::E32,
+                    vd: VReg(9),
+                    base: abi::A0,
+                });
+                for (t, _) in blk.iter().enumerate() {
+                    sim.li(abi::T0, (patch + ((t * k + kk) * 4) as u64) as i64);
+                    sim.s(ScalarOp::FLoad { rd: FReg(1), base: abi::T0, offset: 0 });
+                    sim.v(VOp::FMaccVF { vd: VReg(16 + t as u8), rs1: FReg(1), vs2: VReg(9) });
+                }
+                sim.loop_edge(abi::T2);
+            }
+            // Bias + residual + ReLU + store.
+            sim.li(abi::A0, (bias + (jb * nb * 4) as u64) as i64);
+            sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E32, vd: VReg(10), base: abi::A0 });
+            for (t, &(oy, ox)) in blk.iter().enumerate() {
+                let acc = VReg(16 + t as u8);
+                sim.v(VOp::FAddVV { vd: acc, vs2: acc, vs1: VReg(10) });
+                if let Some(r) = residual {
+                    sim.li(abi::A2, (r + (((oy * ow + ox) * p.c_out + jb * nb) * 4) as u64) as i64);
+                    sim.v(VOp::Load {
+                        kind: VMemKind::UnitStride,
+                        eew: Sew::E32,
+                        vd: VReg(11),
+                        base: abi::A2,
+                    });
+                    sim.v(VOp::FAddVV { vd: acc, vs2: acc, vs1: VReg(11) });
+                }
+                if relu {
+                    sim.v(VOp::FMaxVF { vd: acc, vs2: acc, rs1: FReg(6) });
+                }
+                sim.li(abi::A1, (fm_out + (((oy * ow + ox) * p.c_out + jb * nb) * 4) as u64) as i64);
+                sim.v(VOp::Store { kind: VMemKind::UnitStride, eew: Sew::E32, vs3: acc, base: abi::A1 });
+            }
+        }
+    }
+
+    let macs = p.macs();
+    sim.stats_mut().effective_macs += macs;
+    KernelRun { cycles: sim.cycles() - c0, macs }
+}

@@ -1,0 +1,129 @@
+//! The vector DNN runtime: hand-written kernels emitting RVV (+ Quark custom)
+//! instruction streams into the simulator — the software the paper describes
+//! in §IV-A ("customized bit-serial programs for conv2d, matrix
+//! multiplication, and other common kernels").
+//!
+//! Every kernel follows the same contract:
+//! * tensors live in *simulated* memory (allocated via [`crate::sim::Sim`]),
+//! * the kernel emits the dynamic instruction stream a hand-written assembly
+//!   implementation would execute (loop overhead included as branch markers),
+//! * cycle accounting happens in the simulator; kernels credit
+//!   `effective_macs` so GOPS are comparable across precisions.
+//!
+//! Kernels:
+//! * [`bitpack`] — activation bit-plane packing, both with `vbitpack` and
+//!   with base RVV only (the Fig. 3 ablation).
+//! * [`conv2d`] — direct convolution, three precisions: bit-serial sub-byte
+//!   (Quark), int8 (Ara baseline), fp32 (Ara baseline).
+//! * [`matmul`] — the same three precisions as plain GEMM (FC layers,
+//!   microbenchmarks).
+//! * [`requantize`] — the scalar-FPU re-scaling block shared by all of the
+//!   integer kernels (paper Fig. 2's "Div/Mul + Clip + Round" on CVA6).
+//! * [`pool`] — global average pooling.
+
+pub mod bitpack;
+pub mod conv2d;
+pub mod matmul;
+pub mod pool;
+pub mod requantize;
+
+/// Convolution geometry (NHWC feature maps).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dParams {
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dParams {
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Reduction length K = kh·kw·c_in (the im2col row length).
+    pub fn k(&self) -> usize {
+        self.kh * self.kw * self.c_in
+    }
+
+    /// Total MACs for the full output (padding taps included as the paper's
+    /// GOPS accounting does — the hardware computes them as zeros).
+    pub fn macs(&self) -> u64 {
+        (self.out_h() * self.out_w() * self.c_out) as u64 * self.k() as u64
+    }
+
+    /// Enumerate valid kernel taps `(kh, kw)` for output pixel `(oy, ox)`,
+    /// with the corresponding input row/col. Out-of-bounds taps (zero
+    /// padding) are skipped — they contribute nothing to ACC or ASUM.
+    pub fn valid_taps(&self, oy: usize, ox: usize) -> Vec<(usize, usize, usize, usize)> {
+        let mut taps = Vec::with_capacity(self.kh * self.kw);
+        for dy in 0..self.kh {
+            let iy = (oy * self.stride + dy) as isize - self.pad as isize;
+            if iy < 0 || iy >= self.h as isize {
+                continue;
+            }
+            for dx in 0..self.kw {
+                let ix = (ox * self.stride + dx) as isize - self.pad as isize;
+                if ix < 0 || ix >= self.w as isize {
+                    continue;
+                }
+                taps.push((dy, dx, iy as usize, ix as usize));
+            }
+        }
+        taps
+    }
+}
+
+/// What a kernel invocation reports back.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelRun {
+    /// Cycles from first to last instruction of this kernel (delta).
+    pub cycles: u64,
+    /// Effective MACs credited.
+    pub macs: u64,
+}
+
+impl KernelRun {
+    /// Effective MACs per cycle — the paper's headline per-kernel metric.
+    pub fn macs_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geometry() {
+        let p = Conv2dParams { h: 32, w: 32, c_in: 64, c_out: 64, kh: 3, kw: 3, stride: 1, pad: 1 };
+        assert_eq!(p.out_h(), 32);
+        assert_eq!(p.out_w(), 32);
+        assert_eq!(p.k(), 576);
+        // Interior pixel has all 9 taps, corner has 4.
+        assert_eq!(p.valid_taps(16, 16).len(), 9);
+        assert_eq!(p.valid_taps(0, 0).len(), 4);
+    }
+
+    #[test]
+    fn strided_geometry() {
+        let p = Conv2dParams { h: 32, w: 32, c_in: 64, c_out: 128, kh: 3, kw: 3, stride: 2, pad: 1 };
+        assert_eq!(p.out_h(), 16);
+        assert_eq!(p.out_w(), 16);
+        let p1 = Conv2dParams { h: 32, w: 32, c_in: 64, c_out: 128, kh: 1, kw: 1, stride: 2, pad: 0 };
+        assert_eq!(p1.out_h(), 16);
+        assert_eq!(p1.k(), 64);
+    }
+}

@@ -1,0 +1,133 @@
+//! Pooling kernels (integer-only, so they run on both Ara and Quark).
+
+use crate::isa::instr::{VMemKind, VOp};
+use crate::isa::reg::{abi, VReg};
+use crate::isa::vtype::{Lmul, Sew};
+use crate::sim::Sim;
+
+use super::requantize::{emit_requant_channel_block, emit_requant_setup, RqBuf};
+use super::KernelRun;
+
+fn lmul_for(elems: usize, per_reg: usize) -> Lmul {
+    match elems.div_ceil(per_reg) {
+        0 | 1 => Lmul::M1,
+        2 => Lmul::M2,
+        3 | 4 => Lmul::M4,
+        _ => Lmul::M8,
+    }
+}
+
+/// Global average pooling over an `h×w×c` NHWC map of u8 codes, producing
+/// `c` u8 codes. The division by `h·w` folds into the requant scale
+/// (`rq.alpha` should be `s_in / (h·w · s_out)`).
+pub fn global_avgpool_u8(
+    sim: &mut Sim,
+    h: usize,
+    w: usize,
+    c: usize,
+    fm_in: u64,
+    rq: &RqBuf,
+    out: u64,
+) -> KernelRun {
+    let c0 = sim.cycles();
+    let per_reg = sim.cfg.vlen_bits / 32;
+    assert!(c <= per_reg * 4, "channel count must fit an LMUL=4 group at SEW=32");
+    let consts = sim.alloc(16);
+    emit_requant_setup(sim, rq, consts);
+
+    // Accumulate all positions: acc (v8 group) += zext(fm[pos]).
+    sim.vsetvli(c as u64, Sew::E32, lmul_for(c, per_reg));
+    sim.v(VOp::MvVI { vd: VReg(8), imm: 0 });
+    for pos in 0..h * w {
+        sim.li(abi::A0, (fm_in + (pos * c) as u64) as i64);
+        sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E8, vd: VReg(0), base: abi::A0 });
+        sim.v(VOp::Zext { vd: VReg(4), vs2: VReg(0), frac: 4 });
+        sim.v(VOp::IVV { op: crate::isa::instr::VIOp::Add, vd: VReg(8), vs2: VReg(8), vs1: VReg(4) });
+        sim.loop_edge(abi::T2);
+    }
+    // Spill the accumulator and requantize per channel on the scalar FPU.
+    let accbuf = sim.alloc((c * 4) as u64);
+    sim.li(abi::A1, accbuf as i64);
+    sim.v(VOp::Store { kind: VMemKind::UnitStride, eew: Sew::E32, vs3: VReg(8), base: abi::A1 });
+    for j in 0..c {
+        emit_requant_channel_block(
+            sim,
+            rq,
+            j,
+            1,
+            |_| accbuf + (j * 4) as u64,
+            false,
+            None,
+            |_| out + j as u64,
+        );
+    }
+    KernelRun { cycles: sim.cycles() - c0, macs: (h * w * c) as u64 }
+}
+
+/// Global average pooling over an f32 NHWC map (Ara FP32 baseline).
+pub fn global_avgpool_f32(
+    sim: &mut Sim,
+    h: usize,
+    w: usize,
+    c: usize,
+    fm_in: u64,
+    out: u64,
+) -> KernelRun {
+    assert!(sim.cfg.has_vfpu, "f32 pooling requires the vector FPU");
+    let c0 = sim.cycles();
+    let per_reg = sim.cfg.vlen_bits / 32;
+    assert!(c <= per_reg * 4);
+    let inv = sim.alloc(4);
+    sim.write_f32s(inv, &[1.0 / (h * w) as f32]);
+    sim.li(abi::T6, inv as i64);
+    sim.s(crate::isa::instr::ScalarOp::FLoad { rd: crate::isa::FReg(1), base: abi::T6, offset: 0 });
+
+    sim.vsetvli(c as u64, Sew::E32, lmul_for(c, per_reg));
+    sim.v(VOp::MvVI { vd: VReg(8), imm: 0 });
+    for pos in 0..h * w {
+        sim.li(abi::A0, (fm_in + (pos * c * 4) as u64) as i64);
+        sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E32, vd: VReg(4), base: abi::A0 });
+        sim.v(VOp::FAddVV { vd: VReg(8), vs2: VReg(8), vs1: VReg(4) });
+        sim.loop_edge(abi::T2);
+    }
+    sim.v(VOp::FMulVF { vd: VReg(8), vs2: VReg(8), rs1: crate::isa::FReg(1) });
+    sim.li(abi::A1, out as i64);
+    sim.v(VOp::Store { kind: VMemKind::UnitStride, eew: Sew::E32, vs3: VReg(8), base: abi::A1 });
+    KernelRun { cycles: sim.cycles() - c0, macs: (h * w * c) as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MachineConfig;
+    use crate::kernels::requantize::requant_host;
+
+    #[test]
+    fn avgpool_matches_golden() {
+        let (h, w, c) = (4, 4, 96);
+        let vals: Vec<u8> = (0..h * w * c).map(|i| (i % 11) as u8).collect();
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        let fm = sim.alloc((h * w * c) as u64);
+        sim.write_bytes(fm, &vals);
+        // alpha = 1/(h·w) so the output is the rounded mean.
+        let alpha = 1.0f32 / (h * w) as f32;
+        let rq = RqBuf::create(&mut sim, &vec![alpha; c], &vec![0.0; c], &vec![0.0; c], 255.0, 0.0);
+        let out = sim.alloc(c as u64);
+        global_avgpool_u8(&mut sim, h, w, c, fm, &rq, out);
+        for j in 0..c {
+            let sum: i32 = (0..h * w).map(|p| vals[p * c + j] as i32).sum();
+            let want = requant_host(sum, None, None, alpha, 0.0, 0.0, 255.0, 0.0);
+            assert_eq!(sim.read_u8s(out + j as u64, 1)[0], want, "channel {j}");
+        }
+    }
+
+    #[test]
+    fn avgpool_runs_on_ara_too() {
+        let mut sim = Sim::new(MachineConfig::ara(4));
+        let fm = sim.alloc(4 * 4 * 64);
+        let rq = RqBuf::create(&mut sim, &vec![0.1; 64], &vec![0.0; 64], &vec![0.0; 64], 255.0, 0.0);
+        let out = sim.alloc(64);
+        let r = global_avgpool_u8(&mut sim, 4, 4, 64, fm, &rq, out);
+        assert!(r.cycles > 0);
+    }
+}

@@ -1,0 +1,327 @@
+//! Re-scaling on the CVA6 scalar FPU (paper Fig. 2, §III).
+//!
+//! Quark removed the *vector* FPU; the price is that the per-layer re-scale
+//! (the only FP step of quantized inference) runs on the scalar core. This
+//! module emits that scalar code. The instruction sequence mirrors
+//! [`crate::quant::requantize_golden`] operation-for-operation so the
+//! simulated result is bit-identical to the host oracle.
+//!
+//! Because CVA6 is a 1-IPC core, this loop is the scalar-side budget of
+//! every quantized kernel; at 1-bit precision it is the bottleneck (the
+//! vector side finishes first), so the emission is tuned (§Perf):
+//! per-channel constants hoisted out of the pixel loop, per-pixel ASUM
+//! converted to f32 once per pixel *block* (`emit_asum_preload`), and
+//! offset addressing instead of per-access `li` materialization.
+//!
+//! Layout of the per-channel parameter block (written by the host / model
+//! setup, read by the emitted code): three f32 arrays of length `n`:
+//! `alpha[n] | beta[n] | bias[n]`, starting at `rq_addr`.
+
+use crate::isa::instr::{MemWidth, FAluOp, ScalarOp};
+use crate::isa::reg::{abi, FReg};
+use crate::sim::Sim;
+
+/// Addresses of the per-channel requant parameter arrays in simulated memory.
+#[derive(Clone, Copy, Debug)]
+pub struct RqBuf {
+    pub addr: u64,
+    pub n: usize,
+    /// Output grid max (2ⁿ−1) as f32.
+    pub qmax: f32,
+    /// Residual multiplier (0.0 = no skip connection).
+    pub res_scale: f32,
+}
+
+impl RqBuf {
+    pub fn alpha_addr(&self, j: usize) -> u64 {
+        self.addr + (j * 4) as u64
+    }
+    pub fn beta_addr(&self, j: usize) -> u64 {
+        self.addr + ((self.n + j) * 4) as u64
+    }
+    pub fn bias_addr(&self, j: usize) -> u64 {
+        self.addr + ((2 * self.n + j) * 4) as u64
+    }
+    pub fn byte_len(n: usize) -> u64 {
+        (3 * n * 4) as u64
+    }
+
+    /// Allocate and fill a parameter block from host-side per-channel values.
+    pub fn create(
+        sim: &mut Sim,
+        alpha: &[f32],
+        beta: &[f32],
+        bias: &[f32],
+        qmax: f32,
+        res_scale: f32,
+    ) -> RqBuf {
+        let n = alpha.len();
+        assert_eq!(beta.len(), n);
+        assert_eq!(bias.len(), n);
+        let addr = sim.alloc(Self::byte_len(n));
+        sim.write_f32s(addr, alpha);
+        sim.write_f32s(addr + (n * 4) as u64, beta);
+        sim.write_f32s(addr + (2 * n * 4) as u64, bias);
+        RqBuf { addr, n, qmax, res_scale }
+    }
+}
+
+// Fixed scalar/fp register roles for the requant sequences.
+const F_ALPHA: FReg = FReg(1);
+const F_BETA: FReg = FReg(2);
+const F_BIAS: FReg = FReg(3);
+const F_ZERO: FReg = FReg(6);
+const F_QMAX: FReg = FReg(7);
+const F_RESS: FReg = FReg(10);
+/// f16..f23 hold the pixel block's ASUMs as f32 (preloaded once per block).
+const F_ASUM_BASE: u8 = 16;
+/// Maximum pixels per preloaded block (f16..f23).
+pub const MAX_ASUM_PIXELS: usize = 8;
+
+/// Emit the per-kernel constant setup (zero, qmax, residual scale). Call once
+/// before a batch of `emit_requant_channel_block` calls.
+pub fn emit_requant_setup(sim: &mut Sim, rq: &RqBuf, consts_addr: u64) {
+    // consts_addr: f32 slots the host fills with [0.0, qmax, res_scale].
+    sim.write_f32s(consts_addr, &[0.0, rq.qmax, rq.res_scale]);
+    sim.li(abi::T6, consts_addr as i64);
+    sim.s(ScalarOp::FLoad { rd: F_ZERO, base: abi::T6, offset: 0 });
+    sim.s(ScalarOp::FLoad { rd: F_QMAX, base: abi::T6, offset: 4 });
+    sim.s(ScalarOp::FLoad { rd: F_RESS, base: abi::T6, offset: 8 });
+}
+
+/// Preload a pixel block's ASUM values (i32 at `asum_addr(t)`) into the f16+
+/// registers as f32. Call once per pixel block, before the per-channel loops
+/// of *all* channel blocks (the values are reused `c_out` times).
+pub fn emit_asum_preload(sim: &mut Sim, px: usize, asum_addr: impl Fn(usize) -> u64) {
+    assert!(px <= MAX_ASUM_PIXELS);
+    for t in 0..px {
+        sim.li(abi::T0, asum_addr(t) as i64);
+        sim.s(ScalarOp::Load { width: MemWidth::W, signed: true, rd: abi::T1, base: abi::T0, offset: 0 });
+        sim.s(ScalarOp::FCvtSW { rd: FReg(F_ASUM_BASE + t as u8), rs1: abi::T1 });
+    }
+}
+
+/// Software-pipelining width of the requant loop: 4 pixels in flight with
+/// disjoint register sets, so FPnew's 2–4-cycle latencies hide behind the
+/// interleaved issue stream (CVA6 is in-order single-issue — dependent
+/// back-to-back FP ops stall, interleaved ones do not).
+const UNROLL: usize = 4;
+// Per-slot register sets.
+const F_ACC_SLOT: [FReg; UNROLL] = [FReg(24), FReg(25), FReg(26), FReg(27)];
+const F_T_SLOT: [FReg; UNROLL] = [FReg(28), FReg(29), FReg(30), FReg(31)];
+const F_RES_SLOT: [FReg; UNROLL] = [FReg(9), FReg(11), FReg(12), FReg(13)];
+const X_SLOT: [(crate::isa::Reg, crate::isa::Reg); UNROLL] =
+    [(abi::T0, abi::T1), (abi::A2, abi::A3), (abi::A4, abi::A5), (abi::A6, abi::A7)];
+
+/// Requantize a block of `px` pixels for channel `j`.
+///
+/// * `acc_addr(t)`  — address of pixel `t`'s i32 accumulator for channel `j`
+///   (stored as the low word of the SEW=64 accumulator, little-endian).
+/// * `use_asum`     — apply the β·ASUM correction with the preloaded f16+t
+///   registers (call [`emit_asum_preload`] first).
+/// * `res_addr(t)`  — residual input code (u8) for pixel `t`, channel `j`.
+/// * `out_addr(t)`  — destination u8 code.
+#[allow(clippy::too_many_arguments)]
+pub fn emit_requant_channel_block(
+    sim: &mut Sim,
+    rq: &RqBuf,
+    j: usize,
+    px: usize,
+    acc_addr: impl Fn(usize) -> u64,
+    use_asum: bool,
+    res_addr: Option<&dyn Fn(usize) -> u64>,
+    out_addr: impl Fn(usize) -> u64,
+) {
+    // Per-channel constants (hoisted out of the pixel loop).
+    sim.li(abi::T5, rq.alpha_addr(j) as i64);
+    sim.s(ScalarOp::FLoad { rd: F_ALPHA, base: abi::T5, offset: 0 });
+    sim.s(ScalarOp::FLoad { rd: F_BETA, base: abi::T5, offset: (rq.n * 4) as i64 });
+    sim.s(ScalarOp::FLoad { rd: F_BIAS, base: abi::T5, offset: (2 * rq.n * 4) as i64 });
+    let mut t0 = 0usize;
+    while t0 < px {
+        let lanes = UNROLL.min(px - t0);
+        let ts: Vec<usize> = (t0..t0 + lanes).collect();
+        // Stage 1: accumulator loads + convert (interleaved across slots).
+        for (s, &t) in ts.iter().enumerate() {
+            let (xa, xd) = X_SLOT[s];
+            sim.li(xa, acc_addr(t) as i64);
+            sim.s(ScalarOp::Load { width: MemWidth::W, signed: true, rd: xd, base: xa, offset: 0 });
+        }
+        for (s, _) in ts.iter().enumerate() {
+            let (_, xd) = X_SLOT[s];
+            sim.s(ScalarOp::FCvtSW { rd: F_ACC_SLOT[s], rs1: xd });
+        }
+        // Stage 2: t = alpha·acc + bias.
+        for (s, _) in ts.iter().enumerate() {
+            sim.s(ScalarOp::FMadd { rd: F_T_SLOT[s], rs1: F_ALPHA, rs2: F_ACC_SLOT[s], rs3: F_BIAS });
+        }
+        if use_asum {
+            // t += beta·asum_t (asum preloaded per pixel block in f16+t).
+            for (s, &t) in ts.iter().enumerate() {
+                sim.s(ScalarOp::FMadd {
+                    rd: F_T_SLOT[s],
+                    rs1: F_BETA,
+                    rs2: FReg(F_ASUM_BASE + t as u8),
+                    rs3: F_T_SLOT[s],
+                });
+            }
+        }
+        if let Some(res) = res_addr {
+            for (s, &t) in ts.iter().enumerate() {
+                let (xa, xd) = X_SLOT[s];
+                sim.li(xa, res(t) as i64);
+                sim.s(ScalarOp::Load { width: MemWidth::B, signed: false, rd: xd, base: xa, offset: 0 });
+            }
+            for (s, _) in ts.iter().enumerate() {
+                let (_, xd) = X_SLOT[s];
+                sim.s(ScalarOp::FCvtSW { rd: F_RES_SLOT[s], rs1: xd });
+            }
+            for (s, _) in ts.iter().enumerate() {
+                sim.s(ScalarOp::FMadd {
+                    rd: F_T_SLOT[s],
+                    rs1: F_RESS,
+                    rs2: F_RES_SLOT[s],
+                    rs3: F_T_SLOT[s],
+                });
+            }
+        }
+        // Stage 3: clamp, round, store.
+        for (s, _) in ts.iter().enumerate() {
+            sim.s(ScalarOp::FAlu { op: FAluOp::Max, rd: F_T_SLOT[s], rs1: F_T_SLOT[s], rs2: F_ZERO });
+        }
+        for (s, _) in ts.iter().enumerate() {
+            sim.s(ScalarOp::FAlu { op: FAluOp::Min, rd: F_T_SLOT[s], rs1: F_T_SLOT[s], rs2: F_QMAX });
+        }
+        for (s, _) in ts.iter().enumerate() {
+            let (_, xd) = X_SLOT[s];
+            sim.s(ScalarOp::FCvtWS { rd: xd, rs1: F_T_SLOT[s] });
+        }
+        for (s, &t) in ts.iter().enumerate() {
+            let (xa, xd) = X_SLOT[s];
+            sim.li(xa, out_addr(t) as i64);
+            sim.s(ScalarOp::Store { width: MemWidth::B, rs2: xd, base: xa, offset: 0 });
+        }
+        t0 += lanes;
+    }
+    sim.loop_edge(abi::T3);
+}
+
+/// Host-side mirror of the emitted sequence, for direct use by golden paths.
+/// Identical to [`crate::quant::requantize_golden`] but taking the RqBuf view.
+#[allow(clippy::too_many_arguments)]
+pub fn requant_host(
+    acc: i32,
+    asum: Option<i32>,
+    res: Option<u8>,
+    alpha: f32,
+    beta: f32,
+    bias: f32,
+    qmax: f32,
+    res_scale: f32,
+) -> u8 {
+    let mut t = alpha.mul_add(acc as f32, bias);
+    if let Some(s) = asum {
+        t = beta.mul_add(s as f32, t);
+    }
+    if let Some(r) = res {
+        t = res_scale.mul_add(r as f32, t);
+    }
+    let t = t.max(0.0).min(qmax);
+    t.round_ties_even() as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MachineConfig;
+
+    #[test]
+    fn emitted_requant_matches_host_oracle() {
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        let n = 4;
+        let alphas = [0.02f32, 0.3, -0.1, 1.5];
+        let betas = [-0.01f32, 0.0, 0.25, -0.6];
+        let biases = [0.5f32, -2.0, 0.0, 3.0];
+        let rq = RqBuf::create(&mut sim, &alphas, &betas, &biases, 3.0, 0.5);
+        let consts = sim.alloc(16);
+
+        let px = 3;
+        let acc = sim.alloc((px * 8) as u64);
+        let asm = sim.alloc((px * 4) as u64);
+        let res = sim.alloc(px as u64);
+        let out = sim.alloc((n * px) as u64);
+        let accs = [100i32, -7, 55];
+        let asums = [30i32, 12, 0];
+        let ress = [2u8, 0, 3];
+        for t in 0..px {
+            sim.write_i32s(acc + (t * 8) as u64, &[accs[t]]);
+            sim.write_i32s(asm + (t * 4) as u64, &[asums[t]]);
+        }
+        sim.write_bytes(res, &ress);
+
+        emit_requant_setup(&mut sim, &rq, consts);
+        emit_asum_preload(&mut sim, px, |t| asm + (t * 4) as u64);
+        for j in 0..n {
+            let out_base = out + (j * px) as u64;
+            emit_requant_channel_block(
+                &mut sim,
+                &rq,
+                j,
+                px,
+                |t| acc + (t * 8) as u64,
+                true,
+                Some(&|t| res + t as u64),
+                |t| out_base + t as u64,
+            );
+        }
+        for j in 0..n {
+            for t in 0..px {
+                let got = sim.read_u8s(out + (j * px + t) as u64, 1)[0];
+                let want = requant_host(
+                    accs[t],
+                    Some(asums[t]),
+                    Some(ress[t]),
+                    alphas[j],
+                    betas[j],
+                    biases[j],
+                    3.0,
+                    0.5,
+                );
+                assert_eq!(got, want, "j={j} t={t}");
+            }
+        }
+        // It really ran on the scalar FPU.
+        assert!(sim.stats().scalar_fpu_cycles > 0);
+    }
+
+    #[test]
+    fn per_pixel_instruction_budget() {
+        // §Perf regression guard: the requant loop must stay ≤ 12 scalar
+        // instructions per (channel, pixel) without residual.
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        let n = 16;
+        let rq = RqBuf::create(&mut sim, &vec![1.0; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+        let consts = sim.alloc(16);
+        let px = 8;
+        let acc = sim.alloc((px * 8) as u64);
+        let asm = sim.alloc((px * 4) as u64);
+        let out = sim.alloc((n * px) as u64);
+        emit_requant_setup(&mut sim, &rq, consts);
+        emit_asum_preload(&mut sim, px, |t| asm + (t * 4) as u64);
+        let before = sim.stats().scalar_instrs;
+        for j in 0..n {
+            emit_requant_channel_block(
+                &mut sim,
+                &rq,
+                j,
+                px,
+                |t| acc + (t * 8) as u64,
+                true,
+                None,
+                |t| out + (j * px + t) as u64,
+            );
+        }
+        let per = (sim.stats().scalar_instrs - before) as f64 / (n * px) as f64;
+        assert!(per <= 12.0, "requant budget regressed: {per:.1} instrs/(ch·px)");
+    }
+}

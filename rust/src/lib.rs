@@ -1,0 +1,34 @@
+//! # quark — reproduction of "Quark: An Integer RISC-V Vector Processor for
+//! Sub-Byte Quantized DNN Inference" (AskariHemmat et al., 2023)
+//!
+//! The paper's testbed is RTL + a GF22FDX tape-out; this crate rebuilds the
+//! whole system as software (see DESIGN.md for the substitution argument):
+//!
+//! * [`isa`] — RV64 scalar subset + RVV 1.0 subset + Quark's custom vector
+//!   instructions (`vpopcnt`, `vshacc`, `vbitpack`), with encodings and an
+//!   assembler.
+//! * [`sim`] — cycle-approximate simulator of the CVA6 + Ara/Quark system:
+//!   functional execution plus a structural timing model (lanes, VRF,
+//!   chaining, AXI memory).
+//! * [`arch`] — machine configurations (Ara-4L, Quark-4L, Quark-8L).
+//! * [`quant`] — LSQ-style quantization math and bit-plane packing.
+//! * [`kernels`] — the vector DNN runtime: bit-serial / int8 / fp32 conv2d and
+//!   matmul, im2col, packing (with and without `vbitpack`), requantization.
+//! * [`nn`] — model graphs (ResNet-18 CIFAR variant) executed on the runtime.
+//! * [`phys`] — analytical area/power technology model + roofline analytics.
+//! * [`runtime`] — PJRT golden-model loader (AOT HLO text from JAX).
+//! * [`coordinator`] — batching inference server over a pool of simulated
+//!   cores with golden-model cross-checking.
+//! * [`report`] — regenerates every table and figure of the paper.
+
+pub mod arch;
+pub mod cli;
+pub mod coordinator;
+pub mod isa;
+pub mod kernels;
+pub mod nn;
+pub mod phys;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;

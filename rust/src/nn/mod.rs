@@ -1,0 +1,12 @@
+//! Model graphs executed on the vector DNN runtime.
+//!
+//! [`resnet`] defines the ResNet-18 CIFAR topology the paper benchmarks
+//! (Fig. 3: per-layer speedups on ResNet-18 / CIFAR-100, batch 1);
+//! [`model`] materializes weights/scales and runs the graph on a simulated
+//! machine at a chosen precision.
+
+pub mod model;
+pub mod resnet;
+
+pub use model::{LayerReport, ModelRunner, Precision};
+pub use resnet::{resnet18_cifar, ConvLayer, LayerKind, NetLayer};

@@ -1,0 +1,211 @@
+//! ResNet-18 (CIFAR variant) topology — the workload of paper Fig. 3.
+//!
+//! The CIFAR variant (He et al.'s original CIFAR adaptation of the
+//! ImageNet-18 model): a 3×3 stem at 32×32, four stages of two basic blocks
+//! each at widths 64/128/256/512 (stride-2 at each stage boundary with a
+//! 1×1 projection shortcut), global average pooling, and a 100-way FC.
+//!
+//! Per the paper, the input (stem) and output layers stay in "full
+//! precision"; the 20 quantized kernels of Fig. 3 are the 16 block convs,
+//! the 3 projection shortcuts, and the final FC.
+
+use crate::kernels::Conv2dParams;
+
+/// One convolution layer instance.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    pub name: String,
+    pub params: Conv2dParams,
+    /// ReLU after requant (always true except the FC).
+    pub relu: bool,
+    /// This conv closes a basic block: add the skip-connection input.
+    pub residual: bool,
+    /// Part of Fig. 3's quantized-layer set.
+    pub quantized: bool,
+}
+
+/// Graph node.
+#[derive(Clone, Debug)]
+pub enum LayerKind {
+    Conv(ConvLayer),
+    /// Global average pool (h, w, c).
+    AvgPool { h: usize, w: usize, c: usize },
+    /// Fully connected (as 1×1 GEMM): in features, out features.
+    Fc { k: usize, n: usize, name: String },
+}
+
+/// Layer plus the index of the feature map it consumes (supports skips).
+#[derive(Clone, Debug)]
+pub struct NetLayer {
+    pub kind: LayerKind,
+    /// Index (into the runner's feature-map list) of this layer's input.
+    pub input: usize,
+    /// Feature-map index of the residual source (for `residual` convs).
+    pub residual_from: Option<usize>,
+}
+
+fn conv(name: &str, h: usize, w: usize, c_in: usize, c_out: usize, ksz: usize, stride: usize, quantized: bool, residual: bool) -> ConvLayer {
+    ConvLayer {
+        name: name.to_string(),
+        params: Conv2dParams {
+            h,
+            w,
+            c_in,
+            c_out,
+            kh: ksz,
+            kw: ksz,
+            stride,
+            pad: if ksz == 3 { 1 } else { 0 },
+        },
+        relu: true,
+        residual,
+        quantized,
+    }
+}
+
+/// Build the ResNet-18 CIFAR graph. Feature-map indices: 0 is the network
+/// input; each layer appends one output map.
+pub fn resnet18_cifar(num_classes: usize) -> Vec<NetLayer> {
+    let mut layers: Vec<NetLayer> = Vec::new();
+    let mut maps = 1usize; // map 0 = network input
+    let add = |layers: &mut Vec<NetLayer>, kind: LayerKind, input: usize, residual_from: Option<usize>, maps: &mut usize| -> usize {
+        layers.push(NetLayer { kind, input, residual_from });
+        let out = *maps;
+        *maps += 1;
+        out
+    };
+
+    // Stem (full precision per the paper; runs as int8 here — see DESIGN.md).
+    let stem = add(&mut layers, LayerKind::Conv(conv("stem", 32, 32, 3, 64, 3, 1, false, false)), 0, None, &mut maps);
+
+    let widths = [64usize, 128, 256, 512];
+    let mut hw = 32usize;
+    let mut block_in = stem;
+    let mut c_in = 64usize;
+    let mut idx = 1usize;
+    for (stage, &c_out) in widths.iter().enumerate() {
+        for block in 0..2 {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            let out_hw = hw / stride;
+            // Projection shortcut when shape changes.
+            let shortcut = if stride != 1 || c_in != c_out {
+                let name = format!("conv{idx}_ds_s{}b{}", stage + 1, block + 1);
+                idx += 1;
+                Some(add(
+                    &mut layers,
+                    LayerKind::Conv(ConvLayer {
+                        name,
+                        params: Conv2dParams {
+                            h: hw,
+                            w: hw,
+                            c_in,
+                            c_out,
+                            kh: 1,
+                            kw: 1,
+                            stride,
+                            pad: 0,
+                        },
+                        relu: false,
+                        residual: false,
+                        quantized: true,
+                    }),
+                    block_in,
+                    None,
+                    &mut maps,
+                ))
+            } else {
+                None
+            };
+            let n1 = format!("conv{idx}_s{}b{}a", stage + 1, block + 1);
+            idx += 1;
+            let c1 = add(
+                &mut layers,
+                LayerKind::Conv(conv(&n1, hw, hw, c_in, c_out, 3, stride, true, false)),
+                block_in,
+                None,
+                &mut maps,
+            );
+            let n2 = format!("conv{idx}_s{}b{}b", stage + 1, block + 1);
+            idx += 1;
+            let res_src = shortcut.unwrap_or(block_in);
+            let c2 = add(
+                &mut layers,
+                LayerKind::Conv(conv(&n2, out_hw, out_hw, c_out, c_out, 3, 1, true, true)),
+                c1,
+                Some(res_src),
+                &mut maps,
+            );
+            block_in = c2;
+            c_in = c_out;
+            hw = out_hw;
+        }
+    }
+    let pooled = add(&mut layers, LayerKind::AvgPool { h: hw, w: hw, c: 512 }, block_in, None, &mut maps);
+    add(
+        &mut layers,
+        LayerKind::Fc { k: 512, n: num_classes, name: "fc".to_string() },
+        pooled,
+        None,
+        &mut maps,
+    );
+    layers
+}
+
+/// Names + parameters of the quantized layers (Fig. 3's x-axis).
+pub fn quantized_layers(net: &[NetLayer]) -> Vec<(String, Conv2dParams)> {
+    let mut out = Vec::new();
+    for l in net {
+        match &l.kind {
+            LayerKind::Conv(c) if c.quantized => out.push((c.name.clone(), c.params)),
+            LayerKind::Fc { k, n, name } => {
+                out.push((name.clone(), crate::kernels::matmul::gemm_params(1, *k, *n)))
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_cifar_has_expected_structure() {
+        let net = resnet18_cifar(100);
+        let convs = net
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv(_)))
+            .count();
+        // 1 stem + 16 block convs + 3 projections = 20 convs.
+        assert_eq!(convs, 20);
+        // Fig. 3's quantized set: 16 + 3 + fc = 20 kernels.
+        assert_eq!(quantized_layers(&net).len(), 20);
+        // Spatial reduction: 32 → 4 before pooling.
+        let pool = net.iter().find_map(|l| match l.kind {
+            LayerKind::AvgPool { h, w, c } => Some((h, w, c)),
+            _ => None,
+        });
+        assert_eq!(pool, Some((4, 4, 512)));
+    }
+
+    #[test]
+    fn k_axes_are_64_aligned_for_bitserial() {
+        // Every quantized conv needs K % 64 == 0 for word-aligned planes.
+        let net = resnet18_cifar(100);
+        for (name, p) in quantized_layers(&net) {
+            assert_eq!(p.k() % 64, 0, "{name} K={}", p.k());
+        }
+    }
+
+    #[test]
+    fn residual_wiring_points_backwards() {
+        let net = resnet18_cifar(100);
+        for (i, l) in net.iter().enumerate() {
+            if let Some(r) = l.residual_from {
+                assert!(r <= i, "residual source {r} must precede layer {i}");
+            }
+            assert!(l.input <= i);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Physical-implementation model + roofline analytics.
+//!
+//! The paper's Table II / Fig. 5 come from a GF22FDX synthesis + P&R flow
+//! (Synopsys DC + Cadence Innovus) we obviously cannot run here. [`tech`] is
+//! the substitution: an analytical area/power model whose *component*
+//! constants are calibrated so the Ara-4-lane configuration matches the
+//! published numbers, and whose *structure* (which components exist in which
+//! machine) produces Quark's numbers — exposing *why* the integer lane is
+//! ~2.3× smaller (the vector FPU and its operand queues are about half the
+//! lane).
+//!
+//! [`roofline`] converts simulated cycle counts + memory traffic into the
+//! GOPS-vs-arithmetic-intensity points of paper Fig. 4.
+
+pub mod roofline;
+pub mod tech;
+
+pub use roofline::{roofline_curve, Roofline, RooflinePoint};
+pub use tech::{PhysReport, TechModel};

@@ -1,0 +1,125 @@
+//! Roofline analytics (paper Fig. 4).
+//!
+//! Performance is reported in effective GOPS (1 MAC = 2 ops, at the
+//! *nominal* precision — a 1-bit MAC counts like any other, which is exactly
+//! how sub-byte accelerators report their headline numbers and how the
+//! paper's roofline compares Quark to Ara). Arithmetic intensity is
+//! ops / DRAM-side bytes moved, both measured by the simulator.
+
+use crate::arch::MachineConfig;
+use crate::sim::Stats;
+
+/// Machine roofline: compute ceiling + memory slope.
+#[derive(Clone, Debug)]
+pub struct Roofline {
+    pub name: String,
+    /// Peak effective GOPS at this precision.
+    pub peak_gops: f64,
+    /// Memory bandwidth, GB/s.
+    pub mem_gbs: f64,
+}
+
+impl Roofline {
+    /// Compute ceiling for a precision: `int8` → SEW=32 MAC rate;
+    /// `(wbits, abits)` bit-serial → AND/popcount/acc triple rate divided by
+    /// the plane-pair count; `fp32` → FPU MAC rate.
+    pub fn for_machine(cfg: &MachineConfig, precision: &str) -> Roofline {
+        let f = cfg.freq_ghz;
+        let macs_per_cycle = match precision {
+            "fp32" => {
+                assert!(cfg.has_vfpu);
+                cfg.elems_per_cycle(32)
+            }
+            "int8" => cfg.peak_int8_macs_per_cycle(),
+            "w1a1" => cfg.peak_bitserial_macs_per_cycle(),
+            "w2a2" => cfg.peak_bitserial_macs_per_cycle() / 4.0,
+            "w2a1" | "w1a2" => cfg.peak_bitserial_macs_per_cycle() / 2.0,
+            other => panic!("unknown precision {other}"),
+        };
+        Roofline {
+            name: format!("{}-{}", cfg.name, precision),
+            peak_gops: 2.0 * macs_per_cycle * f,
+            mem_gbs: cfg.axi_bytes_per_cycle as f64 * f,
+        }
+    }
+
+    /// Attainable GOPS at arithmetic intensity `ai` (ops/byte).
+    pub fn attainable(&self, ai: f64) -> f64 {
+        (ai * self.mem_gbs).min(self.peak_gops)
+    }
+
+    /// The ridge point (ops/byte) where the machine turns compute-bound.
+    pub fn ridge(&self) -> f64 {
+        self.peak_gops / self.mem_gbs
+    }
+}
+
+/// One measured kernel execution placed on the roofline.
+#[derive(Clone, Debug)]
+pub struct RooflinePoint {
+    pub label: String,
+    /// Arithmetic intensity, ops/byte.
+    pub ai: f64,
+    /// Achieved effective GOPS.
+    pub gops: f64,
+    /// Fraction of the attainable roof at this AI.
+    pub efficiency: f64,
+}
+
+impl RooflinePoint {
+    /// Build from simulator counters: `cycles` and per-kernel stats deltas.
+    pub fn from_stats(label: impl Into<String>, roof: &Roofline, cfg: &MachineConfig, cycles: u64, stats: &Stats) -> RooflinePoint {
+        let secs = cycles as f64 / (cfg.freq_ghz * 1e9);
+        let ops = 2.0 * stats.effective_macs as f64;
+        let gops = ops / secs / 1e9;
+        let ai = stats.arithmetic_intensity();
+        let att = roof.attainable(ai).max(1e-12);
+        RooflinePoint { label: label.into(), ai, gops, efficiency: gops / att }
+    }
+}
+
+/// Sampled roofline curve for plotting: `(ai, gops)` pairs, log-spaced.
+pub fn roofline_curve(roof: &Roofline, ai_min: f64, ai_max: f64, n: usize) -> Vec<(f64, f64)> {
+    (0..n)
+        .map(|i| {
+            let t = i as f64 / (n - 1) as f64;
+            let ai = ai_min * (ai_max / ai_min).powf(t);
+            (ai, roof.attainable(ai))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peaks_order_as_expected() {
+        let ara = MachineConfig::ara(4);
+        let q8 = MachineConfig::quark(8);
+        let int8 = Roofline::for_machine(&ara, "int8");
+        let w2 = Roofline::for_machine(&q8, "w2a2");
+        let w1 = Roofline::for_machine(&q8, "w1a1");
+        // Quark-8L at 2-bit should out-peak Ara-4L int8 (iso area/power).
+        assert!(w2.peak_gops > int8.peak_gops, "{} vs {}", w2.peak_gops, int8.peak_gops);
+        assert!(w1.peak_gops > 4.0 * w2.peak_gops * 0.9);
+    }
+
+    #[test]
+    fn attainable_is_min_of_roofs() {
+        let r = Roofline { name: "t".into(), peak_gops: 100.0, mem_gbs: 10.0 };
+        assert!((r.attainable(1.0) - 10.0).abs() < 1e-9);
+        assert!((r.attainable(1000.0) - 100.0).abs() < 1e-9);
+        assert!((r.ridge() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn curve_is_monotone() {
+        let r = Roofline { name: "t".into(), peak_gops: 100.0, mem_gbs: 10.0 };
+        let c = roofline_curve(&r, 0.1, 100.0, 16);
+        assert_eq!(c.len(), 16);
+        for w in c.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! LSQ-style static quantizers (inference side).
+//!
+//! LSQ [Esser et al., ICLR'20] *learns* the step size during training; that
+//! happens in `python/compile/train_lsq.py`. At inference time a quantizer is
+//! just a step size + grid, which is what these helpers produce for the
+//! simulator-side kernels and tests. The formulas here mirror
+//! `python/compile/quantize.py` exactly — the cross-check in the coordinator
+//! depends on both sides agreeing bit-for-bit on the integer codes.
+
+/// Unsigned activation quantizer: `a_real = scale · a_u`, `a_u ∈ [0, 2ⁿ−1]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActQuant {
+    pub bits: u8,
+    pub scale: f32,
+}
+
+impl ActQuant {
+    pub fn qmax(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// Quantize one real activation to its unsigned code.
+    pub fn quantize(&self, x: f32) -> u8 {
+        let q = (x / self.scale).round_ties_even();
+        q.clamp(0.0, self.qmax() as f32) as u8
+    }
+
+    pub fn dequantize(&self, q: u8) -> f32 {
+        self.scale * q as f32
+    }
+}
+
+/// Affine unsigned weight quantizer: `w_real = alpha · w_u + beta`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeightQuant {
+    pub bits: u8,
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl WeightQuant {
+    pub fn qmax(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// Build from a symmetric signed step size (the LSQ parameter).
+    ///
+    /// * `bits == 1`: binary weights `{−s, +s}` → `α = 2s`, `β = −s`.
+    /// * `bits ≥ 2`: offset-binary → `α = s`, `β = −s·2^(bits−1)`.
+    pub fn from_symmetric_scale(bits: u8, s: f32) -> Self {
+        if bits == 1 {
+            WeightQuant { bits, alpha: 2.0 * s, beta: -s }
+        } else {
+            WeightQuant { bits, alpha: s, beta: -s * (1u32 << (bits - 1)) as f32 }
+        }
+    }
+
+    pub fn dequantize(&self, q: u8) -> f32 {
+        self.alpha * q as f32 + self.beta
+    }
+}
+
+/// Quantize a weight tensor to unsigned codes with a symmetric LSQ-style
+/// scale derived from the data (inference-time equivalent of a trained step).
+///
+/// Returns `(codes, quantizer)`.
+pub fn quantize_weights_unsigned(w: &[f32], bits: u8) -> (Vec<u8>, WeightQuant) {
+    assert!((1..=8).contains(&bits));
+    let absmax = w.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    if bits == 1 {
+        // {-s, +s} with s = E[|w|] (XNOR-Net / BinaryNet style scaling).
+        let s = (w.iter().map(|&x| x.abs() as f64).sum::<f64>() / w.len().max(1) as f64) as f32;
+        let s = s.max(1e-8);
+        let wq = WeightQuant::from_symmetric_scale(1, s);
+        let codes = w.iter().map(|&x| if x >= 0.0 { 1u8 } else { 0u8 }).collect();
+        (codes, wq)
+    } else {
+        let qmax_side = (1i32 << (bits - 1)) - 1; // e.g. 127 for 8-bit
+        let s = absmax / qmax_side as f32;
+        let wq = WeightQuant::from_symmetric_scale(bits, s);
+        let offset = 1i32 << (bits - 1);
+        let codes = w
+            .iter()
+            .map(|&x| {
+                let q = (x / s).round_ties_even() as i32;
+                let q = q.clamp(-offset, qmax_side);
+                (q + offset) as u8
+            })
+            .collect();
+        (codes, wq)
+    }
+}
+
+/// Quantize weights to *signed* int8 codes (the Ara baseline's format).
+/// Returns `(codes, scale)` with `w_real = scale · w_s`.
+pub fn quantize_weights_signed(w: &[f32], bits: u8) -> (Vec<i8>, f32) {
+    assert!((2..=8).contains(&bits));
+    let absmax = w.iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    let qmax = (1i32 << (bits - 1)) - 1;
+    let s = absmax / qmax as f32;
+    let codes = w
+        .iter()
+        .map(|&x| (x / s).round_ties_even().clamp(-(qmax as f32) - 1.0, qmax as f32) as i8)
+        .collect();
+    (codes, s)
+}
+
+/// Quantize an activation tensor to unsigned codes with a data-derived scale
+/// (max-based; the trained model carries its own scales).
+pub fn quantize_activations(a: &[f32], bits: u8) -> (Vec<u8>, ActQuant) {
+    assert!((1..=8).contains(&bits));
+    let maxv = a.iter().fold(0f32, |m, &x| m.max(x)).max(1e-8);
+    let qmax = (1u32 << bits) - 1;
+    let aq = ActQuant { bits, scale: maxv / qmax as f32 };
+    let codes = a.iter().map(|&x| aq.quantize(x)).collect();
+    (codes, aq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsigned_weight_codes_dequantize_close() {
+        let w: Vec<f32> = (-8..8).map(|i| i as f32 / 5.0).collect();
+        for bits in [2u8, 4, 8] {
+            let (codes, wq) = quantize_weights_unsigned(&w, bits);
+            let max_err = w
+                .iter()
+                .zip(codes.iter())
+                .map(|(&x, &q)| (x - wq.dequantize(q)).abs())
+                .fold(0f32, f32::max);
+            // Error bounded by one step.
+            assert!(max_err <= wq.alpha * 0.5 + 1e-6, "bits={bits} err={max_err}");
+        }
+    }
+
+    #[test]
+    fn binary_weights_are_sign_codes() {
+        let w = [0.5f32, -0.25, 0.75, -1.0];
+        let (codes, wq) = quantize_weights_unsigned(&w, 1);
+        assert_eq!(codes, vec![1, 0, 1, 0]);
+        // Dequantized values are ±s with s = mean |w| = 0.625.
+        assert!((wq.dequantize(1) - 0.625).abs() < 1e-6);
+        assert!((wq.dequantize(0) + 0.625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn activation_codes_are_unsigned_and_bounded() {
+        let a = [0.0f32, 0.1, 0.5, 1.0, 2.0];
+        for bits in [1u8, 2, 8] {
+            let (codes, aq) = quantize_activations(&a, bits);
+            assert!(codes.iter().all(|&c| (c as u32) <= aq.qmax()));
+            assert_eq!(codes[0], 0);
+            assert_eq!(codes[4] as u32, aq.qmax()); // max maps to qmax
+        }
+    }
+
+    #[test]
+    fn affine_identity_acc_asum() {
+        // Σ w_real·a_real == s_a·(α·ACC + β·ASUM): the identity the whole
+        // bit-serial pipeline rests on.
+        let w = [0.4f32, -0.3, 0.9, -0.7];
+        let a = [0.2f32, 0.8, 0.5, 0.1];
+        let (wc, wq) = quantize_weights_unsigned(&w, 2);
+        let (ac, aq) = quantize_activations(&a, 2);
+        let acc: u32 = wc.iter().zip(ac.iter()).map(|(&x, &y)| x as u32 * y as u32).sum();
+        let asum: u32 = ac.iter().map(|&y| y as u32).sum();
+        let via_codes = aq.scale * (wq.alpha * acc as f32 + wq.beta * asum as f32);
+        let direct: f32 = wc
+            .iter()
+            .zip(ac.iter())
+            .map(|(&x, &y)| wq.dequantize(x) * aq.dequantize(y))
+            .sum();
+        assert!((via_codes - direct).abs() < 1e-4, "{via_codes} vs {direct}");
+    }
+}

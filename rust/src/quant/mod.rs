@@ -1,0 +1,31 @@
+//! Quantization substrate: the integer semantics shared by the simulated
+//! kernels, the host-side golden references, and (mirrored exactly) the JAX
+//! model in `python/compile/quantize.py`.
+//!
+//! Scheme (matches the paper's LSQ-style inference pipeline, Fig. 2):
+//!
+//! * **Activations** are *unsigned* `n`-bit codes (post-ReLU):
+//!   `a_real = s_a · a_u`, `a_u ∈ [0, 2ⁿ−1]`, zero-point 0.
+//! * **Weights** are affine in an unsigned code so the bit-serial AND/popcount
+//!   product (paper Eq. 1) applies directly: `w_real = α · w_u + β`.
+//!   - `m ≥ 2`: offset-binary symmetric, `w_u = w_s + 2^(m−1)`,
+//!     `α = s_w`, `β = −s_w · 2^(m−1)`.
+//!   - `m = 1`: binary weights `{−s_w, +s_w}`, `w_u ∈ {0,1}`,
+//!     `α = 2·s_w`, `β = −s_w`.
+//! * A convolution therefore needs two integer results:
+//!   `ACC = Σ w_u·a_u` (the bit-serial kernel, Eq. 1) and `ASUM = Σ a_u`
+//!   (a per-patch activation sum), combined in *floating point on the scalar
+//!   core* — exactly the paper's "re-scaling on CVA6" step:
+//!
+//!   `out_real = s_a·(α·ACC + β·ASUM) + bias`, then requantized onto the next
+//!   layer's unsigned grid.
+
+pub mod lsq;
+pub mod pack;
+pub mod requant;
+
+pub use lsq::{
+    quantize_activations, quantize_weights_signed, quantize_weights_unsigned, ActQuant, WeightQuant,
+};
+pub use pack::{pack_bit_planes, pack_weight_planes, planes_words, PackedWeights};
+pub use requant::{requantize_golden, RequantParams};

@@ -1,0 +1,162 @@
+//! Bit-plane packing (host side).
+//!
+//! The bit-serial kernels consume data in *bit-stream* (plane-major) layout:
+//! plane `p` of a K-element unsigned tensor is a K-bit vector whose bit `i`
+//! is bit `p` of element `i`, packed LSB-first into 64-bit words.
+//!
+//! * **Weights** are packed *offline* (here, on the host) — the paper does
+//!   the same: weight layout is a compile-time decision.
+//! * **Activations** must be packed *at runtime*, every layer; that is what
+//!   `vbitpack` accelerates (see `kernels/bitpack.rs` for both the custom-
+//!   instruction path and the pure-RVV fallback). The functions here serve as
+//!   the golden reference those kernels are tested against.
+
+/// Number of 64-bit words per plane for a K-element tensor.
+pub fn planes_words(k: usize) -> usize {
+    k.div_ceil(64)
+}
+
+/// Pack `values[0..k]` (unsigned codes) into `bits` planes, plane-major:
+/// returns `planes[p][kw]` with bit `i % 64` of word `kw = i / 64` equal to
+/// bit `p` of `values[i]`. Values beyond `values.len()` (zero padding up to a
+/// word boundary) pack as 0 — consistent with zero-padded convolution edges.
+pub fn pack_bit_planes(values: &[u8], bits: u8) -> Vec<Vec<u64>> {
+    let kw = planes_words(values.len());
+    let mut planes = vec![vec![0u64; kw]; bits as usize];
+    for (i, &v) in values.iter().enumerate() {
+        for (p, plane) in planes.iter_mut().enumerate() {
+            if (v >> p) & 1 == 1 {
+                plane[i / 64] |= 1 << (i % 64);
+            }
+        }
+    }
+    planes
+}
+
+/// Weights packed for the channel-vectorized bit-serial kernel.
+///
+/// Layout: `words[jb][q][kw][j]` flattened in that order, where
+/// * `jb` — output-channel block (blocks of `block` channels, the kernel's
+///   `vl` at SEW=64),
+/// * `q`  — weight bit plane,
+/// * `kw` — 64-bit word index along the reduction (K) axis,
+/// * `j`  — channel within the block (vector element index).
+///
+/// One `vle64.v` with `vl = block` loads the per-channel words for a given
+/// `(q, kw)` — the quantity `vand.vx`-ed against a broadcast activation word.
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    pub words: Vec<u64>,
+    pub n: usize,
+    pub k: usize,
+    pub bits: u8,
+    pub block: usize,
+}
+
+impl PackedWeights {
+    pub fn kw(&self) -> usize {
+        planes_words(self.k)
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.n.div_ceil(self.block)
+    }
+
+    /// Flat word index of `(jb, q, kw, j)`.
+    pub fn index(&self, jb: usize, q: usize, kw: usize, j: usize) -> usize {
+        ((jb * self.bits as usize + q) * self.kw() + kw) * self.block + j
+    }
+
+    /// Byte offset of the `(jb, q, kw)` channel-vector within the flat buffer.
+    pub fn vec_byte_offset(&self, jb: usize, q: usize, kw: usize) -> u64 {
+        (self.index(jb, q, kw, 0) * 8) as u64
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// Pack a `[K][N]` unsigned weight matrix (row-major, `w[k * n + j]`) for the
+/// channel-vectorized kernel. `block` is the output-channel vector length
+/// (64 on the 4-lane configs at SEW=64); N is zero-padded to a multiple.
+pub fn pack_weight_planes(w: &[u8], k: usize, n: usize, bits: u8, block: usize) -> PackedWeights {
+    assert_eq!(w.len(), k * n, "weight matrix shape mismatch");
+    let kw = planes_words(k);
+    let blocks = n.div_ceil(block);
+    let mut words = vec![0u64; blocks * bits as usize * kw * block];
+    for jb in 0..blocks {
+        for j in 0..block {
+            let ch = jb * block + j;
+            if ch >= n {
+                continue; // zero padding
+            }
+            for kk in 0..k {
+                let v = w[kk * n + ch];
+                for q in 0..bits as usize {
+                    if (v >> q) & 1 == 1 {
+                        let idx = ((jb * bits as usize + q) * kw + kk / 64) * block + j;
+                        words[idx] |= 1 << (kk % 64);
+                    }
+                }
+            }
+        }
+    }
+    PackedWeights { words, n, k, bits, block }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plane_packing_roundtrips() {
+        let vals: Vec<u8> = (0..130).map(|i| (i * 7 % 16) as u8).collect();
+        let planes = pack_bit_planes(&vals, 4);
+        assert_eq!(planes.len(), 4);
+        assert_eq!(planes[0].len(), 3); // ceil(130/64)
+        // Reconstruct.
+        for (i, &v) in vals.iter().enumerate() {
+            let mut r = 0u8;
+            for (p, plane) in planes.iter().enumerate() {
+                r |= (((plane[i / 64] >> (i % 64)) & 1) as u8) << p;
+            }
+            assert_eq!(r, v, "element {i}");
+        }
+    }
+
+    #[test]
+    fn weight_packing_reconstructs_dot_products() {
+        // The packed layout must preserve Eq. 1: for every channel j,
+        // Σ_q 2^q popcount(Wq[j] & Aplane) == Σ_k w[k][j]·a_bit[k].
+        let k = 96;
+        let n = 5;
+        let bits = 2u8;
+        let w: Vec<u8> = (0..k * n).map(|i| (i % 4) as u8).collect();
+        let a_bits: Vec<u8> = (0..k).map(|i| ((i * 3) % 2) as u8).collect();
+        let pw = pack_weight_planes(&w, k, n, bits, 4);
+        let aplanes = pack_bit_planes(&a_bits, 1);
+        for ch in 0..n {
+            let jb = ch / 4;
+            let j = ch % 4;
+            let mut acc = 0u64;
+            for q in 0..bits as usize {
+                for kw in 0..pw.kw() {
+                    let wword = pw.words[pw.index(jb, q, kw, j)];
+                    acc += (1 << q) * (wword & aplanes[0][kw]).count_ones() as u64;
+                }
+            }
+            let direct: u64 = (0..k).map(|kk| (w[kk * n + ch] * a_bits[kk]) as u64).sum();
+            assert_eq!(acc, direct, "channel {ch}");
+        }
+    }
+
+    #[test]
+    fn padded_channels_are_zero() {
+        let pw = pack_weight_planes(&[3u8; 64 * 3], 64, 3, 2, 4);
+        // Channel 3 (padding) contributes zero words everywhere.
+        for q in 0..2 {
+            assert_eq!(pw.words[pw.index(0, q, 0, 3)], 0);
+        }
+    }
+}

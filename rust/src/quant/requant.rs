@@ -1,0 +1,100 @@
+//! Re-quantization math (the "Div/Mul + Clip + Round" box of paper Fig. 2).
+//!
+//! The paper keeps this step on the CVA6 scalar FPU — it is the only
+//! floating-point work left after the FPU was stripped from the vector lanes.
+//! `requantize_golden` is the host-side oracle; `kernels/requantize.rs` emits
+//! the *identical* operation sequence as scalar FP instructions so the
+//! simulated result matches bit-for-bit:
+//!
+//! ```text
+//! t    = fmadd(beta,  ASUM, fmadd(alpha, ACC, c))   ; c = bias'/residual acc.
+//! t    = fmax(t, 0)  ; fmin(t, qmax)                ; clamp
+//! code = fcvt.w.s(t)                                ; round-to-nearest-even
+//! ```
+
+/// Per-output-channel requantization parameters, pre-folded on the host
+/// (weights' α/β, the input/output activation scales, BN fold, and bias).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequantParams {
+    /// Multiplier of the integer accumulator: `s_a · α / s_out`.
+    pub alpha: f32,
+    /// Multiplier of the patch activation sum: `s_a · β / s_out`.
+    pub beta: f32,
+    /// Constant term: `bias / s_out`.
+    pub bias: f32,
+    /// Output grid max: `2ⁿ − 1`.
+    pub qmax: f32,
+    /// Residual-add multiplier (`s_res / s_out`), 0 when no skip connection.
+    pub res_scale: f32,
+}
+
+impl RequantParams {
+    pub fn new(
+        act_scale: f32,
+        w_alpha: f32,
+        w_beta: f32,
+        bias: f32,
+        out_scale: f32,
+        out_bits: u8,
+    ) -> Self {
+        RequantParams {
+            alpha: act_scale * w_alpha / out_scale,
+            beta: act_scale * w_beta / out_scale,
+            bias: bias / out_scale,
+            qmax: ((1u32 << out_bits) - 1) as f32,
+            res_scale: 0.0,
+        }
+    }
+
+    pub fn with_residual(mut self, res_scale: f32, out_scale: f32) -> Self {
+        self.res_scale = res_scale / out_scale;
+        self
+    }
+}
+
+/// Golden requantization — must mirror the scalar-FP instruction sequence in
+/// `kernels/requantize.rs` operation-for-operation (f32, fused multiply-add).
+pub fn requantize_golden(acc: i64, asum: i64, residual: u8, p: &RequantParams) -> u8 {
+    let c = if p.res_scale != 0.0 {
+        p.res_scale.mul_add(residual as f32, p.bias)
+    } else {
+        p.bias
+    };
+    let t = p.alpha.mul_add(acc as f32, c);
+    let t = p.beta.mul_add(asum as f32, t);
+    let t = t.max(0.0).min(p.qmax);
+    t.round_ties_even() as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamps_to_grid() {
+        let p = RequantParams { alpha: 1.0, beta: 0.0, bias: 0.0, qmax: 3.0, res_scale: 0.0 };
+        assert_eq!(requantize_golden(-5, 0, 0, &p), 0);
+        assert_eq!(requantize_golden(2, 0, 0, &p), 2);
+        assert_eq!(requantize_golden(99, 0, 0, &p), 3);
+    }
+
+    #[test]
+    fn asum_correction_applies() {
+        // alpha·ACC + beta·ASUM with alpha=1, beta=-0.5: ACC=10, ASUM=8 → 6.
+        let p = RequantParams { alpha: 1.0, beta: -0.5, bias: 0.0, qmax: 255.0, res_scale: 0.0 };
+        assert_eq!(requantize_golden(10, 8, 0, &p), 6);
+    }
+
+    #[test]
+    fn residual_folds_in() {
+        let p = RequantParams { alpha: 0.0, beta: 0.0, bias: 1.0, qmax: 255.0, res_scale: 2.0 };
+        assert_eq!(requantize_golden(0, 0, 3, &p), 7); // 2·3 + 1
+    }
+
+    #[test]
+    fn rounds_ties_to_even() {
+        let p = RequantParams { alpha: 0.5, beta: 0.0, bias: 0.0, qmax: 255.0, res_scale: 0.0 };
+        assert_eq!(requantize_golden(5, 0, 0, &p), 2); // 2.5 → 2
+        assert_eq!(requantize_golden(7, 0, 0, &p), 4); // 3.5 → 4
+    }
+}

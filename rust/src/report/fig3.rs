@@ -1,0 +1,184 @@
+//! Fig. 3: per-layer relative speedup, ResNet-18 on CIFAR-100 (batch 1),
+//! Quark Int1 / Int2 (with and without `vbitpack`) over Ara Int8, plus the
+//! Ara FP32 reference.
+
+use crate::arch::MachineConfig;
+use crate::nn::model::{ModelRunner, Precision};
+use crate::nn::resnet::resnet18_cifar;
+use crate::nn::NetLayer;
+use crate::sim::{Sim, SimMode};
+
+/// One Fig. 3 series: per-quantized-layer cycle counts for a configuration.
+#[derive(Clone, Debug)]
+pub struct Fig3Series {
+    pub label: String,
+    pub machine: String,
+    /// (layer name, cycles) for the quantized layers, in network order.
+    pub layer_cycles: Vec<(String, u64)>,
+}
+
+/// The full figure: baseline (Ara Int8) plus comparison series.
+#[derive(Clone, Debug)]
+pub struct Fig3 {
+    pub baseline: Fig3Series,
+    pub series: Vec<Fig3Series>,
+}
+
+fn run_series(cfg: MachineConfig, precision: Precision, net: &[NetLayer]) -> Fig3Series {
+    let mut sim = Sim::new(cfg.clone());
+    sim.set_mode(SimMode::TimingOnly);
+    let reports = ModelRunner::run(&mut sim, net, precision, false);
+    Fig3Series {
+        label: precision.label(),
+        machine: cfg.name,
+        layer_cycles: reports
+            .into_iter()
+            .filter(|r| r.quantized)
+            .map(|r| (r.name, r.run.cycles))
+            .collect(),
+    }
+}
+
+/// Generate the figure data on the paper's configurations.
+pub fn generate(net: &[NetLayer]) -> Fig3 {
+    let baseline = run_series(MachineConfig::ara(4), Precision::Int8, net);
+    let series = vec![
+        run_series(MachineConfig::ara(4), Precision::Fp32, net),
+        run_series(
+            MachineConfig::quark(4),
+            Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true },
+            net,
+        ),
+        run_series(
+            MachineConfig::quark(4),
+            Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true },
+            net,
+        ),
+        run_series(
+            MachineConfig::quark(4),
+            Precision::Sub { abits: 2, wbits: 2, use_vbitpack: false },
+            net,
+        ),
+    ];
+    Fig3 { baseline, series }
+}
+
+/// Full-size figure (the paper's workload).
+pub fn generate_default() -> Fig3 {
+    generate(&resnet18_cifar(100))
+}
+
+impl Fig3 {
+    /// Per-layer speedup of `series[i]` over the Int8 baseline.
+    pub fn speedups(&self, i: usize) -> Vec<(String, f64)> {
+        self.series[i]
+            .layer_cycles
+            .iter()
+            .zip(self.baseline.layer_cycles.iter())
+            .map(|((name, c), (_, b))| (name.clone(), *b as f64 / *c as f64))
+            .collect()
+    }
+
+    /// Geometric-mean speedup of a series over Int8 (the paper quotes
+    /// arithmetic "average"; we report both).
+    pub fn mean_speedup(&self, i: usize) -> (f64, f64) {
+        let sp = self.speedups(i);
+        let n = sp.len() as f64;
+        let arith = sp.iter().map(|(_, s)| s).sum::<f64>() / n;
+        let geo = (sp.iter().map(|(_, s)| s.ln()).sum::<f64>() / n).exp();
+        (arith, geo)
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut headers = vec!["layer".to_string(), format!("{} cycles", self.baseline.label)];
+        for s in &self.series {
+            headers.push(format!("{} ({})", s.label, s.machine));
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut rows = Vec::new();
+        for (li, (name, base)) in self.baseline.layer_cycles.iter().enumerate() {
+            let mut row = vec![name.clone(), base.to_string()];
+            for s in &self.series {
+                let c = s.layer_cycles[li].1;
+                row.push(format!("{:.2}x", *base as f64 / c as f64));
+            }
+            rows.push(row);
+        }
+        let mut out = String::from(
+            "# Fig. 3 — per-layer speedup over Ara Int8 (ResNet-18/CIFAR-100, batch 1)\n\n",
+        );
+        out.push_str(&super::md_table(&hdr_refs, &rows));
+        out.push_str("\n**Averages (arith / geo):**\n\n");
+        for (i, s) in self.series.iter().enumerate() {
+            let (a, g) = self.mean_speedup(i);
+            out.push_str(&format!("* {}: {:.2}x / {:.2}x\n", s.label, a, g));
+        }
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        let mut headers = vec!["layer".to_string(), "int8_cycles".to_string()];
+        for s in &self.series {
+            headers.push(format!("{}_cycles", s.label));
+            headers.push(format!("{}_speedup", s.label));
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut rows = Vec::new();
+        for (li, (name, base)) in self.baseline.layer_cycles.iter().enumerate() {
+            let mut row = vec![name.clone(), base.to_string()];
+            for s in &self.series {
+                let c = s.layer_cycles[li].1;
+                row.push(c.to_string());
+                row.push(format!("{:.4}", *base as f64 / c as f64));
+            }
+            rows.push(row);
+        }
+        super::csv(&hdr_refs, &rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Conv2dParams;
+    use crate::nn::{ConvLayer, LayerKind};
+
+    /// A two-conv slice — keeps the test fast while exercising the whole
+    /// generator pipeline.
+    fn mini_net() -> Vec<NetLayer> {
+        let conv = |name: &str, c: usize| ConvLayer {
+            name: name.into(),
+            params: Conv2dParams { h: 8, w: 8, c_in: c, c_out: c, kh: 3, kw: 3, stride: 1, pad: 1 },
+            relu: true,
+            residual: false,
+            quantized: true,
+        };
+        vec![
+            NetLayer { kind: LayerKind::Conv(conv("c1", 64)), input: 0, residual_from: None },
+            NetLayer { kind: LayerKind::Conv(conv("c2", 64)), input: 1, residual_from: None },
+        ]
+    }
+
+    #[test]
+    fn fig3_shape_holds_on_mini_net() {
+        let fig = generate(&mini_net());
+        assert_eq!(fig.series.len(), 4);
+        // Series order: fp32, w1a1, w2a2, w2a2-novbp.
+        let (int1_avg, _) = fig.mean_speedup(1);
+        let (int2_avg, _) = fig.mean_speedup(2);
+        let (int2_novbp_avg, _) = fig.mean_speedup(3);
+        // Int1 beats Int8 on EVERY layer (the paper's claim).
+        for (name, s) in fig.speedups(1) {
+            assert!(s > 1.0, "Int1 must beat Int8 on {name}: {s:.2}");
+        }
+        // Ordering: Int1 > Int2 > Int2-no-vbitpack.
+        assert!(int1_avg > int2_avg, "{int1_avg} vs {int2_avg}");
+        assert!(int2_avg > int2_novbp_avg, "{int2_avg} vs {int2_novbp_avg}");
+        // FP32 is slower than Int8.
+        let (fp32_avg, _) = fig.mean_speedup(0);
+        assert!(fp32_avg < 1.15, "fp32 should be ≈int8 or slower: {fp32_avg}");
+        // Rendering works.
+        assert!(fig.markdown().contains("c1"));
+        assert!(fig.csv().lines().count() >= 3);
+    }
+}

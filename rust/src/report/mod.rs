@@ -1,0 +1,54 @@
+//! Regenerators for every table and figure in the paper's evaluation:
+//!
+//! | paper artifact | module | regenerates |
+//! |---|---|---|
+//! | Fig. 3 | [`fig3`] | per-layer ResNet-18 speedups, Quark Int1/Int2 (±vbitpack) vs Ara Int8/FP32 |
+//! | Fig. 4 | [`fig4`] | conv2d 3×3 roofline, Quark-8L vs Ara-4L |
+//! | Table I | [`table1`] | LSQ accuracy/size table (consumes the Python run's TSV) |
+//! | Table II | [`table2`] | physical implementation table from the tech model |
+//! | Fig. 5 | [`table2`] (`fig5_markdown`) | per-lane area breakdown |
+//! | headline claims | [`summary`] | 5.7×/3.5× speedups, 2.3×/1.9× lane ratios |
+//!
+//! Every generator returns its data structure (for tests and benches) and can
+//! render markdown + CSV under `artifacts/reports/`.
+
+pub mod fig3;
+pub mod fig4;
+pub mod summary;
+pub mod table1;
+pub mod table2;
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a report file under `artifacts/reports/`, creating the directory.
+pub fn write_report(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = Path::new("artifacts/reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(contents.as_bytes())?;
+    Ok(path)
+}
+
+/// Render a markdown table.
+pub fn md_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("| {} |\n", headers.join(" | ")));
+    s.push_str(&format!("|{}|\n", headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")));
+    for r in rows {
+        s.push_str(&format!("| {} |\n", r.join(" | ")));
+    }
+    s
+}
+
+/// Render CSV.
+pub fn csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = headers.join(",");
+    s.push('\n');
+    for r in rows {
+        s.push_str(&r.join(","));
+        s.push('\n');
+    }
+    s
+}

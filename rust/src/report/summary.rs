@@ -1,0 +1,56 @@
+//! Headline-claims summary (paper abstract + conclusion):
+//!
+//! * Int1 ≈5.7× and Int2 ≈3.5× faster than Ara Int8 on ResNet-18 (average);
+//! * Int2 *without* `vbitpack` barely beats Int8;
+//! * Quark lane ≈2.3× smaller, ≈1.9× lower power than Ara's;
+//! * Quark-8L beats Ara-4L at iso-area/power on conv2d for all sizes.
+
+use crate::arch::MachineConfig;
+use crate::phys::TechModel;
+
+use super::fig3::Fig3;
+use super::fig4::Fig4;
+
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub int1_avg_speedup: f64,
+    pub int2_avg_speedup: f64,
+    pub int2_novbp_avg_speedup: f64,
+    pub lane_area_ratio: f64,
+    pub lane_power_ratio: f64,
+    pub quark8_wins_all_sizes: bool,
+}
+
+pub fn generate(fig3: &Fig3, fig4: &Fig4) -> Summary {
+    // Series order in fig3::generate: fp32, w1a1, w2a2, w2a2-novbp.
+    let m = TechModel::default();
+    let ara = m.report(&MachineConfig::ara(4));
+    let quark = m.report(&MachineConfig::quark(4));
+    Summary {
+        int1_avg_speedup: fig3.mean_speedup(1).0,
+        int2_avg_speedup: fig3.mean_speedup(2).0,
+        int2_novbp_avg_speedup: fig3.mean_speedup(3).0,
+        lane_area_ratio: ara.lane_area_mm2 / quark.lane_area_mm2,
+        lane_power_ratio: ara.lane_power_mw / quark.lane_power_mw,
+        quark8_wins_all_sizes: fig4.sweep.iter().all(|(_, q, a)| q > a),
+    }
+}
+
+pub fn markdown(s: &Summary) -> String {
+    format!(
+        "# Headline claims — paper vs reproduction\n\n\
+         | claim | paper | measured |\n|---|---|---|\n\
+         | Int1 avg speedup over Ara Int8 | 5.7x | {:.2}x |\n\
+         | Int2 avg speedup over Ara Int8 | 3.5x | {:.2}x |\n\
+         | Int2 w/o vbitpack | \"not significant\" vs Int8 | {:.2}x |\n\
+         | Quark lane area vs Ara | 2.3x smaller | {:.2}x |\n\
+         | Quark lane power vs Ara | 1.9x lower | {:.2}x |\n\
+         | Quark-8L > Ara-4L at iso budget, all conv sizes | yes | {} |\n",
+        s.int1_avg_speedup,
+        s.int2_avg_speedup,
+        s.int2_novbp_avg_speedup,
+        s.lane_area_ratio,
+        s.lane_power_ratio,
+        if s.quark8_wins_all_sizes { "yes" } else { "no" },
+    )
+}

@@ -1,0 +1,144 @@
+//! Thin safe wrapper over the `xla` crate's PJRT client.
+//!
+//! One [`Runtime`] owns the PJRT CPU client; each [`Artifact`] is a compiled
+//! executable loaded from an HLO text file. Executables are compiled once and
+//! cached by path, so the coordinator's hot path only pays `execute`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled AOT artifact (one HLO module → one PJRT executable).
+pub struct Artifact {
+    /// Path the HLO text was loaded from (for diagnostics).
+    pub path: PathBuf,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with `f32` inputs (each tensor given as flat data + dims) and
+    /// return all outputs flattened to `f32` vectors.
+    ///
+    /// The AOT path lowers with `return_tuple=True`, so the PJRT output is a
+    /// single tuple literal which we unpack here.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims64)
+                    .context("reshape input literal")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let tuple = self.execute(&lits)?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose output tuple: {e}"))?
+            .into_iter()
+            .map(|l| {
+                let l = l.convert(xla::PrimitiveType::F32).map_err(|e| anyhow!("{e}"))?;
+                l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+            })
+            .collect()
+    }
+
+    /// Execute with `i32` inputs, returning `i32` outputs. Used for the
+    /// integer-exact cross-check between the simulated bit-serial kernels and
+    /// the JAX golden model.
+    pub fn run_i32(&self, inputs: &[(&[i32], &[usize])]) -> Result<Vec<Vec<i32>>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims64)
+                    .context("reshape input literal")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let tuple = self.execute(&lits)?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose output tuple: {e}"))?
+            .into_iter()
+            .map(|l| {
+                let l = l.convert(xla::PrimitiveType::S32).map_err(|e| anyhow!("{e}"))?;
+                l.to_vec::<i32>().map_err(|e| anyhow!("{e}"))
+            })
+            .collect()
+    }
+
+    /// Execute with `i32` inputs, returning `f32` outputs (e.g. the qnet
+    /// artifact: integer activation codes in, logits out).
+    pub fn run_i32_to_f32(&self, inputs: &[(&[i32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims64)
+                    .context("reshape input literal")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let tuple = self.execute(&lits)?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose output tuple: {e}"))?
+            .into_iter()
+            .map(|l| {
+                let l = l.convert(xla::PrimitiveType::F32).map_err(|e| anyhow!("{e}"))?;
+                l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+            })
+            .collect()
+    }
+
+    fn execute(&self, lits: &[xla::Literal]) -> Result<xla::Literal> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(lits)
+            .with_context(|| format!("execute artifact {}", self.path.display()))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .context("fetch output literal")?;
+        Ok(lit)
+    }
+}
+
+/// PJRT runtime: owns the CPU client and a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Artifact>>>,
+}
+
+impl Runtime {
+    /// Create a PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Human-readable platform string (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact, memoized by path.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<Artifact>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(a) = self.cache.lock().unwrap().get(&path) {
+            return Ok(a.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        let artifact = std::sync::Arc::new(Artifact { path: path.clone(), exe });
+        self.cache.lock().unwrap().insert(path, artifact.clone());
+        Ok(artifact)
+    }
+}

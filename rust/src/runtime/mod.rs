@@ -1,0 +1,12 @@
+//! PJRT golden-model runtime.
+//!
+//! Loads AOT artifacts produced by `python/compile/aot.py` (HLO **text**, the
+//! interchange format that round-trips through xla_extension 0.5.1 — see
+//! DESIGN.md) and executes them on the PJRT CPU client via the `xla` crate.
+//!
+//! This is the only place Python-produced bits enter the Rust process, and it
+//! happens at load time: the request path never touches Python.
+
+mod executable;
+
+pub use executable::{Artifact, Runtime};

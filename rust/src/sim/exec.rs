@@ -1,0 +1,726 @@
+//! Functional executor: full architectural semantics for the ISA subset.
+//!
+//! This is the "does the hardware compute the right numbers" half of the
+//! simulator; `timing.rs` is the "how many cycles" half. Both consume the
+//! same dynamic instruction stream via [`crate::sim::Sim`].
+
+use crate::arch::MachineConfig;
+use crate::isa::instr::{AluOp, FAluOp, Instr, ScalarOp, VIOp, VMemKind, VOp};
+use crate::isa::reg::{Reg, VReg};
+use crate::isa::vtype::{Lmul, Sew, VType};
+
+use super::mem::Memory;
+
+/// Architectural state.
+pub struct Machine {
+    pub x: [u64; 32],
+    pub f: [f32; 32],
+    /// Vector register file: 32 × VLEN/8 bytes, contiguous (register groups
+    /// under LMUL are naturally contiguous slices).
+    v: Vec<u8>,
+    vreg_bytes: usize,
+    pub vl: u64,
+    pub vtype: VType,
+    pub vlen_bits: usize,
+    pub mem: Memory,
+    /// Value returned by `csrr cycle` — kept current by the owning `Sim`.
+    pub cycle_csr: u64,
+}
+
+#[inline]
+fn sext_to_u64(v: u64, bits: usize) -> u64 {
+    let shift = 64 - bits;
+    (((v << shift) as i64) >> shift) as u64
+}
+
+#[inline]
+fn trunc(v: u64, bits: usize) -> u64 {
+    if bits == 64 {
+        v
+    } else {
+        v & ((1u64 << bits) - 1)
+    }
+}
+
+impl Machine {
+    pub fn new(cfg: &MachineConfig, mem_bytes: usize) -> Self {
+        let vreg_bytes = cfg.vlen_bits / 8;
+        Machine {
+            x: [0; 32],
+            f: [0.0; 32],
+            v: vec![0u8; 32 * vreg_bytes],
+            vreg_bytes,
+            vl: 0,
+            vtype: VType::new(Sew::E8, Lmul::M1),
+            vlen_bits: cfg.vlen_bits,
+            mem: Memory::new(mem_bytes),
+            cycle_csr: 0,
+        }
+    }
+
+    // ---- register helpers ----
+
+    #[inline]
+    pub fn get_x(&self, r: Reg) -> u64 {
+        if r.0 == 0 {
+            0
+        } else {
+            self.x[r.0 as usize]
+        }
+    }
+
+    #[inline]
+    pub fn set_x(&mut self, r: Reg, v: u64) {
+        if r.0 != 0 {
+            self.x[r.0 as usize] = v;
+        }
+    }
+
+    /// Read vector element `idx` of width `bytes` starting at register `vr`
+    /// (indices may run past one register under LMUL grouping).
+    #[inline]
+    pub fn vget(&self, vr: VReg, idx: usize, bytes: usize) -> u64 {
+        let off = vr.0 as usize * self.vreg_bytes + idx * bytes;
+        debug_assert!(off + bytes <= self.v.len(), "vector register file overrun");
+        let mut buf = [0u8; 8];
+        buf[..bytes].copy_from_slice(&self.v[off..off + bytes]);
+        u64::from_le_bytes(buf)
+    }
+
+    #[inline]
+    pub fn vset(&mut self, vr: VReg, idx: usize, bytes: usize, val: u64) {
+        let off = vr.0 as usize * self.vreg_bytes + idx * bytes;
+        debug_assert!(off + bytes <= self.v.len(), "vector register file overrun");
+        let le = val.to_le_bytes();
+        self.v[off..off + bytes].copy_from_slice(&le[..bytes]);
+    }
+
+    /// Whole-register view (test / `vbitpack` use).
+    pub fn vreg_slice(&self, vr: VReg) -> &[u8] {
+        let off = vr.0 as usize * self.vreg_bytes;
+        &self.v[off..off + self.vreg_bytes]
+    }
+
+    pub fn vreg_slice_mut(&mut self, vr: VReg) -> &mut [u8] {
+        let off = vr.0 as usize * self.vreg_bytes;
+        &mut self.v[off..off + self.vreg_bytes]
+    }
+
+    /// Read mask bit `i` of register `vr` (mask layout: bit i = element i).
+    pub fn vmask_bit(&self, vr: VReg, i: usize) -> bool {
+        let byte = self.vreg_slice(vr)[i / 8];
+        (byte >> (i % 8)) & 1 == 1
+    }
+
+    // ---- execution ----
+
+    /// Execute one instruction. Panics on semantic violations (the simulator
+    /// equivalent of a hardware assertion); ISA-availability checks (vector
+    /// FPU on Quark, custom ops on Ara) are enforced by `Sim::emit`.
+    pub fn execute(&mut self, instr: &Instr) {
+        match instr {
+            Instr::Scalar(op) => self.exec_scalar(op),
+            Instr::VSetVli { rd, avl, vtype } => {
+                self.vtype = *vtype;
+                let vlmax = vtype.vlmax(self.vlen_bits) as u64;
+                self.vl = (*avl).min(vlmax);
+                self.set_x(*rd, self.vl);
+            }
+            Instr::Vector(op) => self.exec_vector(op),
+        }
+    }
+
+    fn exec_scalar(&mut self, op: &ScalarOp) {
+        use ScalarOp::*;
+        match *op {
+            Li { rd, imm } => self.set_x(rd, imm as u64),
+            Alu { op, rd, rs1, rs2 } => {
+                let a = self.get_x(rs1);
+                let b = self.get_x(rs2);
+                self.set_x(rd, alu(op, a, b));
+            }
+            AluImm { op, rd, rs1, imm } => {
+                let a = self.get_x(rs1);
+                self.set_x(rd, alu(op, a, imm as u64));
+            }
+            Load { width, signed, rd, base, offset } => {
+                let addr = self.get_x(base).wrapping_add(offset as u64);
+                let raw = self.mem.read_u64_le(addr, width.bytes());
+                let v = if signed { sext_to_u64(raw, width.bytes() * 8) } else { raw };
+                self.set_x(rd, v);
+            }
+            Store { width, rs2, base, offset } => {
+                let addr = self.get_x(base).wrapping_add(offset as u64);
+                let v = self.get_x(rs2);
+                self.mem.write_u64_le(addr, v, width.bytes());
+            }
+            Branch { .. } | Nop => {}
+            FLoad { rd, base, offset } => {
+                let addr = self.get_x(base).wrapping_add(offset as u64);
+                let raw = self.mem.read_u64_le(addr, 4) as u32;
+                self.f[rd.0 as usize] = f32::from_bits(raw);
+            }
+            FStore { rs2, base, offset } => {
+                let addr = self.get_x(base).wrapping_add(offset as u64);
+                self.mem.write_u64_le(addr, self.f[rs2.0 as usize].to_bits() as u64, 4);
+            }
+            FAlu { op, rd, rs1, rs2 } => {
+                let a = self.f[rs1.0 as usize];
+                let b = self.f[rs2.0 as usize];
+                self.f[rd.0 as usize] = match op {
+                    FAluOp::Add => a + b,
+                    FAluOp::Sub => a - b,
+                    FAluOp::Mul => a * b,
+                    FAluOp::Div => a / b,
+                    FAluOp::Min => a.min(b),
+                    FAluOp::Max => a.max(b),
+                };
+            }
+            FMadd { rd, rs1, rs2, rs3 } => {
+                self.f[rd.0 as usize] =
+                    self.f[rs1.0 as usize].mul_add(self.f[rs2.0 as usize], self.f[rs3.0 as usize]);
+            }
+            FCvtWS { rd, rs1 } => {
+                // Round-to-nearest-even, saturating to i32 (RISC-V semantics).
+                let v = self.f[rs1.0 as usize].round_ties_even();
+                let clamped = v.clamp(i32::MIN as f32, i32::MAX as f32) as i32;
+                self.set_x(rd, clamped as i64 as u64);
+            }
+            FCvtSW { rd, rs1 } => {
+                self.f[rd.0 as usize] = (self.get_x(rs1) as i64 as i32) as f32;
+            }
+            FMvXW { rd, rs1 } => {
+                self.set_x(rd, sext_to_u64(self.f[rs1.0 as usize].to_bits() as u64, 32));
+            }
+            FMvWX { rd, rs1 } => {
+                self.f[rd.0 as usize] = f32::from_bits(self.get_x(rs1) as u32);
+            }
+            CsrReadCycle { rd } => self.set_x(rd, self.cycle_csr),
+        }
+    }
+
+    fn exec_vector(&mut self, op: &VOp) {
+        use VOp::*;
+        let vl = self.vl as usize;
+        let sew = self.vtype.sew;
+        let eb = sew.bytes();
+        let bits = sew.bits();
+        match *op {
+            Load { kind, eew, vd, base } => {
+                let ebytes = eew.bytes();
+                let base_addr = self.get_x(base);
+                match kind {
+                    VMemKind::UnitStride => {
+                        for i in 0..vl {
+                            let v = self.mem.read_u64_le(base_addr + (i * ebytes) as u64, ebytes);
+                            self.vset(vd, i, ebytes, v);
+                        }
+                    }
+                    VMemKind::Strided { stride } => {
+                        let s = self.get_x(stride);
+                        for i in 0..vl {
+                            let v = self
+                                .mem
+                                .read_u64_le(base_addr.wrapping_add(s.wrapping_mul(i as u64)), ebytes);
+                            self.vset(vd, i, ebytes, v);
+                        }
+                    }
+                }
+            }
+            Store { kind, eew, vs3, base } => {
+                let ebytes = eew.bytes();
+                let base_addr = self.get_x(base);
+                match kind {
+                    VMemKind::UnitStride => {
+                        for i in 0..vl {
+                            let v = self.vget(vs3, i, ebytes);
+                            self.mem.write_u64_le(base_addr + (i * ebytes) as u64, v, ebytes);
+                        }
+                    }
+                    VMemKind::Strided { stride } => {
+                        let s = self.get_x(stride);
+                        for i in 0..vl {
+                            let v = self.vget(vs3, i, ebytes);
+                            self.mem
+                                .write_u64_le(base_addr.wrapping_add(s.wrapping_mul(i as u64)), v, ebytes);
+                        }
+                    }
+                }
+            }
+            IVV { op, vd, vs2, vs1 } => {
+                for i in 0..vl {
+                    let a = self.vget(vs2, i, eb);
+                    let b = self.vget(vs1, i, eb);
+                    self.vset(vd, i, eb, vint(op, a, b, bits));
+                }
+            }
+            IVX { op, vd, vs2, rs1 } => {
+                let b = trunc(self.get_x(rs1), bits);
+                for i in 0..vl {
+                    let a = self.vget(vs2, i, eb);
+                    self.vset(vd, i, eb, vint(op, a, b, bits));
+                }
+            }
+            IVI { op, vd, vs2, imm } => {
+                let b = trunc(imm as u64, bits);
+                for i in 0..vl {
+                    let a = self.vget(vs2, i, eb);
+                    self.vset(vd, i, eb, vint(op, a, b, bits));
+                }
+            }
+            MaccVX { vd, rs1, vs2 } => {
+                let s = trunc(self.get_x(rs1), bits);
+                for i in 0..vl {
+                    let acc = self.vget(vd, i, eb);
+                    let m = self.vget(vs2, i, eb);
+                    self.vset(vd, i, eb, trunc(acc.wrapping_add(s.wrapping_mul(m)), bits));
+                }
+            }
+            MaccVV { vd, vs1, vs2 } => {
+                for i in 0..vl {
+                    let acc = self.vget(vd, i, eb);
+                    let a = self.vget(vs1, i, eb);
+                    let b = self.vget(vs2, i, eb);
+                    self.vset(vd, i, eb, trunc(acc.wrapping_add(a.wrapping_mul(b)), bits));
+                }
+            }
+            RedSum { vd, vs2, vs1 } => {
+                let mut acc = self.vget(vs1, 0, eb);
+                for i in 0..vl {
+                    acc = trunc(acc.wrapping_add(self.vget(vs2, i, eb)), bits);
+                }
+                self.vset(vd, 0, eb, acc);
+            }
+            MvXS { rd, vs2 } => {
+                let v = self.vget(vs2, 0, eb);
+                self.set_x(rd, sext_to_u64(v, bits));
+            }
+            MvSX { vd, rs1 } => {
+                let v = trunc(self.get_x(rs1), bits);
+                self.vset(vd, 0, eb, v);
+            }
+            MvVX { vd, rs1 } => {
+                let v = trunc(self.get_x(rs1), bits);
+                for i in 0..vl {
+                    self.vset(vd, i, eb, v);
+                }
+            }
+            MvVI { vd, imm } => {
+                let v = trunc(imm as u64, bits);
+                for i in 0..vl {
+                    self.vset(vd, i, eb, v);
+                }
+            }
+            Sext { vd, vs2, frac } => {
+                let src_bits = bits / frac as usize;
+                let src_bytes = src_bits / 8;
+                assert!(src_bytes >= 1, "vsext source narrower than one byte");
+                // Read all sources first: vd may overlap vs2 in the kernels'
+                // register allocation only when reading backwards is safe;
+                // we buffer to stay overlap-agnostic.
+                let src: Vec<u64> = (0..vl).map(|i| self.vget(vs2, i, src_bytes)).collect();
+                for (i, s) in src.into_iter().enumerate() {
+                    self.vset(vd, i, eb, trunc(sext_to_u64(s, src_bits), bits));
+                }
+            }
+            Zext { vd, vs2, frac } => {
+                let src_bits = bits / frac as usize;
+                let src_bytes = src_bits / 8;
+                assert!(src_bytes >= 1, "vzext source narrower than one byte");
+                let src: Vec<u64> = (0..vl).map(|i| self.vget(vs2, i, src_bytes)).collect();
+                for (i, s) in src.into_iter().enumerate() {
+                    self.vset(vd, i, eb, s);
+                }
+            }
+            MseqVI { vd, vs2, imm } => {
+                let b = trunc(imm as u64, bits);
+                let mut maskbits = vec![0u8; self.vreg_bytes];
+                for (i, mb) in (0..vl).map(|i| (i, self.vget(vs2, i, eb) == b)) {
+                    if mb {
+                        maskbits[i / 8] |= 1 << (i % 8);
+                    }
+                }
+                self.vreg_slice_mut(vd).copy_from_slice(&maskbits);
+            }
+            MsneVI { vd, vs2, imm } => {
+                let b = trunc(imm as u64, bits);
+                let mut maskbits = vec![0u8; self.vreg_bytes];
+                for (i, mb) in (0..vl).map(|i| (i, self.vget(vs2, i, eb) != b)) {
+                    if mb {
+                        maskbits[i / 8] |= 1 << (i % 8);
+                    }
+                }
+                self.vreg_slice_mut(vd).copy_from_slice(&maskbits);
+            }
+            FMaccVF { vd, rs1, vs2 } => {
+                assert_eq!(sew, Sew::E32, "vector f32 ops require SEW=32");
+                let s = self.f[rs1.0 as usize];
+                for i in 0..vl {
+                    let acc = f32::from_bits(self.vget(vd, i, 4) as u32);
+                    let m = f32::from_bits(self.vget(vs2, i, 4) as u32);
+                    self.vset(vd, i, 4, s.mul_add(m, acc).to_bits() as u64);
+                }
+            }
+            FAddVV { vd, vs2, vs1 } => {
+                assert_eq!(sew, Sew::E32);
+                for i in 0..vl {
+                    let a = f32::from_bits(self.vget(vs2, i, 4) as u32);
+                    let b = f32::from_bits(self.vget(vs1, i, 4) as u32);
+                    self.vset(vd, i, 4, (a + b).to_bits() as u64);
+                }
+            }
+            FMulVF { vd, vs2, rs1 } => {
+                assert_eq!(sew, Sew::E32);
+                let s = self.f[rs1.0 as usize];
+                for i in 0..vl {
+                    let a = f32::from_bits(self.vget(vs2, i, 4) as u32);
+                    self.vset(vd, i, 4, (a * s).to_bits() as u64);
+                }
+            }
+            FMaxVF { vd, vs2, rs1 } => {
+                assert_eq!(sew, Sew::E32);
+                let s = self.f[rs1.0 as usize];
+                for i in 0..vl {
+                    let a = f32::from_bits(self.vget(vs2, i, 4) as u32);
+                    self.vset(vd, i, 4, a.max(s).to_bits() as u64);
+                }
+            }
+            FMvVF { vd, rs1 } => {
+                assert_eq!(sew, Sew::E32);
+                let s = self.f[rs1.0 as usize].to_bits() as u64;
+                for i in 0..vl {
+                    self.vset(vd, i, 4, s);
+                }
+            }
+            FRedSum { vd, vs2, vs1 } => {
+                assert_eq!(sew, Sew::E32);
+                let mut acc = f32::from_bits(self.vget(vs1, 0, 4) as u32);
+                for i in 0..vl {
+                    acc += f32::from_bits(self.vget(vs2, i, 4) as u32);
+                }
+                self.vset(vd, 0, 4, acc.to_bits() as u64);
+            }
+            Popcnt { vd, vs2 } => {
+                for i in 0..vl {
+                    let a = self.vget(vs2, i, eb);
+                    self.vset(vd, i, eb, a.count_ones() as u64);
+                }
+            }
+            Shacc { vd, vs2, shamt } => {
+                for i in 0..vl {
+                    let acc = self.vget(vd, i, eb);
+                    let add = self.vget(vs2, i, eb);
+                    let v = trunc(acc << shamt, bits).wrapping_add(add);
+                    self.vset(vd, i, eb, trunc(v, bits));
+                }
+            }
+            Bitpack { vd, vs2, bit } => {
+                assert!(
+                    vl <= self.vlen_bits,
+                    "vbitpack: vl ({vl}) exceeds VLEN ({}) — plane must fit one register",
+                    self.vlen_bits
+                );
+                assert!((bit as usize) < bits, "vbitpack: bit index {bit} out of SEW range");
+                // Extract plane: bit `bit` of each element.
+                let mut plane = vec![0u8; self.vreg_bytes];
+                for i in 0..vl {
+                    if (self.vget(vs2, i, eb) >> bit) & 1 == 1 {
+                        plane[i / 8] |= 1 << (i % 8);
+                    }
+                }
+                // vd = (vd << vl) | plane, as a VLEN-bit little-endian value.
+                let dst = self.vreg_slice(vd).to_vec();
+                let shifted = shl_bitvec(&dst, vl);
+                let out = self.vreg_slice_mut(vd);
+                for (o, (s, p)) in out.iter_mut().zip(shifted.iter().zip(plane.iter())) {
+                    *o = s | p;
+                }
+            }
+        }
+    }
+}
+
+/// Scalar integer ALU semantics (RV64: 64-bit operations).
+fn alu(op: AluOp, a: u64, b: u64) -> u64 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::And => a & b,
+        AluOp::Or => a | b,
+        AluOp::Xor => a ^ b,
+        AluOp::Sll => a << (b & 63),
+        AluOp::Srl => a >> (b & 63),
+        AluOp::Sra => ((a as i64) >> (b & 63)) as u64,
+        AluOp::Slt => ((a as i64) < (b as i64)) as u64,
+        AluOp::Sltu => (a < b) as u64,
+        AluOp::Mul => a.wrapping_mul(b),
+        AluOp::Mulh => (((a as i64 as i128) * (b as i64 as i128)) >> 64) as u64,
+        AluOp::Div => {
+            if b == 0 {
+                u64::MAX
+            } else {
+                ((a as i64).wrapping_div(b as i64)) as u64
+            }
+        }
+        AluOp::Rem => {
+            if b == 0 {
+                a
+            } else {
+                ((a as i64).wrapping_rem(b as i64)) as u64
+            }
+        }
+    }
+}
+
+/// Vector integer element semantics at `bits` element width.
+fn vint(op: VIOp, a: u64, b: u64, bits: usize) -> u64 {
+    let sa = sext_to_u64(a, bits) as i64;
+    let sb = sext_to_u64(b, bits) as i64;
+    let shmask = (bits - 1) as u64;
+    let r = match op {
+        VIOp::Add => a.wrapping_add(b),
+        VIOp::Sub => a.wrapping_sub(b),
+        VIOp::Rsub => b.wrapping_sub(a),
+        VIOp::And => a & b,
+        VIOp::Or => a | b,
+        VIOp::Xor => a ^ b,
+        VIOp::Sll => a << (b & shmask),
+        VIOp::Srl => trunc(a, bits) >> (b & shmask),
+        VIOp::Sra => (sa >> (b & shmask)) as u64,
+        VIOp::Min => {
+            if sa < sb {
+                a
+            } else {
+                b
+            }
+        }
+        VIOp::Max => {
+            if sa > sb {
+                a
+            } else {
+                b
+            }
+        }
+        VIOp::Minu => {
+            if trunc(a, bits) < trunc(b, bits) {
+                a
+            } else {
+                b
+            }
+        }
+        VIOp::Maxu => {
+            if trunc(a, bits) > trunc(b, bits) {
+                a
+            } else {
+                b
+            }
+        }
+        VIOp::Mul => a.wrapping_mul(b),
+        VIOp::Mulh => ((sa as i128 * sb as i128) >> bits) as u64,
+    };
+    trunc(r, bits)
+}
+
+/// Shift a little-endian bitvector left by `n` bits (VLEN-sized).
+fn shl_bitvec(v: &[u8], n: usize) -> Vec<u8> {
+    let len = v.len();
+    let mut out = vec![0u8; len];
+    let byte_shift = n / 8;
+    let bit_shift = n % 8;
+    for i in (0..len).rev() {
+        if i < byte_shift {
+            continue;
+        }
+        let lo = v[i - byte_shift] as u16;
+        let carry = if bit_shift > 0 && i > byte_shift {
+            (v[i - byte_shift - 1] as u16) >> (8 - bit_shift)
+        } else {
+            0
+        };
+        out[i] = (((lo << bit_shift) | carry) & 0xFF) as u8;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::{abi, FReg};
+
+    fn machine() -> Machine {
+        Machine::new(&MachineConfig::quark(4), 1 << 20)
+    }
+
+    fn setvl(m: &mut Machine, avl: u64, sew: Sew, lmul: Lmul) {
+        m.execute(&Instr::VSetVli { rd: Reg(0), avl, vtype: VType::new(sew, lmul) });
+    }
+
+    #[test]
+    fn scalar_alu_and_memory() {
+        let mut m = machine();
+        let a = m.mem.alloc(64);
+        m.execute(&Instr::Scalar(ScalarOp::Li { rd: abi::T0, imm: a as i64 }));
+        m.execute(&Instr::Scalar(ScalarOp::Li { rd: abi::T1, imm: -5 }));
+        m.execute(&Instr::Scalar(ScalarOp::Store {
+            width: crate::isa::MemWidth::D,
+            rs2: abi::T1,
+            base: abi::T0,
+            offset: 0,
+        }));
+        m.execute(&Instr::Scalar(ScalarOp::Load {
+            width: crate::isa::MemWidth::D,
+            signed: true,
+            rd: abi::T2,
+            base: abi::T0,
+            offset: 0,
+        }));
+        assert_eq!(m.get_x(abi::T2) as i64, -5);
+        // x0 is hard-wired zero.
+        m.execute(&Instr::Scalar(ScalarOp::Li { rd: Reg(0), imm: 42 }));
+        assert_eq!(m.get_x(Reg(0)), 0);
+    }
+
+    #[test]
+    fn vpopcnt_counts_per_element() {
+        let mut m = machine();
+        setvl(&mut m, 4, Sew::E64, Lmul::M1);
+        for (i, v) in [0u64, 1, 0xFF, u64::MAX].iter().enumerate() {
+            m.vset(VReg(2), i, 8, *v);
+        }
+        m.execute(&Instr::Vector(VOp::Popcnt { vd: VReg(4), vs2: VReg(2) }));
+        assert_eq!(m.vget(VReg(4), 0, 8), 0);
+        assert_eq!(m.vget(VReg(4), 1, 8), 1);
+        assert_eq!(m.vget(VReg(4), 2, 8), 8);
+        assert_eq!(m.vget(VReg(4), 3, 8), 64);
+    }
+
+    #[test]
+    fn vshacc_is_horner_step() {
+        let mut m = machine();
+        setvl(&mut m, 2, Sew::E64, Lmul::M1);
+        m.vset(VReg(1), 0, 8, 3); // acc
+        m.vset(VReg(1), 1, 8, 1);
+        m.vset(VReg(2), 0, 8, 5); // addend
+        m.vset(VReg(2), 1, 8, 7);
+        m.execute(&Instr::Vector(VOp::Shacc { vd: VReg(1), vs2: VReg(2), shamt: 1 }));
+        assert_eq!(m.vget(VReg(1), 0, 8), 2 * 3 + 5);
+        assert_eq!(m.vget(VReg(1), 1, 8), 2 * 1 + 7);
+    }
+
+    #[test]
+    fn vbitpack_packs_planes_plane_major() {
+        let mut m = machine();
+        // 8 elements of SEW=8 holding 2-bit values; pack plane 1 then plane 0.
+        setvl(&mut m, 8, Sew::E8, Lmul::M1);
+        let vals = [0b00u64, 0b01, 0b10, 0b11, 0b01, 0b01, 0b10, 0b11];
+        for (i, v) in vals.iter().enumerate() {
+            m.vset(VReg(1), i, 1, *v);
+        }
+        // Zero the destination.
+        m.execute(&Instr::Vector(VOp::MvVI { vd: VReg(3), imm: 0 }));
+        m.execute(&Instr::Vector(VOp::Bitpack { vd: VReg(3), vs2: VReg(1), bit: 1 }));
+        m.execute(&Instr::Vector(VOp::Bitpack { vd: VReg(3), vs2: VReg(1), bit: 0 }));
+        // After two calls: bits [0..8) = plane0 (bit 0 of each elem),
+        // bits [8..16) = plane1.
+        let plane0_expect: u8 = vals
+            .iter()
+            .enumerate()
+            .fold(0, |acc, (i, v)| acc | ((((*v >> 0) & 1) as u8) << i));
+        let plane1_expect: u8 = vals
+            .iter()
+            .enumerate()
+            .fold(0, |acc, (i, v)| acc | ((((*v >> 1) & 1) as u8) << i));
+        let reg = m.vreg_slice(VReg(3));
+        assert_eq!(reg[0], plane0_expect);
+        assert_eq!(reg[1], plane1_expect);
+    }
+
+    #[test]
+    fn bitserial_triple_matches_dot_product() {
+        // AND + popcount + shacc over bit planes == integer dot product
+        // (paper Eq. 1), for 2-bit unsigned weights and activations.
+        let mut m = machine();
+        let w = [3u64, 1, 2, 0]; // four 2-bit weights packed as bit-planes below
+        let a = [2u64, 3, 1, 1];
+        let expect: u64 = w.iter().zip(a.iter()).map(|(x, y)| x * y).sum();
+
+        // Pack planes manually into 4-bit planes (one u64 word each).
+        let plane = |vals: &[u64], b: u64| -> u64 {
+            vals.iter().enumerate().fold(0u64, |acc, (i, v)| acc | (((v >> b) & 1) << i))
+        };
+        setvl(&mut m, 1, Sew::E64, Lmul::M1);
+        // acc (v10) = 0
+        m.execute(&Instr::Vector(VOp::MvVI { vd: VReg(10), imm: 0 }));
+        for wp in [1u64, 0] {
+            // partial (v11) = 0
+            m.execute(&Instr::Vector(VOp::MvVI { vd: VReg(11), imm: 0 }));
+            for ap in [1u64, 0] {
+                m.vset(VReg(1), 0, 8, plane(&w, wp));
+                m.vset(VReg(2), 0, 8, plane(&a, ap));
+                m.execute(&Instr::Vector(VOp::IVV {
+                    op: VIOp::And,
+                    vd: VReg(3),
+                    vs2: VReg(1),
+                    vs1: VReg(2),
+                }));
+                m.execute(&Instr::Vector(VOp::Popcnt { vd: VReg(3), vs2: VReg(3) }));
+                m.execute(&Instr::Vector(VOp::Shacc { vd: VReg(11), vs2: VReg(3), shamt: 1 }));
+            }
+            m.execute(&Instr::Vector(VOp::Shacc { vd: VReg(10), vs2: VReg(11), shamt: 1 }));
+        }
+        // Horner over (wp, ap) MSB→LSB computes Σ 2^(wp+ap) popcount(w&a)...
+        // but the outer shacc shifts the *whole* inner sum once per weight
+        // plane, so the weighting is 2^wp · (2^ap) — exactly Eq. (1) when the
+        // inner partial is rebuilt per weight plane.
+        assert_eq!(m.vget(VReg(10), 0, 8), expect);
+    }
+
+    #[test]
+    fn fcvt_rounds_to_nearest_even() {
+        let mut m = machine();
+        m.f[1] = 2.5;
+        m.execute(&Instr::Scalar(ScalarOp::FCvtWS { rd: Reg(5), rs1: FReg(1) }));
+        assert_eq!(m.get_x(Reg(5)), 2);
+        m.f[1] = 3.5;
+        m.execute(&Instr::Scalar(ScalarOp::FCvtWS { rd: Reg(5), rs1: FReg(1) }));
+        assert_eq!(m.get_x(Reg(5)), 4);
+    }
+
+    #[test]
+    fn vector_load_store_roundtrip() {
+        let mut m = machine();
+        let src = m.mem.alloc(64);
+        let dst = m.mem.alloc(64);
+        for i in 0..16u64 {
+            m.mem.write_u64_le(src + i * 4, i * 3 + 1, 4);
+        }
+        setvl(&mut m, 16, Sew::E32, Lmul::M1);
+        m.set_x(abi::A0, src);
+        m.set_x(abi::A1, dst);
+        m.execute(&Instr::Vector(VOp::Load {
+            kind: VMemKind::UnitStride,
+            eew: Sew::E32,
+            vd: VReg(8),
+            base: abi::A0,
+        }));
+        m.execute(&Instr::Vector(VOp::Store {
+            kind: VMemKind::UnitStride,
+            eew: Sew::E32,
+            vs3: VReg(8),
+            base: abi::A1,
+        }));
+        for i in 0..16u64 {
+            assert_eq!(m.mem.read_u64_le(dst + i * 4, 4), i * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn outer_horner_weighting_note() {
+        // Validate the double-Horner weighting explicitly for 2x2-bit:
+        // value = Σ_wp Σ_ap 2^(wp+ap) pc(wp,ap).
+        // Inner loop (ap = 1,0): partial = 2*pc(wp,1) + pc(wp,0).
+        // Outer (wp = 1,0): acc = 2*(2*pc(1,1)+pc(1,0)) + (2*pc(0,1)+pc(0,0))
+        //                      = 4·pc(1,1) + 2·pc(1,0) + 2·pc(0,1) + pc(0,0). ✓
+        // (This is what `bitserial_triple_matches_dot_product` exercises.)
+    }
+}

@@ -1,0 +1,123 @@
+//! Flat simulated memory with a bump allocator.
+//!
+//! The Ara/Quark testbed streams tensors from an L2/scratchpad; we model a
+//! single flat address space (base [`Memory::BASE`]) whose *bandwidth* is
+//! charged by the timing model (`timing.rs`), not here. The allocator hands
+//! out 64-byte-aligned regions, mirroring how the paper's kernels lay out
+//! tensors for unit-stride vector access.
+
+/// Flat byte-addressable memory.
+pub struct Memory {
+    base: u64,
+    data: Vec<u8>,
+    brk: u64,
+}
+
+impl Memory {
+    /// Lowest valid address (catches null-ish pointer bugs in kernels).
+    pub const BASE: u64 = 0x1000;
+
+    pub fn new(size_bytes: usize) -> Self {
+        Memory { base: Self::BASE, data: vec![0u8; size_bytes], brk: Self::BASE }
+    }
+
+    pub fn size(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Allocate `bytes` with 64-byte alignment; returns the address.
+    /// Panics on exhaustion (simulated workloads are sized up front).
+    pub fn alloc(&mut self, bytes: u64) -> u64 {
+        let addr = (self.brk + 63) & !63;
+        let end = addr + bytes;
+        assert!(
+            (end - self.base) as usize <= self.data.len(),
+            "simulated memory exhausted: need {} KiB, have {} KiB",
+            (end - self.base) / 1024,
+            self.data.len() / 1024
+        );
+        self.brk = end;
+        addr
+    }
+
+    /// Reset the allocator (used between layers when buffers are dead).
+    pub fn reset_alloc_to(&mut self, addr: u64) {
+        assert!(addr >= self.base && addr <= self.brk);
+        self.brk = addr;
+    }
+
+    pub fn brk(&self) -> u64 {
+        self.brk
+    }
+
+    #[inline]
+    fn idx(&self, addr: u64, len: usize) -> usize {
+        let off = addr.checked_sub(self.base).unwrap_or_else(|| {
+            panic!("address {addr:#x} below memory base {:#x}", self.base)
+        }) as usize;
+        assert!(
+            off + len <= self.data.len(),
+            "address {addr:#x}+{len} out of bounds (size {:#x})",
+            self.data.len()
+        );
+        off
+    }
+
+    #[inline]
+    pub fn read(&self, addr: u64, len: usize) -> &[u8] {
+        let i = self.idx(addr, len);
+        &self.data[i..i + len]
+    }
+
+    #[inline]
+    pub fn write(&mut self, addr: u64, bytes: &[u8]) {
+        let i = self.idx(addr, bytes.len());
+        self.data[i..i + bytes.len()].copy_from_slice(bytes);
+    }
+
+    #[inline]
+    pub fn read_u64_le(&self, addr: u64, bytes: usize) -> u64 {
+        let s = self.read(addr, bytes);
+        let mut buf = [0u8; 8];
+        buf[..bytes].copy_from_slice(s);
+        u64::from_le_bytes(buf)
+    }
+
+    #[inline]
+    pub fn write_u64_le(&mut self, addr: u64, value: u64, bytes: usize) {
+        let le = value.to_le_bytes();
+        self.write(addr, &le[..bytes]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_aligned_and_monotonic() {
+        let mut m = Memory::new(1 << 16);
+        let a = m.alloc(10);
+        let b = m.alloc(1);
+        assert_eq!(a % 64, 0);
+        assert_eq!(b % 64, 0);
+        assert!(b >= a + 10);
+    }
+
+    #[test]
+    fn rw_roundtrip() {
+        let mut m = Memory::new(1 << 16);
+        let a = m.alloc(64);
+        m.write_u64_le(a, 0xDEAD_BEEF_0BAD_F00D, 8);
+        assert_eq!(m.read_u64_le(a, 8), 0xDEAD_BEEF_0BAD_F00D);
+        m.write_u64_le(a + 8, 0x7F, 1);
+        assert_eq!(m.read_u64_le(a + 8, 1), 0x7F);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_read_panics() {
+        let m = Memory::new(4096);
+        let _ = m.read(Memory::BASE + 4096, 1);
+    }
+}

@@ -1,0 +1,326 @@
+//! Cycle-approximate simulator of the CVA6 + Ara/Quark system.
+//!
+//! [`Sim`] couples the functional executor ([`exec::Machine`]) with the
+//! structural timing model ([`timing::Timing`]) behind a single
+//! [`Sim::emit`] call: kernels in [`crate::kernels`] *are* the programs; they
+//! emit the dynamic instruction stream exactly as the paper's hand-written
+//! RVV assembly would execute it, and the simulator accounts both values and
+//! cycles.
+//!
+//! [`SimMode::TimingOnly`] skips functional execution for large sweeps whose
+//! numerics were already validated at small scale (the values cannot change
+//! the cycle count for the data-independent kernels used here — dispatch,
+//! durations, and dependencies are all shape-driven).
+
+pub mod exec;
+pub mod mem;
+pub mod stats;
+pub mod timing;
+
+pub use exec::Machine;
+pub use stats::Stats;
+
+use crate::arch::MachineConfig;
+use crate::isa::instr::{Instr, ScalarOp, VOp};
+use crate::isa::vtype::{Lmul, Sew, VType};
+
+/// Simulation fidelity.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimMode {
+    /// Execute functionally *and* account cycles (default).
+    Full,
+    /// Account cycles only; vector/scalar data paths are not evaluated.
+    /// `vsetvli` and scalar address arithmetic still execute so that `vl`
+    /// and memory footprints stay correct.
+    TimingOnly,
+}
+
+/// Error returned by [`Sim::try_emit`] when an instruction is not available
+/// on the configured machine (illegal-instruction trap in hardware).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// Vector-FP instruction on a machine without a vector FPU (Quark).
+    NoVectorFpu(&'static str),
+    /// Quark custom instruction on a machine without the extension (Ara).
+    NoQuarkIsa(&'static str),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::NoVectorFpu(m) => {
+                write!(f, "illegal instruction: {m} requires a vector FPU (removed in Quark)")
+            }
+            SimError::NoQuarkIsa(m) => {
+                write!(f, "illegal instruction: {m} is a Quark custom op (not present in Ara)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// The simulated system: one CVA6 scalar core + one Ara/Quark vector unit.
+pub struct Sim {
+    pub cfg: MachineConfig,
+    pub machine: Machine,
+    timing: timing::Timing,
+    stats: Stats,
+    mode: SimMode,
+}
+
+impl Sim {
+    /// Default simulated memory: 192 MiB (fits FP32 ResNet-18 weights plus
+    /// activations and im2col scratch).
+    pub const DEFAULT_MEM: usize = 192 << 20;
+
+    pub fn new(cfg: MachineConfig) -> Self {
+        Self::with_memory(cfg, Self::DEFAULT_MEM)
+    }
+
+    pub fn with_memory(cfg: MachineConfig, mem_bytes: usize) -> Self {
+        Sim {
+            machine: Machine::new(&cfg, mem_bytes),
+            timing: timing::Timing::new(&cfg),
+            stats: Stats::default(),
+            cfg,
+            mode: SimMode::Full,
+        }
+    }
+
+    pub fn set_mode(&mut self, mode: SimMode) {
+        self.mode = mode;
+    }
+
+    pub fn mode(&self) -> SimMode {
+        self.mode
+    }
+
+    /// Total cycles elapsed (completion of everything emitted so far).
+    pub fn cycles(&self) -> u64 {
+        self.timing.cycles()
+    }
+
+    pub fn stats(&self) -> &Stats {
+        &self.stats
+    }
+
+    pub fn stats_mut(&mut self) -> &mut Stats {
+        &mut self.stats
+    }
+
+    /// Allocate simulated memory (64-byte aligned).
+    pub fn alloc(&mut self, bytes: u64) -> u64 {
+        self.machine.mem.alloc(bytes)
+    }
+
+    /// Emit one instruction; panics on illegal-instruction for this config.
+    #[inline]
+    pub fn emit(&mut self, instr: Instr) {
+        if let Err(e) = self.try_emit(instr) {
+            panic!("{e} (machine: {})", self.cfg.name);
+        }
+    }
+
+    /// Emit one instruction, reporting ISA-availability violations.
+    #[inline]
+    pub fn try_emit(&mut self, instr: Instr) -> Result<(), SimError> {
+        if let Instr::Vector(v) = &instr {
+            if v.needs_vfpu() && !self.cfg.has_vfpu {
+                return Err(SimError::NoVectorFpu(vop_name(v)));
+            }
+            if v.is_quark_custom() && !self.cfg.has_quark_isa {
+                return Err(SimError::NoQuarkIsa(vop_name(v)));
+            }
+        }
+        // Capture vector state *before* execution (vsetvli changes it).
+        let (vl, sew) = (self.machine.vl, self.machine.vtype.sew);
+        self.timing.step(&instr, vl, sew, &mut self.stats);
+        match self.mode {
+            SimMode::Full => {
+                self.machine.cycle_csr = self.timing.now();
+                self.machine.execute(&instr);
+            }
+            SimMode::TimingOnly => {
+                // Config + scalar ops still execute so addresses/vl track.
+                match &instr {
+                    Instr::VSetVli { .. } | Instr::Scalar(_) => {
+                        self.machine.cycle_csr = self.timing.now();
+                        self.machine.execute(&instr);
+                    }
+                    Instr::Vector(_) => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- emit helpers (a tiny macro-assembler; kernels read much closer
+    //      to the paper's hand-written RVV assembly with these) ----
+
+    pub fn vsetvli(&mut self, avl: u64, sew: Sew, lmul: Lmul) -> u64 {
+        self.emit(Instr::VSetVli {
+            rd: crate::isa::Reg(0),
+            avl,
+            vtype: VType::new(sew, lmul),
+        });
+        self.machine.vl
+    }
+
+    pub fn li(&mut self, rd: crate::isa::Reg, imm: i64) {
+        self.emit(Instr::Scalar(ScalarOp::Li { rd, imm }));
+    }
+
+    pub fn v(&mut self, op: VOp) {
+        self.emit(Instr::Vector(op));
+    }
+
+    pub fn s(&mut self, op: ScalarOp) {
+        self.emit(Instr::Scalar(op));
+    }
+
+    /// Emit a loop back-edge marker (taken branch + induction update).
+    pub fn loop_edge(&mut self, counter: crate::isa::Reg) {
+        self.emit(Instr::Scalar(ScalarOp::AluImm {
+            op: crate::isa::instr::AluOp::Add,
+            rd: counter,
+            rs1: counter,
+            imm: -1,
+        }));
+        self.emit(Instr::Scalar(ScalarOp::Branch { taken: true }));
+    }
+
+    // ---- host-side data access (test fixtures, golden comparisons) ----
+
+    pub fn write_bytes(&mut self, addr: u64, data: &[u8]) {
+        self.machine.mem.write(addr, data);
+    }
+
+    pub fn read_bytes(&self, addr: u64, len: usize) -> Vec<u8> {
+        self.machine.mem.read(addr, len).to_vec()
+    }
+
+    pub fn write_i8(&mut self, addr: u64, data: &[i8]) {
+        let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
+        self.machine.mem.write(addr, &bytes);
+    }
+
+    pub fn read_i32s(&self, addr: u64, n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|i| self.machine.mem.read_u64_le(addr + (i * 4) as u64, 4) as u32 as i32)
+            .collect()
+    }
+
+    pub fn write_i32s(&mut self, addr: u64, data: &[i32]) {
+        for (i, &v) in data.iter().enumerate() {
+            self.machine.mem.write_u64_le(addr + (i * 4) as u64, v as u32 as u64, 4);
+        }
+    }
+
+    pub fn read_f32s(&self, addr: u64, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| f32::from_bits(self.machine.mem.read_u64_le(addr + (i * 4) as u64, 4) as u32))
+            .collect()
+    }
+
+    pub fn write_f32s(&mut self, addr: u64, data: &[f32]) {
+        for (i, &v) in data.iter().enumerate() {
+            self.machine.mem.write_u64_le(addr + (i * 4) as u64, v.to_bits() as u64, 4);
+        }
+    }
+
+    pub fn read_u8s(&self, addr: u64, n: usize) -> Vec<u8> {
+        self.machine.mem.read(addr, n).to_vec()
+    }
+}
+
+fn vop_name(v: &VOp) -> &'static str {
+    match v {
+        VOp::FMaccVF { .. } => "vfmacc.vf",
+        VOp::FAddVV { .. } => "vfadd.vv",
+        VOp::FMulVF { .. } => "vfmul.vf",
+        VOp::FMaxVF { .. } => "vfmax.vf",
+        VOp::FMvVF { .. } => "vfmv.v.f",
+        VOp::FRedSum { .. } => "vfredusum.vs",
+        VOp::Popcnt { .. } => "vpopcnt.v",
+        VOp::Shacc { .. } => "vshacc.vi",
+        VOp::Bitpack { .. } => "vbitpack.vi",
+        _ => "vector op",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::reg::VReg;
+
+    #[test]
+    fn quark_rejects_vector_fp() {
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        sim.vsetvli(16, Sew::E32, Lmul::M1);
+        let err = sim.try_emit(Instr::Vector(VOp::FMvVF {
+            vd: VReg(1),
+            rs1: crate::isa::FReg(0),
+        }));
+        assert!(matches!(err, Err(SimError::NoVectorFpu(_))));
+    }
+
+    #[test]
+    fn ara_rejects_quark_custom_ops() {
+        let mut sim = Sim::new(MachineConfig::ara(4));
+        sim.vsetvli(16, Sew::E64, Lmul::M1);
+        let err = sim.try_emit(Instr::Vector(VOp::Popcnt { vd: VReg(1), vs2: VReg(2) }));
+        assert!(matches!(err, Err(SimError::NoQuarkIsa(_))));
+    }
+
+    #[test]
+    fn timing_only_matches_full_cycle_count() {
+        // The kernels are data-independent: TimingOnly must produce identical
+        // cycle counts to Full on the same instruction stream.
+        let run = |mode: SimMode| {
+            let mut sim = Sim::new(MachineConfig::quark(4));
+            sim.set_mode(mode);
+            let buf = sim.alloc(4096);
+            sim.li(crate::isa::reg::abi::A0, buf as i64);
+            sim.vsetvli(512, Sew::E8, Lmul::M1);
+            for _ in 0..4 {
+                sim.v(VOp::Load {
+                    kind: crate::isa::VMemKind::UnitStride,
+                    eew: Sew::E8,
+                    vd: VReg(1),
+                    base: crate::isa::reg::abi::A0,
+                });
+                sim.v(VOp::IVI { op: crate::isa::instr::VIOp::Add, vd: VReg(2), vs2: VReg(1), imm: 3 });
+                sim.v(VOp::Store {
+                    kind: crate::isa::VMemKind::UnitStride,
+                    eew: Sew::E8,
+                    vs3: VReg(2),
+                    base: crate::isa::reg::abi::A0,
+                });
+                sim.loop_edge(crate::isa::reg::abi::T0);
+            }
+            sim.cycles()
+        };
+        assert_eq!(run(SimMode::Full), run(SimMode::TimingOnly));
+    }
+
+    #[test]
+    fn cycle_csr_tracks_timing() {
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        sim.vsetvli(64, Sew::E64, Lmul::M1);
+        sim.v(VOp::MvVI { vd: VReg(1), imm: 1 });
+        sim.s(ScalarOp::CsrReadCycle { rd: crate::isa::reg::abi::T0 });
+        let t0 = sim.machine.get_x(crate::isa::reg::abi::T0);
+        for _ in 0..10 {
+            sim.v(VOp::IVV {
+                op: crate::isa::instr::VIOp::Add,
+                vd: VReg(2),
+                vs2: VReg(1),
+                vs1: VReg(1),
+            });
+        }
+        sim.s(ScalarOp::CsrReadCycle { rd: crate::isa::reg::abi::T1 });
+        let t1 = sim.machine.get_x(crate::isa::reg::abi::T1);
+        assert!(t1 > t0, "cycle CSR must advance: {t0} -> {t1}");
+    }
+}

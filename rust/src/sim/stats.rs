@@ -1,0 +1,83 @@
+//! Execution statistics: the quantities every report and roofline needs.
+
+
+/// Counters accumulated by the simulator while a kernel runs.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    /// Dynamic scalar instructions (CVA6-executed).
+    pub scalar_instrs: u64,
+    /// Dynamic vector instructions (dispatched to Ara/Quark).
+    pub vector_instrs: u64,
+    /// `vsetvli` count.
+    pub vcfg_instrs: u64,
+    /// Total vector element operations (Σ vl over vector arithmetic ops).
+    pub vector_elem_ops: u64,
+    /// Bytes moved by vector loads.
+    pub vload_bytes: u64,
+    /// Bytes moved by vector stores.
+    pub vstore_bytes: u64,
+    /// Bytes moved by scalar loads/stores.
+    pub scalar_mem_bytes: u64,
+    /// Effective multiply-accumulates, credited by the *kernels* (a bit-serial
+    /// kernel processing 64 bit-products counts the MACs it implements, so
+    /// GOPS are comparable across precisions, as the paper plots them).
+    pub effective_macs: u64,
+    /// Cycles spent with the mask unit busy (packing-path diagnosis).
+    pub mask_unit_cycles: u64,
+    /// Cycles spent with the vector LSU busy.
+    pub vlsu_cycles: u64,
+    /// Cycles the scalar FPU was busy (re-scaling cost, CVA6-side).
+    pub scalar_fpu_cycles: u64,
+}
+
+impl Stats {
+    /// Total bytes moved to/from memory (roofline x-axis denominator).
+    pub fn total_bytes(&self) -> u64 {
+        self.vload_bytes + self.vstore_bytes + self.scalar_mem_bytes
+    }
+
+    /// Arithmetic intensity in effective ops/byte (1 MAC = 2 ops).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        if self.total_bytes() == 0 {
+            return 0.0;
+        }
+        (2 * self.effective_macs) as f64 / self.total_bytes() as f64
+    }
+
+    /// Difference of two snapshots (`later - earlier`): per-kernel deltas.
+    pub fn delta_since(&self, earlier: &Stats) -> Stats {
+        Stats {
+            scalar_instrs: self.scalar_instrs - earlier.scalar_instrs,
+            vector_instrs: self.vector_instrs - earlier.vector_instrs,
+            vcfg_instrs: self.vcfg_instrs - earlier.vcfg_instrs,
+            vector_elem_ops: self.vector_elem_ops - earlier.vector_elem_ops,
+            vload_bytes: self.vload_bytes - earlier.vload_bytes,
+            vstore_bytes: self.vstore_bytes - earlier.vstore_bytes,
+            scalar_mem_bytes: self.scalar_mem_bytes - earlier.scalar_mem_bytes,
+            effective_macs: self.effective_macs - earlier.effective_macs,
+            mask_unit_cycles: self.mask_unit_cycles - earlier.mask_unit_cycles,
+            vlsu_cycles: self.vlsu_cycles - earlier.vlsu_cycles,
+            scalar_fpu_cycles: self.scalar_fpu_cycles - earlier.scalar_fpu_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensity_counts_macs_as_two_ops() {
+        let s = Stats { effective_macs: 100, vload_bytes: 40, ..Default::default() };
+        assert!((s.arithmetic_intensity() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta() {
+        let a = Stats { scalar_instrs: 10, vector_instrs: 5, ..Default::default() };
+        let b = Stats { scalar_instrs: 25, vector_instrs: 9, ..Default::default() };
+        let d = b.delta_since(&a);
+        assert_eq!(d.scalar_instrs, 15);
+        assert_eq!(d.vector_instrs, 4);
+    }
+}

@@ -1,0 +1,84 @@
+//! Integration: whole-model execution on the simulated machines.
+
+mod support;
+
+use quark::arch::MachineConfig;
+use quark::coordinator::demo_net;
+use quark::nn::model::{ModelRunner, Precision};
+use quark::nn::resnet::{quantized_layers, resnet18_cifar};
+use quark::sim::{Sim, SimMode};
+
+#[test]
+fn demo_net_full_mode_produces_data_and_matches_timing_only() {
+    let net = demo_net();
+    let run = |mode: SimMode, write: bool| {
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        sim.set_mode(mode);
+        let reports = ModelRunner::run(&mut sim, &net, Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true }, write);
+        (reports.iter().map(|r| r.run.cycles).sum::<u64>(), reports.len())
+    };
+    let (full_cycles, n1) = run(SimMode::Full, true);
+    let (timing_cycles, n2) = run(SimMode::TimingOnly, false);
+    assert_eq!(n1, n2);
+    assert_eq!(full_cycles, timing_cycles, "timing must be data-independent");
+}
+
+#[test]
+fn resnet18_per_layer_ordering_matches_paper_shape() {
+    // The Fig. 3 claims at whole-network granularity, on the real graph.
+    let net = resnet18_cifar(100);
+    let total = |cfg: MachineConfig, prec: Precision| -> u64 {
+        let mut sim = Sim::new(cfg);
+        sim.set_mode(SimMode::TimingOnly);
+        ModelRunner::run(&mut sim, &net, prec, false)
+            .iter()
+            .filter(|r| r.quantized)
+            .map(|r| r.run.cycles)
+            .sum()
+    };
+    let int8 = total(MachineConfig::ara(4), Precision::Int8);
+    let fp32 = total(MachineConfig::ara(4), Precision::Fp32);
+    let w1 = total(MachineConfig::quark(4), Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true });
+    let w2 = total(MachineConfig::quark(4), Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
+    let w2n = total(MachineConfig::quark(4), Precision::Sub { abits: 2, wbits: 2, use_vbitpack: false });
+
+    // Paper ordering: fp32 slowest, then int8; w2-no-vbitpack a bit better
+    // than int8; w2 clearly better; w1 best.
+    //
+    // Known deviation (documented in EXPERIMENTS.md): on our Ara model both
+    // int8 and fp32 sustain 2 elem/lane/cycle at SEW=32, so they land within
+    // a few percent of each other instead of the paper's visible fp32 gap —
+    // the sub-byte comparisons (the contribution) are unaffected.
+    assert!(
+        fp32 as f64 >= int8 as f64 * 0.80,
+        "fp32 {fp32} should stay within ~20% of int8 {int8}"
+    );
+    assert!(w2n < int8, "w2a2-novbp {w2n} should edge out int8 {int8}");
+    assert!(w2 < w2n, "vbitpack must help: {w2} vs {w2n}");
+    assert!(w1 < w2, "1-bit must beat 2-bit: {w1} vs {w2}");
+    // Magnitudes (loose): Int1 ≥ 3x, Int2 ≥ 2x over Int8.
+    assert!(int8 as f64 / w1 as f64 > 3.0);
+    assert!(int8 as f64 / w2 as f64 > 2.0);
+}
+
+#[test]
+fn resnet18_has_twenty_quantized_kernels() {
+    let net = resnet18_cifar(100);
+    assert_eq!(quantized_layers(&net).len(), 20);
+}
+
+#[test]
+fn quark8_runs_the_full_model_faster_than_quark4() {
+    let net = resnet18_cifar(100);
+    let total = |lanes: usize| -> u64 {
+        let mut sim = Sim::new(MachineConfig::quark(lanes));
+        sim.set_mode(SimMode::TimingOnly);
+        ModelRunner::run(&mut sim, &net, Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true }, false)
+            .iter()
+            .map(|r| r.run.cycles)
+            .sum()
+    };
+    let q4 = total(4);
+    let q8 = total(8);
+    assert!(q8 < q4, "8 lanes must be faster: {q8} vs {q4}");
+}

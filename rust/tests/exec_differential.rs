@@ -1,0 +1,159 @@
+//! Differential testing of the functional executor: random vector integer
+//! operations are run both through the simulator and through a tiny
+//! independent host interpreter; element values must agree exactly at every
+//! SEW. (The interpreter is deliberately written in the most naive style —
+//! i128 arithmetic + masking — so a shared bug is unlikely.)
+
+mod support;
+
+use quark::arch::MachineConfig;
+use quark::isa::instr::{VIOp, VOp};
+use quark::isa::reg::VReg;
+use quark::isa::vtype::{Lmul, Sew};
+use quark::sim::Sim;
+use support::{run_cases, Gen};
+
+/// Naive host semantics for one element.
+fn host_op(op: VIOp, a: u64, b: u64, bits: u32) -> u64 {
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let sx = |v: u64| -> i128 {
+        let v = v & mask;
+        if (v >> (bits - 1)) & 1 == 1 {
+            v as i128 - (1i128 << bits)
+        } else {
+            v as i128
+        }
+    };
+    let (ia, ib) = (sx(a), sx(b));
+    let sh = (b & mask) % bits as u64;
+    let r: i128 = match op {
+        VIOp::Add => ia + ib,
+        VIOp::Sub => ia - ib,
+        VIOp::Rsub => ib - ia,
+        VIOp::And => (a & b) as i128,
+        VIOp::Or => (a | b) as i128,
+        VIOp::Xor => (a ^ b) as i128,
+        VIOp::Sll => ((a & mask) as i128) << sh,
+        VIOp::Srl => ((a & mask) >> sh) as i128,
+        VIOp::Sra => ia >> sh,
+        VIOp::Min => ia.min(ib),
+        VIOp::Max => ia.max(ib),
+        VIOp::Minu => ((a & mask).min(b & mask)) as i128,
+        VIOp::Maxu => ((a & mask).max(b & mask)) as i128,
+        VIOp::Mul => ia * ib,
+        VIOp::Mulh => return (((ia * ib) >> bits) as u64) & mask,
+    };
+    (r as u64) & mask
+}
+
+const OPS: [VIOp; 15] = [
+    VIOp::Add,
+    VIOp::Sub,
+    VIOp::Rsub,
+    VIOp::And,
+    VIOp::Or,
+    VIOp::Xor,
+    VIOp::Sll,
+    VIOp::Srl,
+    VIOp::Sra,
+    VIOp::Min,
+    VIOp::Max,
+    VIOp::Minu,
+    VIOp::Maxu,
+    VIOp::Mul,
+    VIOp::Mulh,
+];
+
+#[test]
+fn vector_integer_ops_match_naive_interpreter() {
+    run_cases(60, |g| {
+        let sew = *g.pick(&[Sew::E8, Sew::E16, Sew::E32, Sew::E64]);
+        let bits = sew.bits() as u32;
+        let op = *g.pick(&OPS);
+        let mut sim = Sim::with_memory(MachineConfig::quark(4), 1 << 20);
+        let vl = g.usize(1, 4096 / sew.bits());
+        sim.vsetvli(vl as u64, sew, Lmul::M1);
+        let mut avals = Vec::with_capacity(vl);
+        let mut bvals = Vec::with_capacity(vl);
+        for i in 0..vl {
+            let a = g.u64();
+            let b = g.u64();
+            sim.machine.vset(VReg(2), i, sew.bytes(), a);
+            sim.machine.vset(VReg(3), i, sew.bytes(), b);
+            avals.push(a);
+            bvals.push(b);
+        }
+        sim.v(VOp::IVV { op, vd: VReg(4), vs2: VReg(2), vs1: VReg(3) });
+        for i in 0..vl {
+            let got = sim.machine.vget(VReg(4), i, sew.bytes());
+            let want = host_op(op, avals[i], bvals[i], bits);
+            assert_eq!(got, want, "{op:?} sew={bits} elem {i}: a={:#x} b={:#x}", avals[i], bvals[i]);
+        }
+    });
+}
+
+#[test]
+fn popcnt_shacc_match_naive_interpreter() {
+    run_cases(40, |g| {
+        let sew = *g.pick(&[Sew::E8, Sew::E16, Sew::E32, Sew::E64]);
+        let bits = sew.bits();
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        let mut sim = Sim::with_memory(MachineConfig::quark(4), 1 << 20);
+        let vl = g.usize(1, 4096 / bits);
+        sim.vsetvli(vl as u64, sew, Lmul::M1);
+        let shamt = g.range(0, 3) as u8;
+        let mut src = Vec::new();
+        let mut acc = Vec::new();
+        for i in 0..vl {
+            let s = g.u64();
+            let a = g.u64();
+            sim.machine.vset(VReg(2), i, sew.bytes(), s);
+            sim.machine.vset(VReg(4), i, sew.bytes(), a);
+            src.push(s);
+            acc.push(a);
+        }
+        sim.v(VOp::Popcnt { vd: VReg(3), vs2: VReg(2) });
+        sim.v(VOp::Shacc { vd: VReg(4), vs2: VReg(3), shamt });
+        for i in 0..vl {
+            let pc = (src[i] & mask).count_ones() as u64;
+            let want = (((acc[i] & mask) << shamt) & mask).wrapping_add(pc) & mask;
+            assert_eq!(sim.machine.vget(VReg(4), i, sew.bytes()), want, "elem {i}");
+            assert_eq!(sim.machine.vget(VReg(3), i, sew.bytes()), pc, "popcnt {i}");
+        }
+    });
+}
+
+#[test]
+fn macc_and_redsum_match_naive_interpreter() {
+    run_cases(30, |g| {
+        let sew = *g.pick(&[Sew::E16, Sew::E32, Sew::E64]);
+        let bits = sew.bits();
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        let mut sim = Sim::with_memory(MachineConfig::quark(4), 1 << 20);
+        let vl = g.usize(1, 4096 / bits);
+        sim.vsetvli(vl as u64, sew, Lmul::M1);
+        let scalar = g.u64();
+        sim.machine.set_x(quark::isa::Reg(7), scalar);
+        let mut acc = Vec::new();
+        let mut m = Vec::new();
+        for i in 0..vl {
+            let a = g.u64();
+            let v = g.u64();
+            sim.machine.vset(VReg(8), i, sew.bytes(), a);
+            sim.machine.vset(VReg(9), i, sew.bytes(), v);
+            acc.push(a);
+            m.push(v);
+        }
+        sim.v(VOp::MaccVX { vd: VReg(8), rs1: quark::isa::Reg(7), vs2: VReg(9) });
+        let mut sum = 0u64;
+        for i in 0..vl {
+            let want = (acc[i].wrapping_add((scalar & mask).wrapping_mul(m[i] & mask))) & mask;
+            assert_eq!(sim.machine.vget(VReg(8), i, sew.bytes()), want, "macc elem {i}");
+            sum = sum.wrapping_add(want) & mask;
+        }
+        // vredsum with zeroed seed.
+        sim.v(VOp::MvVI { vd: VReg(12), imm: 0 });
+        sim.v(VOp::RedSum { vd: VReg(12), vs2: VReg(8), vs1: VReg(12) });
+        assert_eq!(sim.machine.vget(VReg(12), 0, sew.bytes()), sum);
+    });
+}

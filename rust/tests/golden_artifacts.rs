@@ -1,0 +1,60 @@
+//! Integration: the three-layer loop — simulated Quark custom-ISA kernels vs
+//! the JAX/Pallas AOT artifacts executed through the PJRT runtime.
+//!
+//! Requires `make artifacts`. The tests skip (with a loud message) when the
+//! artifacts are missing so `cargo test` stays green on a fresh checkout.
+
+use quark::coordinator::golden::{crosscheck_qgemm, GOLDEN_K, GOLDEN_M, GOLDEN_N};
+use quark::runtime::Runtime;
+
+fn artifact(name: &str) -> Option<String> {
+    // Tests run from the crate root.
+    let p = format!("artifacts/{name}");
+    if std::path::Path::new(&p).exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: {p} missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn qgemm_crosscheck_simulator_vs_pjrt() {
+    let Some(path) = artifact("qgemm.hlo.txt") else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    for seed in [1u64, 2, 3] {
+        let r = crosscheck_qgemm(&rt, &path, seed).expect("crosscheck runs");
+        assert_eq!(r.checked, GOLDEN_M * GOLDEN_N);
+        assert_eq!(r.mismatches, 0, "seed {seed}: integer mismatch between sim and JAX");
+    }
+}
+
+#[test]
+fn qgemm_artifact_shapes_match_contract() {
+    let Some(path) = artifact("qgemm.hlo.txt") else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let art = rt.load(&path).expect("compile artifact");
+    let a = vec![1i32; GOLDEN_M * GOLDEN_K];
+    let w = vec![1i32; GOLDEN_K * GOLDEN_N];
+    let out = art.run_i32(&[(&a, &[GOLDEN_M, GOLDEN_K]), (&w, &[GOLDEN_K, GOLDEN_N])]).unwrap();
+    assert_eq!(out.len(), 2, "expected (acc, asum)");
+    assert_eq!(out[0].len(), GOLDEN_M * GOLDEN_N);
+    assert_eq!(out[1].len(), GOLDEN_M);
+    // all-ones codes: acc = K, asum = K.
+    assert!(out[0].iter().all(|&v| v == GOLDEN_K as i32));
+    assert!(out[1].iter().all(|&v| v == GOLDEN_K as i32));
+}
+
+#[test]
+fn qnet_artifact_runs_end_to_end() {
+    let Some(path) = artifact("qnet.hlo.txt") else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let art = rt.load(&path).expect("compile qnet artifact");
+    let x = vec![2i32; 16 * 16 * 64];
+    let logits = art.run_i32_to_f32(&[(&x, &[16, 16, 64])]).expect("qnet executes");
+    assert_eq!(logits[0].len(), 10);
+    assert!(logits[0].iter().all(|v| v.is_finite()));
+    // Determinism: constants are baked, same input → same logits.
+    let logits2 = art.run_i32_to_f32(&[(&x, &[16, 16, 64])]).unwrap();
+    assert_eq!(logits[0], logits2[0]);
+}

@@ -1,0 +1,183 @@
+//! Property tests over simulator invariants:
+//! * TimingOnly and Full modes agree on cycle counts for any kernel
+//!   invocation (the kernels are data-independent);
+//! * the simulated `vbitpack`/pure-RVV packers match the host packer for
+//!   random sizes and precisions;
+//! * cycles are monotone in work; stats stay consistent.
+
+mod support;
+
+use quark::arch::MachineConfig;
+use quark::kernels::bitpack::{emit_pack_planes, setup_index_vector, PackedBuf};
+use quark::kernels::matmul::{gemm_codes_golden, matmul_bitserial, matmul_int8};
+use quark::kernels::requantize::{requant_host, RqBuf};
+use quark::quant::{pack_bit_planes, pack_weight_planes};
+use quark::sim::{Sim, SimMode};
+use support::{run_cases, Gen};
+
+fn quark_sim(mode: SimMode) -> Sim {
+    let mut s = Sim::with_memory(MachineConfig::quark(4), 16 << 20);
+    s.set_mode(mode);
+    s
+}
+
+#[test]
+fn packing_matches_host_for_random_shapes() {
+    run_cases(40, |g| {
+        let k = g.usize(1, 2000);
+        let bits = g.usize(1, 4) as u8;
+        let use_vbp = g.bool();
+        let mut sim = quark_sim(SimMode::Full);
+        let idx = setup_index_vector(&mut sim);
+        let vals: Vec<u8> = (0..k).map(|_| (g.u64() % (1 << bits)) as u8).collect();
+        let src = sim.alloc(k as u64);
+        sim.write_bytes(src, &vals);
+        let dst = PackedBuf::alloc(&mut sim, k, bits);
+        emit_pack_planes(&mut sim, src, &dst, use_vbp, idx);
+        let want = pack_bit_planes(&vals, bits);
+        for p in 0..bits as usize {
+            for w in 0..dst.kw() {
+                assert_eq!(
+                    sim.machine.mem.read_u64_le(dst.word_addr(p, w), 8),
+                    want[p][w],
+                    "k={k} bits={bits} vbp={use_vbp} p={p} w={w}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn timing_only_equals_full_on_random_gemms() {
+    run_cases(12, |g| {
+        let m = g.usize(1, 6);
+        let k = g.usize(1, 4) * 64;
+        let n = g.usize(1, 96);
+        let bits = g.usize(1, 2) as u8;
+        let vbp = g.bool();
+        let cycles = |mode: SimMode| {
+            let mut sim = quark_sim(mode);
+            let idx = setup_index_vector(&mut sim);
+            let wpk = pack_weight_planes(&vec![1u8; k * n], k, n, bits, sim.cfg.vlen_bits / 64);
+            let a = sim.alloc((m * k) as u64);
+            let w = sim.alloc(wpk.byte_len() as u64);
+            let rq =
+                RqBuf::create(&mut sim, &vec![1.0; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+            let out = sim.alloc((m * n) as u64);
+            matmul_bitserial(&mut sim, m, k, n, bits, a, &wpk, w, &rq, out, vbp, idx);
+            sim.cycles()
+        };
+        assert_eq!(
+            cycles(SimMode::Full),
+            cycles(SimMode::TimingOnly),
+            "m={m} k={k} n={n} bits={bits} vbp={vbp}"
+        );
+    });
+}
+
+#[test]
+fn bitserial_gemm_matches_oracle_random() {
+    run_cases(10, |g| {
+        let m = g.usize(1, 5);
+        let k = g.usize(1, 3) * 64;
+        let n = g.usize(1, 70);
+        let abits = g.usize(1, 2) as u8;
+        let wbits = g.usize(1, 2) as u8;
+        let vbp = g.bool();
+        let a_codes: Vec<u8> = (0..m * k).map(|_| (g.u64() % (1 << abits)) as u8).collect();
+        let w_codes: Vec<u8> = (0..k * n).map(|_| (g.u64() % (1 << wbits)) as u8).collect();
+        let mut sim = quark_sim(SimMode::Full);
+        let idx = setup_index_vector(&mut sim);
+        let wpk = pack_weight_planes(&w_codes, k, n, wbits, sim.cfg.vlen_bits / 64);
+        let a = sim.alloc((m * k) as u64);
+        sim.write_bytes(a, &a_codes);
+        let w = sim.alloc(wpk.byte_len() as u64);
+        for (i, &word) in wpk.words.iter().enumerate() {
+            sim.machine.mem.write_u64_le(w + (i * 8) as u64, word, 8);
+        }
+        let alpha = 0.37f32;
+        let beta = -0.11f32;
+        let rq =
+            RqBuf::create(&mut sim, &vec![alpha; n], &vec![beta; n], &vec![0.25; n], 255.0, 0.0);
+        let out = sim.alloc((m * n) as u64);
+        matmul_bitserial(&mut sim, m, k, n, abits, a, &wpk, w, &rq, out, vbp, idx);
+        let (acc, asum) = gemm_codes_golden(&a_codes, &w_codes, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want = requant_host(
+                    acc[i * n + j] as i32,
+                    Some(asum[i] as i32),
+                    None,
+                    alpha,
+                    beta,
+                    0.25,
+                    255.0,
+                    0.0,
+                );
+                assert_eq!(
+                    sim.read_u8s(out + (i * n + j) as u64, 1)[0],
+                    want,
+                    "m={m} k={k} n={n} a{abits} w{wbits} ({i},{j})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn cycles_monotone_in_problem_size() {
+    let cycles = |m: usize| {
+        let mut sim = quark_sim(SimMode::TimingOnly);
+        let idx = setup_index_vector(&mut sim);
+        let (k, n) = (128, 64);
+        let wpk = pack_weight_planes(&vec![1u8; k * n], k, n, 2, sim.cfg.vlen_bits / 64);
+        let a = sim.alloc((m * k) as u64);
+        let w = sim.alloc(wpk.byte_len() as u64);
+        let rq = RqBuf::create(&mut sim, &vec![1.0; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+        let out = sim.alloc((m * n) as u64);
+        matmul_bitserial(&mut sim, m, k, n, 2, a, &wpk, w, &rq, out, true, idx);
+        sim.cycles()
+    };
+    let mut prev = 0;
+    for m in [1usize, 2, 4, 8, 16] {
+        let c = cycles(m);
+        assert!(c > prev, "cycles must grow with M: m={m} {c} vs {prev}");
+        prev = c;
+    }
+}
+
+#[test]
+fn more_lanes_never_slower() {
+    let cycles = |lanes: usize| {
+        let mut sim = Sim::with_memory(MachineConfig::quark(lanes), 16 << 20);
+        sim.set_mode(SimMode::TimingOnly);
+        let idx = setup_index_vector(&mut sim);
+        let (m, k, n) = (8, 576, 64);
+        let wpk = pack_weight_planes(&vec![1u8; k * n], k, n, 2, sim.cfg.vlen_bits / 64);
+        let a = sim.alloc((m * k) as u64);
+        let w = sim.alloc(wpk.byte_len() as u64);
+        let rq = RqBuf::create(&mut sim, &vec![1.0; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+        let out = sim.alloc((m * n) as u64);
+        matmul_bitserial(&mut sim, m, k, n, 2, a, &wpk, w, &rq, out, true, idx);
+        sim.cycles()
+    };
+    assert!(cycles(8) <= cycles(4), "8 lanes must not be slower than 4");
+}
+
+#[test]
+fn int8_stats_account_memory_traffic() {
+    let mut sim = Sim::with_memory(MachineConfig::ara(4), 16 << 20);
+    sim.set_mode(SimMode::TimingOnly);
+    let (m, k, n) = (4, 128, 64);
+    let a = sim.alloc((m * k) as u64);
+    let w = sim.alloc((k * n) as u64);
+    let rq = RqBuf::create(&mut sim, &vec![1.0; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
+    let out = sim.alloc((m * n) as u64);
+    let before = sim.stats().clone();
+    matmul_int8(&mut sim, m, k, n, a, w, &rq, out);
+    let d = sim.stats().delta_since(&before);
+    // Weights are streamed at least once: ≥ K·N bytes of vector loads.
+    assert!(d.vload_bytes >= (k * n) as u64, "vload {} < {}", d.vload_bytes, k * n);
+    assert!(d.effective_macs == (m * k * n) as u64);
+    assert!(d.scalar_fpu_cycles > 0, "requant must use the scalar FPU");
+}
