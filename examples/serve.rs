@@ -1,6 +1,7 @@
-//! Serving demo: start the coordinator (pool of simulated Quark cores +
-//! dynamic batcher) and drive it with an in-process client load, reporting
-//! throughput and latency percentiles — the L3 runtime in action.
+//! Serving demo: start the coordinator (pool of persistent simulated Quark
+//! cores + dynamic batcher + timing cache) and drive it with an in-process
+//! client load, reporting throughput, latency percentiles, cache behavior,
+//! and a couple of real classifications — the L3 runtime in action.
 //!
 //! ```sh
 //! cargo run --release --offline --example serve
@@ -17,15 +18,17 @@ fn main() {
     cfg.batch_size = 4;
     cfg.batch_timeout = Duration::from_millis(10);
     println!(
-        "coordinator: {} workers ({}), precision {:?}, batch ≤ {}",
-        cfg.workers, cfg.machine.name, cfg.precision, cfg.batch_size
+        "coordinator: {} workers ({}), precision {:?}, batch ≤ {}, queue ≤ {}",
+        cfg.workers, cfg.machine.name, cfg.precision, cfg.batch_size, cfg.max_queue
     );
     let coord = Coordinator::start(cfg);
 
-    let n = 24u64;
+    // Phase 1: timing-only load — after the first batch per worker this is
+    // pure timing-cache hits, so throughput is bounded by batching overhead.
+    let n = 64u64;
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
-        .map(|id| coord.submit(InferenceRequest { id, input: vec![(id % 4) as u8; 32 * 32 * 3] }))
+        .map(|id| coord.submit(InferenceRequest { id, input: None }).expect("queue has room"))
         .collect();
     let mut responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
     let wall = t0.elapsed();
@@ -37,14 +40,45 @@ fn main() {
     let pct = |p: f64| lat[((lat.len() as f64 - 1.0) * p) as usize];
     let device_us: f64 = responses.iter().map(|r| r.device_us).sum::<f64>() / n as f64;
     let batches: std::collections::HashSet<u64> = responses.iter().map(|r| r.batch_id).collect();
+    let cached = responses.iter().filter(|r| r.timing_cached).count();
 
-    println!("\nserved {n} requests in {:.2}s → {:.1} req/s (host)", wall.as_secs_f64(), n as f64 / wall.as_secs_f64());
+    println!(
+        "\nserved {n} timing requests in {:.3}s → {:.0} req/s (host)",
+        wall.as_secs_f64(),
+        n as f64 / wall.as_secs_f64()
+    );
     println!("batches formed : {} (avg {:.1} req/batch)", batches.len(), n as f64 / batches.len() as f64);
-    println!("device latency : {:.0} us/request (simulated {} @ {:.2} GHz)", device_us, coord.config().machine.name, coord.config().machine.freq_ghz);
-    println!("host latency   : p50 {:.0} ms, p90 {:.0} ms, p99 {:.0} ms", pct(0.5), pct(0.9), pct(0.99));
-    let per_worker: Vec<usize> = (0..coord.config().workers)
-        .map(|w| responses.iter().filter(|r| r.worker == w).count())
-        .collect();
-    println!("per-worker load: {per_worker:?}");
+    println!("timing cache   : {cached}/{n} responses served from cache");
+    println!(
+        "device latency : {:.0} us/request (simulated {} @ {:.2} GHz)",
+        device_us,
+        coord.config().machine.name,
+        coord.config().machine.freq_ghz
+    );
+    println!("host latency   : p50 {:.2} ms, p90 {:.2} ms, p99 {:.2} ms", pct(0.5), pct(0.9), pct(0.99));
+
+    // Phase 2: two real inferences — input bytes flow through the functional
+    // executor and come back as logits.
+    let input_a = vec![0u8; 32 * 32 * 3];
+    let input_b = vec![200u8; 32 * 32 * 3];
+    for (label, input) in [("zeros", input_a), ("bright", input_b)] {
+        let rx = coord
+            .submit(InferenceRequest { id: 1000, input: Some(input) })
+            .expect("queue has room");
+        let r = rx.recv().unwrap();
+        println!(
+            "classify {label:>6}: argmax={} (service {:.0} ms, worker {})",
+            r.argmax.unwrap(),
+            r.service_time.as_secs_f64() * 1e3,
+            r.worker
+        );
+    }
+
+    let s = coord.stats();
+    println!(
+        "\nSTATS served={} rejected={} cache_hits={} cache_misses={} p50_us={} p99_us={} util={:?}",
+        s.served, s.rejected, s.cache_hits, s.cache_misses, s.p50_us, s.p99_us,
+        s.utilization.iter().map(|u| (u * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
     coord.shutdown();
 }

@@ -7,6 +7,8 @@ sweeping shapes and precisions (the pytest signal `make test` gates on).
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis unavailable in this environment")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels.bitserial import pack_rows, popcount32, qgemm, qgemm_bitserial

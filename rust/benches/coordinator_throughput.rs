@@ -1,20 +1,48 @@
-//! Bench: coordinator serving throughput/latency over worker-count and
-//! batch-size sweeps (the L3 ablation DESIGN.md calls out: batching policy
-//! and worker scaling).
+//! Bench: coordinator serving throughput/latency — worker-count and
+//! batch-size sweeps, plus the headline comparison the serving overhaul is
+//! about: repeated identical-shape requests served via the timing cache on
+//! persistent cores vs the old per-request-`Sim` re-simulation baseline.
 
 use std::time::{Duration, Instant};
 
 use quark::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use quark::nn::model::ModelRunner;
+use quark::sim::{Sim, SimMode};
+
+/// What the seed coordinator did for every request: construct a fresh `Sim`
+/// and re-run the whole `TimingOnly` simulation. Workload taken from
+/// `CoordinatorConfig::demo()` so both sides of the comparison stay coupled
+/// if the demo deployment ever changes.
+fn per_request_sim_baseline(n: u64) -> f64 {
+    let cfg = CoordinatorConfig::demo();
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for _ in 0..n {
+        let mut sim = Sim::new(cfg.machine.clone());
+        sim.set_mode(SimMode::TimingOnly);
+        let reports = ModelRunner::run(&mut sim, &cfg.net, cfg.precision, false);
+        sink += reports.iter().map(|r| r.run.cycles).sum::<u64>();
+    }
+    assert!(sink > 0);
+    n as f64 / t0.elapsed().as_secs_f64()
+}
 
 fn run(workers: usize, batch: usize, n: u64) -> (f64, f64, f64) {
     let mut cfg = CoordinatorConfig::demo();
     cfg.workers = workers;
     cfg.batch_size = batch;
     cfg.batch_timeout = Duration::from_millis(5);
+    cfg.max_queue = n as usize + 1;
     let coord = Coordinator::start(cfg);
+    // Warm the timing cache so the sweep measures the steady state.
+    coord
+        .submit(InferenceRequest { id: u64::MAX, input: None })
+        .unwrap()
+        .recv()
+        .unwrap();
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
-        .map(|id| coord.submit(InferenceRequest { id, input: vec![0u8; 32 * 32 * 3] }))
+        .map(|id| coord.submit(InferenceRequest { id, input: None }).unwrap())
         .collect();
     let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
     let wall = t0.elapsed().as_secs_f64();
@@ -22,19 +50,28 @@ fn run(workers: usize, batch: usize, n: u64) -> (f64, f64, f64) {
         responses.iter().map(|r| (r.queue_time + r.service_time).as_secs_f64() * 1e3).collect();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let p50 = lat[lat.len() / 2];
-    let p99 = lat[(lat.len() as f64 * 0.99) as usize - 1];
+    let p99 = lat[((lat.len() as f64 * 0.99) as usize).min(lat.len() - 1)];
     coord.shutdown();
     (n as f64 / wall, p50, p99)
 }
 
 fn main() {
-    let n = 12u64;
+    println!("== timing-cache hit path vs seed per-request-Sim baseline ==");
+    let baseline_rps = per_request_sim_baseline(8);
+    let (warm_rps, p50, p99) = run(2, 4, 512);
+    println!("per-request Sim baseline : {baseline_rps:>10.1} req/s");
+    println!("cached coordinator (warm): {warm_rps:>10.1} req/s  (p50 {p50:.2} ms, p99 {p99:.2} ms)");
+    println!("speedup                  : {:>10.1}x", warm_rps / baseline_rps);
+
+    println!("\n== worker/batch sweep (warm cache, 128 requests each) ==");
+    let n = 128u64;
     println!("{:>8} {:>6} {:>10} {:>10} {:>10}", "workers", "batch", "req/s", "p50 ms", "p99 ms");
     for workers in [1usize, 2, 4] {
-        for batch in [1usize, 4] {
+        for batch in [1usize, 4, 16] {
             let (rps, p50, p99) = run(workers, batch, n);
-            println!("{workers:>8} {batch:>6} {rps:>10.2} {p50:>10.0} {p99:>10.0}");
+            println!("{workers:>8} {batch:>6} {rps:>10.1} {p50:>10.2} {p99:>10.2}");
         }
     }
-    println!("\n(each request = one full demo-net inference simulated on a Quark-4L core)");
+    println!("\n(each request = one demo-net inference on a persistent simulated Quark-4L core;");
+    println!(" timing resolved through the deterministic cache after the first batch)");
 }

@@ -5,14 +5,16 @@
 //! repro simulate --kernel <conv2d|gemm> --precision <fp32|int8|w1a1|w2a2|w2a2-novbp>
 //!                [--machine <ara-4l|quark-4l|quark-8l>] [--size N] [--channels C]
 //! repro crosscheck [--artifact artifacts/qgemm.hlo.txt] [--seed S]
-//! repro serve [--addr 127.0.0.1:7070] [--workers N] [--batch B]
+//! repro serve [--addr 127.0.0.1:7070] [--workers N] [--batch B] [--queue Q]
+//!             [--machine <ara-4l|quark-4l|quark-8l>]
 //! repro phys
 //! ```
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use crate::arch::MachineConfig;
 use crate::coordinator::{server, Coordinator, CoordinatorConfig};
@@ -251,6 +253,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(b) = flags.get("batch") {
         cfg.batch_size = b.parse()?;
+    }
+    if let Some(q) = flags.get("queue") {
+        cfg.max_queue = q.parse()?;
     }
     if let Some(m) = flags.get("machine") {
         cfg.machine = machine_by_name(m)?;

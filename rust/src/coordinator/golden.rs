@@ -7,7 +7,8 @@
 //! of the accumulators with the simulated `vand`/`vpopcnt`/`vshacc` pipeline.
 //! This closes the loop across all three layers of the stack.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 use crate::arch::MachineConfig;
 use crate::kernels::bitpack::setup_index_vector;

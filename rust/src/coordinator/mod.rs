@@ -8,31 +8,54 @@
 //!
 //! Flow:
 //! ```text
-//! clients → submit() → queue → batcher (size/timeout) → worker pool
-//!                                                (one simulated core each)
+//! clients → submit() → bounded queue → batcher (size/timeout) → worker pool
+//!               │ BUSY when full                    (one persistent core each)
+//!               └───────────────────────────────────────────────────────────
 //! ```
-//! Each worker owns a [`Sim`] and runs the configured model per request,
-//! reporting simulated cycles (device time at `freq_ghz`) plus host-side
-//! queueing/service times.
+//!
+//! Serving-path design (vs the original per-request loop):
+//!
+//! * **Persistent cores.** Each worker owns one [`Sim`] for its whole
+//!   lifetime ([`WorkerCore`]); between requests only the bump allocator is
+//!   rewound, so per-request `Sim` construction (VRF + 192 MiB of simulated
+//!   memory) is paid once.
+//! * **Deterministic timing cache.** Cycle counts of a `TimingOnly` run are
+//!   a pure function of `(net graph, precision, machine config)` — the
+//!   kernels are data-independent. The coordinator memoizes them in a
+//!   per-coordinator map keyed by structural fingerprints, so repeat requests
+//!   against the same deployment resolve timing with a lookup instead of a
+//!   multi-ms re-simulation (`benches/coordinator_throughput.rs` measures
+//!   the win).
+//! * **Real batched inference.** Requests that carry input bytes are run
+//!   through the functional executor (`SimMode::Full`) on the worker's
+//!   persistent core; the response carries the resulting logits and argmax.
+//!   Requests without input are timing-only probes.
+//! * **Backpressure + metrics.** The queue is bounded
+//!   ([`CoordinatorConfig::max_queue`]); `submit` rejects with
+//!   [`SubmitError::Busy`] when full. [`Coordinator::stats`] exposes queue
+//!   depth, served/rejected counts, cache hit/miss counts, latency
+//!   percentiles over a sliding window, and per-worker utilization.
 
 pub mod golden;
 pub mod server;
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::arch::MachineConfig;
 use crate::nn::model::{ModelRunner, Precision};
-use crate::nn::NetLayer;
+use crate::nn::{LayerKind, NetLayer};
 use crate::sim::{Sim, SimMode};
 
 /// One inference request (CIFAR-sized input codes).
 #[derive(Clone, Debug)]
 pub struct InferenceRequest {
     pub id: u64,
-    pub input: Vec<u8>,
+    /// Input activation codes (u8, up to 32·32·3 bytes; shorter inputs are
+    /// zero-padded). `None` requests timing only — no functional execution.
+    pub input: Option<Vec<u8>>,
 }
 
 /// Completed inference.
@@ -51,7 +74,32 @@ pub struct InferenceResponse {
     pub worker: usize,
     /// Batch this request was grouped into.
     pub batch_id: u64,
+    /// Whether `sim_cycles` came from the timing cache (vs a fresh run).
+    pub timing_cached: bool,
+    /// Output of the network's last layer for the submitted input (u8 codes
+    /// widened to f32 at integer precisions, raw floats at fp32). `None` for
+    /// timing-only requests.
+    pub logits: Option<Vec<f32>>,
+    /// Index of the largest logit (first wins on ties).
+    pub argmax: Option<usize>,
 }
+
+/// Why a submission was not accepted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The request queue is at capacity; back off and retry (wire: `BUSY`).
+    Busy { depth: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy { depth } => write!(f, "queue full (depth {depth})"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Coordinator configuration.
 #[derive(Clone)]
@@ -64,6 +112,9 @@ pub struct CoordinatorConfig {
     pub batch_size: usize,
     /// Max time the batcher waits to fill a batch.
     pub batch_timeout: Duration,
+    /// Queue bound: submissions beyond this depth are rejected with
+    /// [`SubmitError::Busy`].
+    pub max_queue: usize,
     /// Model graph to serve.
     pub net: Arc<Vec<NetLayer>>,
 }
@@ -77,6 +128,7 @@ impl CoordinatorConfig {
             workers: 2,
             batch_size: 4,
             batch_timeout: Duration::from_millis(20),
+            max_queue: 256,
             net: Arc::new(demo_net()),
         }
     }
@@ -87,7 +139,7 @@ impl CoordinatorConfig {
 /// interactive while exercising every kernel).
 pub fn demo_net() -> Vec<NetLayer> {
     use crate::kernels::Conv2dParams;
-    use crate::nn::{ConvLayer, LayerKind};
+    use crate::nn::ConvLayer;
     let conv = |name: &str, h: usize, cin: usize, cout: usize, stride: usize, q: bool| ConvLayer {
         name: name.into(),
         params: Conv2dParams { h, w: h, c_in: cin, c_out: cout, kh: 3, kw: 3, stride, pad: 1 },
@@ -105,6 +157,167 @@ pub fn demo_net() -> Vec<NetLayer> {
     ]
 }
 
+// ---- structural fingerprints (timing-cache keys) ----
+
+#[inline]
+fn fnv(h: &mut u64, v: u64) {
+    // FNV-1a over the 8 bytes of `v`.
+    for b in v.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+fn fnv_str(h: &mut u64, s: &str) {
+    fnv(h, s.len() as u64);
+    for &b in s.as_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Structural identity of a network graph: every field that can change the
+/// emitted instruction stream (shapes, layer kinds, wiring) is folded in.
+pub fn net_fingerprint(net: &[NetLayer]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, net.len() as u64);
+    for layer in net {
+        fnv(&mut h, layer.input as u64);
+        fnv(&mut h, layer.residual_from.map(|i| i as u64 + 1).unwrap_or(0));
+        match &layer.kind {
+            LayerKind::Conv(c) => {
+                fnv(&mut h, 1);
+                fnv_str(&mut h, &c.name);
+                let p = c.params;
+                for v in [p.h, p.w, p.c_in, p.c_out, p.kh, p.kw, p.stride, p.pad] {
+                    fnv(&mut h, v as u64);
+                }
+                fnv(&mut h, c.relu as u64);
+                fnv(&mut h, c.residual as u64);
+                fnv(&mut h, c.quantized as u64);
+            }
+            LayerKind::AvgPool { h: ph, w: pw, c } => {
+                fnv(&mut h, 2);
+                for v in [*ph, *pw, *c] {
+                    fnv(&mut h, v as u64);
+                }
+            }
+            LayerKind::Fc { k, n, name } => {
+                fnv(&mut h, 3);
+                fnv_str(&mut h, name);
+                fnv(&mut h, *k as u64);
+                fnv(&mut h, *n as u64);
+            }
+        }
+    }
+    h
+}
+
+/// Structural identity of a machine configuration: every timing-model knob.
+pub fn machine_fingerprint(cfg: &MachineConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv_str(&mut h, &cfg.name);
+    for v in [
+        cfg.lanes as u64,
+        cfg.vlen_bits as u64,
+        cfg.has_vfpu as u64,
+        cfg.has_quark_isa as u64,
+        cfg.freq_ghz.to_bits(),
+        cfg.axi_bytes_per_cycle as u64,
+        cfg.mem_latency,
+        cfg.dispatch_latency,
+        cfg.vstartup_latency,
+        cfg.chain_latency,
+        cfg.mask_elems_per_lane_cycle.to_bits(),
+        cfg.scalar_fp_latency,
+        cfg.scalar_mul_latency,
+        cfg.scalar_load_latency,
+        cfg.vq_depth as u64,
+    ] {
+        fnv(&mut h, v);
+    }
+    h
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct TimingKey {
+    net_fp: u64,
+    machine_fp: u64,
+    precision: Precision,
+}
+
+impl TimingKey {
+    fn of(cfg: &CoordinatorConfig) -> Self {
+        TimingKey {
+            net_fp: net_fingerprint(&cfg.net),
+            machine_fp: machine_fingerprint(&cfg.machine),
+            precision: cfg.precision,
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct TimingEntry {
+    sim_cycles: u64,
+}
+
+// ---- serving-metrics plumbing ----
+
+/// Sliding window of recent end-to-end latencies (µs) for percentiles.
+struct LatWindow {
+    cap: usize,
+    samples: VecDeque<u64>,
+}
+
+impl LatWindow {
+    fn new(cap: usize) -> Self {
+        LatWindow { cap, samples: VecDeque::with_capacity(cap) }
+    }
+
+    fn push(&mut self, us: u64) {
+        if self.samples.len() == self.cap {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(us);
+    }
+
+    /// Each p in [0,1]; zeros when no samples yet. One sort serves all
+    /// requested percentiles (this runs under the lock workers take per
+    /// response, so the hold time matters).
+    fn percentiles<const N: usize>(&self, ps: [f64; N]) -> [u64; N] {
+        if self.samples.is_empty() {
+            return [0; N];
+        }
+        let mut sorted: Vec<u64> = self.samples.iter().copied().collect();
+        sorted.sort_unstable();
+        ps.map(|p| {
+            let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+            sorted[idx.min(sorted.len() - 1)]
+        })
+    }
+}
+
+/// Snapshot of serving metrics (the extended `STATS` wire reply).
+#[derive(Clone, Debug)]
+pub struct CoordStats {
+    pub served: u64,
+    pub rejected: u64,
+    pub queue_depth: usize,
+    pub workers: usize,
+    /// Timing-cache hit/miss counts (one resolution per batch).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// End-to-end (queue + service) latency percentiles in µs over the
+    /// most recent `LAT_WINDOW` responses.
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    /// Fraction of wall-clock each worker spent serving batches.
+    pub utilization: Vec<f64>,
+}
+
+const LAT_WINDOW: usize = 4096;
+
 struct Queued {
     req: InferenceRequest,
     enqueued: Instant,
@@ -117,6 +330,14 @@ struct Shared {
     shutdown: AtomicBool,
     batch_counter: AtomicU64,
     served: AtomicU64,
+    rejected: AtomicU64,
+    timing_cache: Mutex<HashMap<TimingKey, TimingEntry>>,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    latencies: Mutex<LatWindow>,
+    /// Per-worker nanoseconds spent inside batch service.
+    busy_ns: Vec<AtomicU64>,
+    started: Instant,
 }
 
 /// The coordinator: owns the batcher + worker threads.
@@ -134,6 +355,13 @@ impl Coordinator {
             shutdown: AtomicBool::new(false),
             batch_counter: AtomicU64::new(0),
             served: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            timing_cache: Mutex::new(HashMap::new()),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            latencies: Mutex::new(LatWindow::new(LAT_WINDOW)),
+            busy_ns: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            started: Instant::now(),
         });
         let workers = (0..cfg.workers)
             .map(|wid| {
@@ -148,19 +376,59 @@ impl Coordinator {
         Coordinator { shared, cfg, workers }
     }
 
-    /// Submit a request; returns a receiver for the response.
-    pub fn submit(&self, req: InferenceRequest) -> mpsc::Receiver<InferenceResponse> {
+    /// Submit a request; returns a receiver for the response, or
+    /// [`SubmitError::Busy`] when the queue is at capacity.
+    pub fn submit(
+        &self,
+        req: InferenceRequest,
+    ) -> Result<mpsc::Receiver<InferenceResponse>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         let mut q = self.shared.queue.lock().unwrap();
+        if q.len() >= self.cfg.max_queue {
+            let depth = q.len();
+            drop(q);
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Busy { depth });
+        }
         q.push_back(Queued { req, enqueued: Instant::now(), reply: tx });
         drop(q);
         self.shared.available.notify_one();
-        rx
+        Ok(rx)
     }
 
     /// Requests served so far.
     pub fn served(&self) -> u64 {
         self.shared.served.load(Ordering::Relaxed)
+    }
+
+    /// Requests rejected by backpressure so far.
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the serving metrics.
+    pub fn stats(&self) -> CoordStats {
+        let queue_depth = self.shared.queue.lock().unwrap().len();
+        let [p50_us, p95_us, p99_us] =
+            self.shared.latencies.lock().unwrap().percentiles([0.50, 0.95, 0.99]);
+        let elapsed_ns = self.shared.started.elapsed().as_nanos().max(1) as f64;
+        CoordStats {
+            served: self.shared.served.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            queue_depth,
+            workers: self.cfg.workers,
+            cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
+            p50_us,
+            p95_us,
+            p99_us,
+            utilization: self
+                .shared
+                .busy_ns
+                .iter()
+                .map(|b| (b.load(Ordering::Relaxed) as f64 / elapsed_ns).min(1.0))
+                .collect(),
+        }
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
@@ -177,9 +445,64 @@ impl Coordinator {
     }
 }
 
-/// Worker: claims batches (size- or timeout-bounded) and simulates them on
-/// its own core.
+/// One worker's persistent simulated core. Constructed once per worker
+/// thread; between model runs only the bump allocator is rewound (the Sim's
+/// VRF, timing state, and 192 MiB memory arena are reused).
+struct WorkerCore {
+    sim: Sim,
+    heap_base: u64,
+}
+
+impl WorkerCore {
+    fn new(machine: MachineConfig) -> Self {
+        let sim = Sim::new(machine);
+        let heap_base = sim.machine.mem.brk();
+        WorkerCore { sim, heap_base }
+    }
+
+    fn rewind(&mut self) {
+        self.sim.machine.mem.reset_alloc_to(self.heap_base);
+    }
+
+    /// One `TimingOnly` pass over the configured net (cache-miss path).
+    fn timing_cycles(&mut self, cfg: &CoordinatorConfig) -> u64 {
+        self.rewind();
+        self.sim.set_mode(SimMode::TimingOnly);
+        let reports = ModelRunner::run(&mut self.sim, &cfg.net, cfg.precision, false);
+        reports.iter().map(|r| r.run.cycles).sum()
+    }
+
+    /// Functional (`Full`-mode) execution of the net on `input`; returns
+    /// (logits, argmax).
+    fn infer(&mut self, cfg: &CoordinatorConfig, input: &[u8]) -> (Vec<f32>, usize) {
+        self.rewind();
+        self.sim.set_mode(SimMode::Full);
+        let run =
+            ModelRunner::run_with_input(&mut self.sim, &cfg.net, cfg.precision, true, Some(input));
+        let logits: Vec<f32> = match cfg.precision {
+            Precision::Fp32 => self.sim.read_f32s(run.out_addr, run.out_elems),
+            _ => self
+                .sim
+                .read_u8s(run.out_addr, run.out_elems)
+                .iter()
+                .map(|&v| v as f32)
+                .collect(),
+        };
+        let mut argmax = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[argmax] {
+                argmax = i;
+            }
+        }
+        (logits, argmax)
+    }
+}
+
+/// Worker: claims batches (size- or timeout-bounded) and serves them on its
+/// persistent simulated core.
 fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
+    let mut core = WorkerCore::new(cfg.machine.clone());
+    let key = TimingKey::of(&cfg);
     loop {
         // Claim a batch.
         let mut batch = Vec::new();
@@ -215,27 +538,58 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
             }
         }
         let batch_id = shared.batch_counter.fetch_add(1, Ordering::Relaxed);
+        let busy_t0 = Instant::now();
 
-        // Serve the batch on this worker's simulated core.
+        // Resolve timing once per batch: cache hit is a map lookup, miss is
+        // one TimingOnly simulation whose result every later batch reuses.
+        let cached = shared.timing_cache.lock().unwrap().get(&key).copied();
+        let (sim_cycles, timing_cached) = match cached {
+            Some(e) => {
+                shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                (e.sim_cycles, true)
+            }
+            None => {
+                let c = core.timing_cycles(&cfg);
+                shared.cache_misses.fetch_add(1, Ordering::Relaxed);
+                shared.timing_cache.lock().unwrap().insert(key.clone(), TimingEntry { sim_cycles: c });
+                (c, false)
+            }
+        };
+        let device_us = sim_cycles as f64 / (cfg.machine.freq_ghz * 1e3);
+
+        // Serve the batch on the persistent core.
         for item in batch {
             let queue_time = item.enqueued.elapsed();
             let t0 = Instant::now();
-            let mut sim = Sim::new(cfg.machine.clone());
-            sim.set_mode(SimMode::TimingOnly);
-            let reports = ModelRunner::run(&mut sim, &cfg.net, cfg.precision, false);
-            let sim_cycles: u64 = reports.iter().map(|r| r.run.cycles).sum();
+            let (logits, argmax) = match &item.req.input {
+                Some(bytes) => {
+                    let (l, a) = core.infer(&cfg, bytes);
+                    (Some(l), Some(a))
+                }
+                None => (None, None),
+            };
+            let service_time = t0.elapsed();
             let resp = InferenceResponse {
                 id: item.req.id,
                 sim_cycles,
-                device_us: sim_cycles as f64 / (cfg.machine.freq_ghz * 1e3),
+                device_us,
                 queue_time,
-                service_time: t0.elapsed(),
+                service_time,
                 worker: wid,
                 batch_id,
+                timing_cached,
+                logits,
+                argmax,
             };
             shared.served.fetch_add(1, Ordering::Relaxed);
+            shared
+                .latencies
+                .lock()
+                .unwrap()
+                .push((queue_time + service_time).as_micros() as u64);
             let _ = item.reply.send(resp);
         }
+        shared.busy_ns[wid].fetch_add(busy_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 }
 
@@ -250,7 +604,7 @@ mod tests {
         cfg.batch_size = 4;
         let coord = Coordinator::start(cfg);
         let rxs: Vec<_> = (0..6)
-            .map(|i| coord.submit(InferenceRequest { id: i, input: vec![0u8; 32 * 32 * 3] }))
+            .map(|i| coord.submit(InferenceRequest { id: i, input: None }).unwrap())
             .collect();
         let mut responses: Vec<_> =
             rxs.into_iter().map(|rx| rx.recv_timeout(Duration::from_secs(120)).unwrap()).collect();
@@ -260,6 +614,7 @@ mod tests {
             assert_eq!(r.id, i as u64);
             assert!(r.sim_cycles > 0);
             assert!(r.device_us > 0.0);
+            assert!(r.logits.is_none(), "timing-only requests carry no logits");
         }
         // Batching grouped at least two requests somewhere.
         let max_batch = responses
@@ -270,5 +625,84 @@ mod tests {
         assert!(max_batch >= 2, "expected some batching, got max batch {max_batch}");
         assert_eq!(coord.served(), 6);
         coord.shutdown();
+    }
+
+    #[test]
+    fn timing_cache_converges_to_lookups() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 1;
+        cfg.batch_timeout = Duration::from_millis(1);
+        let coord = Coordinator::start(cfg);
+        // Sequential submissions: every batch after the first must hit.
+        let mut cycles = Vec::new();
+        for i in 0..5u64 {
+            let rx = coord.submit(InferenceRequest { id: i, input: None }).unwrap();
+            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            cycles.push((r.sim_cycles, r.timing_cached));
+        }
+        assert!(cycles.iter().all(|&(c, _)| c == cycles[0].0), "cached timing must be stable");
+        assert!(!cycles[0].1, "first batch is a miss");
+        assert!(cycles[1..].iter().all(|&(_, hit)| hit), "later batches must hit");
+        let s = coord.stats();
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.cache_hits, 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn real_inputs_produce_logits_that_depend_on_data() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 2;
+        let coord = Coordinator::start(cfg);
+        let n = 32 * 32 * 3;
+        let rx_a = coord.submit(InferenceRequest { id: 0, input: Some(vec![0u8; n]) }).unwrap();
+        let rx_b = coord.submit(InferenceRequest { id: 1, input: Some(vec![200u8; n]) }).unwrap();
+        let a = rx_a.recv_timeout(Duration::from_secs(300)).unwrap();
+        let b = rx_b.recv_timeout(Duration::from_secs(300)).unwrap();
+        let (la, lb) = (a.logits.unwrap(), b.logits.unwrap());
+        assert_eq!(la.len(), 100, "demo net classifies over 100 classes");
+        assert_eq!(lb.len(), 100);
+        assert!(a.argmax.unwrap() < 100 && b.argmax.unwrap() < 100);
+        assert_ne!(la, lb, "different inputs must produce different logits");
+        // Determinism: same input → same logits.
+        let rx_c = coord.submit(InferenceRequest { id: 2, input: Some(vec![200u8; n]) }).unwrap();
+        let c = rx_c.recv_timeout(Duration::from_secs(300)).unwrap();
+        assert_eq!(lb, c.logits.unwrap(), "same input must reproduce the same logits");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.max_queue = 0; // every submission rejects deterministically
+        let coord = Coordinator::start(cfg);
+        let err = coord.submit(InferenceRequest { id: 9, input: None }).unwrap_err();
+        assert!(matches!(err, SubmitError::Busy { .. }));
+        assert_eq!(coord.rejected(), 1);
+        assert_eq!(coord.served(), 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn fingerprints_separate_deployments() {
+        let net = demo_net();
+        let fp = net_fingerprint(&net);
+        assert_eq!(fp, net_fingerprint(&demo_net()), "fingerprint must be deterministic");
+        let mut other = demo_net();
+        if let LayerKind::Fc { n, .. } = &mut other.last_mut().unwrap().kind {
+            *n = 10;
+        }
+        assert_ne!(fp, net_fingerprint(&other), "shape change must change the key");
+        assert_ne!(
+            machine_fingerprint(&MachineConfig::quark(4)),
+            machine_fingerprint(&MachineConfig::quark(8)),
+        );
+        assert_ne!(
+            machine_fingerprint(&MachineConfig::quark(4)),
+            machine_fingerprint(&MachineConfig::ara(4)),
+        );
     }
 }

@@ -1,33 +1,45 @@
 //! Line-protocol TCP front-end for the coordinator.
 //!
-//! Protocol (text, one request per line):
+//! Protocol (text, one request per line — see `docs/serving.md`):
 //! ```text
 //! PING                      → PONG
-//! STATS                     → STATS served=<n>
-//! INFER <id>                → OK <id> cycles=<c> device_us=<t> worker=<w> batch=<b>
-//! INFER <id> <b0,b1,...>    → same, with explicit input bytes (comma-separated u8)
+//! STATS                     → STATS served=<n> rejected=<n> queue_depth=<n>
+//!                                   workers=<n> cache_hits=<n> cache_misses=<n>
+//!                                   p50_us=<n> p95_us=<n> p99_us=<n> util=<u0,u1,…>
+//! INFER <id>                → OK <id> cycles=<c> device_us=<t> worker=<w>
+//!                                   batch=<b> cached=<0|1>        (timing only)
+//! INFER <id> <b0,b1,...>    → same, plus ` argmax=<k> logits=<v0,v1,…>` —
+//!                             the input bytes are run through the functional
+//!                             executor and the real outputs returned
 //! QUIT                      → closes the connection
 //! ```
-//! (No JSON library exists in this offline environment; a line protocol keeps
-//! the wire format trivially testable with netcat.)
+//! Malformed requests answer `ERR <reason>`; a full queue answers
+//! `BUSY <reason>`. Neither kills the connection — clients keep the socket
+//! and retry. (No JSON library exists in this offline environment; a line
+//! protocol keeps the wire format trivially testable with netcat.)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use crate::error::Result;
 
-use super::{Coordinator, InferenceRequest};
+use super::{Coordinator, InferenceRequest, SubmitError};
+
+/// Hard cap on explicit input payloads (the CIFAR input plane the demo and
+/// ResNet graphs consume). Longer payloads are rejected, not truncated.
+pub const MAX_INPUT_BYTES: usize = 32 * 32 * 3;
 
 /// Serve until the process is killed. Binds `addr` (e.g. "127.0.0.1:7070").
 pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!(
-        "quark coordinator listening on {addr} ({} workers, machine {}, batch≤{})",
+        "quark coordinator listening on {addr} ({} workers, machine {}, batch≤{}, queue≤{})",
         coord.config().workers,
         coord.config().machine.name,
-        coord.config().batch_size
+        coord.config().batch_size,
+        coord.config().max_queue
     );
     for stream in listener.incoming() {
         let stream = stream?;
@@ -39,6 +51,22 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
         });
     }
     Ok(())
+}
+
+/// Parse the optional `INFER` input payload. `Ok(None)` = timing-only.
+fn parse_input(csv: Option<&str>) -> std::result::Result<Option<Vec<u8>>, String> {
+    let Some(csv) = csv else { return Ok(None) };
+    let mut bytes = Vec::new();
+    for tok in csv.split(',') {
+        match tok.trim().parse::<u8>() {
+            Ok(b) => bytes.push(b),
+            Err(_) => return Err(format!("bad input byte {tok:?} (want comma-separated u8)")),
+        }
+    }
+    if bytes.len() > MAX_INPUT_BYTES {
+        return Err(format!("input too large ({} > {MAX_INPUT_BYTES} bytes)", bytes.len()));
+    }
+    Ok(Some(bytes))
 }
 
 pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Result<()> {
@@ -54,7 +82,26 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
         let mut parts = line.split_whitespace();
         match parts.next().unwrap_or("") {
             "PING" => writeln!(writer, "PONG")?,
-            "STATS" => writeln!(writer, "STATS served={}", coord.served())?,
+            "STATS" => {
+                let s = coord.stats();
+                let util: Vec<String> =
+                    s.utilization.iter().map(|u| format!("{u:.2}")).collect();
+                writeln!(
+                    writer,
+                    "STATS served={} rejected={} queue_depth={} workers={} \
+                     cache_hits={} cache_misses={} p50_us={} p95_us={} p99_us={} util={}",
+                    s.served,
+                    s.rejected,
+                    s.queue_depth,
+                    s.workers,
+                    s.cache_hits,
+                    s.cache_misses,
+                    s.p50_us,
+                    s.p95_us,
+                    s.p99_us,
+                    util.join(",")
+                )?
+            }
             "QUIT" => break,
             "INFER" => {
                 let id: u64 = match parts.next().and_then(|s| s.parse().ok()) {
@@ -64,18 +111,41 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                         continue;
                     }
                 };
-                let input: Vec<u8> = parts
-                    .next()
-                    .map(|csv| csv.split(',').filter_map(|v| v.parse().ok()).collect())
-                    .unwrap_or_else(|| vec![0u8; 32 * 32 * 3]);
-                let rx = coord.submit(InferenceRequest { id, input });
-                match rx.recv() {
-                    Ok(r) => writeln!(
-                        writer,
-                        "OK {} cycles={} device_us={:.1} worker={} batch={}",
-                        r.id, r.sim_cycles, r.device_us, r.worker, r.batch_id
-                    )?,
-                    Err(_) => writeln!(writer, "ERR worker dropped")?,
+                let input = match parse_input(parts.next()) {
+                    Ok(v) => v,
+                    Err(reason) => {
+                        writeln!(writer, "ERR {reason}")?;
+                        continue;
+                    }
+                };
+                if parts.next().is_some() {
+                    writeln!(writer, "ERR trailing garbage after input")?;
+                    continue;
+                }
+                match coord.submit(InferenceRequest { id, input }) {
+                    Err(SubmitError::Busy { depth }) => {
+                        writeln!(writer, "BUSY queue full (depth {depth})")?
+                    }
+                    Ok(rx) => match rx.recv() {
+                        Ok(r) => {
+                            let mut reply = format!(
+                                "OK {} cycles={} device_us={:.1} worker={} batch={} cached={}",
+                                r.id,
+                                r.sim_cycles,
+                                r.device_us,
+                                r.worker,
+                                r.batch_id,
+                                r.timing_cached as u8
+                            );
+                            if let (Some(am), Some(lg)) = (r.argmax, r.logits.as_ref()) {
+                                let csv: Vec<String> =
+                                    lg.iter().map(|v| format!("{v}")).collect();
+                                reply.push_str(&format!(" argmax={am} logits={}", csv.join(",")));
+                            }
+                            writeln!(writer, "{reply}")?
+                        }
+                        Err(_) => writeln!(writer, "ERR worker dropped")?,
+                    },
                 }
             }
             other => writeln!(writer, "ERR unknown command {other}")?,
@@ -89,16 +159,29 @@ mod tests {
     use super::*;
     use crate::coordinator::CoordinatorConfig;
 
-    #[test]
-    fn tcp_roundtrip() {
-        let coord = Arc::new(Coordinator::start(CoordinatorConfig::demo()));
+    /// Spawn a handler for exactly one client connection; returns its addr.
+    fn one_shot_server(coord: Arc<Coordinator>) -> std::net::SocketAddr {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let server_coord = coord.clone();
         std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            let _ = handle_client(server_coord, stream);
+            let _ = handle_client(coord, stream);
         });
+        addr
+    }
+
+    fn small_cfg() -> CoordinatorConfig {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 2;
+        cfg.batch_timeout = Duration::from_millis(2);
+        cfg
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        let addr = one_shot_server(coord);
 
         let mut client = TcpStream::connect(addr).unwrap();
         writeln!(client, "PING").unwrap();
@@ -109,6 +192,72 @@ mod tests {
         let lines: Vec<String> = reader.lines().take(3).map(|l| l.unwrap()).collect();
         assert_eq!(lines[0], "PONG");
         assert!(lines[1].starts_with("OK 7 cycles="), "{}", lines[1]);
+        assert!(lines[1].contains(" cached="), "{}", lines[1]);
+        assert!(!lines[1].contains("logits="), "timing-only reply carries no logits: {}", lines[1]);
         assert!(lines[2].starts_with("STATS served="), "{}", lines[2]);
+        for field in ["rejected=", "queue_depth=", "cache_hits=", "p50_us=", "p99_us=", "util="] {
+            assert!(lines[2].contains(field), "missing {field}: {}", lines[2]);
+        }
+    }
+
+    #[test]
+    fn infer_with_input_returns_logits_and_argmax() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        // Full-size input (3072 bytes of 200) — real functional execution.
+        let csv: Vec<String> = (0..MAX_INPUT_BYTES).map(|_| "200".to_string()).collect();
+        writeln!(client, "INFER 11 {}", csv.join(",")).unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let line = reader.lines().next().unwrap().unwrap();
+        assert!(line.starts_with("OK 11 cycles="), "{line}");
+        assert!(line.contains(" argmax="), "{line}");
+        let logits_csv = line.split("logits=").nth(1).expect("logits field");
+        assert_eq!(logits_csv.split(',').count(), 100, "100-class logits");
+    }
+
+    #[test]
+    fn error_paths_keep_the_connection_alive() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        let oversized: Vec<String> = (0..MAX_INPUT_BYTES + 1).map(|_| "1".to_string()).collect();
+        writeln!(client, "INFER nope").unwrap(); // malformed id
+        writeln!(client, "INFER").unwrap(); // missing id
+        writeln!(client, "INFER 1 12,xx,13").unwrap(); // garbage CSV
+        writeln!(client, "INFER 2 {}", oversized.join(",")).unwrap(); // oversized
+        writeln!(client, "INFER 3 1,2 junk").unwrap(); // trailing garbage
+        writeln!(client, "FROB 1").unwrap(); // unknown command
+        writeln!(client, "PING").unwrap(); // connection must still work
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(7).map(|l| l.unwrap()).collect();
+        assert!(lines[0].starts_with("ERR missing/invalid id"), "{}", lines[0]);
+        assert!(lines[1].starts_with("ERR missing/invalid id"), "{}", lines[1]);
+        assert!(lines[2].starts_with("ERR bad input byte"), "{}", lines[2]);
+        assert!(lines[3].starts_with("ERR input too large"), "{}", lines[3]);
+        assert!(lines[4].starts_with("ERR trailing garbage"), "{}", lines[4]);
+        assert!(lines[5].starts_with("ERR unknown command FROB"), "{}", lines[5]);
+        assert_eq!(lines[6], "PONG", "connection survived all error paths");
+    }
+
+    #[test]
+    fn busy_reply_when_queue_full() {
+        let mut cfg = small_cfg();
+        cfg.max_queue = 0; // deterministic rejection
+        let coord = Arc::new(Coordinator::start(cfg));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, "INFER 5").unwrap();
+        writeln!(client, "PING").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(2).map(|l| l.unwrap()).collect();
+        assert!(lines[0].starts_with("BUSY queue full"), "{}", lines[0]);
+        assert_eq!(lines[1], "PONG", "BUSY must not kill the connection");
     }
 }

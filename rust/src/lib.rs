@@ -24,6 +24,7 @@
 pub mod arch;
 pub mod cli;
 pub mod coordinator;
+pub mod error;
 pub mod isa;
 pub mod kernels;
 pub mod nn;

@@ -6,6 +6,6 @@
 //!   * `serve`     — start the batching inference coordinator
 //!   * `crosscheck`— simulator vs PJRT golden-model numeric check
 
-fn main() -> anyhow::Result<()> {
+fn main() -> quark::error::Result<()> {
     quark::cli::main()
 }

@@ -8,5 +8,5 @@
 pub mod model;
 pub mod resnet;
 
-pub use model::{LayerReport, ModelRunner, Precision};
+pub use model::{LayerReport, ModelRun, ModelRunner, Precision};
 pub use resnet::{resnet18_cifar, ConvLayer, LayerKind, NetLayer};

@@ -17,7 +17,10 @@ use crate::sim::{Sim, Stats};
 use super::resnet::{LayerKind, NetLayer};
 
 /// Execution precision for a model run.
-#[derive(Clone, Copy, Debug, PartialEq)]
+///
+/// `Eq + Hash` so precisions can key the coordinator's timing cache (the
+/// enum carries only integers and booleans).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// FP32 baseline (requires the vector FPU — Ara).
     Fp32,
@@ -55,6 +58,27 @@ pub fn lcg(seed: &mut u64) -> u64 {
     *seed >> 33
 }
 
+/// Result of a whole-model run: the per-layer reports plus where the final
+/// feature map (the logits, for classifier graphs) landed in simulated
+/// memory — the serving layer reads real outputs from there.
+#[derive(Clone, Debug)]
+pub struct ModelRun {
+    pub reports: Vec<LayerReport>,
+    /// Simulated address of the last layer's output buffer.
+    pub out_addr: u64,
+    /// Logical element count of the last layer's output (e.g. class count).
+    pub out_elems: usize,
+}
+
+/// Logical output element count of one layer.
+fn layer_out_elems(kind: &LayerKind) -> usize {
+    match kind {
+        LayerKind::Conv(c) => c.params.out_h() * c.params.out_w() * c.params.c_out,
+        LayerKind::AvgPool { c, .. } => *c,
+        LayerKind::Fc { n, .. } => *n,
+    }
+}
+
 pub struct ModelRunner;
 
 impl ModelRunner {
@@ -68,6 +92,22 @@ impl ModelRunner {
         precision: Precision,
         write_data: bool,
     ) -> Vec<LayerReport> {
+        Self::run_with_input(sim, net, precision, write_data, None).reports
+    }
+
+    /// Like [`Self::run`], but with an optional explicit network input
+    /// (CIFAR-sized u8 codes; shorter inputs are zero-padded, longer ones
+    /// truncated). Synthetic weights are drawn from the same deterministic
+    /// stream whether or not an input is supplied, so two runs differ only
+    /// in the input feature map. Returns the output buffer location so
+    /// callers can read real logits after a `Full`-mode run.
+    pub fn run_with_input(
+        sim: &mut Sim,
+        net: &[NetLayer],
+        precision: Precision,
+        write_data: bool,
+        input: Option<&[u8]>,
+    ) -> ModelRun {
         match precision {
             Precision::Fp32 => assert!(sim.cfg.has_vfpu, "FP32 model needs Ara"),
             Precision::Sub { abits, wbits, .. } => {
@@ -89,17 +129,21 @@ impl ModelRunner {
         let input_elems = 32 * 32 * 3;
         let in_addr = sim.alloc((input_elems * esz) as u64);
         if write_data {
+            // Draw the synthetic input even when an explicit one overrides it,
+            // so the weight streams below are identical either way.
+            let mut codes: Vec<u8> =
+                (0..input_elems).map(|_| (lcg(&mut seed) % 256) as u8).collect();
+            if let Some(bytes) = input {
+                for (i, c) in codes.iter_mut().enumerate() {
+                    *c = bytes.get(i).copied().unwrap_or(0);
+                }
+            }
             match precision {
                 Precision::Fp32 => {
-                    let vals: Vec<f32> =
-                        (0..input_elems).map(|_| (lcg(&mut seed) % 256) as f32 / 255.0).collect();
+                    let vals: Vec<f32> = codes.iter().map(|&c| c as f32 / 255.0).collect();
                     sim.write_f32s(in_addr, &vals);
                 }
-                _ => {
-                    let vals: Vec<u8> =
-                        (0..input_elems).map(|_| (lcg(&mut seed) % 256) as u8).collect();
-                    sim.write_bytes(in_addr, &vals);
-                }
+                _ => sim.write_bytes(in_addr, &codes),
             }
         }
         let mut maps: Vec<u64> = vec![in_addr];
@@ -207,10 +251,22 @@ impl ModelRunner {
                         Precision::Fp32 => {
                             let w = sim.alloc((k * n * 4) as u64);
                             let b = sim.alloc((n * 4) as u64);
+                            if write_data {
+                                let wv: Vec<f32> = (0..k * n)
+                                    .map(|_| (lcg(&mut seed) % 200) as f32 / 1000.0 - 0.1)
+                                    .collect();
+                                sim.write_f32s(w, &wv);
+                                sim.write_f32s(b, &vec![0.01; *n]);
+                            }
                             matmul_f32(sim, 1, *k, *n, input, w, b, out, false)
                         }
                         Precision::Int8 => {
                             let w = sim.alloc((k * n) as u64);
+                            if write_data {
+                                let wv: Vec<i8> =
+                                    (0..k * n).map(|_| (lcg(&mut seed) % 256) as i8).collect();
+                                sim.write_i8(w, &wv);
+                            }
                             let rq = Self::rqbuf(sim, *n, *k, false);
                             matmul_int8(sim, 1, *k, *n, input, w, &rq, out)
                         }
@@ -242,7 +298,8 @@ impl ModelRunner {
             let stats = sim.stats().delta_since(&before);
             reports.push(LayerReport { name, quantized, run, stats });
         }
-        reports
+        let out_elems = net.last().map(|l| layer_out_elems(&l.kind)).unwrap_or(input_elems);
+        ModelRun { reports, out_addr: *maps.last().unwrap(), out_elems }
     }
 
     /// Synthetic per-channel requant parameters that keep code values in a

@@ -8,7 +8,8 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::error::{Context, Result};
 
 /// A compiled AOT artifact (one HLO module → one PJRT executable).
 pub struct Artifact {

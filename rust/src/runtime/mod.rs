@@ -6,7 +6,20 @@
 //!
 //! This is the only place Python-produced bits enter the Rust process, and it
 //! happens at load time: the request path never touches Python.
+//!
+//! The `xla` crate is not vendorable in the offline build environment, so the
+//! real implementation is gated behind the `pjrt` cargo feature (which also
+//! requires adding `xla` to `[dependencies]`). Without it, [`stub`] provides
+//! the same API surface: `Runtime::cpu()` returns an error explaining the
+//! situation, and every golden-artifact consumer (tests, `repro crosscheck`)
+//! degrades to a skip/diagnostic instead of a build failure.
 
+#[cfg(feature = "pjrt")]
 mod executable;
-
+#[cfg(feature = "pjrt")]
 pub use executable::{Artifact, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Artifact, Runtime};

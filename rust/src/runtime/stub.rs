@@ -1,0 +1,63 @@
+//! Offline stand-in for the PJRT runtime (built when the `pjrt` feature is
+//! off). Same API as `executable.rs`; every entry point reports that the
+//! golden-model backend is unavailable in this build. Integration tests
+//! already skip when `artifacts/` is missing, so a fresh offline checkout
+//! stays green.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::error::Result;
+
+const UNAVAILABLE: &str = "PJRT runtime not built: enable the `pjrt` cargo feature \
+     (requires a vendored `xla` crate) to run golden-model cross-checks";
+
+/// A compiled AOT artifact (one HLO module → one PJRT executable).
+pub struct Artifact {
+    /// Path the HLO text was loaded from (for diagnostics).
+    pub path: PathBuf,
+}
+
+impl Artifact {
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        Err(crate::anyhow!("{UNAVAILABLE}"))
+    }
+
+    pub fn run_i32(&self, _inputs: &[(&[i32], &[usize])]) -> Result<Vec<Vec<i32>>> {
+        Err(crate::anyhow!("{UNAVAILABLE}"))
+    }
+
+    pub fn run_i32_to_f32(&self, _inputs: &[(&[i32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        Err(crate::anyhow!("{UNAVAILABLE}"))
+    }
+}
+
+/// PJRT runtime stub: construction always fails with a clear message.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Err(crate::anyhow!("{UNAVAILABLE}"))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load(&self, _path: impl AsRef<Path>) -> Result<Arc<Artifact>> {
+        Err(crate::anyhow!("{UNAVAILABLE}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = Runtime::cpu().err().expect("stub must not construct");
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Stress: many concurrent submitters against a small worker pool with a
+//! small bounded queue — no deadlock, every accepted request answered,
+//! `served()` consistent with the accepted-submission count, and
+//! backpressure visible under load.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use quark::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest, SubmitError};
+
+const SUBMITTERS: usize = 32;
+const PER_SUBMITTER: u64 = 8;
+
+#[test]
+fn concurrent_submitters_all_get_answers() {
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.workers = 3;
+    cfg.batch_size = 8;
+    cfg.batch_timeout = Duration::from_millis(2);
+    cfg.max_queue = 16; // small on purpose: exercises the BUSY/retry path
+    let coord = Arc::new(Coordinator::start(cfg));
+
+    // Warm the timing cache so the storm measures the steady-state path.
+    coord
+        .submit(InferenceRequest { id: u64::MAX, input: None })
+        .unwrap()
+        .recv_timeout(Duration::from_secs(120))
+        .unwrap();
+
+    let handles: Vec<_> = (0..SUBMITTERS)
+        .map(|t| {
+            let coord = coord.clone();
+            std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                for k in 0..PER_SUBMITTER {
+                    let id = (t as u64) * PER_SUBMITTER + k;
+                    // Retry on backpressure until accepted.
+                    let rx = loop {
+                        match coord.submit(InferenceRequest { id, input: None }) {
+                            Ok(rx) => break rx,
+                            Err(SubmitError::Busy { .. }) => {
+                                std::thread::sleep(Duration::from_millis(1))
+                            }
+                        }
+                    };
+                    let resp = rx
+                        .recv_timeout(Duration::from_secs(120))
+                        .expect("response must arrive (no deadlock)");
+                    assert_eq!(resp.id, id);
+                    assert!(resp.sim_cycles > 0);
+                    ids.push(resp.id);
+                }
+                ids
+            })
+        })
+        .collect();
+
+    let mut all_ids: Vec<u64> = Vec::new();
+    for h in handles {
+        all_ids.extend(h.join().expect("submitter thread must not panic"));
+    }
+    all_ids.sort_unstable();
+    let total = (SUBMITTERS as u64) * PER_SUBMITTER;
+    assert_eq!(all_ids.len() as u64, total, "every request answered exactly once");
+    for (i, &id) in all_ids.iter().enumerate() {
+        assert_eq!(id, i as u64, "ids cover the full range with no dupes/losses");
+    }
+
+    // served() counts exactly the accepted submissions (storm + warmup).
+    assert_eq!(coord.served(), total + 1);
+
+    let s = coord.stats();
+    assert_eq!(s.queue_depth, 0, "queue drains completely");
+    assert_eq!(s.cache_misses, 1, "only the warmup batch simulates timing");
+    assert!(s.cache_hits >= 1, "the storm is served from the timing cache");
+    assert!(s.utilization.len() == 3);
+
+    let coord = Arc::try_unwrap(coord).ok().expect("all clients done");
+    coord.shutdown();
+}

@@ -1,0 +1,204 @@
+//! Differential testing of the re-quantization / rescaling path
+//! (`quant/requant.rs` + `kernels/requantize.rs` + the `vshacc` plane
+//! weighting) against naive i128 host models.
+//!
+//! Strategy (same spirit as `exec_differential.rs`): pick scale factors that
+//! are exact powers of two and accumulators small enough that every f32 step
+//! of the golden sequence is exact (|values| < 2²³ — the paper's real
+//! accumulators are ≪ that: ACC ≤ K·3·3 ≈ 10⁴ at K = 1152). Then the whole
+//! rescale collapses to an integer shift-round-clamp, which a deliberately
+//! naive i128 model computes with no floating point at all. Accumulator
+//! magnitudes are swept per SEW grid (E8/E16/E32) and shift amounts 0..=12.
+
+mod support;
+
+use quark::arch::MachineConfig;
+use quark::isa::instr::{VIOp, VOp};
+use quark::isa::reg::VReg;
+use quark::isa::vtype::{Lmul, Sew};
+use quark::kernels::requantize::{
+    emit_asum_preload, emit_requant_channel_block, emit_requant_setup, RqBuf,
+};
+use quark::quant::{requantize_golden, RequantParams};
+use quark::sim::Sim;
+use support::run_cases;
+
+/// Naive i128 round-half-even of `acc / 2^s` (no floating point).
+fn round_half_even_shift(acc: i128, s: u32) -> i128 {
+    if s == 0 {
+        return acc;
+    }
+    let q = acc >> s; // floor, also for negatives
+    let r = acc - (q << s); // remainder in [0, 2^s)
+    let half = 1i128 << (s - 1);
+    if r > half {
+        q + 1
+    } else if r < half {
+        q
+    } else if q & 1 == 1 {
+        q + 1
+    } else {
+        q
+    }
+}
+
+/// The full naive model of the rescale: `(acc - asum) / 2^s`, round to
+/// nearest (ties to even), clamp onto the `[0, qmax]` output grid.
+fn naive_requant_i128(acc: i128, asum: i128, s: u32, qmax: i128) -> u8 {
+    let rounded = round_half_even_shift(acc - asum, s);
+    rounded.clamp(0, qmax) as u8
+}
+
+/// Accumulator magnitude bound per SEW grid, capped so every f32 step stays
+/// exact (see module docs).
+fn acc_bound(sew: Sew) -> i64 {
+    match sew.bits() {
+        8 => 127,
+        16 => 32_767,
+        _ => (1 << 22) - 1,
+    }
+}
+
+#[test]
+fn requantize_golden_matches_naive_i128_model() {
+    run_cases(200, |g| {
+        let sew = *g.pick(&[Sew::E8, Sew::E16, Sew::E32]);
+        let bound = acc_bound(sew);
+        let s = g.range(0, 12) as u32;
+        let out_bits = *g.pick(&[1u8, 2, 4, 8]);
+        let qmax = (1i128 << out_bits) - 1;
+        let acc = g.range(0, 2 * bound as u64) as i64 - bound;
+        let asum = g.range(0, bound as u64) as i64;
+        let p = RequantParams {
+            alpha: (2f32).powi(-(s as i32)),
+            beta: -(2f32).powi(-(s as i32)),
+            bias: 0.0,
+            qmax: qmax as f32,
+            res_scale: 0.0,
+        };
+        let got = requantize_golden(acc, asum, 0, &p);
+        let want = naive_requant_i128(acc as i128, asum as i128, s, qmax);
+        assert_eq!(
+            got, want,
+            "acc={acc} asum={asum} shift={s} qmax={qmax} sew={}",
+            sew.bits()
+        );
+    });
+}
+
+#[test]
+fn emitted_requant_kernel_matches_naive_i128_model() {
+    // The simulated scalar-FP instruction stream, the f32 host oracle, and
+    // the integer model must all agree — sweeping shift per channel.
+    run_cases(25, |g| {
+        let mut sim = Sim::with_memory(MachineConfig::quark(4), 1 << 20);
+        let n = g.usize(1, 6); // channels, each with its own shift
+        let px = g.usize(1, 8); // pixels per block
+        let shifts: Vec<u32> = (0..n).map(|_| g.range(0, 12) as u32).collect();
+        let alphas: Vec<f32> = shifts.iter().map(|&s| (2f32).powi(-(s as i32))).collect();
+        let betas: Vec<f32> = shifts.iter().map(|&s| -(2f32).powi(-(s as i32))).collect();
+        let biases = vec![0.0f32; n];
+        let qmax = 255.0f32;
+        let rq = RqBuf::create(&mut sim, &alphas, &betas, &biases, qmax, 0.0);
+        let consts = sim.alloc(16);
+
+        let bound = (1i64 << 22) - 1;
+        let accs: Vec<i32> =
+            (0..px).map(|_| (g.range(0, 2 * bound as u64) as i64 - bound) as i32).collect();
+        let asums: Vec<i32> = (0..px).map(|_| g.range(0, bound as u64) as i32).collect();
+
+        let acc_buf = sim.alloc((px * 8) as u64);
+        let asum_buf = sim.alloc((px * 4) as u64);
+        let out_buf = sim.alloc((n * px) as u64);
+        for t in 0..px {
+            sim.write_i32s(acc_buf + (t * 8) as u64, &[accs[t]]);
+            sim.write_i32s(asum_buf + (t * 4) as u64, &[asums[t]]);
+        }
+
+        emit_requant_setup(&mut sim, &rq, consts);
+        emit_asum_preload(&mut sim, px, |t| asum_buf + (t * 4) as u64);
+        for j in 0..n {
+            let out_base = out_buf + (j * px) as u64;
+            emit_requant_channel_block(
+                &mut sim,
+                &rq,
+                j,
+                px,
+                |t| acc_buf + (t * 8) as u64,
+                true,
+                None,
+                |t| out_base + t as u64,
+            );
+        }
+
+        for j in 0..n {
+            for t in 0..px {
+                let got = sim.read_u8s(out_buf + (j * px + t) as u64, 1)[0];
+                let want =
+                    naive_requant_i128(accs[t] as i128, asums[t] as i128, shifts[j], 255);
+                assert_eq!(
+                    got, want,
+                    "channel {j} (shift {}) pixel {t}: acc={} asum={}",
+                    shifts[j], accs[t], asums[t]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn multi_plane_shacc_rescaling_matches_naive_i128() {
+    // The sub-byte kernels rescale bit-plane partial products with
+    // `vshacc.vi` (acc = (acc << shamt) + popcnt). Chain several planes and
+    // compare the final accumulator against a naive i128 interpreter, at
+    // every SEW and shift amount; at E64 (the kernels' working width,
+    // where nothing wraps) additionally check the closed-form
+    // Σ popcount·2^weight the quantization math assumes.
+    run_cases(40, |g| {
+        let sew = *g.pick(&[Sew::E8, Sew::E16, Sew::E32, Sew::E64]);
+        let bits = sew.bits();
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        let mut sim = Sim::with_memory(MachineConfig::quark(4), 1 << 20);
+        let vl = g.usize(1, 4096 / bits);
+        sim.vsetvli(vl as u64, sew, Lmul::M1);
+        let planes = g.usize(2, 4);
+        let mut avals = vec![vec![0u64; vl]; planes];
+        let mut wvals = vec![vec![0u64; vl]; planes];
+        let mut shifts = Vec::with_capacity(planes);
+        sim.v(VOp::MvVI { vd: VReg(10), imm: 0 });
+        for p in 0..planes {
+            let sh = g.range(0, 3) as u8;
+            shifts.push(sh);
+            for i in 0..vl {
+                avals[p][i] = g.u64();
+                wvals[p][i] = g.u64();
+                sim.machine.vset(VReg(2), i, sew.bytes(), avals[p][i]);
+                sim.machine.vset(VReg(3), i, sew.bytes(), wvals[p][i]);
+            }
+            sim.v(VOp::IVV { op: VIOp::And, vd: VReg(4), vs2: VReg(2), vs1: VReg(3) });
+            sim.v(VOp::Popcnt { vd: VReg(5), vs2: VReg(4) });
+            sim.v(VOp::Shacc { vd: VReg(10), vs2: VReg(5), shamt: sh });
+        }
+        for i in 0..vl {
+            // Naive i128 chain model with SEW wrap-around.
+            let mut acc: i128 = 0;
+            let mut popcounts = Vec::with_capacity(planes);
+            for p in 0..planes {
+                let pc = (avals[p][i] & wvals[p][i] & mask).count_ones() as i128;
+                popcounts.push(pc);
+                acc = (((acc << shifts[p]) & mask as i128) + pc) & mask as i128;
+            }
+            let got = sim.machine.vget(VReg(10), i, sew.bytes());
+            assert_eq!(got, acc as u64, "elem {i} sew={bits} shifts={shifts:?}");
+            if bits == 64 {
+                // No wrap possible: the chain equals the weighted plane sum.
+                let mut weighted: i128 = 0;
+                for p in 0..planes {
+                    let later: u32 = shifts[p + 1..].iter().map(|&s| s as u32).sum();
+                    weighted += popcounts[p] << later;
+                }
+                assert_eq!(got as i128, weighted, "closed-form plane weighting, elem {i}");
+            }
+        }
+    });
+}
