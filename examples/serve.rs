@@ -18,8 +18,8 @@ fn main() {
     cfg.batch_size = 4;
     cfg.batch_timeout = Duration::from_millis(10);
     println!(
-        "coordinator: {} workers ({}), precision {:?}, batch ≤ {}, queue ≤ {}",
-        cfg.workers, cfg.machine.name, cfg.precision, cfg.batch_size, cfg.max_queue
+        "coordinator: {} workers ({}), schedule {}, batch ≤ {}, queue ≤ {}",
+        cfg.workers, cfg.machine.name, cfg.schedule.label(), cfg.batch_size, cfg.max_queue
     );
     let coord = Coordinator::start(cfg);
 
@@ -28,7 +28,11 @@ fn main() {
     let n = 64u64;
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
-        .map(|id| coord.submit(InferenceRequest { id, input: None }).expect("queue has room"))
+        .map(|id| {
+            coord
+                .submit(InferenceRequest { id, input: None, schedule: None })
+                .expect("queue has room")
+        })
         .collect();
     let mut responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
     let wall = t0.elapsed();
@@ -63,7 +67,7 @@ fn main() {
     let input_b = vec![200u8; 32 * 32 * 3];
     for (label, input) in [("zeros", input_a), ("bright", input_b)] {
         let rx = coord
-            .submit(InferenceRequest { id: 1000, input: Some(input) })
+            .submit(InferenceRequest { id: 1000, input: Some(input), schedule: None })
             .expect("queue has room");
         let r = rx.recv().unwrap();
         println!(

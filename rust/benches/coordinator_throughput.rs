@@ -20,8 +20,8 @@ fn per_request_sim_baseline(n: u64) -> f64 {
     for _ in 0..n {
         let mut sim = Sim::new(cfg.machine.clone());
         sim.set_mode(SimMode::TimingOnly);
-        let reports = ModelRunner::run(&mut sim, &cfg.net, cfg.precision, false);
-        sink += reports.iter().map(|r| r.run.cycles).sum::<u64>();
+        let run = ModelRunner::run_scheduled(&mut sim, &cfg.net, &cfg.schedule, false, None);
+        sink += run.reports.iter().map(|r| r.run.cycles).sum::<u64>();
     }
     assert!(sink > 0);
     n as f64 / t0.elapsed().as_secs_f64()
@@ -36,13 +36,13 @@ fn run(workers: usize, batch: usize, n: u64) -> (f64, f64, f64) {
     let coord = Coordinator::start(cfg);
     // Warm the timing cache so the sweep measures the steady state.
     coord
-        .submit(InferenceRequest { id: u64::MAX, input: None })
+        .submit(InferenceRequest { id: u64::MAX, input: None, schedule: None })
         .unwrap()
         .recv()
         .unwrap();
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
-        .map(|id| coord.submit(InferenceRequest { id, input: None }).unwrap())
+        .map(|id| coord.submit(InferenceRequest { id, input: None, schedule: None }).unwrap())
         .collect();
     let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
     let wall = t0.elapsed().as_secs_f64();

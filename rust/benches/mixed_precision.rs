@@ -1,0 +1,34 @@
+//! Bench: the schedule space the paper motivates — whole-network ResNet-18
+//! cycles under uniform Int8, uniform Int2 (w2a2), and the SPEED-style
+//! mixed per-layer schedule (first-stage convs + classifier at 8-bit),
+//! all on the same simulated Quark-4L core.
+//!
+//! Plain `harness = false` binary (criterion is unavailable offline); prints
+//! the per-layer table and asserts the headline property: the mixed
+//! schedule's cycle count lands strictly between the uniform baselines.
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rep = quark::report::mixed::generate_default();
+    let elapsed = t0.elapsed();
+    println!("{}", rep.markdown());
+    let _ = quark::report::write_report("mixed.md", &rep.markdown());
+    let _ = quark::report::write_report("mixed.csv", &rep.csv());
+
+    println!("--- bench meta ---");
+    println!(
+        "mixed-schedule sweep wall time: {:.1}s (3 full-network simulations on {})",
+        elapsed.as_secs_f64(),
+        rep.machine
+    );
+    let (i8c, i2c, mxc) = (rep.int8_total, rep.int2_total, rep.mixed_total);
+    println!("uniform int8 : {i8c:>12} cycles (1.00x)");
+    println!("mixed        : {mxc:>12} cycles ({:.2}x vs int8)", i8c as f64 / mxc as f64);
+    println!("uniform w2a2 : {i2c:>12} cycles ({:.2}x vs int8)", i8c as f64 / i2c as f64);
+    assert!(
+        i2c < mxc && mxc < i8c,
+        "mixed schedule must land between the uniform baselines: {i2c} < {mxc} < {i8c}"
+    );
+}

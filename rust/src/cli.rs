@@ -1,14 +1,20 @@
 //! Hand-rolled CLI (no clap in this offline environment).
 //!
 //! ```text
-//! repro report <fig3|fig4|table1|table2|fig5|summary|all> [--fast]
+//! repro report <fig3|fig4|mixed|table1|table2|fig5|summary|all> [--fast]
 //! repro simulate --kernel <conv2d|gemm> --precision <fp32|int8|w1a1|w2a2|w2a2-novbp>
 //!                [--machine <ara-4l|quark-4l|quark-8l>] [--size N] [--channels C]
 //! repro crosscheck [--artifact artifacts/qgemm.hlo.txt] [--seed S]
 //! repro serve [--addr 127.0.0.1:7070] [--workers N] [--batch B] [--queue Q]
 //!             [--machine <ara-4l|quark-4l|quark-8l>]
+//!             [--precision <spec>]      e.g. --precision "w2a2;c1=int8;fc=int8"
 //! repro phys
 //! ```
+//!
+//! The serve `--precision` spec sets the deployment's default precision
+//! schedule (`default[;layer=precision…]` — see
+//! [`crate::nn::model::PrecisionMap::parse`]); clients can still override it
+//! per request with the `prec=` wire field (`docs/serving.md`).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -18,6 +24,7 @@ use crate::error::{Context, Result};
 
 use crate::arch::MachineConfig;
 use crate::coordinator::{server, Coordinator, CoordinatorConfig};
+use crate::nn::model::{Precision, PrecisionMap};
 use crate::nn::resnet::resnet18_cifar;
 use crate::report;
 
@@ -96,7 +103,17 @@ fn cmd_report(which: &str, flags: &HashMap<String, String>) -> Result<()> {
             report::fig4::generate_default()
         }
     };
+    let run_mixed = || {
+        eprintln!("[mixed] ResNet-18 schedule sweep: uniform int8 / uniform w2a2 / mixed…");
+        report::mixed::generate(&net)
+    };
     match which {
+        "mixed" => {
+            let rep = run_mixed();
+            println!("{}", rep.markdown());
+            report::write_report("mixed.md", &rep.markdown())?;
+            report::write_report("mixed.csv", &rep.csv())?;
+        }
         "fig3" => {
             let fig = run_fig3();
             println!("{}", fig.markdown());
@@ -132,8 +149,12 @@ fn cmd_report(which: &str, flags: &HashMap<String, String>) -> Result<()> {
             let rows = report::table1::generate(std::path::Path::new("artifacts/table1.tsv"));
             let s = report::summary::generate(&fig3, &fig4);
             if which == "all" {
+                let mixed = run_mixed();
                 println!("{}", fig3.markdown());
                 println!("{}", fig4.markdown());
+                println!("{}", mixed.markdown());
+                report::write_report("mixed.md", &mixed.markdown())?;
+                report::write_report("mixed.csv", &mixed.csv())?;
                 println!("{}", report::table1::markdown(&rows));
                 println!("{}", report::table2::markdown(&phys));
                 println!("{}", report::table2::fig5_markdown(&phys));
@@ -192,18 +213,16 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             let rq = RqBuf::create(&mut sim, &vec![0.01; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
             conv2d_int8(&mut sim, &p, fm_in, w, &rq, out, None)
         }
-        w => {
-            let (bits, vbp): (u8, bool) = match w {
-                "w1a1" => (1, true),
-                "w2a2" => (2, true),
-                "w2a2-novbp" => (2, false),
-                other => bail!("unknown precision {other}"),
+        spec => {
+            let (abits, wbits, vbp) = match Precision::parse(spec) {
+                Ok(Precision::Sub { abits, wbits, use_vbitpack }) => (abits, wbits, use_vbitpack),
+                _ => bail!("unknown precision {spec} (fp32, int8, or wNaM[-novbp])"),
             };
             let block = crate::kernels::conv2d::bitserial_block(machine.vlen_bits, n);
-            let wpk = pack_weight_planes(&vec![0u8; k * n], k, n, bits, block);
+            let wpk = pack_weight_planes(&vec![0u8; k * n], k, n, wbits, block);
             let w = sim.alloc(wpk.byte_len() as u64);
             let rq = RqBuf::create(&mut sim, &vec![0.01; n], &vec![0.0; n], &vec![0.0; n], 255.0, 0.0);
-            conv2d_bitserial(&mut sim, &p, bits, fm_in, &wpk, w, &rq, out, None, vbp, idx)
+            conv2d_bitserial(&mut sim, &p, abits, fm_in, &wpk, w, &rq, out, None, vbp, idx)
         }
     };
     let stats = sim.stats().delta_since(&before);
@@ -259,6 +278,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(m) = flags.get("machine") {
         cfg.machine = machine_by_name(m)?;
+    }
+    if let Some(spec) = flags.get("precision") {
+        match PrecisionMap::parse(spec) {
+            Ok(map) => cfg.schedule = map,
+            Err(e) => bail!("bad --precision: {e}"),
+        }
+    }
+    if let Err(e) = cfg
+        .schedule
+        .validate(&cfg.net)
+        .and_then(|_| cfg.schedule.validate_machine(&cfg.net, &cfg.machine))
+    {
+        bail!("bad --precision for this deployment: {e}");
     }
     let coord = Arc::new(Coordinator::start(cfg));
     server::serve(coord, &addr)

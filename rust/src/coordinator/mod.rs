@@ -16,16 +16,22 @@
 //! Serving-path design (vs the original per-request loop):
 //!
 //! * **Persistent cores.** Each worker owns one [`Sim`] for its whole
-//!   lifetime ([`WorkerCore`]); between requests only the bump allocator is
+//!   lifetime (`WorkerCore`); between requests only the bump allocator is
 //!   rewound, so per-request `Sim` construction (VRF + 192 MiB of simulated
 //!   memory) is paid once.
 //! * **Deterministic timing cache.** Cycle counts of a `TimingOnly` run are
-//!   a pure function of `(net graph, precision, machine config)` — the
-//!   kernels are data-independent. The coordinator memoizes them in a
-//!   per-coordinator map keyed by structural fingerprints, so repeat requests
-//!   against the same deployment resolve timing with a lookup instead of a
-//!   multi-ms re-simulation (`benches/coordinator_throughput.rs` measures
-//!   the win).
+//!   a pure function of `(net graph, precision schedule, machine config)` —
+//!   the kernels are data-independent. The coordinator memoizes them in a
+//!   per-coordinator map keyed by structural fingerprints plus the
+//!   [`PrecisionMap`], so repeat requests against the same deployment resolve
+//!   timing with a lookup instead of a multi-ms re-simulation
+//!   (`benches/coordinator_throughput.rs` measures the win).
+//! * **Per-request precision schedules.** A request may carry its own
+//!   [`PrecisionMap`] (wire: the `prec=` field of `INFER`), overriding the
+//!   deployment default — the schedule-space exploration the mixed-precision
+//!   papers motivate, without redeploying. Schedules are validated at
+//!   submission ([`SubmitError::Invalid`]) and occupy their own timing-cache
+//!   entries.
 //! * **Real batched inference.** Requests that carry input bytes are run
 //!   through the functional executor (`SimMode::Full`) on the worker's
 //!   persistent core; the response carries the resulting logits and argmax.
@@ -45,7 +51,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::arch::MachineConfig;
-use crate::nn::model::{ModelRunner, Precision};
+use crate::nn::model::{ModelRunner, Precision, PrecisionMap};
 use crate::nn::{LayerKind, NetLayer};
 use crate::sim::{Sim, SimMode};
 
@@ -56,6 +62,9 @@ pub struct InferenceRequest {
     /// Input activation codes (u8, up to 32·32·3 bytes; shorter inputs are
     /// zero-padded). `None` requests timing only — no functional execution.
     pub input: Option<Vec<u8>>,
+    /// Per-request precision schedule; `None` uses the deployment default
+    /// ([`CoordinatorConfig::schedule`]).
+    pub schedule: Option<PrecisionMap>,
 }
 
 /// Completed inference.
@@ -76,6 +85,9 @@ pub struct InferenceResponse {
     pub batch_id: u64,
     /// Whether `sim_cycles` came from the timing cache (vs a fresh run).
     pub timing_cached: bool,
+    /// Label of the schedule this request ran under
+    /// ([`PrecisionMap::label`]; wire field `prec=`).
+    pub precision: String,
     /// Output of the network's last layer for the submitted input (u8 codes
     /// widened to f32 at integer precisions, raw floats at fp32). `None` for
     /// timing-only requests.
@@ -89,12 +101,17 @@ pub struct InferenceResponse {
 pub enum SubmitError {
     /// The request queue is at capacity; back off and retry (wire: `BUSY`).
     Busy { depth: usize },
+    /// The request's precision schedule is invalid for this deployment
+    /// (unknown layer, fp32/integer mix, or unsupported by the machine).
+    /// Not retryable as-is (wire: `ERR`).
+    Invalid { reason: String },
 }
 
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::Busy { depth } => write!(f, "queue full (depth {depth})"),
+            SubmitError::Invalid { reason } => write!(f, "invalid schedule: {reason}"),
         }
     }
 }
@@ -105,7 +122,8 @@ impl std::error::Error for SubmitError {}
 #[derive(Clone)]
 pub struct CoordinatorConfig {
     pub machine: MachineConfig,
-    pub precision: Precision,
+    /// Default precision schedule for requests that do not carry their own.
+    pub schedule: PrecisionMap,
     /// Simulated cores (worker threads).
     pub workers: usize,
     /// Max requests per batch.
@@ -124,7 +142,11 @@ impl CoordinatorConfig {
     pub fn demo() -> Self {
         CoordinatorConfig {
             machine: MachineConfig::quark(4),
-            precision: Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true },
+            schedule: PrecisionMap::uniform(Precision::Sub {
+                abits: 2,
+                wbits: 2,
+                use_vbitpack: true,
+            }),
             workers: 2,
             batch_size: 4,
             batch_timeout: Duration::from_millis(20),
@@ -239,21 +261,13 @@ pub fn machine_fingerprint(cfg: &MachineConfig) -> u64 {
     h
 }
 
+/// Timing-cache key: the deployment fingerprints plus the (canonical-form)
+/// precision schedule the request ran under.
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct TimingKey {
     net_fp: u64,
     machine_fp: u64,
-    precision: Precision,
-}
-
-impl TimingKey {
-    fn of(cfg: &CoordinatorConfig) -> Self {
-        TimingKey {
-            net_fp: net_fingerprint(&cfg.net),
-            machine_fp: machine_fingerprint(&cfg.machine),
-            precision: cfg.precision,
-        }
-    }
+    schedule: PrecisionMap,
 }
 
 #[derive(Clone, Copy)]
@@ -304,7 +318,7 @@ pub struct CoordStats {
     pub rejected: u64,
     pub queue_depth: usize,
     pub workers: usize,
-    /// Timing-cache hit/miss counts (one resolution per batch).
+    /// Timing-cache hit/miss counts (one resolution per request).
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// End-to-end (queue + service) latency percentiles in µs over the
@@ -317,6 +331,12 @@ pub struct CoordStats {
 }
 
 const LAT_WINDOW: usize = 4096;
+
+/// Timing-cache size bound. Schedules are client-supplied (the `prec=` wire
+/// field), so without a cap a client cycling distinct override sets could
+/// grow the map without limit. Past the cap, new schedules are still served
+/// (one fresh `TimingOnly` run each) but no longer memoized.
+const MAX_TIMING_ENTRIES: usize = 1024;
 
 struct Queued {
     req: InferenceRequest,
@@ -348,7 +368,12 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Start serving. Panics if the deployment's default schedule is invalid
+    /// for its net/machine (misconfiguration, not a runtime condition).
     pub fn start(cfg: CoordinatorConfig) -> Self {
+        if let Err(e) = validate_schedule(&cfg.schedule, &cfg.net, &cfg.machine) {
+            panic!("invalid coordinator schedule: {e}");
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
@@ -376,12 +401,19 @@ impl Coordinator {
         Coordinator { shared, cfg, workers }
     }
 
-    /// Submit a request; returns a receiver for the response, or
-    /// [`SubmitError::Busy`] when the queue is at capacity.
+    /// Submit a request; returns a receiver for the response,
+    /// [`SubmitError::Busy`] when the queue is at capacity, or
+    /// [`SubmitError::Invalid`] when the request's schedule cannot run on
+    /// this deployment.
     pub fn submit(
         &self,
         req: InferenceRequest,
     ) -> Result<mpsc::Receiver<InferenceResponse>, SubmitError> {
+        if let Some(sched) = &req.schedule {
+            if let Err(reason) = validate_schedule(sched, &self.cfg.net, &self.cfg.machine) {
+                return Err(SubmitError::Invalid { reason });
+            }
+        }
         let (tx, rx) = mpsc::channel();
         let mut q = self.shared.queue.lock().unwrap();
         if q.len() >= self.cfg.max_queue {
@@ -445,6 +477,16 @@ impl Coordinator {
     }
 }
 
+/// Full schedule validation against a deployment: map shape + machine caps.
+fn validate_schedule(
+    sched: &PrecisionMap,
+    net: &[NetLayer],
+    machine: &MachineConfig,
+) -> Result<(), String> {
+    sched.validate(net)?;
+    sched.validate_machine(net, machine)
+}
+
 /// One worker's persistent simulated core. Constructed once per worker
 /// thread; between model runs only the bump allocator is rewound (the Sim's
 /// VRF, timing state, and 192 MiB memory arena are reused).
@@ -464,22 +506,27 @@ impl WorkerCore {
         self.sim.machine.mem.reset_alloc_to(self.heap_base);
     }
 
-    /// One `TimingOnly` pass over the configured net (cache-miss path).
-    fn timing_cycles(&mut self, cfg: &CoordinatorConfig) -> u64 {
+    /// One `TimingOnly` pass over the configured net under `sched`
+    /// (cache-miss path).
+    fn timing_cycles(&mut self, cfg: &CoordinatorConfig, sched: &PrecisionMap) -> u64 {
         self.rewind();
         self.sim.set_mode(SimMode::TimingOnly);
-        let reports = ModelRunner::run(&mut self.sim, &cfg.net, cfg.precision, false);
-        reports.iter().map(|r| r.run.cycles).sum()
+        let run = ModelRunner::run_scheduled(&mut self.sim, &cfg.net, sched, false, None);
+        run.reports.iter().map(|r| r.run.cycles).sum()
     }
 
-    /// Functional (`Full`-mode) execution of the net on `input`; returns
-    /// (logits, argmax).
-    fn infer(&mut self, cfg: &CoordinatorConfig, input: &[u8]) -> (Vec<f32>, usize) {
+    /// Functional (`Full`-mode) execution of the net on `input` under
+    /// `sched`; returns (logits, argmax).
+    fn infer(
+        &mut self,
+        cfg: &CoordinatorConfig,
+        sched: &PrecisionMap,
+        input: &[u8],
+    ) -> (Vec<f32>, usize) {
         self.rewind();
         self.sim.set_mode(SimMode::Full);
-        let run =
-            ModelRunner::run_with_input(&mut self.sim, &cfg.net, cfg.precision, true, Some(input));
-        let logits: Vec<f32> = match cfg.precision {
+        let run = ModelRunner::run_scheduled(&mut self.sim, &cfg.net, sched, true, Some(input));
+        let logits: Vec<f32> = match sched.default_precision() {
             Precision::Fp32 => self.sim.read_f32s(run.out_addr, run.out_elems),
             _ => self
                 .sim
@@ -499,10 +546,12 @@ impl WorkerCore {
 }
 
 /// Worker: claims batches (size- or timeout-bounded) and serves them on its
-/// persistent simulated core.
+/// persistent simulated core. Timing is resolved per request (requests in
+/// one batch may carry different schedules); the cache makes repeats free.
 fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
     let mut core = WorkerCore::new(cfg.machine.clone());
-    let key = TimingKey::of(&cfg);
+    let net_fp = net_fingerprint(&cfg.net);
+    let machine_fp = machine_fingerprint(&cfg.machine);
     loop {
         // Claim a batch.
         let mut batch = Vec::new();
@@ -540,30 +589,37 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
         let batch_id = shared.batch_counter.fetch_add(1, Ordering::Relaxed);
         let busy_t0 = Instant::now();
 
-        // Resolve timing once per batch: cache hit is a map lookup, miss is
-        // one TimingOnly simulation whose result every later batch reuses.
-        let cached = shared.timing_cache.lock().unwrap().get(&key).copied();
-        let (sim_cycles, timing_cached) = match cached {
-            Some(e) => {
-                shared.cache_hits.fetch_add(1, Ordering::Relaxed);
-                (e.sim_cycles, true)
-            }
-            None => {
-                let c = core.timing_cycles(&cfg);
-                shared.cache_misses.fetch_add(1, Ordering::Relaxed);
-                shared.timing_cache.lock().unwrap().insert(key.clone(), TimingEntry { sim_cycles: c });
-                (c, false)
-            }
-        };
-        let device_us = sim_cycles as f64 / (cfg.machine.freq_ghz * 1e3);
-
         // Serve the batch on the persistent core.
         for item in batch {
+            let sched = item.req.schedule.as_ref().unwrap_or(&cfg.schedule);
+            // Resolve timing: cache hit is a map lookup, miss is one
+            // TimingOnly simulation whose result every later request under
+            // the same (net, machine, schedule) key reuses.
+            let key = TimingKey { net_fp, machine_fp, schedule: sched.clone() };
+            let cached = shared.timing_cache.lock().unwrap().get(&key).copied();
+            let (sim_cycles, timing_cached) = match cached {
+                Some(e) => {
+                    shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    (e.sim_cycles, true)
+                }
+                None => {
+                    let c = core.timing_cycles(&cfg, sched);
+                    shared.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    let mut cache = shared.timing_cache.lock().unwrap();
+                    if cache.len() < MAX_TIMING_ENTRIES {
+                        cache.insert(key, TimingEntry { sim_cycles: c });
+                    }
+                    drop(cache);
+                    (c, false)
+                }
+            };
+            let device_us = sim_cycles as f64 / (cfg.machine.freq_ghz * 1e3);
+
             let queue_time = item.enqueued.elapsed();
             let t0 = Instant::now();
             let (logits, argmax) = match &item.req.input {
                 Some(bytes) => {
-                    let (l, a) = core.infer(&cfg, bytes);
+                    let (l, a) = core.infer(&cfg, sched, bytes);
                     (Some(l), Some(a))
                 }
                 None => (None, None),
@@ -578,6 +634,7 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
                 worker: wid,
                 batch_id,
                 timing_cached,
+                precision: sched.label(),
                 logits,
                 argmax,
             };
@@ -604,7 +661,11 @@ mod tests {
         cfg.batch_size = 4;
         let coord = Coordinator::start(cfg);
         let rxs: Vec<_> = (0..6)
-            .map(|i| coord.submit(InferenceRequest { id: i, input: None }).unwrap())
+            .map(|i| {
+                coord
+                    .submit(InferenceRequest { id: i, input: None, schedule: None })
+                    .unwrap()
+            })
             .collect();
         let mut responses: Vec<_> =
             rxs.into_iter().map(|rx| rx.recv_timeout(Duration::from_secs(120)).unwrap()).collect();
@@ -614,6 +675,7 @@ mod tests {
             assert_eq!(r.id, i as u64);
             assert!(r.sim_cycles > 0);
             assert!(r.device_us > 0.0);
+            assert_eq!(r.precision, "w2a2");
             assert!(r.logits.is_none(), "timing-only requests carry no logits");
         }
         // Batching grouped at least two requests somewhere.
@@ -634,16 +696,18 @@ mod tests {
         cfg.batch_size = 1;
         cfg.batch_timeout = Duration::from_millis(1);
         let coord = Coordinator::start(cfg);
-        // Sequential submissions: every batch after the first must hit.
+        // Sequential submissions: every request after the first must hit.
         let mut cycles = Vec::new();
         for i in 0..5u64 {
-            let rx = coord.submit(InferenceRequest { id: i, input: None }).unwrap();
+            let rx = coord
+                .submit(InferenceRequest { id: i, input: None, schedule: None })
+                .unwrap();
             let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
             cycles.push((r.sim_cycles, r.timing_cached));
         }
         assert!(cycles.iter().all(|&(c, _)| c == cycles[0].0), "cached timing must be stable");
-        assert!(!cycles[0].1, "first batch is a miss");
-        assert!(cycles[1..].iter().all(|&(_, hit)| hit), "later batches must hit");
+        assert!(!cycles[0].1, "first request is a miss");
+        assert!(cycles[1..].iter().all(|&(_, hit)| hit), "later requests must hit");
         let s = coord.stats();
         assert_eq!(s.cache_misses, 1);
         assert_eq!(s.cache_hits, 4);
@@ -657,8 +721,12 @@ mod tests {
         cfg.batch_size = 2;
         let coord = Coordinator::start(cfg);
         let n = 32 * 32 * 3;
-        let rx_a = coord.submit(InferenceRequest { id: 0, input: Some(vec![0u8; n]) }).unwrap();
-        let rx_b = coord.submit(InferenceRequest { id: 1, input: Some(vec![200u8; n]) }).unwrap();
+        let rx_a = coord
+            .submit(InferenceRequest { id: 0, input: Some(vec![0u8; n]), schedule: None })
+            .unwrap();
+        let rx_b = coord
+            .submit(InferenceRequest { id: 1, input: Some(vec![200u8; n]), schedule: None })
+            .unwrap();
         let a = rx_a.recv_timeout(Duration::from_secs(300)).unwrap();
         let b = rx_b.recv_timeout(Duration::from_secs(300)).unwrap();
         let (la, lb) = (a.logits.unwrap(), b.logits.unwrap());
@@ -667,7 +735,9 @@ mod tests {
         assert!(a.argmax.unwrap() < 100 && b.argmax.unwrap() < 100);
         assert_ne!(la, lb, "different inputs must produce different logits");
         // Determinism: same input → same logits.
-        let rx_c = coord.submit(InferenceRequest { id: 2, input: Some(vec![200u8; n]) }).unwrap();
+        let rx_c = coord
+            .submit(InferenceRequest { id: 2, input: Some(vec![200u8; n]), schedule: None })
+            .unwrap();
         let c = rx_c.recv_timeout(Duration::from_secs(300)).unwrap();
         assert_eq!(lb, c.logits.unwrap(), "same input must reproduce the same logits");
         coord.shutdown();
@@ -679,10 +749,88 @@ mod tests {
         cfg.workers = 1;
         cfg.max_queue = 0; // every submission rejects deterministically
         let coord = Coordinator::start(cfg);
-        let err = coord.submit(InferenceRequest { id: 9, input: None }).unwrap_err();
+        let err = coord
+            .submit(InferenceRequest { id: 9, input: None, schedule: None })
+            .unwrap_err();
         assert!(matches!(err, SubmitError::Busy { .. }));
         assert_eq!(coord.rejected(), 1);
         assert_eq!(coord.served(), 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_schedules_are_rejected_at_submission() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        let coord = Coordinator::start(cfg);
+        // Unknown layer name (override must differ from the default — equal
+        // ones canonicalize away).
+        let err = coord
+            .submit(InferenceRequest {
+                id: 0,
+                input: None,
+                schedule: Some(
+                    PrecisionMap::uniform(Precision::Sub {
+                        abits: 2,
+                        wbits: 2,
+                        use_vbitpack: true,
+                    })
+                    .with("ghost", Precision::Int8),
+                ),
+            })
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid { .. }), "{err}");
+        // fp32 needs the vector FPU the Quark machine lacks.
+        let err = coord
+            .submit(InferenceRequest {
+                id: 1,
+                input: None,
+                schedule: Some(PrecisionMap::uniform(Precision::Fp32)),
+            })
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid { .. }), "{err}");
+        assert_eq!(coord.rejected(), 0, "Invalid is not backpressure");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn per_request_schedules_get_separate_cache_entries() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 1;
+        cfg.batch_timeout = Duration::from_millis(1);
+        let coord = Coordinator::start(cfg);
+        let get = |id: u64, sched: Option<PrecisionMap>| {
+            let rx = coord
+                .submit(InferenceRequest { id, input: None, schedule: sched })
+                .unwrap();
+            rx.recv_timeout(Duration::from_secs(120)).unwrap()
+        };
+        let int2 = get(0, None); // deployment default: uniform w2a2
+        let int8 = get(1, Some(PrecisionMap::uniform(Precision::Int8)));
+        let mixed = get(
+            2,
+            Some(
+                PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true })
+                    .with("c1", Precision::Int8),
+            ),
+        );
+        assert_eq!(int2.precision, "w2a2");
+        assert_eq!(int8.precision, "int8");
+        assert_eq!(mixed.precision, "mixed(w2a2+1)");
+        assert!(!int8.timing_cached && !mixed.timing_cached, "distinct keys each miss once");
+        assert!(int8.sim_cycles > int2.sim_cycles, "int8 must cost more cycles than 2-bit");
+        assert!(
+            mixed.sim_cycles > int2.sim_cycles && mixed.sim_cycles < int8.sim_cycles,
+            "mixed ({}) must land between 2-bit ({}) and int8 ({})",
+            mixed.sim_cycles,
+            int2.sim_cycles,
+            int8.sim_cycles
+        );
+        // Repeats hit their own entries.
+        let again = get(3, Some(PrecisionMap::uniform(Precision::Int8)));
+        assert!(again.timing_cached);
+        assert_eq!(again.sim_cycles, int8.sim_cycles);
         coord.shutdown();
     }
 

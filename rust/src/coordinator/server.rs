@@ -6,17 +6,23 @@
 //! STATS                     → STATS served=<n> rejected=<n> queue_depth=<n>
 //!                                   workers=<n> cache_hits=<n> cache_misses=<n>
 //!                                   p50_us=<n> p95_us=<n> p99_us=<n> util=<u0,u1,…>
-//! INFER <id>                → OK <id> cycles=<c> device_us=<t> worker=<w>
-//!                                   batch=<b> cached=<0|1>        (timing only)
-//! INFER <id> <b0,b1,...>    → same, plus ` argmax=<k> logits=<v0,v1,…>` —
-//!                             the input bytes are run through the functional
-//!                             executor and the real outputs returned
+//! INFER <id> [prec=<spec>] [<b0,b1,...>]
+//!                           → OK <id> cycles=<c> device_us=<t> worker=<w>
+//!                                   batch=<b> cached=<0|1> prec=<label>
+//!                             with input bytes: plus ` argmax=<k>
+//!                             logits=<v0,v1,…>` — the bytes are run through
+//!                             the functional executor and the real outputs
+//!                             returned
 //! QUIT                      → closes the connection
 //! ```
-//! Malformed requests answer `ERR <reason>`; a full queue answers
-//! `BUSY <reason>`. Neither kills the connection — clients keep the socket
-//! and retry. (No JSON library exists in this offline environment; a line
-//! protocol keeps the wire format trivially testable with netcat.)
+//! The optional `prec=` field is a [`PrecisionMap`] spec
+//! (`default[;layer=precision…]`, e.g. `prec=int8` or
+//! `prec=w2a2;c1=int8;fc=int8`) selecting a per-request precision schedule;
+//! without it the deployment default applies. Malformed requests answer
+//! `ERR <reason>`; a full queue answers `BUSY <reason>`. Neither kills the
+//! connection — clients keep the socket and retry. (No JSON library exists
+//! in this offline environment; a line protocol keeps the wire format
+//! trivially testable with netcat.)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -24,6 +30,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::error::Result;
+use crate::nn::model::PrecisionMap;
 
 use super::{Coordinator, InferenceRequest, SubmitError};
 
@@ -111,7 +118,24 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                         continue;
                     }
                 };
-                let input = match parse_input(parts.next()) {
+                // Optional per-request precision schedule.
+                let mut next_tok = parts.next();
+                let mut schedule = None;
+                if let Some(tok) = next_tok {
+                    if let Some(spec) = tok.strip_prefix("prec=") {
+                        match PrecisionMap::parse(spec) {
+                            Ok(m) => {
+                                schedule = Some(m);
+                                next_tok = parts.next();
+                            }
+                            Err(reason) => {
+                                writeln!(writer, "ERR bad precision: {reason}")?;
+                                continue;
+                            }
+                        }
+                    }
+                }
+                let input = match parse_input(next_tok) {
                     Ok(v) => v,
                     Err(reason) => {
                         writeln!(writer, "ERR {reason}")?;
@@ -122,20 +146,24 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                     writeln!(writer, "ERR trailing garbage after input")?;
                     continue;
                 }
-                match coord.submit(InferenceRequest { id, input }) {
+                match coord.submit(InferenceRequest { id, input, schedule }) {
                     Err(SubmitError::Busy { depth }) => {
                         writeln!(writer, "BUSY queue full (depth {depth})")?
+                    }
+                    Err(SubmitError::Invalid { reason }) => {
+                        writeln!(writer, "ERR bad precision: {reason}")?
                     }
                     Ok(rx) => match rx.recv() {
                         Ok(r) => {
                             let mut reply = format!(
-                                "OK {} cycles={} device_us={:.1} worker={} batch={} cached={}",
+                                "OK {} cycles={} device_us={:.1} worker={} batch={} cached={} prec={}",
                                 r.id,
                                 r.sim_cycles,
                                 r.device_us,
                                 r.worker,
                                 r.batch_id,
-                                r.timing_cached as u8
+                                r.timing_cached as u8,
+                                r.precision
                             );
                             if let (Some(am), Some(lg)) = (r.argmax, r.logits.as_ref()) {
                                 let csv: Vec<String> =
@@ -242,6 +270,43 @@ mod tests {
         assert!(lines[4].starts_with("ERR trailing garbage"), "{}", lines[4]);
         assert!(lines[5].starts_with("ERR unknown command FROB"), "{}", lines[5]);
         assert_eq!(lines[6], "PONG", "connection survived all error paths");
+    }
+
+    #[test]
+    fn infer_accepts_a_precision_map_on_the_wire() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        // Timing-only probes under three schedules: the deployment default
+        // (w2a2), uniform int8, and a mixed map pinning c1 to int8.
+        writeln!(client, "INFER 1").unwrap();
+        writeln!(client, "INFER 2 prec=int8").unwrap();
+        writeln!(client, "INFER 3 prec=w2a2;c1=int8").unwrap();
+        // Schedules compose with input payloads (functional execution).
+        writeln!(client, "INFER 4 prec=w2a2;c1=int8 7,8,9").unwrap();
+        // Bad schedules answer ERR without killing the connection.
+        writeln!(client, "INFER 5 prec=w9a9").unwrap();
+        writeln!(client, "INFER 6 prec=int8;ghost=w2a2").unwrap();
+        writeln!(client, "PING").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(7).map(|l| l.unwrap()).collect();
+        assert!(lines[0].contains(" prec=w2a2"), "{}", lines[0]);
+        assert!(lines[1].contains(" prec=int8"), "{}", lines[1]);
+        assert!(lines[2].contains(" prec=mixed(w2a2+1)"), "{}", lines[2]);
+        assert!(lines[3].contains(" prec=mixed(w2a2+1)"), "{}", lines[3]);
+        assert!(lines[3].contains(" argmax="), "{}", lines[3]);
+        assert!(lines[4].starts_with("ERR bad precision"), "{}", lines[4]);
+        assert!(lines[5].starts_with("ERR bad precision"), "{}", lines[5]);
+        assert_eq!(lines[6], "PONG", "connection survived schedule errors");
+        // The mixed schedule costs more cycles than pure w2a2 but fewer than
+        // pure int8 (c1 re-runs at 8-bit, the rest stays 2-bit).
+        let cycles = |l: &str| -> u64 {
+            l.split("cycles=").nth(1).unwrap().split_whitespace().next().unwrap().parse().unwrap()
+        };
+        let (c_w2, c_i8, c_mix) = (cycles(&lines[0]), cycles(&lines[1]), cycles(&lines[2]));
+        assert!(c_w2 < c_mix && c_mix < c_i8, "w2a2 {c_w2} < mixed {c_mix} < int8 {c_i8}");
     }
 
     #[test]

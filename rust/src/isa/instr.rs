@@ -134,7 +134,7 @@ pub enum VOp {
     IVX { op: VIOp, vd: VReg, vs2: VReg, rs1: Reg },
     /// vi-form integer op: `vd = vs2 op imm`.
     IVI { op: VIOp, vd: VReg, vs2: VReg, imm: i64 },
-    /// `vmacc.vx vd, rs1, vs2` → vd += x[rs1] * vs2.
+    /// `vmacc.vx vd, rs1, vs2` → `vd += x[rs1] * vs2`.
     MaccVX { vd: VReg, rs1: Reg, vs2: VReg },
     /// `vmacc.vv vd, vs1, vs2` → vd += vs1 * vs2.
     MaccVV { vd: VReg, vs1: VReg, vs2: VReg },
@@ -153,12 +153,12 @@ pub enum VOp {
     /// `vzext.vf{2,4,8}`.
     Zext { vd: VReg, vs2: VReg, frac: u8 },
     /// `vmseq.vi vd, vs2, imm` — mask-producing compare (result in mask
-    /// layout: bit i of vd = (vs2[i] == imm)). Used by the pure-RVV bitpack
+    /// layout: bit i of vd = `(vs2[i] == imm)`). Used by the pure-RVV bitpack
     /// fallback; runs on the (slow) mask unit.
     MseqVI { vd: VReg, vs2: VReg, imm: i64 },
     /// `vmsne.vi vd, vs2, imm` — mask-producing compare (≠).
     MsneVI { vd: VReg, vs2: VReg, imm: i64 },
-    /// `vfmacc.vf vd, rs1, vs2` → vd += f[rs1] * vs2 (f32; Ara only).
+    /// `vfmacc.vf vd, rs1, vs2` → `vd += f[rs1] * vs2` (f32; Ara only).
     FMaccVF { vd: VReg, rs1: FReg, vs2: VReg },
     /// `vfadd.vv` (f32; Ara only).
     FAddVV { vd: VReg, vs2: VReg, vs1: VReg },

@@ -4,7 +4,7 @@
 //!
 //! The simulator is *trace-driven*: kernels (see [`crate::kernels`]) emit the
 //! dynamic instruction stream straight into the simulator, with loop control
-//! represented by explicit [`Instr::Branch`] markers so control-flow overhead
+//! represented by explicit [`instr::ScalarOp::Branch`] markers so control-flow overhead
 //! is still charged. Encodings ([`encode`]/[`decode`]) exist so the custom
 //! instructions have concrete, testable 32-bit formats (they occupy the
 //! custom-2 major opcode, as a real Ara-derived design would).

@@ -1,5 +1,9 @@
 //! Quark's custom-instruction definitions and interpretation notes.
 //!
+//! A prose reference for these three instructions (encodings, semantics,
+//! rationale, worked examples) lives in `docs/isa.md`; this module is the
+//! authoritative in-code source it cross-links.
+//!
 //! The paper (§III-A) adds three instructions to the RVV 1.0 ISA:
 //!
 //! | mnemonic       | semantics                                                        |
@@ -31,8 +35,8 @@
 //! ## `vbitpack` interpretation
 //!
 //! Paper Fig. 1 shows consecutive `vbitpack` calls accumulating bit slices of
-//! `v1` into `v2`, "shift[ing] the target register to the left and then
-//! perform[ing] the packing". The figure is 8 elements wide and leaves the
+//! `v1` into `v2`, "shift\[ing\] the target register to the left and then
+//! perform\[ing\] the packing". The figure is 8 elements wide and leaves the
 //! exact shift amount implicit. We pin down the semantics as:
 //!
 //! ```text

@@ -20,6 +20,12 @@
 //! * [`requantize`] — the scalar-FPU re-scaling block shared by all of the
 //!   integer kernels (paper Fig. 2's "Div/Mul + Clip + Round" on CVA6).
 //! * [`pool`] — global average pooling.
+//!
+//! Kernels are precision-agnostic building blocks: each call takes its own
+//! operand widths (`abits`, packed weight `bits`) and requant clamp, which
+//! is what lets [`crate::nn::model::ModelRunner::run_scheduled`] dispatch a
+//! *different* kernel/width per layer under a mixed
+//! [`crate::nn::model::PrecisionMap`] schedule.
 
 pub mod bitpack;
 pub mod conv2d;

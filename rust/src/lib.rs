@@ -14,7 +14,9 @@
 //! * [`quant`] — LSQ-style quantization math and bit-plane packing.
 //! * [`kernels`] — the vector DNN runtime: bit-serial / int8 / fp32 conv2d and
 //!   matmul, im2col, packing (with and without `vbitpack`), requantization.
-//! * [`nn`] — model graphs (ResNet-18 CIFAR variant) executed on the runtime.
+//! * [`nn`] — model graphs (ResNet-18 CIFAR variant) executed on the runtime
+//!   under uniform or mixed per-layer precision schedules
+//!   ([`nn::model::PrecisionMap`]), with a naive-i128 host golden executor.
 //! * [`phys`] — analytical area/power technology model + roofline analytics.
 //! * [`runtime`] — PJRT golden-model loader (AOT HLO text from JAX).
 //! * [`coordinator`] — batching inference server over a pool of simulated

@@ -2,7 +2,7 @@
 //!
 //! Subcommands (see `repro --help`):
 //!   * `simulate`  — run one kernel/model on a simulated machine, print cycles
-//!   * `report`    — regenerate a paper table/figure (fig3, fig4, table1, table2, fig5, summary)
+//!   * `report`    — regenerate a paper table/figure (fig3, fig4, mixed, table1, table2, fig5, summary)
 //!   * `serve`     — start the batching inference coordinator
 //!   * `crosscheck`— simulator vs PJRT golden-model numeric check
 

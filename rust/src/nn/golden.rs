@@ -1,0 +1,258 @@
+//! Naive-i128 host reference execution of a network under a precision
+//! schedule.
+//!
+//! Independent of the vector-ISA emulation: every accumulation here is a
+//! plain i128 loop over the same synthetic parameter streams the simulator
+//! writes (the `synth_*` helpers in [`super::model`]), and the only shared
+//! arithmetic is the scalar-FP requant mirror
+//! [`crate::kernels::requantize::requant_host`] — which the
+//! `requant_differential` suite proves equal to a pure-integer
+//! shift/round/clamp model. The mixed-precision differential test
+//! (`rust/tests/mixed_precision.rs`) compares every layer's feature map from
+//! [`run_golden`] bit-for-bit against the simulated run.
+//!
+//! Semantics mirrored per layer kind:
+//!
+//! * **int8 conv / FC** — `ACC = Σ a·w` over the zero-padded im2col patch
+//!   (u8 codes × signed i8 weights), no ASUM term;
+//! * **bit-serial conv / FC** — `ACC = Σ (a mod 2^act_bits)·w` (the kernel
+//!   packs only `act_bits` activation planes) plus the `β·ASUM` correction,
+//!   where ASUM sums the *full* u8 patch codes (`emit_row_sum_u8`);
+//! * **global average pool** — channel sums with `alpha = 1/(h·w)`;
+//! * **residuals** — read as full u8 codes by the requant stage (the
+//!   synthetic `res_scale` is 0, exactly as the runner configures it);
+//! * **re-pack rule** — every layer clamps onto its narrowest consumer's
+//!   grid ([`super::model::map_consumer_bits`]).
+
+use crate::kernels::requantize::requant_host;
+use crate::nn::model::{
+    grid_qmax, map_consumer_bits, synth_codes, synth_i8, synth_input, synth_rq_params, Precision,
+    PrecisionMap,
+};
+use crate::nn::{LayerKind, NetLayer};
+
+/// Per-feature-map results of a host golden run: `maps[0]` is the (clamped)
+/// network input, layer `i`'s output is `maps[i + 1]`.
+pub struct GoldenRun {
+    pub maps: Vec<Vec<u8>>,
+}
+
+fn to_i32(v: i128, what: &str) -> i32 {
+    i32::try_from(v).unwrap_or_else(|_| panic!("{what} {v} overflows the i32 accumulator"))
+}
+
+/// Execute `net` under `schedule` on the host with naive integer loops.
+/// Integer schedules only (the fp32 baseline has its own golden oracles in
+/// the kernel tests). Panics on invalid schedules, mirroring
+/// [`super::model::ModelRunner::run_scheduled`].
+pub fn run_golden(net: &[NetLayer], schedule: &PrecisionMap, input: Option<&[u8]>) -> GoldenRun {
+    if let Err(e) = schedule.validate(net) {
+        panic!("invalid schedule: {e}");
+    }
+    assert!(
+        schedule.default_precision() != Precision::Fp32,
+        "integer schedules only"
+    );
+    let resolved = schedule.resolve(net);
+    let bits = map_consumer_bits(net, &resolved);
+    let mut seed = 0xC0FFEEu64 ^ schedule.seed_tag();
+
+    // Input map: same draw/override/clamp sequence as the runner.
+    let input_elems = 32 * 32 * 3;
+    let mut codes = synth_input(&mut seed, input_elems);
+    if let Some(bytes) = input {
+        for (i, c) in codes.iter_mut().enumerate() {
+            *c = bytes.get(i).copied().unwrap_or(0);
+        }
+    }
+    let in_qmax = grid_qmax(bits[0]) as u8;
+    for c in codes.iter_mut() {
+        *c = (*c).min(in_qmax);
+    }
+
+    let mut maps: Vec<Vec<u8>> = vec![codes];
+    for (li, layer) in net.iter().enumerate() {
+        let lp = resolved[li];
+        let qmax = grid_qmax(bits[li + 1]) as f32;
+        let out: Vec<u8> = match &layer.kind {
+            LayerKind::Conv(c) => {
+                let p = c.params;
+                let (k, n) = (p.k(), p.c_out);
+                let (alphas, betas, biases) = synth_rq_params(n, k);
+                let (oh, ow) = (p.out_h(), p.out_w());
+                let a = &maps[layer.input];
+                let res_map = if c.residual {
+                    layer.residual_from.map(|i| &maps[i])
+                } else {
+                    None
+                };
+                // Weight draw order must mirror the runner exactly.
+                let (w_i8, w_codes, amask) = match lp {
+                    Precision::Int8 => (synth_i8(&mut seed, k * n), Vec::new(), 0u8),
+                    Precision::Sub { abits, wbits, .. } => {
+                        (Vec::new(), synth_codes(&mut seed, k * n, wbits), grid_qmax(abits) as u8)
+                    }
+                    Precision::Fp32 => unreachable!("integer schedules only"),
+                };
+                let bitserial = matches!(lp, Precision::Sub { .. });
+                let mut out = vec![0u8; oh * ow * n];
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let taps = p.valid_taps(oy, ox);
+                        // ASUM over the full u8 patch codes (padding is 0).
+                        let asum = if bitserial {
+                            let mut s: i128 = 0;
+                            for &(_, _, iy, ix) in &taps {
+                                for ci in 0..p.c_in {
+                                    s += a[(iy * p.w + ix) * p.c_in + ci] as i128;
+                                }
+                            }
+                            Some(to_i32(s, "ASUM"))
+                        } else {
+                            None
+                        };
+                        for ch in 0..n {
+                            let mut acc: i128 = 0;
+                            for &(dy, dx, iy, ix) in &taps {
+                                for ci in 0..p.c_in {
+                                    let av = a[(iy * p.w + ix) * p.c_in + ci];
+                                    let kk = (dy * p.kw + dx) * p.c_in + ci;
+                                    if bitserial {
+                                        acc += (av & amask) as i128 * w_codes[kk * n + ch] as i128;
+                                    } else {
+                                        acc += av as i128 * w_i8[kk * n + ch] as i128;
+                                    }
+                                }
+                            }
+                            let res = res_map.map(|m| m[(oy * ow + ox) * n + ch]);
+                            out[(oy * ow + ox) * n + ch] = requant_host(
+                                to_i32(acc, "ACC"),
+                                asum,
+                                res,
+                                alphas[ch],
+                                betas[ch],
+                                biases[ch],
+                                qmax,
+                                0.0,
+                            );
+                        }
+                    }
+                }
+                out
+            }
+            LayerKind::AvgPool { h, w, c } => {
+                let a = &maps[layer.input];
+                let hw = *h * *w;
+                let alpha = 1.0 / hw as f32;
+                let mut out = vec![0u8; *c];
+                for j in 0..*c {
+                    let mut sum: i128 = 0;
+                    for pos in 0..hw {
+                        sum += a[pos * *c + j] as i128;
+                    }
+                    out[j] = requant_host(to_i32(sum, "pool sum"), None, None, alpha, 0.0, 0.0, qmax, 0.0);
+                }
+                out
+            }
+            LayerKind::Fc { k, n, name: _ } => {
+                let (k, n) = (*k, *n);
+                let a = &maps[layer.input];
+                let (alphas, betas, biases) = synth_rq_params(n, k);
+                match lp {
+                    Precision::Int8 => {
+                        let w = synth_i8(&mut seed, k * n);
+                        let mut out = vec![0u8; n];
+                        for j in 0..n {
+                            let mut acc: i128 = 0;
+                            for kk in 0..k {
+                                acc += a[kk] as i128 * w[kk * n + j] as i128;
+                            }
+                            out[j] = requant_host(
+                                to_i32(acc, "ACC"),
+                                None,
+                                None,
+                                alphas[j],
+                                betas[j],
+                                biases[j],
+                                qmax,
+                                0.0,
+                            );
+                        }
+                        out
+                    }
+                    Precision::Sub { abits, wbits, .. } => {
+                        let w = synth_codes(&mut seed, k * n, wbits);
+                        let amask = grid_qmax(abits) as u8;
+                        let mut asum: i128 = 0;
+                        for kk in 0..k {
+                            asum += a[kk] as i128;
+                        }
+                        let asum = to_i32(asum, "ASUM");
+                        let mut out = vec![0u8; n];
+                        for j in 0..n {
+                            let mut acc: i128 = 0;
+                            for kk in 0..k {
+                                acc += (a[kk] & amask) as i128 * w[kk * n + j] as i128;
+                            }
+                            out[j] = requant_host(
+                                to_i32(acc, "ACC"),
+                                Some(asum),
+                                None,
+                                alphas[j],
+                                betas[j],
+                                biases[j],
+                                qmax,
+                                0.0,
+                            );
+                        }
+                        out
+                    }
+                    Precision::Fp32 => unreachable!("integer schedules only"),
+                }
+            }
+        };
+        maps.push(out);
+    }
+    GoldenRun { maps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_is_deterministic_and_shaped() {
+        // Structure-only smoke test; the bit-exact cross-check against the
+        // simulator lives in rust/tests/mixed_precision.rs.
+        let conv = |name: &str, c_in: usize, quantized: bool| crate::nn::ConvLayer {
+            name: name.into(),
+            params: crate::kernels::Conv2dParams {
+                h: 8,
+                w: 8,
+                c_in,
+                c_out: 64,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+            relu: true,
+            residual: false,
+            quantized,
+        };
+        let net = vec![
+            NetLayer { kind: LayerKind::Conv(conv("stem", 3, false)), input: 0, residual_from: None },
+            NetLayer { kind: LayerKind::Conv(conv("c1", 64, true)), input: 1, residual_from: None },
+        ];
+        let sched = PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
+        let input: Vec<u8> = (0..3072).map(|i| (i % 251) as u8).collect();
+        let a = run_golden(&net, &sched, Some(&input));
+        let b = run_golden(&net, &sched, Some(&input));
+        assert_eq!(a.maps.len(), net.len() + 1);
+        for (x, y) in a.maps.iter().zip(b.maps.iter()) {
+            assert_eq!(x, y);
+        }
+        // Stem output feeds a 2-bit consumer: codes must sit on its grid.
+        assert!(a.maps[1].iter().all(|&v| v <= 3), "re-pack clamp violated");
+    }
+}

@@ -1,12 +1,16 @@
 //! Model graphs executed on the vector DNN runtime.
 //!
 //! [`resnet`] defines the ResNet-18 CIFAR topology the paper benchmarks
-//! (Fig. 3: per-layer speedups on ResNet-18 / CIFAR-100, batch 1);
+//! (Fig. 3: per-layer speedups on ResNet-18 / CIFAR-100, batch 1) plus the
+//! mixed per-layer schedule ([`resnet::resnet18_mixed_schedule`]);
 //! [`model`] materializes weights/scales and runs the graph on a simulated
-//! machine at a chosen precision.
+//! machine under a uniform precision or a per-layer [`PrecisionMap`];
+//! [`golden`] is the naive-i128 host reference the mixed-precision
+//! differential tests compare against.
 
+pub mod golden;
 pub mod model;
 pub mod resnet;
 
-pub use model::{LayerReport, ModelRun, ModelRunner, Precision};
-pub use resnet::{resnet18_cifar, ConvLayer, LayerKind, NetLayer};
+pub use model::{LayerReport, ModelRun, ModelRunner, Precision, PrecisionMap};
+pub use resnet::{resnet18_cifar, resnet18_mixed_schedule, ConvLayer, LayerKind, NetLayer};

@@ -1,10 +1,33 @@
 //! Model materialization + execution on a simulated machine.
 //!
-//! [`ModelRunner::run_resnet18`] is what the Fig. 3 harness, the end-to-end
-//! example, and the coordinator all call: it allocates feature maps and
-//! weights in simulated memory, emits every layer through the matching
-//! kernel for the chosen [`Precision`], and reports per-layer cycles.
+//! [`ModelRunner::run_scheduled`] is what the Fig. 3 harness, the end-to-end
+//! example, and the coordinator all call (directly or through the uniform
+//! wrappers [`ModelRunner::run`] / [`ModelRunner::run_with_input`]): it
+//! allocates feature maps and weights in simulated memory, emits every layer
+//! through the kernel matching that layer's resolved [`Precision`], and
+//! reports per-layer cycles.
+//!
+//! ## Per-layer precision
+//!
+//! A [`PrecisionMap`] assigns each Conv/FC layer its own `(weight_bits,
+//! act_bits)` pair instead of one network-wide precision — the layer-wise
+//! schedule space that SPEED (arXiv 2409.14017) and Ottavi et al.
+//! (arXiv 2010.04073) show is where multi-precision hardware earns its area.
+//! Two rules make mixed schedules compose:
+//!
+//! * **dispatch** — each layer is emitted through the kernel for *its*
+//!   precision (bit-serial / int8 / fp32), with weights packed at that
+//!   layer's `weight_bits` ([`crate::quant::pack_weight_planes`]);
+//! * **re-pack at boundaries** — a layer's output is re-quantized onto the
+//!   grid of its *narrowest consumer* ([`map_consumer_bits`]): when an 8-bit
+//!   layer feeds a 2-bit one, the producer's requant clamps to `[0, 3]` so
+//!   the stored codes are exact bit-plane inputs for the consumer's
+//!   activation packing (`vbitpack` reads only `act_bits` planes).
+//!
+//! Mixed schedules are integer-only (fp32 changes the feature-map element
+//! size); [`PrecisionMap::validate`] enforces this.
 
+use crate::arch::MachineConfig;
 use crate::kernels::bitpack::setup_index_vector;
 use crate::kernels::conv2d::{bitserial_block, conv2d_bitserial, conv2d_f32, conv2d_int8};
 use crate::kernels::matmul::{matmul_bitserial, matmul_f32, matmul_int8};
@@ -16,7 +39,8 @@ use crate::sim::{Sim, Stats};
 
 use super::resnet::{LayerKind, NetLayer};
 
-/// Execution precision for a model run.
+/// Execution precision of one layer (or, via [`PrecisionMap::uniform`], of a
+/// whole network).
 ///
 /// `Eq + Hash` so precisions can key the coordinator's timing cache (the
 /// enum carries only integers and booleans).
@@ -41,6 +65,320 @@ impl Precision {
             }
         }
     }
+
+    /// Parse a [`Precision::label`]-format string: `fp32`, `int8`, or
+    /// `w<bits>a<bits>` with an optional `-novbp` suffix.
+    ///
+    /// ```
+    /// use quark::nn::model::Precision;
+    /// assert_eq!(Precision::parse("int8"), Ok(Precision::Int8));
+    /// let p = Precision::parse("w2a1-novbp").unwrap();
+    /// assert_eq!(p, Precision::Sub { abits: 1, wbits: 2, use_vbitpack: false });
+    /// assert_eq!(Precision::parse(&p.label()), Ok(p));
+    /// assert!(Precision::parse("w4a4").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s {
+            "fp32" => Ok(Precision::Fp32),
+            "int8" => Ok(Precision::Int8),
+            _ => {
+                let (core, use_vbitpack) = match s.strip_suffix("-novbp") {
+                    Some(c) => (c, false),
+                    None => (s, true),
+                };
+                let err = || format!("unknown precision {s:?} (want fp32, int8, or wNaM[-novbp])");
+                let rest = core.strip_prefix('w').ok_or_else(err)?;
+                let (w, a) = rest.split_once('a').ok_or_else(err)?;
+                let wbits: u8 = w.parse().map_err(|_| err())?;
+                let abits: u8 = a.parse().map_err(|_| err())?;
+                if !(1..=2).contains(&wbits) || !(1..=2).contains(&abits) {
+                    return Err(format!(
+                        "sub-byte precision {s:?} out of range (1\u{2013}2 bits per operand)"
+                    ));
+                }
+                Ok(Precision::Sub { abits, wbits, use_vbitpack })
+            }
+        }
+    }
+
+    /// Bits at which a kernel at this precision reads its input activation
+    /// codes: a `Sub` kernel packs (and therefore sees) only `act_bits`
+    /// planes; the integer and fp32 baselines read full 8-bit codes.
+    pub fn act_bits(&self) -> u8 {
+        match self {
+            Precision::Fp32 | Precision::Int8 => 8,
+            Precision::Sub { abits, .. } => *abits,
+        }
+    }
+}
+
+/// Per-layer precision assignment: a default plus named overrides.
+///
+/// Overrides are kept sorted by layer name, so two maps describing the same
+/// schedule are `Eq`/`Hash`-identical — the coordinator keys its timing
+/// cache with the map directly.
+///
+/// ```
+/// use quark::nn::model::{Precision, PrecisionMap};
+/// let map = PrecisionMap::parse("w2a2;fc=int8;stem=int8").unwrap();
+/// assert_eq!(map.of("fc"), Precision::Int8);
+/// assert_eq!(map.of("conv3"), Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
+/// assert_eq!(PrecisionMap::parse(&map.spec()), Ok(map));
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PrecisionMap {
+    default: Precision,
+    /// `(layer name, precision)`, sorted by name (canonical form).
+    overrides: Vec<(String, Precision)>,
+}
+
+impl PrecisionMap {
+    /// The classic single-precision run: every layer at `default`.
+    pub fn uniform(default: Precision) -> Self {
+        PrecisionMap { default, overrides: Vec::new() }
+    }
+
+    /// Builder-style [`PrecisionMap::set`].
+    pub fn with(mut self, layer: &str, precision: Precision) -> Self {
+        self.set(layer, precision);
+        self
+    }
+
+    /// Override one layer's precision (replaces any earlier override).
+    /// Setting a layer back to the default *removes* its override, keeping
+    /// the map canonical: two maps describing the same schedule are always
+    /// `Eq`/`Hash`-identical, so they share one timing-cache entry.
+    pub fn set(&mut self, layer: &str, precision: Precision) {
+        match self.overrides.binary_search_by(|(n, _)| n.as_str().cmp(layer)) {
+            Ok(i) => {
+                if precision == self.default {
+                    self.overrides.remove(i);
+                } else {
+                    self.overrides[i].1 = precision;
+                }
+            }
+            Err(i) => {
+                if precision != self.default {
+                    self.overrides.insert(i, (layer.to_string(), precision));
+                }
+            }
+        }
+    }
+
+    /// The precision assigned to `layer`.
+    pub fn of(&self, layer: &str) -> Precision {
+        match self.overrides.binary_search_by(|(n, _)| n.as_str().cmp(layer)) {
+            Ok(i) => self.overrides[i].1,
+            Err(_) => self.default,
+        }
+    }
+
+    pub fn default_precision(&self) -> Precision {
+        self.default
+    }
+
+    pub fn overrides(&self) -> &[(String, Precision)] {
+        &self.overrides
+    }
+
+    /// True when every layer resolves to the default. Because
+    /// [`PrecisionMap::set`] drops redundant overrides, this is exactly
+    /// "no overrides".
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.is_empty()
+    }
+
+    /// Short display label: the precision label for uniform maps, a
+    /// `mixed(default+N)` tag otherwise (no whitespace — used in wire
+    /// replies).
+    pub fn label(&self) -> String {
+        if self.is_uniform() {
+            self.default.label()
+        } else {
+            format!("mixed({}+{})", self.default.label(), self.overrides.len())
+        }
+    }
+
+    /// Canonical spec string: `default[;layer=precision…]`. Inverse of
+    /// [`PrecisionMap::parse`].
+    pub fn spec(&self) -> String {
+        let mut s = self.default.label();
+        for (name, p) in &self.overrides {
+            s.push(';');
+            s.push_str(name);
+            s.push('=');
+            s.push_str(&p.label());
+        }
+        s
+    }
+
+    /// Parse a spec string (the `--precision` flag / `prec=` wire field):
+    /// a default [`Precision`], then `;layer=precision` overrides.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut parts = spec.split(';');
+        let default = Precision::parse(parts.next().unwrap_or("").trim())?;
+        let mut map = PrecisionMap::uniform(default);
+        for part in parts {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, prec) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad override {part:?} (want layer=precision)"))?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(format!("bad override {part:?} (empty layer name)"));
+            }
+            map.set(name, Precision::parse(prec.trim())?);
+        }
+        Ok(map)
+    }
+
+    /// Resolve the execution precision of every layer of `net`, in network
+    /// order. The unquantized stem is pinned to int8 under every integer
+    /// schedule (as the paper keeps input/output layers at "full precision");
+    /// pooling has no precision of its own and follows the schedule family.
+    pub fn resolve(&self, net: &[NetLayer]) -> Vec<Precision> {
+        net.iter()
+            .map(|l| match &l.kind {
+                LayerKind::Conv(c) => {
+                    let p = self.of(&c.name);
+                    if !c.quantized && p != Precision::Fp32 {
+                        Precision::Int8
+                    } else {
+                        p
+                    }
+                }
+                LayerKind::AvgPool { .. } => {
+                    if self.default == Precision::Fp32 {
+                        Precision::Fp32
+                    } else {
+                        Precision::Int8
+                    }
+                }
+                LayerKind::Fc { name, .. } => self.of(name),
+            })
+            .collect()
+    }
+
+    /// Check the map against a network: every override must name a real
+    /// Conv/FC layer, sub-byte precisions must be within the paper's 1–2-bit
+    /// range, and fp32 must not mix with integer layers (the feature-map
+    /// element size differs, so a mixed graph could not share buffers).
+    pub fn validate(&self, net: &[NetLayer]) -> Result<(), String> {
+        for (name, _) in &self.overrides {
+            let mut known = false;
+            for l in net {
+                match &l.kind {
+                    LayerKind::Conv(c) if c.name == *name => {
+                        // Overriding the unquantized stem would be a silent
+                        // no-op (resolve() pins it to int8): reject instead,
+                        // so syntactically different maps never describe the
+                        // same resolved schedule.
+                        if !c.quantized {
+                            return Err(format!(
+                                "layer {name:?} is unquantized (pinned to int8) and cannot be overridden"
+                            ));
+                        }
+                        known = true;
+                    }
+                    LayerKind::Fc { name: n, .. } if n == name => known = true,
+                    _ => {}
+                }
+            }
+            if !known {
+                return Err(format!("precision override names unknown layer {name:?}"));
+            }
+        }
+        let resolved = self.resolve(net);
+        let any_fp32 = resolved.iter().any(|p| *p == Precision::Fp32);
+        let all_fp32 = resolved.iter().all(|p| *p == Precision::Fp32);
+        // fp32 is only valid as the *default* of an all-fp32 schedule: the
+        // runner derives the feature-map element size (and the serving layer
+        // its logit encoding) from the default, so fp32 smuggled in through
+        // overrides — or a fp32 default with integer layers — would mix
+        // 1-byte and 4-byte maps in one graph.
+        if any_fp32 && (self.default != Precision::Fp32 || !all_fp32) {
+            return Err(
+                "fp32 cannot mix with integer layers in one schedule (feature-map \
+                 element size differs); use a uniform fp32 schedule"
+                    .to_string(),
+            );
+        }
+        for p in &resolved {
+            if let Precision::Sub { abits, wbits, .. } = p {
+                if !(1..=2).contains(abits) || !(1..=2).contains(wbits) {
+                    return Err(format!(
+                        "sub-byte precision w{wbits}a{abits} out of the supported 1\u{2013}2-bit range"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Check that `cfg` can execute this schedule on `net` (sub-byte layers
+    /// need the Quark ISA, fp32 needs the vector FPU).
+    pub fn validate_machine(&self, net: &[NetLayer], cfg: &MachineConfig) -> Result<(), String> {
+        for p in self.resolve(net) {
+            match p {
+                Precision::Fp32 if !cfg.has_vfpu => {
+                    return Err(format!(
+                        "schedule needs the vector FPU (fp32) but machine {} has none",
+                        cfg.name
+                    ));
+                }
+                Precision::Sub { .. } if !cfg.has_quark_isa => {
+                    return Err(format!(
+                        "schedule needs the Quark ISA (sub-byte layers) but machine {} lacks it",
+                        cfg.name
+                    ));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Tag folded into the synthetic-parameter seed. Uniform maps keep the
+    /// historical per-precision streams; mixed maps get their own family.
+    pub(crate) fn seed_tag(&self) -> u64 {
+        if self.is_uniform() {
+            match self.default {
+                Precision::Fp32 => 1,
+                Precision::Int8 => 2,
+                Precision::Sub { .. } => 3,
+            }
+        } else {
+            5
+        }
+    }
+}
+
+/// `2^bits − 1`: the top of a `bits`-bit unsigned code grid.
+pub fn grid_qmax(bits: u8) -> u32 {
+    (1u32 << bits) - 1
+}
+
+/// For every feature-map index (0 = network input; layer `i` writes map
+/// `i + 1`), the narrowest activation precision at which any consumer layer
+/// reads it — 8 when unconsumed (final logits are read as full u8 codes).
+///
+/// This is the re-pack rule of mixed-precision inference: layer `i`'s
+/// requant clamps onto `[0, 2^bits − 1]` of `map_consumer_bits(..)[i + 1]`,
+/// so stored codes are always exact under the consumer's `act_bits`-plane
+/// packing. Residual (skip) inputs are read as full u8 codes by the requant
+/// stage and impose no constraint.
+pub fn map_consumer_bits(net: &[NetLayer], resolved: &[Precision]) -> Vec<u8> {
+    let mut bits = vec![8u8; net.len() + 1];
+    for (i, layer) in net.iter().enumerate() {
+        let read = resolved[i].act_bits();
+        if read < bits[layer.input] {
+            bits[layer.input] = read;
+        }
+    }
+    bits
 }
 
 /// Per-layer result of a model run.
@@ -48,6 +386,12 @@ impl Precision {
 pub struct LayerReport {
     pub name: String,
     pub quantized: bool,
+    /// Resolved execution precision of this layer.
+    pub precision: Precision,
+    /// Simulated address of this layer's output feature map.
+    pub out_addr: u64,
+    /// Logical element count of this layer's output.
+    pub out_elems: usize,
     pub run: KernelRun,
     pub stats: Stats,
 }
@@ -56,6 +400,38 @@ pub struct LayerReport {
 pub fn lcg(seed: &mut u64) -> u64 {
     *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
     *seed >> 33
+}
+
+/// Synthetic network input codes (u8), drawn from the deterministic stream.
+pub(crate) fn synth_input(seed: &mut u64, n: usize) -> Vec<u8> {
+    (0..n).map(|_| (lcg(seed) % 256) as u8).collect()
+}
+
+/// Synthetic fp32 weights in roughly `[-0.1, 0.1)`.
+pub(crate) fn synth_f32(seed: &mut u64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (lcg(seed) % 200) as f32 / 1000.0 - 0.1).collect()
+}
+
+/// Synthetic signed int8 weights.
+pub(crate) fn synth_i8(seed: &mut u64, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (lcg(seed) % 256) as i8).collect()
+}
+
+/// Synthetic unsigned sub-byte weight codes in `[0, 2^bits)`.
+pub(crate) fn synth_codes(seed: &mut u64, n: usize, bits: u8) -> Vec<u8> {
+    (0..n).map(|_| (lcg(seed) % (1u64 << bits)) as u8).collect()
+}
+
+/// Synthetic per-channel requant parameters that keep code values in a sane
+/// range: alpha ~ 1/K so accumulators map back onto the output grid. Shared
+/// by the runner and the host golden model ([`super::golden`]) so both see
+/// identical scales.
+pub(crate) fn synth_rq_params(n: usize, k: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let alpha = 1.0 / (k as f32).max(1.0);
+    let alphas: Vec<f32> = (0..n).map(|j| alpha * (1.0 + (j % 7) as f32 * 0.01)).collect();
+    let betas = vec![-alpha * 0.25; n];
+    let biases = vec![0.5; n];
+    (alphas, betas, biases)
 }
 
 /// Result of a whole-model run: the per-layer reports plus where the final
@@ -70,20 +446,11 @@ pub struct ModelRun {
     pub out_elems: usize,
 }
 
-/// Logical output element count of one layer.
-fn layer_out_elems(kind: &LayerKind) -> usize {
-    match kind {
-        LayerKind::Conv(c) => c.params.out_h() * c.params.out_w() * c.params.c_out,
-        LayerKind::AvgPool { c, .. } => *c,
-        LayerKind::Fc { n, .. } => *n,
-    }
-}
-
 pub struct ModelRunner;
 
 impl ModelRunner {
-    /// Run a network graph (see [`super::resnet::resnet18_cifar`]) at the
-    /// given precision; batch 1, synthetic weights. When `write_data` is
+    /// Run a network graph (see [`super::resnet::resnet18_cifar`]) at one
+    /// uniform precision; batch 1, synthetic weights. When `write_data` is
     /// false the simulator should be in `TimingOnly` mode (cycle counts are
     /// identical — the kernels are data-independent).
     pub fn run(
@@ -92,15 +459,13 @@ impl ModelRunner {
         precision: Precision,
         write_data: bool,
     ) -> Vec<LayerReport> {
-        Self::run_with_input(sim, net, precision, write_data, None).reports
+        Self::run_scheduled(sim, net, &PrecisionMap::uniform(precision), write_data, None).reports
     }
 
     /// Like [`Self::run`], but with an optional explicit network input
     /// (CIFAR-sized u8 codes; shorter inputs are zero-padded, longer ones
-    /// truncated). Synthetic weights are drawn from the same deterministic
-    /// stream whether or not an input is supplied, so two runs differ only
-    /// in the input feature map. Returns the output buffer location so
-    /// callers can read real logits after a `Full`-mode run.
+    /// truncated). Returns the output buffer location so callers can read
+    /// real logits after a `Full`-mode run.
     pub fn run_with_input(
         sim: &mut Sim,
         net: &[NetLayer],
@@ -108,22 +473,34 @@ impl ModelRunner {
         write_data: bool,
         input: Option<&[u8]>,
     ) -> ModelRun {
-        match precision {
-            Precision::Fp32 => assert!(sim.cfg.has_vfpu, "FP32 model needs Ara"),
-            Precision::Sub { abits, wbits, .. } => {
-                assert!(sim.cfg.has_quark_isa, "sub-byte model needs Quark");
-                assert!(abits <= 2 && wbits <= 2);
-            }
-            Precision::Int8 => {}
+        Self::run_scheduled(sim, net, &PrecisionMap::uniform(precision), write_data, input)
+    }
+
+    /// Run `net` under a per-layer [`PrecisionMap`]. Synthetic weights are
+    /// drawn from one deterministic stream (a function of the schedule
+    /// family only), so two runs under the same schedule differ only in the
+    /// input feature map. Panics on schedules that fail
+    /// [`PrecisionMap::validate`] / [`PrecisionMap::validate_machine`] —
+    /// the serving layer pre-validates at submission.
+    pub fn run_scheduled(
+        sim: &mut Sim,
+        net: &[NetLayer],
+        schedule: &PrecisionMap,
+        write_data: bool,
+        input: Option<&[u8]>,
+    ) -> ModelRun {
+        if let Err(e) = schedule.validate(net) {
+            panic!("invalid schedule: {e}");
         }
-        let esz = if precision == Precision::Fp32 { 4usize } else { 1 };
+        if let Err(e) = schedule.validate_machine(net, &sim.cfg) {
+            panic!("{e}");
+        }
+        let resolved = schedule.resolve(net);
+        let consumer_bits = map_consumer_bits(net, &resolved);
+        let fp32 = schedule.default_precision() == Precision::Fp32;
+        let esz = if fp32 { 4usize } else { 1 };
         let idx_vec = setup_index_vector(sim);
-        let mut seed = 0xC0FFEE
-            ^ match precision {
-                Precision::Fp32 => 1,
-                Precision::Int8 => 2,
-                Precision::Sub { .. } => 3,
-            };
+        let mut seed = 0xC0FFEE ^ schedule.seed_tag();
 
         // Feature-map addresses; map 0 is the network input (32×32×3).
         let input_elems = 32 * 32 * 3;
@@ -131,72 +508,64 @@ impl ModelRunner {
         if write_data {
             // Draw the synthetic input even when an explicit one overrides it,
             // so the weight streams below are identical either way.
-            let mut codes: Vec<u8> =
-                (0..input_elems).map(|_| (lcg(&mut seed) % 256) as u8).collect();
+            let mut codes = synth_input(&mut seed, input_elems);
             if let Some(bytes) = input {
                 for (i, c) in codes.iter_mut().enumerate() {
                     *c = bytes.get(i).copied().unwrap_or(0);
                 }
             }
-            match precision {
-                Precision::Fp32 => {
-                    let vals: Vec<f32> = codes.iter().map(|&c| c as f32 / 255.0).collect();
-                    sim.write_f32s(in_addr, &vals);
+            if fp32 {
+                let vals: Vec<f32> = codes.iter().map(|&c| c as f32 / 255.0).collect();
+                sim.write_f32s(in_addr, &vals);
+            } else {
+                let in_qmax = grid_qmax(consumer_bits[0]) as u8;
+                for c in codes.iter_mut() {
+                    *c = (*c).min(in_qmax);
                 }
-                _ => sim.write_bytes(in_addr, &codes),
+                sim.write_bytes(in_addr, &codes);
             }
         }
         let mut maps: Vec<u64> = vec![in_addr];
         let mut reports = Vec::new();
 
-        for layer in net {
-            let input = maps[layer.input];
+        for (li, layer) in net.iter().enumerate() {
+            let input_addr = maps[layer.input];
             let residual = layer.residual_from.map(|i| maps[i]);
+            let lp = resolved[li];
+            let out_qmax = grid_qmax(consumer_bits[li + 1]) as f32;
             let before = sim.stats().clone();
-            let (out_addr, name, run, quantized) = match &layer.kind {
+            let (out_addr, out_elems, name, run, quantized) = match &layer.kind {
                 LayerKind::Conv(c) => {
                     let p = c.params;
                     let out_elems = p.out_h() * p.out_w() * p.c_out;
                     let out = sim.alloc((out_elems * esz) as u64);
                     let k = p.k();
                     let n = p.c_out;
-                    let run = match precision {
+                    let run = match lp {
                         Precision::Fp32 => {
                             let w = sim.alloc((k * n * 4) as u64);
                             let b = sim.alloc((n * 4) as u64);
                             if write_data {
-                                let wv: Vec<f32> = (0..k * n)
-                                    .map(|_| (lcg(&mut seed) % 200) as f32 / 1000.0 - 0.1)
-                                    .collect();
+                                let wv = synth_f32(&mut seed, k * n);
                                 sim.write_f32s(w, &wv);
                                 sim.write_f32s(b, &vec![0.01; n]);
                             }
-                            conv2d_f32(sim, &p, input, w, b, out, c.relu, if c.residual { residual } else { None })
-                        }
-                        Precision::Int8 | Precision::Sub { .. } if !c.quantized => {
-                            // Stem runs int8 under every integer precision.
-                            let w = sim.alloc((k * n) as u64);
-                            if write_data {
-                                let wv: Vec<i8> =
-                                    (0..k * n).map(|_| (lcg(&mut seed) % 256) as i8).collect();
-                                sim.write_i8(w, &wv);
-                            }
-                            let rq = Self::rqbuf(sim, n, k, c.relu);
-                            conv2d_int8(sim, &p, input, w, &rq, out, None)
+                            conv2d_f32(sim, &p, input_addr, w, b, out, c.relu, if c.residual { residual } else { None })
                         }
                         Precision::Int8 => {
+                            // Also the unquantized stem under every integer
+                            // schedule (PrecisionMap::resolve pins it).
                             let w = sim.alloc((k * n) as u64);
                             if write_data {
-                                let wv: Vec<i8> =
-                                    (0..k * n).map(|_| (lcg(&mut seed) % 256) as i8).collect();
+                                let wv = synth_i8(&mut seed, k * n);
                                 sim.write_i8(w, &wv);
                             }
-                            let rq = Self::rqbuf(sim, n, k, c.relu);
-                            conv2d_int8(sim, &p, input, w, &rq, out, if c.residual { residual } else { None })
+                            let rq = Self::rqbuf(sim, n, k, out_qmax);
+                            conv2d_int8(sim, &p, input_addr, w, &rq, out, if c.residual { residual } else { None })
                         }
                         Precision::Sub { abits, wbits, use_vbitpack } => {
                             let codes: Vec<u8> = if write_data {
-                                (0..k * n).map(|_| (lcg(&mut seed) % (1 << wbits)) as u8).collect()
+                                synth_codes(&mut seed, k * n, wbits)
                             } else {
                                 vec![0u8; k * n]
                             };
@@ -208,12 +577,12 @@ impl ModelRunner {
                                     sim.machine.mem.write_u64_le(w + (i * 8) as u64, word, 8);
                                 }
                             }
-                            let rq = Self::rqbuf(sim, n, k, c.relu);
+                            let rq = Self::rqbuf(sim, n, k, out_qmax);
                             conv2d_bitserial(
                                 sim,
                                 &p,
                                 abits,
-                                input,
+                                input_addr,
                                 &wpk,
                                 w,
                                 &rq,
@@ -224,55 +593,51 @@ impl ModelRunner {
                             )
                         }
                     };
-                    (out, c.name.clone(), run, c.quantized)
+                    (out, out_elems, c.name.clone(), run, c.quantized)
                 }
                 LayerKind::AvgPool { h, w, c } => {
                     let out = sim.alloc((c * esz) as u64);
-                    let run = match precision {
-                        Precision::Fp32 => global_avgpool_f32(sim, *h, *w, *c, input, out),
-                        _ => {
-                            let alpha = 1.0 / (*h * *w) as f32;
-                            let rq = RqBuf::create(
-                                sim,
-                                &vec![alpha; *c],
-                                &vec![0.0; *c],
-                                &vec![0.0; *c],
-                                255.0,
-                                0.0,
-                            );
-                            global_avgpool_u8(sim, *h, *w, *c, input, &rq, out)
-                        }
+                    let run = if fp32 {
+                        global_avgpool_f32(sim, *h, *w, *c, input_addr, out)
+                    } else {
+                        let alpha = 1.0 / (*h * *w) as f32;
+                        let rq = RqBuf::create(
+                            sim,
+                            &vec![alpha; *c],
+                            &vec![0.0; *c],
+                            &vec![0.0; *c],
+                            out_qmax,
+                            0.0,
+                        );
+                        global_avgpool_u8(sim, *h, *w, *c, input_addr, &rq, out)
                     };
-                    (out, "avgpool".to_string(), run, false)
+                    (out, *c, "avgpool".to_string(), run, false)
                 }
                 LayerKind::Fc { k, n, name } => {
                     let out = sim.alloc((n.max(&64) * esz) as u64);
-                    let run = match precision {
+                    let run = match lp {
                         Precision::Fp32 => {
                             let w = sim.alloc((k * n * 4) as u64);
                             let b = sim.alloc((n * 4) as u64);
                             if write_data {
-                                let wv: Vec<f32> = (0..k * n)
-                                    .map(|_| (lcg(&mut seed) % 200) as f32 / 1000.0 - 0.1)
-                                    .collect();
+                                let wv = synth_f32(&mut seed, k * n);
                                 sim.write_f32s(w, &wv);
                                 sim.write_f32s(b, &vec![0.01; *n]);
                             }
-                            matmul_f32(sim, 1, *k, *n, input, w, b, out, false)
+                            matmul_f32(sim, 1, *k, *n, input_addr, w, b, out, false)
                         }
                         Precision::Int8 => {
                             let w = sim.alloc((k * n) as u64);
                             if write_data {
-                                let wv: Vec<i8> =
-                                    (0..k * n).map(|_| (lcg(&mut seed) % 256) as i8).collect();
+                                let wv = synth_i8(&mut seed, k * n);
                                 sim.write_i8(w, &wv);
                             }
-                            let rq = Self::rqbuf(sim, *n, *k, false);
-                            matmul_int8(sim, 1, *k, *n, input, w, &rq, out)
+                            let rq = Self::rqbuf(sim, *n, *k, out_qmax);
+                            matmul_int8(sim, 1, *k, *n, input_addr, w, &rq, out)
                         }
                         Precision::Sub { abits, wbits, use_vbitpack } => {
                             let codes: Vec<u8> = if write_data {
-                                (0..k * n).map(|_| (lcg(&mut seed) % (1 << wbits)) as u8).collect()
+                                synth_codes(&mut seed, k * n, wbits)
                             } else {
                                 vec![0u8; k * n]
                             };
@@ -284,32 +649,40 @@ impl ModelRunner {
                                     sim.machine.mem.write_u64_le(w + (i * 8) as u64, word, 8);
                                 }
                             }
-                            let rq = Self::rqbuf(sim, *n, *k, false);
+                            let rq = Self::rqbuf(sim, *n, *k, out_qmax);
                             matmul_bitserial(
-                                sim, 1, *k, *n, abits, input, &wpk, w, &rq, out, use_vbitpack,
-                                idx_vec,
+                                sim, 1, *k, *n, abits, input_addr, &wpk, w, &rq, out,
+                                use_vbitpack, idx_vec,
                             )
                         }
                     };
-                    (out, name.clone(), run, true)
+                    (out, *n, name.clone(), run, true)
                 }
             };
             maps.push(out_addr);
             let stats = sim.stats().delta_since(&before);
-            reports.push(LayerReport { name, quantized, run, stats });
+            reports.push(LayerReport {
+                name,
+                quantized,
+                precision: lp,
+                out_addr,
+                out_elems,
+                run,
+                stats,
+            });
         }
-        let out_elems = net.last().map(|l| layer_out_elems(&l.kind)).unwrap_or(input_elems);
-        ModelRun { reports, out_addr: *maps.last().unwrap(), out_elems }
+        let (final_addr, final_elems) = reports
+            .last()
+            .map(|r| (r.out_addr, r.out_elems))
+            .unwrap_or((in_addr, input_elems));
+        ModelRun { reports, out_addr: final_addr, out_elems: final_elems }
     }
 
-    /// Synthetic per-channel requant parameters that keep code values in a
-    /// sane range: alpha ~ 1/K so accumulators map back onto the u8 grid.
-    fn rqbuf(sim: &mut Sim, n: usize, k: usize, _relu: bool) -> RqBuf {
-        let alpha = 1.0 / (k as f32).max(1.0);
-        let alphas: Vec<f32> = (0..n).map(|j| alpha * (1.0 + (j % 7) as f32 * 0.01)).collect();
-        let betas = vec![-alpha * 0.25; n];
-        let biases = vec![0.5; n];
-        RqBuf::create(sim, &alphas, &betas, &biases, 255.0, 0.0)
+    /// Allocate the synthetic requant parameter block ([`synth_rq_params`])
+    /// with the consumer-grid clamp `qmax` (the re-pack rule).
+    fn rqbuf(sim: &mut Sim, n: usize, k: usize, qmax: f32) -> RqBuf {
+        let (alphas, betas, biases) = synth_rq_params(n, k);
+        RqBuf::create(sim, &alphas, &betas, &biases, qmax, 0.0)
     }
 }
 
@@ -320,10 +693,9 @@ mod tests {
     use crate::nn::resnet::resnet18_cifar;
     use crate::sim::SimMode;
 
-    #[test]
-    fn tiny_net_runs_all_precisions() {
+    fn tiny_net() -> Vec<crate::nn::NetLayer> {
         // A 2-layer slice of the graph exercises conv+pool+fc quickly.
-        let net = vec![
+        vec![
             crate::nn::NetLayer {
                 kind: crate::nn::LayerKind::Conv(crate::nn::ConvLayer {
                     name: "c1".into(),
@@ -354,9 +726,14 @@ mod tests {
                 input: 2,
                 residual_from: None,
             },
-        ];
+        ]
+    }
+
+    #[test]
+    fn tiny_net_runs_all_precisions() {
         // NOTE: map 0 in run() is always the 32×32×3 input buffer; this tiny
         // net reads garbage from it, which is fine for a smoke test.
+        let net = tiny_net();
         for (cfg, prec) in [
             (MachineConfig::ara(4), Precision::Fp32),
             (MachineConfig::ara(4), Precision::Int8),
@@ -368,6 +745,23 @@ mod tests {
             assert_eq!(reports.len(), 3);
             assert!(reports.iter().all(|r| r.run.cycles > 0), "{prec:?}");
         }
+    }
+
+    #[test]
+    fn mixed_schedule_dispatches_per_layer() {
+        let net = tiny_net();
+        let map = PrecisionMap::uniform(Precision::Sub {
+            abits: 2,
+            wbits: 2,
+            use_vbitpack: true,
+        })
+        .with("fc", Precision::Int8);
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        sim.set_mode(SimMode::TimingOnly);
+        let run = ModelRunner::run_scheduled(&mut sim, &net, &map, false, None);
+        assert_eq!(run.reports[0].precision.label(), "w2a2");
+        assert_eq!(run.reports[2].precision.label(), "int8");
+        assert!(run.reports.iter().all(|r| r.run.cycles > 0));
     }
 
     #[test]
@@ -393,5 +787,48 @@ mod tests {
             speedup > 3.0,
             "Int1 should be several times faster than Int8 (got {speedup:.2}x)"
         );
+    }
+
+    #[test]
+    fn precision_map_parse_validate_and_consumer_bits() {
+        let net = tiny_net();
+        let map = PrecisionMap::parse("int8;c1=w2a2").unwrap();
+        assert!(!map.is_uniform());
+        assert_eq!(map.spec(), "int8;c1=w2a2");
+        assert!(map.validate(&net).is_ok());
+        assert!(PrecisionMap::parse("int8;ghost=w2a2").unwrap().validate(&net).is_err());
+        assert!(PrecisionMap::parse("fp32;c1=int8").unwrap().validate(&net).is_err());
+        // fp32 smuggled in through overrides must be rejected even when every
+        // layer resolves to fp32 — the element size follows the default.
+        assert!(PrecisionMap::parse("int8;c1=fp32;fc=fp32").unwrap().validate(&net).is_err());
+        let fc_net = vec![crate::nn::NetLayer {
+            kind: crate::nn::LayerKind::Fc { k: 64, n: 10, name: "fc".into() },
+            input: 0,
+            residual_from: None,
+        }];
+        assert!(PrecisionMap::parse("int8;fc=fp32").unwrap().validate(&fc_net).is_err());
+        assert!(PrecisionMap::parse("w9a9").is_err());
+        // Overrides may only name quantized layers: the stem is pinned, so a
+        // stem override would be a silent no-op with a misleading label.
+        let rnet = resnet18_cifar(10);
+        assert!(PrecisionMap::parse("int8;stem=w2a2").unwrap().validate(&rnet).is_err());
+
+        // Redundant overrides collapse to canonical form: the same schedule
+        // is always the same map (and the same timing-cache key).
+        let redundant = PrecisionMap::parse("int8;c1=w2a2;fc=int8").unwrap();
+        assert_eq!(redundant, map);
+        let mut back = map.clone();
+        back.set("c1", Precision::Int8);
+        assert_eq!(back, PrecisionMap::uniform(Precision::Int8));
+        assert!(back.is_uniform());
+        assert!(map.validate_machine(&net, &MachineConfig::quark(4)).is_ok());
+        assert!(map.validate_machine(&net, &MachineConfig::ara(4)).is_err());
+
+        // c1 reads map 0 at 2 bits; pool reads map 1 at 8; fc reads map 2 at 8.
+        let resolved = map.resolve(&net);
+        let bits = map_consumer_bits(&net, &resolved);
+        assert_eq!(bits, vec![2, 8, 8, 8]);
+        assert_eq!(grid_qmax(2), 3);
+        assert_eq!(grid_qmax(8), 255);
     }
 }

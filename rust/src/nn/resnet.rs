@@ -10,6 +10,7 @@
 //! the 3 projection shortcuts, and the final FC.
 
 use crate::kernels::Conv2dParams;
+use crate::nn::model::{Precision, PrecisionMap};
 
 /// One convolution layer instance.
 #[derive(Clone, Debug)]
@@ -151,6 +152,27 @@ pub fn resnet18_cifar(num_classes: usize) -> Vec<NetLayer> {
     layers
 }
 
+/// SPEED-style (arXiv 2409.14017) layer-wise precision schedule for the
+/// CIFAR ResNet-18: the accuracy-critical first-stage convolutions and the
+/// final classifier run 8-bit, every other quantized layer runs 2-bit
+/// bit-serial (Ottavi et al., arXiv 2010.04073, motivate the same split for
+/// mixed-precision RISC-V cores). The unquantized stem is pinned to int8 by
+/// [`PrecisionMap::resolve`] regardless. Works on truncated graphs too
+/// (only layers present in `net` are overridden).
+pub fn resnet18_mixed_schedule(net: &[NetLayer]) -> PrecisionMap {
+    let mut map = PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
+    for l in net {
+        match &l.kind {
+            LayerKind::Conv(c) if c.quantized && c.name.contains("_s1") => {
+                map.set(&c.name, Precision::Int8);
+            }
+            LayerKind::Fc { name, .. } => map.set(name, Precision::Int8),
+            _ => {}
+        }
+    }
+    map
+}
+
 /// Names + parameters of the quantized layers (Fig. 3's x-axis).
 pub fn quantized_layers(net: &[NetLayer]) -> Vec<(String, Conv2dParams)> {
     let mut out = Vec::new();
@@ -196,6 +218,22 @@ mod tests {
         for (name, p) in quantized_layers(&net) {
             assert_eq!(p.k() % 64, 0, "{name} K={}", p.k());
         }
+    }
+
+    #[test]
+    fn mixed_schedule_splits_first_stage_and_classifier() {
+        let net = resnet18_cifar(100);
+        let map = resnet18_mixed_schedule(&net);
+        assert!(!map.is_uniform());
+        // 4 first-stage convs (no projection in stage 1) + fc.
+        assert_eq!(map.overrides().len(), 5);
+        assert_eq!(map.of("conv1_s1b1a"), Precision::Int8);
+        assert_eq!(map.of("fc"), Precision::Int8);
+        assert_eq!(
+            map.of("conv11_s3b1a"),
+            Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true }
+        );
+        assert!(map.validate(&net).is_ok());
     }
 
     #[test]

@@ -19,6 +19,13 @@
 //!
 //!   `out_real = s_a·(α·ACC + β·ASUM) + bias`, then requantized onto the next
 //!   layer's unsigned grid.
+//!
+//! Under a mixed per-layer schedule ([`crate::nn::model::PrecisionMap`])
+//! "the next layer's unsigned grid" is literal: the requant clamp of each
+//! layer targets `2^b − 1` for the narrowest consumer's activation width
+//! `b` ([`crate::nn::model::map_consumer_bits`]), so an 8-bit layer feeding
+//! a 2-bit one emits valid 2-bit codes and no separate repack pass is
+//! needed.
 
 pub mod lsq;
 pub mod pack;

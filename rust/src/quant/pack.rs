@@ -10,6 +10,12 @@
 //!   `vbitpack` accelerates (see `kernels/bitpack.rs` for both the custom-
 //!   instruction path and the pure-RVV fallback). The functions here serve as
 //!   the golden reference those kernels are tested against.
+//!
+//! Under a mixed per-layer schedule each layer's weights are packed at *its
+//! own* `weight_bits` (the `bits` argument below; the model runner passes
+//! the per-layer value from [`crate::nn::model::PrecisionMap`]) — the
+//! plane-major layout is width-agnostic, so 1-, 2-, and 8-bit layers can
+//! coexist in one network with no layout changes.
 
 /// Number of 64-bit words per plane for a K-element tensor.
 pub fn planes_words(k: usize) -> usize {

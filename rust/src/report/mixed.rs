@@ -1,0 +1,180 @@
+//! Layer-wise schedule-space comparison (beyond the paper's uniform runs):
+//! per-layer and whole-network cycles for uniform Int8, uniform Int2
+//! (w2a2), and the mixed per-layer schedule
+//! ([`crate::nn::resnet::resnet18_mixed_schedule`]: first-stage convs + the
+//! classifier at 8-bit, everything else 2-bit bit-serial), all on the same
+//! Quark-4L machine so differences are schedule-only.
+//!
+//! The acceptance property — a mixed schedule lands strictly between the
+//! uniform baselines on total cycles — is asserted by
+//! `rust/tests/mixed_precision.rs` and `benches/mixed_precision.rs`.
+
+use crate::arch::MachineConfig;
+use crate::nn::model::{ModelRunner, Precision, PrecisionMap};
+use crate::nn::resnet::{resnet18_cifar, resnet18_mixed_schedule};
+use crate::nn::NetLayer;
+use crate::sim::{Sim, SimMode};
+
+/// Per-layer cycles under the three schedules.
+#[derive(Clone, Debug)]
+pub struct MixedRow {
+    pub layer: String,
+    /// The layer's resolved precision under the mixed schedule.
+    pub mixed_precision: String,
+    pub int8_cycles: u64,
+    pub int2_cycles: u64,
+    pub mixed_cycles: u64,
+}
+
+/// The full comparison: per-layer rows plus whole-network totals.
+#[derive(Clone, Debug)]
+pub struct MixedReport {
+    pub machine: String,
+    pub rows: Vec<MixedRow>,
+    pub int8_total: u64,
+    pub int2_total: u64,
+    pub mixed_total: u64,
+}
+
+fn run_cycles(
+    machine: &MachineConfig,
+    net: &[NetLayer],
+    schedule: &PrecisionMap,
+) -> Vec<(String, String, u64)> {
+    let mut sim = Sim::new(machine.clone());
+    sim.set_mode(SimMode::TimingOnly);
+    let run = ModelRunner::run_scheduled(&mut sim, net, schedule, false, None);
+    run.reports
+        .into_iter()
+        .map(|r| (r.name, r.precision.label(), r.run.cycles))
+        .collect()
+}
+
+/// Generate the comparison on Quark-4L (int8 is integer-only, so all three
+/// schedules run on the same machine).
+pub fn generate(net: &[NetLayer]) -> MixedReport {
+    let machine = MachineConfig::quark(4);
+    let int2_prec = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
+    let int8 = run_cycles(&machine, net, &PrecisionMap::uniform(Precision::Int8));
+    let int2 = run_cycles(&machine, net, &PrecisionMap::uniform(int2_prec));
+    let mixed = run_cycles(&machine, net, &resnet18_mixed_schedule(net));
+    let rows: Vec<MixedRow> = int8
+        .iter()
+        .zip(int2.iter())
+        .zip(mixed.iter())
+        .map(|((a, b), m)| MixedRow {
+            layer: a.0.clone(),
+            mixed_precision: m.1.clone(),
+            int8_cycles: a.2,
+            int2_cycles: b.2,
+            mixed_cycles: m.2,
+        })
+        .collect();
+    MixedReport {
+        machine: machine.name.clone(),
+        int8_total: rows.iter().map(|r| r.int8_cycles).sum(),
+        int2_total: rows.iter().map(|r| r.int2_cycles).sum(),
+        mixed_total: rows.iter().map(|r| r.mixed_cycles).sum(),
+        rows,
+    }
+}
+
+/// Full-size comparison (the paper's ResNet-18/CIFAR-100 workload).
+pub fn generate_default() -> MixedReport {
+    generate(&resnet18_cifar(100))
+}
+
+impl MixedReport {
+    pub fn markdown(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.layer.clone(),
+                    r.mixed_precision.clone(),
+                    r.int8_cycles.to_string(),
+                    r.int2_cycles.to_string(),
+                    r.mixed_cycles.to_string(),
+                ]
+            })
+            .collect();
+        let mut out = format!(
+            "# Mixed per-layer precision — ResNet-18 schedule sweep ({})\n\n",
+            self.machine
+        );
+        out.push_str(&super::md_table(
+            &["layer", "mixed prec", "int8 cycles", "w2a2 cycles", "mixed cycles"],
+            &rows,
+        ));
+        out.push_str(&format!(
+            "\n**Totals:** int8 {} | mixed {} ({:.2}x vs int8) | w2a2 {} ({:.2}x vs int8)\n",
+            self.int8_total,
+            self.mixed_total,
+            self.int8_total as f64 / self.mixed_total.max(1) as f64,
+            self.int2_total,
+            self.int8_total as f64 / self.int2_total.max(1) as f64,
+        ));
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.layer.clone(),
+                    r.mixed_precision.clone(),
+                    r.int8_cycles.to_string(),
+                    r.int2_cycles.to_string(),
+                    r.mixed_cycles.to_string(),
+                ]
+            })
+            .collect();
+        super::csv(
+            &["layer", "mixed_precision", "int8_cycles", "w2a2_cycles", "mixed_cycles"],
+            &rows,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Conv2dParams;
+    use crate::nn::{ConvLayer, LayerKind};
+
+    /// Two stages' worth of names on a small net: the mixed schedule keeps
+    /// `_s1` at int8 and drops `_s2` to 2-bit.
+    fn mini_net() -> Vec<NetLayer> {
+        let conv = |name: &str| ConvLayer {
+            name: name.into(),
+            params: Conv2dParams { h: 8, w: 8, c_in: 64, c_out: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
+            relu: true,
+            residual: false,
+            quantized: true,
+        };
+        vec![
+            NetLayer { kind: LayerKind::Conv(conv("conv1_s1b1a")), input: 0, residual_from: None },
+            NetLayer { kind: LayerKind::Conv(conv("conv2_s2b1a")), input: 1, residual_from: None },
+        ]
+    }
+
+    #[test]
+    fn mixed_total_lands_between_uniforms_on_mini_net() {
+        let rep = generate(&mini_net());
+        assert_eq!(rep.rows.len(), 2);
+        assert_eq!(rep.rows[0].mixed_precision, "int8");
+        assert_eq!(rep.rows[1].mixed_precision, "w2a2");
+        assert!(
+            rep.int2_total < rep.mixed_total && rep.mixed_total < rep.int8_total,
+            "w2a2 {} < mixed {} < int8 {}",
+            rep.int2_total,
+            rep.mixed_total,
+            rep.int8_total
+        );
+        assert!(rep.markdown().contains("conv1_s1b1a"));
+        assert!(rep.csv().lines().count() >= 3);
+    }
+}

@@ -8,12 +8,14 @@
 //! | Table II | [`table2`] | physical implementation table from the tech model |
 //! | Fig. 5 | [`table2`] (`fig5_markdown`) | per-lane area breakdown |
 //! | headline claims | [`summary`] | 5.7×/3.5× speedups, 2.3×/1.9× lane ratios |
+//! | — (beyond the paper) | [`mixed`] | per-layer precision schedule sweep: uniform int8 vs uniform 2-bit vs mixed |
 //!
 //! Every generator returns its data structure (for tests and benches) and can
 //! render markdown + CSV under `artifacts/reports/`.
 
 pub mod fig3;
 pub mod fig4;
+pub mod mixed;
 pub mod summary;
 pub mod table1;
 pub mod table2;

@@ -1,0 +1,206 @@
+//! Mixed per-layer precision, end to end:
+//!
+//! * a mixed-schedule ResNet basic block executed in `Full` mode must match
+//!   the naive-i128 host golden model ([`quark::nn::golden`]) **layer by
+//!   layer, bit-exactly**, across schedules that exercise every re-pack
+//!   boundary (int8 → 2-bit, 2-bit → 2-bit with residual, 2-bit → int8,
+//!   1-bit layers);
+//! * a full ResNet-18 under the mixed schedule must land strictly between
+//!   the uniform Int8 and uniform Int2 baselines on whole-network cycles,
+//!   both through the simulator directly and through the coordinator
+//!   `INFER` path (per-request schedules, separate timing-cache entries);
+//! * functional inference under a mixed schedule must produce real,
+//!   deterministic logits.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use quark::arch::MachineConfig;
+use quark::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use quark::kernels::Conv2dParams;
+use quark::nn::golden::run_golden;
+use quark::nn::model::{ModelRunner, Precision, PrecisionMap};
+use quark::nn::resnet::{resnet18_cifar, resnet18_mixed_schedule};
+use quark::nn::{ConvLayer, LayerKind, NetLayer};
+use quark::sim::{Sim, SimMode};
+
+const INT8: Precision = Precision::Int8;
+const W2A2: Precision = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
+const W1A1: Precision = Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true };
+
+/// A ResNet basic block at 8×8×64 (stem → projection + two 3×3 convs with a
+/// residual add → pool → FC): small enough for `Full`-mode simulation in a
+/// debug test while covering every layer kind and skip wiring.
+fn block_net() -> Vec<NetLayer> {
+    let conv = |name: &str,
+                c_in: usize,
+                ksz: usize,
+                relu: bool,
+                residual: bool,
+                quantized: bool| ConvLayer {
+        name: name.into(),
+        params: Conv2dParams {
+            h: 8,
+            w: 8,
+            c_in,
+            c_out: 64,
+            kh: ksz,
+            kw: ksz,
+            stride: 1,
+            pad: if ksz == 3 { 1 } else { 0 },
+        },
+        relu,
+        residual,
+        quantized,
+    };
+    vec![
+        // 0: unquantized stem (pinned to int8 by resolve()) — writes map 1.
+        NetLayer { kind: LayerKind::Conv(conv("stem", 3, 3, true, false, false)), input: 0, residual_from: None },
+        // 1: projection shortcut — map 2.
+        NetLayer { kind: LayerKind::Conv(conv("proj", 64, 1, false, false, true)), input: 1, residual_from: None },
+        // 2: first block conv — map 3.
+        NetLayer { kind: LayerKind::Conv(conv("c1", 64, 3, true, false, true)), input: 1, residual_from: None },
+        // 3: second block conv, adds the projection residual — map 4.
+        NetLayer { kind: LayerKind::Conv(conv("c2", 64, 3, true, true, true)), input: 3, residual_from: Some(2) },
+        // 4: global pool — map 5.
+        NetLayer { kind: LayerKind::AvgPool { h: 8, w: 8, c: 64 }, input: 4, residual_from: None },
+        // 5: classifier — map 6.
+        NetLayer { kind: LayerKind::Fc { k: 64, n: 10, name: "fc".into() }, input: 5, residual_from: None },
+    ]
+}
+
+fn test_input() -> Vec<u8> {
+    (0..32 * 32 * 3).map(|i| ((i * 7 + 13) % 251) as u8).collect()
+}
+
+#[test]
+fn mixed_block_matches_naive_i128_golden_layer_by_layer() {
+    let net = block_net();
+    let schedules = [
+        // int8 first conv inside an otherwise 2-bit block: int8 → 2-bit and
+        // 2-bit → int8 boundaries, plus the 2-bit residual add.
+        PrecisionMap::uniform(W2A2).with("c1", INT8),
+        // 1-bit layer inside an int8 net: 8-bit → 1-bit repack.
+        PrecisionMap::uniform(INT8).with("c2", W1A1),
+        // classifier at int8, everything else 2-bit (the mixed-schedule
+        // shape the report uses).
+        PrecisionMap::uniform(W2A2).with("fc", INT8),
+        // uniform baselines stay golden too.
+        PrecisionMap::uniform(INT8),
+        PrecisionMap::uniform(W2A2),
+    ];
+    let input = test_input();
+    for schedule in schedules {
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        sim.set_mode(SimMode::Full);
+        let run = ModelRunner::run_scheduled(&mut sim, &net, &schedule, true, Some(&input));
+        let golden = run_golden(&net, &schedule, Some(&input));
+        assert_eq!(run.reports.len(), net.len());
+        assert_eq!(golden.maps.len(), net.len() + 1);
+        for (i, r) in run.reports.iter().enumerate() {
+            let got = sim.read_u8s(r.out_addr, r.out_elems);
+            let want = &golden.maps[i + 1];
+            assert_eq!(
+                &got,
+                want,
+                "layer {i} ({} @ {}) diverges from the i128 golden model under {}",
+                r.name,
+                r.precision.label(),
+                schedule.spec()
+            );
+        }
+    }
+}
+
+#[test]
+fn repack_boundaries_clamp_onto_the_consumer_grid() {
+    // Under `w2a2 with c1=int8`, map 1 (the stem output) feeds both the
+    // 2-bit projection and the int8 c1 — its narrowest consumer is 2-bit,
+    // so every stored code must sit on the [0, 3] grid, in the simulator
+    // and the golden model alike.
+    let net = block_net();
+    let schedule = PrecisionMap::uniform(W2A2).with("c1", INT8);
+    let input = test_input();
+    let mut sim = Sim::new(MachineConfig::quark(4));
+    sim.set_mode(SimMode::Full);
+    let run = ModelRunner::run_scheduled(&mut sim, &net, &schedule, true, Some(&input));
+    let stem = &run.reports[0];
+    let codes = sim.read_u8s(stem.out_addr, stem.out_elems);
+    assert!(codes.iter().all(|&v| v <= 3), "stem output escapes the 2-bit grid");
+    assert!(codes.iter().any(|&v| v > 0), "clamped map still carries data");
+    let golden = run_golden(&net, &schedule, Some(&input));
+    assert!(golden.maps[1].iter().all(|&v| v <= 3));
+    // The grid is per-map, not global: under uniform int8 the same stem
+    // output keeps its full 8-bit range.
+    let mut sim8 = Sim::new(MachineConfig::quark(4));
+    sim8.set_mode(SimMode::Full);
+    let run8 =
+        ModelRunner::run_scheduled(&mut sim8, &net, &PrecisionMap::uniform(INT8), true, Some(&input));
+    let stem8 = &run8.reports[0];
+    let codes8 = sim8.read_u8s(stem8.out_addr, stem8.out_elems);
+    assert!(codes8.iter().any(|&v| v > 3), "int8-consumed stem keeps the 8-bit grid");
+}
+
+#[test]
+fn mixed_resnet18_serves_between_uniform_baselines_via_coordinator() {
+    // The acceptance run: full ResNet-18 with a non-uniform map through the
+    // coordinator INFER path; its cycle count sits strictly between the
+    // uniform int8 and uniform 2-bit deployments.
+    let net = resnet18_cifar(100);
+    let mixed_map = resnet18_mixed_schedule(&net);
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.net = Arc::new(net);
+    cfg.schedule = PrecisionMap::uniform(INT8);
+    cfg.workers = 1;
+    cfg.batch_size = 1;
+    cfg.batch_timeout = Duration::from_millis(1);
+    let coord = Coordinator::start(cfg);
+    let get = |id: u64, sched: Option<PrecisionMap>| {
+        let rx = coord.submit(InferenceRequest { id, input: None, schedule: sched }).unwrap();
+        rx.recv_timeout(Duration::from_secs(600)).unwrap()
+    };
+    let int8 = get(0, None); // deployment default: uniform int8
+    let mixed = get(1, Some(mixed_map));
+    let int2 = get(2, Some(PrecisionMap::uniform(W2A2)));
+    assert!(
+        int2.sim_cycles < mixed.sim_cycles && mixed.sim_cycles < int8.sim_cycles,
+        "uniform w2a2 {} < mixed {} < uniform int8 {}",
+        int2.sim_cycles,
+        mixed.sim_cycles,
+        int8.sim_cycles
+    );
+    assert!(mixed.precision.starts_with("mixed("), "{}", mixed.precision);
+    // Each schedule is its own cache entry; repeats are lookups.
+    let again = get(3, Some(resnet18_mixed_schedule(&resnet18_cifar(100))));
+    assert!(again.timing_cached, "equal schedules must share a cache entry");
+    assert_eq!(again.sim_cycles, mixed.sim_cycles);
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_schedule_functional_inference_produces_real_logits() {
+    // Functional (input-carrying) inference under a per-request mixed
+    // schedule on the demo net: real logits, deterministic, and different
+    // from the uniform deployment's output.
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.workers = 1;
+    cfg.batch_size = 2;
+    let coord = Coordinator::start(cfg);
+    let mixed = PrecisionMap::uniform(W2A2).with("c2", INT8);
+    let input = vec![200u8; 32 * 32 * 3];
+    let get = |id: u64, sched: Option<PrecisionMap>| {
+        let rx = coord
+            .submit(InferenceRequest { id, input: Some(input.clone()), schedule: sched })
+            .unwrap();
+        rx.recv_timeout(Duration::from_secs(300)).unwrap()
+    };
+    let a = get(0, Some(mixed.clone()));
+    let b = get(1, Some(mixed.clone()));
+    let uni = get(2, None);
+    let (la, lb, lu) = (a.logits.unwrap(), b.logits.unwrap(), uni.logits.unwrap());
+    assert_eq!(la.len(), 100);
+    assert!(a.argmax.unwrap() < 100);
+    assert_eq!(la, lb, "mixed-schedule inference must be deterministic");
+    assert_ne!(la, lu, "schedule change must change the computation");
+    coord.shutdown();
+}
