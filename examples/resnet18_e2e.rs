@@ -19,7 +19,7 @@ fn run(cfg: MachineConfig, precision: Precision, full: bool) -> (Vec<quark::nn::
     // TimingOnly produces identical cycle counts (asserted in the tests).
     sim.set_mode(if full { SimMode::Full } else { SimMode::TimingOnly });
     let t0 = std::time::Instant::now();
-    let reports = ModelRunner::run(&mut sim, &net, precision, full);
+    let reports = ModelRunner::run(&mut sim, &net, precision);
     (reports, t0.elapsed().as_secs_f64())
 }
 

@@ -20,7 +20,7 @@ fn per_request_sim_baseline(n: u64) -> f64 {
     for _ in 0..n {
         let mut sim = Sim::new(cfg.machine.clone());
         sim.set_mode(SimMode::TimingOnly);
-        let run = ModelRunner::run_scheduled(&mut sim, &cfg.net, &cfg.schedule, false, None);
+        let run = ModelRunner::run_scheduled(&mut sim, &cfg.net, &cfg.schedule, None);
         sink += run.reports.iter().map(|r| r.run.cycles).sum::<u64>();
     }
     assert!(sink > 0);

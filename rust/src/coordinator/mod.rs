@@ -26,6 +26,16 @@
 //!   [`PrecisionMap`], so repeat requests against the same deployment resolve
 //!   timing with a lookup instead of a multi-ms re-simulation
 //!   (`benches/coordinator_throughput.rs` measures the win).
+//! * **Compiled-program cache.** Next to the timing cache, and under the
+//!   same key, the coordinator caches [`CompiledProgram`] artifacts
+//!   ([`crate::program::compile`]): the emitted instruction trace, buffer
+//!   plan, and init image of one (net, machine, schedule) deployment. The
+//!   warm serving path does **zero kernel emission** — a worker writes the
+//!   request's input bytes, replays the trace
+//!   ([`Sim::execute_functional`]), and reads the logits
+//!   (`benches/program_replay.rs` measures the win over re-emission).
+//!   Timing-cache misses also replay the cached program (`Sim::execute` in
+//!   `TimingOnly`) instead of re-emitting.
 //! * **Per-request precision schedules.** A request may carry its own
 //!   [`PrecisionMap`] (wire: the `prec=` field of `INFER`), overriding the
 //!   deployment default — the schedule-space exploration the mixed-precision
@@ -51,8 +61,9 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::arch::MachineConfig;
-use crate::nn::model::{ModelRunner, Precision, PrecisionMap};
+use crate::nn::model::{Precision, PrecisionMap};
 use crate::nn::{LayerKind, NetLayer};
+use crate::program::{compile, CompiledProgram};
 use crate::sim::{Sim, SimMode};
 
 /// One inference request (CIFAR-sized input codes).
@@ -179,92 +190,16 @@ pub fn demo_net() -> Vec<NetLayer> {
     ]
 }
 
-// ---- structural fingerprints (timing-cache keys) ----
+// ---- structural fingerprints (cache keys; defined next to the artifact
+//      they key, re-exported here for the serving-layer API surface) ----
 
-#[inline]
-fn fnv(h: &mut u64, v: u64) {
-    // FNV-1a over the 8 bytes of `v`.
-    for b in v.to_le_bytes() {
-        *h ^= b as u64;
-        *h = h.wrapping_mul(0x100_0000_01b3);
-    }
-}
+pub use crate::program::{machine_fingerprint, net_fingerprint};
 
-fn fnv_str(h: &mut u64, s: &str) {
-    fnv(h, s.len() as u64);
-    for &b in s.as_bytes() {
-        *h ^= b as u64;
-        *h = h.wrapping_mul(0x100_0000_01b3);
-    }
-}
-
-/// Structural identity of a network graph: every field that can change the
-/// emitted instruction stream (shapes, layer kinds, wiring) is folded in.
-pub fn net_fingerprint(net: &[NetLayer]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    fnv(&mut h, net.len() as u64);
-    for layer in net {
-        fnv(&mut h, layer.input as u64);
-        fnv(&mut h, layer.residual_from.map(|i| i as u64 + 1).unwrap_or(0));
-        match &layer.kind {
-            LayerKind::Conv(c) => {
-                fnv(&mut h, 1);
-                fnv_str(&mut h, &c.name);
-                let p = c.params;
-                for v in [p.h, p.w, p.c_in, p.c_out, p.kh, p.kw, p.stride, p.pad] {
-                    fnv(&mut h, v as u64);
-                }
-                fnv(&mut h, c.relu as u64);
-                fnv(&mut h, c.residual as u64);
-                fnv(&mut h, c.quantized as u64);
-            }
-            LayerKind::AvgPool { h: ph, w: pw, c } => {
-                fnv(&mut h, 2);
-                for v in [*ph, *pw, *c] {
-                    fnv(&mut h, v as u64);
-                }
-            }
-            LayerKind::Fc { k, n, name } => {
-                fnv(&mut h, 3);
-                fnv_str(&mut h, name);
-                fnv(&mut h, *k as u64);
-                fnv(&mut h, *n as u64);
-            }
-        }
-    }
-    h
-}
-
-/// Structural identity of a machine configuration: every timing-model knob.
-pub fn machine_fingerprint(cfg: &MachineConfig) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    fnv_str(&mut h, &cfg.name);
-    for v in [
-        cfg.lanes as u64,
-        cfg.vlen_bits as u64,
-        cfg.has_vfpu as u64,
-        cfg.has_quark_isa as u64,
-        cfg.freq_ghz.to_bits(),
-        cfg.axi_bytes_per_cycle as u64,
-        cfg.mem_latency,
-        cfg.dispatch_latency,
-        cfg.vstartup_latency,
-        cfg.chain_latency,
-        cfg.mask_elems_per_lane_cycle.to_bits(),
-        cfg.scalar_fp_latency,
-        cfg.scalar_mul_latency,
-        cfg.scalar_load_latency,
-        cfg.vq_depth as u64,
-    ] {
-        fnv(&mut h, v);
-    }
-    h
-}
-
-/// Timing-cache key: the deployment fingerprints plus the (canonical-form)
-/// precision schedule the request ran under.
+/// Cache key shared by the timing cache and the program cache: the
+/// deployment fingerprints plus the (canonical-form) precision schedule the
+/// request ran under.
 #[derive(Clone, PartialEq, Eq, Hash)]
-struct TimingKey {
+struct DeployKey {
     net_fp: u64,
     machine_fp: u64,
     schedule: PrecisionMap,
@@ -321,6 +256,15 @@ pub struct CoordStats {
     /// Timing-cache hit/miss counts (one resolution per request).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Program-cache hit/miss counts. A program is resolved whenever a
+    /// request needs one (it carries input bytes, or its timing missed);
+    /// timing-cache hits without input resolve no program.
+    pub program_hits: u64,
+    pub program_misses: u64,
+    /// Total wall-clock µs spent compiling programs (cold path) vs
+    /// replaying them (warm path) — the compile-once/run-many ratio.
+    pub compile_us: u64,
+    pub replay_us: u64,
     /// End-to-end (queue + service) latency percentiles in µs over the
     /// most recent `LAT_WINDOW` responses.
     pub p50_us: u64,
@@ -338,6 +282,14 @@ const LAT_WINDOW: usize = 4096;
 /// (one fresh `TimingOnly` run each) but no longer memoized.
 const MAX_TIMING_ENTRIES: usize = 1024;
 
+/// Program-cache size bound — same insert-while-below-cap policy as the
+/// timing cache, but far smaller: a [`CompiledProgram`] holds the full
+/// dynamic instruction trace (tens of MB for ResNet-scale nets), so the cap
+/// bounds server *memory*, not just map growth. Past the cap, new schedules
+/// still serve (one fresh compile each) but the artifact is dropped after
+/// use instead of memoized.
+const MAX_PROGRAM_ENTRIES: usize = 16;
+
 struct Queued {
     req: InferenceRequest,
     enqueued: Instant,
@@ -351,9 +303,16 @@ struct Shared {
     batch_counter: AtomicU64,
     served: AtomicU64,
     rejected: AtomicU64,
-    timing_cache: Mutex<HashMap<TimingKey, TimingEntry>>,
+    timing_cache: Mutex<HashMap<DeployKey, TimingEntry>>,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    /// Compiled (net, machine, schedule) artifacts, `Arc`-shared with the
+    /// workers replaying them.
+    program_cache: Mutex<HashMap<DeployKey, Arc<CompiledProgram>>>,
+    program_hits: AtomicU64,
+    program_misses: AtomicU64,
+    compile_ns: AtomicU64,
+    replay_ns: AtomicU64,
     latencies: Mutex<LatWindow>,
     /// Per-worker nanoseconds spent inside batch service.
     busy_ns: Vec<AtomicU64>,
@@ -384,6 +343,11 @@ impl Coordinator {
             timing_cache: Mutex::new(HashMap::new()),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
+            program_cache: Mutex::new(HashMap::new()),
+            program_hits: AtomicU64::new(0),
+            program_misses: AtomicU64::new(0),
+            compile_ns: AtomicU64::new(0),
+            replay_ns: AtomicU64::new(0),
             latencies: Mutex::new(LatWindow::new(LAT_WINDOW)),
             busy_ns: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
             started: Instant::now(),
@@ -451,6 +415,10 @@ impl Coordinator {
             workers: self.cfg.workers,
             cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
+            program_hits: self.shared.program_hits.load(Ordering::Relaxed),
+            program_misses: self.shared.program_misses.load(Ordering::Relaxed),
+            compile_us: self.shared.compile_ns.load(Ordering::Relaxed) / 1_000,
+            replay_us: self.shared.replay_ns.load(Ordering::Relaxed) / 1_000,
             p50_us,
             p95_us,
             p99_us,
@@ -506,34 +474,30 @@ impl WorkerCore {
         self.sim.machine.mem.reset_alloc_to(self.heap_base);
     }
 
-    /// One `TimingOnly` pass over the configured net under `sched`
-    /// (cache-miss path).
-    fn timing_cycles(&mut self, cfg: &CoordinatorConfig, sched: &PrecisionMap) -> u64 {
+    /// One `TimingOnly` replay of `prog` (timing-cache-miss path — still
+    /// zero kernel emission when the program itself was cached).
+    fn timing_cycles(&mut self, prog: &CompiledProgram) -> u64 {
         self.rewind();
         self.sim.set_mode(SimMode::TimingOnly);
-        let run = ModelRunner::run_scheduled(&mut self.sim, &cfg.net, sched, false, None);
-        run.reports.iter().map(|r| r.run.cycles).sum()
+        let base = self.sim.alloc(prog.mem_len());
+        self.sim.execute(prog, base).cycles
     }
 
-    /// Functional (`Full`-mode) execution of the net on `input` under
-    /// `sched`; returns (logits, argmax).
-    fn infer(
-        &mut self,
-        cfg: &CoordinatorConfig,
-        sched: &PrecisionMap,
-        input: &[u8],
-    ) -> (Vec<f32>, usize) {
+    /// Functional replay of `prog` on `input`: write input bytes, replay the
+    /// trace (values only — cycles come from the timing cache), read
+    /// logits. Returns (logits, argmax).
+    fn infer(&mut self, prog: &CompiledProgram, input: &[u8]) -> (Vec<f32>, usize) {
         self.rewind();
-        self.sim.set_mode(SimMode::Full);
-        let run = ModelRunner::run_scheduled(&mut self.sim, &cfg.net, sched, true, Some(input));
-        let logits: Vec<f32> = match sched.default_precision() {
-            Precision::Fp32 => self.sim.read_f32s(run.out_addr, run.out_elems),
-            _ => self
-                .sim
+        let base = self.sim.alloc(prog.mem_len());
+        let run = self.sim.execute_functional(prog, base, Some(input));
+        let logits: Vec<f32> = if prog.is_fp32() {
+            self.sim.read_f32s(run.out_addr, run.out_elems)
+        } else {
+            self.sim
                 .read_u8s(run.out_addr, run.out_elems)
                 .iter()
                 .map(|&v| v as f32)
-                .collect(),
+                .collect()
         };
         let mut argmax = 0usize;
         for (i, &v) in logits.iter().enumerate() {
@@ -545,9 +509,49 @@ impl WorkerCore {
     }
 }
 
+/// Resolve the compiled program for `key`: cache hit is an `Arc` clone,
+/// miss compiles once. `memoize` decides whether a miss is inserted (below
+/// the cap): the functional serving path memoizes — it replays per request
+/// — while timing-only resolutions compile transiently, so probe-only
+/// schedules never pin a trace-sized artifact in server memory. Concurrent
+/// misses on one key may compile twice; last insert wins — both artifacts
+/// are identical (compilation is deterministic).
+fn resolve_program(
+    shared: &Shared,
+    cfg: &CoordinatorConfig,
+    key: &DeployKey,
+    sched: &PrecisionMap,
+    memoize: bool,
+) -> Arc<CompiledProgram> {
+    if let Some(p) = shared.program_cache.lock().unwrap().get(key) {
+        shared.program_hits.fetch_add(1, Ordering::Relaxed);
+        return p.clone();
+    }
+    shared.program_misses.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    let prog = Arc::new(
+        compile(&cfg.net, &cfg.machine, sched)
+            .expect("schedule was validated at submission"),
+    );
+    shared.compile_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    if memoize {
+        let mut cache = shared.program_cache.lock().unwrap();
+        // The deployment's *default* schedule is always memoizable, even at
+        // the cap (bounded at cap+1): clients cycling throwaway `prec=`
+        // schedules must not be able to lock the deployment's own warm path
+        // out of the cache for the life of the server.
+        if cache.len() < MAX_PROGRAM_ENTRIES || *sched == cfg.schedule {
+            cache.insert(key.clone(), prog.clone());
+        }
+    }
+    prog
+}
+
 /// Worker: claims batches (size- or timeout-bounded) and serves them on its
 /// persistent simulated core. Timing is resolved per request (requests in
-/// one batch may carry different schedules); the cache makes repeats free.
+/// one batch may carry different schedules); the caches make repeats free:
+/// warm timing is a map lookup, warm functional inference is a program
+/// replay with zero kernel emission.
 fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
     let mut core = WorkerCore::new(cfg.machine.clone());
     let net_fp = net_fingerprint(&cfg.net);
@@ -592,18 +596,29 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
         // Serve the batch on the persistent core.
         for item in batch {
             let sched = item.req.schedule.as_ref().unwrap_or(&cfg.schedule);
-            // Resolve timing: cache hit is a map lookup, miss is one
-            // TimingOnly simulation whose result every later request under
-            // the same (net, machine, schedule) key reuses.
-            let key = TimingKey { net_fp, machine_fp, schedule: sched.clone() };
+            let key = DeployKey { net_fp, machine_fp, schedule: sched.clone() };
+            // Resolve the compiled program when this request needs one: it
+            // carries input bytes (functional replay), or its timing misses
+            // below (TimingOnly replay). Warm timing-only probes touch
+            // neither cache entry's payload.
             let cached = shared.timing_cache.lock().unwrap().get(&key).copied();
+            let prog = if item.req.input.is_some() || cached.is_none() {
+                Some(resolve_program(&shared, &cfg, &key, sched, item.req.input.is_some()))
+            } else {
+                None
+            };
+            // Resolve timing: cache hit is a map lookup, miss is one
+            // TimingOnly program replay whose result every later request
+            // under the same (net, machine, schedule) key reuses.
             let (sim_cycles, timing_cached) = match cached {
                 Some(e) => {
                     shared.cache_hits.fetch_add(1, Ordering::Relaxed);
                     (e.sim_cycles, true)
                 }
                 None => {
-                    let c = core.timing_cycles(&cfg, sched);
+                    let t0 = Instant::now();
+                    let c = core.timing_cycles(prog.as_deref().unwrap());
+                    shared.replay_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     shared.cache_misses.fetch_add(1, Ordering::Relaxed);
                     let mut cache = shared.timing_cache.lock().unwrap();
                     if cache.len() < MAX_TIMING_ENTRIES {
@@ -619,7 +634,10 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
             let t0 = Instant::now();
             let (logits, argmax) = match &item.req.input {
                 Some(bytes) => {
-                    let (l, a) = core.infer(&cfg, sched, bytes);
+                    let (l, a) = core.infer(prog.as_deref().unwrap(), bytes);
+                    shared
+                        .replay_ns
+                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     (Some(l), Some(a))
                 }
                 None => (None, None),
@@ -835,22 +853,38 @@ mod tests {
     }
 
     #[test]
-    fn fingerprints_separate_deployments() {
-        let net = demo_net();
-        let fp = net_fingerprint(&net);
-        assert_eq!(fp, net_fingerprint(&demo_net()), "fingerprint must be deterministic");
-        let mut other = demo_net();
-        if let LayerKind::Fc { n, .. } = &mut other.last_mut().unwrap().kind {
-            *n = 10;
-        }
-        assert_ne!(fp, net_fingerprint(&other), "shape change must change the key");
-        assert_ne!(
-            machine_fingerprint(&MachineConfig::quark(4)),
-            machine_fingerprint(&MachineConfig::quark(8)),
-        );
-        assert_ne!(
-            machine_fingerprint(&MachineConfig::quark(4)),
-            machine_fingerprint(&MachineConfig::ara(4)),
-        );
+    fn program_cache_compiles_once_and_replays() {
+        // One deployment schedule, a mix of timing-only and functional
+        // requests: exactly one compile; functional repeats are cache hits.
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 1;
+        cfg.batch_timeout = Duration::from_millis(1);
+        let coord = Coordinator::start(cfg);
+        let n = 32 * 32 * 3;
+        let get = |id: u64, input: Option<Vec<u8>>| {
+            let rx = coord.submit(InferenceRequest { id, input, schedule: None }).unwrap();
+            rx.recv_timeout(Duration::from_secs(300)).unwrap()
+        };
+        // Timing miss: compiles a transient program (timing-only schedules
+        // are not memoized — they would pin trace-sized artifacts).
+        let first = get(0, None);
+        assert!(!first.timing_cached);
+        // Warm timing-only probe: no program resolution at all.
+        let warm = get(1, None);
+        assert!(warm.timing_cached);
+        let s = coord.stats();
+        assert_eq!(s.program_misses, 1, "one deployment schedule, one compile so far");
+        assert_eq!(s.program_hits, 0, "warm timing probes never touch the program cache");
+        assert!(s.compile_us > 0, "compile time must be accounted");
+        // Functional requests memoize, then replay the cached program.
+        let a = get(2, Some(vec![7u8; n]));
+        let b = get(3, Some(vec![7u8; n]));
+        assert_eq!(a.logits, b.logits, "replays of one program are deterministic");
+        let s = coord.stats();
+        assert_eq!(s.program_misses, 2, "first functional request compiles + memoizes");
+        assert_eq!(s.program_hits, 1, "second functional request hits the cache");
+        assert!(s.replay_us > 0, "replay time must be accounted");
+        coord.shutdown();
     }
 }

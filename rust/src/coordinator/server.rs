@@ -5,6 +5,8 @@
 //! PING                      → PONG
 //! STATS                     → STATS served=<n> rejected=<n> queue_depth=<n>
 //!                                   workers=<n> cache_hits=<n> cache_misses=<n>
+//!                                   prog_hits=<n> prog_misses=<n>
+//!                                   compile_us=<n> replay_us=<n>
 //!                                   p50_us=<n> p95_us=<n> p99_us=<n> util=<u0,u1,…>
 //! INFER <id> [prec=<spec>] [<b0,b1,...>]
 //!                           → OK <id> cycles=<c> device_us=<t> worker=<w>
@@ -96,13 +98,18 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                 writeln!(
                     writer,
                     "STATS served={} rejected={} queue_depth={} workers={} \
-                     cache_hits={} cache_misses={} p50_us={} p95_us={} p99_us={} util={}",
+                     cache_hits={} cache_misses={} prog_hits={} prog_misses={} \
+                     compile_us={} replay_us={} p50_us={} p95_us={} p99_us={} util={}",
                     s.served,
                     s.rejected,
                     s.queue_depth,
                     s.workers,
                     s.cache_hits,
                     s.cache_misses,
+                    s.program_hits,
+                    s.program_misses,
+                    s.compile_us,
+                    s.replay_us,
                     s.p50_us,
                     s.p95_us,
                     s.p99_us,
@@ -223,7 +230,18 @@ mod tests {
         assert!(lines[1].contains(" cached="), "{}", lines[1]);
         assert!(!lines[1].contains("logits="), "timing-only reply carries no logits: {}", lines[1]);
         assert!(lines[2].starts_with("STATS served="), "{}", lines[2]);
-        for field in ["rejected=", "queue_depth=", "cache_hits=", "p50_us=", "p99_us=", "util="] {
+        for field in [
+            "rejected=",
+            "queue_depth=",
+            "cache_hits=",
+            "prog_hits=",
+            "prog_misses=",
+            "compile_us=",
+            "replay_us=",
+            "p50_us=",
+            "p99_us=",
+            "util=",
+        ] {
             assert!(lines[2].contains(field), "missing {field}: {}", lines[2]);
         }
     }

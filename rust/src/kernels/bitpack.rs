@@ -64,9 +64,8 @@ fn lmul_for(elems: usize, per_reg: usize) -> Lmul {
 /// for its `vsll.vv`; call once per simulation, pass the address around.
 pub fn setup_index_vector(sim: &mut Sim) -> u64 {
     let addr = sim.alloc(64 * 8);
-    for i in 0..64u64 {
-        sim.machine.mem.write_u64_le(addr + i * 8, i, 8);
-    }
+    let idx: Vec<u64> = (0..64u64).collect();
+    sim.write_u64s(addr, &idx);
     addr
 }
 
@@ -133,7 +132,7 @@ fn emit_pack_planes_chunk(
         // Load the source group (SEW=8).
         let vreg_elems = sim.cfg.vlen_bits / 8;
         sim.vsetvli(k as u64, Sew::E8, lmul_for(k, vreg_elems));
-        sim.li(abi::A0, src as i64);
+        sim.li_addr(abi::A0, src);
         sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E8, vd: VReg(0), base: abi::A0 });
         // One vbitpack per plane: vd = (vd << vl) | plane(vs2, p).
         for p in 0..bits {
@@ -142,7 +141,7 @@ fn emit_pack_planes_chunk(
         // Store each plane (kw words).
         sim.vsetvli(kw as u64, Sew::E64, Lmul::M1);
         for p in 0..bits {
-            sim.li(abi::A1, plane_addr(p as usize) as i64);
+            sim.li_addr(abi::A1, plane_addr(p as usize));
             sim.v(VOp::Store {
                 kind: VMemKind::UnitStride,
                 eew: Sew::E64,
@@ -155,24 +154,24 @@ fn emit_pack_planes_chunk(
         let scratch = sim.alloc(k.next_multiple_of(64) as u64);
         // Index vector for vsll.vv, loaded once per call.
         sim.vsetvli(64, Sew::E64, Lmul::M1);
-        sim.li(abi::A3, idx_vec_addr as i64);
+        sim.li_addr(abi::A3, idx_vec_addr);
         sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E64, vd: VReg(28), base: abi::A3 });
         let vreg_elems = sim.cfg.vlen_bits / 8;
         for p in 0..bits {
             // Extract bit p of every element: (src >> p) & 1.
             sim.vsetvli(k as u64, Sew::E8, lmul_for(k, vreg_elems));
-            sim.li(abi::A0, src as i64);
+            sim.li_addr(abi::A0, src);
             sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E8, vd: VReg(0), base: abi::A0 });
             sim.v(VOp::IVI { op: VIOp::Srl, vd: VReg(8), vs2: VReg(0), imm: p as i64 });
             sim.v(VOp::IVI { op: VIOp::And, vd: VReg(8), vs2: VReg(8), imm: 1 });
-            sim.li(abi::A1, scratch as i64);
+            sim.li_addr(abi::A1, scratch);
             sim.v(VOp::Store { kind: VMemKind::UnitStride, eew: Sew::E8, vs3: VReg(8), base: abi::A1 });
             // Assemble each 64-bit word: zext → shift by index → or-reduce
             // (vredsum of distinct powers of two), then a scalar store.
             for w in 0..kw {
                 let elems = 64.min(k - w * 64) as u64;
                 sim.vsetvli(elems, Sew::E64, Lmul::M1);
-                sim.li(abi::A2, (scratch + (w * 64) as u64) as i64);
+                sim.li_addr(abi::A2, scratch + (w * 64) as u64);
                 sim.v(VOp::Load {
                     kind: VMemKind::UnitStride,
                     eew: Sew::E8,
@@ -184,7 +183,7 @@ fn emit_pack_planes_chunk(
                 sim.v(VOp::MvVI { vd: VReg(19), imm: 0 });
                 sim.v(VOp::RedSum { vd: VReg(19), vs2: VReg(18), vs1: VReg(19) });
                 sim.v(VOp::MvXS { rd: abi::T0, vs2: VReg(19) });
-                sim.li(abi::T1, word_addr(p as usize, w) as i64);
+                sim.li_addr(abi::T1, word_addr(p as usize, w));
                 sim.s(ScalarOp::Store { width: MemWidth::D, rs2: abi::T0, base: abi::T1, offset: 0 });
                 sim.loop_edge(abi::T2);
             }
@@ -203,7 +202,7 @@ pub fn emit_row_sum_u8(sim: &mut Sim, src: u64, k: usize, out_addr: u64) {
     while remaining > 0 {
         let chunk = remaining.min(max_chunk);
         sim.vsetvli(chunk as u64, Sew::E32, lmul_for(chunk, per_reg_e32));
-        sim.li(abi::A0, src_off as i64);
+        sim.li_addr(abi::A0, src_off);
         sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E8, vd: VReg(0), base: abi::A0 });
         sim.v(VOp::Zext { vd: VReg(8), vs2: VReg(0), frac: 4 });
         if first {
@@ -217,7 +216,7 @@ pub fn emit_row_sum_u8(sim: &mut Sim, src: u64, k: usize, out_addr: u64) {
         src_off += chunk as u64;
     }
     sim.v(VOp::MvXS { rd: abi::T0, vs2: VReg(24) });
-    sim.li(abi::T1, out_addr as i64);
+    sim.li_addr(abi::T1, out_addr);
     sim.s(ScalarOp::Store { width: MemWidth::W, rs2: abi::T0, base: abi::T1, offset: 0 });
 }
 

@@ -100,7 +100,7 @@ fn emit_im2col_patch(
             let chunk = (k - off).min(per_reg * 8);
             sim.vsetvli(chunk as u64, eew, lmul_for(chunk, per_reg));
             sim.v(VOp::MvVI { vd: VReg(0), imm: 0 });
-            sim.li(abi::A1, (patch + (off * esz) as u64) as i64);
+            sim.li_addr(abi::A1, patch + (off * esz) as u64);
             sim.v(VOp::Store { kind: VMemKind::UnitStride, eew, vs3: VReg(0), base: abi::A1 });
             off += chunk;
         }
@@ -131,9 +131,9 @@ fn emit_im2col_patch(
         while off < span {
             let chunk = (span - off).min(per_reg * 8);
             sim.vsetvli(chunk as u64, eew, lmul_for(chunk, per_reg));
-            sim.li(abi::A0, (src + (off * esz) as u64) as i64);
+            sim.li_addr(abi::A0, src + (off * esz) as u64);
             sim.v(VOp::Load { kind: VMemKind::UnitStride, eew, vd: VReg(0), base: abi::A0 });
-            sim.li(abi::A1, (dst + (off * esz) as u64) as i64);
+            sim.li_addr(abi::A1, dst + (off * esz) as u64);
             sim.v(VOp::Store { kind: VMemKind::UnitStride, eew, vs3: VReg(0), base: abi::A1 });
             off += chunk;
         }
@@ -268,7 +268,7 @@ pub fn conv2d_bitserial_ext(
                 // Load all weight vectors for this channel block once.
                 for q in 0..pw {
                     for kw_i in 0..kw_words {
-                        sim.li(abi::A0, (wbuf + wpk.vec_byte_offset(jb, q, kw_i)) as i64);
+                        sim.li_addr(abi::A0, wbuf + wpk.vec_byte_offset(jb, q, kw_i));
                         sim.v(VOp::Load {
                             kind: VMemKind::UnitStride,
                             eew: Sew::E64,
@@ -278,7 +278,7 @@ pub fn conv2d_bitserial_ext(
                     }
                 }
             }
-            for (t, _) in blk.iter().enumerate() {
+            for t in 0..blk.len() {
                 // acc_pq := 0
                 for i in 0..(pa * pw) {
                     sim.v(VOp::MvVI { vd: acc_reg(i), imm: 0 });
@@ -286,7 +286,7 @@ pub fn conv2d_bitserial_ext(
                 // Per-plane base registers for offset-addressed a-word loads.
                 let abase = [abi::S2, abi::S3];
                 for (pl, &reg) in abase.iter().enumerate().take(pa) {
-                    sim.li(reg, packed[t].plane_addr(pl) as i64);
+                    sim.li_addr(reg, packed[t].plane_addr(pl));
                 }
                 for q in 0..pw {
                     let mut kw_i = 0;
@@ -296,7 +296,7 @@ pub fn conv2d_bitserial_ext(
                             // grouped load (contiguous kw range per plane).
                             let words = chunk_kw.min(kw_words - kw_i);
                             sim.vsetvli((words * nb) as u64, Sew::E64, lmul_for(words * nb, sim.cfg.vlen_bits / 64));
-                            sim.li(abi::A0, (wbuf + wpk.vec_byte_offset(jb, q, kw_i)) as i64);
+                            sim.li_addr(abi::A0, wbuf + wpk.vec_byte_offset(jb, q, kw_i));
                             sim.v(VOp::Load {
                                 kind: VMemKind::UnitStride,
                                 eew: Sew::E64,
@@ -350,7 +350,7 @@ pub fn conv2d_bitserial_ext(
                     }
                     _ => unreachable!(),
                 };
-                sim.li(abi::A1, acc_addr(blk, t, jb) as i64);
+                sim.li_addr(abi::A1, acc_addr(blk, t, jb));
                 sim.v(VOp::Store {
                     kind: VMemKind::UnitStride,
                     eew: Sew::E64,
@@ -434,7 +434,7 @@ pub fn conv2d_int8(
             }
             for kk in 0..k {
                 // Load + widen one weight row for this channel block.
-                sim.li(abi::A0, (wbuf + (kk * p.c_out + jb * nb) as u64) as i64);
+                sim.li_addr(abi::A0, wbuf + (kk * p.c_out + jb * nb) as u64);
                 sim.v(VOp::Load {
                     kind: VMemKind::UnitStride,
                     eew: Sew::E8,
@@ -442,8 +442,8 @@ pub fn conv2d_int8(
                     base: abi::A0,
                 });
                 sim.v(VOp::Sext { vd: VReg(9), vs2: VReg(8), frac: 4 });
-                for (t, _) in blk.iter().enumerate() {
-                    sim.li(abi::T0, (patch + (t * k + kk) as u64) as i64);
+                for t in 0..blk.len() {
+                    sim.li_addr(abi::T0, patch + (t * k + kk) as u64);
                     sim.s(ScalarOp::Load {
                         width: MemWidth::B,
                         signed: false,
@@ -456,7 +456,7 @@ pub fn conv2d_int8(
                 sim.loop_edge(abi::T2);
             }
             for t in 0..blk.len() {
-                sim.li(abi::A1, (accbuf + (t * nb * 4) as u64) as i64);
+                sim.li_addr(abi::A1, accbuf + (t * nb * 4) as u64);
                 sim.v(VOp::Store {
                     kind: VMemKind::UnitStride,
                     eew: Sew::E32,
@@ -522,7 +522,7 @@ pub fn conv2d_f32(
     let patch = sim.alloc((PIXEL_BLOCK * k * 4) as u64);
     let fzero_addr = sim.alloc(4);
     sim.write_f32s(fzero_addr, &[0.0]);
-    sim.li(abi::T6, fzero_addr as i64);
+    sim.li_addr(abi::T6, fzero_addr);
     sim.s(ScalarOp::FLoad { rd: FReg(6), base: abi::T6, offset: 0 });
 
     let pixels: Vec<(usize, usize)> =
@@ -539,28 +539,28 @@ pub fn conv2d_f32(
                 sim.v(VOp::MvVI { vd: VReg(16 + t as u8), imm: 0 });
             }
             for kk in 0..k {
-                sim.li(abi::A0, (wbuf + ((kk * p.c_out + jb * nb) * 4) as u64) as i64);
+                sim.li_addr(abi::A0, wbuf + ((kk * p.c_out + jb * nb) * 4) as u64);
                 sim.v(VOp::Load {
                     kind: VMemKind::UnitStride,
                     eew: Sew::E32,
                     vd: VReg(9),
                     base: abi::A0,
                 });
-                for (t, _) in blk.iter().enumerate() {
-                    sim.li(abi::T0, (patch + ((t * k + kk) * 4) as u64) as i64);
+                for t in 0..blk.len() {
+                    sim.li_addr(abi::T0, patch + ((t * k + kk) * 4) as u64);
                     sim.s(ScalarOp::FLoad { rd: FReg(1), base: abi::T0, offset: 0 });
                     sim.v(VOp::FMaccVF { vd: VReg(16 + t as u8), rs1: FReg(1), vs2: VReg(9) });
                 }
                 sim.loop_edge(abi::T2);
             }
             // Bias + residual + ReLU + store.
-            sim.li(abi::A0, (bias + (jb * nb * 4) as u64) as i64);
+            sim.li_addr(abi::A0, bias + (jb * nb * 4) as u64);
             sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E32, vd: VReg(10), base: abi::A0 });
             for (t, &(oy, ox)) in blk.iter().enumerate() {
                 let acc = VReg(16 + t as u8);
                 sim.v(VOp::FAddVV { vd: acc, vs2: acc, vs1: VReg(10) });
                 if let Some(r) = residual {
-                    sim.li(abi::A2, (r + (((oy * ow + ox) * p.c_out + jb * nb) * 4) as u64) as i64);
+                    sim.li_addr(abi::A2, r + (((oy * ow + ox) * p.c_out + jb * nb) * 4) as u64);
                     sim.v(VOp::Load {
                         kind: VMemKind::UnitStride,
                         eew: Sew::E32,
@@ -572,7 +572,7 @@ pub fn conv2d_f32(
                 if relu {
                     sim.v(VOp::FMaxVF { vd: acc, vs2: acc, rs1: FReg(6) });
                 }
-                sim.li(abi::A1, (fm_out + (((oy * ow + ox) * p.c_out + jb * nb) * 4) as u64) as i64);
+                sim.li_addr(abi::A1, fm_out + (((oy * ow + ox) * p.c_out + jb * nb) * 4) as u64);
                 sim.v(VOp::Store { kind: VMemKind::UnitStride, eew: Sew::E32, vs3: acc, base: abi::A1 });
             }
         }

@@ -39,7 +39,7 @@ pub fn global_avgpool_u8(
     sim.vsetvli(c as u64, Sew::E32, lmul_for(c, per_reg));
     sim.v(VOp::MvVI { vd: VReg(8), imm: 0 });
     for pos in 0..h * w {
-        sim.li(abi::A0, (fm_in + (pos * c) as u64) as i64);
+        sim.li_addr(abi::A0, fm_in + (pos * c) as u64);
         sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E8, vd: VReg(0), base: abi::A0 });
         sim.v(VOp::Zext { vd: VReg(4), vs2: VReg(0), frac: 4 });
         sim.v(VOp::IVV { op: crate::isa::instr::VIOp::Add, vd: VReg(8), vs2: VReg(8), vs1: VReg(4) });
@@ -47,7 +47,7 @@ pub fn global_avgpool_u8(
     }
     // Spill the accumulator and requantize per channel on the scalar FPU.
     let accbuf = sim.alloc((c * 4) as u64);
-    sim.li(abi::A1, accbuf as i64);
+    sim.li_addr(abi::A1, accbuf);
     sim.v(VOp::Store { kind: VMemKind::UnitStride, eew: Sew::E32, vs3: VReg(8), base: abi::A1 });
     for j in 0..c {
         emit_requant_channel_block(
@@ -79,19 +79,19 @@ pub fn global_avgpool_f32(
     assert!(c <= per_reg * 4);
     let inv = sim.alloc(4);
     sim.write_f32s(inv, &[1.0 / (h * w) as f32]);
-    sim.li(abi::T6, inv as i64);
+    sim.li_addr(abi::T6, inv);
     sim.s(crate::isa::instr::ScalarOp::FLoad { rd: crate::isa::FReg(1), base: abi::T6, offset: 0 });
 
     sim.vsetvli(c as u64, Sew::E32, lmul_for(c, per_reg));
     sim.v(VOp::MvVI { vd: VReg(8), imm: 0 });
     for pos in 0..h * w {
-        sim.li(abi::A0, (fm_in + (pos * c * 4) as u64) as i64);
+        sim.li_addr(abi::A0, fm_in + (pos * c * 4) as u64);
         sim.v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E32, vd: VReg(4), base: abi::A0 });
         sim.v(VOp::FAddVV { vd: VReg(8), vs2: VReg(8), vs1: VReg(4) });
         sim.loop_edge(abi::T2);
     }
     sim.v(VOp::FMulVF { vd: VReg(8), vs2: VReg(8), rs1: crate::isa::FReg(1) });
-    sim.li(abi::A1, out as i64);
+    sim.li_addr(abi::A1, out);
     sim.v(VOp::Store { kind: VMemKind::UnitStride, eew: Sew::E32, vs3: VReg(8), base: abi::A1 });
     KernelRun { cycles: sim.cycles() - c0, macs: (h * w * c) as u64 }
 }
@@ -125,7 +125,7 @@ mod tests {
     fn avgpool_runs_on_ara_too() {
         let mut sim = Sim::new(MachineConfig::ara(4));
         let fm = sim.alloc(4 * 4 * 64);
-        let rq = RqBuf::create(&mut sim, &vec![0.1; 64], &vec![0.0; 64], &vec![0.0; 64], 255.0, 0.0);
+        let rq = RqBuf::create(&mut sim, &[0.1; 64], &[0.0; 64], &[0.0; 64], 255.0, 0.0);
         let out = sim.alloc(64);
         let r = global_avgpool_u8(&mut sim, 4, 4, 64, fm, &rq, out);
         assert!(r.cycles > 0);

@@ -83,7 +83,7 @@ pub const MAX_ASUM_PIXELS: usize = 8;
 pub fn emit_requant_setup(sim: &mut Sim, rq: &RqBuf, consts_addr: u64) {
     // consts_addr: f32 slots the host fills with [0.0, qmax, res_scale].
     sim.write_f32s(consts_addr, &[0.0, rq.qmax, rq.res_scale]);
-    sim.li(abi::T6, consts_addr as i64);
+    sim.li_addr(abi::T6, consts_addr);
     sim.s(ScalarOp::FLoad { rd: F_ZERO, base: abi::T6, offset: 0 });
     sim.s(ScalarOp::FLoad { rd: F_QMAX, base: abi::T6, offset: 4 });
     sim.s(ScalarOp::FLoad { rd: F_RESS, base: abi::T6, offset: 8 });
@@ -95,7 +95,7 @@ pub fn emit_requant_setup(sim: &mut Sim, rq: &RqBuf, consts_addr: u64) {
 pub fn emit_asum_preload(sim: &mut Sim, px: usize, asum_addr: impl Fn(usize) -> u64) {
     assert!(px <= MAX_ASUM_PIXELS);
     for t in 0..px {
-        sim.li(abi::T0, asum_addr(t) as i64);
+        sim.li_addr(abi::T0, asum_addr(t));
         sim.s(ScalarOp::Load { width: MemWidth::W, signed: true, rd: abi::T1, base: abi::T0, offset: 0 });
         sim.s(ScalarOp::FCvtSW { rd: FReg(F_ASUM_BASE + t as u8), rs1: abi::T1 });
     }
@@ -133,7 +133,7 @@ pub fn emit_requant_channel_block(
     out_addr: impl Fn(usize) -> u64,
 ) {
     // Per-channel constants (hoisted out of the pixel loop).
-    sim.li(abi::T5, rq.alpha_addr(j) as i64);
+    sim.li_addr(abi::T5, rq.alpha_addr(j));
     sim.s(ScalarOp::FLoad { rd: F_ALPHA, base: abi::T5, offset: 0 });
     sim.s(ScalarOp::FLoad { rd: F_BETA, base: abi::T5, offset: (rq.n * 4) as i64 });
     sim.s(ScalarOp::FLoad { rd: F_BIAS, base: abi::T5, offset: (2 * rq.n * 4) as i64 });
@@ -144,15 +144,15 @@ pub fn emit_requant_channel_block(
         // Stage 1: accumulator loads + convert (interleaved across slots).
         for (s, &t) in ts.iter().enumerate() {
             let (xa, xd) = X_SLOT[s];
-            sim.li(xa, acc_addr(t) as i64);
+            sim.li_addr(xa, acc_addr(t));
             sim.s(ScalarOp::Load { width: MemWidth::W, signed: true, rd: xd, base: xa, offset: 0 });
         }
-        for (s, _) in ts.iter().enumerate() {
+        for s in 0..ts.len() {
             let (_, xd) = X_SLOT[s];
             sim.s(ScalarOp::FCvtSW { rd: F_ACC_SLOT[s], rs1: xd });
         }
         // Stage 2: t = alpha·acc + bias.
-        for (s, _) in ts.iter().enumerate() {
+        for s in 0..ts.len() {
             sim.s(ScalarOp::FMadd { rd: F_T_SLOT[s], rs1: F_ALPHA, rs2: F_ACC_SLOT[s], rs3: F_BIAS });
         }
         if use_asum {
@@ -169,14 +169,14 @@ pub fn emit_requant_channel_block(
         if let Some(res) = res_addr {
             for (s, &t) in ts.iter().enumerate() {
                 let (xa, xd) = X_SLOT[s];
-                sim.li(xa, res(t) as i64);
+                sim.li_addr(xa, res(t));
                 sim.s(ScalarOp::Load { width: MemWidth::B, signed: false, rd: xd, base: xa, offset: 0 });
             }
-            for (s, _) in ts.iter().enumerate() {
+            for s in 0..ts.len() {
                 let (_, xd) = X_SLOT[s];
                 sim.s(ScalarOp::FCvtSW { rd: F_RES_SLOT[s], rs1: xd });
             }
-            for (s, _) in ts.iter().enumerate() {
+            for s in 0..ts.len() {
                 sim.s(ScalarOp::FMadd {
                     rd: F_T_SLOT[s],
                     rs1: F_RESS,
@@ -186,19 +186,19 @@ pub fn emit_requant_channel_block(
             }
         }
         // Stage 3: clamp, round, store.
-        for (s, _) in ts.iter().enumerate() {
+        for s in 0..ts.len() {
             sim.s(ScalarOp::FAlu { op: FAluOp::Max, rd: F_T_SLOT[s], rs1: F_T_SLOT[s], rs2: F_ZERO });
         }
-        for (s, _) in ts.iter().enumerate() {
+        for s in 0..ts.len() {
             sim.s(ScalarOp::FAlu { op: FAluOp::Min, rd: F_T_SLOT[s], rs1: F_T_SLOT[s], rs2: F_QMAX });
         }
-        for (s, _) in ts.iter().enumerate() {
+        for s in 0..ts.len() {
             let (_, xd) = X_SLOT[s];
             sim.s(ScalarOp::FCvtWS { rd: xd, rs1: F_T_SLOT[s] });
         }
         for (s, &t) in ts.iter().enumerate() {
             let (xa, xd) = X_SLOT[s];
-            sim.li(xa, out_addr(t) as i64);
+            sim.li_addr(xa, out_addr(t));
             sim.s(ScalarOp::Store { width: MemWidth::B, rs2: xd, base: xa, offset: 0 });
         }
         t0 += lanes;

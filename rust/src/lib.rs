@@ -17,6 +17,10 @@
 //! * [`nn`] — model graphs (ResNet-18 CIFAR variant) executed on the runtime
 //!   under uniform or mixed per-layer precision schedules
 //!   ([`nn::model::PrecisionMap`]), with a naive-i128 host golden executor.
+//! * [`program`] — the compile/execute split: [`program::compile`] turns
+//!   (net, machine, schedule) into a relocatable
+//!   [`program::CompiledProgram`] once; [`sim::Sim::execute`] replays it
+//!   per request with zero kernel emission.
 //! * [`phys`] — analytical area/power technology model + roofline analytics.
 //! * [`runtime`] — PJRT golden-model loader (AOT HLO text from JAX).
 //! * [`coordinator`] — batching inference server over a pool of simulated
@@ -31,6 +35,7 @@ pub mod isa;
 pub mod kernels;
 pub mod nn;
 pub mod phys;
+pub mod program;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -1,11 +1,16 @@
-//! Model materialization + execution on a simulated machine.
+//! Model schedules + the live-execution entry points.
 //!
-//! [`ModelRunner::run_scheduled`] is what the Fig. 3 harness, the end-to-end
-//! example, and the coordinator all call (directly or through the uniform
-//! wrappers [`ModelRunner::run`] / [`ModelRunner::run_with_input`]): it
-//! allocates feature maps and weights in simulated memory, emits every layer
-//! through the kernel matching that layer's resolved [`Precision`], and
-//! reports per-layer cycles.
+//! The actual emission loop — materialize feature maps and weights in
+//! simulated memory, emit every layer through the kernel matching its
+//! resolved [`Precision`] — lives in [`crate::program::builder`] as the
+//! single source of truth shared by this live path and the
+//! compile-once/run-many path ([`crate::program::compile`] →
+//! [`crate::sim::Sim::execute`]). [`ModelRunner::run_scheduled`] (and the
+//! uniform wrappers [`ModelRunner::run`] / [`ModelRunner::run_with_input`])
+//! are thin veneers over it: one fresh emission into the caller's
+//! [`Sim`], reporting per-layer cycles. Serving-path callers that run the
+//! same deployment repeatedly should compile once and replay instead (see
+//! the coordinator's program cache).
 //!
 //! ## Per-layer precision
 //!
@@ -28,13 +33,7 @@
 //! size); [`PrecisionMap::validate`] enforces this.
 
 use crate::arch::MachineConfig;
-use crate::kernels::bitpack::setup_index_vector;
-use crate::kernels::conv2d::{bitserial_block, conv2d_bitserial, conv2d_f32, conv2d_int8};
-use crate::kernels::matmul::{matmul_bitserial, matmul_f32, matmul_int8};
-use crate::kernels::pool::{global_avgpool_f32, global_avgpool_u8};
-use crate::kernels::requantize::RqBuf;
 use crate::kernels::KernelRun;
-use crate::quant::pack_weight_planes;
 use crate::sim::{Sim, Stats};
 
 use super::resnet::{LayerKind, NetLayer};
@@ -450,16 +449,11 @@ pub struct ModelRunner;
 
 impl ModelRunner {
     /// Run a network graph (see [`super::resnet::resnet18_cifar`]) at one
-    /// uniform precision; batch 1, synthetic weights. When `write_data` is
-    /// false the simulator should be in `TimingOnly` mode (cycle counts are
-    /// identical — the kernels are data-independent).
-    pub fn run(
-        sim: &mut Sim,
-        net: &[NetLayer],
-        precision: Precision,
-        write_data: bool,
-    ) -> Vec<LayerReport> {
-        Self::run_scheduled(sim, net, &PrecisionMap::uniform(precision), write_data, None).reports
+    /// uniform precision; batch 1, synthetic weights + synthetic input. Use
+    /// `TimingOnly` mode for cycle-only sweeps — cycle counts are identical
+    /// to `Full` (the kernels are data-independent).
+    pub fn run(sim: &mut Sim, net: &[NetLayer], precision: Precision) -> Vec<LayerReport> {
+        Self::run_scheduled(sim, net, &PrecisionMap::uniform(precision), None).reports
     }
 
     /// Like [`Self::run`], but with an optional explicit network input
@@ -470,219 +464,31 @@ impl ModelRunner {
         sim: &mut Sim,
         net: &[NetLayer],
         precision: Precision,
-        write_data: bool,
         input: Option<&[u8]>,
     ) -> ModelRun {
-        Self::run_scheduled(sim, net, &PrecisionMap::uniform(precision), write_data, input)
+        Self::run_scheduled(sim, net, &PrecisionMap::uniform(precision), input)
     }
 
-    /// Run `net` under a per-layer [`PrecisionMap`]. Synthetic weights are
-    /// drawn from one deterministic stream (a function of the schedule
-    /// family only), so two runs under the same schedule differ only in the
-    /// input feature map. Panics on schedules that fail
-    /// [`PrecisionMap::validate`] / [`PrecisionMap::validate_machine`] —
-    /// the serving layer pre-validates at submission.
+    /// Run `net` under a per-layer [`PrecisionMap`]: one fresh emission
+    /// through the shared model-emission routine
+    /// ([`crate::program::builder`]). Synthetic weights are drawn from one
+    /// deterministic stream (a function of the schedule family only), so
+    /// two runs under the same schedule differ only in the input feature
+    /// map. Panics on schedules that fail [`PrecisionMap::validate`] /
+    /// [`PrecisionMap::validate_machine`] — the serving layer pre-validates
+    /// at submission.
     pub fn run_scheduled(
         sim: &mut Sim,
         net: &[NetLayer],
         schedule: &PrecisionMap,
-        write_data: bool,
         input: Option<&[u8]>,
     ) -> ModelRun {
-        if let Err(e) = schedule.validate(net) {
-            panic!("invalid schedule: {e}");
+        let emitted = crate::program::builder::emit_model(sim, net, schedule, input);
+        ModelRun {
+            reports: emitted.reports,
+            out_addr: emitted.out_addr,
+            out_elems: emitted.out_elems,
         }
-        if let Err(e) = schedule.validate_machine(net, &sim.cfg) {
-            panic!("{e}");
-        }
-        let resolved = schedule.resolve(net);
-        let consumer_bits = map_consumer_bits(net, &resolved);
-        let fp32 = schedule.default_precision() == Precision::Fp32;
-        let esz = if fp32 { 4usize } else { 1 };
-        let idx_vec = setup_index_vector(sim);
-        let mut seed = 0xC0FFEE ^ schedule.seed_tag();
-
-        // Feature-map addresses; map 0 is the network input (32×32×3).
-        let input_elems = 32 * 32 * 3;
-        let in_addr = sim.alloc((input_elems * esz) as u64);
-        if write_data {
-            // Draw the synthetic input even when an explicit one overrides it,
-            // so the weight streams below are identical either way.
-            let mut codes = synth_input(&mut seed, input_elems);
-            if let Some(bytes) = input {
-                for (i, c) in codes.iter_mut().enumerate() {
-                    *c = bytes.get(i).copied().unwrap_or(0);
-                }
-            }
-            if fp32 {
-                let vals: Vec<f32> = codes.iter().map(|&c| c as f32 / 255.0).collect();
-                sim.write_f32s(in_addr, &vals);
-            } else {
-                let in_qmax = grid_qmax(consumer_bits[0]) as u8;
-                for c in codes.iter_mut() {
-                    *c = (*c).min(in_qmax);
-                }
-                sim.write_bytes(in_addr, &codes);
-            }
-        }
-        let mut maps: Vec<u64> = vec![in_addr];
-        let mut reports = Vec::new();
-
-        for (li, layer) in net.iter().enumerate() {
-            let input_addr = maps[layer.input];
-            let residual = layer.residual_from.map(|i| maps[i]);
-            let lp = resolved[li];
-            let out_qmax = grid_qmax(consumer_bits[li + 1]) as f32;
-            let before = sim.stats().clone();
-            let (out_addr, out_elems, name, run, quantized) = match &layer.kind {
-                LayerKind::Conv(c) => {
-                    let p = c.params;
-                    let out_elems = p.out_h() * p.out_w() * p.c_out;
-                    let out = sim.alloc((out_elems * esz) as u64);
-                    let k = p.k();
-                    let n = p.c_out;
-                    let run = match lp {
-                        Precision::Fp32 => {
-                            let w = sim.alloc((k * n * 4) as u64);
-                            let b = sim.alloc((n * 4) as u64);
-                            if write_data {
-                                let wv = synth_f32(&mut seed, k * n);
-                                sim.write_f32s(w, &wv);
-                                sim.write_f32s(b, &vec![0.01; n]);
-                            }
-                            conv2d_f32(sim, &p, input_addr, w, b, out, c.relu, if c.residual { residual } else { None })
-                        }
-                        Precision::Int8 => {
-                            // Also the unquantized stem under every integer
-                            // schedule (PrecisionMap::resolve pins it).
-                            let w = sim.alloc((k * n) as u64);
-                            if write_data {
-                                let wv = synth_i8(&mut seed, k * n);
-                                sim.write_i8(w, &wv);
-                            }
-                            let rq = Self::rqbuf(sim, n, k, out_qmax);
-                            conv2d_int8(sim, &p, input_addr, w, &rq, out, if c.residual { residual } else { None })
-                        }
-                        Precision::Sub { abits, wbits, use_vbitpack } => {
-                            let codes: Vec<u8> = if write_data {
-                                synth_codes(&mut seed, k * n, wbits)
-                            } else {
-                                vec![0u8; k * n]
-                            };
-                            let block = bitserial_block(sim.cfg.vlen_bits, n);
-                            let wpk = pack_weight_planes(&codes, k, n, wbits, block);
-                            let w = sim.alloc(wpk.byte_len() as u64);
-                            if write_data {
-                                for (i, &word) in wpk.words.iter().enumerate() {
-                                    sim.machine.mem.write_u64_le(w + (i * 8) as u64, word, 8);
-                                }
-                            }
-                            let rq = Self::rqbuf(sim, n, k, out_qmax);
-                            conv2d_bitserial(
-                                sim,
-                                &p,
-                                abits,
-                                input_addr,
-                                &wpk,
-                                w,
-                                &rq,
-                                out,
-                                if c.residual { residual } else { None },
-                                use_vbitpack,
-                                idx_vec,
-                            )
-                        }
-                    };
-                    (out, out_elems, c.name.clone(), run, c.quantized)
-                }
-                LayerKind::AvgPool { h, w, c } => {
-                    let out = sim.alloc((c * esz) as u64);
-                    let run = if fp32 {
-                        global_avgpool_f32(sim, *h, *w, *c, input_addr, out)
-                    } else {
-                        let alpha = 1.0 / (*h * *w) as f32;
-                        let rq = RqBuf::create(
-                            sim,
-                            &vec![alpha; *c],
-                            &vec![0.0; *c],
-                            &vec![0.0; *c],
-                            out_qmax,
-                            0.0,
-                        );
-                        global_avgpool_u8(sim, *h, *w, *c, input_addr, &rq, out)
-                    };
-                    (out, *c, "avgpool".to_string(), run, false)
-                }
-                LayerKind::Fc { k, n, name } => {
-                    let out = sim.alloc((n.max(&64) * esz) as u64);
-                    let run = match lp {
-                        Precision::Fp32 => {
-                            let w = sim.alloc((k * n * 4) as u64);
-                            let b = sim.alloc((n * 4) as u64);
-                            if write_data {
-                                let wv = synth_f32(&mut seed, k * n);
-                                sim.write_f32s(w, &wv);
-                                sim.write_f32s(b, &vec![0.01; *n]);
-                            }
-                            matmul_f32(sim, 1, *k, *n, input_addr, w, b, out, false)
-                        }
-                        Precision::Int8 => {
-                            let w = sim.alloc((k * n) as u64);
-                            if write_data {
-                                let wv = synth_i8(&mut seed, k * n);
-                                sim.write_i8(w, &wv);
-                            }
-                            let rq = Self::rqbuf(sim, *n, *k, out_qmax);
-                            matmul_int8(sim, 1, *k, *n, input_addr, w, &rq, out)
-                        }
-                        Precision::Sub { abits, wbits, use_vbitpack } => {
-                            let codes: Vec<u8> = if write_data {
-                                synth_codes(&mut seed, k * n, wbits)
-                            } else {
-                                vec![0u8; k * n]
-                            };
-                            let block = bitserial_block(sim.cfg.vlen_bits, *n);
-                            let wpk = pack_weight_planes(&codes, *k, *n, wbits, block);
-                            let w = sim.alloc(wpk.byte_len() as u64);
-                            if write_data {
-                                for (i, &word) in wpk.words.iter().enumerate() {
-                                    sim.machine.mem.write_u64_le(w + (i * 8) as u64, word, 8);
-                                }
-                            }
-                            let rq = Self::rqbuf(sim, *n, *k, out_qmax);
-                            matmul_bitserial(
-                                sim, 1, *k, *n, abits, input_addr, &wpk, w, &rq, out,
-                                use_vbitpack, idx_vec,
-                            )
-                        }
-                    };
-                    (out, *n, name.clone(), run, true)
-                }
-            };
-            maps.push(out_addr);
-            let stats = sim.stats().delta_since(&before);
-            reports.push(LayerReport {
-                name,
-                quantized,
-                precision: lp,
-                out_addr,
-                out_elems,
-                run,
-                stats,
-            });
-        }
-        let (final_addr, final_elems) = reports
-            .last()
-            .map(|r| (r.out_addr, r.out_elems))
-            .unwrap_or((in_addr, input_elems));
-        ModelRun { reports, out_addr: final_addr, out_elems: final_elems }
-    }
-
-    /// Allocate the synthetic requant parameter block ([`synth_rq_params`])
-    /// with the consumer-grid clamp `qmax` (the re-pack rule).
-    fn rqbuf(sim: &mut Sim, n: usize, k: usize, qmax: f32) -> RqBuf {
-        let (alphas, betas, biases) = synth_rq_params(n, k);
-        RqBuf::create(sim, &alphas, &betas, &biases, qmax, 0.0)
     }
 }
 
@@ -741,7 +547,7 @@ mod tests {
         ] {
             let mut sim = Sim::new(cfg);
             sim.set_mode(SimMode::TimingOnly);
-            let reports = ModelRunner::run(&mut sim, &net, prec, false);
+            let reports = ModelRunner::run(&mut sim, &net, prec);
             assert_eq!(reports.len(), 3);
             assert!(reports.iter().all(|r| r.run.cycles > 0), "{prec:?}");
         }
@@ -758,7 +564,7 @@ mod tests {
         .with("fc", Precision::Int8);
         let mut sim = Sim::new(MachineConfig::quark(4));
         sim.set_mode(SimMode::TimingOnly);
-        let run = ModelRunner::run_scheduled(&mut sim, &net, &map, false, None);
+        let run = ModelRunner::run_scheduled(&mut sim, &net, &map, None);
         assert_eq!(run.reports[0].precision.label(), "w2a2");
         assert_eq!(run.reports[2].precision.label(), "int8");
         assert!(run.reports.iter().all(|r| r.run.cycles > 0));
@@ -770,7 +576,7 @@ mod tests {
         let cycles = |cfg: MachineConfig, prec: Precision| {
             let mut sim = Sim::new(cfg);
             sim.set_mode(SimMode::TimingOnly);
-            let reports = ModelRunner::run(&mut sim, &net, prec, false);
+            let reports = ModelRunner::run(&mut sim, &net, prec);
             reports
                 .iter()
                 .filter(|r| r.quantized)

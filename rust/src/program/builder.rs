@@ -1,0 +1,347 @@
+//! [`ProgramBuilder`] and the single model-emission routine.
+//!
+//! `emit_model` (crate-internal) is the one place in the codebase that
+//! walks a network graph and drives the kernels — the emission loop
+//! previously duplicated inside `ModelRunner`. It has exactly two
+//! consumers:
+//!
+//! * the **live path** ([`crate::nn::model::ModelRunner`]): kernels emit
+//!   into a normal [`Sim`], which simulates (functionally and/or in time)
+//!   as it always has;
+//! * the **compile path** ([`ProgramBuilder`], via
+//!   [`super::compile`]): kernels emit into a *recording* `Sim`, which
+//!   captures the trace/relocations/image instead of simulating, producing
+//!   a [`CompiledProgram`] for later replay.
+//!
+//! Synthetic parameters are drawn from one deterministic stream (a function
+//! of the schedule family only) — the same stream the naive-i128 host
+//! golden model ([`crate::nn::golden`]) draws, which is what makes the
+//! layer-by-layer bit-exact differentials possible.
+
+use crate::arch::MachineConfig;
+use crate::kernels::bitpack::setup_index_vector;
+use crate::kernels::conv2d::{bitserial_block, conv2d_bitserial, conv2d_f32, conv2d_int8};
+use crate::kernels::matmul::{matmul_bitserial, matmul_f32, matmul_int8};
+use crate::kernels::pool::{global_avgpool_f32, global_avgpool_u8};
+use crate::kernels::requantize::RqBuf;
+use crate::nn::model::{
+    grid_qmax, map_consumer_bits, synth_codes, synth_f32, synth_i8, synth_input, synth_rq_params,
+    LayerReport, Precision, PrecisionMap,
+};
+use crate::nn::{LayerKind, NetLayer};
+use crate::quant::pack_weight_planes;
+use crate::sim::Sim;
+
+use super::{CompiledProgram, InputSpec, LayerMark};
+
+/// Everything [`emit_model`] reports back about one emission pass.
+pub(crate) struct EmittedModel {
+    pub reports: Vec<LayerReport>,
+    /// Per-layer exclusive trace end indices (all zero on a live, i.e.
+    /// non-recording, `Sim`).
+    pub trace_ends: Vec<usize>,
+    /// Address/size of feature map 0 (the network input).
+    pub in_addr: u64,
+    pub input_elems: usize,
+    /// Clamp grid applied to input codes (narrowest-consumer re-pack rule).
+    pub in_qmax: u8,
+    /// Uniform-fp32 schedule (input stored as normalized floats).
+    pub fp32: bool,
+    /// Address/size of the final feature map (the logits).
+    pub out_addr: u64,
+    pub out_elems: usize,
+}
+
+/// Builds [`CompiledProgram`]s: owns a recording [`Sim`] sized like a
+/// serving core and funnels the shared `emit_model` routine through it.
+pub struct ProgramBuilder {
+    sim: Sim,
+}
+
+impl ProgramBuilder {
+    /// A builder for `machine`. Allocates its own simulated memory arena
+    /// (the default serving-core size) — compilation is a cold-path,
+    /// once-per-deployment operation.
+    pub fn new(machine: MachineConfig) -> Self {
+        let mut sim = Sim::with_memory(machine, Sim::DEFAULT_MEM);
+        sim.start_recording();
+        ProgramBuilder { sim }
+    }
+
+    /// Emit `net` under `schedule` and package the recording. The schedule
+    /// must already be validated (see [`super::compile`], which is the
+    /// checked entry point); invalid schedules panic exactly like the live
+    /// runner.
+    pub fn build(mut self, net: &[NetLayer], schedule: &PrecisionMap) -> CompiledProgram {
+        let base = self.sim.machine.mem.brk();
+        let emitted = emit_model(&mut self.sim, net, schedule, None);
+        let mem_len = self.sim.machine.mem.brk() - base;
+        let rec = self.sim.take_recording();
+        let layers = emitted
+            .reports
+            .iter()
+            .zip(emitted.trace_ends.iter())
+            .map(|(r, &trace_end)| LayerMark {
+                name: r.name.clone(),
+                precision: r.precision,
+                quantized: r.quantized,
+                out_addr: r.out_addr,
+                out_elems: r.out_elems,
+                macs: r.run.macs,
+                // During recording no timing runs, so the only stat a layer
+                // accrues is what its kernel credited host-side — exactly
+                // the amount a replay must re-credit.
+                credited_macs: r.stats.effective_macs,
+                trace_end,
+            })
+            .collect();
+        CompiledProgram {
+            net_fp: super::net_fingerprint(net),
+            machine_fp: super::machine_fingerprint(&self.sim.cfg),
+            machine_name: self.sim.cfg.name.clone(),
+            schedule: schedule.clone(),
+            base,
+            mem_len,
+            trace: rec.trace,
+            reloc: rec.reloc,
+            image: rec.image,
+            input: InputSpec {
+                addr: emitted.in_addr,
+                elems: emitted.input_elems,
+                qmax: emitted.in_qmax,
+                fp32: emitted.fp32,
+            },
+            out_addr: emitted.out_addr,
+            out_elems: emitted.out_elems,
+            layers,
+        }
+    }
+}
+
+/// THE model-emission routine: materialize `net` in simulated memory and
+/// emit every layer through the kernel matching its resolved [`Precision`].
+/// Synthetic weights/requant parameters come from the deterministic stream;
+/// `input` (CIFAR-sized u8 codes; shorter zero-padded, longer truncated)
+/// overrides the synthetic network input when given. On a live
+/// `TimingOnly` sim, tensor data is neither synthesized nor written (the
+/// cycle model is data-independent — the historical fast path for timing
+/// sweeps); recording and `Full`-mode sims always materialize it.
+///
+/// Panics on schedules that fail [`PrecisionMap::validate`] /
+/// [`PrecisionMap::validate_machine`] — the serving layer pre-validates at
+/// submission, and [`super::compile`] validates before building.
+pub(crate) fn emit_model(
+    sim: &mut Sim,
+    net: &[NetLayer],
+    schedule: &PrecisionMap,
+    input: Option<&[u8]>,
+) -> EmittedModel {
+    if let Err(e) = schedule.validate(net) {
+        panic!("invalid schedule: {e}");
+    }
+    if let Err(e) = schedule.validate_machine(net, &sim.cfg) {
+        panic!("{e}");
+    }
+    let resolved = schedule.resolve(net);
+    let consumer_bits = map_consumer_bits(net, &resolved);
+    let fp32 = schedule.default_precision() == Precision::Fp32;
+    let esz = if fp32 { 4usize } else { 1 };
+    // Whether tensor data must actually be materialized: always when
+    // recording (the program's init image) or executing functionally; a
+    // live `TimingOnly` sweep skips the synthesis and writes — the cycle
+    // model is data-independent, so timing-only callers (reports, cache
+    // baselines) keep their historical cost.
+    let write_data = sim.is_recording() || sim.mode() == crate::sim::SimMode::Full;
+    let idx_vec = setup_index_vector(sim);
+    let mut seed = 0xC0FFEE ^ schedule.seed_tag();
+
+    // Feature-map addresses; map 0 is the network input (32×32×3).
+    let input_elems = 32 * 32 * 3;
+    let in_qmax = grid_qmax(consumer_bits[0]) as u8;
+    let in_addr = sim.alloc((input_elems * esz) as u64);
+    if write_data {
+        // Draw the synthetic input even when an explicit one overrides it,
+        // so the weight streams below are identical either way.
+        let mut codes = synth_input(&mut seed, input_elems);
+        if let Some(bytes) = input {
+            for (i, c) in codes.iter_mut().enumerate() {
+                *c = bytes.get(i).copied().unwrap_or(0);
+            }
+        }
+        if fp32 {
+            let vals: Vec<f32> = codes.iter().map(|&c| c as f32 / 255.0).collect();
+            sim.write_f32s(in_addr, &vals);
+        } else {
+            for c in codes.iter_mut() {
+                *c = (*c).min(in_qmax);
+            }
+            sim.write_bytes(in_addr, &codes);
+        }
+    }
+    let mut maps: Vec<u64> = vec![in_addr];
+    let mut reports = Vec::new();
+    let mut trace_ends = Vec::new();
+
+    for (li, layer) in net.iter().enumerate() {
+        let input_addr = maps[layer.input];
+        let residual = layer.residual_from.map(|i| maps[i]);
+        let lp = resolved[li];
+        let out_qmax = grid_qmax(consumer_bits[li + 1]) as f32;
+        let before = sim.stats().clone();
+        let (out_addr, out_elems, name, run, quantized) = match &layer.kind {
+            LayerKind::Conv(c) => {
+                let p = c.params;
+                let out_elems = p.out_h() * p.out_w() * p.c_out;
+                let out = sim.alloc((out_elems * esz) as u64);
+                let k = p.k();
+                let n = p.c_out;
+                let run = match lp {
+                    Precision::Fp32 => {
+                        let w = sim.alloc((k * n * 4) as u64);
+                        let b = sim.alloc((n * 4) as u64);
+                        if write_data {
+                            let wv = synth_f32(&mut seed, k * n);
+                            sim.write_f32s(w, &wv);
+                            sim.write_f32s(b, &vec![0.01; n]);
+                        }
+                        conv2d_f32(sim, &p, input_addr, w, b, out, c.relu, if c.residual { residual } else { None })
+                    }
+                    Precision::Int8 => {
+                        // Also the unquantized stem under every integer
+                        // schedule (PrecisionMap::resolve pins it).
+                        let w = sim.alloc((k * n) as u64);
+                        if write_data {
+                            let wv = synth_i8(&mut seed, k * n);
+                            sim.write_i8(w, &wv);
+                        }
+                        let rq = rqbuf(sim, n, k, out_qmax);
+                        conv2d_int8(sim, &p, input_addr, w, &rq, out, if c.residual { residual } else { None })
+                    }
+                    Precision::Sub { abits, wbits, use_vbitpack } => {
+                        let codes: Vec<u8> = if write_data {
+                            synth_codes(&mut seed, k * n, wbits)
+                        } else {
+                            vec![0u8; k * n]
+                        };
+                        let block = bitserial_block(sim.cfg.vlen_bits, n);
+                        let wpk = pack_weight_planes(&codes, k, n, wbits, block);
+                        let w = sim.alloc(wpk.byte_len() as u64);
+                        if write_data {
+                            sim.write_u64s(w, &wpk.words);
+                        }
+                        let rq = rqbuf(sim, n, k, out_qmax);
+                        conv2d_bitserial(
+                            sim,
+                            &p,
+                            abits,
+                            input_addr,
+                            &wpk,
+                            w,
+                            &rq,
+                            out,
+                            if c.residual { residual } else { None },
+                            use_vbitpack,
+                            idx_vec,
+                        )
+                    }
+                };
+                (out, out_elems, c.name.clone(), run, c.quantized)
+            }
+            LayerKind::AvgPool { h, w, c } => {
+                let out = sim.alloc((c * esz) as u64);
+                let run = if fp32 {
+                    global_avgpool_f32(sim, *h, *w, *c, input_addr, out)
+                } else {
+                    let alpha = 1.0 / (*h * *w) as f32;
+                    let rq = RqBuf::create(
+                        sim,
+                        &vec![alpha; *c],
+                        &vec![0.0; *c],
+                        &vec![0.0; *c],
+                        out_qmax,
+                        0.0,
+                    );
+                    global_avgpool_u8(sim, *h, *w, *c, input_addr, &rq, out)
+                };
+                (out, *c, "avgpool".to_string(), run, false)
+            }
+            LayerKind::Fc { k, n, name } => {
+                let out = sim.alloc((n.max(&64) * esz) as u64);
+                let run = match lp {
+                    Precision::Fp32 => {
+                        let w = sim.alloc((k * n * 4) as u64);
+                        let b = sim.alloc((n * 4) as u64);
+                        if write_data {
+                            let wv = synth_f32(&mut seed, k * n);
+                            sim.write_f32s(w, &wv);
+                            sim.write_f32s(b, &vec![0.01; *n]);
+                        }
+                        matmul_f32(sim, 1, *k, *n, input_addr, w, b, out, false)
+                    }
+                    Precision::Int8 => {
+                        let w = sim.alloc((k * n) as u64);
+                        if write_data {
+                            let wv = synth_i8(&mut seed, k * n);
+                            sim.write_i8(w, &wv);
+                        }
+                        let rq = rqbuf(sim, *n, *k, out_qmax);
+                        matmul_int8(sim, 1, *k, *n, input_addr, w, &rq, out)
+                    }
+                    Precision::Sub { abits, wbits, use_vbitpack } => {
+                        let codes: Vec<u8> = if write_data {
+                            synth_codes(&mut seed, k * n, wbits)
+                        } else {
+                            vec![0u8; k * n]
+                        };
+                        let block = bitserial_block(sim.cfg.vlen_bits, *n);
+                        let wpk = pack_weight_planes(&codes, *k, *n, wbits, block);
+                        let w = sim.alloc(wpk.byte_len() as u64);
+                        if write_data {
+                            sim.write_u64s(w, &wpk.words);
+                        }
+                        let rq = rqbuf(sim, *n, *k, out_qmax);
+                        matmul_bitserial(
+                            sim, 1, *k, *n, abits, input_addr, &wpk, w, &rq, out,
+                            use_vbitpack, idx_vec,
+                        )
+                    }
+                };
+                (out, *n, name.clone(), run, true)
+            }
+        };
+        maps.push(out_addr);
+        let stats = sim.stats().delta_since(&before);
+        reports.push(LayerReport {
+            name,
+            quantized,
+            precision: lp,
+            out_addr,
+            out_elems,
+            run,
+            stats,
+        });
+        trace_ends.push(sim.trace_len());
+    }
+    let (final_addr, final_elems) = reports
+        .last()
+        .map(|r| (r.out_addr, r.out_elems))
+        .unwrap_or((in_addr, input_elems));
+    EmittedModel {
+        reports,
+        trace_ends,
+        in_addr,
+        input_elems,
+        in_qmax,
+        fp32,
+        out_addr: final_addr,
+        out_elems: final_elems,
+    }
+}
+
+/// Allocate the synthetic requant parameter block
+/// ([`synth_rq_params`]) with the consumer-grid clamp `qmax` (the re-pack
+/// rule).
+fn rqbuf(sim: &mut Sim, n: usize, k: usize, qmax: f32) -> RqBuf {
+    let (alphas, betas, biases) = synth_rq_params(n, k);
+    RqBuf::create(sim, &alphas, &betas, &biases, qmax, 0.0)
+}

@@ -1,0 +1,363 @@
+//! Compile-once / run-many: the [`CompiledProgram`] artifact.
+//!
+//! Quark's serving workloads are static DNN graphs: for a fixed
+//! (network, machine, precision schedule) the emitted vector instruction
+//! stream is *identical on every inference* — the kernels are shape-driven
+//! and data-independent. SPEED (arXiv 2409.14017) and the mixed-precision
+//! RISC-V work of Ottavi et al. (arXiv 2010.04073) both treat the per-layer
+//! instruction schedule as a compiled artifact reused across inferences;
+//! this module adopts that split.
+//!
+//! ```text
+//!            compile (once)                      execute (per request)
+//! net ──┐                                  ┌── apply image (weights, rq, …)
+//! machine ─► ProgramBuilder ─► CompiledProgram ─► write input bytes
+//! schedule ─┘   (recording Sim:      │          ├── replay trace (± reloc)
+//!                kernels emit,       │          └── read logits at out_addr
+//!                nothing simulates)  │
+//!                                    ├ trace   — dynamic instruction stream
+//!                                    ├ reloc   — indices of address `li`s
+//!                                    ├ image   — host-written init bytes
+//!                                    ├ input   — segment + clamp grid
+//!                                    ├ layers  — per-layer marks (ranges,
+//!                                    │           shapes, MACs)
+//!                                    └ out     — logits segment
+//! ```
+//!
+//! [`compile`] drives the single model-emission routine (`emit_model` in
+//! [`builder`] — also the live path behind
+//! [`crate::nn::model::ModelRunner`]) into a recording
+//! [`Sim`](crate::sim::Sim), capturing the trace, the relocation table
+//! ([`crate::sim::Sim::li_addr`] call sites), and the host-written memory
+//! image. [`crate::sim::Sim::execute`] replays the artifact with full
+//! timing + functional fidelity (bit-exact logits, cycle-exact timing —
+//! `rust/tests/program_replay.rs` is the differential proof);
+//! [`crate::sim::Sim::execute_functional`] is the serving fast path: values
+//! only, no timing scoreboard, for requests whose cycle counts come from
+//! the coordinator's timing cache.
+//!
+//! Programs are *relocatable*: every buffer address materialized by a
+//! kernel goes through `li_addr`, so replaying at `base ≠ compile base`
+//! just re-bases those immediates (and the image/input/output segments) by
+//! the same delta.
+
+pub mod builder;
+mod replay;
+
+pub use builder::ProgramBuilder;
+pub use replay::ProgramRun;
+
+use crate::arch::MachineConfig;
+use crate::isa::instr::Instr;
+use crate::nn::model::{Precision, PrecisionMap};
+use crate::nn::{LayerKind, NetLayer};
+
+// ---- structural fingerprints (cache keys for programs and timing) ----
+
+#[inline]
+fn fnv(h: &mut u64, v: u64) {
+    // FNV-1a over the 8 bytes of `v`.
+    for b in v.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+fn fnv_str(h: &mut u64, s: &str) {
+    fnv(h, s.len() as u64);
+    for &b in s.as_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Structural identity of a network graph: every field that can change the
+/// emitted instruction stream (shapes, layer kinds, wiring) is folded in.
+pub fn net_fingerprint(net: &[NetLayer]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, net.len() as u64);
+    for layer in net {
+        fnv(&mut h, layer.input as u64);
+        fnv(&mut h, layer.residual_from.map(|i| i as u64 + 1).unwrap_or(0));
+        match &layer.kind {
+            LayerKind::Conv(c) => {
+                fnv(&mut h, 1);
+                fnv_str(&mut h, &c.name);
+                let p = c.params;
+                for v in [p.h, p.w, p.c_in, p.c_out, p.kh, p.kw, p.stride, p.pad] {
+                    fnv(&mut h, v as u64);
+                }
+                fnv(&mut h, c.relu as u64);
+                fnv(&mut h, c.residual as u64);
+                fnv(&mut h, c.quantized as u64);
+            }
+            LayerKind::AvgPool { h: ph, w: pw, c } => {
+                fnv(&mut h, 2);
+                for v in [*ph, *pw, *c] {
+                    fnv(&mut h, v as u64);
+                }
+            }
+            LayerKind::Fc { k, n, name } => {
+                fnv(&mut h, 3);
+                fnv_str(&mut h, name);
+                fnv(&mut h, *k as u64);
+                fnv(&mut h, *n as u64);
+            }
+        }
+    }
+    h
+}
+
+/// Structural identity of a machine configuration: every timing-model knob.
+pub fn machine_fingerprint(cfg: &MachineConfig) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv_str(&mut h, &cfg.name);
+    for v in [
+        cfg.lanes as u64,
+        cfg.vlen_bits as u64,
+        cfg.has_vfpu as u64,
+        cfg.has_quark_isa as u64,
+        cfg.freq_ghz.to_bits(),
+        cfg.axi_bytes_per_cycle as u64,
+        cfg.mem_latency,
+        cfg.dispatch_latency,
+        cfg.vstartup_latency,
+        cfg.chain_latency,
+        cfg.mask_elems_per_lane_cycle.to_bits(),
+        cfg.scalar_fp_latency,
+        cfg.scalar_mul_latency,
+        cfg.scalar_load_latency,
+        cfg.vq_depth as u64,
+    ] {
+        fnv(&mut h, v);
+    }
+    h
+}
+
+/// Per-layer marker inside a [`CompiledProgram`]: the trace range that
+/// implements the layer plus everything a replay needs to rebuild the
+/// layer's [`crate::nn::model::LayerReport`] without re-emitting.
+#[derive(Clone, Debug)]
+pub struct LayerMark {
+    pub name: String,
+    /// Resolved execution precision of the layer.
+    pub precision: Precision,
+    /// Member of the paper's quantized-layer set (Fig. 3 filtering).
+    pub quantized: bool,
+    /// Compile-space address of the layer's output feature map (re-based by
+    /// the relocation delta on replay).
+    pub out_addr: u64,
+    pub out_elems: usize,
+    /// Effective MACs the layer's kernel reports
+    /// ([`crate::kernels::KernelRun::macs`]).
+    pub macs: u64,
+    /// MACs the kernel *credits into* [`crate::sim::Stats`] — equal to
+    /// `macs` for the conv/GEMM kernels, 0 for pooling (which reports but
+    /// does not credit). Replay re-credits exactly this amount so stats
+    /// stay identical to fresh emission.
+    pub(crate) credited_macs: u64,
+    /// Exclusive end index of the layer's instructions in the trace (layer
+    /// `i` spans `layers[i-1].trace_end .. layers[i].trace_end`).
+    pub(crate) trace_end: usize,
+}
+
+/// The network-input segment of a program: where replay writes per-request
+/// input bytes, and how they are encoded.
+#[derive(Clone, Debug)]
+pub(crate) struct InputSpec {
+    /// Compile-space address of feature map 0.
+    pub(crate) addr: u64,
+    pub(crate) elems: usize,
+    /// Input clamp grid (`2^bits − 1` of the narrowest consumer) — the
+    /// mixed-precision re-pack rule applied to map 0.
+    pub(crate) qmax: u8,
+    /// fp32 schedules store the input as `code / 255.0` floats.
+    pub(crate) fp32: bool,
+}
+
+/// A compiled, relocatable inference program: everything needed to replay
+/// one (net, machine, schedule) emission against fresh input bytes, with
+/// zero kernel re-emission. Produced by [`compile`] / [`ProgramBuilder`];
+/// consumed by [`crate::sim::Sim::execute`] and
+/// [`crate::sim::Sim::execute_functional`].
+pub struct CompiledProgram {
+    pub(crate) net_fp: u64,
+    pub(crate) machine_fp: u64,
+    pub(crate) machine_name: String,
+    pub(crate) schedule: PrecisionMap,
+    /// Compile-time heap base: the program's addresses are valid as-is when
+    /// replayed at this base; any other base applies a uniform delta.
+    pub(crate) base: u64,
+    /// Bytes of simulated memory the program occupies from `base`.
+    pub(crate) mem_len: u64,
+    pub(crate) trace: Vec<Instr>,
+    /// Sorted trace indices of relocatable `li` address immediates.
+    pub(crate) reloc: Vec<u32>,
+    /// Host-written initial memory (weights, requant tables, constants,
+    /// index vectors, the synthetic default input), in program order.
+    pub(crate) image: Vec<(u64, Vec<u8>)>,
+    pub(crate) input: InputSpec,
+    /// Compile-space address/length of the final feature map (the logits).
+    pub(crate) out_addr: u64,
+    pub(crate) out_elems: usize,
+    pub(crate) layers: Vec<LayerMark>,
+}
+
+impl CompiledProgram {
+    /// Simulated-memory footprint: a replay target must have this many bytes
+    /// free at the chosen base.
+    pub fn mem_len(&self) -> u64 {
+        self.mem_len
+    }
+
+    /// Dynamic instructions in the trace.
+    pub fn trace_len(&self) -> usize {
+        self.trace.len()
+    }
+
+    /// Bytes of host-written initial memory re-applied per replay.
+    pub fn image_bytes(&self) -> usize {
+        self.image.iter().map(|(_, b)| b.len()).sum()
+    }
+
+    /// The schedule this program was compiled under (canonical form).
+    pub fn schedule(&self) -> &PrecisionMap {
+        &self.schedule
+    }
+
+    /// Fingerprint of the network graph ([`net_fingerprint`]).
+    pub fn net_fingerprint(&self) -> u64 {
+        self.net_fp
+    }
+
+    /// Fingerprint of the machine ([`machine_fingerprint`]).
+    pub fn machine_fingerprint(&self) -> u64 {
+        self.machine_fp
+    }
+
+    /// Per-layer marks, in network order.
+    pub fn layers(&self) -> &[LayerMark] {
+        &self.layers
+    }
+
+    /// Element count of the final feature map (class count for classifiers).
+    pub fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    /// Element count of the network-input segment.
+    pub fn input_elems(&self) -> usize {
+        self.input.elems
+    }
+
+    /// True for uniform-fp32 programs (logits are raw f32, input is
+    /// normalized to `[0, 1]`).
+    pub fn is_fp32(&self) -> bool {
+        self.input.fp32
+    }
+}
+
+/// Compile `net` for `machine` under `schedule` into a reusable
+/// [`CompiledProgram`]. Validates the schedule against the net and the
+/// machine first ([`PrecisionMap::validate`] /
+/// [`PrecisionMap::validate_machine`]); the error is the human-readable
+/// reason. Compilation runs the kernel emitters exactly once, into a
+/// recording [`Sim`](crate::sim::Sim) — no cycles are simulated and no
+/// vector data flows.
+pub fn compile(
+    net: &[NetLayer],
+    machine: &MachineConfig,
+    schedule: &PrecisionMap,
+) -> Result<CompiledProgram, String> {
+    schedule.validate(net)?;
+    schedule.validate_machine(net, machine)?;
+    Ok(ProgramBuilder::new(machine.clone()).build(net, schedule))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::demo_net;
+
+    #[test]
+    fn fingerprints_separate_deployments() {
+        let net = demo_net();
+        let fp = net_fingerprint(&net);
+        assert_eq!(fp, net_fingerprint(&demo_net()), "fingerprint must be deterministic");
+        let mut other = demo_net();
+        if let LayerKind::Fc { n, .. } = &mut other.last_mut().unwrap().kind {
+            *n = 10;
+        }
+        assert_ne!(fp, net_fingerprint(&other), "shape change must change the key");
+        assert_ne!(
+            machine_fingerprint(&MachineConfig::quark(4)),
+            machine_fingerprint(&MachineConfig::quark(8)),
+        );
+        assert_ne!(
+            machine_fingerprint(&MachineConfig::quark(4)),
+            machine_fingerprint(&MachineConfig::ara(4)),
+        );
+    }
+
+    #[test]
+    fn compile_rejects_invalid_schedules() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        // Unknown layer name.
+        let bad = PrecisionMap::uniform(Precision::Int8).with("ghost", Precision::Int8);
+        // `with` canonicalizes equal-to-default overrides away; force a
+        // distinct one instead.
+        let bad2 = PrecisionMap::uniform(Precision::Int8)
+            .with("ghost", Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
+        assert!(bad.is_uniform(), "redundant override canonicalizes away");
+        assert!(compile(&net, &quark, &bad2).is_err());
+        // fp32 needs the vector FPU Quark lacks.
+        assert!(compile(&net, &quark, &PrecisionMap::uniform(Precision::Fp32)).is_err());
+    }
+
+    #[test]
+    fn compile_produces_a_plausible_artifact() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        let sched = PrecisionMap::uniform(Precision::Sub {
+            abits: 2,
+            wbits: 2,
+            use_vbitpack: true,
+        });
+        let prog = compile(&net, &quark, &sched).unwrap();
+        assert_eq!(prog.layers().len(), net.len());
+        assert!(prog.trace_len() > 0);
+        assert!(prog.mem_len() > 0);
+        assert!(prog.image_bytes() > 0, "weights + rq tables must be captured");
+        assert_eq!(prog.out_elems(), 100, "demo net classifies over 100 classes");
+        assert_eq!(prog.input_elems(), 32 * 32 * 3);
+        assert!(!prog.is_fp32());
+        // Layer marks tile the trace.
+        assert_eq!(prog.layers().last().unwrap().trace_end, prog.trace_len());
+        let mut prev = 0;
+        for m in prog.layers() {
+            assert!(m.trace_end > prev, "layer {} spans no instructions", m.name);
+            prev = m.trace_end;
+        }
+        // Relocation entries are sorted, in range, and all point at `li`s.
+        let mut last = 0u32;
+        for (i, &r) in prog.reloc.iter().enumerate() {
+            assert!((r as usize) < prog.trace_len());
+            assert!(i == 0 || r > last, "reloc table must be strictly sorted");
+            last = r;
+            assert!(
+                matches!(
+                    prog.trace[r as usize],
+                    crate::isa::instr::Instr::Scalar(crate::isa::instr::ScalarOp::Li { .. })
+                ),
+                "relocation entry {r} is not an li"
+            );
+        }
+        // Determinism: compiling twice yields the identical artifact.
+        let again = compile(&demo_net(), &quark, &sched).unwrap();
+        assert_eq!(prog.trace, again.trace);
+        assert_eq!(prog.reloc, again.reloc);
+        assert_eq!(prog.image, again.image);
+        assert_eq!(prog.mem_len, again.mem_len);
+    }
+}

@@ -1,0 +1,206 @@
+//! Replay: [`Sim::execute`] / [`Sim::execute_functional`] over a
+//! [`CompiledProgram`].
+//!
+//! Replay re-applies the program's host-written memory image (weights,
+//! requant tables, constants, the default input), optionally overwrites the
+//! input segment with per-request bytes, then re-issues the recorded
+//! instruction trace. Because the trace is exactly what fresh kernel
+//! emission would have produced, a timed replay is cycle- and stat-exact
+//! against fresh emission, and a functional replay is bit-exact in memory
+//! effects (`rust/tests/program_replay.rs` holds the differentials).
+//!
+//! Relocation: `base` need not equal the compile-time base. The uniform
+//! delta is applied to every [`Sim::li_addr`]-marked immediate, every image
+//! chunk, and the input/output segments. All other address arithmetic in
+//! the trace is register-relative and needs no rewriting.
+
+use crate::isa::instr::{Instr, ScalarOp};
+use crate::kernels::KernelRun;
+use crate::nn::model::LayerReport;
+use crate::sim::mem::Memory;
+use crate::sim::Sim;
+
+use super::CompiledProgram;
+
+/// Result of replaying a [`CompiledProgram`].
+pub struct ProgramRun {
+    /// Per-layer reports, mirror of a fresh-emission run. On
+    /// [`Sim::execute_functional`] the cycle/stat fields are zero (no
+    /// timing model runs); shapes, addresses, and MACs are always filled.
+    pub reports: Vec<LayerReport>,
+    /// Replay-space address of the final feature map (the logits).
+    pub out_addr: u64,
+    pub out_elems: usize,
+    /// Total cycles the replay added (0 for functional replays).
+    pub cycles: u64,
+}
+
+/// Rebase an `li` whose immediate is a simulated-memory address.
+#[inline]
+fn relocate(instr: Instr, delta: u64) -> Instr {
+    match instr {
+        Instr::Scalar(ScalarOp::Li { rd, imm }) => {
+            Instr::Scalar(ScalarOp::Li { rd, imm: (imm as u64).wrapping_add(delta) as i64 })
+        }
+        // Recording only marks `li_addr` sites; anything else is a builder
+        // bug best surfaced loudly.
+        other => panic!("relocation entry on non-li instruction {other:?}"),
+    }
+}
+
+impl Sim {
+    /// Replay `prog` at `base`, honoring the current [`crate::sim::SimMode`]
+    /// (`Full`: values + cycles; `TimingOnly`: cycles only). Equivalent to
+    /// re-running the kernel emitters, at none of the emission cost.
+    ///
+    /// `base` must be 64-byte aligned with `prog.mem_len()` bytes of
+    /// simulated memory available (callers normally pass a fresh
+    /// `sim.alloc(prog.mem_len())`).
+    pub fn execute(&mut self, prog: &CompiledProgram, base: u64) -> ProgramRun {
+        self.execute_with_input(prog, base, None)
+    }
+
+    /// [`Sim::execute`] with per-request input bytes written over the
+    /// program's input segment (shorter inputs zero-padded, longer
+    /// truncated, codes clamped onto the input consumer grid — the same
+    /// rules as fresh emission).
+    pub fn execute_with_input(
+        &mut self,
+        prog: &CompiledProgram,
+        base: u64,
+        input: Option<&[u8]>,
+    ) -> ProgramRun {
+        let delta = self.begin_replay(prog, base, input);
+        let mut reports = Vec::with_capacity(prog.layers.len());
+        let mut idx = 0usize;
+        let mut reloc_i = 0usize;
+        for mark in &prog.layers {
+            let c0 = self.cycles();
+            let before = self.stats().clone();
+            while idx < mark.trace_end {
+                let instr = prog.trace[idx];
+                let instr = if reloc_i < prog.reloc.len() && prog.reloc[reloc_i] as usize == idx {
+                    reloc_i += 1;
+                    relocate(instr, delta)
+                } else {
+                    instr
+                };
+                self.emit(instr);
+                idx += 1;
+            }
+            // Kernels credit effective MACs host-side; replay credits the
+            // recorded amount at the same per-layer boundary (pooling
+            // reports MACs but credits none — `credited_macs` preserves
+            // that distinction bit-for-bit).
+            self.stats_mut().effective_macs += mark.credited_macs;
+            let stats = self.stats().delta_since(&before);
+            reports.push(LayerReport {
+                name: mark.name.clone(),
+                quantized: mark.quantized,
+                precision: mark.precision,
+                out_addr: mark.out_addr.wrapping_add(delta),
+                out_elems: mark.out_elems,
+                run: KernelRun { cycles: self.cycles() - c0, macs: mark.macs },
+                stats,
+            });
+        }
+        debug_assert_eq!(idx, prog.trace.len(), "layer marks must tile the trace");
+        let cycles = reports.iter().map(|r| r.run.cycles).sum();
+        ProgramRun {
+            reports,
+            out_addr: prog.out_addr.wrapping_add(delta),
+            out_elems: prog.out_elems,
+            cycles,
+        }
+    }
+
+    /// Values-only replay: the serving fast path. Executes the trace on the
+    /// functional machine with **no timing scoreboard and no stats** —
+    /// memory effects (and therefore logits) are bit-identical to
+    /// [`Sim::execute`] in `Full` mode, at a fraction of the host cost.
+    /// Cycle counts come from the coordinator's timing cache (they are a
+    /// pure function of the program, so they never need re-deriving per
+    /// request).
+    pub fn execute_functional(
+        &mut self,
+        prog: &CompiledProgram,
+        base: u64,
+        input: Option<&[u8]>,
+    ) -> ProgramRun {
+        let delta = self.begin_replay(prog, base, input);
+        if delta == 0 {
+            for instr in &prog.trace {
+                self.machine.execute(instr);
+            }
+        } else {
+            let mut reloc_i = 0usize;
+            for (idx, instr) in prog.trace.iter().enumerate() {
+                if reloc_i < prog.reloc.len() && prog.reloc[reloc_i] as usize == idx {
+                    reloc_i += 1;
+                    self.machine.execute(&relocate(*instr, delta));
+                } else {
+                    self.machine.execute(instr);
+                }
+            }
+        }
+        let reports = prog
+            .layers
+            .iter()
+            .map(|mark| LayerReport {
+                name: mark.name.clone(),
+                quantized: mark.quantized,
+                precision: mark.precision,
+                out_addr: mark.out_addr.wrapping_add(delta),
+                out_elems: mark.out_elems,
+                run: KernelRun { cycles: 0, macs: mark.macs },
+                stats: Default::default(),
+            })
+            .collect();
+        ProgramRun {
+            reports,
+            out_addr: prog.out_addr.wrapping_add(delta),
+            out_elems: prog.out_elems,
+            cycles: 0,
+        }
+    }
+
+    /// Shared replay prologue: sanity checks, image application, input
+    /// override. Returns the relocation delta.
+    fn begin_replay(&mut self, prog: &CompiledProgram, base: u64, input: Option<&[u8]>) -> u64 {
+        assert!(!self.is_recording(), "cannot replay into a recording Sim");
+        assert_eq!(
+            super::machine_fingerprint(&self.cfg),
+            prog.machine_fp,
+            "program compiled for machine {:?} cannot replay on {:?}",
+            prog.machine_name,
+            self.cfg.name
+        );
+        assert_eq!(base % 64, 0, "replay base {base:#x} must be 64-byte aligned");
+        assert!(
+            base >= Memory::BASE
+                && (base - Memory::BASE) + prog.mem_len <= self.machine.mem.size() as u64,
+            "program ({} bytes at {base:#x}) does not fit simulated memory",
+            prog.mem_len
+        );
+        let delta = base.wrapping_sub(prog.base);
+        for (addr, bytes) in &prog.image {
+            self.machine.mem.write(addr.wrapping_add(delta), bytes);
+        }
+        if let Some(bytes) = input {
+            let spec = &prog.input;
+            let addr = spec.addr.wrapping_add(delta);
+            if spec.fp32 {
+                let vals: Vec<f32> = (0..spec.elems)
+                    .map(|i| bytes.get(i).copied().unwrap_or(0) as f32 / 255.0)
+                    .collect();
+                self.write_f32s(addr, &vals);
+            } else {
+                let codes: Vec<u8> = (0..spec.elems)
+                    .map(|i| bytes.get(i).copied().unwrap_or(0).min(spec.qmax))
+                    .collect();
+                self.write_bytes(addr, &codes);
+            }
+        }
+        delta
+    }
+}

@@ -27,7 +27,7 @@ pub struct Fig3 {
 fn run_series(cfg: MachineConfig, precision: Precision, net: &[NetLayer]) -> Fig3Series {
     let mut sim = Sim::new(cfg.clone());
     sim.set_mode(SimMode::TimingOnly);
-    let reports = ModelRunner::run(&mut sim, net, precision, false);
+    let reports = ModelRunner::run(&mut sim, net, precision);
     Fig3Series {
         label: precision.label(),
         machine: cfg.name,

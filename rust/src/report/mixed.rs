@@ -43,7 +43,7 @@ fn run_cycles(
 ) -> Vec<(String, String, u64)> {
     let mut sim = Sim::new(machine.clone());
     sim.set_mode(SimMode::TimingOnly);
-    let run = ModelRunner::run_scheduled(&mut sim, net, schedule, false, None);
+    let run = ModelRunner::run_scheduled(&mut sim, net, schedule, None);
     run.reports
         .into_iter()
         .map(|r| (r.name, r.precision.label(), r.run.cycles))

@@ -211,9 +211,15 @@ impl Machine {
                 let base_addr = self.get_x(base);
                 match kind {
                     VMemKind::UnitStride => {
-                        for i in 0..vl {
-                            let v = self.mem.read_u64_le(base_addr + (i * ebytes) as u64, ebytes);
-                            self.vset(vd, i, ebytes, v);
+                        // Element-by-element little-endian reads of a
+                        // contiguous range are exactly one byte copy into the
+                        // (contiguous, LMUL-grouped) register file. vl == 0
+                        // touches nothing (not even the base address).
+                        let len = vl * ebytes;
+                        let off = vd.0 as usize * self.vreg_bytes;
+                        debug_assert!(off + len <= self.v.len(), "vector register file overrun");
+                        if len > 0 {
+                            self.v[off..off + len].copy_from_slice(self.mem.read(base_addr, len));
                         }
                     }
                     VMemKind::Strided { stride } => {
@@ -232,9 +238,12 @@ impl Machine {
                 let base_addr = self.get_x(base);
                 match kind {
                     VMemKind::UnitStride => {
-                        for i in 0..vl {
-                            let v = self.vget(vs3, i, ebytes);
-                            self.mem.write_u64_le(base_addr + (i * ebytes) as u64, v, ebytes);
+                        // Mirror of the unit-stride load: one byte copy.
+                        let len = vl * ebytes;
+                        let off = vs3.0 as usize * self.vreg_bytes;
+                        debug_assert!(off + len <= self.v.len(), "vector register file overrun");
+                        if len > 0 {
+                            self.mem.write(base_addr, &self.v[off..off + len]);
                         }
                     }
                     VMemKind::Strided { stride } => {
@@ -307,8 +316,17 @@ impl Machine {
             }
             MvVI { vd, imm } => {
                 let v = trunc(imm as u64, bits);
-                for i in 0..vl {
-                    self.vset(vd, i, eb, v);
+                if v == 0 {
+                    // Splat-zero (accumulator/plane clearing — the hot case)
+                    // is a byte fill over the LMUL group.
+                    let off = vd.0 as usize * self.vreg_bytes;
+                    let len = vl * eb;
+                    debug_assert!(off + len <= self.v.len(), "vector register file overrun");
+                    self.v[off..off + len].fill(0);
+                } else {
+                    for i in 0..vl {
+                        self.vset(vd, i, eb, v);
+                    }
                 }
             }
             Sext { vd, vs2, frac } => {

@@ -60,6 +60,29 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
+/// Compile-time capture of everything a [`crate::program::CompiledProgram`]
+/// needs to replay a kernel emission: the dynamic instruction trace, the
+/// trace indices of relocatable address materializations
+/// ([`Sim::li_addr`]), and the host-written memory image (weights, requant
+/// tables, constants — every [`Sim::write_bytes`]-family call).
+///
+/// Recording is armed by [`crate::program::ProgramBuilder`]; while armed,
+/// [`Sim::try_emit`] appends to the trace instead of simulating (scalar and
+/// `vsetvli` instructions still execute so emission-time address/`vl` state
+/// stays live, exactly as in [`SimMode::TimingOnly`] — but no cycles are
+/// accounted).
+#[derive(Default)]
+pub(crate) struct Recording {
+    /// Dynamic instruction trace, in emission order.
+    pub(crate) trace: Vec<Instr>,
+    /// Indices into `trace` of `li` instructions whose immediate is a
+    /// simulated-memory address (re-based on relocated replay). Sorted by
+    /// construction (recorded in emission order).
+    pub(crate) reloc: Vec<u32>,
+    /// Host-side memory writes `(address, bytes)`, in program order.
+    pub(crate) image: Vec<(u64, Vec<u8>)>,
+}
+
 /// The simulated system: one CVA6 scalar core + one Ara/Quark vector unit.
 pub struct Sim {
     pub cfg: MachineConfig,
@@ -67,6 +90,9 @@ pub struct Sim {
     timing: timing::Timing,
     stats: Stats,
     mode: SimMode,
+    /// When armed, emitted instructions are recorded instead of simulated
+    /// (see [`Recording`]).
+    recording: Option<Box<Recording>>,
 }
 
 impl Sim {
@@ -85,7 +111,34 @@ impl Sim {
             stats: Stats::default(),
             cfg,
             mode: SimMode::Full,
+            recording: None,
         }
+    }
+
+    // ---- trace recording (the compile half of compile-once / run-many) ----
+
+    /// Arm trace recording: every subsequent emit is captured instead of
+    /// simulated. Used by [`crate::program::ProgramBuilder`] only.
+    pub(crate) fn start_recording(&mut self) {
+        self.recording = Some(Box::default());
+    }
+
+    /// Disarm recording and return the capture. Panics if recording was
+    /// never armed (a `ProgramBuilder` bug, not a runtime condition).
+    pub(crate) fn take_recording(&mut self) -> Recording {
+        *self.recording.take().expect("Sim::take_recording without start_recording")
+    }
+
+    /// Number of instructions recorded so far (0 when not recording) — the
+    /// layer-marker cursor for [`crate::program::ProgramBuilder`].
+    pub(crate) fn trace_len(&self) -> usize {
+        self.recording.as_ref().map_or(0, |r| r.trace.len())
+    }
+
+    /// True while a recording is armed (replay into a recording `Sim` is a
+    /// logic error and asserts against this).
+    pub(crate) fn is_recording(&self) -> bool {
+        self.recording.is_some()
     }
 
     pub fn set_mode(&mut self, mode: SimMode) {
@@ -133,6 +186,16 @@ impl Sim {
                 return Err(SimError::NoQuarkIsa(vop_name(v)));
             }
         }
+        if let Some(rec) = self.recording.as_mut() {
+            rec.trace.push(instr);
+            // Scalar and config instructions still execute so emission-time
+            // state (addresses, vl) stays live — the TimingOnly rule, minus
+            // the cycle accounting. Vector data paths are not evaluated.
+            if matches!(instr, Instr::VSetVli { .. } | Instr::Scalar(_)) {
+                self.machine.execute(&instr);
+            }
+            return Ok(());
+        }
         // Capture vector state *before* execution (vsetvli changes it).
         let (vl, sew) = (self.machine.vl, self.machine.vtype.sew);
         self.timing.step(&instr, vl, sew, &mut self.stats);
@@ -171,6 +234,18 @@ impl Sim {
         self.emit(Instr::Scalar(ScalarOp::Li { rd, imm }));
     }
 
+    /// `li rd, addr` for a *simulated-memory address*. Identical to
+    /// [`Sim::li`] at emission time, but when a trace is being recorded the
+    /// instruction is marked relocatable, so [`Sim::execute`] can re-base
+    /// the whole program at a different address. Kernels must use this (not
+    /// `li`) for every buffer address they materialize.
+    pub fn li_addr(&mut self, rd: crate::isa::Reg, addr: u64) {
+        if let Some(rec) = self.recording.as_mut() {
+            rec.reloc.push(rec.trace.len() as u32);
+        }
+        self.emit(Instr::Scalar(ScalarOp::Li { rd, imm: addr as i64 }));
+    }
+
     pub fn v(&mut self, op: VOp) {
         self.emit(Instr::Vector(op));
     }
@@ -190,9 +265,14 @@ impl Sim {
         self.emit(Instr::Scalar(ScalarOp::Branch { taken: true }));
     }
 
-    // ---- host-side data access (test fixtures, golden comparisons) ----
+    // ---- host-side data access (model setup, test fixtures, golden
+    //      comparisons). Writes are captured by an armed recording: they are
+    //      the initial-memory image a compiled program re-applies on replay.
 
     pub fn write_bytes(&mut self, addr: u64, data: &[u8]) {
+        if let Some(rec) = self.recording.as_mut() {
+            rec.image.push((addr, data.to_vec()));
+        }
         self.machine.mem.write(addr, data);
     }
 
@@ -202,7 +282,7 @@ impl Sim {
 
     pub fn write_i8(&mut self, addr: u64, data: &[i8]) {
         let bytes: Vec<u8> = data.iter().map(|&v| v as u8).collect();
-        self.machine.mem.write(addr, &bytes);
+        self.write_bytes(addr, &bytes);
     }
 
     pub fn read_i32s(&self, addr: u64, n: usize) -> Vec<i32> {
@@ -212,9 +292,8 @@ impl Sim {
     }
 
     pub fn write_i32s(&mut self, addr: u64, data: &[i32]) {
-        for (i, &v) in data.iter().enumerate() {
-            self.machine.mem.write_u64_le(addr + (i * 4) as u64, v as u32 as u64, 4);
-        }
+        let bytes: Vec<u8> = data.iter().flat_map(|&v| (v as u32).to_le_bytes()).collect();
+        self.write_bytes(addr, &bytes);
     }
 
     pub fn read_f32s(&self, addr: u64, n: usize) -> Vec<f32> {
@@ -224,9 +303,16 @@ impl Sim {
     }
 
     pub fn write_f32s(&mut self, addr: u64, data: &[f32]) {
-        for (i, &v) in data.iter().enumerate() {
-            self.machine.mem.write_u64_le(addr + (i * 4) as u64, v.to_bits() as u64, 4);
-        }
+        let bytes: Vec<u8> = data.iter().flat_map(|&v| v.to_bits().to_le_bytes()).collect();
+        self.write_bytes(addr, &bytes);
+    }
+
+    /// Write a dense little-endian u64 array (packed weight planes, index
+    /// vectors). One recorded image chunk, vs one per word with
+    /// `machine.mem.write_u64_le` — which recordings do not see.
+    pub fn write_u64s(&mut self, addr: u64, data: &[u64]) {
+        let bytes: Vec<u8> = data.iter().flat_map(|&v| v.to_le_bytes()).collect();
+        self.write_bytes(addr, &bytes);
     }
 
     pub fn read_u8s(&self, addr: u64, n: usize) -> Vec<u8> {

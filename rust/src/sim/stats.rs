@@ -2,7 +2,10 @@
 
 
 /// Counters accumulated by the simulator while a kernel runs.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq`/`Eq` so differential suites (replay vs fresh emission) can
+/// compare whole snapshots.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Stats {
     /// Dynamic scalar instructions (CVA6-executed).
     pub scalar_instrs: u64,

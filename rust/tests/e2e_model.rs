@@ -11,14 +11,14 @@ use quark::sim::{Sim, SimMode};
 #[test]
 fn demo_net_full_mode_produces_data_and_matches_timing_only() {
     let net = demo_net();
-    let run = |mode: SimMode, write: bool| {
+    let run = |mode: SimMode| {
         let mut sim = Sim::new(MachineConfig::quark(4));
         sim.set_mode(mode);
-        let reports = ModelRunner::run(&mut sim, &net, Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true }, write);
+        let reports = ModelRunner::run(&mut sim, &net, Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
         (reports.iter().map(|r| r.run.cycles).sum::<u64>(), reports.len())
     };
-    let (full_cycles, n1) = run(SimMode::Full, true);
-    let (timing_cycles, n2) = run(SimMode::TimingOnly, false);
+    let (full_cycles, n1) = run(SimMode::Full);
+    let (timing_cycles, n2) = run(SimMode::TimingOnly);
     assert_eq!(n1, n2);
     assert_eq!(full_cycles, timing_cycles, "timing must be data-independent");
 }
@@ -30,7 +30,7 @@ fn resnet18_per_layer_ordering_matches_paper_shape() {
     let total = |cfg: MachineConfig, prec: Precision| -> u64 {
         let mut sim = Sim::new(cfg);
         sim.set_mode(SimMode::TimingOnly);
-        ModelRunner::run(&mut sim, &net, prec, false)
+        ModelRunner::run(&mut sim, &net, prec)
             .iter()
             .filter(|r| r.quantized)
             .map(|r| r.run.cycles)
@@ -73,7 +73,7 @@ fn quark8_runs_the_full_model_faster_than_quark4() {
     let total = |lanes: usize| -> u64 {
         let mut sim = Sim::new(MachineConfig::quark(lanes));
         sim.set_mode(SimMode::TimingOnly);
-        ModelRunner::run(&mut sim, &net, Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true }, false)
+        ModelRunner::run(&mut sim, &net, Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true })
             .iter()
             .map(|r| r.run.cycles)
             .sum()

@@ -93,7 +93,7 @@ fn mixed_block_matches_naive_i128_golden_layer_by_layer() {
     for schedule in schedules {
         let mut sim = Sim::new(MachineConfig::quark(4));
         sim.set_mode(SimMode::Full);
-        let run = ModelRunner::run_scheduled(&mut sim, &net, &schedule, true, Some(&input));
+        let run = ModelRunner::run_scheduled(&mut sim, &net, &schedule, Some(&input));
         let golden = run_golden(&net, &schedule, Some(&input));
         assert_eq!(run.reports.len(), net.len());
         assert_eq!(golden.maps.len(), net.len() + 1);
@@ -123,7 +123,7 @@ fn repack_boundaries_clamp_onto_the_consumer_grid() {
     let input = test_input();
     let mut sim = Sim::new(MachineConfig::quark(4));
     sim.set_mode(SimMode::Full);
-    let run = ModelRunner::run_scheduled(&mut sim, &net, &schedule, true, Some(&input));
+    let run = ModelRunner::run_scheduled(&mut sim, &net, &schedule, Some(&input));
     let stem = &run.reports[0];
     let codes = sim.read_u8s(stem.out_addr, stem.out_elems);
     assert!(codes.iter().all(|&v| v <= 3), "stem output escapes the 2-bit grid");
@@ -135,7 +135,7 @@ fn repack_boundaries_clamp_onto_the_consumer_grid() {
     let mut sim8 = Sim::new(MachineConfig::quark(4));
     sim8.set_mode(SimMode::Full);
     let run8 =
-        ModelRunner::run_scheduled(&mut sim8, &net, &PrecisionMap::uniform(INT8), true, Some(&input));
+        ModelRunner::run_scheduled(&mut sim8, &net, &PrecisionMap::uniform(INT8), Some(&input));
     let stem8 = &run8.reports[0];
     let codes8 = sim8.read_u8s(stem8.out_addr, stem8.out_elems);
     assert!(codes8.iter().any(|&v| v > 3), "int8-consumed stem keeps the 8-bit grid");

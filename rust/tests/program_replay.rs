@@ -1,0 +1,279 @@
+//! Differential proof of the compile-once / run-many split: replaying a
+//! [`quark::program::CompiledProgram`] is indistinguishable from fresh
+//! kernel emission —
+//!
+//! * **bit-exact logits and feature maps** (every layer, `Full` mode),
+//! * **exactly identical cycle counts and stats** (both `SimMode`s),
+//! * across uniform and mixed precision schedules (incl. w1a1),
+//! * at **relocated base addresses** (the artifact is position-independent),
+//! * and [`Sim::execute_functional`] (the serving fast path, no timing
+//!   scoreboard) produces the same memory effects as a timed replay — and
+//!   the same codes as the naive-i128 host golden model.
+//!
+//! The net is the mixed-precision suite's ResNet basic block (stem →
+//! projection + two 3×3 convs with residual → pool → FC): every layer kind,
+//! every re-pack boundary, small enough for `Full`-mode runs in a test.
+
+use quark::arch::MachineConfig;
+use quark::kernels::Conv2dParams;
+use quark::nn::golden::run_golden;
+use quark::nn::model::{ModelRunner, Precision, PrecisionMap};
+use quark::nn::{ConvLayer, LayerKind, NetLayer};
+use quark::program::compile;
+use quark::sim::{Sim, SimMode};
+
+const INT8: Precision = Precision::Int8;
+const W2A2: Precision = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
+const W1A1: Precision = Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true };
+
+fn block_net() -> Vec<NetLayer> {
+    let conv = |name: &str,
+                c_in: usize,
+                ksz: usize,
+                relu: bool,
+                residual: bool,
+                quantized: bool| ConvLayer {
+        name: name.into(),
+        params: Conv2dParams {
+            h: 8,
+            w: 8,
+            c_in,
+            c_out: 64,
+            kh: ksz,
+            kw: ksz,
+            stride: 1,
+            pad: if ksz == 3 { 1 } else { 0 },
+        },
+        relu,
+        residual,
+        quantized,
+    };
+    vec![
+        NetLayer { kind: LayerKind::Conv(conv("stem", 3, 3, true, false, false)), input: 0, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("proj", 64, 1, false, false, true)), input: 1, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c1", 64, 3, true, false, true)), input: 1, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c2", 64, 3, true, true, true)), input: 3, residual_from: Some(2) },
+        NetLayer { kind: LayerKind::AvgPool { h: 8, w: 8, c: 64 }, input: 4, residual_from: None },
+        NetLayer { kind: LayerKind::Fc { k: 64, n: 10, name: "fc".into() }, input: 5, residual_from: None },
+    ]
+}
+
+fn test_input() -> Vec<u8> {
+    (0..32 * 32 * 3).map(|i| ((i * 11 + 5) % 251) as u8).collect()
+}
+
+/// The ≥5-schedule matrix: uniform w2a2 / w1a1 / int8 plus two mixed maps
+/// covering every re-pack boundary (8→2, 2→8, 1-bit inside int8).
+fn schedules() -> Vec<PrecisionMap> {
+    vec![
+        PrecisionMap::uniform(W2A2),
+        PrecisionMap::uniform(W1A1),
+        PrecisionMap::uniform(INT8),
+        PrecisionMap::uniform(W2A2).with("c1", INT8),
+        PrecisionMap::uniform(INT8).with("c2", W1A1),
+    ]
+}
+
+#[test]
+fn full_mode_replay_is_bit_and_cycle_exact_across_schedules() {
+    let net = block_net();
+    let input = test_input();
+    for schedule in schedules() {
+        // Fresh kernel emission — the reference.
+        let mut fresh = Sim::new(MachineConfig::quark(4));
+        fresh.set_mode(SimMode::Full);
+        let want = ModelRunner::run_scheduled(&mut fresh, &net, &schedule, Some(&input));
+
+        // Compile once, replay on a different Sim.
+        let prog = compile(&net, &MachineConfig::quark(4), &schedule).unwrap();
+        let mut replayed = Sim::new(MachineConfig::quark(4));
+        replayed.set_mode(SimMode::Full);
+        let base = replayed.alloc(prog.mem_len());
+        let got = replayed.execute_with_input(&prog, base, Some(&input));
+
+        assert_eq!(got.reports.len(), want.reports.len(), "{}", schedule.spec());
+        for (g, w) in got.reports.iter().zip(want.reports.iter()) {
+            let ctx = format!("layer {} under {}", w.name, schedule.spec());
+            assert_eq!(g.name, w.name, "{ctx}");
+            assert_eq!(g.precision, w.precision, "{ctx}");
+            assert_eq!(g.run.cycles, w.run.cycles, "cycle divergence at {ctx}");
+            assert_eq!(g.run.macs, w.run.macs, "{ctx}");
+            assert_eq!(g.stats, w.stats, "stats divergence at {ctx}");
+            assert_eq!(g.out_elems, w.out_elems, "{ctx}");
+            // Bit-exact feature maps, every layer.
+            assert_eq!(
+                replayed.read_u8s(g.out_addr, g.out_elems),
+                fresh.read_u8s(w.out_addr, w.out_elems),
+                "feature-map divergence at {ctx}"
+            );
+        }
+        assert_eq!(
+            replayed.read_u8s(got.out_addr, got.out_elems),
+            fresh.read_u8s(want.out_addr, want.out_elems),
+            "logit divergence under {}",
+            schedule.spec()
+        );
+    }
+}
+
+#[test]
+fn timing_only_replay_matches_fresh_emission_cycles() {
+    let net = block_net();
+    for schedule in [PrecisionMap::uniform(W2A2), PrecisionMap::uniform(W2A2).with("fc", INT8)] {
+        let mut fresh = Sim::new(MachineConfig::quark(4));
+        fresh.set_mode(SimMode::TimingOnly);
+        let want = ModelRunner::run_scheduled(&mut fresh, &net, &schedule, None);
+
+        let prog = compile(&net, &MachineConfig::quark(4), &schedule).unwrap();
+        let mut replayed = Sim::new(MachineConfig::quark(4));
+        replayed.set_mode(SimMode::TimingOnly);
+        let base = replayed.alloc(prog.mem_len());
+        let got = replayed.execute(&prog, base);
+
+        let want_total: u64 = want.reports.iter().map(|r| r.run.cycles).sum();
+        assert_eq!(got.cycles, want_total, "total cycles under {}", schedule.spec());
+        for (g, w) in got.reports.iter().zip(want.reports.iter()) {
+            assert_eq!(g.run.cycles, w.run.cycles, "layer {} under {}", w.name, schedule.spec());
+            assert_eq!(g.stats, w.stats, "layer {} under {}", w.name, schedule.spec());
+        }
+    }
+}
+
+#[test]
+fn relocation_replays_bit_exactly_at_two_bases() {
+    let net = block_net();
+    let schedule = PrecisionMap::uniform(W2A2).with("c1", INT8);
+    let input = test_input();
+    let prog = compile(&net, &MachineConfig::quark(4), &schedule).unwrap();
+
+    // Base A: the compile-time base (fresh sim, first allocation).
+    let mut sim_a = Sim::new(MachineConfig::quark(4));
+    sim_a.set_mode(SimMode::Full);
+    let base_a = sim_a.alloc(prog.mem_len());
+    let run_a = sim_a.execute_with_input(&prog, base_a, Some(&input));
+
+    // Base B: shifted by a padding allocation (fresh timing state, so the
+    // cycle comparison is exact, not just close).
+    let mut sim_b = Sim::new(MachineConfig::quark(4));
+    sim_b.set_mode(SimMode::Full);
+    sim_b.alloc(1 << 16);
+    let base_b = sim_b.alloc(prog.mem_len());
+    assert_ne!(base_a, base_b, "test must exercise a real relocation");
+    let run_b = sim_b.execute_with_input(&prog, base_b, Some(&input));
+
+    assert_eq!(
+        sim_a.read_u8s(run_a.out_addr, run_a.out_elems),
+        sim_b.read_u8s(run_b.out_addr, run_b.out_elems),
+        "relocated replay must produce identical logits"
+    );
+    for (a, b) in run_a.reports.iter().zip(run_b.reports.iter()) {
+        assert_eq!(a.run.cycles, b.run.cycles, "layer {}", a.name);
+        assert_eq!(
+            sim_a.read_u8s(a.out_addr, a.out_elems),
+            sim_b.read_u8s(b.out_addr, b.out_elems),
+            "layer {}",
+            a.name
+        );
+        assert_eq!(
+            b.out_addr,
+            a.out_addr + (base_b - base_a),
+            "reported addresses must follow the relocation delta"
+        );
+    }
+
+    // A third replay on sim_b at yet another base (worker-style reuse of a
+    // dirty arena) still reproduces the same logits.
+    let base_c = sim_b.alloc(prog.mem_len());
+    let run_c = sim_b.execute_with_input(&prog, base_c, Some(&input));
+    assert_eq!(
+        sim_b.read_u8s(run_c.out_addr, run_c.out_elems),
+        sim_a.read_u8s(run_a.out_addr, run_a.out_elems),
+    );
+}
+
+#[test]
+fn functional_replay_matches_timed_replay_and_host_golden() {
+    let net = block_net();
+    let schedule = PrecisionMap::uniform(W2A2).with("c1", INT8);
+    let input = test_input();
+    let prog = compile(&net, &MachineConfig::quark(4), &schedule).unwrap();
+
+    // Timed Full replay — the reference values.
+    let mut timed = Sim::new(MachineConfig::quark(4));
+    timed.set_mode(SimMode::Full);
+    let base = timed.alloc(prog.mem_len());
+    let timed_run = timed.execute_with_input(&prog, base, Some(&input));
+
+    // Functional replay (serving fast path): same memory effects, no timing.
+    let mut func = Sim::new(MachineConfig::quark(4));
+    let base = func.alloc(prog.mem_len());
+    let func_run = func.execute_functional(&prog, base, Some(&input));
+    assert_eq!(func_run.cycles, 0, "functional replay accounts no cycles");
+    for (f, t) in func_run.reports.iter().zip(timed_run.reports.iter()) {
+        assert_eq!(
+            func.read_u8s(f.out_addr, f.out_elems),
+            timed.read_u8s(t.out_addr, t.out_elems),
+            "layer {}",
+            t.name
+        );
+    }
+
+    // And both agree with the naive-i128 host golden model, layer by layer.
+    let golden = run_golden(&net, &schedule, Some(&input));
+    for (i, f) in func_run.reports.iter().enumerate() {
+        assert_eq!(
+            func.read_u8s(f.out_addr, f.out_elems),
+            golden.maps[i + 1],
+            "layer {} diverges from the i128 golden model",
+            f.name
+        );
+    }
+
+    // Worker-style reuse: repeat replays on one dirty sim are deterministic
+    // in the input, and sensitive to it.
+    let again = func.execute_functional(&prog, base, Some(&input));
+    assert_eq!(
+        func.read_u8s(again.out_addr, again.out_elems),
+        golden.maps[net.len()],
+        "repeat replay must reproduce the same logits"
+    );
+    let other_input: Vec<u8> = input.iter().map(|&b| b ^ 0x55).collect();
+    let other = func.execute_functional(&prog, base, Some(&other_input));
+    assert_ne!(
+        func.read_u8s(other.out_addr, other.out_elems),
+        golden.maps[net.len()],
+        "different inputs must produce different logits"
+    );
+}
+
+#[test]
+fn replay_rejects_wrong_machines_and_misaligned_bases() {
+    let net = block_net();
+    let schedule = PrecisionMap::uniform(W2A2);
+    let prog = compile(&net, &MachineConfig::quark(4), &schedule).unwrap();
+
+    // Wrong machine: the trace carries Quark custom ops; an Ara sim must be
+    // rejected up front (fingerprint mismatch), not trap mid-replay.
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut sim = Sim::new(MachineConfig::ara(4));
+        let base = sim.alloc(prog.mem_len());
+        sim.execute(&prog, base);
+    }));
+    assert!(r.is_err(), "replay on the wrong machine must panic");
+
+    // Lane-count change is also a different machine (VLEN changes vl).
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut sim = Sim::new(MachineConfig::quark(8));
+        let base = sim.alloc(prog.mem_len());
+        sim.execute(&prog, base);
+    }));
+    assert!(r.is_err(), "replay on a different lane count must panic");
+
+    // Misaligned base: allocation alignment is part of the contract.
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        let base = sim.alloc(prog.mem_len());
+        sim.execute(&prog, base + 1);
+    }));
+    assert!(r.is_err(), "replay at a misaligned base must panic");
+}

@@ -2,6 +2,10 @@
 //! (proptest is unavailable in this offline environment). `Gen` is a
 //! splitmix64-based generator; `run_cases` reports the failing seed so
 //! failures are reproducible.
+//!
+//! Included by several integration-test binaries; not every binary uses
+//! every helper, so unused-item lints are silenced crate-locally.
+#![allow(dead_code)]
 
 pub struct Gen {
     state: u64,
