@@ -1,0 +1,80 @@
+//! Bench: tensor-parallel strong scaling on the full ResNet-18 (CIFAR)
+//! graph — modeled cluster latency at 1/2/4/8 shard cores, for w2a2, w1a1,
+//! and the mixed schedule.
+//!
+//! Reuses the report generator ([`quark::report::cluster::generate`] — the
+//! same sweep `repro cluster` runs) so the bench's acceptance math can
+//! never drift from the published report: per (schedule, shard count) the
+//! cluster model is `Σ_layers max(shard compute) + all-gather sync`
+//! ([`quark::cluster`]), and the rows carry speedup vs the true 1-shard
+//! run plus the Amdahl-style sync fraction.
+//!
+//! Acceptance: ≥1.6x modeled-latency speedup at 4 shards on ResNet-18
+//! w2a2. Pass `--fast` for a truncated 8-layer graph (smoke only; the
+//! assertion is calibrated to the full net and skipped).
+
+use std::time::Instant;
+
+use quark::nn::resnet::resnet18_cifar;
+use quark::nn::NetLayer;
+use quark::report::cluster::{generate, DEFAULT_SHARD_COUNTS};
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let net: Vec<NetLayer> = if fast {
+        resnet18_cifar(100).into_iter().take(8).collect()
+    } else {
+        resnet18_cifar(100)
+    };
+
+    println!(
+        "== cluster strong scaling, ResNet-18{} at {:?} shard cores ==",
+        if fast { " (truncated --fast graph)" } else { "" },
+        DEFAULT_SHARD_COUNTS
+    );
+    let t0 = Instant::now();
+    let rep = generate(&net, &DEFAULT_SHARD_COUNTS);
+    let sweep_s = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{:<10} {:>6} {:>14} {:>12} {:>9} {:>10} {:>11}",
+        "schedule", "shards", "model cycles", "sync cycles", "speedup", "sync frac", "shard util"
+    );
+    for r in &rep.rows {
+        println!(
+            "{:<10} {:>6} {:>14} {:>12} {:>8.2}x {:>10.4} {:>11.2}",
+            r.schedule,
+            r.shards,
+            r.total_cycles,
+            r.sync_cycles,
+            r.speedup,
+            r.sync_fraction,
+            r.mean_shard_util
+        );
+    }
+    println!(
+        "\n(model: per layer, max over shard cores of compute cycles, plus a ring\n\
+         all-gather of the partial output channels charged vs axi_bytes_per_cycle;\n\
+         im2col + activation packing replicates per shard — the serial fraction.\n\
+         sweep host wall-clock: {sweep_s:.2} s, shard programs compiled + replayed\n\
+         on parallel host threads)"
+    );
+    if !fast {
+        let r = rep
+            .rows
+            .iter()
+            .find(|r| r.schedule == "w2a2" && r.shards == 4)
+            .expect("default sweep covers w2a2 at 4 shards");
+        assert!(
+            r.speedup >= 1.6,
+            "acceptance: ≥1.6x modeled speedup at 4 shards on ResNet-18 w2a2 \
+             (got {:.2}x, sync fraction {:.4})",
+            r.speedup,
+            r.sync_fraction
+        );
+        println!(
+            "acceptance: {:.2}x ≥ 1.6x at 4 shards (w2a2), sync fraction {:.4} ✓",
+            r.speedup, r.sync_fraction
+        );
+    }
+}

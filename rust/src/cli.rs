@@ -1,13 +1,14 @@
 //! Hand-rolled CLI (no clap in this offline environment).
 //!
 //! ```text
-//! repro report <fig3|fig4|mixed|table1|table2|fig5|summary|all> [--fast]
+//! repro report <fig3|fig4|mixed|cluster|table1|table2|fig5|summary|all> [--fast]
 //! repro simulate --kernel <conv2d|gemm> --precision <fp32|int8|w1a1|w2a2|w2a2-novbp>
 //!                [--machine <ara-4l|quark-4l|quark-8l>] [--size N] [--channels C]
 //! repro program [--precision <spec>] [--machine <ara-4l|quark-4l|quark-8l>] [--fast]
+//! repro cluster [--shards 1,2,4,8] [--fast]
 //! repro crosscheck [--artifact artifacts/qgemm.hlo.txt] [--seed S]
 //! repro serve [--addr 127.0.0.1:7070] [--workers N] [--batch B] [--queue Q]
-//!             [--machine <ara-4l|quark-4l|quark-8l>]
+//!             [--machine <ara-4l|quark-4l|quark-8l>] [--shards N]
 //!             [--precision <spec>]      e.g. --precision "w2a2;c1=int8;fc=int8"
 //! repro phys
 //! ```
@@ -18,6 +19,13 @@
 //! (trace length, image size, memory footprint), then cross-checks a timed
 //! replay against one fresh kernel emission — cycle counts must agree
 //! exactly — and reports the wall-clock ratio.
+//!
+//! `repro cluster` (alias `repro report cluster`) runs the tensor-parallel
+//! strong-scaling sweep ([`crate::report::cluster`]): ResNet-18 modeled
+//! latency at 1/2/4/8 shard cores for w2a2 / w1a1 / mixed, with the
+//! all-gather sync fraction. `serve --shards N` makes the coordinator
+//! partition every default inference across N simulated cores (clients can
+//! override per request with the `shards=` wire field).
 //!
 //! The serve `--precision` spec sets the deployment's default precision
 //! schedule (`default[;layer=precision…]` — see
@@ -74,6 +82,7 @@ pub fn main() -> Result<()> {
         Some("report") => cmd_report(pos.get(1).map(|s| s.as_str()).unwrap_or("all"), &flags),
         Some("simulate") => cmd_simulate(&flags),
         Some("program") => cmd_program(&flags),
+        Some("cluster") => cmd_cluster(&flags),
         Some("crosscheck") => cmd_crosscheck(&flags),
         Some("serve") => cmd_serve(&flags),
         Some("phys") => {
@@ -84,7 +93,7 @@ pub fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: repro <report|simulate|program|crosscheck|serve|phys> …\n\
+                "usage: repro <report|simulate|program|cluster|crosscheck|serve|phys> …\n\
                  see rust/src/cli.rs or README.md for full syntax"
             );
             Ok(())
@@ -117,6 +126,9 @@ fn cmd_report(which: &str, flags: &HashMap<String, String>) -> Result<()> {
         report::mixed::generate(&net)
     };
     match which {
+        // One implementation for both spellings (`repro report cluster` ≡
+        // `repro cluster`): cmd_cluster handles --fast and --shards itself.
+        "cluster" => return cmd_cluster(flags),
         "mixed" => {
             let rep = run_mixed();
             println!("{}", rep.markdown());
@@ -316,6 +328,37 @@ fn cmd_program(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Tensor-parallel strong-scaling demo: modeled ResNet-18 latency at the
+/// requested shard counts, per schedule, with the Amdahl-style sync
+/// fraction (see [`crate::report::cluster`]).
+fn cmd_cluster(flags: &HashMap<String, String>) -> Result<()> {
+    let counts: Vec<usize> = match flags.get("shards") {
+        Some(spec) => {
+            let mut v = Vec::new();
+            for tok in spec.split(',') {
+                v.push(
+                    tok.trim()
+                        .parse()
+                        .with_context(|| format!("bad --shards entry {tok:?}"))?,
+                );
+            }
+            v
+        }
+        None => crate::report::cluster::DEFAULT_SHARD_COUNTS.to_vec(),
+    };
+    let net: Vec<_> = if flags.contains_key("fast") {
+        resnet18_cifar(100).into_iter().take(8).collect()
+    } else {
+        resnet18_cifar(100)
+    };
+    eprintln!("[cluster] strong-scaling sweep at {counts:?} shard cores…");
+    let rep = report::cluster::generate(&net, &counts);
+    println!("{}", rep.markdown());
+    report::write_report("cluster.md", &rep.markdown())?;
+    report::write_report("cluster.csv", &rep.csv())?;
+    Ok(())
+}
+
 fn cmd_crosscheck(flags: &HashMap<String, String>) -> Result<()> {
     let artifact = flags
         .get("artifact")
@@ -357,12 +400,18 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             Err(e) => bail!("bad --precision: {e}"),
         }
     }
+    if let Some(s) = flags.get("shards") {
+        cfg.shards = s.parse().with_context(|| format!("bad --shards {s:?}"))?;
+    }
     if let Err(e) = cfg
         .schedule
         .validate(&cfg.net)
         .and_then(|_| cfg.schedule.validate_machine(&cfg.net, &cfg.machine))
     {
         bail!("bad --precision for this deployment: {e}");
+    }
+    if let Err(e) = crate::coordinator::validate_shards(cfg.shards, &cfg.schedule, &cfg.net) {
+        bail!("bad --shards for this deployment: {e}");
     }
     let coord = Arc::new(Coordinator::start(cfg));
     server::serve(coord, &addr)

@@ -1,0 +1,515 @@
+//! Cluster sharding — tensor-parallel inference across multiple simulated
+//! Quark cores.
+//!
+//! The paper scales Quark by widening one vector unit (Quark-4L → Quark-8L,
+//! Table II); a serving deployment scales by *replicating* it. This module
+//! partitions one inference across `N` simulated cores the way SPEED
+//! (arXiv 2409.14017) and Sparq argue sub-byte datapaths should be scaled:
+//! every Conv/FC layer's output channels are split into `N` contiguous
+//! ranges ([`ShardPlan`]), each shard core runs its own relocatable
+//! [`CompiledProgram`] (compiled through the same `emit_model` routine as
+//! the single-core path — [`crate::program::compile_shard`]), and an
+//! activation **all-gather** between layers rebuilds the full feature map on
+//! every core:
+//!
+//! ```text
+//!            layer i (sharded)                 sync            layer i+1
+//! core 0 ─ conv c_out[0 .. n/N)   ─┐   ┌─ full map ─► conv (full input) …
+//! core 1 ─ conv c_out[n/N .. 2n/N) ─┼──►┼─ full map ─► conv (full input) …
+//!   …                               │   │  (ring all-gather, N−1 steps
+//! core N−1 ─ conv c_out[.. n)     ─┘   └─  charged vs axi_bytes_per_cycle)
+//! ```
+//!
+//! **Bit-exactness.** Shard emission draws synthetic weights/requant
+//! parameters from the *full* deterministic stream and column-slices them,
+//! so channel `c`'s integer accumulation and scalar-FP requant are the same
+//! arithmetic on every topology; the gather is a pure channel permutation of
+//! u8 codes (it never re-quantizes, so the bit-plane re-pack rule —
+//! narrowest-consumer grids — survives). Gathered logits are therefore
+//! bit-identical to the single-core program and to the naive-i128 host
+//! golden model (`rust/tests/cluster.rs` holds the differentials).
+//!
+//! **Cost model.** Per layer, the cluster charges
+//! `max(shard cycles) + sync_cost(layer)`, where [`sync_cost`] models the
+//! ring all-gather: `N−1` steps, each moving the widest shard's partial
+//! slice over the core's AXI link (`axi_bytes_per_cycle`) plus a
+//! `mem_latency` start-up. At `N = 1` every layer is unpartitioned, the
+//! shard program is emission-identical to [`crate::program::compile`]'s,
+//! and the reported cycles equal the single-core cycles exactly.
+//!
+//! **Host execution.** [`ClusterCores::infer`] replays the shard programs
+//! on parallel host threads (one persistent [`Sim`] per shard core),
+//! rendezvousing at a [`Barrier`] after each sharded layer to exchange
+//! partial maps. [`cluster_timing`] replays them `TimingOnly` (fresh cores,
+//! also in parallel) and aggregates the cycle model.
+
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+use crate::arch::MachineConfig;
+use crate::nn::model::{PrecisionMap, ShardPlan};
+use crate::nn::NetLayer;
+use crate::program::{compile_shard, CompiledProgram, ShardSeg};
+use crate::sim::{Sim, SimMode};
+
+/// A compiled tensor-parallel deployment: one [`CompiledProgram`] per shard
+/// core, all over the same (net, machine, schedule).
+pub struct ClusterProgram {
+    shards: Vec<Arc<CompiledProgram>>,
+}
+
+impl ClusterProgram {
+    /// Assemble from per-shard programs (e.g. the coordinator's per-shard
+    /// cache entries). Programs must be a complete, consistent shard set.
+    pub fn from_shards(shards: Vec<Arc<CompiledProgram>>) -> Result<ClusterProgram, String> {
+        if shards.is_empty() {
+            return Err("a cluster needs at least one shard program".to_string());
+        }
+        let n = shards.len();
+        for (i, p) in shards.iter().enumerate() {
+            let (idx, count) = p
+                .shard()
+                .ok_or_else(|| format!("program {i} is not a shard program"))?;
+            if idx != i || count != n {
+                return Err(format!(
+                    "program {i} is shard {idx}/{count}, expected {i}/{n}"
+                ));
+            }
+            if p.net_fingerprint() != shards[0].net_fingerprint()
+                || p.machine_fingerprint() != shards[0].machine_fingerprint()
+                || p.schedule() != shards[0].schedule()
+            {
+                return Err(format!("program {i} belongs to a different deployment"));
+            }
+        }
+        Ok(ClusterProgram { shards })
+    }
+
+    /// Number of shard cores.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The per-shard programs, in shard order.
+    pub fn shard_programs(&self) -> &[Arc<CompiledProgram>] {
+        &self.shards
+    }
+
+    /// Element count of the final (gathered) feature map.
+    pub fn out_elems(&self) -> usize {
+        self.shards[0].out_elems()
+    }
+
+    /// The schedule the cluster was compiled under.
+    pub fn schedule(&self) -> &PrecisionMap {
+        self.shards[0].schedule()
+    }
+}
+
+/// Compile `net` for `machine` under `schedule`, partitioned across
+/// `shards` cores. Validates the schedule (like [`crate::program::compile`])
+/// plus the shard plan (channel counts, integer-only schedules). Shard
+/// programs are independent, so they compile on parallel host threads —
+/// cold wall-clock stays near one single-core compile. (The trade is
+/// transient memory: each in-flight `ProgramBuilder` owns its own recording
+/// arena.)
+pub fn compile_cluster(
+    net: &[NetLayer],
+    machine: &MachineConfig,
+    schedule: &PrecisionMap,
+    shards: usize,
+) -> Result<ClusterProgram, String> {
+    let plan = ShardPlan::derive(net, shards)?;
+    plan.validate_schedule(schedule)?;
+    let progs = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..shards)
+            .map(|i| {
+                let plan = &plan;
+                s.spawn(move || compile_shard(net, machine, schedule, plan, i).map(Arc::new))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard compile thread panicked"))
+            .collect::<Result<Vec<_>, _>>()
+    })?;
+    ClusterProgram::from_shards(progs)
+}
+
+/// Modeled cycles of the ring all-gather after one sharded layer: `N − 1`
+/// steps, each moving the widest shard's partial slice (`max_part_bytes`)
+/// over the per-core AXI link at `axi_bytes_per_cycle`, with a `mem_latency`
+/// start-up per step. 0 for replicated layers and 1-shard clusters.
+pub fn sync_cost(cfg: &MachineConfig, shards: usize, max_part_bytes: u64) -> u64 {
+    if shards <= 1 || max_part_bytes == 0 {
+        return 0;
+    }
+    let per_step = max_part_bytes.div_ceil(cfg.axi_bytes_per_cycle as u64) + cfg.mem_latency;
+    (shards as u64 - 1) * per_step
+}
+
+/// One layer of the aggregated cluster cycle model.
+#[derive(Clone, Debug)]
+pub struct LayerTiming {
+    pub name: String,
+    /// `max` over shard cores of the layer's compute cycles.
+    pub compute_cycles: u64,
+    /// Modeled all-gather cycles after the layer ([`sync_cost`]).
+    pub sync_cycles: u64,
+}
+
+/// The cluster cycle model: per-layer `max(shard cycles) + sync`, plus the
+/// per-core busy totals the utilization numbers derive from.
+#[derive(Clone, Debug)]
+pub struct ClusterTiming {
+    pub layers: Vec<LayerTiming>,
+    /// Total compute cycles each shard core spent (Σ of its layer cycles).
+    pub shard_cycles: Vec<u64>,
+    /// Σ per-layer `max` over shards.
+    pub compute_cycles: u64,
+    /// Σ per-layer sync.
+    pub sync_cycles: u64,
+}
+
+impl ClusterTiming {
+    /// Modeled end-to-end latency in cycles: compute critical path + sync.
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.sync_cycles
+    }
+
+    /// Amdahl-style fraction of the modeled latency spent in inter-core
+    /// synchronization.
+    pub fn sync_fraction(&self) -> f64 {
+        self.sync_cycles as f64 / self.total_cycles().max(1) as f64
+    }
+
+    /// Modeled utilization of each shard core: its busy cycles over the
+    /// cluster's compute critical path (1.0 = never waiting on peers).
+    pub fn shard_utilization(&self) -> Vec<f64> {
+        self.shard_cycles
+            .iter()
+            .map(|&c| c as f64 / self.compute_cycles.max(1) as f64)
+            .collect()
+    }
+}
+
+/// Simulated-memory arena for one shard core: the program's footprint plus
+/// slack for the replay-base allocation, floored so small programs don't
+/// thrash reallocation.
+fn shard_mem_bytes(prog: &CompiledProgram) -> usize {
+    ((prog.mem_len() as usize) + (1 << 20)).max(16 << 20)
+}
+
+/// Derive the cluster cycle model for `cluster`: one `TimingOnly` replay per
+/// shard program on parallel host threads (fresh cores — this is the
+/// cache-miss path, run once per deployment), aggregated per layer as
+/// `max(shard cycles) + sync_cost`.
+pub fn cluster_timing(cluster: &ClusterProgram, machine: &MachineConfig) -> ClusterTiming {
+    let per_shard: Vec<Vec<u64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = cluster
+            .shards
+            .iter()
+            .map(|prog| {
+                s.spawn(move || {
+                    let mut sim = Sim::with_memory(machine.clone(), shard_mem_bytes(prog));
+                    sim.set_mode(SimMode::TimingOnly);
+                    let base = sim.alloc(prog.mem_len());
+                    let run = sim.execute(prog, base);
+                    run.reports.iter().map(|r| r.run.cycles).collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard timing thread panicked")).collect()
+    });
+    aggregate_timing(cluster, machine, &per_shard)
+}
+
+/// Fold per-shard per-layer cycles into the cluster model.
+fn aggregate_timing(
+    cluster: &ClusterProgram,
+    machine: &MachineConfig,
+    per_shard: &[Vec<u64>],
+) -> ClusterTiming {
+    let n = cluster.shards();
+    let nlayers = cluster.shards[0].layers().len();
+    let mut layers = Vec::with_capacity(nlayers);
+    let mut shard_cycles = vec![0u64; n];
+    for li in 0..nlayers {
+        let mut compute = 0u64;
+        let mut max_part_bytes = 0u64;
+        for (k, cycles) in per_shard.iter().enumerate() {
+            compute = compute.max(cycles[li]);
+            shard_cycles[k] += cycles[li];
+            let seg = &cluster.shards[k].shard_segs()[li];
+            if seg.channels.is_some() {
+                max_part_bytes = max_part_bytes.max(seg.part_elems() as u64);
+            }
+        }
+        layers.push(LayerTiming {
+            name: cluster.shards[0].layers()[li].name.clone(),
+            compute_cycles: compute,
+            sync_cycles: sync_cost(machine, n, max_part_bytes),
+        });
+    }
+    ClusterTiming {
+        compute_cycles: layers.iter().map(|l| l.compute_cycles).sum(),
+        sync_cycles: layers.iter().map(|l| l.sync_cycles).sum(),
+        layers,
+        shard_cycles,
+    }
+}
+
+/// Result of one functional cluster inference.
+pub struct ClusterInference {
+    /// The gathered final feature map (u8 logits codes; cluster schedules
+    /// are integer-only).
+    pub logits: Vec<u8>,
+    /// Host wall-clock nanoseconds each shard core spent inside the replay
+    /// (incl. barrier waits) — the serving layer's shard-utilization feed.
+    pub shard_busy_ns: Vec<u64>,
+}
+
+struct ShardCore {
+    sim: Sim,
+    heap: u64,
+}
+
+/// A pool of persistent shard cores (one [`Sim`] each, bump allocator
+/// rewound between inferences — the cluster analogue of the coordinator's
+/// `WorkerCore`).
+pub struct ClusterCores {
+    machine: MachineConfig,
+    cores: Vec<ShardCore>,
+}
+
+impl ClusterCores {
+    /// `count` persistent cores for `machine`. Arenas start minimal and grow
+    /// to fit the first program replayed on them.
+    pub fn new(machine: &MachineConfig, count: usize) -> Self {
+        assert!(count >= 1, "a cluster needs at least one core");
+        let cores = (0..count)
+            .map(|_| {
+                let sim = Sim::with_memory(machine.clone(), 16 << 20);
+                let heap = sim.machine.mem.brk();
+                ShardCore { sim, heap }
+            })
+            .collect();
+        ClusterCores { machine: machine.clone(), cores }
+    }
+
+    pub fn count(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Functional tensor-parallel inference: replay every shard program on
+    /// its own host thread, all-gathering partial activations at each
+    /// sharded layer boundary, and return the gathered logits. Memory
+    /// effects are bit-identical to a single-core
+    /// [`Sim::execute_functional`] of the unsharded program.
+    ///
+    /// Replay preconditions (shard count, machine identity, arena fit) are
+    /// checked *here*, on the caller's thread, before any shard thread
+    /// launches: a panic inside a shard thread would strand its peers on
+    /// the [`Barrier`] (std barriers do not poison), so the known failure
+    /// modes must fire loudly up front instead.
+    pub fn infer(&mut self, cluster: &ClusterProgram, input: &[u8]) -> ClusterInference {
+        let n = self.cores.len();
+        assert_eq!(
+            cluster.shards(),
+            n,
+            "cluster program has {} shards but this pool has {n} cores",
+            cluster.shards()
+        );
+        for (core, prog) in self.cores.iter_mut().zip(cluster.shards.iter()) {
+            assert_eq!(
+                crate::program::machine_fingerprint(&core.sim.cfg),
+                prog.machine_fingerprint(),
+                "shard program compiled for a different machine than this pool"
+            );
+            // Grow any core whose arena can't fit its shard program.
+            let need = shard_mem_bytes(prog);
+            if core.sim.machine.mem.size() < need {
+                core.sim = Sim::with_memory(self.machine.clone(), need);
+                core.heap = core.sim.machine.mem.brk();
+            }
+        }
+        // Per-layer channel ranges of every shard (for local reassembly).
+        let nlayers = cluster.shards[0].layers().len();
+        let ranges: Vec<Vec<Option<(usize, usize)>>> = (0..nlayers)
+            .map(|li| cluster.shards.iter().map(|p| p.shard_segs()[li].channels).collect())
+            .collect();
+        let barrier = Barrier::new(n);
+        let slots: Vec<Mutex<Vec<u8>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+
+        let results: Vec<(Vec<u8>, u64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .cores
+                .iter_mut()
+                .zip(cluster.shards.iter())
+                .enumerate()
+                .map(|(k, (core, prog))| {
+                    let (barrier, slots, ranges) = (&barrier, &slots, &ranges);
+                    s.spawn(move || {
+                        let t0 = Instant::now();
+                        core.sim.machine.mem.reset_alloc_to(core.heap);
+                        let base = core.sim.alloc(prog.mem_len());
+                        let delta = core.sim.begin_replay(prog, base, Some(input));
+                        let mut lo = 0usize;
+                        for li in 0..nlayers {
+                            let seg = &prog.shard_segs()[li];
+                            fill_res_slice(&mut core.sim, prog, seg, delta);
+                            let hi = layer_trace_end(prog, li);
+                            core.sim.execute_functional_range(prog, delta, lo, hi);
+                            lo = hi;
+                            if n > 1 && seg.channels.is_some() {
+                                all_gather(
+                                    &mut core.sim,
+                                    seg,
+                                    delta,
+                                    k,
+                                    slots,
+                                    &ranges[li],
+                                    barrier,
+                                );
+                            }
+                        }
+                        // Every core holds the gathered logits; core 0
+                        // reports them.
+                        let logits = if k == 0 {
+                            let last = prog.shard_segs().last().expect("non-empty net");
+                            core.sim.read_u8s(
+                                last.gather_addr.wrapping_add(delta),
+                                last.gather_elems(),
+                            )
+                        } else {
+                            Vec::new()
+                        };
+                        (logits, t0.elapsed().as_nanos() as u64)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard replay thread panicked"))
+                .collect()
+        });
+        let shard_busy_ns = results.iter().map(|(_, ns)| *ns).collect();
+        let logits = results.into_iter().next().expect("at least one shard").0;
+        ClusterInference { logits, shard_busy_ns }
+    }
+}
+
+/// Exclusive trace end of layer `li` (its range starts at the previous
+/// layer's end).
+fn layer_trace_end(prog: &CompiledProgram, li: usize) -> usize {
+    prog.layers()[li].trace_end
+}
+
+/// Fill a sharded residual layer's slice buffer with this shard's channel
+/// range of the (already gathered) residual source map — a local copy, no
+/// inter-core traffic: the source bytes were broadcast by its own gather.
+fn fill_res_slice(sim: &mut Sim, prog: &CompiledProgram, seg: &ShardSeg, delta: u64) {
+    let Some((src_map, slice_addr)) = seg.res_slice else { return };
+    let (c0, c1) = seg.channels.expect("res_slice implies a sharded layer");
+    let src_addr = if src_map == 0 {
+        prog.input.addr
+    } else {
+        prog.shard_segs()[src_map - 1].gather_addr
+    }
+    .wrapping_add(delta);
+    let full = sim.read_u8s(src_addr, seg.positions * seg.c_full);
+    let w = c1 - c0;
+    let mut slice = vec![0u8; seg.positions * w];
+    for pos in 0..seg.positions {
+        slice[pos * w..(pos + 1) * w]
+            .copy_from_slice(&full[pos * seg.c_full + c0..pos * seg.c_full + c1]);
+    }
+    sim.write_bytes(slice_addr.wrapping_add(delta), &slice);
+}
+
+/// The host-side all-gather: deposit this shard's partial slice, rendezvous,
+/// reassemble the full channel-interleaved map locally, rendezvous again
+/// (so no peer's slot is overwritten by the next layer before everyone has
+/// read it).
+fn all_gather(
+    sim: &mut Sim,
+    seg: &ShardSeg,
+    delta: u64,
+    k: usize,
+    slots: &[Mutex<Vec<u8>>],
+    ranges: &[Option<(usize, usize)>],
+    barrier: &Barrier,
+) {
+    let part = sim.read_u8s(seg.part_addr.wrapping_add(delta), seg.part_elems());
+    *slots[k].lock().unwrap() = part;
+    barrier.wait();
+    let mut full = vec![0u8; seg.gather_elems()];
+    for (j, slot) in slots.iter().enumerate() {
+        let (s0, s1) = ranges[j].expect("peers shard the same layers");
+        let w = s1 - s0;
+        let p = slot.lock().unwrap();
+        for pos in 0..seg.positions {
+            full[pos * seg.c_full + s0..pos * seg.c_full + s1]
+                .copy_from_slice(&p[pos * w..(pos + 1) * w]);
+        }
+    }
+    sim.write_bytes(seg.gather_addr.wrapping_add(delta), &full);
+    barrier.wait();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::demo_net;
+    use crate::nn::model::Precision;
+
+    const W2A2: Precision = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
+
+    #[test]
+    fn compile_cluster_validates() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        assert!(compile_cluster(&net, &quark, &PrecisionMap::uniform(W2A2), 0).is_err());
+        // demo net's narrowest layer (stem/c1) has 64 channels.
+        assert!(compile_cluster(&net, &quark, &PrecisionMap::uniform(W2A2), 128).is_err());
+        let cluster = compile_cluster(&net, &quark, &PrecisionMap::uniform(W2A2), 2).unwrap();
+        assert_eq!(cluster.shards(), 2);
+        for (i, p) in cluster.shard_programs().iter().enumerate() {
+            assert_eq!(p.shard(), Some((i, 2)));
+            assert_eq!(p.shard_segs().len(), net.len());
+        }
+        // fp32 cannot shard, even on a machine that could run it.
+        assert!(
+            compile_cluster(&net, &MachineConfig::ara(4), &PrecisionMap::uniform(Precision::Fp32), 2)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn sync_cost_model_shape() {
+        let q = MachineConfig::quark(4); // 32 B/cycle AXI, 20-cycle latency
+        assert_eq!(sync_cost(&q, 1, 1 << 20), 0, "one core needs no gather");
+        assert_eq!(sync_cost(&q, 4, 0), 0, "replicated layers exchange nothing");
+        // 4 shards, 1 KiB widest slice: 3 steps × (1024/32 + 20).
+        assert_eq!(sync_cost(&q, 4, 1024), 3 * (32 + 20));
+        // More shards move smaller slices but take more steps.
+        assert!(sync_cost(&q, 8, 512) > sync_cost(&q, 2, 2048));
+    }
+
+    #[test]
+    fn from_shards_rejects_mismatched_sets() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        let sched = PrecisionMap::uniform(W2A2);
+        let c2 = compile_cluster(&net, &quark, &sched, 2).unwrap();
+        // Wrong order.
+        let mut progs = c2.shard_programs().to_vec();
+        progs.swap(0, 1);
+        assert!(ClusterProgram::from_shards(progs).is_err());
+        // Incomplete set.
+        assert!(ClusterProgram::from_shards(c2.shard_programs()[..1].to_vec()).is_err());
+        // Non-shard program.
+        let single = Arc::new(crate::program::compile(&net, &quark, &sched).unwrap());
+        assert!(ClusterProgram::from_shards(vec![single]).is_err());
+    }
+}

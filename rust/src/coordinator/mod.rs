@@ -46,11 +46,20 @@
 //!   through the functional executor (`SimMode::Full`) on the worker's
 //!   persistent core; the response carries the resulting logits and argmax.
 //!   Requests without input are timing-only probes.
+//! * **Cluster sharding.** A request may ask for its inference to be
+//!   partitioned across `N` simulated cores ([`crate::cluster`]; wire: the
+//!   `shards=` field of `INFER`, deployment default `serve --shards`).
+//!   Shard programs live as per-shard entries under the same `DeployKey`
+//!   program cache; reported cycles follow the cluster model (`max` shard
+//!   compute + modeled all-gather sync), and the logits are bit-identical
+//!   to single-core serving.
 //! * **Backpressure + metrics.** The queue is bounded
 //!   ([`CoordinatorConfig::max_queue`]); `submit` rejects with
 //!   [`SubmitError::Busy`] when full. [`Coordinator::stats`] exposes queue
-//!   depth, served/rejected counts, cache hit/miss counts, latency
-//!   percentiles over a sliding window, and per-worker utilization.
+//!   depth, served/rejected counts, cache hit/miss counts (with program
+//!   compiles attributed per worker), cluster sync-cycle and shard-core
+//!   utilization counters, latency percentiles over a sliding window, and
+//!   per-worker utilization.
 
 pub mod golden;
 pub mod server;
@@ -61,10 +70,16 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::arch::MachineConfig;
-use crate::nn::model::{Precision, PrecisionMap};
+use crate::cluster::{cluster_timing, ClusterCores, ClusterProgram};
+use crate::nn::model::{Precision, PrecisionMap, ShardPlan};
 use crate::nn::{LayerKind, NetLayer};
-use crate::program::{compile, CompiledProgram};
+use crate::program::{compile, compile_shard, CompiledProgram};
 use crate::sim::{Sim, SimMode};
+
+/// Upper bound on per-request shard counts (the cluster runtime spawns one
+/// host thread + one persistent core per shard; 8 matches the widest
+/// configuration the scaling report explores).
+pub const MAX_SHARDS: usize = 8;
 
 /// One inference request (CIFAR-sized input codes).
 #[derive(Clone, Debug)]
@@ -76,6 +91,9 @@ pub struct InferenceRequest {
     /// Per-request precision schedule; `None` uses the deployment default
     /// ([`CoordinatorConfig::schedule`]).
     pub schedule: Option<PrecisionMap>,
+    /// Tensor-parallel shard count ([`crate::cluster`]); `None` uses the
+    /// deployment default ([`CoordinatorConfig::shards`]), 1 = single core.
+    pub shards: Option<usize>,
 }
 
 /// Completed inference.
@@ -99,6 +117,12 @@ pub struct InferenceResponse {
     /// Label of the schedule this request ran under
     /// ([`PrecisionMap::label`]; wire field `prec=`).
     pub precision: String,
+    /// Shard cores this request's inference was partitioned across (1 =
+    /// classic single-core serving).
+    pub shards: usize,
+    /// Modeled inter-core all-gather cycles included in `sim_cycles`
+    /// (0 when `shards == 1`).
+    pub sync_cycles: u64,
     /// Output of the network's last layer for the submitted input (u8 codes
     /// widened to f32 at integer precisions, raw floats at fp32). `None` for
     /// timing-only requests.
@@ -144,6 +168,9 @@ pub struct CoordinatorConfig {
     /// Queue bound: submissions beyond this depth are rejected with
     /// [`SubmitError::Busy`].
     pub max_queue: usize,
+    /// Default tensor-parallel shard count for requests that do not carry
+    /// their own (`serve --shards N`; 1 = single-core serving).
+    pub shards: usize,
     /// Model graph to serve.
     pub net: Arc<Vec<NetLayer>>,
 }
@@ -162,6 +189,7 @@ impl CoordinatorConfig {
             batch_size: 4,
             batch_timeout: Duration::from_millis(20),
             max_queue: 256,
+            shards: 1,
             net: Arc::new(demo_net()),
         }
     }
@@ -196,18 +224,77 @@ pub fn demo_net() -> Vec<NetLayer> {
 pub use crate::program::{machine_fingerprint, net_fingerprint};
 
 /// Cache key shared by the timing cache and the program cache: the
-/// deployment fingerprints plus the (canonical-form) precision schedule the
-/// request ran under.
+/// deployment fingerprints plus the (canonical-form) precision schedule and
+/// the tensor-parallel shard count the request ran under.
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct DeployKey {
     net_fp: u64,
     machine_fp: u64,
     schedule: PrecisionMap,
+    shards: usize,
+}
+
+/// Program-cache key: one entry per *shard program* of a deployment
+/// (`shard` is always 0 for single-core deployments).
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct ProgKey {
+    deploy: DeployKey,
+    shard: usize,
 }
 
 #[derive(Clone, Copy)]
 struct TimingEntry {
     sim_cycles: u64,
+    /// Modeled all-gather cycles included in `sim_cycles` (0 single-core).
+    sync_cycles: u64,
+}
+
+/// The compiled-program cache: bounded FIFO with the deployment-default
+/// entries pinned. When full, the *oldest non-default* entry is evicted to
+/// admit the newcomer (clients cycling throwaway `prec=`/`shards=`
+/// combinations therefore churn among themselves and can never evict the
+/// deployment's own warm path). Default-deployment inserts always succeed —
+/// they are at most `MAX_SHARDS` programs, so the cache is bounded by
+/// `cap + MAX_SHARDS` entries.
+struct ProgramCache {
+    entries: HashMap<ProgKey, Arc<CompiledProgram>>,
+    /// Insertion order of the evictable (non-pinned) keys.
+    order: VecDeque<ProgKey>,
+}
+
+impl ProgramCache {
+    fn new() -> Self {
+        ProgramCache { entries: HashMap::new(), order: VecDeque::new() }
+    }
+
+    fn get(&self, key: &ProgKey) -> Option<Arc<CompiledProgram>> {
+        self.entries.get(key).cloned()
+    }
+
+    fn insert(&mut self, key: ProgKey, prog: Arc<CompiledProgram>, pinned: bool, cap: usize) {
+        if self.entries.contains_key(&key) {
+            return; // concurrent miss already inserted the identical artifact
+        }
+        if pinned {
+            self.entries.insert(key, prog);
+            return;
+        }
+        while self.entries.len() >= cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.entries.remove(&old);
+                }
+                None => return, // everything resident is pinned; don't insert
+            }
+        }
+        self.order.push_back(key.clone());
+        self.entries.insert(key, prog);
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
 }
 
 // ---- serving-metrics plumbing ----
@@ -265,6 +352,19 @@ pub struct CoordStats {
     /// replaying them (warm path) — the compile-once/run-many ratio.
     pub compile_us: u64,
     pub replay_us: u64,
+    /// Program compiles (cache misses) attributed per worker, so cluster
+    /// and single-core miss traffic are both attributable to the core that
+    /// paid for them. `Σ compile_by_worker == program_misses`.
+    pub compile_by_worker: Vec<u64>,
+    /// Total modeled inter-core all-gather cycles across served cluster
+    /// requests (0 until a `shards > 1` request is served).
+    pub sync_cycles: u64,
+    /// Busy core-equivalents per shard *position*, aggregated over every
+    /// worker's cluster pool (each worker owns its own shard cores, so with
+    /// `W` workers serving cluster traffic a position can report up to
+    /// `W`·1.0). Trailing never-used positions are trimmed (empty until a
+    /// `shards > 1` request runs functionally).
+    pub shard_util: Vec<f64>,
     /// End-to-end (queue + service) latency percentiles in µs over the
     /// most recent `LAT_WINDOW` responses.
     pub p50_us: u64,
@@ -282,12 +382,14 @@ const LAT_WINDOW: usize = 4096;
 /// (one fresh `TimingOnly` run each) but no longer memoized.
 const MAX_TIMING_ENTRIES: usize = 1024;
 
-/// Program-cache size bound — same insert-while-below-cap policy as the
-/// timing cache, but far smaller: a [`CompiledProgram`] holds the full
-/// dynamic instruction trace (tens of MB for ResNet-scale nets), so the cap
-/// bounds server *memory*, not just map growth. Past the cap, new schedules
-/// still serve (one fresh compile each) but the artifact is dropped after
-/// use instead of memoized.
+/// Program-cache size bound — far smaller than the timing cache: a
+/// [`CompiledProgram`] holds the full dynamic instruction trace (tens of MB
+/// for ResNet-scale nets), so the cap bounds server *memory*, not just map
+/// growth. At the cap the [`ProgramCache`] evicts the oldest non-default
+/// entry (FIFO) to admit the newcomer; the deployment-default programs are
+/// pinned and can never be evicted, so client-supplied `prec=`/`shards=`
+/// churn only displaces other client-supplied entries. Evicted keys simply
+/// recompile on next use (a program-cache miss).
 const MAX_PROGRAM_ENTRIES: usize = 16;
 
 struct Queued {
@@ -306,13 +408,20 @@ struct Shared {
     timing_cache: Mutex<HashMap<DeployKey, TimingEntry>>,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
-    /// Compiled (net, machine, schedule) artifacts, `Arc`-shared with the
-    /// workers replaying them.
-    program_cache: Mutex<HashMap<DeployKey, Arc<CompiledProgram>>>,
+    /// Compiled (net, machine, schedule, shard) artifacts, `Arc`-shared
+    /// with the workers replaying them.
+    program_cache: Mutex<ProgramCache>,
     program_hits: AtomicU64,
     program_misses: AtomicU64,
     compile_ns: AtomicU64,
     replay_ns: AtomicU64,
+    /// Program compiles attributed to the worker that performed them.
+    compile_by_worker: Vec<AtomicU64>,
+    /// Modeled all-gather cycles accumulated over served cluster requests.
+    sync_cycles: AtomicU64,
+    /// Per-shard-core nanoseconds spent inside cluster replays (indexed by
+    /// shard position, up to [`MAX_SHARDS`]).
+    shard_busy_ns: Vec<AtomicU64>,
     latencies: Mutex<LatWindow>,
     /// Per-worker nanoseconds spent inside batch service.
     busy_ns: Vec<AtomicU64>,
@@ -327,11 +436,15 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start serving. Panics if the deployment's default schedule is invalid
-    /// for its net/machine (misconfiguration, not a runtime condition).
+    /// Start serving. Panics if the deployment's default schedule or shard
+    /// count is invalid for its net/machine (misconfiguration, not a
+    /// runtime condition).
     pub fn start(cfg: CoordinatorConfig) -> Self {
         if let Err(e) = validate_schedule(&cfg.schedule, &cfg.net, &cfg.machine) {
             panic!("invalid coordinator schedule: {e}");
+        }
+        if let Err(e) = validate_shards(cfg.shards, &cfg.schedule, &cfg.net) {
+            panic!("invalid coordinator shard count: {e}");
         }
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -343,11 +456,14 @@ impl Coordinator {
             timing_cache: Mutex::new(HashMap::new()),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
-            program_cache: Mutex::new(HashMap::new()),
+            program_cache: Mutex::new(ProgramCache::new()),
             program_hits: AtomicU64::new(0),
             program_misses: AtomicU64::new(0),
             compile_ns: AtomicU64::new(0),
             replay_ns: AtomicU64::new(0),
+            compile_by_worker: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            sync_cycles: AtomicU64::new(0),
+            shard_busy_ns: (0..MAX_SHARDS).map(|_| AtomicU64::new(0)).collect(),
             latencies: Mutex::new(LatWindow::new(LAT_WINDOW)),
             busy_ns: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
             started: Instant::now(),
@@ -367,14 +483,26 @@ impl Coordinator {
 
     /// Submit a request; returns a receiver for the response,
     /// [`SubmitError::Busy`] when the queue is at capacity, or
-    /// [`SubmitError::Invalid`] when the request's schedule cannot run on
-    /// this deployment.
+    /// [`SubmitError::Invalid`] when the request's schedule or shard count
+    /// cannot run on this deployment.
     pub fn submit(
         &self,
         req: InferenceRequest,
     ) -> Result<mpsc::Receiver<InferenceResponse>, SubmitError> {
         if let Some(sched) = &req.schedule {
             if let Err(reason) = validate_schedule(sched, &self.cfg.net, &self.cfg.machine) {
+                return Err(SubmitError::Invalid { reason });
+            }
+        }
+        // Validate the *effective* (schedule, shards) pair, not just explicit
+        // overrides: a request overriding only the schedule still runs at the
+        // deployment's shard count (e.g. fp32 on a sharded fp32-capable
+        // deployment must be rejected here, not panic a worker). All-default
+        // requests skip the walk — Coordinator::start validated that pair.
+        if req.shards.is_some() || req.schedule.is_some() {
+            let shards = req.shards.unwrap_or(self.cfg.shards);
+            let sched = req.schedule.as_ref().unwrap_or(&self.cfg.schedule);
+            if let Err(reason) = validate_shards(shards, sched, &self.cfg.net) {
                 return Err(SubmitError::Invalid { reason });
             }
         }
@@ -419,6 +547,28 @@ impl Coordinator {
             program_misses: self.shared.program_misses.load(Ordering::Relaxed),
             compile_us: self.shared.compile_ns.load(Ordering::Relaxed) / 1_000,
             replay_us: self.shared.replay_ns.load(Ordering::Relaxed) / 1_000,
+            compile_by_worker: self
+                .shared
+                .compile_by_worker
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            sync_cycles: self.shared.sync_cycles.load(Ordering::Relaxed),
+            shard_util: {
+                // Deliberately unclamped: the counters aggregate every
+                // worker's pool, so the meaningful unit is busy
+                // core-equivalents per shard position, not a 0–1 fraction.
+                let mut util: Vec<f64> = self
+                    .shared
+                    .shard_busy_ns
+                    .iter()
+                    .map(|b| b.load(Ordering::Relaxed) as f64 / elapsed_ns)
+                    .collect();
+                while util.last() == Some(&0.0) {
+                    util.pop();
+                }
+                util
+            },
             p50_us,
             p95_us,
             p99_us,
@@ -453,6 +603,20 @@ fn validate_schedule(
 ) -> Result<(), String> {
     sched.validate(net)?;
     sched.validate_machine(net, machine)
+}
+
+/// Shard-count validation against a deployment: bounds, channel counts, and
+/// the integer-only rule ([`ShardPlan`]). The single source of truth for
+/// both the submit path and the CLI's `serve --shards` check.
+pub(crate) fn validate_shards(
+    shards: usize,
+    sched: &PrecisionMap,
+    net: &[NetLayer],
+) -> Result<(), String> {
+    if shards == 0 || shards > MAX_SHARDS {
+        return Err(format!("shard count {shards} out of range (1\u{2013}{MAX_SHARDS})"));
+    }
+    ShardPlan::derive(net, shards)?.validate_schedule(sched)
 }
 
 /// One worker's persistent simulated core. Constructed once per worker
@@ -490,70 +654,118 @@ impl WorkerCore {
         self.rewind();
         let base = self.sim.alloc(prog.mem_len());
         let run = self.sim.execute_functional(prog, base, Some(input));
-        let logits: Vec<f32> = if prog.is_fp32() {
-            self.sim.read_f32s(run.out_addr, run.out_elems)
+        if prog.is_fp32() {
+            let logits = self.sim.read_f32s(run.out_addr, run.out_elems);
+            let am = argmax_of(&logits);
+            (logits, am)
         } else {
-            self.sim
-                .read_u8s(run.out_addr, run.out_elems)
-                .iter()
-                .map(|&v| v as f32)
-                .collect()
-        };
-        let mut argmax = 0usize;
-        for (i, &v) in logits.iter().enumerate() {
-            if v > logits[argmax] {
-                argmax = i;
-            }
+            widen_logits(&self.sim.read_u8s(run.out_addr, run.out_elems))
         }
-        (logits, argmax)
     }
 }
 
-/// Resolve the compiled program for `key`: cache hit is an `Arc` clone,
-/// miss compiles once. `memoize` decides whether a miss is inserted (below
-/// the cap): the functional serving path memoizes — it replays per request
-/// — while timing-only resolutions compile transiently, so probe-only
-/// schedules never pin a trace-sized artifact in server memory. Concurrent
-/// misses on one key may compile twice; last insert wins — both artifacts
-/// are identical (compilation is deterministic).
+/// Index of the largest logit, first max wins on ties.
+fn argmax_of(logits: &[f32]) -> usize {
+    let mut am = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[am] {
+            am = i;
+        }
+    }
+    am
+}
+
+/// Widen u8 logit codes to f32 and locate the argmax — one shared helper
+/// for the single-core and cluster serving paths, so the tie-break rule can
+/// never diverge between them.
+fn widen_logits(codes: &[u8]) -> (Vec<f32>, usize) {
+    let logits: Vec<f32> = codes.iter().map(|&v| v as f32).collect();
+    let am = argmax_of(&logits);
+    (logits, am)
+}
+
+/// Resolve one compiled (shard) program for `key`: cache hit is an `Arc`
+/// clone, miss compiles once (attributed to worker `wid` in
+/// `compile_by_worker`). `memoize` decides whether a miss is inserted: the
+/// functional serving path memoizes — it replays per request — while
+/// timing-only resolutions compile transiently, so probe-only schedules
+/// never pin a trace-sized artifact in server memory. Insertions follow the
+/// [`ProgramCache`] FIFO-eviction policy with the deployment-default
+/// entries pinned. Concurrent misses on one key may compile twice; the
+/// first insert wins — both artifacts are identical (compilation is
+/// deterministic).
 fn resolve_program(
     shared: &Shared,
     cfg: &CoordinatorConfig,
-    key: &DeployKey,
+    wid: usize,
+    key: &ProgKey,
     sched: &PrecisionMap,
     memoize: bool,
 ) -> Arc<CompiledProgram> {
     if let Some(p) = shared.program_cache.lock().unwrap().get(key) {
         shared.program_hits.fetch_add(1, Ordering::Relaxed);
-        return p.clone();
+        return p;
     }
     shared.program_misses.fetch_add(1, Ordering::Relaxed);
+    shared.compile_by_worker[wid].fetch_add(1, Ordering::Relaxed);
     let t0 = Instant::now();
-    let prog = Arc::new(
-        compile(&cfg.net, &cfg.machine, sched)
-            .expect("schedule was validated at submission"),
-    );
+    let prog = Arc::new(if key.deploy.shards > 1 {
+        let plan = ShardPlan::derive(&cfg.net, key.deploy.shards)
+            .expect("shard count was validated at submission");
+        compile_shard(&cfg.net, &cfg.machine, sched, &plan, key.shard)
+            .expect("schedule was validated at submission")
+    } else {
+        compile(&cfg.net, &cfg.machine, sched).expect("schedule was validated at submission")
+    });
     shared.compile_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     if memoize {
-        let mut cache = shared.program_cache.lock().unwrap();
-        // The deployment's *default* schedule is always memoizable, even at
-        // the cap (bounded at cap+1): clients cycling throwaway `prec=`
-        // schedules must not be able to lock the deployment's own warm path
-        // out of the cache for the life of the server.
-        if cache.len() < MAX_PROGRAM_ENTRIES || *sched == cfg.schedule {
-            cache.insert(key.clone(), prog.clone());
-        }
+        let pinned = *sched == cfg.schedule && key.deploy.shards == cfg.shards;
+        shared.program_cache.lock().unwrap().insert(
+            key.clone(),
+            prog.clone(),
+            pinned,
+            MAX_PROGRAM_ENTRIES,
+        );
     }
     prog
+}
+
+/// Resolve the full shard-program set of a cluster deployment (one
+/// per-shard cache entry each) and assemble the [`ClusterProgram`].
+///
+/// Misses compile sequentially on the serving worker, by choice: each
+/// in-flight compile owns a recording-arena `Sim`, so parallelizing an
+/// 8-shard cold miss would multiply transient server memory roughly
+/// eightfold for a once-per-deployment event (offline callers that want
+/// parallel compiles use [`crate::cluster::compile_cluster`]).
+fn resolve_cluster(
+    shared: &Shared,
+    cfg: &CoordinatorConfig,
+    wid: usize,
+    deploy: &DeployKey,
+    sched: &PrecisionMap,
+    memoize: bool,
+) -> ClusterProgram {
+    let progs: Vec<Arc<CompiledProgram>> = (0..deploy.shards)
+        .map(|shard| {
+            let key = ProgKey { deploy: deploy.clone(), shard };
+            resolve_program(shared, cfg, wid, &key, sched, memoize)
+        })
+        .collect();
+    ClusterProgram::from_shards(progs).expect("per-shard cache entries form one deployment")
 }
 
 /// Worker: claims batches (size- or timeout-bounded) and serves them on its
 /// persistent simulated core. Timing is resolved per request (requests in
 /// one batch may carry different schedules); the caches make repeats free:
 /// warm timing is a map lookup, warm functional inference is a program
-/// replay with zero kernel emission.
+/// replay with zero kernel emission. Requests with `shards > 1` run on the
+/// worker's lazily-built [`ClusterCores`] pool instead of its single core
+/// (one pool per worker, rebuilt when the shard count changes — bounding
+/// memory at one cluster per worker).
 fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
     let mut core = WorkerCore::new(cfg.machine.clone());
+    let mut cluster_cores: Option<ClusterCores> = None;
     let net_fp = net_fingerprint(&cfg.net);
     let machine_fp = machine_fingerprint(&cfg.machine);
     loop {
@@ -593,48 +805,90 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
         let batch_id = shared.batch_counter.fetch_add(1, Ordering::Relaxed);
         let busy_t0 = Instant::now();
 
-        // Serve the batch on the persistent core.
+        // Serve the batch on the persistent core(s).
         for item in batch {
             let sched = item.req.schedule.as_ref().unwrap_or(&cfg.schedule);
-            let key = DeployKey { net_fp, machine_fp, schedule: sched.clone() };
-            // Resolve the compiled program when this request needs one: it
-            // carries input bytes (functional replay), or its timing misses
-            // below (TimingOnly replay). Warm timing-only probes touch
-            // neither cache entry's payload.
+            let shards = item.req.shards.unwrap_or(cfg.shards);
+            let key =
+                DeployKey { net_fp, machine_fp, schedule: sched.clone(), shards };
+            // Resolve the compiled program(s) when this request needs them:
+            // it carries input bytes (functional replay), or its timing
+            // misses below (TimingOnly replay). Warm timing-only probes
+            // touch neither cache entry's payload.
             let cached = shared.timing_cache.lock().unwrap().get(&key).copied();
-            let prog = if item.req.input.is_some() || cached.is_none() {
-                Some(resolve_program(&shared, &cfg, &key, sched, item.req.input.is_some()))
+            let need_progs = item.req.input.is_some() || cached.is_none();
+            let memoize = item.req.input.is_some();
+            // Single-core requests resolve one program; cluster requests a
+            // full shard set (each under its own per-shard cache entry).
+            let (prog, cluster) = if !need_progs {
+                (None, None)
+            } else if shards == 1 {
+                let pkey = ProgKey { deploy: key.clone(), shard: 0 };
+                (Some(resolve_program(&shared, &cfg, wid, &pkey, sched, memoize)), None)
             } else {
-                None
+                (None, Some(resolve_cluster(&shared, &cfg, wid, &key, sched, memoize)))
             };
             // Resolve timing: cache hit is a map lookup, miss is one
-            // TimingOnly program replay whose result every later request
-            // under the same (net, machine, schedule) key reuses.
-            let (sim_cycles, timing_cached) = match cached {
+            // TimingOnly replay (per shard core, in parallel, for clusters)
+            // whose result every later request under the same (net,
+            // machine, schedule, shards) key reuses.
+            let (sim_cycles, sync_cycles, timing_cached) = match cached {
                 Some(e) => {
                     shared.cache_hits.fetch_add(1, Ordering::Relaxed);
-                    (e.sim_cycles, true)
+                    (e.sim_cycles, e.sync_cycles, true)
                 }
                 None => {
                     let t0 = Instant::now();
-                    let c = core.timing_cycles(prog.as_deref().unwrap());
+                    let (c, sync) = match &cluster {
+                        Some(cp) => {
+                            let t = cluster_timing(cp, &cfg.machine);
+                            (t.total_cycles(), t.sync_cycles)
+                        }
+                        None => (core.timing_cycles(prog.as_deref().unwrap()), 0),
+                    };
                     shared.replay_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     shared.cache_misses.fetch_add(1, Ordering::Relaxed);
                     let mut cache = shared.timing_cache.lock().unwrap();
                     if cache.len() < MAX_TIMING_ENTRIES {
-                        cache.insert(key, TimingEntry { sim_cycles: c });
+                        cache.insert(key, TimingEntry { sim_cycles: c, sync_cycles: sync });
                     }
                     drop(cache);
-                    (c, false)
+                    (c, sync, false)
                 }
             };
+            // Account the modeled all-gather once per served cluster request
+            // (timing-only probes included — the model is part of the reply).
+            if shards > 1 {
+                shared.sync_cycles.fetch_add(sync_cycles, Ordering::Relaxed);
+            }
             let device_us = sim_cycles as f64 / (cfg.machine.freq_ghz * 1e3);
 
             let queue_time = item.enqueued.elapsed();
             let t0 = Instant::now();
             let (logits, argmax) = match &item.req.input {
                 Some(bytes) => {
-                    let (l, a) = core.infer(prog.as_deref().unwrap(), bytes);
+                    let (l, a) = match &cluster {
+                        Some(cp) => {
+                            // (Re)build this worker's shard-core pool when
+                            // the requested width changes. One pool per
+                            // worker, by choice: caching a pool per shard
+                            // count would bound memory at Σ(2..=8) grown
+                            // arenas *per worker*; traffic alternating
+                            // shard counts pays the rebuild instead.
+                            let rebuild =
+                                cluster_cores.as_ref().map(|cc| cc.count()) != Some(shards);
+                            if rebuild {
+                                cluster_cores = Some(ClusterCores::new(&cfg.machine, shards));
+                            }
+                            let cores = cluster_cores.as_mut().unwrap();
+                            let inf = cores.infer(cp, bytes);
+                            for (j, ns) in inf.shard_busy_ns.iter().enumerate() {
+                                shared.shard_busy_ns[j].fetch_add(*ns, Ordering::Relaxed);
+                            }
+                            widen_logits(&inf.logits)
+                        }
+                        None => core.infer(prog.as_deref().unwrap(), bytes),
+                    };
                     shared
                         .replay_ns
                         .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -653,6 +907,8 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
                 batch_id,
                 timing_cached,
                 precision: sched.label(),
+                shards,
+                sync_cycles,
                 logits,
                 argmax,
             };
@@ -681,7 +937,7 @@ mod tests {
         let rxs: Vec<_> = (0..6)
             .map(|i| {
                 coord
-                    .submit(InferenceRequest { id: i, input: None, schedule: None })
+                    .submit(InferenceRequest { id: i, input: None, schedule: None, shards: None })
                     .unwrap()
             })
             .collect();
@@ -718,7 +974,7 @@ mod tests {
         let mut cycles = Vec::new();
         for i in 0..5u64 {
             let rx = coord
-                .submit(InferenceRequest { id: i, input: None, schedule: None })
+                .submit(InferenceRequest { id: i, input: None, schedule: None, shards: None })
                 .unwrap();
             let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
             cycles.push((r.sim_cycles, r.timing_cached));
@@ -740,10 +996,10 @@ mod tests {
         let coord = Coordinator::start(cfg);
         let n = 32 * 32 * 3;
         let rx_a = coord
-            .submit(InferenceRequest { id: 0, input: Some(vec![0u8; n]), schedule: None })
+            .submit(InferenceRequest { id: 0, input: Some(vec![0u8; n]), schedule: None, shards: None })
             .unwrap();
         let rx_b = coord
-            .submit(InferenceRequest { id: 1, input: Some(vec![200u8; n]), schedule: None })
+            .submit(InferenceRequest { id: 1, input: Some(vec![200u8; n]), schedule: None, shards: None })
             .unwrap();
         let a = rx_a.recv_timeout(Duration::from_secs(300)).unwrap();
         let b = rx_b.recv_timeout(Duration::from_secs(300)).unwrap();
@@ -754,7 +1010,7 @@ mod tests {
         assert_ne!(la, lb, "different inputs must produce different logits");
         // Determinism: same input → same logits.
         let rx_c = coord
-            .submit(InferenceRequest { id: 2, input: Some(vec![200u8; n]), schedule: None })
+            .submit(InferenceRequest { id: 2, input: Some(vec![200u8; n]), schedule: None, shards: None })
             .unwrap();
         let c = rx_c.recv_timeout(Duration::from_secs(300)).unwrap();
         assert_eq!(lb, c.logits.unwrap(), "same input must reproduce the same logits");
@@ -768,7 +1024,7 @@ mod tests {
         cfg.max_queue = 0; // every submission rejects deterministically
         let coord = Coordinator::start(cfg);
         let err = coord
-            .submit(InferenceRequest { id: 9, input: None, schedule: None })
+            .submit(InferenceRequest { id: 9, input: None, schedule: None, shards: None })
             .unwrap_err();
         assert!(matches!(err, SubmitError::Busy { .. }));
         assert_eq!(coord.rejected(), 1);
@@ -795,6 +1051,7 @@ mod tests {
                     })
                     .with("ghost", Precision::Int8),
                 ),
+                shards: None,
             })
             .unwrap_err();
         assert!(matches!(err, SubmitError::Invalid { .. }), "{err}");
@@ -804,6 +1061,7 @@ mod tests {
                 id: 1,
                 input: None,
                 schedule: Some(PrecisionMap::uniform(Precision::Fp32)),
+                shards: None,
             })
             .unwrap_err();
         assert!(matches!(err, SubmitError::Invalid { .. }), "{err}");
@@ -820,7 +1078,7 @@ mod tests {
         let coord = Coordinator::start(cfg);
         let get = |id: u64, sched: Option<PrecisionMap>| {
             let rx = coord
-                .submit(InferenceRequest { id, input: None, schedule: sched })
+                .submit(InferenceRequest { id, input: None, schedule: sched, shards: None })
                 .unwrap();
             rx.recv_timeout(Duration::from_secs(120)).unwrap()
         };
@@ -863,7 +1121,7 @@ mod tests {
         let coord = Coordinator::start(cfg);
         let n = 32 * 32 * 3;
         let get = |id: u64, input: Option<Vec<u8>>| {
-            let rx = coord.submit(InferenceRequest { id, input, schedule: None }).unwrap();
+            let rx = coord.submit(InferenceRequest { id, input, schedule: None, shards: None }).unwrap();
             rx.recv_timeout(Duration::from_secs(300)).unwrap()
         };
         // Timing miss: compiles a transient program (timing-only schedules
@@ -885,6 +1143,241 @@ mod tests {
         assert_eq!(s.program_misses, 2, "first functional request compiles + memoizes");
         assert_eq!(s.program_hits, 1, "second functional request hits the cache");
         assert!(s.replay_us > 0, "replay time must be accounted");
+        // Every compile is attributable: the single worker paid for both.
+        assert_eq!(s.compile_by_worker, vec![2], "Σ compile_by_worker == program_misses");
         coord.shutdown();
+    }
+
+    /// A 2-layer graph small enough to compile/replay in milliseconds —
+    /// cache-boundary tests need dozens of distinct deployments.
+    fn tiny_serving_net() -> Vec<NetLayer> {
+        use crate::kernels::Conv2dParams;
+        use crate::nn::ConvLayer;
+        vec![
+            NetLayer {
+                kind: LayerKind::Conv(ConvLayer {
+                    name: "c1".into(),
+                    params: Conv2dParams {
+                        h: 4,
+                        w: 4,
+                        c_in: 16,
+                        c_out: 64,
+                        kh: 1,
+                        kw: 1,
+                        stride: 1,
+                        pad: 0,
+                    },
+                    relu: true,
+                    residual: false,
+                    quantized: true,
+                }),
+                input: 0,
+                residual_from: None,
+            },
+            NetLayer {
+                kind: LayerKind::Fc { k: 64, n: 10, name: "fc".into() },
+                input: 1,
+                residual_from: None,
+            },
+        ]
+    }
+
+    #[test]
+    fn program_cache_evicts_fifo_but_never_the_deployment_default() {
+        // Satellite: direct test at the MAX_PROGRAM_ENTRIES boundary. Flood
+        // the cache with > MAX_PROGRAM_ENTRIES distinct DeployKeys; the
+        // deployment default must survive (pinned), flooded keys must evict
+        // FIFO, and evicted keys must recompile (miss counter increments).
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 1;
+        cfg.batch_timeout = Duration::from_millis(1);
+        cfg.net = Arc::new(tiny_serving_net());
+        let coord = Coordinator::start(cfg);
+        let input = vec![9u8; 4 * 4 * 16];
+        let get = |id: u64, sched: Option<PrecisionMap>| {
+            let rx = coord
+                .submit(InferenceRequest {
+                    id,
+                    input: Some(input.clone()),
+                    schedule: sched,
+                    shards: None,
+                })
+                .unwrap();
+            rx.recv_timeout(Duration::from_secs(300)).unwrap()
+        };
+        // Seed the pinned default entry (functional requests memoize).
+        get(0, None);
+        // 17 distinct non-default schedules: w2a2 with per-layer overrides.
+        let precs = ["w1a1", "w1a2", "w2a1", "int8", "w1a1-novbp", "w2a2-novbp"];
+        let mut floods: Vec<PrecisionMap> = Vec::new();
+        'outer: for a in precs {
+            for b in precs {
+                let spec = format!("w2a2;c1={a};fc={b}");
+                let m = PrecisionMap::parse(&spec).unwrap();
+                if !floods.contains(&m) && !m.is_uniform() {
+                    floods.push(m);
+                }
+                if floods.len() == MAX_PROGRAM_ENTRIES + 1 {
+                    break 'outer;
+                }
+            }
+        }
+        assert_eq!(floods.len(), MAX_PROGRAM_ENTRIES + 1, "need 17+ distinct keys");
+        for (i, m) in floods.iter().enumerate() {
+            get(100 + i as u64, Some(m.clone()));
+        }
+        let s = coord.stats();
+        // 1 default + 17 flooded = 18 distinct keys, each compiled once.
+        assert_eq!(s.program_misses, 18);
+        let bounded = coord.shared.program_cache.lock().unwrap().len();
+        assert!(bounded <= MAX_PROGRAM_ENTRIES + 1, "cache unbounded: {bounded} entries");
+        // The pinned deployment default must still be resident: a repeat is
+        // a pure hit (miss counter unchanged).
+        let r = get(500, None);
+        assert!(r.timing_cached);
+        let s = coord.stats();
+        assert_eq!(s.program_misses, 18, "the default entry must never be evicted");
+        assert_eq!(s.program_hits, 1);
+        // The oldest flooded key was evicted by the later ones: using it
+        // again recompiles (miss counter increments).
+        get(501, Some(floods[0].clone()));
+        let s = coord.stats();
+        assert_eq!(s.program_misses, 19, "evicted keys must recompile on reuse");
+        // And the whole miss history is attributed to the single worker.
+        assert_eq!(s.compile_by_worker, vec![19]);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn cluster_requests_shard_and_match_single_core_logits() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 1;
+        cfg.batch_timeout = Duration::from_millis(1);
+        let coord = Coordinator::start(cfg);
+        let n = 32 * 32 * 3;
+        let input: Vec<u8> = (0..n).map(|i| ((i * 7 + 3) % 251) as u8).collect();
+        let get = |id: u64, shards: Option<usize>| {
+            let rx = coord
+                .submit(InferenceRequest {
+                    id,
+                    input: Some(input.clone()),
+                    schedule: None,
+                    shards,
+                })
+                .unwrap();
+            rx.recv_timeout(Duration::from_secs(300)).unwrap()
+        };
+        let single = get(0, None);
+        let sharded = get(1, Some(2));
+        assert_eq!(single.shards, 1);
+        assert_eq!(single.sync_cycles, 0);
+        assert_eq!(sharded.shards, 2);
+        assert!(sharded.sync_cycles > 0, "the cluster model must charge the all-gather");
+        assert_eq!(
+            single.logits, sharded.logits,
+            "tensor-parallel logits must be bit-identical to single-core"
+        );
+        assert_eq!(single.argmax, sharded.argmax);
+        assert!(
+            sharded.sim_cycles < single.sim_cycles,
+            "2 shards must beat 1 core on modeled latency ({} vs {})",
+            sharded.sim_cycles,
+            single.sim_cycles
+        );
+        // Cluster metrics: shard utilization for both cores, sync counter.
+        let s = coord.stats();
+        assert_eq!(s.shard_util.len(), 2, "two shard cores ran: {:?}", s.shard_util);
+        assert!(s.shard_util.iter().all(|&u| u > 0.0));
+        assert_eq!(s.sync_cycles, sharded.sync_cycles);
+        // Warm repeat: per-shard program entries + cluster timing all hit.
+        let again = get(2, Some(2));
+        assert!(again.timing_cached);
+        assert_eq!(again.logits, single.logits);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_shard_counts_are_rejected_at_submission() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        let coord = Coordinator::start(cfg);
+        for bad in [0usize, MAX_SHARDS + 1] {
+            let err = coord
+                .submit(InferenceRequest {
+                    id: 0,
+                    input: None,
+                    schedule: None,
+                    shards: Some(bad),
+                })
+                .unwrap_err();
+            assert!(matches!(err, SubmitError::Invalid { .. }), "shards={bad}: {err}");
+        }
+        assert_eq!(coord.rejected(), 0, "Invalid is not backpressure");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn lat_window_percentiles_edge_cases() {
+        // Satellite: direct coverage of the p50/p95/p99 feed.
+        // Empty window: all zeros.
+        let w = LatWindow::new(4);
+        assert_eq!(w.percentiles([0.50, 0.95, 0.99]), [0, 0, 0]);
+        // Single sample: every percentile is that sample.
+        let mut w = LatWindow::new(4);
+        w.push(42);
+        assert_eq!(w.percentiles([0.0, 0.50, 0.99]), [42, 42, 42]);
+        // Cap overflow wraps around: only the most recent `cap` samples
+        // survive (the early outlier is forgotten).
+        let mut w = LatWindow::new(4);
+        w.push(1_000_000);
+        for v in [10, 20, 30, 40] {
+            w.push(v);
+        }
+        assert_eq!(w.samples.len(), 4, "window must stay at cap");
+        let [p0, p50, p100] = w.percentiles([0.0, 0.50, 1.0]);
+        assert_eq!(p0, 10);
+        assert_eq!(p100, 40, "the outlier must have been evicted");
+        assert_eq!(p50, 30, "median of {{10,20,30,40}} rounds up to index 2");
+        // Percentiles are order-insensitive (window sorts internally).
+        let mut w = LatWindow::new(8);
+        for v in [5, 1, 4, 2, 3] {
+            w.push(v);
+        }
+        assert_eq!(w.percentiles([0.0, 1.0]), [1, 5]);
+    }
+
+    #[test]
+    fn program_cache_eviction_policy_unit() {
+        // Unit-level check of the FIFO + pinning policy, independent of the
+        // serving path.
+        let net = tiny_serving_net();
+        let quark = MachineConfig::quark(4);
+        let key = |spec: &str| ProgKey {
+            deploy: DeployKey {
+                net_fp: 1,
+                machine_fp: 2,
+                schedule: PrecisionMap::parse(spec).unwrap(),
+                shards: 1,
+            },
+            shard: 0,
+        };
+        let prog = Arc::new(
+            compile(&net, &quark, &PrecisionMap::parse("w2a2").unwrap()).unwrap(),
+        );
+        let mut cache = ProgramCache::new();
+        cache.insert(key("w2a2"), prog.clone(), true, 2); // pinned default
+        cache.insert(key("w1a1"), prog.clone(), false, 2);
+        assert_eq!(cache.len(), 2);
+        // At cap: the non-pinned FIFO head (w1a1) is evicted, not the default.
+        cache.insert(key("int8"), prog.clone(), false, 2);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&key("w2a2")).is_some(), "pinned entry survives");
+        assert!(cache.get(&key("w1a1")).is_none(), "FIFO head evicted");
+        assert!(cache.get(&key("int8")).is_some());
+        // Re-inserting an existing key is a no-op (no double insert).
+        cache.insert(key("int8"), prog, false, 2);
+        assert_eq!(cache.len(), 2);
     }
 }

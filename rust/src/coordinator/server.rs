@@ -7,10 +7,13 @@
 //!                                   workers=<n> cache_hits=<n> cache_misses=<n>
 //!                                   prog_hits=<n> prog_misses=<n>
 //!                                   compile_us=<n> replay_us=<n>
+//!                                   compile_by_worker=<c0,c1,…>
+//!                                   sync_cycles=<n> shard_util=<s0,…|->
 //!                                   p50_us=<n> p95_us=<n> p99_us=<n> util=<u0,u1,…>
-//! INFER <id> [prec=<spec>] [<b0,b1,...>]
+//! INFER <id> [prec=<spec>] [shards=<n>] [<b0,b1,...>]
 //!                           → OK <id> cycles=<c> device_us=<t> worker=<w>
 //!                                   batch=<b> cached=<0|1> prec=<label>
+//!                                   shards=<n> sync_cycles=<s>
 //!                             with input bytes: plus ` argmax=<k>
 //!                             logits=<v0,v1,…>` — the bytes are run through
 //!                             the functional executor and the real outputs
@@ -20,7 +23,11 @@
 //! The optional `prec=` field is a [`PrecisionMap`] spec
 //! (`default[;layer=precision…]`, e.g. `prec=int8` or
 //! `prec=w2a2;c1=int8;fc=int8`) selecting a per-request precision schedule;
-//! without it the deployment default applies. Malformed requests answer
+//! without it the deployment default applies. The optional `shards=` field
+//! selects a tensor-parallel shard count ([`crate::cluster`]): the inference
+//! is partitioned over that many simulated cores, `cycles=` reports the
+//! cluster model (`max` shard compute + all-gather sync), and the logits are
+//! bit-identical to a single-core run. Malformed requests answer
 //! `ERR <reason>`; a full queue answers `BUSY <reason>`. Neither kills the
 //! connection — clients keep the socket and retry. (No JSON library exists
 //! in this offline environment; a line protocol keeps the wire format
@@ -95,11 +102,24 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                 let s = coord.stats();
                 let util: Vec<String> =
                     s.utilization.iter().map(|u| format!("{u:.2}")).collect();
+                let cbw: Vec<String> =
+                    s.compile_by_worker.iter().map(|c| c.to_string()).collect();
+                let shard_util = if s.shard_util.is_empty() {
+                    "-".to_string()
+                } else {
+                    s.shard_util
+                        .iter()
+                        .map(|u| format!("{u:.2}"))
+                        .collect::<Vec<_>>()
+                        .join(",")
+                };
                 writeln!(
                     writer,
                     "STATS served={} rejected={} queue_depth={} workers={} \
                      cache_hits={} cache_misses={} prog_hits={} prog_misses={} \
-                     compile_us={} replay_us={} p50_us={} p95_us={} p99_us={} util={}",
+                     compile_us={} replay_us={} compile_by_worker={} \
+                     sync_cycles={} shard_util={} \
+                     p50_us={} p95_us={} p99_us={} util={}",
                     s.served,
                     s.rejected,
                     s.queue_depth,
@@ -110,6 +130,9 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                     s.program_misses,
                     s.compile_us,
                     s.replay_us,
+                    cbw.join(","),
+                    s.sync_cycles,
+                    shard_util,
                     s.p50_us,
                     s.p95_us,
                     s.p99_us,
@@ -125,22 +148,46 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                         continue;
                     }
                 };
-                // Optional per-request precision schedule.
+                // Optional per-request precision schedule + shard count
+                // (either order, each at most once).
                 let mut next_tok = parts.next();
                 let mut schedule = None;
-                if let Some(tok) = next_tok {
+                let mut shards = None;
+                let mut wire_err = None;
+                while let Some(tok) = next_tok {
                     if let Some(spec) = tok.strip_prefix("prec=") {
+                        if schedule.is_some() {
+                            wire_err = Some("duplicate prec= field".to_string());
+                            break;
+                        }
                         match PrecisionMap::parse(spec) {
-                            Ok(m) => {
-                                schedule = Some(m);
-                                next_tok = parts.next();
-                            }
+                            Ok(m) => schedule = Some(m),
                             Err(reason) => {
-                                writeln!(writer, "ERR bad precision: {reason}")?;
-                                continue;
+                                wire_err = Some(format!("bad precision: {reason}"));
+                                break;
                             }
                         }
+                    } else if let Some(spec) = tok.strip_prefix("shards=") {
+                        if shards.is_some() {
+                            wire_err = Some("duplicate shards= field".to_string());
+                            break;
+                        }
+                        match spec.parse::<usize>() {
+                            Ok(n) => shards = Some(n),
+                            Err(_) => {
+                                wire_err =
+                                    Some(format!("bad shards field {spec:?} (want an integer)"));
+                                break;
+                            }
+                        }
+                    } else {
+                        break;
                     }
+                    next_tok = parts.next();
+                }
+                if let Some(reason) = wire_err {
+                    writeln!(writer, "ERR {reason}")?;
+                    continue;
                 }
                 let input = match parse_input(next_tok) {
                     Ok(v) => v,
@@ -153,24 +200,27 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                     writeln!(writer, "ERR trailing garbage after input")?;
                     continue;
                 }
-                match coord.submit(InferenceRequest { id, input, schedule }) {
+                match coord.submit(InferenceRequest { id, input, schedule, shards }) {
                     Err(SubmitError::Busy { depth }) => {
                         writeln!(writer, "BUSY queue full (depth {depth})")?
                     }
                     Err(SubmitError::Invalid { reason }) => {
-                        writeln!(writer, "ERR bad precision: {reason}")?
+                        writeln!(writer, "ERR invalid request: {reason}")?
                     }
                     Ok(rx) => match rx.recv() {
                         Ok(r) => {
                             let mut reply = format!(
-                                "OK {} cycles={} device_us={:.1} worker={} batch={} cached={} prec={}",
+                                "OK {} cycles={} device_us={:.1} worker={} batch={} cached={} \
+                                 prec={} shards={} sync_cycles={}",
                                 r.id,
                                 r.sim_cycles,
                                 r.device_us,
                                 r.worker,
                                 r.batch_id,
                                 r.timing_cached as u8,
-                                r.precision
+                                r.precision,
+                                r.shards,
+                                r.sync_cycles
                             );
                             if let (Some(am), Some(lg)) = (r.argmax, r.logits.as_ref()) {
                                 let csv: Vec<String> =
@@ -238,12 +288,59 @@ mod tests {
             "prog_misses=",
             "compile_us=",
             "replay_us=",
+            "compile_by_worker=",
+            "sync_cycles=",
+            "shard_util=",
             "p50_us=",
             "p99_us=",
             "util=",
         ] {
             assert!(lines[2].contains(field), "missing {field}: {}", lines[2]);
         }
+        assert!(lines[1].contains(" shards=1 "), "single-core reply: {}", lines[1]);
+    }
+
+    #[test]
+    fn infer_accepts_a_shard_count_on_the_wire() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        // Timing-only probes: single-core, then the same deployment split
+        // over 2 shard cores (order of prec=/shards= is free).
+        writeln!(client, "INFER 1").unwrap();
+        writeln!(client, "INFER 2 shards=2").unwrap();
+        writeln!(client, "INFER 3 shards=2 prec=w2a2").unwrap();
+        // Bad shard counts answer ERR without killing the connection.
+        writeln!(client, "INFER 4 shards=zap").unwrap();
+        writeln!(client, "INFER 5 shards=999").unwrap();
+        writeln!(client, "INFER 6 shards=2 shards=4").unwrap();
+        writeln!(client, "PING").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(7).map(|l| l.unwrap()).collect();
+        assert!(lines[0].contains(" shards=1 sync_cycles=0"), "{}", lines[0]);
+        assert!(lines[1].contains(" shards=2 "), "{}", lines[1]);
+        assert!(lines[2].contains(" shards=2 "), "{}", lines[2]);
+        assert!(lines[3].starts_with("ERR bad shards field"), "{}", lines[3]);
+        assert!(lines[4].starts_with("ERR invalid request"), "{}", lines[4]);
+        assert!(lines[5].starts_with("ERR duplicate shards= field"), "{}", lines[5]);
+        assert_eq!(lines[6], "PONG", "connection survived shard errors");
+        let field = |l: &str, f: &str| -> u64 {
+            l.split(f).nth(1).unwrap().split_whitespace().next().unwrap().parse().unwrap()
+        };
+        // The cluster model charges a real sync cost, and the sharded run
+        // (which also pays it) still beats one core on modeled latency.
+        assert!(field(&lines[1], "sync_cycles=") > 0, "{}", lines[1]);
+        assert!(
+            field(&lines[1], "cycles=") < field(&lines[0], "cycles="),
+            "2-shard latency must beat single-core: {} vs {}",
+            lines[1],
+            lines[0]
+        );
+        // shards=2 with the explicit default schedule is the same deployment
+        // key: identical modeled cycles.
+        assert_eq!(field(&lines[1], "cycles="), field(&lines[2], "cycles="));
     }
 
     #[test]
@@ -316,7 +413,7 @@ mod tests {
         assert!(lines[3].contains(" prec=mixed(w2a2+1)"), "{}", lines[3]);
         assert!(lines[3].contains(" argmax="), "{}", lines[3]);
         assert!(lines[4].starts_with("ERR bad precision"), "{}", lines[4]);
-        assert!(lines[5].starts_with("ERR bad precision"), "{}", lines[5]);
+        assert!(lines[5].starts_with("ERR invalid request"), "{}", lines[5]);
         assert_eq!(lines[6], "PONG", "connection survived schedule errors");
         // The mixed schedule costs more cycles than pure w2a2 but fewer than
         // pure int8 (c1 re-runs at 8-bit, the rest stays 2-bit).

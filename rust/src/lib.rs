@@ -21,6 +21,10 @@
 //!   (net, machine, schedule) into a relocatable
 //!   [`program::CompiledProgram`] once; [`sim::Sim::execute`] replays it
 //!   per request with zero kernel emission.
+//! * [`cluster`] — tensor-parallel sharding: one inference partitioned
+//!   across N simulated cores ([`cluster::compile_cluster`] →
+//!   [`cluster::ClusterCores::infer`]), with a modeled inter-core
+//!   activation all-gather ([`cluster::cluster_timing`]).
 //! * [`phys`] — analytical area/power technology model + roofline analytics.
 //! * [`runtime`] — PJRT golden-model loader (AOT HLO text from JAX).
 //! * [`coordinator`] — batching inference server over a pool of simulated
@@ -29,6 +33,7 @@
 
 pub mod arch;
 pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod error;
 pub mod isa;

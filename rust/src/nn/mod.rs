@@ -12,5 +12,5 @@ pub mod golden;
 pub mod model;
 pub mod resnet;
 
-pub use model::{LayerReport, ModelRun, ModelRunner, Precision, PrecisionMap};
+pub use model::{LayerReport, ModelRun, ModelRunner, Precision, PrecisionMap, ShardPlan};
 pub use resnet::{resnet18_cifar, resnet18_mixed_schedule, ConvLayer, LayerKind, NetLayer};

@@ -355,6 +355,88 @@ impl PrecisionMap {
     }
 }
 
+/// Tensor-parallel shard plan: which layers' output channels are partitioned
+/// across the cluster's shard cores, and how ([`crate::cluster`]).
+///
+/// The partition rule is the classic tensor-parallel split: every Conv/FC
+/// layer's *output channels* are divided into `shards` contiguous ranges
+/// (each shard reads the full input feature map and computes its range);
+/// pooling has no channel-parallel work worth splitting at this scale and
+/// runs replicated on every shard. At `shards == 1` no layer is partitioned
+/// and a shard program is emission-identical to the single-core program.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    shards: usize,
+    /// Per layer: `Some(full output channel count)` when the layer's output
+    /// channels are partitioned; `None` when the layer runs replicated.
+    channels: Vec<Option<usize>>,
+}
+
+impl ShardPlan {
+    /// Derive the plan for `net` at `shards` cores, validating channel
+    /// counts: every partitioned layer must have at least one output channel
+    /// per shard (ranges are contiguous and may be uneven — e.g. a 10-class
+    /// FC at 4 shards splits 2/3/2/3).
+    pub fn derive(net: &[NetLayer], shards: usize) -> Result<ShardPlan, String> {
+        if shards == 0 {
+            return Err("shard count must be ≥ 1".to_string());
+        }
+        let mut channels = Vec::with_capacity(net.len());
+        for layer in net {
+            let sharded = match &layer.kind {
+                LayerKind::Conv(c) => Some((c.name.as_str(), c.params.c_out)),
+                LayerKind::Fc { n, name, .. } => Some((name.as_str(), *n)),
+                LayerKind::AvgPool { .. } => None,
+            };
+            match sharded {
+                Some((name, c_out)) if shards > 1 => {
+                    if c_out < shards {
+                        return Err(format!(
+                            "layer {name:?} has {c_out} output channels — fewer than {shards} shards"
+                        ));
+                    }
+                    channels.push(Some(c_out));
+                }
+                _ => channels.push(None),
+            }
+        }
+        Ok(ShardPlan { shards, channels })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn layers(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Output-channel range `[c0, c1)` that `shard` computes for `layer`;
+    /// `None` when the layer runs replicated (pooling, and every layer at
+    /// `shards == 1`).
+    pub fn range(&self, layer: usize, shard: usize) -> Option<(usize, usize)> {
+        let n = self.channels[layer]?;
+        Some((n * shard / self.shards, n * (shard + 1) / self.shards))
+    }
+
+    /// Check the schedule against the bit-plane re-pack rule: the inter-core
+    /// all-gather moves raw u8 activation codes, and a gathered map stays on
+    /// its narrowest-consumer grid ([`map_consumer_bits`]) only because
+    /// channel slicing never re-quantizes — which holds for the integer
+    /// schedules. fp32 feature maps (4-byte elements, no code grid) cannot
+    /// shard.
+    pub fn validate_schedule(&self, schedule: &PrecisionMap) -> Result<(), String> {
+        if self.shards > 1 && schedule.default_precision() == Precision::Fp32 {
+            return Err(
+                "cluster sharding is integer-only: the activation all-gather exchanges \
+                 u8 codes on the consumer bit-plane grid, which fp32 maps do not have"
+                    .to_string(),
+            );
+        }
+        Ok(())
+    }
+}
+
 /// `2^bits − 1`: the top of a `bits`-bit unsigned code grid.
 pub fn grid_qmax(bits: u8) -> u32 {
     (1u32 << bits) - 1
@@ -483,7 +565,7 @@ impl ModelRunner {
         schedule: &PrecisionMap,
         input: Option<&[u8]>,
     ) -> ModelRun {
-        let emitted = crate::program::builder::emit_model(sim, net, schedule, input);
+        let emitted = crate::program::builder::emit_model(sim, net, schedule, input, None);
         ModelRun {
             reports: emitted.reports,
             out_addr: emitted.out_addr,
@@ -636,5 +718,42 @@ mod tests {
         assert_eq!(bits, vec![2, 8, 8, 8]);
         assert_eq!(grid_qmax(2), 3);
         assert_eq!(grid_qmax(8), 255);
+    }
+
+    #[test]
+    fn shard_plan_partitions_conv_and_fc_only() {
+        let net = tiny_net(); // conv(64 ch) + pool + fc(10 classes)
+        let plan = ShardPlan::derive(&net, 4).unwrap();
+        assert_eq!(plan.shards(), 4);
+        assert_eq!(plan.layers(), 3);
+        // Conv: 64 channels split 16/16/16/16.
+        assert_eq!(plan.range(0, 0), Some((0, 16)));
+        assert_eq!(plan.range(0, 3), Some((48, 64)));
+        // Pool is replicated.
+        assert_eq!(plan.range(1, 2), None);
+        // FC: 10 classes split unevenly but contiguously, covering all.
+        let ranges: Vec<_> = (0..4).map(|s| plan.range(2, s).unwrap()).collect();
+        assert_eq!(ranges, vec![(0, 2), (2, 5), (5, 7), (7, 10)]);
+        assert_eq!(ranges.iter().map(|(a, b)| b - a).sum::<usize>(), 10);
+
+        // shards == 1: nothing is partitioned (the single-core identity).
+        let one = ShardPlan::derive(&net, 1).unwrap();
+        assert!((0..3).all(|l| one.range(l, 0).is_none()));
+    }
+
+    #[test]
+    fn shard_plan_validates_channel_counts_and_schedules() {
+        let net = tiny_net();
+        assert!(ShardPlan::derive(&net, 0).is_err(), "0 shards is meaningless");
+        // FC has 10 classes: 16 shards cannot each own a channel.
+        let err = ShardPlan::derive(&net, 16).unwrap_err();
+        assert!(err.contains("fewer than 16 shards"), "{err}");
+        // fp32 cannot shard (no u8 code grid to all-gather on).
+        let plan = ShardPlan::derive(&net, 2).unwrap();
+        assert!(plan.validate_schedule(&PrecisionMap::uniform(Precision::Fp32)).is_err());
+        assert!(plan.validate_schedule(&PrecisionMap::uniform(Precision::Int8)).is_ok());
+        // At 1 shard even fp32 is fine (the plan is the identity).
+        let one = ShardPlan::derive(&net, 1).unwrap();
+        assert!(one.validate_schedule(&PrecisionMap::uniform(Precision::Fp32)).is_ok());
     }
 }

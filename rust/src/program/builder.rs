@@ -17,6 +17,23 @@
 //! of the schedule family only) — the same stream the naive-i128 host
 //! golden model ([`crate::nn::golden`]) draws, which is what makes the
 //! layer-by-layer bit-exact differentials possible.
+//!
+//! ## Tensor-parallel shard emission
+//!
+//! With a [`ShardPlan`] slice active ([`super::compile_shard`]), every
+//! Conv/FC layer computes only its shard's output-channel range: the kernel
+//! runs with a *narrowed* `c_out`, writing a packed partial map, and a
+//! full-size gather buffer is allocated for the inter-core all-gather the
+//! cluster runtime performs between layers ([`crate::cluster`]). Two rules
+//! keep shard programs bit-identical to the single-core emission:
+//!
+//! * **full-stream draw** — synthetic weights and requant parameters are
+//!   always drawn at the layer's *full* channel count and column-sliced, so
+//!   shard `k`'s channel `c` sees exactly the values the single-core run
+//!   gives channel `c` (and the deterministic seed advances identically);
+//! * **consumers read gathers** — the feature-map list advances with the
+//!   *gather* address, so every downstream layer (including residual
+//!   sources) is emitted against full maps, exactly as on one core.
 
 use crate::arch::MachineConfig;
 use crate::kernels::bitpack::setup_index_vector;
@@ -24,15 +41,16 @@ use crate::kernels::conv2d::{bitserial_block, conv2d_bitserial, conv2d_f32, conv
 use crate::kernels::matmul::{matmul_bitserial, matmul_f32, matmul_int8};
 use crate::kernels::pool::{global_avgpool_f32, global_avgpool_u8};
 use crate::kernels::requantize::RqBuf;
+use crate::kernels::Conv2dParams;
 use crate::nn::model::{
     grid_qmax, map_consumer_bits, synth_codes, synth_f32, synth_i8, synth_input, synth_rq_params,
-    LayerReport, Precision, PrecisionMap,
+    LayerReport, Precision, PrecisionMap, ShardPlan,
 };
 use crate::nn::{LayerKind, NetLayer};
 use crate::quant::pack_weight_planes;
 use crate::sim::Sim;
 
-use super::{CompiledProgram, InputSpec, LayerMark};
+use super::{CompiledProgram, InputSpec, LayerMark, ShardSeg};
 
 /// Everything [`emit_model`] reports back about one emission pass.
 pub(crate) struct EmittedModel {
@@ -50,6 +68,8 @@ pub(crate) struct EmittedModel {
     /// Address/size of the final feature map (the logits).
     pub out_addr: u64,
     pub out_elems: usize,
+    /// Per-layer shard segments; populated iff a shard slice was active.
+    pub shard_segs: Vec<ShardSeg>,
 }
 
 /// Builds [`CompiledProgram`]s: owns a recording [`Sim`] sized like a
@@ -72,9 +92,30 @@ impl ProgramBuilder {
     /// must already be validated (see [`super::compile`], which is the
     /// checked entry point); invalid schedules panic exactly like the live
     /// runner.
-    pub fn build(mut self, net: &[NetLayer], schedule: &PrecisionMap) -> CompiledProgram {
+    pub fn build(self, net: &[NetLayer], schedule: &PrecisionMap) -> CompiledProgram {
+        self.build_inner(net, schedule, None)
+    }
+
+    /// Emit one shard of a tensor-parallel deployment (see
+    /// [`super::compile_shard`], the checked entry point).
+    pub(crate) fn build_sharded(
+        self,
+        net: &[NetLayer],
+        schedule: &PrecisionMap,
+        plan: &ShardPlan,
+        shard: usize,
+    ) -> CompiledProgram {
+        self.build_inner(net, schedule, Some((plan, shard)))
+    }
+
+    fn build_inner(
+        mut self,
+        net: &[NetLayer],
+        schedule: &PrecisionMap,
+        shard: Option<(&ShardPlan, usize)>,
+    ) -> CompiledProgram {
         let base = self.sim.machine.mem.brk();
-        let emitted = emit_model(&mut self.sim, net, schedule, None);
+        let emitted = emit_model(&mut self.sim, net, schedule, None, shard);
         let mem_len = self.sim.machine.mem.brk() - base;
         let rec = self.sim.take_recording();
         let layers = emitted
@@ -114,8 +155,17 @@ impl ProgramBuilder {
             out_addr: emitted.out_addr,
             out_elems: emitted.out_elems,
             layers,
+            shard: shard.map(|(plan, idx)| (idx, plan.shards())),
+            shard_segs: emitted.shard_segs,
         }
     }
+}
+
+/// Select output-channel columns `[c0, c1)` of a row-major `[K][N]` matrix —
+/// the tensor-parallel weight split. Values are *identical* to the
+/// single-core draw for the same channels, by construction.
+fn slice_cols<T: Copy>(w: &[T], n: usize, c0: usize, c1: usize) -> Vec<T> {
+    w.chunks(n).flat_map(|row| row[c0..c1].iter().copied()).collect()
 }
 
 /// THE model-emission routine: materialize `net` in simulated memory and
@@ -127,6 +177,9 @@ impl ProgramBuilder {
 /// cycle model is data-independent — the historical fast path for timing
 /// sweeps); recording and `Full`-mode sims always materialize it.
 ///
+/// `shard` activates tensor-parallel shard emission (recording sims only —
+/// a live sim could not perform the inter-layer all-gather).
+///
 /// Panics on schedules that fail [`PrecisionMap::validate`] /
 /// [`PrecisionMap::validate_machine`] — the serving layer pre-validates at
 /// submission, and [`super::compile`] validates before building.
@@ -135,12 +188,19 @@ pub(crate) fn emit_model(
     net: &[NetLayer],
     schedule: &PrecisionMap,
     input: Option<&[u8]>,
+    shard: Option<(&ShardPlan, usize)>,
 ) -> EmittedModel {
     if let Err(e) = schedule.validate(net) {
         panic!("invalid schedule: {e}");
     }
     if let Err(e) = schedule.validate_machine(net, &sim.cfg) {
         panic!("{e}");
+    }
+    if let Some((plan, _)) = shard {
+        assert!(
+            plan.shards() == 1 || sim.is_recording(),
+            "sharded emission requires a recording Sim (the gather is host-driven)"
+        );
     }
     let resolved = schedule.resolve(net);
     let consumer_bits = map_consumer_bits(net, &resolved);
@@ -181,73 +241,110 @@ pub(crate) fn emit_model(
     let mut maps: Vec<u64> = vec![in_addr];
     let mut reports = Vec::new();
     let mut trace_ends = Vec::new();
+    let mut shard_segs = Vec::new();
 
     for (li, layer) in net.iter().enumerate() {
         let input_addr = maps[layer.input];
         let residual = layer.residual_from.map(|i| maps[i]);
         let lp = resolved[li];
         let out_qmax = grid_qmax(consumer_bits[li + 1]) as f32;
+        // Tensor-parallel slice of this layer, when a plan is active.
+        let srange = shard.and_then(|(plan, idx)| plan.range(li, idx));
         let before = sim.stats().clone();
-        let (out_addr, out_elems, name, run, quantized) = match &layer.kind {
+        let (out_addr, out_elems, name, run, quantized, seg) = match &layer.kind {
             LayerKind::Conv(c) => {
-                let p = c.params;
-                let out_elems = p.out_h() * p.out_w() * p.c_out;
-                let out = sim.alloc((out_elems * esz) as u64);
+                let pf = c.params;
+                let positions = pf.out_h() * pf.out_w();
+                let n_full = pf.c_out;
+                let (c0, c1) = srange.unwrap_or((0, n_full));
+                let nk = c1 - c0;
+                let p = Conv2dParams { c_out: nk, ..pf };
+                let out = sim.alloc((positions * nk * esz) as u64);
+                // Residual source maps are full gathered maps; a sharded
+                // layer reads its channel slice through a runtime-filled
+                // slice buffer (kernels index residuals at their own,
+                // narrowed, channel stride).
+                let mut res_slice = None;
+                let res_addr = if c.residual {
+                    match (residual, srange) {
+                        (Some(_), Some(_)) => {
+                            let buf = sim.alloc((positions * nk) as u64);
+                            res_slice = Some((layer.residual_from.unwrap(), buf));
+                            Some(buf)
+                        }
+                        (r, _) => r,
+                    }
+                } else {
+                    None
+                };
                 let k = p.k();
-                let n = p.c_out;
                 let run = match lp {
                     Precision::Fp32 => {
-                        let w = sim.alloc((k * n * 4) as u64);
-                        let b = sim.alloc((n * 4) as u64);
+                        debug_assert!(srange.is_none(), "fp32 schedules cannot shard");
+                        let w = sim.alloc((k * n_full * 4) as u64);
+                        let b = sim.alloc((n_full * 4) as u64);
                         if write_data {
-                            let wv = synth_f32(&mut seed, k * n);
+                            let wv = synth_f32(&mut seed, k * n_full);
                             sim.write_f32s(w, &wv);
-                            sim.write_f32s(b, &vec![0.01; n]);
+                            sim.write_f32s(b, &vec![0.01; n_full]);
                         }
-                        conv2d_f32(sim, &p, input_addr, w, b, out, c.relu, if c.residual { residual } else { None })
+                        conv2d_f32(sim, &p, input_addr, w, b, out, c.relu, res_addr)
                     }
                     Precision::Int8 => {
                         // Also the unquantized stem under every integer
                         // schedule (PrecisionMap::resolve pins it).
-                        let w = sim.alloc((k * n) as u64);
+                        let w = sim.alloc((k * nk) as u64);
                         if write_data {
-                            let wv = synth_i8(&mut seed, k * n);
-                            sim.write_i8(w, &wv);
+                            let wv = synth_i8(&mut seed, k * n_full);
+                            sim.write_i8(w, &slice_cols(&wv, n_full, c0, c1));
                         }
-                        let rq = rqbuf(sim, n, k, out_qmax);
-                        conv2d_int8(sim, &p, input_addr, w, &rq, out, if c.residual { residual } else { None })
+                        let rq = rqbuf(sim, n_full, k, out_qmax, (c0, c1));
+                        conv2d_int8(sim, &p, input_addr, w, &rq, out, res_addr)
                     }
                     Precision::Sub { abits, wbits, use_vbitpack } => {
                         let codes: Vec<u8> = if write_data {
-                            synth_codes(&mut seed, k * n, wbits)
+                            let full = synth_codes(&mut seed, k * n_full, wbits);
+                            slice_cols(&full, n_full, c0, c1)
                         } else {
-                            vec![0u8; k * n]
+                            vec![0u8; k * nk]
                         };
-                        let block = bitserial_block(sim.cfg.vlen_bits, n);
-                        let wpk = pack_weight_planes(&codes, k, n, wbits, block);
+                        let block = bitserial_block(sim.cfg.vlen_bits, nk);
+                        let wpk = pack_weight_planes(&codes, k, nk, wbits, block);
                         let w = sim.alloc(wpk.byte_len() as u64);
                         if write_data {
                             sim.write_u64s(w, &wpk.words);
                         }
-                        let rq = rqbuf(sim, n, k, out_qmax);
+                        let rq = rqbuf(sim, n_full, k, out_qmax, (c0, c1));
                         conv2d_bitserial(
-                            sim,
-                            &p,
-                            abits,
-                            input_addr,
-                            &wpk,
-                            w,
-                            &rq,
-                            out,
-                            if c.residual { residual } else { None },
-                            use_vbitpack,
-                            idx_vec,
+                            sim, &p, abits, input_addr, &wpk, w, &rq, out, res_addr,
+                            use_vbitpack, idx_vec,
                         )
                     }
                 };
-                (out, out_elems, c.name.clone(), run, c.quantized)
+                // Consumers (and residual readers) see the full map: the
+                // gather buffer on sharded layers, the kernel output itself
+                // otherwise.
+                let (full_addr, seg) = match srange {
+                    Some(_) => {
+                        let gather = sim.alloc((positions * n_full * esz) as u64);
+                        let seg = ShardSeg {
+                            channels: srange,
+                            c_full: n_full,
+                            positions,
+                            part_addr: out,
+                            gather_addr: gather,
+                            res_slice,
+                        };
+                        (gather, seg)
+                    }
+                    None => (out, ShardSeg::replicated(out, n_full, positions)),
+                };
+                (full_addr, positions * n_full, c.name.clone(), run, c.quantized, seg)
             }
             LayerKind::AvgPool { h, w, c } => {
+                // Pooling runs replicated on every shard: its input is a
+                // full gathered map, so each core derives the identical
+                // pooled vector with no exchange.
                 let out = sim.alloc((c * esz) as u64);
                 let run = if fp32 {
                     global_avgpool_f32(sim, *h, *w, *c, input_addr, out)
@@ -263,12 +360,15 @@ pub(crate) fn emit_model(
                     );
                     global_avgpool_u8(sim, *h, *w, *c, input_addr, &rq, out)
                 };
-                (out, *c, "avgpool".to_string(), run, false)
+                (out, *c, "avgpool".to_string(), run, false, ShardSeg::replicated(out, *c, 1))
             }
             LayerKind::Fc { k, n, name } => {
-                let out = sim.alloc((n.max(&64) * esz) as u64);
+                let (c0, c1) = srange.unwrap_or((0, *n));
+                let nk = c1 - c0;
+                let out = sim.alloc((nk.max(64) * esz) as u64);
                 let run = match lp {
                     Precision::Fp32 => {
+                        debug_assert!(srange.is_none(), "fp32 schedules cannot shard");
                         let w = sim.alloc((k * n * 4) as u64);
                         let b = sim.alloc((n * 4) as u64);
                         if write_data {
@@ -279,34 +379,50 @@ pub(crate) fn emit_model(
                         matmul_f32(sim, 1, *k, *n, input_addr, w, b, out, false)
                     }
                     Precision::Int8 => {
-                        let w = sim.alloc((k * n) as u64);
+                        let w = sim.alloc((k * nk) as u64);
                         if write_data {
                             let wv = synth_i8(&mut seed, k * n);
-                            sim.write_i8(w, &wv);
+                            sim.write_i8(w, &slice_cols(&wv, *n, c0, c1));
                         }
-                        let rq = rqbuf(sim, *n, *k, out_qmax);
-                        matmul_int8(sim, 1, *k, *n, input_addr, w, &rq, out)
+                        let rq = rqbuf(sim, *n, *k, out_qmax, (c0, c1));
+                        matmul_int8(sim, 1, *k, nk, input_addr, w, &rq, out)
                     }
                     Precision::Sub { abits, wbits, use_vbitpack } => {
                         let codes: Vec<u8> = if write_data {
-                            synth_codes(&mut seed, k * n, wbits)
+                            let full = synth_codes(&mut seed, k * n, wbits);
+                            slice_cols(&full, *n, c0, c1)
                         } else {
-                            vec![0u8; k * n]
+                            vec![0u8; k * nk]
                         };
-                        let block = bitserial_block(sim.cfg.vlen_bits, *n);
-                        let wpk = pack_weight_planes(&codes, *k, *n, wbits, block);
+                        let block = bitserial_block(sim.cfg.vlen_bits, nk);
+                        let wpk = pack_weight_planes(&codes, *k, nk, wbits, block);
                         let w = sim.alloc(wpk.byte_len() as u64);
                         if write_data {
                             sim.write_u64s(w, &wpk.words);
                         }
-                        let rq = rqbuf(sim, *n, *k, out_qmax);
+                        let rq = rqbuf(sim, *n, *k, out_qmax, (c0, c1));
                         matmul_bitserial(
-                            sim, 1, *k, *n, abits, input_addr, &wpk, w, &rq, out,
+                            sim, 1, *k, nk, abits, input_addr, &wpk, w, &rq, out,
                             use_vbitpack, idx_vec,
                         )
                     }
                 };
-                (out, *n, name.clone(), run, true)
+                let (full_addr, seg) = match srange {
+                    Some(_) => {
+                        let gather = sim.alloc((*n * esz) as u64);
+                        let seg = ShardSeg {
+                            channels: srange,
+                            c_full: *n,
+                            positions: 1,
+                            part_addr: out,
+                            gather_addr: gather,
+                            res_slice: None,
+                        };
+                        (gather, seg)
+                    }
+                    None => (out, ShardSeg::replicated(out, *n, 1)),
+                };
+                (full_addr, *n, name.clone(), run, true, seg)
             }
         };
         maps.push(out_addr);
@@ -321,6 +437,9 @@ pub(crate) fn emit_model(
             stats,
         });
         trace_ends.push(sim.trace_len());
+        if shard.is_some() {
+            shard_segs.push(seg);
+        }
     }
     let (final_addr, final_elems) = reports
         .last()
@@ -335,13 +454,16 @@ pub(crate) fn emit_model(
         fp32,
         out_addr: final_addr,
         out_elems: final_elems,
+        shard_segs,
     }
 }
 
 /// Allocate the synthetic requant parameter block
 /// ([`synth_rq_params`]) with the consumer-grid clamp `qmax` (the re-pack
-/// rule).
-fn rqbuf(sim: &mut Sim, n: usize, k: usize, qmax: f32) -> RqBuf {
-    let (alphas, betas, biases) = synth_rq_params(n, k);
-    RqBuf::create(sim, &alphas, &betas, &biases, qmax, 0.0)
+/// rule). Parameters are synthesized at the layer's *full* channel count and
+/// sliced to `[c0, c1)`, so shard programs see exactly the single-core
+/// per-channel scales.
+fn rqbuf(sim: &mut Sim, n_full: usize, k: usize, qmax: f32, (c0, c1): (usize, usize)) -> RqBuf {
+    let (alphas, betas, biases) = synth_rq_params(n_full, k);
+    RqBuf::create(sim, &alphas[c0..c1], &betas[c0..c1], &biases[c0..c1], qmax, 0.0)
 }

@@ -161,6 +161,63 @@ pub struct LayerMark {
     pub(crate) trace_end: usize,
 }
 
+/// Per-layer shard segment of a tensor-parallel shard program
+/// ([`compile_shard`]): where the kernel wrote its partial output-channel
+/// slice, and where the cluster runtime must deposit the full gathered map
+/// before the next layer reads it. All addresses are compile-space (re-based
+/// by the relocation delta on replay, like every other program address).
+#[derive(Clone, Debug)]
+pub struct ShardSeg {
+    /// Output-channel range `[c0, c1)` this shard computes; `None` when the
+    /// layer runs replicated (pooling, or every layer of a 1-shard plan).
+    pub channels: Option<(usize, usize)>,
+    /// Full output channel count of the layer.
+    pub c_full: usize,
+    /// Spatial positions of the output map (`out_h · out_w`; 1 for FC and
+    /// pooling).
+    pub positions: usize,
+    /// Kernel-written partial output (packed layout, channel stride
+    /// `c1 − c0`). Equals `gather_addr` when the layer is replicated.
+    pub part_addr: u64,
+    /// Full gathered map every consumer of this layer reads (`positions ·
+    /// c_full` u8 codes). The cluster runtime writes it after the all-gather.
+    pub gather_addr: u64,
+    /// Residual feed of a sharded residual layer: `(source feature-map
+    /// index, slice-buffer address)`. The runtime fills the buffer with this
+    /// shard's `[c0, c1)` channel slice of the (already gathered) source map
+    /// before the layer's trace range executes — the kernels index residual
+    /// maps at their own (narrowed) channel stride.
+    pub res_slice: Option<(usize, u64)>,
+}
+
+impl ShardSeg {
+    /// The identity segment of a replicated (or unpartitioned) layer: the
+    /// kernel output *is* the full map, nothing to gather or slice.
+    pub(crate) fn replicated(addr: u64, c_full: usize, positions: usize) -> ShardSeg {
+        ShardSeg {
+            channels: None,
+            c_full,
+            positions,
+            part_addr: addr,
+            gather_addr: addr,
+            res_slice: None,
+        }
+    }
+
+    /// Elements of the kernel-written partial slice.
+    pub fn part_elems(&self) -> usize {
+        match self.channels {
+            Some((c0, c1)) => self.positions * (c1 - c0),
+            None => self.positions * self.c_full,
+        }
+    }
+
+    /// Elements of the full gathered map.
+    pub fn gather_elems(&self) -> usize {
+        self.positions * self.c_full
+    }
+}
+
 /// The network-input segment of a program: where replay writes per-request
 /// input bytes, and how they are encoded.
 #[derive(Clone, Debug)]
@@ -201,6 +258,11 @@ pub struct CompiledProgram {
     pub(crate) out_addr: u64,
     pub(crate) out_elems: usize,
     pub(crate) layers: Vec<LayerMark>,
+    /// `(shard index, shard count)` for tensor-parallel shard programs
+    /// ([`compile_shard`]); `None` for single-core programs.
+    pub(crate) shard: Option<(usize, usize)>,
+    /// One [`ShardSeg`] per layer on shard programs; empty otherwise.
+    pub(crate) shard_segs: Vec<ShardSeg>,
 }
 
 impl CompiledProgram {
@@ -255,6 +317,17 @@ impl CompiledProgram {
     pub fn is_fp32(&self) -> bool {
         self.input.fp32
     }
+
+    /// `(shard index, shard count)` of a tensor-parallel shard program;
+    /// `None` for single-core programs ([`compile`]).
+    pub fn shard(&self) -> Option<(usize, usize)> {
+        self.shard
+    }
+
+    /// Per-layer shard segments (empty on single-core programs).
+    pub fn shard_segs(&self) -> &[ShardSeg] {
+        &self.shard_segs
+    }
 }
 
 /// Compile `net` for `machine` under `schedule` into a reusable
@@ -272,6 +345,39 @@ pub fn compile(
     schedule.validate(net)?;
     schedule.validate_machine(net, machine)?;
     Ok(ProgramBuilder::new(machine.clone()).build(net, schedule))
+}
+
+/// Compile shard `shard` of a tensor-parallel cluster deployment: the same
+/// validated emission as [`compile`], but every Conv/FC layer computes only
+/// its [`crate::nn::model::ShardPlan::range`] of output channels (reading
+/// the full input map), writing into a partial buffer; a full-size gather
+/// buffer per layer receives the inter-core all-gather at replay
+/// ([`crate::cluster`]). Weights and requant parameters are drawn from the
+/// *full* deterministic stream and column-sliced, so every channel's
+/// arithmetic — and therefore the gathered feature maps — is bit-identical
+/// to the single-core program. At `plan.shards() == 1` the emission is
+/// instruction- and image-identical to [`compile`].
+pub fn compile_shard(
+    net: &[NetLayer],
+    machine: &MachineConfig,
+    schedule: &PrecisionMap,
+    plan: &crate::nn::model::ShardPlan,
+    shard: usize,
+) -> Result<CompiledProgram, String> {
+    schedule.validate(net)?;
+    schedule.validate_machine(net, machine)?;
+    plan.validate_schedule(schedule)?;
+    if plan.layers() != net.len() {
+        return Err(format!(
+            "shard plan covers {} layers but the net has {}",
+            plan.layers(),
+            net.len()
+        ));
+    }
+    if shard >= plan.shards() {
+        return Err(format!("shard {shard} out of range (plan has {})", plan.shards()));
+    }
+    Ok(ProgramBuilder::new(machine.clone()).build_sharded(net, schedule, plan, shard))
 }
 
 #[cfg(test)]

@@ -133,15 +133,7 @@ impl Sim {
                 self.machine.execute(instr);
             }
         } else {
-            let mut reloc_i = 0usize;
-            for (idx, instr) in prog.trace.iter().enumerate() {
-                if reloc_i < prog.reloc.len() && prog.reloc[reloc_i] as usize == idx {
-                    reloc_i += 1;
-                    self.machine.execute(&relocate(*instr, delta));
-                } else {
-                    self.machine.execute(instr);
-                }
-            }
+            self.execute_functional_range(prog, delta, 0, prog.trace.len());
         }
         let reports = prog
             .layers
@@ -164,9 +156,37 @@ impl Sim {
         }
     }
 
+    /// Execute the trace range `[lo, hi)` functionally (no timing, no
+    /// stats), relocating marked `li`s by `delta`. The cluster runtime
+    /// ([`crate::cluster`]) steps shard programs layer by layer with this,
+    /// interleaving the host-side activation all-gather at layer bounds.
+    pub(crate) fn execute_functional_range(
+        &mut self,
+        prog: &CompiledProgram,
+        delta: u64,
+        lo: usize,
+        hi: usize,
+    ) {
+        let mut reloc_i = prog.reloc.partition_point(|&r| (r as usize) < lo);
+        for idx in lo..hi {
+            let instr = prog.trace[idx];
+            if reloc_i < prog.reloc.len() && prog.reloc[reloc_i] as usize == idx {
+                reloc_i += 1;
+                self.machine.execute(&relocate(instr, delta));
+            } else {
+                self.machine.execute(&instr);
+            }
+        }
+    }
+
     /// Shared replay prologue: sanity checks, image application, input
     /// override. Returns the relocation delta.
-    fn begin_replay(&mut self, prog: &CompiledProgram, base: u64, input: Option<&[u8]>) -> u64 {
+    pub(crate) fn begin_replay(
+        &mut self,
+        prog: &CompiledProgram,
+        base: u64,
+        input: Option<&[u8]>,
+    ) -> u64 {
         assert!(!self.is_recording(), "cannot replay into a recording Sim");
         assert_eq!(
             super::machine_fingerprint(&self.cfg),

@@ -1,0 +1,178 @@
+//! Cluster strong-scaling report (beyond the paper's single-core runs):
+//! modeled ResNet-18 latency when one inference is tensor-parallel-sharded
+//! across 1/2/4/8 simulated Quark cores ([`crate::cluster`]), at uniform
+//! w2a2, uniform w1a1, and the SPEED-style mixed schedule.
+//!
+//! Per (schedule, shard count) the row reports the cluster cycle model —
+//! `Σ max(shard compute) + all-gather sync` — the speedup over the 1-core
+//! run of the same schedule, and the Amdahl-style sync fraction. Sub-linear
+//! scaling has two sources the table separates: the replicated per-pixel
+//! work (im2col + activation packing runs on every shard — the serial
+//! fraction) and the modeled inter-core all-gather (the sync fraction).
+
+use crate::arch::MachineConfig;
+use crate::cluster::{cluster_timing, compile_cluster, ClusterTiming};
+use crate::nn::model::{Precision, PrecisionMap};
+use crate::nn::resnet::{resnet18_cifar, resnet18_mixed_schedule};
+use crate::nn::NetLayer;
+
+/// One (schedule, shard count) point of the scaling sweep.
+#[derive(Clone, Debug)]
+pub struct ClusterRow {
+    pub schedule: String,
+    pub shards: usize,
+    /// Modeled end-to-end latency in cycles (compute critical path + sync).
+    pub total_cycles: u64,
+    /// Modeled inter-core all-gather cycles included in `total_cycles`.
+    pub sync_cycles: u64,
+    /// `total_cycles(1 shard) / total_cycles` for the same schedule.
+    pub speedup: f64,
+    /// `sync_cycles / total_cycles`.
+    pub sync_fraction: f64,
+    /// Mean modeled shard-core utilization (busy cycles over the compute
+    /// critical path; 1.0 = perfectly balanced).
+    pub mean_shard_util: f64,
+}
+
+/// The full sweep.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub machine: String,
+    pub rows: Vec<ClusterRow>,
+}
+
+/// Default shard counts of the strong-scaling sweep.
+pub const DEFAULT_SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Run the sweep on `net` (Quark-4L; schedule differences are then
+/// schedule-only, like the mixed report).
+pub fn generate(net: &[NetLayer], shard_counts: &[usize]) -> ClusterReport {
+    let machine = MachineConfig::quark(4);
+    let w2a2 = PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
+    let w1a1 = PrecisionMap::uniform(Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true });
+    let mixed = resnet18_mixed_schedule(net);
+    let mut rows = Vec::new();
+    for (label, sched) in [("w2a2", &w2a2), ("w1a1", &w1a1), ("mixed", &mixed)] {
+        let time_at = |n: usize| {
+            let cluster = compile_cluster(net, &machine, sched, n)
+                .unwrap_or_else(|e| panic!("compile {label} at {n} shards: {e}"));
+            cluster_timing(&cluster, &machine)
+        };
+        let timings: Vec<(usize, ClusterTiming)> =
+            shard_counts.iter().map(|&n| (n, time_at(n))).collect();
+        // Speedup is always vs the true 1-shard run: reuse it from the sweep
+        // when present, derive it otherwise (so `--shards 4,8` stays honest).
+        let base_cycles = timings
+            .iter()
+            .find(|(n, _)| *n == 1)
+            .map(|(_, t)| t.total_cycles())
+            .unwrap_or_else(|| time_at(1).total_cycles());
+        for (n, t) in timings {
+            let total = t.total_cycles();
+            let util = t.shard_utilization();
+            rows.push(ClusterRow {
+                schedule: label.to_string(),
+                shards: n,
+                total_cycles: total,
+                sync_cycles: t.sync_cycles,
+                speedup: base_cycles as f64 / total.max(1) as f64,
+                sync_fraction: t.sync_fraction(),
+                mean_shard_util: util.iter().sum::<f64>() / util.len().max(1) as f64,
+            });
+        }
+    }
+    ClusterReport { machine: machine.name.clone(), rows }
+}
+
+/// Full-size sweep (the paper's ResNet-18/CIFAR-100 workload) at the
+/// default shard counts.
+pub fn generate_default() -> ClusterReport {
+    generate(&resnet18_cifar(100), &DEFAULT_SHARD_COUNTS)
+}
+
+impl ClusterReport {
+    fn cells(&self) -> Vec<Vec<String>> {
+        self.rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.schedule.clone(),
+                    r.shards.to_string(),
+                    r.total_cycles.to_string(),
+                    r.sync_cycles.to_string(),
+                    format!("{:.2}", r.speedup),
+                    format!("{:.4}", r.sync_fraction),
+                    format!("{:.2}", r.mean_shard_util),
+                ]
+            })
+            .collect()
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut out = format!(
+            "# Cluster sharding — ResNet-18 strong scaling ({} shard cores)\n\n",
+            self.machine
+        );
+        out.push_str(&super::md_table(
+            &["schedule", "shards", "total cycles", "sync cycles", "speedup", "sync frac", "shard util"],
+            &self.cells(),
+        ));
+        out.push_str(
+            "\nSpeedup is vs the 1-shard run of the same schedule. Sub-linear scaling \
+             separates into the replicated per-pixel work (im2col + activation packing \
+             runs on every shard) and the modeled all-gather (`sync frac`, charged \
+             against the per-core AXI link).\n",
+        );
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        super::csv(
+            &[
+                "schedule",
+                "shards",
+                "total_cycles",
+                "sync_cycles",
+                "speedup",
+                "sync_fraction",
+                "mean_shard_util",
+            ],
+            &self.cells(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::demo_net;
+
+    #[test]
+    fn scaling_rows_improve_with_shards_on_the_demo_net() {
+        let rep = generate(&demo_net(), &[1, 2, 4]);
+        assert_eq!(rep.rows.len(), 9, "3 schedules × 3 shard counts");
+        for chunk in rep.rows.chunks(3) {
+            assert_eq!(chunk[0].shards, 1);
+            assert!((chunk[0].speedup - 1.0).abs() < 1e-12, "1-shard speedup is 1.0");
+            assert_eq!(chunk[0].sync_cycles, 0, "no all-gather on one core");
+            assert!(
+                chunk[1].total_cycles < chunk[0].total_cycles,
+                "{}: 2 shards must beat 1 ({} vs {})",
+                chunk[1].schedule,
+                chunk[1].total_cycles,
+                chunk[0].total_cycles
+            );
+            assert!(
+                chunk[2].total_cycles < chunk[1].total_cycles,
+                "{}: 4 shards must beat 2 ({} vs {})",
+                chunk[2].schedule,
+                chunk[2].total_cycles,
+                chunk[1].total_cycles
+            );
+            assert!(chunk[2].sync_fraction > 0.0 && chunk[2].sync_fraction < 0.5);
+        }
+        let md = rep.markdown();
+        assert!(md.contains("strong scaling"));
+        assert!(rep.csv().lines().count() == 10);
+    }
+}

@@ -9,10 +9,12 @@
 //! | Fig. 5 | [`table2`] (`fig5_markdown`) | per-lane area breakdown |
 //! | headline claims | [`summary`] | 5.7×/3.5× speedups, 2.3×/1.9× lane ratios |
 //! | — (beyond the paper) | [`mixed`] | per-layer precision schedule sweep: uniform int8 vs uniform 2-bit vs mixed |
+//! | — (beyond the paper) | [`cluster`] | tensor-parallel strong scaling: ResNet-18 latency at 1/2/4/8 shard cores, with the all-gather sync fraction |
 //!
 //! Every generator returns its data structure (for tests and benches) and can
 //! render markdown + CSV under `artifacts/reports/`.
 
+pub mod cluster;
 pub mod fig3;
 pub mod fig4;
 pub mod mixed;

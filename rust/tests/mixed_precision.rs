@@ -156,7 +156,7 @@ fn mixed_resnet18_serves_between_uniform_baselines_via_coordinator() {
     cfg.batch_timeout = Duration::from_millis(1);
     let coord = Coordinator::start(cfg);
     let get = |id: u64, sched: Option<PrecisionMap>| {
-        let rx = coord.submit(InferenceRequest { id, input: None, schedule: sched }).unwrap();
+        let rx = coord.submit(InferenceRequest { id, input: None, schedule: sched, shards: None }).unwrap();
         rx.recv_timeout(Duration::from_secs(600)).unwrap()
     };
     let int8 = get(0, None); // deployment default: uniform int8
@@ -190,7 +190,7 @@ fn mixed_schedule_functional_inference_produces_real_logits() {
     let input = vec![200u8; 32 * 32 * 3];
     let get = |id: u64, sched: Option<PrecisionMap>| {
         let rx = coord
-            .submit(InferenceRequest { id, input: Some(input.clone()), schedule: sched })
+            .submit(InferenceRequest { id, input: Some(input.clone()), schedule: sched, shards: None })
             .unwrap();
         rx.recv_timeout(Duration::from_secs(300)).unwrap()
     };
