@@ -9,11 +9,11 @@
 
 use quark::arch::MachineConfig;
 use quark::nn::model::{ModelRunner, Precision};
-use quark::nn::resnet::resnet18_cifar;
+use quark::nn::zoo;
 use quark::sim::{Sim, SimMode};
 
 fn run(cfg: MachineConfig, precision: Precision, full: bool) -> (Vec<quark::nn::LayerReport>, f64) {
-    let net = resnet18_cifar(100);
+    let net = zoo::model("resnet18-cifar@100").expect("registry entry");
     let mut sim = Sim::new(cfg);
     // `Full` executes every instruction functionally (data really flows);
     // TimingOnly produces identical cycle counts (asserted in the tests).

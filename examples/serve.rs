@@ -30,7 +30,7 @@ fn main() {
     let rxs: Vec<_> = (0..n)
         .map(|id| {
             coord
-                .submit(InferenceRequest { id, input: None, schedule: None, shards: None })
+                .submit(InferenceRequest { id, input: None, net: None, schedule: None, shards: None })
                 .expect("queue has room")
         })
         .collect();
@@ -67,7 +67,7 @@ fn main() {
     let input_b = vec![200u8; 32 * 32 * 3];
     for (label, input) in [("zeros", input_a), ("bright", input_b)] {
         let rx = coord
-            .submit(InferenceRequest { id: 1000, input: Some(input), schedule: None, shards: None })
+            .submit(InferenceRequest { id: 1000, input: Some(input), net: None, schedule: None, shards: None })
             .expect("queue has room");
         let r = rx.recv().unwrap();
         println!(

@@ -15,17 +15,12 @@
 
 use std::time::Instant;
 
-use quark::nn::resnet::resnet18_cifar;
-use quark::nn::NetLayer;
+use quark::nn::zoo;
 use quark::report::cluster::{generate, DEFAULT_SHARD_COUNTS};
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
-    let net: Vec<NetLayer> = if fast {
-        resnet18_cifar(100).into_iter().take(8).collect()
-    } else {
-        resnet18_cifar(100)
-    };
+    let net = zoo::model_profile("resnet18-cifar@100", fast).expect("registry entry");
 
     println!(
         "== cluster strong scaling, ResNet-18{} at {:?} shard cores ==",

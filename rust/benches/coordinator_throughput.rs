@@ -20,7 +20,7 @@ fn per_request_sim_baseline(n: u64) -> f64 {
     for _ in 0..n {
         let mut sim = Sim::new(cfg.machine.clone());
         sim.set_mode(SimMode::TimingOnly);
-        let run = ModelRunner::run_scheduled(&mut sim, &cfg.net, &cfg.schedule, None);
+        let run = ModelRunner::run_scheduled(&mut sim, cfg.default_model(), &cfg.schedule, None);
         sink += run.reports.iter().map(|r| r.run.cycles).sum::<u64>();
     }
     assert!(sink > 0);
@@ -36,13 +36,13 @@ fn run(workers: usize, batch: usize, n: u64) -> (f64, f64, f64) {
     let coord = Coordinator::start(cfg);
     // Warm the timing cache so the sweep measures the steady state.
     coord
-        .submit(InferenceRequest { id: u64::MAX, input: None, schedule: None, shards: None })
+        .submit(InferenceRequest { id: u64::MAX, input: None, net: None, schedule: None, shards: None })
         .unwrap()
         .recv()
         .unwrap();
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
-        .map(|id| coord.submit(InferenceRequest { id, input: None, schedule: None, shards: None }).unwrap())
+        .map(|id| coord.submit(InferenceRequest { id, input: None, net: None, schedule: None, shards: None }).unwrap())
         .collect();
     let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
     let wall = t0.elapsed().as_secs_f64();

@@ -21,8 +21,8 @@ use std::time::Instant;
 
 use quark::arch::MachineConfig;
 use quark::nn::model::{ModelRunner, Precision, PrecisionMap};
-use quark::nn::resnet::{resnet18_cifar, resnet18_mixed_schedule};
-use quark::nn::NetLayer;
+use quark::nn::resnet::resnet18_mixed_schedule;
+use quark::nn::{zoo, NetGraph};
 use quark::program::compile;
 use quark::sim::{Sim, SimMode};
 
@@ -59,7 +59,7 @@ fn argmax(v: &[u8]) -> usize {
 }
 
 /// PR-1/PR-2 warm path: fresh Full-mode kernel emission per request.
-fn baseline_rps(net: &[NetLayer], sched: &PrecisionMap, input: &[u8], n: usize) -> (f64, usize) {
+fn baseline_rps(net: &NetGraph, sched: &PrecisionMap, input: &[u8], n: usize) -> (f64, usize) {
     let mut core = Core::new();
     core.sim.set_mode(SimMode::Full);
     let mut sink = 0usize;
@@ -73,7 +73,7 @@ fn baseline_rps(net: &[NetLayer], sched: &PrecisionMap, input: &[u8], n: usize) 
 }
 
 /// Compile-once warm path: functional replay of the cached program.
-fn replay_rps(net: &[NetLayer], sched: &PrecisionMap, input: &[u8], n: usize) -> (f64, usize, f64) {
+fn replay_rps(net: &NetGraph, sched: &PrecisionMap, input: &[u8], n: usize) -> (f64, usize, f64) {
     let t0 = Instant::now();
     let prog = compile(net, &MachineConfig::quark(4), sched).expect("valid schedule");
     let compile_s = t0.elapsed().as_secs_f64();
@@ -95,11 +95,7 @@ fn replay_rps(net: &[NetLayer], sched: &PrecisionMap, input: &[u8], n: usize) ->
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
-    let net: Vec<NetLayer> = if fast {
-        resnet18_cifar(100).into_iter().take(8).collect()
-    } else {
-        resnet18_cifar(100)
-    };
+    let net = zoo::model_profile("resnet18-cifar@100", fast).expect("registry entry");
     let input = input_bytes();
     let w2a2 = PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
     let mixed = resnet18_mixed_schedule(&net);

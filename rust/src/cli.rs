@@ -1,36 +1,49 @@
 //! Hand-rolled CLI (no clap in this offline environment).
 //!
 //! ```text
-//! repro report <fig3|fig4|mixed|cluster|table1|table2|fig5|summary|all> [--fast]
+//! repro report <fig3|fig4|mixed|cluster|table1|table2|fig5|summary|all>
+//!              [--net <spec>] [--fast]
 //! repro simulate --kernel <conv2d|gemm> --precision <fp32|int8|w1a1|w2a2|w2a2-novbp>
 //!                [--machine <ara-4l|quark-4l|quark-8l>] [--size N] [--channels C]
-//! repro program [--precision <spec>] [--machine <ara-4l|quark-4l|quark-8l>] [--fast]
-//! repro cluster [--shards 1,2,4,8] [--fast]
+//! repro program [--net <spec>] [--precision <spec>]
+//!               [--machine <ara-4l|quark-4l|quark-8l>] [--fast]
+//! repro cluster [--net <spec>] [--shards 1,2,4,8] [--fast]
+//! repro models
 //! repro crosscheck [--artifact artifacts/qgemm.hlo.txt] [--seed S]
 //! repro serve [--addr 127.0.0.1:7070] [--workers N] [--batch B] [--queue Q]
 //!             [--machine <ara-4l|quark-4l|quark-8l>] [--shards N]
+//!             [--models <spec,spec,…>] [--fast]
 //!             [--precision <spec>]      e.g. --precision "w2a2;c1=int8;fc=int8"
 //! repro phys
 //! ```
 //!
-//! `repro program` demonstrates the compile-once / run-many split on
-//! ResNet-18 (truncated with `--fast`): it compiles a
-//! [`crate::program::CompiledProgram`], prints the artifact's vital signs
-//! (trace length, image size, memory footprint), then cross-checks a timed
-//! replay against one fresh kernel emission — cycle counts must agree
-//! exactly — and reports the wall-clock ratio.
+//! Workloads are **zoo model specs** (`name[@classes]` — see
+//! [`crate::nn::zoo`]; `repro models` lists the registry). `--net` selects
+//! the graph a report/program/cluster run uses (default
+//! `resnet18-cifar@100`, the paper's workload), and `--fast` applies the
+//! registry's per-model truncation profile — one implementation here,
+//! replacing the per-command `.take(8)` copies this file used to carry.
+//!
+//! `repro program` demonstrates the compile-once / run-many split: it
+//! compiles a [`crate::program::CompiledProgram`], prints the artifact's
+//! vital signs (trace length, image size, memory footprint), then
+//! cross-checks a timed replay against one fresh kernel emission — cycle
+//! counts must agree exactly — and reports the wall-clock ratio.
 //!
 //! `repro cluster` (alias `repro report cluster`) runs the tensor-parallel
-//! strong-scaling sweep ([`crate::report::cluster`]): ResNet-18 modeled
-//! latency at 1/2/4/8 shard cores for w2a2 / w1a1 / mixed, with the
-//! all-gather sync fraction. `serve --shards N` makes the coordinator
-//! partition every default inference across N simulated cores (clients can
-//! override per request with the `shards=` wire field).
+//! strong-scaling sweep ([`crate::report::cluster`]): modeled latency at
+//! 1/2/4/8 shard cores for w2a2 / w1a1 / mixed, with the all-gather sync
+//! fraction. `serve --shards N` makes the coordinator partition every
+//! default inference across N simulated cores (clients can override per
+//! request with the `shards=` wire field).
 //!
-//! The serve `--precision` spec sets the deployment's default precision
-//! schedule (`default[;layer=precision…]` — see
-//! [`crate::nn::model::PrecisionMap::parse`]); clients can still override it
-//! per request with the `prec=` wire field (`docs/serving.md`).
+//! `serve --models a,b,c` deploys several zoo models behind one
+//! coordinator — the first is the default; clients pick per request with
+//! the `net=` wire field and list deployments with `MODELS`. The serve
+//! `--precision` spec sets the deployment's default precision schedule
+//! (`default[;layer=precision…]` — see
+//! [`crate::nn::model::PrecisionMap::parse`]); clients can still override
+//! it per request with the `prec=` wire field (`docs/serving.md`).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -41,8 +54,19 @@ use crate::error::{Context, Result};
 use crate::arch::MachineConfig;
 use crate::coordinator::{server, Coordinator, CoordinatorConfig};
 use crate::nn::model::{Precision, PrecisionMap};
-use crate::nn::resnet::resnet18_cifar;
+use crate::nn::{zoo, NetGraph};
 use crate::report;
+
+/// Resolve the workload of a report/program/cluster command: the `--net`
+/// model spec (default: the paper's ResNet-18/CIFAR-100) under the
+/// registry's `--fast` truncation profile when requested.
+fn net_from_flags(flags: &HashMap<String, String>) -> Result<NetGraph> {
+    let spec = flags.get("net").map(|s| s.as_str()).unwrap_or("resnet18-cifar@100");
+    match zoo::model_profile(spec, flags.contains_key("fast")) {
+        Ok(net) => Ok(net),
+        Err(e) => bail!("bad --net: {e}"),
+    }
+}
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -83,6 +107,22 @@ pub fn main() -> Result<()> {
         Some("simulate") => cmd_simulate(&flags),
         Some("program") => cmd_program(&flags),
         Some("cluster") => cmd_cluster(&flags),
+        Some("models") => {
+            println!("{:<16} {:>8} {:>7} {:>6}  about", "name", "classes", "layers", "fast");
+            for e in zoo::entries() {
+                let full = zoo::model(e.name).expect("registry entries are valid");
+                println!(
+                    "{:<16} {:>8} {:>7} {:>6}  {}",
+                    e.name,
+                    e.default_classes,
+                    full.layers().len(),
+                    e.fast_layers,
+                    e.about
+                );
+            }
+            println!("\nspec syntax: name[@classes]   (e.g. resnet18-cifar@10)");
+            Ok(())
+        }
         Some("crosscheck") => cmd_crosscheck(&flags),
         Some("serve") => cmd_serve(&flags),
         Some("phys") => {
@@ -93,7 +133,7 @@ pub fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: repro <report|simulate|program|cluster|crosscheck|serve|phys> …\n\
+                "usage: repro <report|simulate|program|cluster|models|crosscheck|serve|phys> …\n\
                  see rust/src/cli.rs or README.md for full syntax"
             );
             Ok(())
@@ -103,14 +143,17 @@ pub fn main() -> Result<()> {
 
 fn cmd_report(which: &str, flags: &HashMap<String, String>) -> Result<()> {
     let fast = flags.contains_key("fast");
-    let net = if fast {
-        // Truncated graph for quick smoke runs.
-        resnet18_cifar(100).into_iter().take(8).collect()
-    } else {
-        resnet18_cifar(100)
-    };
+    let net = net_from_flags(flags)?;
+    // Kernel-level / physical reports have no model graph: say so rather
+    // than silently ignoring an explicit --net.
+    if flags.contains_key("net") && matches!(which, "fig4" | "table1" | "table2" | "fig5") {
+        eprintln!("note: report {which} is model-independent; --net is ignored");
+    }
     let run_fig3 = || {
-        eprintln!("[fig3] simulating ResNet-18 at 5 precisions (this is the long one)…");
+        eprintln!(
+            "[fig3] simulating {} at 5 precisions (this is the long one)…",
+            net.name()
+        );
         report::fig3::generate(&net)
     };
     let run_fig4 = || {
@@ -122,7 +165,10 @@ fn cmd_report(which: &str, flags: &HashMap<String, String>) -> Result<()> {
         }
     };
     let run_mixed = || {
-        eprintln!("[mixed] ResNet-18 schedule sweep: uniform int8 / uniform w2a2 / mixed…");
+        eprintln!(
+            "[mixed] {} schedule sweep: uniform int8 / uniform w2a2 / mixed…",
+            net.name()
+        );
         report::mixed::generate(&net)
     };
     match which {
@@ -282,11 +328,7 @@ fn cmd_program(flags: &HashMap<String, String>) -> Result<()> {
         if schedule.default_precision() == Precision::Fp32 { "ara-4l" } else { "quark-4l" };
     let machine =
         machine_by_name(flags.get("machine").map(|s| s.as_str()).unwrap_or(default_machine))?;
-    let net: Vec<_> = if flags.contains_key("fast") {
-        resnet18_cifar(100).into_iter().take(8).collect()
-    } else {
-        resnet18_cifar(100)
-    };
+    let net = net_from_flags(flags)?;
 
     let t0 = Instant::now();
     let prog = match crate::program::compile(&net, &machine, &schedule) {
@@ -294,6 +336,7 @@ fn cmd_program(flags: &HashMap<String, String>) -> Result<()> {
         Err(e) => bail!("cannot compile schedule for this deployment: {e}"),
     };
     let compile_s = t0.elapsed().as_secs_f64();
+    println!("model          : {}", prog.model());
     println!("machine        : {}", machine.name);
     println!("schedule       : {}", schedule.spec());
     println!("layers         : {}", prog.layers().len());
@@ -346,12 +389,8 @@ fn cmd_cluster(flags: &HashMap<String, String>) -> Result<()> {
         }
         None => crate::report::cluster::DEFAULT_SHARD_COUNTS.to_vec(),
     };
-    let net: Vec<_> = if flags.contains_key("fast") {
-        resnet18_cifar(100).into_iter().take(8).collect()
-    } else {
-        resnet18_cifar(100)
-    };
-    eprintln!("[cluster] strong-scaling sweep at {counts:?} shard cores…");
+    let net = net_from_flags(flags)?;
+    eprintln!("[cluster] {} strong-scaling sweep at {counts:?} shard cores…", net.name());
     let rep = report::cluster::generate(&net, &counts);
     println!("{}", rep.markdown());
     report::write_report("cluster.md", &rep.markdown())?;
@@ -403,15 +442,34 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(s) = flags.get("shards") {
         cfg.shards = s.parse().with_context(|| format!("bad --shards {s:?}"))?;
     }
-    if let Err(e) = cfg
-        .schedule
-        .validate(&cfg.net)
-        .and_then(|_| cfg.schedule.validate_machine(&cfg.net, &cfg.machine))
-    {
-        bail!("bad --precision for this deployment: {e}");
+    // Deployed model set: comma-separated zoo specs, first = default. The
+    // registry --fast profile applies to every deployed model.
+    let fast = flags.contains_key("fast");
+    if let Some(list) = flags.get("models") {
+        let mut models: Vec<Arc<NetGraph>> = Vec::new();
+        for spec in list.split(',') {
+            let g = match zoo::model_profile(spec, fast) {
+                Ok(g) => g,
+                Err(e) => bail!("bad --models entry {spec:?}: {e}"),
+            };
+            if models.iter().any(|m| m.name() == g.name()) {
+                bail!("duplicate model {:?} in --models", g.name());
+            }
+            models.push(Arc::new(g));
+        }
+        cfg.models = models;
     }
-    if let Err(e) = crate::coordinator::validate_shards(cfg.shards, &cfg.schedule, &cfg.net) {
-        bail!("bad --shards for this deployment: {e}");
+    for model in &cfg.models {
+        if let Err(e) = cfg
+            .schedule
+            .validate(model)
+            .and_then(|_| cfg.schedule.validate_machine(model, &cfg.machine))
+        {
+            bail!("bad --precision for model {:?}: {e}", model.name());
+        }
+        if let Err(e) = crate::coordinator::validate_shards(cfg.shards, &cfg.schedule, model) {
+            bail!("bad --shards for model {:?}: {e}", model.name());
+        }
     }
     let coord = Arc::new(Coordinator::start(cfg));
     server::serve(coord, &addr)

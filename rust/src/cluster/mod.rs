@@ -48,7 +48,7 @@ use std::time::Instant;
 
 use crate::arch::MachineConfig;
 use crate::nn::model::{PrecisionMap, ShardPlan};
-use crate::nn::NetLayer;
+use crate::nn::NetGraph;
 use crate::program::{compile_shard, CompiledProgram, ShardSeg};
 use crate::sim::{Sim, SimMode};
 
@@ -114,7 +114,7 @@ impl ClusterProgram {
 /// transient memory: each in-flight `ProgramBuilder` owns its own recording
 /// arena.)
 pub fn compile_cluster(
-    net: &[NetLayer],
+    net: &NetGraph,
     machine: &MachineConfig,
     schedule: &PrecisionMap,
     shards: usize,

@@ -53,13 +53,21 @@
 //!   program cache; reported cycles follow the cluster model (`max` shard
 //!   compute + modeled all-gather sync), and the logits are bit-identical
 //!   to single-core serving.
+//! * **Multi-model serving.** The coordinator deploys a *set* of
+//!   [`NetGraph`]s ([`CoordinatorConfig::models`], CLI `serve --models
+//!   a,b,c`) — named zoo models ([`crate::nn::zoo`]), the first being the
+//!   default. A request selects its model by name (wire: the `net=` field
+//!   of `INFER`; the `MODELS` command lists the deployments); unknown names
+//!   are rejected at submission. Every cache key (`DeployKey`) carries the
+//!   graph fingerprint, so each model owns its own timing entries and
+//!   pinned default programs, and `STATS` counts served requests per model.
 //! * **Backpressure + metrics.** The queue is bounded
 //!   ([`CoordinatorConfig::max_queue`]); `submit` rejects with
 //!   [`SubmitError::Busy`] when full. [`Coordinator::stats`] exposes queue
-//!   depth, served/rejected counts, cache hit/miss counts (with program
-//!   compiles attributed per worker), cluster sync-cycle and shard-core
-//!   utilization counters, latency percentiles over a sliding window, and
-//!   per-worker utilization.
+//!   depth, served/rejected counts (total and per model), cache hit/miss
+//!   counts (with program compiles attributed per worker), cluster
+//!   sync-cycle and shard-core utilization counters, latency percentiles
+//!   over a sliding window, and per-worker utilization.
 
 pub mod golden;
 pub mod server;
@@ -72,7 +80,7 @@ use std::time::{Duration, Instant};
 use crate::arch::MachineConfig;
 use crate::cluster::{cluster_timing, ClusterCores, ClusterProgram};
 use crate::nn::model::{Precision, PrecisionMap, ShardPlan};
-use crate::nn::{LayerKind, NetLayer};
+use crate::nn::{zoo, NetGraph};
 use crate::program::{compile, compile_shard, CompiledProgram};
 use crate::sim::{Sim, SimMode};
 
@@ -88,6 +96,11 @@ pub struct InferenceRequest {
     /// Input activation codes (u8, up to 32·32·3 bytes; shorter inputs are
     /// zero-padded). `None` requests timing only — no functional execution.
     pub input: Option<Vec<u8>>,
+    /// Deployed model this request targets, by [`NetGraph::name`] (wire:
+    /// the `net=` field of `INFER`); `None` uses the deployment's default
+    /// model (the first entry of [`CoordinatorConfig::models`]). Unknown
+    /// names are rejected at submission ([`SubmitError::Invalid`]).
+    pub net: Option<String>,
     /// Per-request precision schedule; `None` uses the deployment default
     /// ([`CoordinatorConfig::schedule`]).
     pub schedule: Option<PrecisionMap>,
@@ -117,6 +130,9 @@ pub struct InferenceResponse {
     /// Label of the schedule this request ran under
     /// ([`PrecisionMap::label`]; wire field `prec=`).
     pub precision: String,
+    /// Name of the model this request ran on ([`NetGraph::name`]; wire
+    /// field `net=`).
+    pub model: String,
     /// Shard cores this request's inference was partitioned across (1 =
     /// classic single-core serving).
     pub shards: usize,
@@ -136,9 +152,10 @@ pub struct InferenceResponse {
 pub enum SubmitError {
     /// The request queue is at capacity; back off and retry (wire: `BUSY`).
     Busy { depth: usize },
-    /// The request's precision schedule is invalid for this deployment
-    /// (unknown layer, fp32/integer mix, or unsupported by the machine).
-    /// Not retryable as-is (wire: `ERR`).
+    /// The request cannot run on this deployment: unknown model name, or
+    /// an invalid precision schedule / shard count for the selected model
+    /// (unknown layer, fp32/integer mix, unsupported by the machine, too
+    /// few channels). Not retryable as-is (wire: `ERR invalid request:`).
     Invalid { reason: String },
 }
 
@@ -146,7 +163,7 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::Busy { depth } => write!(f, "queue full (depth {depth})"),
-            SubmitError::Invalid { reason } => write!(f, "invalid schedule: {reason}"),
+            SubmitError::Invalid { reason } => write!(f, "invalid request: {reason}"),
         }
     }
 }
@@ -171,12 +188,15 @@ pub struct CoordinatorConfig {
     /// Default tensor-parallel shard count for requests that do not carry
     /// their own (`serve --shards N`; 1 = single-core serving).
     pub shards: usize,
-    /// Model graph to serve.
-    pub net: Arc<Vec<NetLayer>>,
+    /// Deployed models, each a validated [`NetGraph`] with a unique name.
+    /// The first entry is the default for requests without `net=`
+    /// (`serve --models a,b,c`).
+    pub models: Vec<Arc<NetGraph>>,
 }
 
 impl CoordinatorConfig {
-    /// A small default: Quark-4L, 2-bit, a reduced net for snappy serving.
+    /// A small default: Quark-4L, 2-bit, the zoo's `tiny` net for snappy
+    /// serving.
     pub fn demo() -> Self {
         CoordinatorConfig {
             machine: MachineConfig::quark(4),
@@ -190,38 +210,46 @@ impl CoordinatorConfig {
             batch_timeout: Duration::from_millis(20),
             max_queue: 256,
             shards: 1,
-            net: Arc::new(demo_net()),
+            models: vec![Arc::new(demo_net())],
+        }
+    }
+
+    /// The deployment's default model (the first of
+    /// [`CoordinatorConfig::models`]).
+    pub fn default_model(&self) -> &Arc<NetGraph> {
+        &self.models[0]
+    }
+
+    /// Index of the deployed model a request's `net` field selects;
+    /// `Err` names the unknown model.
+    fn model_index(&self, net: Option<&str>) -> Result<usize, String> {
+        match net {
+            None => Ok(0),
+            Some(name) => self
+                .models
+                .iter()
+                .position(|m| m.name() == name)
+                .ok_or_else(|| {
+                    format!(
+                        "unknown model {name:?} (deployed: {})",
+                        self.models.iter().map(|m| m.name()).collect::<Vec<_>>().join(", ")
+                    )
+                }),
         }
     }
 }
 
-/// A 4-conv CIFAR-scale classifier for serving demos (full ResNet-18 per
-/// request is a multi-second simulation; this keeps the serving path
-/// interactive while exercising every kernel).
-pub fn demo_net() -> Vec<NetLayer> {
-    use crate::kernels::Conv2dParams;
-    use crate::nn::ConvLayer;
-    let conv = |name: &str, h: usize, cin: usize, cout: usize, stride: usize, q: bool| ConvLayer {
-        name: name.into(),
-        params: Conv2dParams { h, w: h, c_in: cin, c_out: cout, kh: 3, kw: 3, stride, pad: 1 },
-        relu: true,
-        residual: false,
-        quantized: q,
-    };
-    vec![
-        NetLayer { kind: LayerKind::Conv(conv("stem", 32, 3, 64, 1, false)), input: 0, residual_from: None },
-        NetLayer { kind: LayerKind::Conv(conv("c1", 32, 64, 64, 2, true)), input: 1, residual_from: None },
-        NetLayer { kind: LayerKind::Conv(conv("c2", 16, 64, 128, 2, true)), input: 2, residual_from: None },
-        NetLayer { kind: LayerKind::Conv(conv("c3", 8, 128, 128, 2, true)), input: 3, residual_from: None },
-        NetLayer { kind: LayerKind::AvgPool { h: 4, w: 4, c: 128 }, input: 4, residual_from: None },
-        NetLayer { kind: LayerKind::Fc { k: 128, n: 100, name: "fc".into() }, input: 5, residual_from: None },
-    ]
+/// The serving demo model: the zoo's `tiny` graph (4 convs + pool + FC —
+/// full ResNet-18 per request is a multi-second simulation; this keeps the
+/// serving path interactive while exercising every kernel).
+pub fn demo_net() -> NetGraph {
+    zoo::model("tiny").expect("the tiny zoo entry is always valid")
 }
 
-// ---- structural fingerprints (cache keys; defined next to the artifact
-//      they key, re-exported here for the serving-layer API surface) ----
+// ---- machine fingerprint (cache-key half; the network half is
+//      [`NetGraph::fingerprint`]) ----
 
-pub use crate::program::{machine_fingerprint, net_fingerprint};
+pub use crate::program::machine_fingerprint;
 
 /// Cache key shared by the timing cache and the program cache: the
 /// deployment fingerprints plus the (canonical-form) precision schedule and
@@ -252,10 +280,11 @@ struct TimingEntry {
 /// The compiled-program cache: bounded FIFO with the deployment-default
 /// entries pinned. When full, the *oldest non-default* entry is evicted to
 /// admit the newcomer (clients cycling throwaway `prec=`/`shards=`
-/// combinations therefore churn among themselves and can never evict the
-/// deployment's own warm path). Default-deployment inserts always succeed —
-/// they are at most `MAX_SHARDS` programs, so the cache is bounded by
-/// `cap + MAX_SHARDS` entries.
+/// combinations therefore churn among themselves and can never evict a
+/// deployed model's own warm path). Default-schedule inserts always
+/// succeed — they are at most `models · MAX_SHARDS` programs (one default
+/// per deployed model), so the cache is bounded by
+/// `cap + models · MAX_SHARDS` entries.
 struct ProgramCache {
     entries: HashMap<ProgKey, Arc<CompiledProgram>>,
     /// Insertion order of the evictable (non-pinned) keys.
@@ -338,6 +367,11 @@ impl LatWindow {
 pub struct CoordStats {
     pub served: u64,
     pub rejected: u64,
+    /// Served requests per deployed model, in deployment order. The total
+    /// and per-model counters are separate relaxed atomics, so a snapshot
+    /// taken while requests are in flight may be off by the requests
+    /// currently completing; `Σ counts == served` once responses drain.
+    pub served_by_model: Vec<(String, u64)>,
     pub queue_depth: usize,
     pub workers: usize,
     /// Timing-cache hit/miss counts (one resolution per request).
@@ -394,6 +428,8 @@ const MAX_PROGRAM_ENTRIES: usize = 16;
 
 struct Queued {
     req: InferenceRequest,
+    /// Index into [`CoordinatorConfig::models`], resolved at submission.
+    model_idx: usize,
     enqueued: Instant,
     reply: mpsc::Sender<InferenceResponse>,
 }
@@ -405,6 +441,9 @@ struct Shared {
     batch_counter: AtomicU64,
     served: AtomicU64,
     rejected: AtomicU64,
+    /// Served requests per deployed model (index-aligned with
+    /// [`CoordinatorConfig::models`]).
+    served_by_model: Vec<AtomicU64>,
     timing_cache: Mutex<HashMap<DeployKey, TimingEntry>>,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
@@ -436,15 +475,22 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start serving. Panics if the deployment's default schedule or shard
-    /// count is invalid for its net/machine (misconfiguration, not a
-    /// runtime condition).
+    /// Start serving. Panics if the model list is empty or duplicated, or
+    /// if the deployment's default schedule or shard count is invalid for
+    /// any deployed model on this machine (misconfiguration, not a runtime
+    /// condition).
     pub fn start(cfg: CoordinatorConfig) -> Self {
-        if let Err(e) = validate_schedule(&cfg.schedule, &cfg.net, &cfg.machine) {
-            panic!("invalid coordinator schedule: {e}");
-        }
-        if let Err(e) = validate_shards(cfg.shards, &cfg.schedule, &cfg.net) {
-            panic!("invalid coordinator shard count: {e}");
+        assert!(!cfg.models.is_empty(), "a coordinator needs at least one deployed model");
+        for (i, model) in cfg.models.iter().enumerate() {
+            if cfg.models[..i].iter().any(|m| m.name() == model.name()) {
+                panic!("duplicate deployed model {:?}", model.name());
+            }
+            if let Err(e) = validate_schedule(&cfg.schedule, model, &cfg.machine) {
+                panic!("invalid coordinator schedule for model {:?}: {e}", model.name());
+            }
+            if let Err(e) = validate_shards(cfg.shards, &cfg.schedule, model) {
+                panic!("invalid coordinator shard count for model {:?}: {e}", model.name());
+            }
         }
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -453,6 +499,7 @@ impl Coordinator {
             batch_counter: AtomicU64::new(0),
             served: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            served_by_model: (0..cfg.models.len()).map(|_| AtomicU64::new(0)).collect(),
             timing_cache: Mutex::new(HashMap::new()),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
@@ -483,14 +530,19 @@ impl Coordinator {
 
     /// Submit a request; returns a receiver for the response,
     /// [`SubmitError::Busy`] when the queue is at capacity, or
-    /// [`SubmitError::Invalid`] when the request's schedule or shard count
-    /// cannot run on this deployment.
+    /// [`SubmitError::Invalid`] when the request names an unknown model or
+    /// its schedule/shard count cannot run on this deployment.
     pub fn submit(
         &self,
         req: InferenceRequest,
     ) -> Result<mpsc::Receiver<InferenceResponse>, SubmitError> {
+        let model_idx = match self.cfg.model_index(req.net.as_deref()) {
+            Ok(i) => i,
+            Err(reason) => return Err(SubmitError::Invalid { reason }),
+        };
+        let model = &self.cfg.models[model_idx];
         if let Some(sched) = &req.schedule {
-            if let Err(reason) = validate_schedule(sched, &self.cfg.net, &self.cfg.machine) {
+            if let Err(reason) = validate_schedule(sched, model, &self.cfg.machine) {
                 return Err(SubmitError::Invalid { reason });
             }
         }
@@ -498,11 +550,12 @@ impl Coordinator {
         // overrides: a request overriding only the schedule still runs at the
         // deployment's shard count (e.g. fp32 on a sharded fp32-capable
         // deployment must be rejected here, not panic a worker). All-default
-        // requests skip the walk — Coordinator::start validated that pair.
+        // requests skip the walk — Coordinator::start validated that pair
+        // against every deployed model.
         if req.shards.is_some() || req.schedule.is_some() {
             let shards = req.shards.unwrap_or(self.cfg.shards);
             let sched = req.schedule.as_ref().unwrap_or(&self.cfg.schedule);
-            if let Err(reason) = validate_shards(shards, sched, &self.cfg.net) {
+            if let Err(reason) = validate_shards(shards, sched, model) {
                 return Err(SubmitError::Invalid { reason });
             }
         }
@@ -514,7 +567,7 @@ impl Coordinator {
             self.shared.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Busy { depth });
         }
-        q.push_back(Queued { req, enqueued: Instant::now(), reply: tx });
+        q.push_back(Queued { req, model_idx, enqueued: Instant::now(), reply: tx });
         drop(q);
         self.shared.available.notify_one();
         Ok(rx)
@@ -539,6 +592,13 @@ impl Coordinator {
         CoordStats {
             served: self.shared.served.load(Ordering::Relaxed),
             rejected: self.shared.rejected.load(Ordering::Relaxed),
+            served_by_model: self
+                .cfg
+                .models
+                .iter()
+                .zip(self.shared.served_by_model.iter())
+                .map(|(m, c)| (m.name().to_string(), c.load(Ordering::Relaxed)))
+                .collect(),
             queue_depth,
             workers: self.cfg.workers,
             cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
@@ -595,23 +655,24 @@ impl Coordinator {
     }
 }
 
-/// Full schedule validation against a deployment: map shape + machine caps.
+/// Full schedule validation against one deployed model: map shape +
+/// machine caps.
 fn validate_schedule(
     sched: &PrecisionMap,
-    net: &[NetLayer],
+    net: &NetGraph,
     machine: &MachineConfig,
 ) -> Result<(), String> {
     sched.validate(net)?;
     sched.validate_machine(net, machine)
 }
 
-/// Shard-count validation against a deployment: bounds, channel counts, and
-/// the integer-only rule ([`ShardPlan`]). The single source of truth for
-/// both the submit path and the CLI's `serve --shards` check.
+/// Shard-count validation against one deployed model: bounds, channel
+/// counts, and the integer-only rule ([`ShardPlan`]). The single source of
+/// truth for both the submit path and the CLI's `serve --shards` check.
 pub(crate) fn validate_shards(
     shards: usize,
     sched: &PrecisionMap,
-    net: &[NetLayer],
+    net: &NetGraph,
 ) -> Result<(), String> {
     if shards == 0 || shards > MAX_SHARDS {
         return Err(format!("shard count {shards} out of range (1\u{2013}{MAX_SHARDS})"));
@@ -690,13 +751,14 @@ fn widen_logits(codes: &[u8]) -> (Vec<f32>, usize) {
 /// functional serving path memoizes — it replays per request — while
 /// timing-only resolutions compile transiently, so probe-only schedules
 /// never pin a trace-sized artifact in server memory. Insertions follow the
-/// [`ProgramCache`] FIFO-eviction policy with the deployment-default
-/// entries pinned. Concurrent misses on one key may compile twice; the
-/// first insert wins — both artifacts are identical (compilation is
-/// deterministic).
+/// [`ProgramCache`] FIFO-eviction policy with every deployed model's
+/// default-schedule entries pinned. Concurrent misses on one key may
+/// compile twice; the first insert wins — both artifacts are identical
+/// (compilation is deterministic).
 fn resolve_program(
     shared: &Shared,
     cfg: &CoordinatorConfig,
+    net: &NetGraph,
     wid: usize,
     key: &ProgKey,
     sched: &PrecisionMap,
@@ -710,12 +772,12 @@ fn resolve_program(
     shared.compile_by_worker[wid].fetch_add(1, Ordering::Relaxed);
     let t0 = Instant::now();
     let prog = Arc::new(if key.deploy.shards > 1 {
-        let plan = ShardPlan::derive(&cfg.net, key.deploy.shards)
+        let plan = ShardPlan::derive(net, key.deploy.shards)
             .expect("shard count was validated at submission");
-        compile_shard(&cfg.net, &cfg.machine, sched, &plan, key.shard)
+        compile_shard(net, &cfg.machine, sched, &plan, key.shard)
             .expect("schedule was validated at submission")
     } else {
-        compile(&cfg.net, &cfg.machine, sched).expect("schedule was validated at submission")
+        compile(net, &cfg.machine, sched).expect("schedule was validated at submission")
     });
     shared.compile_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     if memoize {
@@ -741,6 +803,7 @@ fn resolve_program(
 fn resolve_cluster(
     shared: &Shared,
     cfg: &CoordinatorConfig,
+    net: &NetGraph,
     wid: usize,
     deploy: &DeployKey,
     sched: &PrecisionMap,
@@ -749,7 +812,7 @@ fn resolve_cluster(
     let progs: Vec<Arc<CompiledProgram>> = (0..deploy.shards)
         .map(|shard| {
             let key = ProgKey { deploy: deploy.clone(), shard };
-            resolve_program(shared, cfg, wid, &key, sched, memoize)
+            resolve_program(shared, cfg, net, wid, &key, sched, memoize)
         })
         .collect();
     ClusterProgram::from_shards(progs).expect("per-shard cache entries form one deployment")
@@ -766,7 +829,7 @@ fn resolve_cluster(
 fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
     let mut core = WorkerCore::new(cfg.machine.clone());
     let mut cluster_cores: Option<ClusterCores> = None;
-    let net_fp = net_fingerprint(&cfg.net);
+    let model_fps: Vec<u64> = cfg.models.iter().map(|m| m.fingerprint()).collect();
     let machine_fp = machine_fingerprint(&cfg.machine);
     loop {
         // Claim a batch.
@@ -807,10 +870,15 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
 
         // Serve the batch on the persistent core(s).
         for item in batch {
+            let model = &cfg.models[item.model_idx];
             let sched = item.req.schedule.as_ref().unwrap_or(&cfg.schedule);
             let shards = item.req.shards.unwrap_or(cfg.shards);
-            let key =
-                DeployKey { net_fp, machine_fp, schedule: sched.clone(), shards };
+            let key = DeployKey {
+                net_fp: model_fps[item.model_idx],
+                machine_fp,
+                schedule: sched.clone(),
+                shards,
+            };
             // Resolve the compiled program(s) when this request needs them:
             // it carries input bytes (functional replay), or its timing
             // misses below (TimingOnly replay). Warm timing-only probes
@@ -824,9 +892,9 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
                 (None, None)
             } else if shards == 1 {
                 let pkey = ProgKey { deploy: key.clone(), shard: 0 };
-                (Some(resolve_program(&shared, &cfg, wid, &pkey, sched, memoize)), None)
+                (Some(resolve_program(&shared, &cfg, model, wid, &pkey, sched, memoize)), None)
             } else {
-                (None, Some(resolve_cluster(&shared, &cfg, wid, &key, sched, memoize)))
+                (None, Some(resolve_cluster(&shared, &cfg, model, wid, &key, sched, memoize)))
             };
             // Resolve timing: cache hit is a map lookup, miss is one
             // TimingOnly replay (per shard core, in parallel, for clusters)
@@ -907,12 +975,14 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
                 batch_id,
                 timing_cached,
                 precision: sched.label(),
+                model: model.name().to_string(),
                 shards,
                 sync_cycles,
                 logits,
                 argmax,
             };
             shared.served.fetch_add(1, Ordering::Relaxed);
+            shared.served_by_model[item.model_idx].fetch_add(1, Ordering::Relaxed);
             shared
                 .latencies
                 .lock()
@@ -937,7 +1007,7 @@ mod tests {
         let rxs: Vec<_> = (0..6)
             .map(|i| {
                 coord
-                    .submit(InferenceRequest { id: i, input: None, schedule: None, shards: None })
+                    .submit(InferenceRequest { id: i, input: None, net: None, schedule: None, shards: None })
                     .unwrap()
             })
             .collect();
@@ -974,7 +1044,7 @@ mod tests {
         let mut cycles = Vec::new();
         for i in 0..5u64 {
             let rx = coord
-                .submit(InferenceRequest { id: i, input: None, schedule: None, shards: None })
+                .submit(InferenceRequest { id: i, input: None, net: None, schedule: None, shards: None })
                 .unwrap();
             let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
             cycles.push((r.sim_cycles, r.timing_cached));
@@ -996,10 +1066,10 @@ mod tests {
         let coord = Coordinator::start(cfg);
         let n = 32 * 32 * 3;
         let rx_a = coord
-            .submit(InferenceRequest { id: 0, input: Some(vec![0u8; n]), schedule: None, shards: None })
+            .submit(InferenceRequest { id: 0, input: Some(vec![0u8; n]), net: None, schedule: None, shards: None })
             .unwrap();
         let rx_b = coord
-            .submit(InferenceRequest { id: 1, input: Some(vec![200u8; n]), schedule: None, shards: None })
+            .submit(InferenceRequest { id: 1, input: Some(vec![200u8; n]), net: None, schedule: None, shards: None })
             .unwrap();
         let a = rx_a.recv_timeout(Duration::from_secs(300)).unwrap();
         let b = rx_b.recv_timeout(Duration::from_secs(300)).unwrap();
@@ -1010,7 +1080,7 @@ mod tests {
         assert_ne!(la, lb, "different inputs must produce different logits");
         // Determinism: same input → same logits.
         let rx_c = coord
-            .submit(InferenceRequest { id: 2, input: Some(vec![200u8; n]), schedule: None, shards: None })
+            .submit(InferenceRequest { id: 2, input: Some(vec![200u8; n]), net: None, schedule: None, shards: None })
             .unwrap();
         let c = rx_c.recv_timeout(Duration::from_secs(300)).unwrap();
         assert_eq!(lb, c.logits.unwrap(), "same input must reproduce the same logits");
@@ -1024,7 +1094,7 @@ mod tests {
         cfg.max_queue = 0; // every submission rejects deterministically
         let coord = Coordinator::start(cfg);
         let err = coord
-            .submit(InferenceRequest { id: 9, input: None, schedule: None, shards: None })
+            .submit(InferenceRequest { id: 9, input: None, net: None, schedule: None, shards: None })
             .unwrap_err();
         assert!(matches!(err, SubmitError::Busy { .. }));
         assert_eq!(coord.rejected(), 1);
@@ -1043,6 +1113,7 @@ mod tests {
             .submit(InferenceRequest {
                 id: 0,
                 input: None,
+                net: None,
                 schedule: Some(
                     PrecisionMap::uniform(Precision::Sub {
                         abits: 2,
@@ -1060,6 +1131,7 @@ mod tests {
             .submit(InferenceRequest {
                 id: 1,
                 input: None,
+                net: None,
                 schedule: Some(PrecisionMap::uniform(Precision::Fp32)),
                 shards: None,
             })
@@ -1078,7 +1150,7 @@ mod tests {
         let coord = Coordinator::start(cfg);
         let get = |id: u64, sched: Option<PrecisionMap>| {
             let rx = coord
-                .submit(InferenceRequest { id, input: None, schedule: sched, shards: None })
+                .submit(InferenceRequest { id, input: None, net: None, schedule: sched, shards: None })
                 .unwrap();
             rx.recv_timeout(Duration::from_secs(120)).unwrap()
         };
@@ -1121,7 +1193,7 @@ mod tests {
         let coord = Coordinator::start(cfg);
         let n = 32 * 32 * 3;
         let get = |id: u64, input: Option<Vec<u8>>| {
-            let rx = coord.submit(InferenceRequest { id, input, schedule: None, shards: None }).unwrap();
+            let rx = coord.submit(InferenceRequest { id, input, net: None, schedule: None, shards: None }).unwrap();
             rx.recv_timeout(Duration::from_secs(300)).unwrap()
         };
         // Timing miss: compiles a transient program (timing-only schedules
@@ -1150,36 +1222,41 @@ mod tests {
 
     /// A 2-layer graph small enough to compile/replay in milliseconds —
     /// cache-boundary tests need dozens of distinct deployments.
-    fn tiny_serving_net() -> Vec<NetLayer> {
+    fn tiny_serving_net() -> NetGraph {
         use crate::kernels::Conv2dParams;
-        use crate::nn::ConvLayer;
-        vec![
-            NetLayer {
-                kind: LayerKind::Conv(ConvLayer {
-                    name: "c1".into(),
-                    params: Conv2dParams {
-                        h: 4,
-                        w: 4,
-                        c_in: 16,
-                        c_out: 64,
-                        kh: 1,
-                        kw: 1,
-                        stride: 1,
-                        pad: 0,
-                    },
-                    relu: true,
-                    residual: false,
-                    quantized: true,
-                }),
-                input: 0,
-                residual_from: None,
-            },
-            NetLayer {
-                kind: LayerKind::Fc { k: 64, n: 10, name: "fc".into() },
-                input: 1,
-                residual_from: None,
-            },
-        ]
+        use crate::nn::{ConvLayer, LayerKind, NetLayer};
+        NetGraph::new(
+            "serving-micro@10",
+            10,
+            vec![
+                NetLayer {
+                    kind: LayerKind::Conv(ConvLayer {
+                        name: "c1".into(),
+                        params: Conv2dParams {
+                            h: 4,
+                            w: 4,
+                            c_in: 16,
+                            c_out: 64,
+                            kh: 1,
+                            kw: 1,
+                            stride: 1,
+                            pad: 0,
+                        },
+                        relu: true,
+                        residual: false,
+                        quantized: true,
+                    }),
+                    input: 0,
+                    residual_from: None,
+                },
+                NetLayer {
+                    kind: LayerKind::Fc { k: 4 * 4 * 64, n: 10, name: "fc".into() },
+                    input: 1,
+                    residual_from: None,
+                },
+            ],
+        )
+        .unwrap()
     }
 
     #[test]
@@ -1192,7 +1269,7 @@ mod tests {
         cfg.workers = 1;
         cfg.batch_size = 1;
         cfg.batch_timeout = Duration::from_millis(1);
-        cfg.net = Arc::new(tiny_serving_net());
+        cfg.models = vec![Arc::new(tiny_serving_net())];
         let coord = Coordinator::start(cfg);
         let input = vec![9u8; 4 * 4 * 16];
         let get = |id: u64, sched: Option<PrecisionMap>| {
@@ -1200,6 +1277,7 @@ mod tests {
                 .submit(InferenceRequest {
                     id,
                     input: Some(input.clone()),
+                    net: None,
                     schedule: sched,
                     shards: None,
                 })
@@ -1263,6 +1341,7 @@ mod tests {
                 .submit(InferenceRequest {
                     id,
                     input: Some(input.clone()),
+                    net: None,
                     schedule: None,
                     shards,
                 })
@@ -1308,6 +1387,7 @@ mod tests {
                 .submit(InferenceRequest {
                     id: 0,
                     input: None,
+                    net: None,
                     schedule: None,
                     shards: Some(bad),
                 })
@@ -1316,6 +1396,103 @@ mod tests {
         }
         assert_eq!(coord.rejected(), 0, "Invalid is not backpressure");
         coord.shutdown();
+    }
+
+    #[test]
+    fn multi_model_deployments_serve_and_count_separately() {
+        // Two deployed models: the default `tiny` and the micro test net.
+        // Requests route by name, each model owns its own timing-cache
+        // entry, and STATS counts per model.
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 1;
+        cfg.batch_timeout = Duration::from_millis(1);
+        cfg.models.push(Arc::new(tiny_serving_net()));
+        let coord = Coordinator::start(cfg);
+        let get = |id: u64, net: Option<&str>| {
+            let rx = coord
+                .submit(InferenceRequest {
+                    id,
+                    input: None,
+                    net: net.map(|s| s.to_string()),
+                    schedule: None,
+                    shards: None,
+                })
+                .unwrap();
+            rx.recv_timeout(Duration::from_secs(120)).unwrap()
+        };
+        let default = get(0, None);
+        assert_eq!(default.model, "tiny@100", "no net= selects the first deployment");
+        let named = get(1, Some("tiny@100"));
+        assert_eq!(named.model, "tiny@100");
+        assert!(named.timing_cached, "explicit name shares the default's cache entry");
+        assert_eq!(named.sim_cycles, default.sim_cycles);
+        let micro = get(2, Some("serving-micro@10"));
+        assert_eq!(micro.model, "serving-micro@10");
+        assert!(!micro.timing_cached, "each model owns its own timing entry");
+        assert!(
+            micro.sim_cycles < default.sim_cycles,
+            "the micro net must be far cheaper than tiny ({} vs {})",
+            micro.sim_cycles,
+            default.sim_cycles
+        );
+        let again = get(3, Some("serving-micro@10"));
+        assert!(again.timing_cached);
+        // Unknown model: rejected at submission, not backpressure.
+        let err = coord
+            .submit(InferenceRequest {
+                id: 4,
+                input: None,
+                net: Some("ghost-net".to_string()),
+                schedule: None,
+                shards: None,
+            })
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid { .. }), "{err}");
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        assert_eq!(coord.rejected(), 0);
+        // Per-model serve counts, in deployment order.
+        let s = coord.stats();
+        assert_eq!(
+            s.served_by_model,
+            vec![("tiny@100".to_string(), 2), ("serving-micro@10".to_string(), 2)]
+        );
+        assert_eq!(s.served, 4, "Σ per-model counts == served");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn start_rejects_bad_model_lists() {
+        // Duplicate names are a misconfiguration.
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.models.push(cfg.models[0].clone());
+        assert!(
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| Coordinator::start(cfg)))
+                .is_err(),
+            "duplicate model names must panic at start"
+        );
+        // An empty deployment list too.
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.models.clear();
+        assert!(
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| Coordinator::start(cfg)))
+                .is_err()
+        );
+        // The default schedule must validate against EVERY deployed model:
+        // an override naming a layer only `tiny` has is rejected up front.
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.models.push(Arc::new(zoo::model("mlp").unwrap()));
+        cfg.schedule = PrecisionMap::uniform(Precision::Sub {
+            abits: 2,
+            wbits: 2,
+            use_vbitpack: true,
+        })
+        .with("c3", Precision::Int8);
+        assert!(
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| Coordinator::start(cfg)))
+                .is_err(),
+            "schedule naming a tiny-only layer cannot deploy alongside mlp"
+        );
     }
 
     #[test]

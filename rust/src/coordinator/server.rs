@@ -3,35 +3,41 @@
 //! Protocol (text, one request per line — see `docs/serving.md`):
 //! ```text
 //! PING                      → PONG
-//! STATS                     → STATS served=<n> rejected=<n> queue_depth=<n>
+//! MODELS                    → MODELS n=<count> default=<name> models=<a,b,…>
+//! STATS                     → STATS served=<n> rejected=<n>
+//!                                   by_model=<name>:<n>[,<name>:<n>…]
+//!                                   queue_depth=<n>
 //!                                   workers=<n> cache_hits=<n> cache_misses=<n>
 //!                                   prog_hits=<n> prog_misses=<n>
 //!                                   compile_us=<n> replay_us=<n>
 //!                                   compile_by_worker=<c0,c1,…>
 //!                                   sync_cycles=<n> shard_util=<s0,…|->
 //!                                   p50_us=<n> p95_us=<n> p99_us=<n> util=<u0,u1,…>
-//! INFER <id> [prec=<spec>] [shards=<n>] [<b0,b1,...>]
+//! INFER <id> [net=<name>] [prec=<spec>] [shards=<n>] [<b0,b1,...>]
 //!                           → OK <id> cycles=<c> device_us=<t> worker=<w>
 //!                                   batch=<b> cached=<0|1> prec=<label>
-//!                                   shards=<n> sync_cycles=<s>
+//!                                   net=<name> shards=<n> sync_cycles=<s>
 //!                             with input bytes: plus ` argmax=<k>
 //!                             logits=<v0,v1,…>` — the bytes are run through
 //!                             the functional executor and the real outputs
 //!                             returned
 //! QUIT                      → closes the connection
 //! ```
-//! The optional `prec=` field is a [`PrecisionMap`] spec
-//! (`default[;layer=precision…]`, e.g. `prec=int8` or
-//! `prec=w2a2;c1=int8;fc=int8`) selecting a per-request precision schedule;
-//! without it the deployment default applies. The optional `shards=` field
-//! selects a tensor-parallel shard count ([`crate::cluster`]): the inference
-//! is partitioned over that many simulated cores, `cycles=` reports the
-//! cluster model (`max` shard compute + all-gather sync), and the logits are
-//! bit-identical to a single-core run. Malformed requests answer
-//! `ERR <reason>`; a full queue answers `BUSY <reason>`. Neither kills the
-//! connection — clients keep the socket and retry. (No JSON library exists
-//! in this offline environment; a line protocol keeps the wire format
-//! trivially testable with netcat.)
+//! The optional `net=` field selects a deployed model by name (`MODELS`
+//! lists them; `serve --models a,b,c` deploys them); without it the
+//! deployment's default (first) model serves the request, and unknown names
+//! answer `ERR invalid request: unknown model …`. The optional `prec=`
+//! field is a [`PrecisionMap`] spec (`default[;layer=precision…]`, e.g.
+//! `prec=int8` or `prec=w2a2;c1=int8;fc=int8`) selecting a per-request
+//! precision schedule; without it the deployment default applies. The
+//! optional `shards=` field selects a tensor-parallel shard count
+//! ([`crate::cluster`]): the inference is partitioned over that many
+//! simulated cores, `cycles=` reports the cluster model (`max` shard
+//! compute + all-gather sync), and the logits are bit-identical to a
+//! single-core run. Malformed requests answer `ERR <reason>`; a full queue
+//! answers `BUSY <reason>`. Neither kills the connection — clients keep the
+//! socket and retry. (No JSON library exists in this offline environment; a
+//! line protocol keeps the wire format trivially testable with netcat.)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -43,19 +49,21 @@ use crate::nn::model::PrecisionMap;
 
 use super::{Coordinator, InferenceRequest, SubmitError};
 
-/// Hard cap on explicit input payloads (the CIFAR input plane the demo and
-/// ResNet graphs consume). Longer payloads are rejected, not truncated.
-pub const MAX_INPUT_BYTES: usize = 32 * 32 * 3;
+/// Hard cap on explicit input payloads: the shared CIFAR-sized input plane
+/// every model reads a prefix of ([`crate::nn::INPUT_ELEMS`]). Longer
+/// payloads are rejected, not truncated.
+pub const MAX_INPUT_BYTES: usize = crate::nn::INPUT_ELEMS;
 
 /// Serve until the process is killed. Binds `addr` (e.g. "127.0.0.1:7070").
 pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!(
-        "quark coordinator listening on {addr} ({} workers, machine {}, batch≤{}, queue≤{})",
+        "quark coordinator listening on {addr} ({} workers, machine {}, batch≤{}, queue≤{}, models [{}])",
         coord.config().workers,
         coord.config().machine.name,
         coord.config().batch_size,
-        coord.config().max_queue
+        coord.config().max_queue,
+        coord.config().models.iter().map(|m| m.name()).collect::<Vec<_>>().join(", ")
     );
     for stream in listener.incoming() {
         let stream = stream?;
@@ -98,10 +106,26 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
         let mut parts = line.split_whitespace();
         match parts.next().unwrap_or("") {
             "PING" => writeln!(writer, "PONG")?,
+            "MODELS" => {
+                let models = &coord.config().models;
+                let names: Vec<&str> = models.iter().map(|m| m.name()).collect();
+                writeln!(
+                    writer,
+                    "MODELS n={} default={} models={}",
+                    models.len(),
+                    names[0],
+                    names.join(",")
+                )?
+            }
             "STATS" => {
                 let s = coord.stats();
                 let util: Vec<String> =
                     s.utilization.iter().map(|u| format!("{u:.2}")).collect();
+                let by_model: Vec<String> = s
+                    .served_by_model
+                    .iter()
+                    .map(|(name, n)| format!("{name}:{n}"))
+                    .collect();
                 let cbw: Vec<String> =
                     s.compile_by_worker.iter().map(|c| c.to_string()).collect();
                 let shard_util = if s.shard_util.is_empty() {
@@ -115,13 +139,14 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                 };
                 writeln!(
                     writer,
-                    "STATS served={} rejected={} queue_depth={} workers={} \
+                    "STATS served={} rejected={} by_model={} queue_depth={} workers={} \
                      cache_hits={} cache_misses={} prog_hits={} prog_misses={} \
                      compile_us={} replay_us={} compile_by_worker={} \
                      sync_cycles={} shard_util={} \
                      p50_us={} p95_us={} p99_us={} util={}",
                     s.served,
                     s.rejected,
+                    by_model.join(","),
                     s.queue_depth,
                     s.workers,
                     s.cache_hits,
@@ -148,14 +173,25 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                         continue;
                     }
                 };
-                // Optional per-request precision schedule + shard count
-                // (either order, each at most once).
+                // Optional model selector, per-request precision schedule,
+                // and shard count (any order, each at most once).
                 let mut next_tok = parts.next();
+                let mut net = None;
                 let mut schedule = None;
                 let mut shards = None;
                 let mut wire_err = None;
                 while let Some(tok) = next_tok {
-                    if let Some(spec) = tok.strip_prefix("prec=") {
+                    if let Some(name) = tok.strip_prefix("net=") {
+                        if net.is_some() {
+                            wire_err = Some("duplicate net= field".to_string());
+                            break;
+                        }
+                        if name.is_empty() {
+                            wire_err = Some("empty net= field".to_string());
+                            break;
+                        }
+                        net = Some(name.to_string());
+                    } else if let Some(spec) = tok.strip_prefix("prec=") {
                         if schedule.is_some() {
                             wire_err = Some("duplicate prec= field".to_string());
                             break;
@@ -200,7 +236,7 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                     writeln!(writer, "ERR trailing garbage after input")?;
                     continue;
                 }
-                match coord.submit(InferenceRequest { id, input, schedule, shards }) {
+                match coord.submit(InferenceRequest { id, input, net, schedule, shards }) {
                     Err(SubmitError::Busy { depth }) => {
                         writeln!(writer, "BUSY queue full (depth {depth})")?
                     }
@@ -211,7 +247,7 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                         Ok(r) => {
                             let mut reply = format!(
                                 "OK {} cycles={} device_us={:.1} worker={} batch={} cached={} \
-                                 prec={} shards={} sync_cycles={}",
+                                 prec={} net={} shards={} sync_cycles={}",
                                 r.id,
                                 r.sim_cycles,
                                 r.device_us,
@@ -219,6 +255,7 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                                 r.batch_id,
                                 r.timing_cached as u8,
                                 r.precision,
+                                r.model,
                                 r.shards,
                                 r.sync_cycles
                             );
@@ -282,6 +319,7 @@ mod tests {
         assert!(lines[2].starts_with("STATS served="), "{}", lines[2]);
         for field in [
             "rejected=",
+            "by_model=",
             "queue_depth=",
             "cache_hits=",
             "prog_hits=",
@@ -422,6 +460,73 @@ mod tests {
         };
         let (c_w2, c_i8, c_mix) = (cycles(&lines[0]), cycles(&lines[1]), cycles(&lines[2]));
         assert!(c_w2 < c_mix && c_mix < c_i8, "w2a2 {c_w2} < mixed {c_mix} < int8 {c_i8}");
+    }
+
+    #[test]
+    fn models_roundtrip_and_net_selection_on_the_wire() {
+        // Two-model deployment: default tiny plus the zoo mlp.
+        let mut cfg = small_cfg();
+        cfg.models.push(Arc::new(crate::nn::zoo::model("mlp").unwrap()));
+        let coord = Arc::new(Coordinator::start(cfg));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, "MODELS").unwrap();
+        writeln!(client, "INFER 1").unwrap(); // default model
+        writeln!(client, "INFER 2 net=mlp@10").unwrap(); // explicit selection
+        writeln!(client, "INFER 3 net=mlp@10 prec=int8 shards=2").unwrap(); // composes
+        // Unknown model: ERR invalid request, connection survives.
+        writeln!(client, "INFER 4 net=ghost-net").unwrap();
+        writeln!(client, "INFER 5 net=mlp@10 net=tiny@100").unwrap(); // duplicate field
+        writeln!(client, "STATS").unwrap();
+        writeln!(client, "PING").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(8).map(|l| l.unwrap()).collect();
+        // MODELS round-trip: count, default, full list.
+        assert_eq!(lines[0], "MODELS n=2 default=tiny@100 models=tiny@100,mlp@10", "{}", lines[0]);
+        assert!(lines[1].contains(" net=tiny@100 "), "{}", lines[1]);
+        assert!(lines[2].contains(" net=mlp@10 "), "{}", lines[2]);
+        assert!(
+            lines[3].contains(" net=mlp@10 ") && lines[3].contains(" prec=int8 ")
+                && lines[3].contains(" shards=2 "),
+            "{}",
+            lines[3]
+        );
+        assert!(
+            lines[4].starts_with("ERR invalid request:") && lines[4].contains("unknown model"),
+            "{}",
+            lines[4]
+        );
+        assert!(lines[5].starts_with("ERR duplicate net= field"), "{}", lines[5]);
+        // Per-model STATS counts: 1 on tiny, 2 on mlp, in deployment order.
+        assert!(lines[6].contains(" by_model=tiny@100:1,mlp@10:2 "), "{}", lines[6]);
+        assert_eq!(lines[7], "PONG", "connection survived the model errors");
+        // Different models must report different timings (distinct
+        // DeployKeys — the mlp is far cheaper than tiny).
+        let cycles = |l: &str| -> u64 {
+            l.split("cycles=").nth(1).unwrap().split_whitespace().next().unwrap().parse().unwrap()
+        };
+        assert!(cycles(&lines[2]) < cycles(&lines[1]), "{} vs {}", lines[2], lines[1]);
+    }
+
+    #[test]
+    fn net_field_composes_with_functional_input() {
+        let mut cfg = small_cfg();
+        cfg.models.push(Arc::new(crate::nn::zoo::model("mlp").unwrap()));
+        let coord = Arc::new(Coordinator::start(cfg));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, "INFER 9 net=mlp@10 5,6,7,8").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let line = reader.lines().next().unwrap().unwrap();
+        assert!(line.starts_with("OK 9 cycles="), "{line}");
+        assert!(line.contains(" net=mlp@10 "), "{line}");
+        assert!(line.contains(" argmax="), "{line}");
+        let logits_csv = line.split("logits=").nth(1).expect("logits field");
+        assert_eq!(logits_csv.split(',').count(), 10, "10-class mlp logits");
     }
 
     #[test]

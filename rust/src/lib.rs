@@ -14,8 +14,9 @@
 //! * [`quant`] — LSQ-style quantization math and bit-plane packing.
 //! * [`kernels`] — the vector DNN runtime: bit-serial / int8 / fp32 conv2d and
 //!   matmul, im2col, packing (with and without `vbitpack`), requantization.
-//! * [`nn`] — model graphs (ResNet-18 CIFAR variant) executed on the runtime
-//!   under uniform or mixed per-layer precision schedules
+//! * [`nn`] — model identity ([`nn::NetGraph`]) and the registry of named
+//!   graphs ([`nn::zoo`]: ResNet-18/34 CIFAR, quarknet, mlp, tiny) executed
+//!   on the runtime under uniform or mixed per-layer precision schedules
 //!   ([`nn::model::PrecisionMap`]), with a naive-i128 host golden executor.
 //! * [`program`] — the compile/execute split: [`program::compile`] turns
 //!   (net, machine, schedule) into a relocatable
@@ -27,8 +28,8 @@
 //!   activation all-gather ([`cluster::cluster_timing`]).
 //! * [`phys`] — analytical area/power technology model + roofline analytics.
 //! * [`runtime`] — PJRT golden-model loader (AOT HLO text from JAX).
-//! * [`coordinator`] — batching inference server over a pool of simulated
-//!   cores with golden-model cross-checking.
+//! * [`coordinator`] — multi-model batching inference server over a pool of
+//!   simulated cores with golden-model cross-checking.
 //! * [`report`] — regenerates every table and figure of the paper.
 
 pub mod arch;

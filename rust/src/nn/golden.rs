@@ -25,11 +25,12 @@
 //!   grid ([`super::model::map_consumer_bits`]).
 
 use crate::kernels::requantize::requant_host;
+use crate::nn::graph::{NetGraph, INPUT_ELEMS};
 use crate::nn::model::{
     grid_qmax, map_consumer_bits, synth_codes, synth_i8, synth_input, synth_rq_params, Precision,
     PrecisionMap,
 };
-use crate::nn::{LayerKind, NetLayer};
+use crate::nn::LayerKind;
 
 /// Per-feature-map results of a host golden run: `maps[0]` is the (clamped)
 /// network input, layer `i`'s output is `maps[i + 1]`.
@@ -45,7 +46,7 @@ fn to_i32(v: i128, what: &str) -> i32 {
 /// Integer schedules only (the fp32 baseline has its own golden oracles in
 /// the kernel tests). Panics on invalid schedules, mirroring
 /// [`super::model::ModelRunner::run_scheduled`].
-pub fn run_golden(net: &[NetLayer], schedule: &PrecisionMap, input: Option<&[u8]>) -> GoldenRun {
+pub fn run_golden(net: &NetGraph, schedule: &PrecisionMap, input: Option<&[u8]>) -> GoldenRun {
     if let Err(e) = schedule.validate(net) {
         panic!("invalid schedule: {e}");
     }
@@ -58,8 +59,7 @@ pub fn run_golden(net: &[NetLayer], schedule: &PrecisionMap, input: Option<&[u8]
     let mut seed = 0xC0FFEEu64 ^ schedule.seed_tag();
 
     // Input map: same draw/override/clamp sequence as the runner.
-    let input_elems = 32 * 32 * 3;
-    let mut codes = synth_input(&mut seed, input_elems);
+    let mut codes = synth_input(&mut seed, INPUT_ELEMS);
     if let Some(bytes) = input {
         for (i, c) in codes.iter_mut().enumerate() {
             *c = bytes.get(i).copied().unwrap_or(0);
@@ -219,6 +219,7 @@ pub fn run_golden(net: &[NetLayer], schedule: &PrecisionMap, input: Option<&[u8]
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::NetLayer;
 
     #[test]
     fn golden_is_deterministic_and_shaped() {
@@ -240,10 +241,15 @@ mod tests {
             residual: false,
             quantized,
         };
-        let net = vec![
-            NetLayer { kind: LayerKind::Conv(conv("stem", 3, false)), input: 0, residual_from: None },
-            NetLayer { kind: LayerKind::Conv(conv("c1", 64, true)), input: 1, residual_from: None },
-        ];
+        let net = NetGraph::new(
+            "golden-mini",
+            0,
+            vec![
+                NetLayer { kind: LayerKind::Conv(conv("stem", 3, false)), input: 0, residual_from: None },
+                NetLayer { kind: LayerKind::Conv(conv("c1", 64, true)), input: 1, residual_from: None },
+            ],
+        )
+        .unwrap();
         let sched = PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
         let input: Vec<u8> = (0..3072).map(|i| (i % 251) as u8).collect();
         let a = run_golden(&net, &sched, Some(&input));

@@ -1,0 +1,377 @@
+//! [`NetGraph`] — first-class model identity.
+//!
+//! Historically "the workload" was a bare `Vec<NetLayer>` threaded through
+//! every consumer (runner, compiler, golden model, serving layer, reports),
+//! with an ad-hoc structural hash (`net_fingerprint`) re-derived wherever a
+//! cache key was needed. `NetGraph` replaces that with a validated,
+//! self-identifying value:
+//!
+//! * **name** — the registry identity (`resnet18-cifar@100`, `tiny@100`,
+//!   …; see [`crate::nn::zoo`]). The serving layer keys deployments and
+//!   wire requests (`net=`) by it.
+//! * **num_classes** — the classifier width, checked against the final FC
+//!   layer when one is present (truncated `--fast` graphs end mid-network
+//!   and skip the check).
+//! * **construction-time validation** — every feature-map index must point
+//!   backwards, every layer's input shape must match its producer's output
+//!   shape (layers reading map 0 read a prefix of the fixed
+//!   [`INPUT_ELEMS`]-byte input plane), and residual wiring must be
+//!   shape-consistent. A `Vec<NetLayer>` that would make the emitter read
+//!   out of bounds can no longer reach it.
+//! * **[`NetGraph::fingerprint`]** — the cache identity, computed once at
+//!   construction: the structural hash of the layer list
+//!   ([`structural_fingerprint`], the former `net_fingerprint`) folded with
+//!   the name and class count. Two models that share a topology but not a
+//!   name are distinct deployments.
+
+use crate::kernels::Conv2dParams;
+
+use super::resnet::{LayerKind, NetLayer};
+
+/// Logical element count of feature map 0 — the fixed CIFAR-sized
+/// (32·32·3) byte plane every model reads its input from. Models with a
+/// smaller input read a prefix; the serving layer rejects longer payloads
+/// ([`crate::coordinator::server::MAX_INPUT_BYTES`]).
+pub const INPUT_ELEMS: usize = 32 * 32 * 3;
+
+#[inline]
+pub(crate) fn fnv(h: &mut u64, v: u64) {
+    // FNV-1a over the 8 bytes of `v`.
+    for b in v.to_le_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+pub(crate) fn fnv_str(h: &mut u64, s: &str) {
+    fnv(h, s.len() as u64);
+    for &b in s.as_bytes() {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Structural identity of a layer list: every field that can change the
+/// emitted instruction stream (shapes, layer kinds, wiring) is folded in.
+/// This is the hash the coordinator historically called `net_fingerprint`;
+/// [`NetGraph::fingerprint`] folds the model name and class count on top.
+pub fn structural_fingerprint(net: &[NetLayer]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, net.len() as u64);
+    for layer in net {
+        fnv(&mut h, layer.input as u64);
+        fnv(&mut h, layer.residual_from.map(|i| i as u64 + 1).unwrap_or(0));
+        match &layer.kind {
+            LayerKind::Conv(c) => {
+                fnv(&mut h, 1);
+                fnv_str(&mut h, &c.name);
+                let p = c.params;
+                for v in [p.h, p.w, p.c_in, p.c_out, p.kh, p.kw, p.stride, p.pad] {
+                    fnv(&mut h, v as u64);
+                }
+                fnv(&mut h, c.relu as u64);
+                fnv(&mut h, c.residual as u64);
+                fnv(&mut h, c.quantized as u64);
+            }
+            LayerKind::AvgPool { h: ph, w: pw, c } => {
+                fnv(&mut h, 2);
+                for v in [*ph, *pw, *c] {
+                    fnv(&mut h, v as u64);
+                }
+            }
+            LayerKind::Fc { k, n, name } => {
+                fnv(&mut h, 3);
+                fnv_str(&mut h, name);
+                fnv(&mut h, *k as u64);
+                fnv(&mut h, *n as u64);
+            }
+        }
+    }
+    h
+}
+
+/// `(input elems read, output elems produced)` of one layer.
+fn layer_shape(kind: &LayerKind) -> (usize, usize) {
+    match kind {
+        LayerKind::Conv(c) => {
+            let p: &Conv2dParams = &c.params;
+            (p.h * p.w * p.c_in, p.out_h() * p.out_w() * p.c_out)
+        }
+        LayerKind::AvgPool { h, w, c } => (h * w * c, *c),
+        LayerKind::Fc { k, n, .. } => (*k, *n),
+    }
+}
+
+/// A validated, named model graph — see the module docs.
+///
+/// Dereferences to `[NetLayer]`, so graph-walking helpers
+/// ([`crate::nn::model::PrecisionMap::validate`],
+/// [`crate::nn::model::map_consumer_bits`],
+/// [`crate::nn::resnet::quantized_layers`], …) take a `&NetGraph`
+/// unchanged.
+#[derive(Clone, Debug)]
+pub struct NetGraph {
+    name: String,
+    num_classes: usize,
+    layers: Vec<NetLayer>,
+    fingerprint: u64,
+}
+
+impl NetGraph {
+    /// Validate and wrap a layer list. `name` is the wire identity (ascii
+    /// alphanumerics plus `@ - _ . #`, no whitespace or commas — it travels
+    /// in `net=` fields and `serve --models` lists); `num_classes` must
+    /// match the final FC width when the graph ends in a classifier.
+    pub fn new(name: &str, num_classes: usize, layers: Vec<NetLayer>) -> Result<NetGraph, String> {
+        if name.is_empty() {
+            return Err("model name must not be empty".to_string());
+        }
+        if let Some(c) =
+            name.chars().find(|c| !c.is_ascii_alphanumeric() && !"@-_.#".contains(*c))
+        {
+            return Err(format!(
+                "model name {name:?} contains {c:?} (allowed: ascii alphanumerics and @-_.#)"
+            ));
+        }
+        if layers.is_empty() {
+            return Err(format!("model {name:?} has no layers"));
+        }
+        // elems[m] = logical element count of feature map m (map 0 = input;
+        // layer i writes map i + 1).
+        let mut elems: Vec<usize> = vec![INPUT_ELEMS];
+        for (i, layer) in layers.iter().enumerate() {
+            let ctx = || format!("model {name:?} layer {i} ({})", layer_label(&layer.kind));
+            if layer.input > i {
+                return Err(format!(
+                    "{}: input map {} does not exist yet (maps 0..={i} are defined)",
+                    ctx(),
+                    layer.input
+                ));
+            }
+            let (expected, produced) = layer_shape(&layer.kind);
+            if layer.input == 0 {
+                if expected > INPUT_ELEMS {
+                    return Err(format!(
+                        "{}: reads {expected} elements from the {INPUT_ELEMS}-element input plane",
+                        ctx()
+                    ));
+                }
+            } else if expected != elems[layer.input] {
+                return Err(format!(
+                    "{}: reads {expected} elements but map {} holds {}",
+                    ctx(),
+                    layer.input,
+                    elems[layer.input]
+                ));
+            }
+            let is_residual_conv = matches!(&layer.kind, LayerKind::Conv(c) if c.residual);
+            match (is_residual_conv, layer.residual_from) {
+                (true, None) => {
+                    return Err(format!("{}: residual conv without a residual_from map", ctx()));
+                }
+                (false, Some(_)) => {
+                    return Err(format!("{}: residual_from on a non-residual layer", ctx()));
+                }
+                (true, Some(r)) => {
+                    if r > i {
+                        return Err(format!(
+                            "{}: residual map {r} does not exist yet (maps 0..={i})",
+                            ctx()
+                        ));
+                    }
+                    if elems[r] != produced {
+                        return Err(format!(
+                            "{}: residual map {r} holds {} elements, output has {produced}",
+                            ctx(),
+                            elems[r]
+                        ));
+                    }
+                }
+                (false, None) => {}
+            }
+            elems.push(produced);
+        }
+        if let Some(NetLayer { kind: LayerKind::Fc { n, .. }, .. }) = layers.last() {
+            if *n != num_classes {
+                return Err(format!(
+                    "model {name:?} declares {num_classes} classes but its classifier has {n} outputs"
+                ));
+            }
+        }
+        let mut fingerprint = structural_fingerprint(&layers);
+        fnv_str(&mut fingerprint, name);
+        fnv(&mut fingerprint, num_classes as u64);
+        Ok(NetGraph { name: name.to_string(), num_classes, layers, fingerprint })
+    }
+
+    /// The model's wire identity (canonical registry spec for zoo models,
+    /// e.g. `resnet18-cifar@100`).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Classifier width the graph was declared with. (For truncated
+    /// `--fast` graphs the classifier itself may be cut off; the declared
+    /// width is kept for display.)
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// The layer list, in network order.
+    pub fn layers(&self) -> &[NetLayer] {
+        &self.layers
+    }
+
+    /// Logical element count of the final feature map (the logits, for
+    /// classifier graphs).
+    pub fn out_elems(&self) -> usize {
+        layer_shape(&self.layers.last().expect("graphs are non-empty").kind).1
+    }
+
+    /// Stable cache identity: structure ⊕ name ⊕ class count, computed once
+    /// at construction. The coordinator's timing/program `DeployKey`s and
+    /// every [`crate::program::CompiledProgram`] carry it.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+}
+
+fn layer_label(kind: &LayerKind) -> String {
+    match kind {
+        LayerKind::Conv(c) => c.name.clone(),
+        LayerKind::AvgPool { .. } => "avgpool".to_string(),
+        LayerKind::Fc { name, .. } => name.clone(),
+    }
+}
+
+impl std::ops::Deref for NetGraph {
+    type Target = [NetLayer];
+
+    fn deref(&self) -> &[NetLayer] {
+        &self.layers
+    }
+}
+
+impl AsRef<[NetLayer]> for NetGraph {
+    fn as_ref(&self) -> &[NetLayer] {
+        &self.layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ConvLayer;
+
+    fn conv(name: &str, h: usize, c_in: usize, c_out: usize, residual: bool) -> ConvLayer {
+        ConvLayer {
+            name: name.into(),
+            params: Conv2dParams {
+                h,
+                w: h,
+                c_in,
+                c_out,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+            relu: true,
+            residual,
+            quantized: true,
+        }
+    }
+
+    fn valid_layers() -> Vec<NetLayer> {
+        vec![
+            NetLayer {
+                kind: LayerKind::Conv(ConvLayer { quantized: false, ..conv("stem", 8, 3, 64, false) }),
+                input: 0,
+                residual_from: None,
+            },
+            NetLayer { kind: LayerKind::Conv(conv("c1", 8, 64, 64, false)), input: 1, residual_from: None },
+            NetLayer { kind: LayerKind::AvgPool { h: 8, w: 8, c: 64 }, input: 2, residual_from: None },
+            NetLayer { kind: LayerKind::Fc { k: 64, n: 10, name: "fc".into() }, input: 3, residual_from: None },
+        ]
+    }
+
+    #[test]
+    fn valid_graph_constructs_with_identity() {
+        let g = NetGraph::new("mini@10", 10, valid_layers()).unwrap();
+        assert_eq!(g.name(), "mini@10");
+        assert_eq!(g.num_classes(), 10);
+        assert_eq!(g.len(), 4, "deref exposes the layer list");
+        assert_eq!(g.out_elems(), 10);
+        assert_eq!(g.fingerprint(), NetGraph::new("mini@10", 10, valid_layers()).unwrap().fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_separates_structure_name_and_classes() {
+        let base = NetGraph::new("mini@10", 10, valid_layers()).unwrap();
+        // Same structure, different name: distinct identity.
+        let renamed = NetGraph::new("other@10", 10, valid_layers()).unwrap();
+        assert_ne!(base.fingerprint(), renamed.fingerprint());
+        // Different structure, same name (classifier relabeled).
+        let mut layers = valid_layers();
+        layers[3] = NetLayer {
+            kind: LayerKind::Fc { k: 64, n: 10, name: "fcx".into() },
+            input: 3,
+            residual_from: None,
+        };
+        let relabeled = NetGraph::new("mini@10", 10, layers).unwrap();
+        assert_ne!(base.fingerprint(), relabeled.fingerprint());
+        // The structural part matches the raw-layer hash.
+        assert_eq!(
+            structural_fingerprint(&base),
+            structural_fingerprint(&valid_layers()),
+        );
+    }
+
+    #[test]
+    fn construction_rejects_bad_wiring_and_shapes() {
+        // Forward input reference.
+        let mut layers = valid_layers();
+        layers[1].input = 3;
+        assert!(NetGraph::new("bad", 10, layers).is_err());
+        // Input shape mismatch against the producer.
+        let mut layers = valid_layers();
+        layers[1].kind = LayerKind::Conv(conv("c1", 8, 32, 64, false));
+        assert!(NetGraph::new("bad", 10, layers).unwrap_err().contains("reads"));
+        // Over-reading the shared input plane.
+        let layers = vec![NetLayer {
+            kind: LayerKind::Conv(conv("c1", 64, 64, 64, false)),
+            input: 0,
+            residual_from: None,
+        }];
+        assert!(NetGraph::new("bad", 10, layers).unwrap_err().contains("input plane"));
+        // Residual conv without a source, and the converse.
+        let mut layers = valid_layers();
+        layers[1].kind = LayerKind::Conv(conv("c1", 8, 64, 64, true));
+        assert!(NetGraph::new("bad", 10, layers.clone()).unwrap_err().contains("residual"));
+        layers[1].kind = LayerKind::Conv(conv("c1", 8, 64, 64, false));
+        layers[1].residual_from = Some(0);
+        assert!(NetGraph::new("bad", 10, layers).unwrap_err().contains("non-residual"));
+        // Residual shape mismatch (map 0 holds 3072 elements, output 4096).
+        let mut layers = valid_layers();
+        layers[1].kind = LayerKind::Conv(conv("c1", 8, 64, 64, true));
+        layers[1].residual_from = Some(0);
+        assert!(NetGraph::new("bad", 10, layers).unwrap_err().contains("residual map 0"));
+        // Classifier width vs declared classes.
+        assert!(NetGraph::new("bad", 100, valid_layers()).unwrap_err().contains("classes"));
+        // Names are wire-safe.
+        assert!(NetGraph::new("has space", 10, valid_layers()).is_err());
+        assert!(NetGraph::new("has,comma", 10, valid_layers()).is_err());
+        assert!(NetGraph::new("", 10, valid_layers()).is_err());
+        // Empty layer list.
+        assert!(NetGraph::new("empty", 10, Vec::new()).is_err());
+    }
+
+    #[test]
+    fn truncated_headless_graph_skips_the_classifier_check() {
+        let mut layers = valid_layers();
+        layers.truncate(2); // ends mid-network, no FC
+        let g = NetGraph::new("mini@10", 10, layers).unwrap();
+        assert_eq!(g.num_classes(), 10, "declared classes survive truncation");
+        assert_eq!(g.out_elems(), 8 * 8 * 64);
+    }
+}

@@ -1,16 +1,26 @@
 //! Model graphs executed on the vector DNN runtime.
 //!
-//! [`resnet`] defines the ResNet-18 CIFAR topology the paper benchmarks
+//! [`graph`] defines [`NetGraph`] — the validated, named, fingerprinted
+//! model identity every consumer (runner, compiler, golden model, serving
+//! layer, reports) takes instead of a bare layer list; [`zoo`] is the
+//! registry of named, spec-parseable models (`resnet18-cifar@100`,
+//! `quarknet`, `mlp`, `tiny`, …) with the `--fast` truncation profile.
+//! [`resnet`] defines the ResNet CIFAR topologies the paper benchmarks
 //! (Fig. 3: per-layer speedups on ResNet-18 / CIFAR-100, batch 1) plus the
 //! mixed per-layer schedule ([`resnet::resnet18_mixed_schedule`]);
-//! [`model`] materializes weights/scales and runs the graph on a simulated
+//! [`model`] materializes weights/scales and runs a graph on a simulated
 //! machine under a uniform precision or a per-layer [`PrecisionMap`];
-//! [`golden`] is the naive-i128 host reference the mixed-precision
-//! differential tests compare against.
+//! [`golden`] is the naive-i128 host reference the differential tests
+//! compare against.
 
 pub mod golden;
+pub mod graph;
 pub mod model;
 pub mod resnet;
+pub mod zoo;
 
+pub use graph::{structural_fingerprint, NetGraph, INPUT_ELEMS};
 pub use model::{LayerReport, ModelRun, ModelRunner, Precision, PrecisionMap, ShardPlan};
-pub use resnet::{resnet18_cifar, resnet18_mixed_schedule, ConvLayer, LayerKind, NetLayer};
+pub use resnet::{
+    resnet18_cifar, resnet18_mixed_schedule, resnet34_cifar, ConvLayer, LayerKind, NetLayer,
+};

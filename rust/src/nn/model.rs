@@ -36,6 +36,7 @@ use crate::arch::MachineConfig;
 use crate::kernels::KernelRun;
 use crate::sim::{Sim, Stats};
 
+use super::graph::NetGraph;
 use super::resnet::{LayerKind, NetLayer};
 
 /// Execution precision of one layer (or, via [`PrecisionMap::uniform`], of a
@@ -377,12 +378,12 @@ impl ShardPlan {
     /// counts: every partitioned layer must have at least one output channel
     /// per shard (ranges are contiguous and may be uneven — e.g. a 10-class
     /// FC at 4 shards splits 2/3/2/3).
-    pub fn derive(net: &[NetLayer], shards: usize) -> Result<ShardPlan, String> {
+    pub fn derive(net: &NetGraph, shards: usize) -> Result<ShardPlan, String> {
         if shards == 0 {
             return Err("shard count must be ≥ 1".to_string());
         }
         let mut channels = Vec::with_capacity(net.len());
-        for layer in net {
+        for layer in net.layers() {
             let sharded = match &layer.kind {
                 LayerKind::Conv(c) => Some((c.name.as_str(), c.params.c_out)),
                 LayerKind::Fc { n, name, .. } => Some((name.as_str(), *n)),
@@ -530,11 +531,11 @@ pub struct ModelRun {
 pub struct ModelRunner;
 
 impl ModelRunner {
-    /// Run a network graph (see [`super::resnet::resnet18_cifar`]) at one
-    /// uniform precision; batch 1, synthetic weights + synthetic input. Use
-    /// `TimingOnly` mode for cycle-only sweeps — cycle counts are identical
-    /// to `Full` (the kernels are data-independent).
-    pub fn run(sim: &mut Sim, net: &[NetLayer], precision: Precision) -> Vec<LayerReport> {
+    /// Run a model graph (see [`crate::nn::zoo`]) at one uniform precision;
+    /// batch 1, synthetic weights + synthetic input. Use `TimingOnly` mode
+    /// for cycle-only sweeps — cycle counts are identical to `Full` (the
+    /// kernels are data-independent).
+    pub fn run(sim: &mut Sim, net: &NetGraph, precision: Precision) -> Vec<LayerReport> {
         Self::run_scheduled(sim, net, &PrecisionMap::uniform(precision), None).reports
     }
 
@@ -544,7 +545,7 @@ impl ModelRunner {
     /// real logits after a `Full`-mode run.
     pub fn run_with_input(
         sim: &mut Sim,
-        net: &[NetLayer],
+        net: &NetGraph,
         precision: Precision,
         input: Option<&[u8]>,
     ) -> ModelRun {
@@ -561,7 +562,7 @@ impl ModelRunner {
     /// at submission.
     pub fn run_scheduled(
         sim: &mut Sim,
-        net: &[NetLayer],
+        net: &NetGraph,
         schedule: &PrecisionMap,
         input: Option<&[u8]>,
     ) -> ModelRun {
@@ -581,47 +582,55 @@ mod tests {
     use crate::nn::resnet::resnet18_cifar;
     use crate::sim::SimMode;
 
-    fn tiny_net() -> Vec<crate::nn::NetLayer> {
-        // A 2-layer slice of the graph exercises conv+pool+fc quickly.
+    /// stem + conv + pool + fc: every layer kind, valid shapes end to end.
+    fn tiny_layers() -> Vec<crate::nn::NetLayer> {
+        let conv = |name: &str, c_in: usize, quantized: bool| crate::nn::ConvLayer {
+            name: name.into(),
+            params: crate::kernels::Conv2dParams {
+                h: 8,
+                w: 8,
+                c_in,
+                c_out: 64,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+            relu: true,
+            residual: false,
+            quantized,
+        };
         vec![
             crate::nn::NetLayer {
-                kind: crate::nn::LayerKind::Conv(crate::nn::ConvLayer {
-                    name: "c1".into(),
-                    params: crate::kernels::Conv2dParams {
-                        h: 8,
-                        w: 8,
-                        c_in: 64,
-                        c_out: 64,
-                        kh: 3,
-                        kw: 3,
-                        stride: 1,
-                        pad: 1,
-                    },
-                    relu: true,
-                    residual: false,
-                    quantized: true,
-                }),
+                kind: crate::nn::LayerKind::Conv(conv("stem", 3, false)),
                 input: 0,
                 residual_from: None,
             },
             crate::nn::NetLayer {
-                kind: crate::nn::LayerKind::AvgPool { h: 8, w: 8, c: 64 },
+                kind: crate::nn::LayerKind::Conv(conv("c1", 64, true)),
                 input: 1,
                 residual_from: None,
             },
             crate::nn::NetLayer {
-                kind: crate::nn::LayerKind::Fc { k: 64, n: 10, name: "fc".into() },
+                kind: crate::nn::LayerKind::AvgPool { h: 8, w: 8, c: 64 },
                 input: 2,
+                residual_from: None,
+            },
+            crate::nn::NetLayer {
+                kind: crate::nn::LayerKind::Fc { k: 64, n: 10, name: "fc".into() },
+                input: 3,
                 residual_from: None,
             },
         ]
     }
 
+    fn tiny_graph() -> NetGraph {
+        NetGraph::new("tiny-test@10", 10, tiny_layers()).unwrap()
+    }
+
     #[test]
     fn tiny_net_runs_all_precisions() {
-        // NOTE: map 0 in run() is always the 32×32×3 input buffer; this tiny
-        // net reads garbage from it, which is fine for a smoke test.
-        let net = tiny_net();
+        let net = tiny_graph();
         for (cfg, prec) in [
             (MachineConfig::ara(4), Precision::Fp32),
             (MachineConfig::ara(4), Precision::Int8),
@@ -630,14 +639,14 @@ mod tests {
             let mut sim = Sim::new(cfg);
             sim.set_mode(SimMode::TimingOnly);
             let reports = ModelRunner::run(&mut sim, &net, prec);
-            assert_eq!(reports.len(), 3);
+            assert_eq!(reports.len(), 4);
             assert!(reports.iter().all(|r| r.run.cycles > 0), "{prec:?}");
         }
     }
 
     #[test]
     fn mixed_schedule_dispatches_per_layer() {
-        let net = tiny_net();
+        let net = tiny_graph();
         let map = PrecisionMap::uniform(Precision::Sub {
             abits: 2,
             wbits: 2,
@@ -647,14 +656,14 @@ mod tests {
         let mut sim = Sim::new(MachineConfig::quark(4));
         sim.set_mode(SimMode::TimingOnly);
         let run = ModelRunner::run_scheduled(&mut sim, &net, &map, None);
-        assert_eq!(run.reports[0].precision.label(), "w2a2");
-        assert_eq!(run.reports[2].precision.label(), "int8");
+        assert_eq!(run.reports[1].precision.label(), "w2a2");
+        assert_eq!(run.reports[3].precision.label(), "int8");
         assert!(run.reports.iter().all(|r| r.run.cycles > 0));
     }
 
     #[test]
     fn resnet18_graph_runs_timing_only_int1_faster_than_int8() {
-        let net = resnet18_cifar(100);
+        let net = crate::nn::zoo::model("resnet18-cifar@100").unwrap();
         let cycles = |cfg: MachineConfig, prec: Precision| {
             let mut sim = Sim::new(cfg);
             sim.set_mode(SimMode::TimingOnly);
@@ -679,7 +688,7 @@ mod tests {
 
     #[test]
     fn precision_map_parse_validate_and_consumer_bits() {
-        let net = tiny_net();
+        let net = tiny_layers();
         let map = PrecisionMap::parse("int8;c1=w2a2").unwrap();
         assert!(!map.is_uniform());
         assert_eq!(map.spec(), "int8;c1=w2a2");
@@ -687,7 +696,8 @@ mod tests {
         assert!(PrecisionMap::parse("int8;ghost=w2a2").unwrap().validate(&net).is_err());
         assert!(PrecisionMap::parse("fp32;c1=int8").unwrap().validate(&net).is_err());
         // fp32 smuggled in through overrides must be rejected even when every
-        // layer resolves to fp32 — the element size follows the default.
+        // quantized layer resolves to fp32 — the element size follows the
+        // default.
         assert!(PrecisionMap::parse("int8;c1=fp32;fc=fp32").unwrap().validate(&net).is_err());
         let fc_net = vec![crate::nn::NetLayer {
             kind: crate::nn::LayerKind::Fc { k: 64, n: 10, name: "fc".into() },
@@ -712,38 +722,39 @@ mod tests {
         assert!(map.validate_machine(&net, &MachineConfig::quark(4)).is_ok());
         assert!(map.validate_machine(&net, &MachineConfig::ara(4)).is_err());
 
-        // c1 reads map 0 at 2 bits; pool reads map 1 at 8; fc reads map 2 at 8.
+        // stem reads map 0 at 8 bits; c1 reads map 1 at 2; pool and fc read
+        // their inputs at 8; the logits map is unconsumed (8).
         let resolved = map.resolve(&net);
         let bits = map_consumer_bits(&net, &resolved);
-        assert_eq!(bits, vec![2, 8, 8, 8]);
+        assert_eq!(bits, vec![8, 2, 8, 8, 8]);
         assert_eq!(grid_qmax(2), 3);
         assert_eq!(grid_qmax(8), 255);
     }
 
     #[test]
     fn shard_plan_partitions_conv_and_fc_only() {
-        let net = tiny_net(); // conv(64 ch) + pool + fc(10 classes)
+        let net = tiny_graph(); // stem + conv(64 ch) + pool + fc(10 classes)
         let plan = ShardPlan::derive(&net, 4).unwrap();
         assert_eq!(plan.shards(), 4);
-        assert_eq!(plan.layers(), 3);
-        // Conv: 64 channels split 16/16/16/16.
-        assert_eq!(plan.range(0, 0), Some((0, 16)));
-        assert_eq!(plan.range(0, 3), Some((48, 64)));
+        assert_eq!(plan.layers(), 4);
+        // Convs: 64 channels split 16/16/16/16.
+        assert_eq!(plan.range(1, 0), Some((0, 16)));
+        assert_eq!(plan.range(1, 3), Some((48, 64)));
         // Pool is replicated.
-        assert_eq!(plan.range(1, 2), None);
+        assert_eq!(plan.range(2, 2), None);
         // FC: 10 classes split unevenly but contiguously, covering all.
-        let ranges: Vec<_> = (0..4).map(|s| plan.range(2, s).unwrap()).collect();
+        let ranges: Vec<_> = (0..4).map(|s| plan.range(3, s).unwrap()).collect();
         assert_eq!(ranges, vec![(0, 2), (2, 5), (5, 7), (7, 10)]);
         assert_eq!(ranges.iter().map(|(a, b)| b - a).sum::<usize>(), 10);
 
         // shards == 1: nothing is partitioned (the single-core identity).
         let one = ShardPlan::derive(&net, 1).unwrap();
-        assert!((0..3).all(|l| one.range(l, 0).is_none()));
+        assert!((0..4).all(|l| one.range(l, 0).is_none()));
     }
 
     #[test]
     fn shard_plan_validates_channel_counts_and_schedules() {
-        let net = tiny_net();
+        let net = tiny_graph();
         assert!(ShardPlan::derive(&net, 0).is_err(), "0 shards is meaningless");
         // FC has 10 classes: 16 shards cannot each own a channel.
         let err = ShardPlan::derive(&net, 16).unwrap_err();
@@ -755,5 +766,37 @@ mod tests {
         // At 1 shard even fp32 is fine (the plan is the identity).
         let one = ShardPlan::derive(&net, 1).unwrap();
         assert!(one.validate_schedule(&PrecisionMap::uniform(Precision::Fp32)).is_ok());
+    }
+
+    #[test]
+    fn netgraph_runner_emits_identically_to_the_raw_layer_list() {
+        // Default-path regression guard: driving the shared emission routine
+        // through the `NetGraph` wrapper must report exactly the cycle
+        // counts of driving it with the bare layer list (the pre-redesign
+        // workload representation) — the identity wrapper adds nothing.
+        let graph = crate::nn::zoo::model("resnet18-cifar@100").unwrap();
+        let raw = resnet18_cifar(100);
+        assert_eq!(
+            crate::nn::structural_fingerprint(&graph),
+            crate::nn::structural_fingerprint(&raw),
+            "the zoo graph must be the exact paper topology"
+        );
+        let sched = PrecisionMap::uniform(Precision::Sub {
+            abits: 2,
+            wbits: 2,
+            use_vbitpack: true,
+        });
+        let mut sim_g = Sim::new(MachineConfig::quark(4));
+        sim_g.set_mode(SimMode::TimingOnly);
+        let via_graph = ModelRunner::run_scheduled(&mut sim_g, &graph, &sched, None);
+        let mut sim_r = Sim::new(MachineConfig::quark(4));
+        sim_r.set_mode(SimMode::TimingOnly);
+        let via_raw = crate::program::builder::emit_model(&mut sim_r, &raw, &sched, None, None);
+        assert_eq!(via_graph.reports.len(), via_raw.reports.len());
+        for (g, r) in via_graph.reports.iter().zip(via_raw.reports.iter()) {
+            assert_eq!(g.name, r.name);
+            assert_eq!(g.run.cycles, r.run.cycles, "cycle drift at layer {}", g.name);
+            assert_eq!(g.stats, r.stats, "stat drift at layer {}", g.name);
+        }
     }
 }

@@ -64,9 +64,11 @@ fn conv(name: &str, h: usize, w: usize, c_in: usize, c_out: usize, ksz: usize, s
     }
 }
 
-/// Build the ResNet-18 CIFAR graph. Feature-map indices: 0 is the network
-/// input; each layer appends one output map.
-pub fn resnet18_cifar(num_classes: usize) -> Vec<NetLayer> {
+/// Build a basic-block CIFAR ResNet graph with `blocks[stage]` blocks per
+/// stage (widths 64/128/256/512). `[2, 2, 2, 2]` is ResNet-18,
+/// `[3, 4, 6, 3]` ResNet-34. Feature-map indices: 0 is the network input;
+/// each layer appends one output map.
+pub fn resnet_cifar(blocks: &[usize; 4], num_classes: usize) -> Vec<NetLayer> {
     let mut layers: Vec<NetLayer> = Vec::new();
     let mut maps = 1usize; // map 0 = network input
     let add = |layers: &mut Vec<NetLayer>, kind: LayerKind, input: usize, residual_from: Option<usize>, maps: &mut usize| -> usize {
@@ -85,7 +87,7 @@ pub fn resnet18_cifar(num_classes: usize) -> Vec<NetLayer> {
     let mut c_in = 64usize;
     let mut idx = 1usize;
     for (stage, &c_out) in widths.iter().enumerate() {
-        for block in 0..2 {
+        for block in 0..blocks[stage] {
             let stride = if stage > 0 && block == 0 { 2 } else { 1 };
             let out_hw = hw / stride;
             // Projection shortcut when shape changes.
@@ -152,6 +154,18 @@ pub fn resnet18_cifar(num_classes: usize) -> Vec<NetLayer> {
     layers
 }
 
+/// The ResNet-18 CIFAR graph — the paper's workload (Fig. 3).
+pub fn resnet18_cifar(num_classes: usize) -> Vec<NetLayer> {
+    resnet_cifar(&[2, 2, 2, 2], num_classes)
+}
+
+/// The deeper ResNet-34 CIFAR variant ([3, 4, 6, 3] basic blocks): same
+/// widths and K-axis alignment as ResNet-18, ~2x the quantized work — a zoo
+/// topology for multi-model serving, beyond the paper's single workload.
+pub fn resnet34_cifar(num_classes: usize) -> Vec<NetLayer> {
+    resnet_cifar(&[3, 4, 6, 3], num_classes)
+}
+
 /// SPEED-style (arXiv 2409.14017) layer-wise precision schedule for the
 /// CIFAR ResNet-18: the accuracy-critical first-stage convolutions and the
 /// final classifier run 8-bit, every other quantized layer runs 2-bit
@@ -213,11 +227,35 @@ mod tests {
 
     #[test]
     fn k_axes_are_64_aligned_for_bitserial() {
-        // Every quantized conv needs K % 64 == 0 for word-aligned planes.
-        let net = resnet18_cifar(100);
-        for (name, p) in quantized_layers(&net) {
-            assert_eq!(p.k() % 64, 0, "{name} K={}", p.k());
+        // Every quantized conv needs K % 64 == 0 for word-aligned planes —
+        // in both ResNet depths.
+        for net in [resnet18_cifar(100), resnet34_cifar(100)] {
+            for (name, p) in quantized_layers(&net) {
+                assert_eq!(p.k() % 64, 0, "{name} K={}", p.k());
+            }
         }
+    }
+
+    #[test]
+    fn resnet34_cifar_has_expected_structure() {
+        let net = resnet34_cifar(100);
+        let convs = net.iter().filter(|l| matches!(l.kind, LayerKind::Conv(_))).count();
+        // 1 stem + 32 block convs ([3,4,6,3] × 2) + 3 projections = 36.
+        assert_eq!(convs, 36);
+        // Quantized set: 32 + 3 + fc = 36 kernels.
+        assert_eq!(quantized_layers(&net).len(), 36);
+        // Same spatial schedule as ResNet-18: 32 → 4 before pooling.
+        let pool = net.iter().find_map(|l| match l.kind {
+            LayerKind::AvgPool { h, w, c } => Some((h, w, c)),
+            _ => None,
+        });
+        assert_eq!(pool, Some((4, 4, 512)));
+        // The mixed schedule applies unchanged (stage-1 names + classifier).
+        let map = resnet18_mixed_schedule(&net);
+        assert!(map.validate(&net).is_ok());
+        assert_eq!(map.of("fc"), Precision::Int8);
+        // 6 stage-1 convs + fc.
+        assert_eq!(map.overrides().len(), 7);
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! The model zoo — named, spec-parseable [`NetGraph`] builders.
+//!
+//! Sparq and SPEED (arXiv 2409.14017) evaluate their vector processors as
+//! *general* multi-precision DNN engines across several topologies; this
+//! registry gives the reproduction the same surface. Every consumer that
+//! used to hardcode `resnet18_cifar(100)` — the coordinator, the reports,
+//! the benches, the cluster sweep — now resolves a model by **spec**:
+//!
+//! ```text
+//! <name>[@<classes>]        e.g. resnet18-cifar@100, quarknet, mlp@10
+//! ```
+//!
+//! and a new model is one [`ZooEntry`] line. The registry also owns the
+//! `--fast` truncation profile (a per-model prefix length for quick smoke
+//! runs), which replaces the `.take(8)` fast paths that used to be
+//! copy-pasted across `cli.rs`.
+//!
+//! | name | topology | default classes |
+//! |---|---|---|
+//! | `resnet18-cifar` | the paper's workload ([`resnet18_cifar`]) | 100 |
+//! | `resnet34-cifar` | deeper `[3,4,6,3]` variant ([`resnet34_cifar`]) | 100 |
+//! | `quarknet` | VGG-style plain feedforward (6 convs, stride-2 downsampling) | 100 |
+//! | `mlp` | 3-layer fully-connected stack over the raw input plane | 10 |
+//! | `tiny` | the serving demo net (4 convs + pool + FC) | 100 |
+//!
+//! All integer-quantized layers keep `K % 64 == 0` (word-aligned bit
+//! planes) and every graph reads the shared [`INPUT_ELEMS`]-byte input
+//! plane, so any zoo model runs under any integer [`PrecisionMap`] and any
+//! shard count the channel widths allow.
+
+use crate::kernels::Conv2dParams;
+use crate::nn::model::PrecisionMap;
+use crate::nn::resnet::{resnet18_cifar, resnet34_cifar, ConvLayer, LayerKind, NetLayer};
+
+use super::graph::{NetGraph, INPUT_ELEMS};
+
+/// One registered model: a named layer-list builder plus its registry
+/// metadata.
+pub struct ZooEntry {
+    /// Registry name (the part of the spec before `@`).
+    pub name: &'static str,
+    /// Classes used when the spec does not carry `@<classes>`.
+    pub default_classes: usize,
+    /// One-line description (the `MODELS`/README listing).
+    pub about: &'static str,
+    build: fn(usize) -> Vec<NetLayer>,
+    /// Leading layers kept under the `--fast` truncation profile.
+    pub fast_layers: usize,
+}
+
+const ENTRIES: &[ZooEntry] = &[
+    ZooEntry {
+        name: "resnet18-cifar",
+        default_classes: 100,
+        about: "ResNet-18 CIFAR variant — the paper's Fig. 3 workload",
+        build: resnet18_cifar,
+        fast_layers: 8,
+    },
+    ZooEntry {
+        name: "resnet34-cifar",
+        default_classes: 100,
+        about: "ResNet-34 CIFAR variant ([3,4,6,3] basic blocks)",
+        build: resnet34_cifar,
+        fast_layers: 8,
+    },
+    ZooEntry {
+        name: "quarknet",
+        default_classes: 100,
+        about: "VGG-style plain feedforward: 6 convs, stride-2 downsampling",
+        build: quarknet,
+        fast_layers: 4,
+    },
+    ZooEntry {
+        name: "mlp",
+        default_classes: 10,
+        about: "3-layer FC stack over the raw input plane",
+        build: mlp,
+        fast_layers: 3,
+    },
+    ZooEntry {
+        name: "tiny",
+        default_classes: 100,
+        about: "serving demo net: 4 convs + pool + FC",
+        build: tiny,
+        fast_layers: 6,
+    },
+];
+
+/// Every registered entry, in listing order.
+pub fn entries() -> &'static [ZooEntry] {
+    ENTRIES
+}
+
+/// Registered model names, in listing order.
+pub fn names() -> Vec<&'static str> {
+    ENTRIES.iter().map(|e| e.name).collect()
+}
+
+/// Look up a registry entry by bare name (no `@classes` suffix).
+pub fn entry(name: &str) -> Option<&'static ZooEntry> {
+    ENTRIES.iter().find(|e| e.name == name)
+}
+
+/// Resolve a model spec (`name[@classes]`) to its full graph.
+pub fn model(spec: &str) -> Result<NetGraph, String> {
+    model_profile(spec, false)
+}
+
+/// Resolve a model spec under a profile: `fast = true` keeps only the
+/// entry's `fast_layers`-layer prefix — the registry-level smoke profile
+/// every `--fast` flag maps to. The graph keeps its canonical name (the
+/// truncation is visible in the fingerprint, not the identity).
+pub fn model_profile(spec: &str, fast: bool) -> Result<NetGraph, String> {
+    let (e, classes) = resolve(spec)?;
+    build_graph(e, classes, if fast { e.fast_layers } else { usize::MAX })
+}
+
+/// Resolve a model spec truncated to its first `keep` layers (≥ 1) — the
+/// generalized form of the `--fast` profile, for tests that need a
+/// `Full`-mode-affordable head of a deep graph.
+pub fn model_head(spec: &str, keep: usize) -> Result<NetGraph, String> {
+    let (e, classes) = resolve(spec)?;
+    build_graph(e, classes, keep)
+}
+
+/// Shared spec resolution: parse `name[@classes]`, look the name up, apply
+/// the entry's default class count.
+fn resolve(spec: &str) -> Result<(&'static ZooEntry, usize), String> {
+    let (name, classes) = parse_spec(spec)?;
+    let e = entry(name).ok_or_else(|| {
+        format!("unknown model {name:?} (registered: {})", names().join(", "))
+    })?;
+    Ok((e, classes.unwrap_or(e.default_classes)))
+}
+
+fn build_graph(e: &ZooEntry, classes: usize, keep: usize) -> Result<NetGraph, String> {
+    if !(2..=1024).contains(&classes) {
+        return Err(format!("class count {classes} out of range (2\u{2013}1024)"));
+    }
+    if keep == 0 {
+        return Err("cannot truncate a model to 0 layers".to_string());
+    }
+    let mut layers = (e.build)(classes);
+    if keep < layers.len() {
+        layers.truncate(keep);
+    }
+    NetGraph::new(&format!("{}@{classes}", e.name), classes, layers)
+        .map_err(|err| format!("zoo model {:?} failed validation: {err}", e.name))
+}
+
+fn parse_spec(spec: &str) -> Result<(&str, Option<usize>), String> {
+    let spec = spec.trim();
+    match spec.split_once('@') {
+        None => Ok((spec, None)),
+        Some((name, c)) => {
+            let classes = c
+                .parse()
+                .map_err(|_| format!("bad model spec {spec:?} (want name[@classes])"))?;
+            Ok((name, Some(classes)))
+        }
+    }
+}
+
+fn conv(name: &str, h: usize, c_in: usize, c_out: usize, stride: usize, quantized: bool) -> ConvLayer {
+    ConvLayer {
+        name: name.into(),
+        params: Conv2dParams { h, w: h, c_in, c_out, kh: 3, kw: 3, stride, pad: 1 },
+        relu: true,
+        residual: false,
+        quantized,
+    }
+}
+
+/// VGG-style plain feedforward net: no residuals, stride-2 convs do the
+/// downsampling (there is no spatial-pool layer kind), global average pool
+/// + classifier at the end. Every quantized K axis is a multiple of 64.
+fn quarknet(num_classes: usize) -> Vec<NetLayer> {
+    vec![
+        NetLayer { kind: LayerKind::Conv(conv("stem", 32, 3, 64, 1, false)), input: 0, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c1", 32, 64, 64, 2, true)), input: 1, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c2", 16, 64, 128, 1, true)), input: 2, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c3", 16, 128, 128, 2, true)), input: 3, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c4", 8, 128, 256, 1, true)), input: 4, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c5", 8, 256, 256, 2, true)), input: 5, residual_from: None },
+        NetLayer { kind: LayerKind::AvgPool { h: 4, w: 4, c: 256 }, input: 6, residual_from: None },
+        NetLayer { kind: LayerKind::Fc { k: 256, n: num_classes, name: "fc".into() }, input: 7, residual_from: None },
+    ]
+}
+
+/// 3-layer fully-connected stack reading the whole input plane: the
+/// smallest non-conv topology (every layer a GEMM; K axes 3072/512/256,
+/// all 64-aligned).
+fn mlp(num_classes: usize) -> Vec<NetLayer> {
+    vec![
+        NetLayer {
+            kind: LayerKind::Fc { k: INPUT_ELEMS, n: 512, name: "fc1".into() },
+            input: 0,
+            residual_from: None,
+        },
+        NetLayer { kind: LayerKind::Fc { k: 512, n: 256, name: "fc2".into() }, input: 1, residual_from: None },
+        NetLayer {
+            kind: LayerKind::Fc { k: 256, n: num_classes, name: "fc".into() },
+            input: 2,
+            residual_from: None,
+        },
+    ]
+}
+
+/// The serving demo net, promoted from the coordinator's private builder:
+/// 4 convs (stride-2 downsampling) + pool + FC — full ResNet-18 per request
+/// is a multi-second simulation; this keeps the serving path interactive
+/// while exercising every kernel.
+fn tiny(num_classes: usize) -> Vec<NetLayer> {
+    vec![
+        NetLayer { kind: LayerKind::Conv(conv("stem", 32, 3, 64, 1, false)), input: 0, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c1", 32, 64, 64, 2, true)), input: 1, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c2", 16, 64, 128, 2, true)), input: 2, residual_from: None },
+        NetLayer { kind: LayerKind::Conv(conv("c3", 8, 128, 128, 2, true)), input: 3, residual_from: None },
+        NetLayer { kind: LayerKind::AvgPool { h: 4, w: 4, c: 128 }, input: 4, residual_from: None },
+        NetLayer { kind: LayerKind::Fc { k: 128, n: num_classes, name: "fc".into() }, input: 5, residual_from: None },
+    ]
+}
+
+/// The generic mixed schedule for any zoo model: stage-1 convolutions
+/// (`_s1` names) and every FC layer at int8, everything else 2-bit — for
+/// ResNet graphs this is exactly
+/// [`crate::nn::resnet::resnet18_mixed_schedule`], whose name-pattern
+/// rules it reuses. Note the FC rule means an all-FC graph (`mlp`)
+/// *resolves* to uniform int8 — still a distinct schedule key, but tests
+/// wanting a genuine sub-byte/int8 boundary on such graphs should build
+/// their own map.
+pub fn mixed_schedule(net: &NetGraph) -> PrecisionMap {
+    crate::nn::resnet::resnet18_mixed_schedule(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::resnet::quantized_layers;
+
+    #[test]
+    fn every_entry_resolves_under_both_profiles() {
+        for e in entries() {
+            let full = model(e.name).unwrap_or_else(|err| panic!("{}: {err}", e.name));
+            assert_eq!(full.name(), format!("{}@{}", e.name, e.default_classes));
+            assert_eq!(full.num_classes(), e.default_classes);
+            let fast = model_profile(e.name, true).unwrap();
+            assert!(fast.len() <= full.len());
+            assert_eq!(fast.len(), e.fast_layers.min(full.len()));
+            assert_eq!(fast.name(), full.name(), "profiles share the wire identity");
+            if fast.len() != full.len() {
+                assert_ne!(fast.fingerprint(), full.fingerprint());
+            }
+            // Every quantized K axis is 64-aligned in every registered model.
+            for (name, p) in quantized_layers(&full) {
+                assert_eq!(p.k() % 64, 0, "{}: {name} K={}", e.name, p.k());
+            }
+            // The generic mixed schedule validates on every model.
+            assert!(mixed_schedule(&full).validate(&full).is_ok(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn specs_parse_classes_and_reject_garbage() {
+        assert_eq!(model("resnet18-cifar@10").unwrap().num_classes(), 10);
+        assert_eq!(model("mlp").unwrap().num_classes(), 10);
+        assert_eq!(model(" tiny@100 ").unwrap().name(), "tiny@100");
+        assert!(model("resnet18-cifar@x").is_err());
+        assert!(model("resnet18-cifar@1").is_err(), "degenerate class counts rejected");
+        assert!(model("resnet18-cifar@9999").is_err());
+        let err = model("bogus").unwrap_err();
+        assert!(err.contains("unknown model") && err.contains("resnet18-cifar"), "{err}");
+    }
+
+    #[test]
+    fn class_count_changes_identity_but_not_backbone() {
+        let a = model("resnet18-cifar@100").unwrap();
+        let b = model("resnet18-cifar@10").unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.len(), b.len());
+        // The spec round-trips through the graph name.
+        assert_eq!(model(b.name()).unwrap().fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn model_head_truncates_to_a_prefix() {
+        let head = model_head("resnet34-cifar@10", 3).unwrap();
+        assert_eq!(head.len(), 3);
+        assert_eq!(head.name(), "resnet34-cifar@10");
+        assert!(model_head("bogus", 3).is_err());
+        assert!(model_head("tiny", 0).is_err(), "a 0-layer head is an error, not a clamp");
+    }
+}

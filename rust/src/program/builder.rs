@@ -42,11 +42,12 @@ use crate::kernels::matmul::{matmul_bitserial, matmul_f32, matmul_int8};
 use crate::kernels::pool::{global_avgpool_f32, global_avgpool_u8};
 use crate::kernels::requantize::RqBuf;
 use crate::kernels::Conv2dParams;
+use crate::nn::graph::INPUT_ELEMS;
 use crate::nn::model::{
     grid_qmax, map_consumer_bits, synth_codes, synth_f32, synth_i8, synth_input, synth_rq_params,
     LayerReport, Precision, PrecisionMap, ShardPlan,
 };
-use crate::nn::{LayerKind, NetLayer};
+use crate::nn::{LayerKind, NetGraph, NetLayer};
 use crate::quant::pack_weight_planes;
 use crate::sim::Sim;
 
@@ -92,7 +93,7 @@ impl ProgramBuilder {
     /// must already be validated (see [`super::compile`], which is the
     /// checked entry point); invalid schedules panic exactly like the live
     /// runner.
-    pub fn build(self, net: &[NetLayer], schedule: &PrecisionMap) -> CompiledProgram {
+    pub fn build(self, net: &NetGraph, schedule: &PrecisionMap) -> CompiledProgram {
         self.build_inner(net, schedule, None)
     }
 
@@ -100,7 +101,7 @@ impl ProgramBuilder {
     /// [`super::compile_shard`], the checked entry point).
     pub(crate) fn build_sharded(
         self,
-        net: &[NetLayer],
+        net: &NetGraph,
         schedule: &PrecisionMap,
         plan: &ShardPlan,
         shard: usize,
@@ -110,7 +111,7 @@ impl ProgramBuilder {
 
     fn build_inner(
         mut self,
-        net: &[NetLayer],
+        net: &NetGraph,
         schedule: &PrecisionMap,
         shard: Option<(&ShardPlan, usize)>,
     ) -> CompiledProgram {
@@ -137,8 +138,9 @@ impl ProgramBuilder {
             })
             .collect();
         CompiledProgram {
-            net_fp: super::net_fingerprint(net),
+            net_fp: net.fingerprint(),
             machine_fp: super::machine_fingerprint(&self.sim.cfg),
+            model_name: net.name().to_string(),
             machine_name: self.sim.cfg.name.clone(),
             schedule: schedule.clone(),
             base,
@@ -215,8 +217,9 @@ pub(crate) fn emit_model(
     let idx_vec = setup_index_vector(sim);
     let mut seed = 0xC0FFEE ^ schedule.seed_tag();
 
-    // Feature-map addresses; map 0 is the network input (32×32×3).
-    let input_elems = 32 * 32 * 3;
+    // Feature-map addresses; map 0 is the shared CIFAR-sized input plane
+    // every model reads a prefix of ([`crate::nn::graph::INPUT_ELEMS`]).
+    let input_elems = INPUT_ELEMS;
     let in_qmax = grid_qmax(consumer_bits[0]) as u8;
     let in_addr = sim.alloc((input_elems * esz) as u64);
     if write_data {

@@ -49,64 +49,15 @@ pub use replay::ProgramRun;
 
 use crate::arch::MachineConfig;
 use crate::isa::instr::Instr;
+use crate::nn::graph::{fnv, fnv_str};
 use crate::nn::model::{Precision, PrecisionMap};
-use crate::nn::{LayerKind, NetLayer};
+use crate::nn::NetGraph;
 
-// ---- structural fingerprints (cache keys for programs and timing) ----
-
-#[inline]
-fn fnv(h: &mut u64, v: u64) {
-    // FNV-1a over the 8 bytes of `v`.
-    for b in v.to_le_bytes() {
-        *h ^= b as u64;
-        *h = h.wrapping_mul(0x100_0000_01b3);
-    }
-}
-
-fn fnv_str(h: &mut u64, s: &str) {
-    fnv(h, s.len() as u64);
-    for &b in s.as_bytes() {
-        *h ^= b as u64;
-        *h = h.wrapping_mul(0x100_0000_01b3);
-    }
-}
-
-/// Structural identity of a network graph: every field that can change the
-/// emitted instruction stream (shapes, layer kinds, wiring) is folded in.
-pub fn net_fingerprint(net: &[NetLayer]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    fnv(&mut h, net.len() as u64);
-    for layer in net {
-        fnv(&mut h, layer.input as u64);
-        fnv(&mut h, layer.residual_from.map(|i| i as u64 + 1).unwrap_or(0));
-        match &layer.kind {
-            LayerKind::Conv(c) => {
-                fnv(&mut h, 1);
-                fnv_str(&mut h, &c.name);
-                let p = c.params;
-                for v in [p.h, p.w, p.c_in, p.c_out, p.kh, p.kw, p.stride, p.pad] {
-                    fnv(&mut h, v as u64);
-                }
-                fnv(&mut h, c.relu as u64);
-                fnv(&mut h, c.residual as u64);
-                fnv(&mut h, c.quantized as u64);
-            }
-            LayerKind::AvgPool { h: ph, w: pw, c } => {
-                fnv(&mut h, 2);
-                for v in [*ph, *pw, *c] {
-                    fnv(&mut h, v as u64);
-                }
-            }
-            LayerKind::Fc { k, n, name } => {
-                fnv(&mut h, 3);
-                fnv_str(&mut h, name);
-                fnv(&mut h, *k as u64);
-                fnv(&mut h, *n as u64);
-            }
-        }
-    }
-    h
-}
+// ---- machine fingerprint (cache-key partner of NetGraph::fingerprint) ----
+//
+// The network-side identity moved into [`NetGraph::fingerprint`]
+// (`crate::nn::graph`), which subsumes the structural `net_fingerprint`
+// hash this module used to own.
 
 /// Structural identity of a machine configuration: every timing-model knob.
 pub fn machine_fingerprint(cfg: &MachineConfig) -> u64 {
@@ -240,6 +191,8 @@ pub(crate) struct InputSpec {
 pub struct CompiledProgram {
     pub(crate) net_fp: u64,
     pub(crate) machine_fp: u64,
+    /// Name of the [`NetGraph`] this program was compiled from.
+    pub(crate) model_name: String,
     pub(crate) machine_name: String,
     pub(crate) schedule: PrecisionMap,
     /// Compile-time heap base: the program's addresses are valid as-is when
@@ -287,9 +240,15 @@ impl CompiledProgram {
         &self.schedule
     }
 
-    /// Fingerprint of the network graph ([`net_fingerprint`]).
+    /// Fingerprint of the model graph ([`NetGraph::fingerprint`]).
     pub fn net_fingerprint(&self) -> u64 {
         self.net_fp
+    }
+
+    /// Name of the model graph this program was compiled from
+    /// ([`NetGraph::name`]).
+    pub fn model(&self) -> &str {
+        &self.model_name
     }
 
     /// Fingerprint of the machine ([`machine_fingerprint`]).
@@ -338,7 +297,7 @@ impl CompiledProgram {
 /// recording [`Sim`](crate::sim::Sim) — no cycles are simulated and no
 /// vector data flows.
 pub fn compile(
-    net: &[NetLayer],
+    net: &NetGraph,
     machine: &MachineConfig,
     schedule: &PrecisionMap,
 ) -> Result<CompiledProgram, String> {
@@ -358,7 +317,7 @@ pub fn compile(
 /// to the single-core program. At `plan.shards() == 1` the emission is
 /// instruction- and image-identical to [`compile`].
 pub fn compile_shard(
-    net: &[NetLayer],
+    net: &NetGraph,
     machine: &MachineConfig,
     schedule: &PrecisionMap,
     plan: &crate::nn::model::ShardPlan,
@@ -388,13 +347,14 @@ mod tests {
     #[test]
     fn fingerprints_separate_deployments() {
         let net = demo_net();
-        let fp = net_fingerprint(&net);
-        assert_eq!(fp, net_fingerprint(&demo_net()), "fingerprint must be deterministic");
-        let mut other = demo_net();
-        if let LayerKind::Fc { n, .. } = &mut other.last_mut().unwrap().kind {
-            *n = 10;
-        }
-        assert_ne!(fp, net_fingerprint(&other), "shape change must change the key");
+        let fp = net.fingerprint();
+        assert_eq!(fp, demo_net().fingerprint(), "fingerprint must be deterministic");
+        // A different classifier width is a different model identity.
+        let other = crate::nn::zoo::model("tiny@10").unwrap();
+        assert_ne!(fp, other.fingerprint(), "shape change must change the key");
+        // So is a different topology under the same class count.
+        let quarknet = crate::nn::zoo::model("quarknet@100").unwrap();
+        assert_ne!(fp, quarknet.fingerprint());
         assert_ne!(
             machine_fingerprint(&MachineConfig::quark(4)),
             machine_fingerprint(&MachineConfig::quark(8)),

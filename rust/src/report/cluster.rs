@@ -13,8 +13,8 @@
 use crate::arch::MachineConfig;
 use crate::cluster::{cluster_timing, compile_cluster, ClusterTiming};
 use crate::nn::model::{Precision, PrecisionMap};
-use crate::nn::resnet::{resnet18_cifar, resnet18_mixed_schedule};
-use crate::nn::NetLayer;
+use crate::nn::resnet::resnet18_mixed_schedule;
+use crate::nn::{zoo, NetGraph};
 
 /// One (schedule, shard count) point of the scaling sweep.
 #[derive(Clone, Debug)]
@@ -46,7 +46,7 @@ pub const DEFAULT_SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
 
 /// Run the sweep on `net` (Quark-4L; schedule differences are then
 /// schedule-only, like the mixed report).
-pub fn generate(net: &[NetLayer], shard_counts: &[usize]) -> ClusterReport {
+pub fn generate(net: &NetGraph, shard_counts: &[usize]) -> ClusterReport {
     let machine = MachineConfig::quark(4);
     let w2a2 = PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
     let w1a1 = PrecisionMap::uniform(Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true });
@@ -87,7 +87,7 @@ pub fn generate(net: &[NetLayer], shard_counts: &[usize]) -> ClusterReport {
 /// Full-size sweep (the paper's ResNet-18/CIFAR-100 workload) at the
 /// default shard counts.
 pub fn generate_default() -> ClusterReport {
-    generate(&resnet18_cifar(100), &DEFAULT_SHARD_COUNTS)
+    generate(&zoo::model("resnet18-cifar@100").expect("registry entry"), &DEFAULT_SHARD_COUNTS)
 }
 
 impl ClusterReport {

@@ -4,8 +4,7 @@
 
 use crate::arch::MachineConfig;
 use crate::nn::model::{ModelRunner, Precision};
-use crate::nn::resnet::resnet18_cifar;
-use crate::nn::NetLayer;
+use crate::nn::{zoo, NetGraph};
 use crate::sim::{Sim, SimMode};
 
 /// One Fig. 3 series: per-quantized-layer cycle counts for a configuration.
@@ -24,7 +23,7 @@ pub struct Fig3 {
     pub series: Vec<Fig3Series>,
 }
 
-fn run_series(cfg: MachineConfig, precision: Precision, net: &[NetLayer]) -> Fig3Series {
+fn run_series(cfg: MachineConfig, precision: Precision, net: &NetGraph) -> Fig3Series {
     let mut sim = Sim::new(cfg.clone());
     sim.set_mode(SimMode::TimingOnly);
     let reports = ModelRunner::run(&mut sim, net, precision);
@@ -40,7 +39,7 @@ fn run_series(cfg: MachineConfig, precision: Precision, net: &[NetLayer]) -> Fig
 }
 
 /// Generate the figure data on the paper's configurations.
-pub fn generate(net: &[NetLayer]) -> Fig3 {
+pub fn generate(net: &NetGraph) -> Fig3 {
     let baseline = run_series(MachineConfig::ara(4), Precision::Int8, net);
     let series = vec![
         run_series(MachineConfig::ara(4), Precision::Fp32, net),
@@ -65,7 +64,7 @@ pub fn generate(net: &[NetLayer]) -> Fig3 {
 
 /// Full-size figure (the paper's workload).
 pub fn generate_default() -> Fig3 {
-    generate(&resnet18_cifar(100))
+    generate(&zoo::model("resnet18-cifar@100").expect("registry entry"))
 }
 
 impl Fig3 {
@@ -141,22 +140,37 @@ impl Fig3 {
 mod tests {
     use super::*;
     use crate::kernels::Conv2dParams;
-    use crate::nn::{ConvLayer, LayerKind};
+    use crate::nn::{ConvLayer, LayerKind, NetLayer};
 
-    /// A two-conv slice — keeps the test fast while exercising the whole
-    /// generator pipeline.
-    fn mini_net() -> Vec<NetLayer> {
-        let conv = |name: &str, c: usize| ConvLayer {
+    /// A stem + two quantized convs — keeps the test fast while exercising
+    /// the whole generator pipeline.
+    fn mini_net() -> NetGraph {
+        let conv = |name: &str, c_in: usize, quantized: bool| ConvLayer {
             name: name.into(),
-            params: Conv2dParams { h: 8, w: 8, c_in: c, c_out: c, kh: 3, kw: 3, stride: 1, pad: 1 },
+            params: Conv2dParams {
+                h: 8,
+                w: 8,
+                c_in,
+                c_out: 64,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
             relu: true,
             residual: false,
-            quantized: true,
+            quantized,
         };
-        vec![
-            NetLayer { kind: LayerKind::Conv(conv("c1", 64)), input: 0, residual_from: None },
-            NetLayer { kind: LayerKind::Conv(conv("c2", 64)), input: 1, residual_from: None },
-        ]
+        NetGraph::new(
+            "fig3-mini",
+            0,
+            vec![
+                NetLayer { kind: LayerKind::Conv(conv("stem", 3, false)), input: 0, residual_from: None },
+                NetLayer { kind: LayerKind::Conv(conv("c1", 64, true)), input: 1, residual_from: None },
+                NetLayer { kind: LayerKind::Conv(conv("c2", 64, true)), input: 2, residual_from: None },
+            ],
+        )
+        .unwrap()
     }
 
     #[test]

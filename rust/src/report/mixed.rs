@@ -11,8 +11,8 @@
 
 use crate::arch::MachineConfig;
 use crate::nn::model::{ModelRunner, Precision, PrecisionMap};
-use crate::nn::resnet::{resnet18_cifar, resnet18_mixed_schedule};
-use crate::nn::NetLayer;
+use crate::nn::resnet::resnet18_mixed_schedule;
+use crate::nn::{zoo, NetGraph};
 use crate::sim::{Sim, SimMode};
 
 /// Per-layer cycles under the three schedules.
@@ -38,7 +38,7 @@ pub struct MixedReport {
 
 fn run_cycles(
     machine: &MachineConfig,
-    net: &[NetLayer],
+    net: &NetGraph,
     schedule: &PrecisionMap,
 ) -> Vec<(String, String, u64)> {
     let mut sim = Sim::new(machine.clone());
@@ -52,7 +52,7 @@ fn run_cycles(
 
 /// Generate the comparison on Quark-4L (int8 is integer-only, so all three
 /// schedules run on the same machine).
-pub fn generate(net: &[NetLayer]) -> MixedReport {
+pub fn generate(net: &NetGraph) -> MixedReport {
     let machine = MachineConfig::quark(4);
     let int2_prec = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
     let int8 = run_cycles(&machine, net, &PrecisionMap::uniform(Precision::Int8));
@@ -81,7 +81,7 @@ pub fn generate(net: &[NetLayer]) -> MixedReport {
 
 /// Full-size comparison (the paper's ResNet-18/CIFAR-100 workload).
 pub fn generate_default() -> MixedReport {
-    generate(&resnet18_cifar(100))
+    generate(&zoo::model("resnet18-cifar@100").expect("registry entry"))
 }
 
 impl MixedReport {
@@ -143,30 +143,46 @@ impl MixedReport {
 mod tests {
     use super::*;
     use crate::kernels::Conv2dParams;
-    use crate::nn::{ConvLayer, LayerKind};
+    use crate::nn::{ConvLayer, LayerKind, NetLayer};
 
     /// Two stages' worth of names on a small net: the mixed schedule keeps
     /// `_s1` at int8 and drops `_s2` to 2-bit.
-    fn mini_net() -> Vec<NetLayer> {
-        let conv = |name: &str| ConvLayer {
+    fn mini_net() -> NetGraph {
+        let conv = |name: &str, c_in: usize, quantized: bool| ConvLayer {
             name: name.into(),
-            params: Conv2dParams { h: 8, w: 8, c_in: 64, c_out: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
+            params: Conv2dParams {
+                h: 8,
+                w: 8,
+                c_in,
+                c_out: 64,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
             relu: true,
             residual: false,
-            quantized: true,
+            quantized,
         };
-        vec![
-            NetLayer { kind: LayerKind::Conv(conv("conv1_s1b1a")), input: 0, residual_from: None },
-            NetLayer { kind: LayerKind::Conv(conv("conv2_s2b1a")), input: 1, residual_from: None },
-        ]
+        NetGraph::new(
+            "mixed-mini",
+            0,
+            vec![
+                NetLayer { kind: LayerKind::Conv(conv("stem", 3, false)), input: 0, residual_from: None },
+                NetLayer { kind: LayerKind::Conv(conv("conv1_s1b1a", 64, true)), input: 1, residual_from: None },
+                NetLayer { kind: LayerKind::Conv(conv("conv2_s2b1a", 64, true)), input: 2, residual_from: None },
+            ],
+        )
+        .unwrap()
     }
 
     #[test]
     fn mixed_total_lands_between_uniforms_on_mini_net() {
         let rep = generate(&mini_net());
-        assert_eq!(rep.rows.len(), 2);
-        assert_eq!(rep.rows[0].mixed_precision, "int8");
-        assert_eq!(rep.rows[1].mixed_precision, "w2a2");
+        assert_eq!(rep.rows.len(), 3);
+        assert_eq!(rep.rows[0].mixed_precision, "int8", "the stem is pinned");
+        assert_eq!(rep.rows[1].mixed_precision, "int8");
+        assert_eq!(rep.rows[2].mixed_precision, "w2a2");
         assert!(
             rep.int2_total < rep.mixed_total && rep.mixed_total < rep.int8_total,
             "w2a2 {} < mixed {} < int8 {}",

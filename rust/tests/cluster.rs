@@ -27,8 +27,8 @@ use quark::cluster::{cluster_timing, compile_cluster, ClusterCores};
 use quark::kernels::Conv2dParams;
 use quark::nn::golden::run_golden;
 use quark::nn::model::{Precision, PrecisionMap};
-use quark::nn::resnet::{resnet18_cifar, resnet18_mixed_schedule};
-use quark::nn::{ConvLayer, LayerKind, NetLayer};
+use quark::nn::resnet::resnet18_mixed_schedule;
+use quark::nn::{zoo, ConvLayer, LayerKind, NetGraph, NetLayer};
 use quark::program::compile;
 use quark::sim::{Sim, SimMode};
 
@@ -68,53 +68,58 @@ fn conv(
 /// the stage-2 downsampling block (1×1 stride-2 projection + stride-2 conv
 /// + residual), global pool, 100-way FC. Layer names follow the full
 /// graph's convention so [`resnet18_mixed_schedule`] applies unchanged.
-fn resnet_head() -> Vec<NetLayer> {
-    vec![
-        // map 1
-        NetLayer {
-            kind: LayerKind::Conv(conv("stem", 16, 3, 64, 3, 1, true, false, false)),
-            input: 0,
-            residual_from: None,
-        },
-        // map 2
-        NetLayer {
-            kind: LayerKind::Conv(conv("conv1_s1b1a", 16, 64, 64, 3, 1, true, false, true)),
-            input: 1,
-            residual_from: None,
-        },
-        // map 3: closes the stage-1 block (skip from the stem).
-        NetLayer {
-            kind: LayerKind::Conv(conv("conv2_s1b1b", 16, 64, 64, 3, 1, true, true, true)),
-            input: 2,
-            residual_from: Some(1),
-        },
-        // map 4: projection shortcut (1×1, stride 2, 64→128).
-        NetLayer {
-            kind: LayerKind::Conv(conv("conv3_ds_s2b1", 16, 64, 128, 1, 2, false, false, true)),
-            input: 3,
-            residual_from: None,
-        },
-        // map 5
-        NetLayer {
-            kind: LayerKind::Conv(conv("conv4_s2b1a", 16, 64, 128, 3, 2, true, false, true)),
-            input: 3,
-            residual_from: None,
-        },
-        // map 6: closes the stage-2 block (skip from the projection).
-        NetLayer {
-            kind: LayerKind::Conv(conv("conv5_s2b1b", 8, 128, 128, 3, 1, true, true, true)),
-            input: 5,
-            residual_from: Some(4),
-        },
-        // map 7
-        NetLayer { kind: LayerKind::AvgPool { h: 8, w: 8, c: 128 }, input: 6, residual_from: None },
-        // map 8
-        NetLayer {
-            kind: LayerKind::Fc { k: 128, n: 100, name: "fc".into() },
-            input: 7,
-            residual_from: None,
-        },
-    ]
+fn resnet_head() -> NetGraph {
+    NetGraph::new(
+        "resnet-head@100",
+        100,
+        vec![
+            // map 1
+            NetLayer {
+                kind: LayerKind::Conv(conv("stem", 16, 3, 64, 3, 1, true, false, false)),
+                input: 0,
+                residual_from: None,
+            },
+            // map 2
+            NetLayer {
+                kind: LayerKind::Conv(conv("conv1_s1b1a", 16, 64, 64, 3, 1, true, false, true)),
+                input: 1,
+                residual_from: None,
+            },
+            // map 3: closes the stage-1 block (skip from the stem).
+            NetLayer {
+                kind: LayerKind::Conv(conv("conv2_s1b1b", 16, 64, 64, 3, 1, true, true, true)),
+                input: 2,
+                residual_from: Some(1),
+            },
+            // map 4: projection shortcut (1×1, stride 2, 64→128).
+            NetLayer {
+                kind: LayerKind::Conv(conv("conv3_ds_s2b1", 16, 64, 128, 1, 2, false, false, true)),
+                input: 3,
+                residual_from: None,
+            },
+            // map 5
+            NetLayer {
+                kind: LayerKind::Conv(conv("conv4_s2b1a", 16, 64, 128, 3, 2, true, false, true)),
+                input: 3,
+                residual_from: None,
+            },
+            // map 6: closes the stage-2 block (skip from the projection).
+            NetLayer {
+                kind: LayerKind::Conv(conv("conv5_s2b1b", 8, 128, 128, 3, 1, true, true, true)),
+                input: 5,
+                residual_from: Some(4),
+            },
+            // map 7
+            NetLayer { kind: LayerKind::AvgPool { h: 8, w: 8, c: 128 }, input: 6, residual_from: None },
+            // map 8
+            NetLayer {
+                kind: LayerKind::Fc { k: 128, n: 100, name: "fc".into() },
+                input: 7,
+                residual_from: None,
+            },
+        ],
+    )
+    .unwrap()
 }
 
 fn test_input() -> Vec<u8> {
@@ -122,7 +127,7 @@ fn test_input() -> Vec<u8> {
 }
 
 /// The three acceptance schedules on a given graph.
-fn schedules(net: &[NetLayer]) -> Vec<(&'static str, PrecisionMap)> {
+fn schedules(net: &NetGraph) -> Vec<(&'static str, PrecisionMap)> {
     vec![
         ("w2a2", PrecisionMap::uniform(W2A2)),
         ("w1a1", PrecisionMap::uniform(W1A1)),
@@ -131,7 +136,7 @@ fn schedules(net: &[NetLayer]) -> Vec<(&'static str, PrecisionMap)> {
 }
 
 /// Single-core reference: functional replay of the unsharded program.
-fn single_core_logits(net: &[NetLayer], sched: &PrecisionMap, input: &[u8]) -> Vec<u8> {
+fn single_core_logits(net: &NetGraph, sched: &PrecisionMap, input: &[u8]) -> Vec<u8> {
     let prog = compile(net, &MachineConfig::quark(4), sched).unwrap();
     let mut sim = Sim::new(MachineConfig::quark(4));
     let base = sim.alloc(prog.mem_len());
@@ -139,14 +144,14 @@ fn single_core_logits(net: &[NetLayer], sched: &PrecisionMap, input: &[u8]) -> V
     sim.read_u8s(run.out_addr, run.out_elems)
 }
 
-fn cluster_logits(net: &[NetLayer], sched: &PrecisionMap, input: &[u8], shards: usize) -> Vec<u8> {
+fn cluster_logits(net: &NetGraph, sched: &PrecisionMap, input: &[u8], shards: usize) -> Vec<u8> {
     let machine = MachineConfig::quark(4);
     let cluster = compile_cluster(net, &machine, sched, shards).unwrap();
     let mut cores = ClusterCores::new(&machine, shards);
     cores.infer(&cluster, input).logits
 }
 
-fn run_functional_differential(net: &[NetLayer], shard_counts: &[usize]) {
+fn run_functional_differential(net: &NetGraph, shard_counts: &[usize]) {
     let input = test_input();
     for (label, sched) in schedules(net) {
         let single = single_core_logits(net, &sched, &input);
@@ -180,11 +185,16 @@ fn uneven_channel_splits_gather_bit_exactly() {
     // the bit-plane kernels), sharded 8 ways: 100 % 8 != 0, so shards own
     // 12- and 13-channel ranges. And a 10-class head at 4 shards (2/3/2/3).
     for classes in [100usize, 10] {
-        let net = vec![NetLayer {
-            kind: LayerKind::Fc { k: 32 * 32 * 3, n: classes, name: "fc".into() },
-            input: 0,
-            residual_from: None,
-        }];
+        let net = NetGraph::new(
+            "fc-only",
+            classes,
+            vec![NetLayer {
+                kind: LayerKind::Fc { k: 32 * 32 * 3, n: classes, name: "fc".into() },
+                input: 0,
+                residual_from: None,
+            }],
+        )
+        .unwrap();
         let input = test_input();
         let sched = PrecisionMap::uniform(W2A2);
         let single = single_core_logits(&net, &sched, &input);
@@ -202,7 +212,7 @@ fn one_shard_cluster_cycles_equal_single_core_exactly_full_resnet18() {
     // Acceptance: reported cluster cycles at N = 1 equal single-core cycles
     // exactly — on the full ResNet-18 graph (TimingOnly; the cycle model is
     // data-independent).
-    let net = resnet18_cifar(100);
+    let net = zoo::model("resnet18-cifar@100").unwrap();
     let machine = MachineConfig::quark(4);
     let sched = PrecisionMap::uniform(W2A2);
 
@@ -296,5 +306,5 @@ fn cluster_inference_is_repeatable_on_persistent_cores() {
 fn full_resnet18_sharded_logits_bit_exact() {
     // The unabridged acceptance run: full ResNet-18, shard counts {1, 2, 4},
     // all three schedules, vs single-core replay and the i128 golden.
-    run_functional_differential(&resnet18_cifar(100), &[1, 2, 4]);
+    run_functional_differential(&zoo::model("resnet18-cifar@100").unwrap(), &[1, 2, 4]);
 }

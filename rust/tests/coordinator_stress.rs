@@ -22,7 +22,7 @@ fn concurrent_submitters_all_get_answers() {
 
     // Warm the timing cache so the storm measures the steady-state path.
     coord
-        .submit(InferenceRequest { id: u64::MAX, input: None, schedule: None, shards: None })
+        .submit(InferenceRequest { id: u64::MAX, input: None, net: None, schedule: None, shards: None })
         .unwrap()
         .recv_timeout(Duration::from_secs(120))
         .unwrap();
@@ -36,7 +36,7 @@ fn concurrent_submitters_all_get_answers() {
                     let id = (t as u64) * PER_SUBMITTER + k;
                     // Retry on backpressure until accepted.
                     let rx = loop {
-                        match coord.submit(InferenceRequest { id, input: None, schedule: None, shards: None }) {
+                        match coord.submit(InferenceRequest { id, input: None, net: None, schedule: None, shards: None }) {
                             Ok(rx) => break rx,
                             Err(SubmitError::Busy { .. }) => {
                                 std::thread::sleep(Duration::from_millis(1))

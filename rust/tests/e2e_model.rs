@@ -5,7 +5,8 @@ mod support;
 use quark::arch::MachineConfig;
 use quark::coordinator::demo_net;
 use quark::nn::model::{ModelRunner, Precision};
-use quark::nn::resnet::{quantized_layers, resnet18_cifar};
+use quark::nn::resnet::quantized_layers;
+use quark::nn::zoo;
 use quark::sim::{Sim, SimMode};
 
 #[test]
@@ -26,7 +27,7 @@ fn demo_net_full_mode_produces_data_and_matches_timing_only() {
 #[test]
 fn resnet18_per_layer_ordering_matches_paper_shape() {
     // The Fig. 3 claims at whole-network granularity, on the real graph.
-    let net = resnet18_cifar(100);
+    let net = zoo::model("resnet18-cifar@100").unwrap();
     let total = |cfg: MachineConfig, prec: Precision| -> u64 {
         let mut sim = Sim::new(cfg);
         sim.set_mode(SimMode::TimingOnly);
@@ -63,13 +64,13 @@ fn resnet18_per_layer_ordering_matches_paper_shape() {
 
 #[test]
 fn resnet18_has_twenty_quantized_kernels() {
-    let net = resnet18_cifar(100);
+    let net = zoo::model("resnet18-cifar@100").unwrap();
     assert_eq!(quantized_layers(&net).len(), 20);
 }
 
 #[test]
 fn quark8_runs_the_full_model_faster_than_quark4() {
-    let net = resnet18_cifar(100);
+    let net = zoo::model("resnet18-cifar@100").unwrap();
     let total = |lanes: usize| -> u64 {
         let mut sim = Sim::new(MachineConfig::quark(lanes));
         sim.set_mode(SimMode::TimingOnly);

@@ -20,8 +20,8 @@ use quark::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
 use quark::kernels::Conv2dParams;
 use quark::nn::golden::run_golden;
 use quark::nn::model::{ModelRunner, Precision, PrecisionMap};
-use quark::nn::resnet::{resnet18_cifar, resnet18_mixed_schedule};
-use quark::nn::{ConvLayer, LayerKind, NetLayer};
+use quark::nn::resnet::resnet18_mixed_schedule;
+use quark::nn::{zoo, ConvLayer, LayerKind, NetGraph, NetLayer};
 use quark::sim::{Sim, SimMode};
 
 const INT8: Precision = Precision::Int8;
@@ -31,7 +31,7 @@ const W1A1: Precision = Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true 
 /// A ResNet basic block at 8×8×64 (stem → projection + two 3×3 convs with a
 /// residual add → pool → FC): small enough for `Full`-mode simulation in a
 /// debug test while covering every layer kind and skip wiring.
-fn block_net() -> Vec<NetLayer> {
+fn block_net() -> NetGraph {
     let conv = |name: &str,
                 c_in: usize,
                 ksz: usize,
@@ -53,20 +53,25 @@ fn block_net() -> Vec<NetLayer> {
         residual,
         quantized,
     };
-    vec![
-        // 0: unquantized stem (pinned to int8 by resolve()) — writes map 1.
-        NetLayer { kind: LayerKind::Conv(conv("stem", 3, 3, true, false, false)), input: 0, residual_from: None },
-        // 1: projection shortcut — map 2.
-        NetLayer { kind: LayerKind::Conv(conv("proj", 64, 1, false, false, true)), input: 1, residual_from: None },
-        // 2: first block conv — map 3.
-        NetLayer { kind: LayerKind::Conv(conv("c1", 64, 3, true, false, true)), input: 1, residual_from: None },
-        // 3: second block conv, adds the projection residual — map 4.
-        NetLayer { kind: LayerKind::Conv(conv("c2", 64, 3, true, true, true)), input: 3, residual_from: Some(2) },
-        // 4: global pool — map 5.
-        NetLayer { kind: LayerKind::AvgPool { h: 8, w: 8, c: 64 }, input: 4, residual_from: None },
-        // 5: classifier — map 6.
-        NetLayer { kind: LayerKind::Fc { k: 64, n: 10, name: "fc".into() }, input: 5, residual_from: None },
-    ]
+    NetGraph::new(
+        "mixed-block@10",
+        10,
+        vec![
+            // 0: unquantized stem (pinned to int8 by resolve()) — writes map 1.
+            NetLayer { kind: LayerKind::Conv(conv("stem", 3, 3, true, false, false)), input: 0, residual_from: None },
+            // 1: projection shortcut — map 2.
+            NetLayer { kind: LayerKind::Conv(conv("proj", 64, 1, false, false, true)), input: 1, residual_from: None },
+            // 2: first block conv — map 3.
+            NetLayer { kind: LayerKind::Conv(conv("c1", 64, 3, true, false, true)), input: 1, residual_from: None },
+            // 3: second block conv, adds the projection residual — map 4.
+            NetLayer { kind: LayerKind::Conv(conv("c2", 64, 3, true, true, true)), input: 3, residual_from: Some(2) },
+            // 4: global pool — map 5.
+            NetLayer { kind: LayerKind::AvgPool { h: 8, w: 8, c: 64 }, input: 4, residual_from: None },
+            // 5: classifier — map 6.
+            NetLayer { kind: LayerKind::Fc { k: 64, n: 10, name: "fc".into() }, input: 5, residual_from: None },
+        ],
+    )
+    .unwrap()
 }
 
 fn test_input() -> Vec<u8> {
@@ -146,17 +151,17 @@ fn mixed_resnet18_serves_between_uniform_baselines_via_coordinator() {
     // The acceptance run: full ResNet-18 with a non-uniform map through the
     // coordinator INFER path; its cycle count sits strictly between the
     // uniform int8 and uniform 2-bit deployments.
-    let net = resnet18_cifar(100);
+    let net = zoo::model("resnet18-cifar@100").unwrap();
     let mixed_map = resnet18_mixed_schedule(&net);
     let mut cfg = CoordinatorConfig::demo();
-    cfg.net = Arc::new(net);
+    cfg.models = vec![Arc::new(net)];
     cfg.schedule = PrecisionMap::uniform(INT8);
     cfg.workers = 1;
     cfg.batch_size = 1;
     cfg.batch_timeout = Duration::from_millis(1);
     let coord = Coordinator::start(cfg);
     let get = |id: u64, sched: Option<PrecisionMap>| {
-        let rx = coord.submit(InferenceRequest { id, input: None, schedule: sched, shards: None }).unwrap();
+        let rx = coord.submit(InferenceRequest { id, input: None, net: None, schedule: sched, shards: None }).unwrap();
         rx.recv_timeout(Duration::from_secs(600)).unwrap()
     };
     let int8 = get(0, None); // deployment default: uniform int8
@@ -171,7 +176,8 @@ fn mixed_resnet18_serves_between_uniform_baselines_via_coordinator() {
     );
     assert!(mixed.precision.starts_with("mixed("), "{}", mixed.precision);
     // Each schedule is its own cache entry; repeats are lookups.
-    let again = get(3, Some(resnet18_mixed_schedule(&resnet18_cifar(100))));
+    let again =
+        get(3, Some(resnet18_mixed_schedule(&zoo::model("resnet18-cifar@100").unwrap())));
     assert!(again.timing_cached, "equal schedules must share a cache entry");
     assert_eq!(again.sim_cycles, mixed.sim_cycles);
     coord.shutdown();
@@ -190,7 +196,7 @@ fn mixed_schedule_functional_inference_produces_real_logits() {
     let input = vec![200u8; 32 * 32 * 3];
     let get = |id: u64, sched: Option<PrecisionMap>| {
         let rx = coord
-            .submit(InferenceRequest { id, input: Some(input.clone()), schedule: sched, shards: None })
+            .submit(InferenceRequest { id, input: Some(input.clone()), net: None, schedule: sched, shards: None })
             .unwrap();
         rx.recv_timeout(Duration::from_secs(300)).unwrap()
     };

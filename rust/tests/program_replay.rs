@@ -18,7 +18,7 @@ use quark::arch::MachineConfig;
 use quark::kernels::Conv2dParams;
 use quark::nn::golden::run_golden;
 use quark::nn::model::{ModelRunner, Precision, PrecisionMap};
-use quark::nn::{ConvLayer, LayerKind, NetLayer};
+use quark::nn::{ConvLayer, LayerKind, NetGraph, NetLayer};
 use quark::program::compile;
 use quark::sim::{Sim, SimMode};
 
@@ -26,7 +26,7 @@ const INT8: Precision = Precision::Int8;
 const W2A2: Precision = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
 const W1A1: Precision = Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true };
 
-fn block_net() -> Vec<NetLayer> {
+fn block_net() -> NetGraph {
     let conv = |name: &str,
                 c_in: usize,
                 ksz: usize,
@@ -48,14 +48,19 @@ fn block_net() -> Vec<NetLayer> {
         residual,
         quantized,
     };
-    vec![
-        NetLayer { kind: LayerKind::Conv(conv("stem", 3, 3, true, false, false)), input: 0, residual_from: None },
-        NetLayer { kind: LayerKind::Conv(conv("proj", 64, 1, false, false, true)), input: 1, residual_from: None },
-        NetLayer { kind: LayerKind::Conv(conv("c1", 64, 3, true, false, true)), input: 1, residual_from: None },
-        NetLayer { kind: LayerKind::Conv(conv("c2", 64, 3, true, true, true)), input: 3, residual_from: Some(2) },
-        NetLayer { kind: LayerKind::AvgPool { h: 8, w: 8, c: 64 }, input: 4, residual_from: None },
-        NetLayer { kind: LayerKind::Fc { k: 64, n: 10, name: "fc".into() }, input: 5, residual_from: None },
-    ]
+    NetGraph::new(
+        "replay-block@10",
+        10,
+        vec![
+            NetLayer { kind: LayerKind::Conv(conv("stem", 3, 3, true, false, false)), input: 0, residual_from: None },
+            NetLayer { kind: LayerKind::Conv(conv("proj", 64, 1, false, false, true)), input: 1, residual_from: None },
+            NetLayer { kind: LayerKind::Conv(conv("c1", 64, 3, true, false, true)), input: 1, residual_from: None },
+            NetLayer { kind: LayerKind::Conv(conv("c2", 64, 3, true, true, true)), input: 3, residual_from: Some(2) },
+            NetLayer { kind: LayerKind::AvgPool { h: 8, w: 8, c: 64 }, input: 4, residual_from: None },
+            NetLayer { kind: LayerKind::Fc { k: 64, n: 10, name: "fc".into() }, input: 5, residual_from: None },
+        ],
+    )
+    .unwrap()
 }
 
 fn test_input() -> Vec<u8> {

@@ -1,0 +1,199 @@
+//! Differential + identity proof of the model registry
+//! ([`quark::nn::zoo`]): every zoo topology is a first-class workload —
+//!
+//! * **bit-exact vs the naive-i128 golden**: the new topologies
+//!   (`resnet34-cifar`, `quarknet`, `mlp`) run layer-by-layer bit-identical
+//!   to [`quark::nn::golden::run_golden`] at uniform w2a2 and a mixed
+//!   schedule, in `Full` mode, with `TimingOnly` cycle counts identical to
+//!   the `Full` run (both `SimMode`s — the cycle model is
+//!   data-independent);
+//! * **cluster N = 1 emission identity per zoo model**: for every
+//!   registered model, the 1-shard cluster program is artifact-identical to
+//!   the single-core [`quark::program::compile`] output and reports exactly
+//!   its cycles (zero sync);
+//! * **registry identity**: `resnet18-cifar@100` through the registry is
+//!   the exact paper graph (the default-path regression guard lives next to
+//!   the emitter, in `nn::model`'s unit tests, where it can drive the raw
+//!   layer list through the shared emission routine).
+//!
+//! The deep ResNet-34 runs its `Full`-mode differential on a
+//! [`zoo::model_head`] prefix (stem + the first stage-1 block, i.e. the
+//! residual add) — full-graph `Full` mode is debug-prohibitive, the same
+//! trade `rust/tests/cluster.rs` makes — and its full graph in `TimingOnly`
+//! mode.
+
+use quark::arch::MachineConfig;
+use quark::cluster::{cluster_timing, compile_cluster};
+use quark::nn::golden::run_golden;
+use quark::nn::model::{ModelRunner, Precision, PrecisionMap};
+use quark::nn::{zoo, NetGraph};
+use quark::program::compile;
+use quark::sim::{Sim, SimMode};
+
+const W2A2: Precision = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
+
+fn test_input() -> Vec<u8> {
+    (0..32 * 32 * 3).map(|i| ((i * 23 + 19) % 251) as u8).collect()
+}
+
+/// The acceptance schedules: uniform w2a2, the registry's mixed schedule
+/// (stage-1 + FC at int8 — on an all-FC graph that resolves to uniform
+/// int8, still a distinct cache key), and a hand-picked boundary schedule
+/// pinning one mid-graph layer to int8 so every topology exercises a real
+/// 8-bit↔2-bit consumer-grid re-pack.
+fn schedules(net: &NetGraph, boundary_layer: &str) -> Vec<(&'static str, PrecisionMap)> {
+    vec![
+        ("w2a2", PrecisionMap::uniform(W2A2)),
+        ("mixed", zoo::mixed_schedule(net)),
+        ("boundary", PrecisionMap::uniform(W2A2).with(boundary_layer, Precision::Int8)),
+    ]
+}
+
+/// Full-mode emission vs the i128 golden, layer by layer, plus the
+/// TimingOnly cycle identity of the same (net, schedule).
+fn run_differential(net: &NetGraph, boundary_layer: &str) {
+    let input = test_input();
+    for (label, sched) in schedules(net, boundary_layer) {
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        sim.set_mode(SimMode::Full);
+        let run = ModelRunner::run_scheduled(&mut sim, net, &sched, Some(&input));
+        let golden = run_golden(net, &sched, Some(&input));
+        assert_eq!(run.reports.len(), net.len());
+        for (i, r) in run.reports.iter().enumerate() {
+            assert_eq!(
+                sim.read_u8s(r.out_addr, r.out_elems),
+                golden.maps[i + 1],
+                "{}: layer {i} ({} @ {}) diverges from the i128 golden under {label}",
+                net.name(),
+                r.name,
+                r.precision.label()
+            );
+        }
+        // Both SimModes: TimingOnly reports the identical per-layer cycles.
+        let mut tsim = Sim::new(MachineConfig::quark(4));
+        tsim.set_mode(SimMode::TimingOnly);
+        let trun = ModelRunner::run_scheduled(&mut tsim, net, &sched, None);
+        for (f, t) in run.reports.iter().zip(trun.reports.iter()) {
+            assert_eq!(
+                f.run.cycles, t.run.cycles,
+                "{}: Full vs TimingOnly cycle drift at {} under {label}",
+                net.name(),
+                f.name
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_matches_golden_both_modes() {
+    // fc2 at int8 inside a w2a2 stack: 2-bit → 8-bit → 2-bit boundaries on
+    // a pure-GEMM graph.
+    run_differential(&zoo::model("mlp").unwrap(), "fc2");
+}
+
+#[test]
+fn quarknet_matches_golden_both_modes() {
+    // The 10-class variant: full graph (the plain-feedforward topology is
+    // Full-mode affordable end to end); c2 pinned for the boundary leg.
+    run_differential(&zoo::model("quarknet@10").unwrap(), "c2");
+}
+
+#[test]
+fn resnet34_head_matches_golden_both_modes() {
+    // stem + conv1_s1b1a + conv2_s1b1b: the residual add of the deep
+    // variant at Full-mode-affordable scale.
+    let head = zoo::model_head("resnet34-cifar@10", 3).unwrap();
+    assert_eq!(head.len(), 3);
+    run_differential(&head, "conv1_s1b1a");
+}
+
+#[test]
+fn resnet34_full_graph_runs_timing_only() {
+    // The whole [3,4,6,3] graph through the runner: every layer emits and
+    // the deep net costs roughly twice the quantized work of ResNet-18.
+    let net34 = zoo::model("resnet34-cifar@100").unwrap();
+    let net18 = zoo::model("resnet18-cifar@100").unwrap();
+    let cycles = |net: &NetGraph| -> u64 {
+        let mut sim = Sim::new(MachineConfig::quark(4));
+        sim.set_mode(SimMode::TimingOnly);
+        ModelRunner::run(&mut sim, net, W2A2).iter().map(|r| r.run.cycles).sum()
+    };
+    let (c34, c18) = (cycles(&net34), cycles(&net18));
+    assert!(
+        c34 > (c18 as f64 * 1.5) as u64 && c34 < c18 * 3,
+        "ResNet-34 should cost ~2x ResNet-18: {c34} vs {c18}"
+    );
+}
+
+#[test]
+fn cluster_n1_emission_identity_per_zoo_model() {
+    // Acceptance: for EVERY registered model (at its --fast profile, so the
+    // deep nets stay affordable), the 1-shard cluster program is
+    // artifact-identical to the single-core compile and its cluster timing
+    // equals the single-core cycles exactly, with zero sync.
+    let quark = MachineConfig::quark(4);
+    let sched = PrecisionMap::uniform(W2A2);
+    for e in zoo::entries() {
+        let net = zoo::model_profile(e.name, true).unwrap();
+        let prog = compile(&net, &quark, &sched).unwrap();
+        let mut sim = Sim::new(quark.clone());
+        sim.set_mode(SimMode::TimingOnly);
+        let base = sim.alloc(prog.mem_len());
+        let single = sim.execute(&prog, base).cycles;
+
+        let cluster = compile_cluster(&net, &quark, &sched, 1).unwrap();
+        let shard0 = &cluster.shard_programs()[0];
+        assert_eq!(shard0.trace_len(), prog.trace_len(), "{}", e.name);
+        assert_eq!(shard0.image_bytes(), prog.image_bytes(), "{}", e.name);
+        assert_eq!(shard0.mem_len(), prog.mem_len(), "{}", e.name);
+        let t = cluster_timing(&cluster, &quark);
+        assert_eq!(t.sync_cycles, 0, "{}", e.name);
+        assert_eq!(
+            t.total_cycles(),
+            single,
+            "{}: a 1-shard cluster must report exactly the single-core cycles",
+            e.name
+        );
+    }
+}
+
+#[test]
+fn zoo_models_shard_bit_exactly() {
+    // The new topologies survive tensor-parallel partitioning: mlp (pure
+    // GEMM stack, uneven 10-way classifier splits) and the quarknet head
+    // gather to logits bit-identical to their single-core programs.
+    let machine = MachineConfig::quark(4);
+    let sched = PrecisionMap::uniform(W2A2);
+    let input = test_input();
+    for (spec, shards) in [("mlp", 4usize), ("quarknet@10", 2)] {
+        let net = if spec == "mlp" {
+            zoo::model(spec).unwrap()
+        } else {
+            zoo::model_head(spec, 4).unwrap()
+        };
+        let prog = compile(&net, &machine, &sched).unwrap();
+        let mut sim = Sim::new(machine.clone());
+        let base = sim.alloc(prog.mem_len());
+        let run = sim.execute_functional(&prog, base, Some(&input));
+        let single = sim.read_u8s(run.out_addr, run.out_elems);
+
+        let cluster = compile_cluster(&net, &machine, &sched, shards).unwrap();
+        let mut cores = quark::cluster::ClusterCores::new(&machine, shards);
+        let sharded = cores.infer(&cluster, &input).logits;
+        assert_eq!(sharded, single, "{spec} at {shards} shards");
+    }
+}
+
+#[test]
+fn registry_resnet18_is_the_paper_graph() {
+    // Identity guard: the registry's default workload is structurally the
+    // exact graph the paper's reports have always used.
+    let g = zoo::model("resnet18-cifar@100").unwrap();
+    assert_eq!(
+        quark::nn::structural_fingerprint(&g),
+        quark::nn::structural_fingerprint(&quark::nn::resnet::resnet18_cifar(100)),
+    );
+    assert_eq!(g.num_classes(), 100);
+    assert_eq!(g.out_elems(), 100);
+    assert_eq!(quark::nn::resnet::quantized_layers(&g).len(), 20);
+}
