@@ -13,6 +13,9 @@
 //! w2a2. Pass `--fast` for a truncated 8-layer graph (smoke only; the
 //! assertion is calibrated to the full net and skipped).
 
+#[path = "support/bench_json.rs"]
+mod bench_json;
+
 use std::time::Instant;
 
 use quark::nn::zoo;
@@ -54,6 +57,19 @@ fn main() {
          sweep host wall-clock: {sweep_s:.2} s, shard programs compiled + replayed\n\
          on parallel host threads)"
     );
+    let rows: Vec<_> = rep
+        .rows
+        .iter()
+        .map(|r| {
+            bench_json::Row::new(&format!("{}_s{}", r.schedule, r.shards))
+                .field("total_cycles", r.total_cycles as f64)
+                .field("sync_cycles", r.sync_cycles as f64)
+                .field("speedup", r.speedup)
+                .field("sync_fraction", r.sync_fraction)
+                .field("mean_shard_util", r.mean_shard_util)
+        })
+        .collect();
+    bench_json::write("cluster_scaling", if fast { "fast" } else { "full" }, &rows);
     if !fast {
         let r = rep
             .rows

@@ -3,6 +3,9 @@
 //! about: repeated identical-shape requests served via the timing cache on
 //! persistent cores vs the old per-request-`Sim` re-simulation baseline.
 
+#[path = "support/bench_json.rs"]
+mod bench_json;
+
 use std::time::{Duration, Instant};
 
 use quark::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
@@ -62,6 +65,12 @@ fn main() {
     println!("per-request Sim baseline : {baseline_rps:>10.1} req/s");
     println!("cached coordinator (warm): {warm_rps:>10.1} req/s  (p50 {p50:.2} ms, p99 {p99:.2} ms)");
     println!("speedup                  : {:>10.1}x", warm_rps / baseline_rps);
+    let mut rows = vec![bench_json::Row::new("warm_vs_baseline")
+        .field("baseline_rps", baseline_rps)
+        .field("warm_rps", warm_rps)
+        .field("speedup", warm_rps / baseline_rps)
+        .field("p50_ms", p50)
+        .field("p99_ms", p99)];
 
     println!("\n== worker/batch sweep (warm cache, 128 requests each) ==");
     let n = 128u64;
@@ -70,8 +79,15 @@ fn main() {
         for batch in [1usize, 4, 16] {
             let (rps, p50, p99) = run(workers, batch, n);
             println!("{workers:>8} {batch:>6} {rps:>10.1} {p50:>10.2} {p99:>10.2}");
+            rows.push(
+                bench_json::Row::new(&format!("w{workers}_b{batch}"))
+                    .field("rps", rps)
+                    .field("p50_ms", p50)
+                    .field("p99_ms", p99),
+            );
         }
     }
     println!("\n(each request = one demo-net inference on a persistent simulated Quark-4L core;");
     println!(" timing resolved through the deterministic cache after the first batch)");
+    bench_json::write("coordinator_throughput", "full", &rows);
 }

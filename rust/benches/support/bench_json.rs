@@ -1,0 +1,80 @@
+//! Shared bench-result persistence: a tiny hand-rolled JSON writer (the
+//! crate is dependency-free by policy).
+//!
+//! Each bench calls [`write`] with its row set; the result lands in
+//! `BENCH_<name>.json` in the `cargo bench` working directory (the repo
+//! root), committed per PR so the perf trajectory stays reviewable. Values
+//! are produced by actually running the bench — the committed files are
+//! snapshots of the most recent run, not targets.
+//!
+//! Included via `#[path]` from each bench binary; not every bench uses
+//! every item.
+#![allow(dead_code)]
+
+use std::fmt::Write as _;
+
+/// One labeled measurement row: ordered `(key, value)` pairs.
+pub struct Row {
+    label: String,
+    fields: Vec<(&'static str, f64)>,
+}
+
+impl Row {
+    pub fn new(label: &str) -> Self {
+        Row { label: label.to_string(), fields: Vec::new() }
+    }
+
+    pub fn field(mut self, key: &'static str, value: f64) -> Self {
+        self.fields.push((key, value));
+        self
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON number: Rust's `Display` for finite f64 is valid JSON; inf/NaN
+/// (not representable) become `null`.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write `BENCH_<bench>.json` with the given mode tag and rows. IO failure
+/// only warns: persisting results must never fail the bench's acceptance
+/// assertions (e.g. on a read-only checkout).
+pub fn write(bench: &str, mode: &str, rows: &[Row]) {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"bench\": \"{}\",", esc(bench));
+    let _ = writeln!(out, "  \"mode\": \"{}\",", esc(mode));
+    out.push_str("  \"rows\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        let _ = write!(out, "    {{\"label\": \"{}\"", esc(row.label.as_str()));
+        for (k, v) in &row.fields {
+            let _ = write!(out, ", \"{}\": {}", esc(k), num(*v));
+        }
+        out.push_str(if i + 1 < rows.len() { "},\n" } else { "}\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let path = format!("BENCH_{bench}.json");
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("(results written to {path})"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}

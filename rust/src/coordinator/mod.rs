@@ -709,12 +709,13 @@ impl WorkerCore {
     }
 
     /// Functional replay of `prog` on `input`: write input bytes, replay the
-    /// trace (values only — cycles come from the timing cache), read
+    /// decode-once lowering (values only — bit-identical to
+    /// [`Sim::execute_functional`], cycles come from the timing cache), read
     /// logits. Returns (logits, argmax).
     fn infer(&mut self, prog: &CompiledProgram, input: &[u8]) -> (Vec<f32>, usize) {
         self.rewind();
         let base = self.sim.alloc(prog.mem_len());
-        let run = self.sim.execute_functional(prog, base, Some(input));
+        let run = self.sim.execute_lowered(prog, base, Some(input));
         if prog.is_fp32() {
             let logits = self.sim.read_f32s(run.out_addr, run.out_elems);
             let am = argmax_of(&logits);
@@ -781,6 +782,9 @@ fn resolve_program(
     });
     shared.compile_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     if memoize {
+        // Force the decode-once lowering before the entry becomes visible,
+        // so warm replays never pay the lowering walk.
+        prog.lowered();
         let pinned = *sched == cfg.schedule && key.deploy.shards == cfg.shards;
         shared.program_cache.lock().unwrap().insert(
             key.clone(),

@@ -159,6 +159,8 @@ impl ProgramBuilder {
             layers,
             shard: shard.map(|(plan, idx)| (idx, plan.shards())),
             shard_segs: emitted.shard_segs,
+            vlen_bits: self.sim.cfg.vlen_bits,
+            lowered: std::sync::OnceLock::new(),
         }
     }
 }

@@ -1,0 +1,609 @@
+//! Decode-once lowering: [`CompiledProgram`] → [`LoweredProgram`].
+//!
+//! Warm serving replays the same trace thousands of times, and the
+//! instruction-by-instruction interpreter re-pays decode + dispatch on every
+//! element of every loop iteration — the overhead class SPEED
+//! (arXiv 2409.14017) attacks with decode/dispatch separation. This pass
+//! walks the trace **once**, statically resolving `vsetvli` results (AVL and
+//! vtype are trace literals, so `vl` is a compile-time constant at every
+//! point), and collapses the hot emitted shapes into host micro-ops:
+//!
+//! * `li`+`vle`/`vse` unit-stride transfers → one bounds-checked memcpy
+//!   ([`MicroOp::LoadUnit`] / [`MicroOp::StoreUnit`] / [`MicroOp::Copy`]);
+//! * `vmv.v.i 0`+`li`+`vse` splat-fills → one zero-fill ([`MicroOp::Fill`]);
+//! * the bit-serial MAC inner loop — runs of `ld`/`vand.vx`/`vpopcnt.v`/
+//!   `vadd.vv` quads — → one tight AND-popcount-accumulate kernel
+//!   ([`MicroOp::PlaneMac`]);
+//! * `vbitpack.vi` → an allocation-free host packer
+//!   ([`MicroOp::BitpackFast`]);
+//! * the int8 conv tap `li`+`lbu`+`vmacc.vx` → [`MicroOp::MaccByte`];
+//! * the 10-instruction activation row-sum shape → [`MicroOp::RowSum`].
+//!
+//! Everything else stays as [`MicroOp::Interp`] ranges executed by the
+//! unchanged functional interpreter. **Fusion legality**: a sequence is
+//! fused only when the micro-op reproduces *every* architectural effect of
+//! the replaced instructions — destination vector registers (including the
+//! final values of scratch intermediates), scalar registers, vl/vtype, and
+//! memory — so machine state at every micro-op boundary is bit-identical to
+//! plain interpretation, and any prefix/suffix mix of fused and interpreted
+//! execution is exact. Matchers reject the rare register-aliasing shapes
+//! where eliding an intermediate write would be observable (conditions
+//! documented per matcher below).
+//!
+//! Addresses are fully resolved at lowering time: every fused address comes
+//! from a relocation-marked `li`, stored in compile space and re-based by
+//! the replay delta — the same rule as interpreted relocation.
+//!
+//! [`crate::sim::Sim::execute`] (timed) and
+//! [`crate::sim::Sim::execute_functional`] (values-only) are untouched and
+//! serve as the differential oracles; `rust/tests/lowered_differential.rs`
+//! and the randomized sweep in `rust/tests/sim_properties.rs` hold the
+//! proofs.
+
+use crate::isa::instr::{Instr, MemWidth, ScalarOp, VIOp, VMemKind, VOp};
+use crate::isa::reg::{Reg, VReg};
+use crate::isa::vtype::{Sew, VType};
+use crate::sim::exec::{trunc, MacTap, RowSumOp};
+use crate::sim::Sim;
+
+use super::replay::functional_run;
+use super::{CompiledProgram, ProgramRun};
+
+/// One pre-decoded replay step. Address fields are compile-space; the
+/// executor adds the relocation delta.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum MicroOp {
+    /// Fallback: interpret the trace range `[lo, hi)` unchanged.
+    Interp { lo: u32, hi: u32 },
+    /// `vmv.v.i vd, 0` + reloc-`li rd` + unit-stride `vse`.
+    Fill { vd: VReg, rd: Reg, addr: u64, len: usize },
+    /// `li`+`vle`+`li`+`vse`: memory-to-memory copy staged through `vd`.
+    Copy { rs: Reg, src: u64, rd: Reg, dst: u64, vd: VReg, len: usize },
+    /// Reloc-`li rd` + unit-stride `vle`.
+    LoadUnit { rd: Reg, addr: u64, vd: VReg, len: usize },
+    /// Reloc-`li rd` + unit-stride `vse`.
+    StoreUnit { rd: Reg, addr: u64, vs3: VReg, len: usize },
+    /// A run of bit-serial MAC quads at SEW=64 sharing scratch `t1`/`tmp`.
+    PlaneMac { vl: usize, t1: Reg, tmp: VReg, taps: Box<[MacTap]> },
+    /// One `vbitpack.vi` through the allocation-free host packer.
+    BitpackFast { vd: VReg, vs2: VReg, bit: u8, vl: usize, eb: usize },
+    /// Int8 conv tap: reloc-`li a0` + `lbu t1, 0(a0)` + `vmacc.vx`.
+    MaccByte { a0: Reg, addr: u64, t1: Reg, vd: VReg, vs2: VReg, vl: usize, eb: usize },
+    /// The fused 10-instruction activation row-sum shape.
+    RowSum(Box<RowSumOp>),
+}
+
+/// A [`CompiledProgram`] trace lowered into dense pre-decoded micro-ops.
+/// Built once per cached program ([`CompiledProgram::lowered`]); replayed by
+/// [`Sim::execute_lowered`].
+pub struct LoweredProgram {
+    pub(crate) ops: Vec<MicroOp>,
+    fused_instrs: usize,
+    interp_instrs: usize,
+}
+
+impl LoweredProgram {
+    /// Number of replay steps (fused kernels + interpreter ranges).
+    pub fn micro_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Trace instructions covered by fused host kernels.
+    pub fn fused_instrs(&self) -> usize {
+        self.fused_instrs
+    }
+
+    /// Trace instructions still executed by the interpreter.
+    pub fn interp_instrs(&self) -> usize {
+        self.interp_instrs
+    }
+
+    /// Fraction of trace instructions covered by fused host kernels.
+    pub fn fused_fraction(&self) -> f64 {
+        let total = self.fused_instrs + self.interp_instrs;
+        if total == 0 {
+            0.0
+        } else {
+            self.fused_instrs as f64 / total as f64
+        }
+    }
+}
+
+/// Lower `prog`'s trace. Pure function of (trace, reloc table, VLEN).
+pub(crate) fn lower(prog: &CompiledProgram, vlen_bits: usize) -> LoweredProgram {
+    let trace = &prog.trace;
+    let mut is_reloc = vec![false; trace.len()];
+    for &r in &prog.reloc {
+        is_reloc[r as usize] = true;
+    }
+    let mut ops = Vec::new();
+    let mut fused_instrs = 0usize;
+    // Start of the currently open Interp range, if any.
+    let mut pend: Option<u32> = None;
+    // Statically tracked (vl, vtype); fusion requires both known.
+    let mut st: Option<(u64, VType)> = None;
+    let mut i = 0usize;
+    while i < trace.len() {
+        if let Some(st_now) = st {
+            if let Some((op, took)) = match_at(trace, &is_reloc, i, st_now, vlen_bits) {
+                if let Some(lo) = pend.take() {
+                    ops.push(MicroOp::Interp { lo, hi: i as u32 });
+                }
+                // RowSum embeds two vsetvli's; carry their result forward.
+                if let MicroOp::RowSum(rs) = &op {
+                    st = Some((rs.vl_after, rs.vtype_after));
+                }
+                fused_instrs += took;
+                ops.push(op);
+                i += took;
+                continue;
+            }
+        }
+        if let Instr::VSetVli { avl, vtype, .. } = trace[i] {
+            st = Some((avl.min(vtype.vlmax(vlen_bits) as u64), vtype));
+        }
+        if pend.is_none() {
+            pend = Some(i as u32);
+        }
+        i += 1;
+    }
+    if let Some(lo) = pend {
+        ops.push(MicroOp::Interp { lo, hi: trace.len() as u32 });
+    }
+    let interp_instrs = trace.len() - fused_instrs;
+    LoweredProgram { ops, fused_instrs, interp_instrs }
+}
+
+/// Try every matcher at trace position `i` under statically known
+/// `(vl, vtype)`. Returns the micro-op and how many instructions it covers.
+fn match_at(
+    trace: &[Instr],
+    is_reloc: &[bool],
+    i: usize,
+    (vl, vt): (u64, VType),
+    vlen_bits: usize,
+) -> Option<(MicroOp, usize)> {
+    let eb = vt.sew.bytes();
+    match trace[i] {
+        // Splat-zero fill: vmv.v.i vd,0 ; li rd,addr ; vse vd,(rd).
+        Instr::Vector(VOp::MvVI { vd, imm }) if trunc(imm as u64, vt.sew.bits()) == 0 => {
+            let (rd, addr) = reloc_li(trace, is_reloc, i + 1)?;
+            let (eew, vs3, base) = unit_store(trace, i + 2)?;
+            if eew.bytes() != eb || vs3 != vd || base != rd {
+                return None;
+            }
+            Some((MicroOp::Fill { vd, rd, addr, len: vl as usize * eb }, 3))
+        }
+        // Address materialization: row-sum first (li+vle is its prefix),
+        // then copy (li+vle+li+vse), then the int8 tap, then bare transfers.
+        Instr::Scalar(ScalarOp::Li { .. }) => match_row_sum(trace, is_reloc, i, vl, vt, vlen_bits)
+            .or_else(|| match_copy(trace, is_reloc, i, vl))
+            .or_else(|| match_macc_byte(trace, is_reloc, i, vl, eb))
+            .or_else(|| match_load_store(trace, is_reloc, i, vl)),
+        Instr::Scalar(ScalarOp::Load { width: MemWidth::D, signed: false, .. }) => {
+            match_plane_mac(trace, i, vl, vt)
+        }
+        Instr::Vector(VOp::Bitpack { vd, vs2, bit }) => {
+            // The host packer mirrors the interpreted semantics only within
+            // the asserted envelope (plane fits one register) and uses a
+            // fixed 512-byte stack buffer.
+            let ok = vl as usize <= vlen_bits
+                && (bit as usize) < vt.sew.bits()
+                && vlen_bits / 8 <= 512;
+            ok.then_some((MicroOp::BitpackFast { vd, vs2, bit, vl: vl as usize, eb }, 1))
+        }
+        _ => None,
+    }
+}
+
+/// A relocation-marked `li rd, addr` with `rd != x0` (fused ops must write
+/// the register; `li x0` would be a no-op the executors don't model).
+fn reloc_li(trace: &[Instr], is_reloc: &[bool], i: usize) -> Option<(Reg, u64)> {
+    if i >= trace.len() || !is_reloc[i] {
+        return None;
+    }
+    match trace[i] {
+        Instr::Scalar(ScalarOp::Li { rd, imm }) if rd.0 != 0 => Some((rd, imm as u64)),
+        _ => None,
+    }
+}
+
+fn unit_load(trace: &[Instr], i: usize) -> Option<(Sew, VReg, Reg)> {
+    match trace.get(i)? {
+        Instr::Vector(VOp::Load { kind: VMemKind::UnitStride, eew, vd, base }) => {
+            Some((*eew, *vd, *base))
+        }
+        _ => None,
+    }
+}
+
+fn unit_store(trace: &[Instr], i: usize) -> Option<(Sew, VReg, Reg)> {
+    match trace.get(i)? {
+        Instr::Vector(VOp::Store { kind: VMemKind::UnitStride, eew, vs3, base }) => {
+            Some((*eew, *vs3, *base))
+        }
+        _ => None,
+    }
+}
+
+/// `li rs,src ; vle vd,(rs) ; li rd,dst ; vse vd,(rd)` with equal element
+/// widths. Load-before-store execution makes overlap and `rs == rd` exact.
+fn match_copy(trace: &[Instr], is_reloc: &[bool], i: usize, vl: u64) -> Option<(MicroOp, usize)> {
+    let (rs, src) = reloc_li(trace, is_reloc, i)?;
+    let (eew1, vd, b1) = unit_load(trace, i + 1)?;
+    let (rd, dst) = reloc_li(trace, is_reloc, i + 2)?;
+    let (eew2, vs3, b2) = unit_store(trace, i + 3)?;
+    if b1 != rs || b2 != rd || vs3 != vd || eew1.bytes() != eew2.bytes() {
+        return None;
+    }
+    Some((MicroOp::Copy { rs, src, rd, dst, vd, len: vl as usize * eew1.bytes() }, 4))
+}
+
+/// `li rd,addr` + a single unit-stride transfer based on `rd`.
+fn match_load_store(
+    trace: &[Instr],
+    is_reloc: &[bool],
+    i: usize,
+    vl: u64,
+) -> Option<(MicroOp, usize)> {
+    let (rd, addr) = reloc_li(trace, is_reloc, i)?;
+    if let Some((eew, vd, base)) = unit_load(trace, i + 1) {
+        if base == rd {
+            return Some((MicroOp::LoadUnit { rd, addr, vd, len: vl as usize * eew.bytes() }, 2));
+        }
+    }
+    if let Some((eew, vs3, base)) = unit_store(trace, i + 1) {
+        if base == rd {
+            return Some((MicroOp::StoreUnit { rd, addr, vs3, len: vl as usize * eew.bytes() }, 2));
+        }
+    }
+    None
+}
+
+/// `li a0,addr ; lbu t1, 0(a0) ; vmacc.vx vd, t1, vs2` — the int8 conv tap.
+/// `t1 == x0` is legal (both the interpreter and the fused kernel then
+/// multiply by zero).
+fn match_macc_byte(
+    trace: &[Instr],
+    is_reloc: &[bool],
+    i: usize,
+    vl: u64,
+    eb: usize,
+) -> Option<(MicroOp, usize)> {
+    let (a0, addr) = reloc_li(trace, is_reloc, i)?;
+    let Instr::Scalar(ScalarOp::Load {
+        width: MemWidth::B,
+        signed: false,
+        rd: t1,
+        base,
+        offset: 0,
+    }) = *trace.get(i + 1)?
+    else {
+        return None;
+    };
+    if base != a0 {
+        return None;
+    }
+    let Instr::Vector(VOp::MaccVX { vd, rs1, vs2 }) = *trace.get(i + 2)? else {
+        return None;
+    };
+    if rs1 != t1 {
+        return None;
+    }
+    Some((MicroOp::MaccByte { a0, addr, t1, vd, vs2, vl: vl as usize, eb }, 3))
+}
+
+/// A maximal run of bit-serial MAC quads at SEW=64:
+/// `ld t1, off(base) ; vand.vx tmp, w, t1 ; vpopcnt.v tmp, tmp ;
+///  vadd.vv acc, acc, tmp`, all quads sharing `t1`/`tmp`.
+///
+/// Legality: `t1 != x0` (else the AND reads zero, not the loaded word);
+/// `base != t1` per tap (base registers stay stable across the run — it
+/// writes no memory and no scalar but `t1`, which also licenses hoisting
+/// the loads per chunk); `w != tmp` (the AND would read stale scratch);
+/// `acc != tmp`; `acc != w` within a tap (the elided intermediate `tmp`
+/// would otherwise be computed from a pre-accumulate `w` the fused kernel
+/// no longer sees). Cross-tap aliasing (e.g. one tap's `acc` as a later
+/// tap's `w`) is exact by tap-major ordering.
+fn match_plane_mac(trace: &[Instr], i: usize, vl: u64, vt: VType) -> Option<(MicroOp, usize)> {
+    if vt.sew != Sew::E64 {
+        return None;
+    }
+    let Instr::Scalar(ScalarOp::Load { rd: t1, .. }) = trace[i] else {
+        return None;
+    };
+    if t1.0 == 0 {
+        return None;
+    }
+    let Instr::Vector(VOp::IVX { op: VIOp::And, vd: tmp, .. }) = *trace.get(i + 1)? else {
+        return None;
+    };
+    let mut taps = Vec::new();
+    let mut j = i;
+    while let Some(&Instr::Scalar(ScalarOp::Load {
+        width: MemWidth::D,
+        signed: false,
+        rd,
+        base,
+        offset,
+    })) = trace.get(j)
+    {
+        if rd != t1 || base == t1 {
+            break;
+        }
+        let Some(&Instr::Vector(VOp::IVX { op: VIOp::And, vd, vs2: w, rs1 })) = trace.get(j + 1)
+        else {
+            break;
+        };
+        if vd != tmp || rs1 != t1 || w == tmp {
+            break;
+        }
+        let Some(&Instr::Vector(VOp::Popcnt { vd: pd, vs2: ps })) = trace.get(j + 2) else {
+            break;
+        };
+        if pd != tmp || ps != tmp {
+            break;
+        }
+        let Some(&Instr::Vector(VOp::IVV { op: VIOp::Add, vd: acc, vs2, vs1 })) = trace.get(j + 3)
+        else {
+            break;
+        };
+        if vs2 != acc || vs1 != tmp || acc == tmp || acc == w {
+            break;
+        }
+        taps.push(MacTap { base, offset, w, acc });
+        j += 4;
+    }
+    if taps.is_empty() {
+        return None;
+    }
+    let took = taps.len() * 4;
+    Some((MicroOp::PlaneMac { vl: vl as usize, t1, tmp, taps: taps.into_boxed_slice() }, took))
+}
+
+/// The single-chunk row-sum shape `kernels::matmul::emit_row_sum_u8` emits:
+///
+/// ```text
+/// li a0, src ; vle8 vload,(a0) ; vzext vz, vload            (n bytes → u32)
+/// vsetvli x0, 1, e32 ; vmv.v.i vacc, 0 ; vsetvli x0, n, e32
+/// vredsum vacc, vz, vacc ; vmv.x.s t0, vacc
+/// li t1, dst ; sw t0, 0(t1)
+/// ```
+///
+/// Legality: current SEW=32 (the widen reads bytes), `n <= 1024` (fixed
+/// stack buffer; the emitter's chunk bound), both embedded `vsetvli`s write
+/// `x0`, the second resolves back to exactly `n`, and `vacc`'s first
+/// element overlaps neither the loaded bytes nor the widened u32 span (the
+/// fused kernel elides the intermediate `vacc` zero-write).
+fn match_row_sum(
+    trace: &[Instr],
+    is_reloc: &[bool],
+    i: usize,
+    vl: u64,
+    vt: VType,
+    vlen_bits: usize,
+) -> Option<(MicroOp, usize)> {
+    let n = vl as usize;
+    if vt.sew != Sew::E32 || n > 1024 {
+        return None;
+    }
+    let (a0, src) = reloc_li(trace, is_reloc, i)?;
+    let (eew, vload, b1) = unit_load(trace, i + 1)?;
+    if eew != Sew::E8 || b1 != a0 {
+        return None;
+    }
+    let Instr::Vector(VOp::Zext { vd: vz, vs2, frac: 4 }) = *trace.get(i + 2)? else {
+        return None;
+    };
+    if vs2 != vload {
+        return None;
+    }
+    let Instr::VSetVli { rd: r1, avl: 1, vtype: vt1 } = *trace.get(i + 3)? else {
+        return None;
+    };
+    if r1.0 != 0 || vt1.sew != Sew::E32 {
+        return None;
+    }
+    let Instr::Vector(VOp::MvVI { vd: vacc, imm }) = *trace.get(i + 4)? else {
+        return None;
+    };
+    if trunc(imm as u64, 32) != 0 {
+        return None;
+    }
+    let Instr::VSetVli { rd: r2, avl: a2, vtype: vt2 } = *trace.get(i + 5)? else {
+        return None;
+    };
+    if r2.0 != 0 || vt2.sew != Sew::E32 || a2.min(vt2.vlmax(vlen_bits) as u64) != vl {
+        return None;
+    }
+    let Instr::Vector(VOp::RedSum { vd, vs2, vs1 }) = *trace.get(i + 6)? else {
+        return None;
+    };
+    if vd != vacc || vs2 != vz || vs1 != vacc {
+        return None;
+    }
+    let Instr::Vector(VOp::MvXS { rd: t0, vs2: ms }) = *trace.get(i + 7)? else {
+        return None;
+    };
+    if ms != vacc {
+        return None;
+    }
+    let (t1, dst) = reloc_li(trace, is_reloc, i + 8)?;
+    let Instr::Scalar(ScalarOp::Store { width: MemWidth::W, rs2, base, offset: 0 }) =
+        *trace.get(i + 9)?
+    else {
+        return None;
+    };
+    if rs2 != t0 || base != t1 {
+        return None;
+    }
+    let vreg_bytes = vlen_bits / 8;
+    let l0 = vload.0 as usize * vreg_bytes;
+    let z0 = vz.0 as usize * vreg_bytes;
+    let av = vacc.0 as usize * vreg_bytes;
+    let acc_disjoint = |lo: usize, len: usize| av + 4 <= lo || lo + len <= av;
+    if !(acc_disjoint(l0, n) && acc_disjoint(z0, 4 * n)) {
+        return None;
+    }
+    Some((
+        MicroOp::RowSum(Box::new(RowSumOp {
+            src,
+            dst,
+            n,
+            a0,
+            t0,
+            t1,
+            vload,
+            vz,
+            vacc,
+            vl_after: vl,
+            vtype_after: vt2,
+        })),
+        10,
+    ))
+}
+
+impl Sim {
+    /// Values-only replay through the decode-once lowering
+    /// ([`CompiledProgram::lowered`]): the warm-serving fast path. Memory
+    /// effects — and therefore logits and per-layer maps — are bit-identical
+    /// to [`Sim::execute_functional`] (and to [`Sim::execute`] in `Full`
+    /// mode), which remain the differential oracles. Like the functional
+    /// path, no timing scoreboard runs and reported cycles are zero.
+    pub fn execute_lowered(
+        &mut self,
+        prog: &CompiledProgram,
+        base: u64,
+        input: Option<&[u8]>,
+    ) -> ProgramRun {
+        let delta = self.begin_replay(prog, base, input);
+        let low = prog.lowered();
+        for op in &low.ops {
+            match op {
+                MicroOp::Interp { lo, hi } => {
+                    self.execute_functional_range(prog, delta, *lo as usize, *hi as usize)
+                }
+                MicroOp::Fill { vd, rd, addr, len } => {
+                    self.machine.exec_fill(*vd, *rd, addr.wrapping_add(delta), *len)
+                }
+                MicroOp::Copy { rs, src, rd, dst, vd, len } => self.machine.exec_copy(
+                    *rs,
+                    src.wrapping_add(delta),
+                    *rd,
+                    dst.wrapping_add(delta),
+                    *vd,
+                    *len,
+                ),
+                MicroOp::LoadUnit { rd, addr, vd, len } => {
+                    self.machine.exec_load_unit(*rd, addr.wrapping_add(delta), *vd, *len)
+                }
+                MicroOp::StoreUnit { rd, addr, vs3, len } => {
+                    self.machine.exec_store_unit(*rd, addr.wrapping_add(delta), *vs3, *len)
+                }
+                MicroOp::PlaneMac { vl, t1, tmp, taps } => {
+                    self.machine.exec_plane_mac(*vl, *t1, *tmp, taps)
+                }
+                MicroOp::BitpackFast { vd, vs2, bit, vl, eb } => {
+                    self.machine.exec_bitpack_host(*vd, *vs2, *bit, *vl, *eb)
+                }
+                MicroOp::MaccByte { a0, addr, t1, vd, vs2, vl, eb } => self.machine.exec_macc_byte(
+                    *a0,
+                    addr.wrapping_add(delta),
+                    *t1,
+                    *vd,
+                    *vs2,
+                    *vl,
+                    *eb,
+                ),
+                MicroOp::RowSum(rs) => self.machine.exec_row_sum(rs, delta),
+            }
+        }
+        functional_run(prog, delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MachineConfig;
+    use crate::coordinator::demo_net;
+    use crate::nn::golden::run_golden;
+    use crate::nn::model::{Precision, PrecisionMap};
+    use crate::program::compile;
+
+    fn w2a2() -> PrecisionMap {
+        PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true })
+    }
+
+    #[test]
+    fn lowered_matches_functional_and_golden_on_demo_net() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        let prog = compile(&net, &quark, &w2a2()).unwrap();
+        let input: Vec<u8> =
+            (0..prog.input_elems()).map(|i| ((i * 7 + 3) % 251) as u8).collect();
+        let golden = run_golden(&net, prog.schedule(), Some(&input));
+        let mut f = Sim::with_memory(quark.clone(), 64 << 20);
+        let fb = f.alloc(prog.mem_len());
+        let fr = f.execute_functional(&prog, fb, Some(&input));
+        let mut l = Sim::with_memory(quark.clone(), 64 << 20);
+        let lb = l.alloc(prog.mem_len());
+        let lr = l.execute_lowered(&prog, lb, Some(&input));
+        assert_eq!(
+            l.read_u8s(lr.out_addr, lr.out_elems),
+            f.read_u8s(fr.out_addr, fr.out_elems),
+            "lowered vs functional logits"
+        );
+        assert_eq!(l.read_u8s(lr.out_addr, lr.out_elems), golden.maps[net.len()]);
+        for (i, r) in lr.reports.iter().enumerate() {
+            assert_eq!(
+                l.read_u8s(r.out_addr, r.out_elems),
+                golden.maps[i + 1],
+                "layer {} map",
+                r.name
+            );
+        }
+        // Stronger than logits: identical scalar state, vl/vtype, and the
+        // entire program memory footprint.
+        assert_eq!(l.machine.x, f.machine.x, "scalar register file");
+        assert_eq!(l.machine.vl, f.machine.vl);
+        assert_eq!(l.machine.vtype, f.machine.vtype);
+        assert_eq!(
+            l.machine.mem.read(lb, prog.mem_len() as usize),
+            f.machine.mem.read(fb, prog.mem_len() as usize),
+            "program memory footprint"
+        );
+    }
+
+    #[test]
+    fn lowering_covers_the_hot_trace() {
+        let net = demo_net();
+        let prog = compile(&net, &MachineConfig::quark(4), &w2a2()).unwrap();
+        let low = prog.lowered();
+        assert_eq!(low.fused_instrs() + low.interp_instrs(), prog.trace_len());
+        assert!(
+            low.fused_fraction() > 0.5,
+            "w2a2 trace should lower mostly into fused kernels, got {:.3}",
+            low.fused_fraction()
+        );
+        assert!(
+            low.micro_ops() < prog.trace_len() / 2,
+            "lowering should shrink the step count ({} steps for {} instrs)",
+            low.micro_ops(),
+            prog.trace_len()
+        );
+    }
+
+    #[test]
+    fn lowering_is_deterministic_and_cached() {
+        let net = demo_net();
+        let prog = compile(&net, &MachineConfig::quark(4), &w2a2()).unwrap();
+        let a = lower(&prog, prog.vlen_bits);
+        let b = lower(&prog, prog.vlen_bits);
+        assert_eq!(a.ops, b.ops, "lowering must be deterministic");
+        assert_eq!(a.fused_instrs, b.fused_instrs);
+        let p1: *const LoweredProgram = prog.lowered();
+        let p2: *const LoweredProgram = prog.lowered();
+        assert_eq!(p1, p2, "OnceLock must cache the lowering");
+    }
+}

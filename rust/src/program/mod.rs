@@ -42,9 +42,11 @@
 //! the same delta.
 
 pub mod builder;
+pub mod lowered;
 mod replay;
 
 pub use builder::ProgramBuilder;
+pub use lowered::LoweredProgram;
 pub use replay::ProgramRun;
 
 use crate::arch::MachineConfig;
@@ -216,6 +218,13 @@ pub struct CompiledProgram {
     pub(crate) shard: Option<(usize, usize)>,
     /// One [`ShardSeg`] per layer on shard programs; empty otherwise.
     pub(crate) shard_segs: Vec<ShardSeg>,
+    /// VLEN the program was compiled for — the lowering pass needs it to
+    /// resolve `vsetvli` results statically.
+    pub(crate) vlen_bits: usize,
+    /// Lazily built decode-once lowering of the trace ([`lowered::lower`]).
+    /// The coordinator forces it at cache-insert time so warm replays never
+    /// pay the lowering cost.
+    pub(crate) lowered: std::sync::OnceLock<LoweredProgram>,
 }
 
 impl CompiledProgram {
@@ -286,6 +295,14 @@ impl CompiledProgram {
     /// Per-layer shard segments (empty on single-core programs).
     pub fn shard_segs(&self) -> &[ShardSeg] {
         &self.shard_segs
+    }
+
+    /// The decode-once lowering of this program's trace, built on first use
+    /// and cached for the program's lifetime. [`crate::sim::Sim::execute_lowered`]
+    /// replays it; [`crate::sim::Sim::execute_functional`] stays the
+    /// instruction-by-instruction oracle.
+    pub fn lowered(&self) -> &LoweredProgram {
+        self.lowered.get_or_init(|| lowered::lower(self, self.vlen_bits))
     }
 }
 

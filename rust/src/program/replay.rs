@@ -35,6 +35,32 @@ pub struct ProgramRun {
     pub cycles: u64,
 }
 
+/// The [`ProgramRun`] of any values-only replay at relocation `delta`:
+/// per-layer reports carry shapes, addresses, and recorded MACs, but no
+/// cycles or stats (those come from the coordinator's timing cache). Shared
+/// by [`Sim::execute_functional`] and [`Sim::execute_lowered`].
+pub(crate) fn functional_run(prog: &CompiledProgram, delta: u64) -> ProgramRun {
+    let reports = prog
+        .layers
+        .iter()
+        .map(|mark| LayerReport {
+            name: mark.name.clone(),
+            quantized: mark.quantized,
+            precision: mark.precision,
+            out_addr: mark.out_addr.wrapping_add(delta),
+            out_elems: mark.out_elems,
+            run: KernelRun { cycles: 0, macs: mark.macs },
+            stats: Default::default(),
+        })
+        .collect();
+    ProgramRun {
+        reports,
+        out_addr: prog.out_addr.wrapping_add(delta),
+        out_elems: prog.out_elems,
+        cycles: 0,
+    }
+}
+
 /// Rebase an `li` whose immediate is a simulated-memory address.
 #[inline]
 fn relocate(instr: Instr, delta: u64) -> Instr {
@@ -135,25 +161,7 @@ impl Sim {
         } else {
             self.execute_functional_range(prog, delta, 0, prog.trace.len());
         }
-        let reports = prog
-            .layers
-            .iter()
-            .map(|mark| LayerReport {
-                name: mark.name.clone(),
-                quantized: mark.quantized,
-                precision: mark.precision,
-                out_addr: mark.out_addr.wrapping_add(delta),
-                out_elems: mark.out_elems,
-                run: KernelRun { cycles: 0, macs: mark.macs },
-                stats: Default::default(),
-            })
-            .collect();
-        ProgramRun {
-            reports,
-            out_addr: prog.out_addr.wrapping_add(delta),
-            out_elems: prog.out_elems,
-            cycles: 0,
-        }
+        functional_run(prog, delta)
     }
 
     /// Execute the trace range `[lo, hi)` functionally (no timing, no

@@ -28,13 +28,13 @@ pub struct Machine {
 }
 
 #[inline]
-fn sext_to_u64(v: u64, bits: usize) -> u64 {
+pub(crate) fn sext_to_u64(v: u64, bits: usize) -> u64 {
     let shift = 64 - bits;
     (((v << shift) as i64) >> shift) as u64
 }
 
 #[inline]
-fn trunc(v: u64, bits: usize) -> u64 {
+pub(crate) fn trunc(v: u64, bits: usize) -> u64 {
     if bits == 64 {
         v
     } else {
@@ -455,6 +455,238 @@ impl Machine {
                 }
             }
         }
+    }
+}
+
+// ---- fused host kernels for lowered replay ----
+//
+// `crate::program::lowered` statically matches short instruction sequences in
+// a compiled trace and replaces them with one call into the methods below.
+// Each method replicates EVERY architectural effect of the sequence it
+// stands in for — destination vector registers (including the final values
+// of scratch intermediates), scalar registers, vl/vtype, and memory — so
+// machine state at every fused-op boundary is bit-identical to plain
+// interpretation. The static legality conditions each method relies on are
+// checked by the lowering pass and documented there.
+
+/// One AND→popcount→accumulate quad of the bit-serial MAC inner loop:
+/// `acc[i] += popcount(w[i] & mem64[x[base] + offset])` for `i < vl`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct MacTap {
+    pub base: Reg,
+    pub offset: i64,
+    pub w: VReg,
+    pub acc: VReg,
+}
+
+/// The single-chunk row-sum shape (`kernels::matmul::emit_row_sum_u8`):
+/// byte-load `n` activation codes, widen to u32, reduce-sum, store the sum.
+/// `src`/`dst` are compile-space addresses; the executor adds the
+/// relocation delta.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct RowSumOp {
+    pub src: u64,
+    pub dst: u64,
+    pub n: usize,
+    pub a0: Reg,
+    pub t0: Reg,
+    pub t1: Reg,
+    pub vload: VReg,
+    pub vz: VReg,
+    pub vacc: VReg,
+    /// vl/vtype left behind by the second embedded `vsetvli`.
+    pub vl_after: u64,
+    pub vtype_after: VType,
+}
+
+impl Machine {
+    /// `vmv.v.i vd, 0` + reloc-`li rd` + unit-stride `vse`: zero `len` bytes
+    /// of `vd` and of memory at `addr` (already delta-resolved).
+    pub(crate) fn exec_fill(&mut self, vd: VReg, rd: Reg, addr: u64, len: usize) {
+        let off = vd.0 as usize * self.vreg_bytes;
+        self.v[off..off + len].fill(0);
+        self.set_x(rd, addr);
+        if len > 0 {
+            self.mem.write(addr, &self.v[off..off + len]);
+        }
+    }
+
+    /// Reloc-`li rd` + unit-stride `vle`: one memcpy into the register file.
+    pub(crate) fn exec_load_unit(&mut self, rd: Reg, addr: u64, vd: VReg, len: usize) {
+        self.set_x(rd, addr);
+        let off = vd.0 as usize * self.vreg_bytes;
+        if len > 0 {
+            self.v[off..off + len].copy_from_slice(self.mem.read(addr, len));
+        }
+    }
+
+    /// Reloc-`li rd` + unit-stride `vse`: one memcpy out of the register file.
+    pub(crate) fn exec_store_unit(&mut self, rd: Reg, addr: u64, vs3: VReg, len: usize) {
+        self.set_x(rd, addr);
+        let off = vs3.0 as usize * self.vreg_bytes;
+        if len > 0 {
+            self.mem.write(addr, &self.v[off..off + len]);
+        }
+    }
+
+    /// `li`+`vle`+`li`+`vse` memory-to-memory copy staged through `vd`.
+    /// Load-before-store ordering makes overlapping src/dst ranges and
+    /// `rs == rd` behave exactly as the four interpreted instructions.
+    pub(crate) fn exec_copy(&mut self, rs: Reg, src: u64, rd: Reg, dst: u64, vd: VReg, len: usize) {
+        self.exec_load_unit(rs, src, vd, len);
+        self.exec_store_unit(rd, dst, vd, len);
+    }
+
+    /// A run of `taps.len()` bit-plane MAC quads
+    /// (`ld t1` / `vand.vx tmp` / `vpopcnt.v tmp` / `vadd.vv acc`) sharing
+    /// one scalar temporary `t1` and one vector temporary `tmp`, at SEW=64.
+    ///
+    /// Executes tap-major, which equals the interpreted quad order with the
+    /// intermediate `tmp` writes elided; only the last quad's `tmp`/`t1`
+    /// values are architecturally visible afterwards and are materialized at
+    /// the end. Hoisting the scalar loads per 64-tap chunk is exact because
+    /// the run writes no memory and no base register (the matcher rejects
+    /// `base == t1`).
+    pub(crate) fn exec_plane_mac(&mut self, vl: usize, t1: Reg, tmp: VReg, taps: &[MacTap]) {
+        debug_assert!(!taps.is_empty());
+        let mut aw = [0u64; 64];
+        let mut last_aw = 0u64;
+        for chunk in taps.chunks(64) {
+            for (slot, tap) in chunk.iter().enumerate() {
+                let addr = self.get_x(tap.base).wrapping_add(tap.offset as u64);
+                aw[slot] = self.mem.read_u64_le(addr, 8);
+            }
+            for (slot, tap) in chunk.iter().enumerate() {
+                let m = aw[slot];
+                let w0 = tap.w.0 as usize * self.vreg_bytes;
+                let a0 = tap.acc.0 as usize * self.vreg_bytes;
+                for i in 0..vl {
+                    let wi =
+                        u64::from_le_bytes(self.v[w0 + 8 * i..w0 + 8 * i + 8].try_into().unwrap());
+                    let acc =
+                        u64::from_le_bytes(self.v[a0 + 8 * i..a0 + 8 * i + 8].try_into().unwrap());
+                    let r = acc.wrapping_add((wi & m).count_ones() as u64);
+                    self.v[a0 + 8 * i..a0 + 8 * i + 8].copy_from_slice(&r.to_le_bytes());
+                }
+            }
+            last_aw = aw[chunk.len() - 1];
+        }
+        // Final architectural values of the scratch registers: the last
+        // quad's loaded word and its popcount vector.
+        let last = taps[taps.len() - 1];
+        let w0 = last.w.0 as usize * self.vreg_bytes;
+        let t0 = tmp.0 as usize * self.vreg_bytes;
+        for i in 0..vl {
+            let wi = u64::from_le_bytes(self.v[w0 + 8 * i..w0 + 8 * i + 8].try_into().unwrap());
+            let p = (wi & last_aw).count_ones() as u64;
+            self.v[t0 + 8 * i..t0 + 8 * i + 8].copy_from_slice(&p.to_le_bytes());
+        }
+        self.set_x(t1, last_aw);
+    }
+
+    /// Allocation-free `vbitpack.vi vd, vs2, bit` (the interpreted form heap-
+    /// allocates three temporaries per call). Caller guarantees
+    /// `vl <= vlen_bits`, `bit < SEW bits` and `vreg_bytes <= 512`.
+    pub(crate) fn exec_bitpack_host(&mut self, vd: VReg, vs2: VReg, bit: u8, vl: usize, eb: usize) {
+        let nb = self.vreg_bytes;
+        debug_assert!(nb <= 512 && vl <= self.vlen_bits && (bit as usize) < eb * 8);
+        // Extract the plane first (vd may equal vs2).
+        let mut plane = [0u8; 512];
+        let s0 = vs2.0 as usize * nb;
+        let (src_byte, src_mask) = ((bit / 8) as usize, 1u8 << (bit % 8));
+        for i in 0..vl {
+            if self.v[s0 + i * eb + src_byte] & src_mask != 0 {
+                plane[i / 8] |= 1 << (i % 8);
+            }
+        }
+        // vd = (vd << vl) | plane, in place. The descending walk only reads
+        // source bytes at indices <= the write index, so no buffering needed.
+        let d0 = vd.0 as usize * nb;
+        let byte_shift = vl / 8;
+        let bit_shift = vl % 8;
+        for i in (0..nb).rev() {
+            let shifted = if i < byte_shift {
+                0
+            } else {
+                let lo = (self.v[d0 + i - byte_shift] as u16) << bit_shift;
+                let carry = if bit_shift > 0 && i > byte_shift {
+                    (self.v[d0 + i - byte_shift - 1] as u16) >> (8 - bit_shift)
+                } else {
+                    0
+                };
+                ((lo | carry) & 0xFF) as u8
+            };
+            self.v[d0 + i] = shifted | plane[i];
+        }
+    }
+
+    /// Reloc-`li a0` + `lbu t1, 0(a0)` + `vmacc.vx vd, t1, vs2`: the
+    /// per-tap inner step of the int8 conv path.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn exec_macc_byte(
+        &mut self,
+        a0: Reg,
+        addr: u64,
+        t1: Reg,
+        vd: VReg,
+        vs2: VReg,
+        vl: usize,
+        eb: usize,
+    ) {
+        self.set_x(a0, addr);
+        let raw = self.mem.read_u64_le(addr, 1);
+        self.set_x(t1, raw);
+        let bits = eb * 8;
+        let s = trunc(self.get_x(t1), bits);
+        if eb == 1 {
+            // SEW=8 (the int8 conv case): mod-256 arithmetic is plain u8
+            // wrapping, and reading/writing elements before advancing makes
+            // vd == vs2 exact.
+            let d0 = vd.0 as usize * self.vreg_bytes;
+            let s0 = vs2.0 as usize * self.vreg_bytes;
+            let sb = s as u8;
+            for i in 0..vl {
+                let m = self.v[s0 + i];
+                self.v[d0 + i] = self.v[d0 + i].wrapping_add(sb.wrapping_mul(m));
+            }
+        } else {
+            for i in 0..vl {
+                let acc = self.vget(vd, i, eb);
+                let m = self.vget(vs2, i, eb);
+                self.vset(vd, i, eb, trunc(acc.wrapping_add(s.wrapping_mul(m)), bits));
+            }
+        }
+    }
+
+    /// The fused 10-instruction row-sum shape. The reduction is a u32
+    /// wrapping byte sum from zero (the embedded `vmv.v.i vacc, 0` under
+    /// `vl = 1` provides the zero start the `vredsum` folds onto). Caller
+    /// guarantees `n <= 1024` and that `vacc`'s first element overlaps
+    /// neither the loaded bytes nor the widened u32 span.
+    pub(crate) fn exec_row_sum(&mut self, op: &RowSumOp, delta: u64) {
+        let src = op.src.wrapping_add(delta);
+        let n = op.n;
+        debug_assert!(n <= 1024);
+        self.set_x(op.a0, src);
+        let mut buf = [0u8; 1024];
+        if n > 0 {
+            buf[..n].copy_from_slice(self.mem.read(src, n));
+        }
+        let l0 = op.vload.0 as usize * self.vreg_bytes;
+        self.v[l0..l0 + n].copy_from_slice(&buf[..n]);
+        let z0 = op.vz.0 as usize * self.vreg_bytes;
+        let mut sum = 0u32;
+        for (i, &b) in buf[..n].iter().enumerate() {
+            sum = sum.wrapping_add(b as u32);
+            self.v[z0 + 4 * i..z0 + 4 * i + 4].copy_from_slice(&(b as u32).to_le_bytes());
+        }
+        let a0v = op.vacc.0 as usize * self.vreg_bytes;
+        self.v[a0v..a0v + 4].copy_from_slice(&sum.to_le_bytes());
+        self.vl = op.vl_after;
+        self.vtype = op.vtype_after;
+        self.set_x(op.t0, sext_to_u64(sum as u64, 32));
+        self.set_x(op.t1, op.dst.wrapping_add(delta));
+        self.mem.write_u64_le(self.get_x(op.t1), self.get_x(op.t0), 4);
     }
 }
 

@@ -238,6 +238,177 @@ fn every_generated_instruction_is_encodable_often_enough() {
     assert!(encoded as f64 / total as f64 > 0.95, "{encoded}/{total} encodable");
 }
 
+/// One canonical exemplar of every encodable instruction variant — the
+/// deterministic complement of the random generators above, so a decode or
+/// disassembly regression in any single opcode fails by name rather than
+/// by seed.
+fn exemplars() -> Vec<Instr> {
+    let mut xs: Vec<Instr> = Vec::new();
+    let s = Instr::Scalar;
+
+    xs.push(s(ScalarOp::Li { rd: Reg(5), imm: -42 }));
+    for op in [
+        AluOp::Add,
+        AluOp::Sub,
+        AluOp::And,
+        AluOp::Or,
+        AluOp::Xor,
+        AluOp::Sll,
+        AluOp::Srl,
+        AluOp::Sra,
+        AluOp::Slt,
+        AluOp::Sltu,
+        AluOp::Mul,
+        AluOp::Mulh,
+        AluOp::Div,
+        AluOp::Rem,
+    ] {
+        xs.push(s(ScalarOp::Alu { op, rd: Reg(1), rs1: Reg(2), rs2: Reg(3) }));
+    }
+    for op in [AluOp::Add, AluOp::And, AluOp::Or, AluOp::Xor, AluOp::Slt, AluOp::Sltu] {
+        xs.push(s(ScalarOp::AluImm { op, rd: Reg(4), rs1: Reg(5), imm: -7 }));
+    }
+    for op in [AluOp::Sll, AluOp::Srl, AluOp::Sra] {
+        xs.push(s(ScalarOp::AluImm { op, rd: Reg(6), rs1: Reg(7), imm: 9 }));
+    }
+    for width in [MemWidth::B, MemWidth::H, MemWidth::W] {
+        xs.push(s(ScalarOp::Load { width, signed: true, rd: Reg(8), base: Reg(9), offset: 16 }));
+        xs.push(s(ScalarOp::Load { width, signed: false, rd: Reg(8), base: Reg(9), offset: -16 }));
+    }
+    // `ld` is canonically signed.
+    xs.push(s(ScalarOp::Load { width: MemWidth::D, signed: true, rd: Reg(10), base: Reg(11), offset: 0 }));
+    for width in [MemWidth::B, MemWidth::H, MemWidth::W, MemWidth::D] {
+        xs.push(s(ScalarOp::Store { width, rs2: Reg(12), base: Reg(13), offset: 24 }));
+    }
+    xs.push(s(ScalarOp::Branch { taken: true }));
+    xs.push(s(ScalarOp::Branch { taken: false }));
+    xs.push(s(ScalarOp::FLoad { rd: FReg(1), base: Reg(2), offset: 4 }));
+    xs.push(s(ScalarOp::FStore { rs2: FReg(3), base: Reg(4), offset: -4 }));
+    for op in [FAluOp::Add, FAluOp::Sub, FAluOp::Mul, FAluOp::Div, FAluOp::Min, FAluOp::Max] {
+        xs.push(s(ScalarOp::FAlu { op, rd: FReg(5), rs1: FReg(6), rs2: FReg(7) }));
+    }
+    xs.push(s(ScalarOp::FMadd { rd: FReg(8), rs1: FReg(9), rs2: FReg(10), rs3: FReg(11) }));
+    xs.push(s(ScalarOp::FCvtWS { rd: Reg(3), rs1: FReg(4) }));
+    xs.push(s(ScalarOp::FCvtSW { rd: FReg(5), rs1: Reg(6) }));
+    xs.push(s(ScalarOp::FMvXW { rd: Reg(7), rs1: FReg(8) }));
+    xs.push(s(ScalarOp::FMvWX { rd: FReg(9), rs1: Reg(10) }));
+    xs.push(s(ScalarOp::CsrReadCycle { rd: Reg(11) }));
+    xs.push(s(ScalarOp::Nop));
+
+    for (sew, lmul, avl) in
+        [(Sew::E8, Lmul::M1, 16), (Sew::E32, Lmul::M2, 8), (Sew::E64, Lmul::M8, 31)]
+    {
+        xs.push(Instr::VSetVli { rd: Reg(1), avl, vtype: VType::new(sew, lmul) });
+    }
+
+    let v = Instr::Vector;
+    xs.push(v(VOp::Load { kind: VMemKind::UnitStride, eew: Sew::E8, vd: VReg(1), base: Reg(2) }));
+    xs.push(v(VOp::Load {
+        kind: VMemKind::Strided { stride: Reg(3) },
+        eew: Sew::E32,
+        vd: VReg(4),
+        base: Reg(5),
+    }));
+    xs.push(v(VOp::Store { kind: VMemKind::UnitStride, eew: Sew::E8, vs3: VReg(6), base: Reg(7) }));
+    xs.push(v(VOp::Store {
+        kind: VMemKind::Strided { stride: Reg(8) },
+        eew: Sew::E64,
+        vs3: VReg(9),
+        base: Reg(10),
+    }));
+    for op in [
+        VIOp::Add,
+        VIOp::Sub,
+        VIOp::Rsub,
+        VIOp::And,
+        VIOp::Or,
+        VIOp::Xor,
+        VIOp::Sll,
+        VIOp::Srl,
+        VIOp::Sra,
+        VIOp::Min,
+        VIOp::Max,
+        VIOp::Minu,
+        VIOp::Maxu,
+        VIOp::Mul,
+        VIOp::Mulh,
+    ] {
+        xs.push(v(VOp::IVV { op, vd: VReg(1), vs2: VReg(2), vs1: VReg(3) }));
+    }
+    for op in [VIOp::Add, VIOp::And, VIOp::Or, VIOp::Xor, VIOp::Mul, VIOp::Mulh] {
+        // vs2 = v0 would alias vmv.v.x; the canonical form keeps vs2 ≠ v0.
+        xs.push(v(VOp::IVX { op, vd: VReg(4), vs2: VReg(5), rs1: Reg(6) }));
+    }
+    for op in [VIOp::Add, VIOp::Rsub, VIOp::And, VIOp::Or, VIOp::Xor] {
+        xs.push(v(VOp::IVI { op, vd: VReg(7), vs2: VReg(8), imm: -5 }));
+    }
+    xs.push(v(VOp::MaccVX { vd: VReg(1), rs1: Reg(2), vs2: VReg(3) }));
+    xs.push(v(VOp::MaccVV { vd: VReg(4), vs1: VReg(5), vs2: VReg(6) }));
+    xs.push(v(VOp::RedSum { vd: VReg(7), vs2: VReg(8), vs1: VReg(9) }));
+    xs.push(v(VOp::MvXS { rd: Reg(5), vs2: VReg(6) }));
+    xs.push(v(VOp::MvSX { vd: VReg(7), rs1: Reg(8) }));
+    xs.push(v(VOp::MvVX { vd: VReg(9), rs1: Reg(10) }));
+    xs.push(v(VOp::MvVI { vd: VReg(11), imm: -3 }));
+    for frac in [2u8, 4, 8] {
+        xs.push(v(VOp::Sext { vd: VReg(1), vs2: VReg(2), frac }));
+        xs.push(v(VOp::Zext { vd: VReg(3), vs2: VReg(4), frac }));
+    }
+    xs.push(v(VOp::MseqVI { vd: VReg(5), vs2: VReg(6), imm: 15 }));
+    xs.push(v(VOp::MsneVI { vd: VReg(7), vs2: VReg(8), imm: -16 }));
+    xs.push(v(VOp::FMaccVF { vd: VReg(1), rs1: FReg(2), vs2: VReg(3) }));
+    xs.push(v(VOp::FAddVV { vd: VReg(4), vs2: VReg(5), vs1: VReg(6) }));
+    xs.push(v(VOp::FMulVF { vd: VReg(7), vs2: VReg(8), rs1: FReg(9) }));
+    xs.push(v(VOp::FMaxVF { vd: VReg(10), vs2: VReg(11), rs1: FReg(12) }));
+    xs.push(v(VOp::FMvVF { vd: VReg(13), rs1: FReg(14) }));
+    xs.push(v(VOp::FRedSum { vd: VReg(13), vs2: VReg(14), vs1: VReg(15) }));
+    xs.push(v(VOp::Popcnt { vd: VReg(1), vs2: VReg(2) }));
+    xs.push(v(VOp::Shacc { vd: VReg(3), vs2: VReg(4), shamt: 31 }));
+    xs.push(v(VOp::Bitpack { vd: VReg(5), vs2: VReg(6), bit: 31 }));
+    xs
+}
+
+#[test]
+fn every_opcode_roundtrips_through_disasm_and_reencode() {
+    for i in exemplars() {
+        let word = encode(&i).unwrap_or_else(|| panic!("exemplar must encode: {i}"));
+        let back =
+            decode(word).unwrap_or_else(|| panic!("word {word:#010x} ({i}) must decode"));
+        assert_eq!(back, i, "decode must invert encode (word {word:#010x})");
+        let text = format!("{back}");
+        assert!(!text.trim().is_empty(), "disassembly of {word:#010x} must be non-empty");
+        assert_eq!(
+            encode(&back),
+            Some(word),
+            "re-encoding the decoded form of {text:?} must reproduce {word:#010x}"
+        );
+    }
+}
+
+#[test]
+fn quark_custom_ops_disassemble_and_land_in_custom2() {
+    use quark::isa::quark::{F6_VBITPACK, F6_VPOPCNT, F6_VSHACC, OPC_CUSTOM2};
+    let cases = [
+        (Instr::Vector(VOp::Popcnt { vd: VReg(3), vs2: VReg(7) }), "vpopcnt.v v3, v7", F6_VPOPCNT),
+        (
+            Instr::Vector(VOp::Shacc { vd: VReg(1), vs2: VReg(2), shamt: 1 }),
+            "vshacc.vi v1, v2, 1",
+            F6_VSHACC,
+        ),
+        (
+            Instr::Vector(VOp::Bitpack { vd: VReg(8), vs2: VReg(0), bit: 3 }),
+            "vbitpack.vi v8, v0, 3",
+            F6_VBITPACK,
+        ),
+    ];
+    for (i, text, f6) in cases {
+        assert_eq!(format!("{i}"), text);
+        let word = encode(&i).expect("custom ops must encode");
+        assert_eq!(word & 0x7f, OPC_CUSTOM2, "{text} must land in the custom-2 opcode space");
+        assert_eq!(word >> 26, f6, "{text} funct6");
+        assert_eq!(decode(word), Some(i), "{text}");
+    }
+}
+
 #[test]
 fn decode_rejects_garbage_mostly() {
     // Random words should usually NOT decode to valid instructions of our

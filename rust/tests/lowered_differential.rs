@@ -1,0 +1,180 @@
+//! The oracle suite the decode-once lowering is judged against:
+//! [`Sim::execute_lowered`] (fused micro-op replay, the warm serving path)
+//! must be indistinguishable from [`Sim::execute_with_input`] (the timed
+//! instruction-by-instruction interpreter) and from the naive-i128 host
+//! golden model —
+//!
+//! * **bit-exact logits and per-layer feature maps** for every `nn::zoo`
+//!   entry at {w2a2, w1a1, mixed, int8} schedules,
+//! * at **relocated base addresses** (two fresh bases plus a worker-style
+//!   dirty-arena replay),
+//! * and under **cluster sharding** at {1, 2} shards, where every shard
+//!   core replays its program through the same functional range machinery
+//!   the lowering falls back to.
+//!
+//! Deep graphs run on `Full`-mode-affordable prefixes ([`zoo::model_head`]
+//! / 10-class variants) — the same trade `rust/tests/zoo.rs` makes; the
+//! lowering walk itself sees every kernel shape (bit-serial conv, int8
+//! conv, FC, pool, residual re-pack) through those heads.
+
+use quark::arch::MachineConfig;
+use quark::cluster::{compile_cluster, ClusterCores};
+use quark::nn::golden::run_golden;
+use quark::nn::model::{Precision, PrecisionMap};
+use quark::nn::{zoo, NetGraph};
+use quark::program::compile;
+use quark::sim::{Sim, SimMode};
+
+const W2A2: Precision = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
+const W1A1: Precision = Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true };
+
+fn test_input() -> Vec<u8> {
+    (0..32 * 32 * 3).map(|i| ((i * 11 + 5) % 251) as u8).collect()
+}
+
+/// Every registered model at a `Full`-mode-affordable profile: shallow
+/// graphs whole (10-class variants keep the classifier small), deep ResNets
+/// as a stem + first-residual-block head.
+fn affordable_zoo() -> Vec<NetGraph> {
+    zoo::entries()
+        .iter()
+        .map(|e| match e.name {
+            "resnet18-cifar" => zoo::model_head("resnet18-cifar@10", 4).unwrap(),
+            "resnet34-cifar" => zoo::model_head("resnet34-cifar@10", 3).unwrap(),
+            name => zoo::model(&format!("{name}@10")).unwrap(),
+        })
+        .collect()
+}
+
+/// The acceptance schedule matrix: uniform w2a2 / w1a1 / int8 plus the
+/// registry's mixed schedule for this graph.
+fn schedules(net: &NetGraph) -> Vec<(&'static str, PrecisionMap)> {
+    vec![
+        ("w2a2", PrecisionMap::uniform(W2A2)),
+        ("w1a1", PrecisionMap::uniform(W1A1)),
+        ("mixed", zoo::mixed_schedule(net)),
+        ("int8", PrecisionMap::uniform(Precision::Int8)),
+    ]
+}
+
+#[test]
+fn every_zoo_model_lowered_matches_timed_and_golden() {
+    let input = test_input();
+    for net in affordable_zoo() {
+        for (label, sched) in schedules(&net) {
+            let ctx = format!("{} under {label}", net.name());
+            let prog = compile(&net, &MachineConfig::quark(4), &sched)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let golden = run_golden(&net, &sched, Some(&input));
+
+            // Timed oracle: Full-mode instruction-by-instruction replay.
+            let mut timed = Sim::new(MachineConfig::quark(4));
+            timed.set_mode(SimMode::Full);
+            let tb = timed.alloc(prog.mem_len());
+            let trun = timed.execute_with_input(&prog, tb, Some(&input));
+            assert_eq!(
+                timed.read_u8s(trun.out_addr, trun.out_elems),
+                golden.maps[net.len()],
+                "{ctx}: timed oracle diverges from the i128 golden"
+            );
+
+            // Lowered replay: fused micro-ops, same memory effects.
+            let mut low = Sim::new(MachineConfig::quark(4));
+            let lb = low.alloc(prog.mem_len());
+            let lrun = low.execute_lowered(&prog, lb, Some(&input));
+            assert_eq!(lrun.cycles, 0, "{ctx}: lowered replay accounts no cycles");
+            assert_eq!(lrun.reports.len(), net.len(), "{ctx}");
+            for (i, (l, t)) in lrun.reports.iter().zip(trun.reports.iter()).enumerate() {
+                assert_eq!(l.name, t.name, "{ctx}");
+                assert_eq!(l.out_elems, t.out_elems, "{ctx}: layer {}", t.name);
+                let got = low.read_u8s(l.out_addr, l.out_elems);
+                assert_eq!(
+                    got,
+                    timed.read_u8s(t.out_addr, t.out_elems),
+                    "{ctx}: lowered layer {} diverges from the timed oracle",
+                    t.name
+                );
+                assert_eq!(
+                    got, golden.maps[i + 1],
+                    "{ctx}: lowered layer {} diverges from the i128 golden",
+                    t.name
+                );
+            }
+            assert_eq!(
+                low.read_u8s(lrun.out_addr, lrun.out_elems),
+                golden.maps[net.len()],
+                "{ctx}: lowered logits diverge from the i128 golden"
+            );
+        }
+    }
+}
+
+#[test]
+fn lowered_relocation_replays_bit_exactly_at_two_bases() {
+    let net = zoo::model("tiny@10").unwrap();
+    let sched = zoo::mixed_schedule(&net);
+    let input = test_input();
+    let prog = compile(&net, &MachineConfig::quark(4), &sched).unwrap();
+    let golden = run_golden(&net, &sched, Some(&input));
+
+    // Base A: the compile-time base (fresh sim, first allocation).
+    let mut sim_a = Sim::new(MachineConfig::quark(4));
+    let base_a = sim_a.alloc(prog.mem_len());
+    let run_a = sim_a.execute_lowered(&prog, base_a, Some(&input));
+    assert_eq!(sim_a.read_u8s(run_a.out_addr, run_a.out_elems), golden.maps[net.len()]);
+
+    // Base B: shifted by a padding allocation — every resolved micro-op
+    // address must follow the delta.
+    let mut sim_b = Sim::new(MachineConfig::quark(4));
+    sim_b.alloc(1 << 16);
+    let base_b = sim_b.alloc(prog.mem_len());
+    assert_ne!(base_a, base_b, "test must exercise a real relocation");
+    let run_b = sim_b.execute_lowered(&prog, base_b, Some(&input));
+    assert_eq!(
+        run_b.out_addr,
+        run_a.out_addr + (base_b - base_a),
+        "reported addresses must follow the relocation delta"
+    );
+    for (a, b) in run_a.reports.iter().zip(run_b.reports.iter()) {
+        assert_eq!(b.out_addr, a.out_addr + (base_b - base_a), "layer {}", a.name);
+        assert_eq!(
+            sim_a.read_u8s(a.out_addr, a.out_elems),
+            sim_b.read_u8s(b.out_addr, b.out_elems),
+            "layer {}",
+            a.name
+        );
+    }
+    assert_eq!(sim_b.read_u8s(run_b.out_addr, run_b.out_elems), golden.maps[net.len()]);
+
+    // Worker-style reuse of a dirty arena at yet another base.
+    let base_c = sim_b.alloc(prog.mem_len());
+    let run_c = sim_b.execute_lowered(&prog, base_c, Some(&input));
+    assert_eq!(sim_b.read_u8s(run_c.out_addr, run_c.out_elems), golden.maps[net.len()]);
+}
+
+#[test]
+fn lowered_matches_cluster_inference_at_one_and_two_shards() {
+    let net = zoo::model_head("quarknet@10", 4).unwrap();
+    let machine = MachineConfig::quark(4);
+    let sched = PrecisionMap::uniform(W2A2);
+    let input = test_input();
+    let golden = run_golden(&net, &sched, Some(&input));
+
+    // Single-core lowered logits — the reference.
+    let prog = compile(&net, &machine, &sched).unwrap();
+    let mut sim = Sim::new(machine.clone());
+    let base = sim.alloc(prog.mem_len());
+    let run = sim.execute_lowered(&prog, base, Some(&input));
+    let single = sim.read_u8s(run.out_addr, run.out_elems);
+    assert_eq!(single, golden.maps[net.len()]);
+
+    for shards in [1usize, 2] {
+        let cluster = compile_cluster(&net, &machine, &sched, shards).unwrap();
+        let mut cores = ClusterCores::new(&machine, shards);
+        let sharded = cores.infer(&cluster, &input).logits;
+        assert_eq!(
+            sharded, single,
+            "cluster at {shards} shard(s) must gather the single-core lowered logits"
+        );
+    }
+}

@@ -3,7 +3,9 @@
 //!   invocation (the kernels are data-independent);
 //! * the simulated `vbitpack`/pure-RVV packers match the host packer for
 //!   random sizes and precisions;
-//! * cycles are monotone in work; stats stay consistent.
+//! * cycles are monotone in work; stats stay consistent;
+//! * decode-once lowered replay ≡ functional replay ≡ i128 golden on
+//!   random small `NetGraph`s under random per-layer precision schedules.
 
 mod support;
 
@@ -11,6 +13,11 @@ use quark::arch::MachineConfig;
 use quark::kernels::bitpack::{emit_pack_planes, setup_index_vector, PackedBuf};
 use quark::kernels::matmul::{gemm_codes_golden, matmul_bitserial, matmul_int8};
 use quark::kernels::requantize::{requant_host, RqBuf};
+use quark::kernels::Conv2dParams;
+use quark::nn::golden::run_golden;
+use quark::nn::model::{Precision, PrecisionMap};
+use quark::nn::{ConvLayer, LayerKind, NetGraph, NetLayer};
+use quark::program::compile;
 use quark::quant::{pack_bit_planes, pack_weight_planes};
 use quark::sim::{Sim, SimMode};
 use support::{run_cases, Gen};
@@ -162,6 +169,134 @@ fn more_lanes_never_slower() {
         sim.cycles()
     };
     assert!(cycles(8) <= cycles(4), "8 lanes must not be slower than 4");
+}
+
+/// One 8×8 stride-1 conv layer with a random kernel size (1 or 3, padded
+/// to preserve the spatial shape) and random relu — the building block of
+/// the random graphs below. Quantized K axes stay 64-aligned because
+/// `c_in ∈ {64, 128}` and `k² ∈ {1, 9}`.
+fn rand_conv(
+    g: &mut Gen,
+    name: &str,
+    c_in: usize,
+    c_out: usize,
+    quantized: bool,
+    input: usize,
+) -> NetLayer {
+    let ksz = if g.bool() { 3 } else { 1 };
+    NetLayer {
+        kind: LayerKind::Conv(ConvLayer {
+            name: name.into(),
+            params: Conv2dParams {
+                h: 8,
+                w: 8,
+                c_in,
+                c_out,
+                kh: ksz,
+                kw: ksz,
+                stride: 1,
+                pad: if ksz == 3 { 1 } else { 0 },
+            },
+            relu: g.bool(),
+            residual: false,
+            quantized,
+        }),
+        input,
+        residual_from: None,
+    }
+}
+
+/// A random small valid `NetGraph`: int8 stem, 1–2 quantized convs with
+/// random widths/kernels, optionally a global pool before the 10-class
+/// classifier. Returns the graph plus the names of its schedulable layers.
+fn random_net(g: &mut Gen) -> (NetGraph, Vec<String>) {
+    let widths = [64usize, 128];
+    let mut layers = Vec::new();
+    let mut names = Vec::new();
+    let mut c = *g.pick(&widths);
+    layers.push(rand_conv(g, "stem", 3, c, false, 0));
+    for i in 0..g.usize(1, 2) {
+        let c_out = *g.pick(&widths);
+        let name = format!("c{i}");
+        layers.push(rand_conv(g, &name, c, c_out, true, layers.len()));
+        names.push(name);
+        c = c_out;
+    }
+    if g.bool() {
+        layers.push(NetLayer {
+            kind: LayerKind::AvgPool { h: 8, w: 8, c },
+            input: layers.len(),
+            residual_from: None,
+        });
+        layers.push(NetLayer {
+            kind: LayerKind::Fc { k: c, n: 10, name: "fc".into() },
+            input: layers.len(),
+            residual_from: None,
+        });
+    } else {
+        layers.push(NetLayer {
+            kind: LayerKind::Fc { k: 8 * 8 * c, n: 10, name: "fc".into() },
+            input: layers.len(),
+            residual_from: None,
+        });
+    }
+    names.push("fc".to_string());
+    (NetGraph::new("prop-net@10", 10, layers).unwrap(), names)
+}
+
+#[test]
+fn lowered_replay_matches_functional_and_golden_on_random_nets() {
+    // The supported integer palette: int8 plus every 1–2-bit sub-byte
+    // combination, with and without the vbitpack fast path.
+    let palette = [
+        Precision::Int8,
+        Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true },
+        Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true },
+        Precision::Sub { abits: 2, wbits: 1, use_vbitpack: false },
+        Precision::Sub { abits: 1, wbits: 2, use_vbitpack: true },
+    ];
+    run_cases(6, |g| {
+        let (net, names) = random_net(g);
+        let mut sched = PrecisionMap::uniform(*g.pick(&palette));
+        for name in &names {
+            sched = sched.with(name, *g.pick(&palette));
+        }
+        let input: Vec<u8> = (0..32 * 32 * 3).map(|_| (g.u64() % 251) as u8).collect();
+        let ctx = format!("{} layers, schedule {}", net.len(), sched.spec());
+
+        let prog = compile(&net, &MachineConfig::quark(4), &sched)
+            .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+        let golden = run_golden(&net, &sched, Some(&input));
+
+        let mut func = quark_sim(SimMode::Full);
+        let fb = func.alloc(prog.mem_len());
+        let frun = func.execute_functional(&prog, fb, Some(&input));
+
+        let mut low = quark_sim(SimMode::Full);
+        let lb = low.alloc(prog.mem_len());
+        let lrun = low.execute_lowered(&prog, lb, Some(&input));
+
+        for (i, (l, f)) in lrun.reports.iter().zip(frun.reports.iter()).enumerate() {
+            let want = &golden.maps[i + 1];
+            assert_eq!(
+                &func.read_u8s(f.out_addr, f.out_elems),
+                want,
+                "{ctx}: functional layer {} diverges from the i128 golden",
+                f.name
+            );
+            assert_eq!(
+                &low.read_u8s(l.out_addr, l.out_elems),
+                want,
+                "{ctx}: lowered layer {} diverges from the i128 golden",
+                l.name
+            );
+        }
+        assert_eq!(
+            low.read_u8s(lrun.out_addr, lrun.out_elems),
+            golden.maps[net.len()],
+            "{ctx}: lowered logits diverge from the i128 golden"
+        );
+    });
 }
 
 #[test]
