@@ -30,11 +30,14 @@ fn main() {
     let rxs: Vec<_> = (0..n)
         .map(|id| {
             coord
-                .submit(InferenceRequest { id, input: None, net: None, schedule: None, shards: None })
+                .submit(InferenceRequest { id, ..Default::default() })
                 .expect("queue has room")
         })
         .collect();
-    let mut responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let mut responses: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().expect("undeadlined requests never expire"))
+        .collect();
     let wall = t0.elapsed();
     responses.sort_by_key(|r| r.id);
 
@@ -67,9 +70,9 @@ fn main() {
     let input_b = vec![200u8; 32 * 32 * 3];
     for (label, input) in [("zeros", input_a), ("bright", input_b)] {
         let rx = coord
-            .submit(InferenceRequest { id: 1000, input: Some(input), net: None, schedule: None, shards: None })
+            .submit(InferenceRequest { id: 1000, input: Some(input), ..Default::default() })
             .expect("queue has room");
-        let r = rx.recv().unwrap();
+        let r = rx.recv().unwrap().expect("undeadlined requests never expire");
         println!(
             "classify {label:>6}: argmax={} (service {:.0} ms, worker {})",
             r.argmax.unwrap(),
@@ -80,8 +83,10 @@ fn main() {
 
     let s = coord.stats();
     println!(
-        "\nSTATS served={} rejected={} cache_hits={} cache_misses={} p50_us={} p99_us={} util={:?}",
-        s.served, s.rejected, s.cache_hits, s.cache_misses, s.p50_us, s.p99_us,
+        "\nSTATS served={} rejected={} expired={} degraded={} cache_hits={} cache_misses={} \
+         p50_us={} p99_us={} util={:?}",
+        s.served, s.rejected, s.expired, s.degraded, s.cache_hits, s.cache_misses,
+        s.p50_us, s.p99_us,
         s.utilization.iter().map(|u| (u * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
     coord.shutdown();

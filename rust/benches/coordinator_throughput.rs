@@ -1,15 +1,25 @@
 //! Bench: coordinator serving throughput/latency — worker-count and
-//! batch-size sweeps, plus the headline comparison the serving overhaul is
-//! about: repeated identical-shape requests served via the timing cache on
-//! persistent cores vs the old per-request-`Sim` re-simulation baseline.
+//! batch-size sweeps, the headline comparison the serving overhaul is
+//! about (repeated identical-shape requests served via the timing cache on
+//! persistent cores vs the old per-request-`Sim` re-simulation baseline),
+//! and the continuous-batching sweep: functional requests on a two-model
+//! nano deployment at batch {1, 4, 16}, where a batch-B claim coalesces
+//! into one multi-input lowered replay (one arena, one image application,
+//! B micro-op passes).
+//!
+//! `--fast` runs a reduced version of every section — CI uses it as the
+//! de-batching regression canary (the batch-16 vs batch-1 ratio assert
+//! still fires, at a floor instead of the full-mode target).
 
 #[path = "support/bench_json.rs"]
 mod bench_json;
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use quark::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
 use quark::nn::model::ModelRunner;
+use quark::nn::{LayerKind, NetGraph, NetLayer};
 use quark::sim::{Sim, SimMode};
 
 /// What the seed coordinator did for every request: construct a fresh `Sim`
@@ -39,15 +49,16 @@ fn run(workers: usize, batch: usize, n: u64) -> (f64, f64, f64) {
     let coord = Coordinator::start(cfg);
     // Warm the timing cache so the sweep measures the steady state.
     coord
-        .submit(InferenceRequest { id: u64::MAX, input: None, net: None, schedule: None, shards: None })
+        .submit(InferenceRequest { id: u64::MAX, ..Default::default() })
         .unwrap()
         .recv()
+        .unwrap()
         .unwrap();
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
-        .map(|id| coord.submit(InferenceRequest { id, input: None, net: None, schedule: None, shards: None }).unwrap())
+        .map(|id| coord.submit(InferenceRequest { id, ..Default::default() }).unwrap())
         .collect();
-    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let responses: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
     let wall = t0.elapsed().as_secs_f64();
     let mut lat: Vec<f64> =
         responses.iter().map(|r| (r.queue_time + r.service_time).as_secs_f64() * 1e3).collect();
@@ -58,10 +69,81 @@ fn run(workers: usize, batch: usize, n: u64) -> (f64, f64, f64) {
     (n as f64 / wall, p50, p99)
 }
 
+/// A 1-layer FC net small enough that per-element compute is negligible
+/// next to per-request serving overhead — the workload where continuous
+/// batching's amortization (one claim, one arena image, one timing/program
+/// resolution burst per group) shows up as wall-clock throughput.
+fn nano_model(name: &str, k: usize) -> NetGraph {
+    NetGraph::new(
+        name,
+        10,
+        vec![NetLayer {
+            kind: LayerKind::Fc { k, n: 10, name: "fc".into() },
+            input: 0,
+            residual_from: None,
+        }],
+    )
+    .unwrap()
+}
+
+/// Sustained functional throughput on a warm two-model nano deployment at
+/// the given max batch size. Requests alternate models in `batch`-sized
+/// blocks, so every claim window holds same-DeployKey runs that coalesce
+/// into one multi-input lowered replay.
+fn run_batched(batch: usize, n: u64) -> f64 {
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.workers = 1;
+    cfg.batch_size = batch;
+    cfg.batch_timeout = Duration::from_millis(5);
+    cfg.max_queue = n as usize + 1;
+    cfg.models =
+        vec![Arc::new(nano_model("nano-a@10", 64)), Arc::new(nano_model("nano-b@10", 128))];
+    let coord = Coordinator::start(cfg);
+    let models = ["nano-a@10", "nano-b@10"];
+    // Warm both models' timing and program caches.
+    for (i, name) in models.iter().enumerate() {
+        coord
+            .submit(InferenceRequest {
+                id: u64::MAX - i as u64,
+                input: Some(vec![1u8; 128]),
+                net: Some(name.to_string()),
+                ..Default::default()
+            })
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+    }
+    let input = vec![42u8; 128];
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|id| {
+            let name = models[(id as usize / batch) % 2];
+            coord
+                .submit(InferenceRequest {
+                    id,
+                    input: Some(input.clone()),
+                    net: Some(name.to_string()),
+                    ..Default::default()
+                })
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    n as f64 / wall
+}
+
 fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let mode = if fast { "fast" } else { "full" };
+
     println!("== timing-cache hit path vs seed per-request-Sim baseline ==");
-    let baseline_rps = per_request_sim_baseline(8);
-    let (warm_rps, p50, p99) = run(2, 4, 512);
+    let baseline_rps = per_request_sim_baseline(if fast { 2 } else { 8 });
+    let (warm_rps, p50, p99) = run(2, 4, if fast { 128 } else { 512 });
     println!("per-request Sim baseline : {baseline_rps:>10.1} req/s");
     println!("cached coordinator (warm): {warm_rps:>10.1} req/s  (p50 {p50:.2} ms, p99 {p99:.2} ms)");
     println!("speedup                  : {:>10.1}x", warm_rps / baseline_rps);
@@ -72,22 +154,48 @@ fn main() {
         .field("p50_ms", p50)
         .field("p99_ms", p99)];
 
-    println!("\n== worker/batch sweep (warm cache, 128 requests each) ==");
-    let n = 128u64;
-    println!("{:>8} {:>6} {:>10} {:>10} {:>10}", "workers", "batch", "req/s", "p50 ms", "p99 ms");
-    for workers in [1usize, 2, 4] {
-        for batch in [1usize, 4, 16] {
-            let (rps, p50, p99) = run(workers, batch, n);
-            println!("{workers:>8} {batch:>6} {rps:>10.1} {p50:>10.2} {p99:>10.2}");
-            rows.push(
-                bench_json::Row::new(&format!("w{workers}_b{batch}"))
-                    .field("rps", rps)
-                    .field("p50_ms", p50)
-                    .field("p99_ms", p99),
-            );
+    if !fast {
+        println!("\n== worker/batch sweep (warm cache, 128 requests each) ==");
+        let n = 128u64;
+        println!("{:>8} {:>6} {:>10} {:>10} {:>10}", "workers", "batch", "req/s", "p50 ms", "p99 ms");
+        for workers in [1usize, 2, 4] {
+            for batch in [1usize, 4, 16] {
+                let (rps, p50, p99) = run(workers, batch, n);
+                println!("{workers:>8} {batch:>6} {rps:>10.1} {p50:>10.2} {p99:>10.2}");
+                rows.push(
+                    bench_json::Row::new(&format!("w{workers}_b{batch}"))
+                        .field("rps", rps)
+                        .field("p50_ms", p50)
+                        .field("p99_ms", p99),
+                );
+            }
         }
     }
-    println!("\n(each request = one demo-net inference on a persistent simulated Quark-4L core;");
+
+    println!("\n== continuous batching: functional requests, two-model nano deployment ==");
+    let n = if fast { 192 } else { 512 } as u64;
+    let mut batch_rps = Vec::new();
+    println!("{:>6} {:>12}", "batch", "req/s");
+    for batch in [1usize, 4, 16] {
+        let rps = run_batched(batch, n);
+        println!("{batch:>6} {rps:>12.1}");
+        rows.push(bench_json::Row::new(&format!("batched_b{batch}")).field("rps", rps));
+        batch_rps.push(rps);
+    }
+    let ratio = batch_rps[2] / batch_rps[0];
+    rows.push(bench_json::Row::new("batch16_vs_batch1").field("ratio", ratio));
+    println!("batch-16 vs batch-1 sustained: {ratio:.2}x");
+    // De-batching regression canary: a coalesced batch-16 replay must beat
+    // 16 single-request replays decisively. Full mode holds the acceptance
+    // target; --fast (CI smoke, debug-friendly) holds a floor that still
+    // catches a silently de-batched serve path.
+    let floor = if fast { 1.5 } else { 3.0 };
+    assert!(
+        ratio >= floor,
+        "continuous batching regressed: batch-16 sustained only {ratio:.2}x batch-1 (need >= {floor}x)"
+    );
+
+    println!("\n(each request = one inference on a persistent simulated Quark-4L core;");
     println!(" timing resolved through the deterministic cache after the first batch)");
-    bench_json::write("coordinator_throughput", "full", &rows);
+    bench_json::write("coordinator_throughput", mode, &rows);
 }

@@ -14,6 +14,7 @@
 //!             [--machine <ara-4l|quark-4l|quark-8l>] [--shards N]
 //!             [--models <spec,spec,…>] [--fast]
 //!             [--precision <spec>]      e.g. --precision "w2a2;c1=int8;fc=int8"
+//!             [--degrade <spec>] [--degrade-depth N]
 //! repro phys
 //! ```
 //!
@@ -44,6 +45,12 @@
 //! (`default[;layer=precision…]` — see
 //! [`crate::nn::model::PrecisionMap::parse`]); clients can still override
 //! it per request with the `prec=` wire field (`docs/serving.md`).
+//!
+//! `serve --degrade <spec>` arms the overload degrade policy: once the
+//! queue holds `--degrade-depth` requests (default half of `--queue`),
+//! submissions that pin neither `prec=` nor `shards=` are admitted under
+//! the cheaper fallback schedule instead of answering `BUSY` — their
+//! replies carry `degraded=1` and STATS counts them separately.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -52,7 +59,7 @@ use crate::bail;
 use crate::error::{Context, Result};
 
 use crate::arch::MachineConfig;
-use crate::coordinator::{server, Coordinator, CoordinatorConfig};
+use crate::coordinator::{server, Coordinator, CoordinatorConfig, DegradePolicy};
 use crate::nn::model::{Precision, PrecisionMap};
 use crate::nn::{zoo, NetGraph};
 use crate::report;
@@ -442,6 +449,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(s) = flags.get("shards") {
         cfg.shards = s.parse().with_context(|| format!("bad --shards {s:?}"))?;
     }
+    // Overload degrade policy: fallback schedule + optional trip depth.
+    let degrade = match flags.get("degrade") {
+        Some(spec) => match PrecisionMap::parse(spec) {
+            Ok(map) => Some(map),
+            Err(e) => bail!("bad --degrade: {e}"),
+        },
+        None => None,
+    };
+    if flags.contains_key("degrade-depth") && degrade.is_none() {
+        bail!("--degrade-depth requires --degrade");
+    }
+    let degrade_depth = match flags.get("degrade-depth") {
+        Some(d) => d.parse().with_context(|| format!("bad --degrade-depth {d:?}"))?,
+        None => cfg.max_queue / 2,
+    };
     // Deployed model set: comma-separated zoo specs, first = default. The
     // registry --fast profile applies to every deployed model.
     let fast = flags.contains_key("fast");
@@ -470,7 +492,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         if let Err(e) = crate::coordinator::validate_shards(cfg.shards, &cfg.schedule, model) {
             bail!("bad --shards for model {:?}: {e}", model.name());
         }
+        // The degrade fallback must be deployable everywhere the default is.
+        if let Some(map) = &degrade {
+            if let Err(e) =
+                map.validate(model).and_then(|_| map.validate_machine(model, &cfg.machine))
+            {
+                bail!("bad --degrade for model {:?}: {e}", model.name());
+            }
+            if let Err(e) = crate::coordinator::validate_shards(cfg.shards, map, model) {
+                bail!("bad --degrade for model {:?}: {e}", model.name());
+            }
+        }
     }
+    cfg.degrade = degrade.map(|schedule| DegradePolicy { schedule, depth: degrade_depth });
     let coord = Arc::new(Coordinator::start(cfg));
     server::serve(coord, &addr)
 }

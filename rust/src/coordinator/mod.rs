@@ -43,9 +43,26 @@
 //!   submission ([`SubmitError::Invalid`]) and occupy their own timing-cache
 //!   entries.
 //! * **Real batched inference.** Requests that carry input bytes are run
-//!   through the functional executor (`SimMode::Full`) on the worker's
-//!   persistent core; the response carries the resulting logits and argmax.
-//!   Requests without input are timing-only probes.
+//!   through the functional executor on the worker's persistent core; the
+//!   response carries the resulting logits and argmax. Requests without
+//!   input are timing-only probes.
+//! * **Continuous batching.** A claimed batch is partitioned into
+//!   DeployKey-pure groups — same `(model, schedule, shards)` — and each
+//!   single-core group's inputs ride **one** multi-input lowered replay
+//!   ([`Sim::execute_lowered_batch`]): the arena is rewound and the init
+//!   image applied once per group, then only the input segment is rebound
+//!   per request. Logits are bit-identical to per-request replays
+//!   (`rust/tests/batching.rs`); requests never share a replay across keys
+//!   (`batch_id` is per group).
+//! * **Admission control.** A request may carry a deadline
+//!   ([`InferenceRequest::deadline_ms`]; wire `deadline_ms=`) and a
+//!   [`Priority`] (wire `prio=`). Workers claim strictly by priority (FIFO
+//!   within a class), and a request whose deadline passed while queued is
+//!   dropped at claim time with [`ServeError::Expired`] (wire `EXPIRED`) —
+//!   counted, never run, never silently lost. Under overload an optional
+//!   [`DegradePolicy`] reroutes default-schedule submissions to a cheaper
+//!   deployment-configured precision schedule instead of answering plain
+//!   `BUSY`; degraded responses are labeled and counted separately.
 //! * **Cluster sharding.** A request may ask for its inference to be
 //!   partitioned across `N` simulated cores ([`crate::cluster`]; wire: the
 //!   `shards=` field of `INFER`, deployment default `serve --shards`).
@@ -107,6 +124,64 @@ pub struct InferenceRequest {
     /// Tensor-parallel shard count ([`crate::cluster`]); `None` uses the
     /// deployment default ([`CoordinatorConfig::shards`]), 1 = single core.
     pub shards: Option<usize>,
+    /// Queue-wait budget in milliseconds (wire: `deadline_ms=`). If the
+    /// request is still queued this long after submission, it is dropped at
+    /// claim time with [`ServeError::Expired`] instead of running late.
+    /// `None` waits indefinitely; once a worker claims a request it is
+    /// always served.
+    pub deadline_ms: Option<u64>,
+    /// Scheduling class (wire: `prio=low|normal|high`): workers claim
+    /// strictly higher classes first, FIFO within a class.
+    pub prio: Priority,
+}
+
+impl Default for InferenceRequest {
+    /// A timing-only probe of the deployment defaults: id 0, no input, no
+    /// overrides, no deadline, [`Priority::Normal`]. Construction sites
+    /// name what they care about and take the rest from here.
+    fn default() -> Self {
+        InferenceRequest {
+            id: 0,
+            input: None,
+            net: None,
+            schedule: None,
+            shards: None,
+            deadline_ms: None,
+            prio: Priority::Normal,
+        }
+    }
+}
+
+/// Request priority class. `Ord` follows urgency (`Low < Normal < High`):
+/// workers always claim a strictly higher class before a lower one, and
+/// keep FIFO order within a class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Wire label (the `prio=` field value).
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Parse a wire label; `None` on unknown values.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
 }
 
 /// Completed inference.
@@ -139,6 +214,12 @@ pub struct InferenceResponse {
     /// Modeled inter-core all-gather cycles included in `sim_cycles`
     /// (0 when `shards == 1`).
     pub sync_cycles: u64,
+    /// True when the [`DegradePolicy`] rerouted this request to the
+    /// deployment's fallback schedule at admission; `precision` then labels
+    /// the fallback, not the deployment default.
+    pub degraded: bool,
+    /// Priority class the request was scheduled under.
+    pub prio: Priority,
     /// Output of the network's last layer for the submitted input (u8 codes
     /// widened to f32 at integer precisions, raw floats at fp32). `None` for
     /// timing-only requests.
@@ -170,6 +251,52 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Why an *accepted* request produced no inference — delivered through the
+/// response channel (the receiver [`Coordinator::submit`] returns yields
+/// [`ServeResult`]s).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The deadline passed while the request waited in the queue; it was
+    /// dropped at claim time without running (wire: `EXPIRED`). Counted in
+    /// [`CoordStats::expired`] — distinct from [`SubmitError::Busy`], which
+    /// rejects before admission.
+    Expired { waited_ms: u64, deadline_ms: u64 },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Expired { waited_ms, deadline_ms } => {
+                write!(f, "deadline expired after {waited_ms} ms (deadline {deadline_ms} ms)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a submitted request's receiver yields: the completed inference, or
+/// the reason the coordinator dropped the request after admission.
+pub type ServeResult = Result<InferenceResponse, ServeError>;
+
+/// Overload degrade policy ([`CoordinatorConfig::degrade`]). Past `depth`
+/// queued requests, submissions that don't pin their own schedule or shard
+/// count are admitted under the cheaper fallback `schedule` instead of
+/// riding the default toward `BUSY` — graceful degradation in the
+/// mixed-precision spirit: a cheaper per-layer schedule is a fallback, not
+/// a failure. Degraded responses carry [`InferenceResponse::degraded`] and
+/// the fallback's precision label, and count in [`CoordStats::degraded`].
+#[derive(Clone)]
+pub struct DegradePolicy {
+    /// The fallback schedule; validated against every deployed model at
+    /// [`Coordinator::start`], exactly like the deployment default.
+    pub schedule: PrecisionMap,
+    /// Queue depth at or above which eligible submissions degrade (0
+    /// degrades every eligible request; `>= max_queue` effectively
+    /// disables the policy).
+    pub depth: usize,
+}
+
 /// Coordinator configuration.
 #[derive(Clone)]
 pub struct CoordinatorConfig {
@@ -192,6 +319,9 @@ pub struct CoordinatorConfig {
     /// The first entry is the default for requests without `net=`
     /// (`serve --models a,b,c`).
     pub models: Vec<Arc<NetGraph>>,
+    /// Optional overload degrade policy (`serve --degrade`); `None` keeps
+    /// plain `BUSY`-only backpressure.
+    pub degrade: Option<DegradePolicy>,
 }
 
 impl CoordinatorConfig {
@@ -211,6 +341,7 @@ impl CoordinatorConfig {
             max_queue: 256,
             shards: 1,
             models: vec![Arc::new(demo_net())],
+            degrade: None,
         }
     }
 
@@ -365,12 +496,23 @@ impl LatWindow {
 /// Snapshot of serving metrics (the extended `STATS` wire reply).
 #[derive(Clone, Debug)]
 pub struct CoordStats {
+    /// Requests completed at their requested schedule. Disjoint from
+    /// `degraded`: every accepted request ends up in exactly one of
+    /// `served`, `degraded`, or `expired` (the conservation invariant
+    /// `rust/tests/coordinator_stress.rs` checks).
     pub served: u64,
     pub rejected: u64,
-    /// Served requests per deployed model, in deployment order. The total
-    /// and per-model counters are separate relaxed atomics, so a snapshot
-    /// taken while requests are in flight may be off by the requests
-    /// currently completing; `Σ counts == served` once responses drain.
+    /// Accepted requests dropped at claim time because their deadline had
+    /// passed while queued ([`ServeError::Expired`]).
+    pub expired: u64,
+    /// Requests rerouted to the [`DegradePolicy`] fallback schedule at
+    /// admission and completed under it (disjoint from `served`).
+    pub degraded: u64,
+    /// Completed requests per deployed model, in deployment order —
+    /// degraded completions included. The total and per-model counters are
+    /// separate relaxed atomics, so a snapshot taken while requests are in
+    /// flight may be off by the requests currently completing;
+    /// `Σ counts == served + degraded` once responses drain.
     pub served_by_model: Vec<(String, u64)>,
     pub queue_depth: usize,
     pub workers: usize,
@@ -404,8 +546,43 @@ pub struct CoordStats {
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    /// Log₂ histogram of queue wait over dequeued requests (served,
+    /// degraded, and expired): bucket 0 counts waits under 1 ms, bucket `i`
+    /// waits in `[2^(i−1), 2^i)` ms, the last of the [`QUEUE_AGE_BUCKETS`]
+    /// buckets everything from ~1 s up.
+    pub queue_age_hist: Vec<u64>,
+    /// Per-model end-to-end latency percentiles (the SLO view next to the
+    /// aggregate p50/p95/p99), in deployment order, each over that model's
+    /// most recent `LAT_WINDOW` responses.
+    pub slo_by_model: Vec<ModelSlo>,
     /// Fraction of wall-clock each worker spent serving batches.
     pub utilization: Vec<f64>,
+}
+
+/// Per-model latency SLO snapshot ([`CoordStats::slo_by_model`]), µs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSlo {
+    pub model: String,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+/// Buckets of [`CoordStats::queue_age_hist`]: log₂ milliseconds, <1 ms up
+/// to ≥ ~1 s.
+pub const QUEUE_AGE_BUCKETS: usize = 12;
+
+/// Histogram bucket for a queue wait: 0 for waits under 1 ms, `i` for
+/// `[2^(i−1), 2^i)` ms, saturating at the last bucket.
+fn queue_age_bucket(wait: Duration) -> usize {
+    let ms = wait.as_millis() as u64;
+    let mut b = 0usize;
+    let mut lim = 1u64;
+    while b < QUEUE_AGE_BUCKETS - 1 && ms >= lim {
+        b += 1;
+        lim *= 2;
+    }
+    b
 }
 
 const LAT_WINDOW: usize = 4096;
@@ -431,7 +608,13 @@ struct Queued {
     /// Index into [`CoordinatorConfig::models`], resolved at submission.
     model_idx: usize,
     enqueued: Instant,
-    reply: mpsc::Sender<InferenceResponse>,
+    /// Absolute claim-by time (`enqueued + deadline_ms`), resolved at
+    /// submission; checked when a worker considers claiming the request.
+    deadline: Option<Instant>,
+    /// The [`DegradePolicy`] rerouted this request at admission
+    /// (`req.schedule` already holds the fallback).
+    degraded: bool,
+    reply: mpsc::Sender<ServeResult>,
 }
 
 struct Shared {
@@ -441,8 +624,12 @@ struct Shared {
     batch_counter: AtomicU64,
     served: AtomicU64,
     rejected: AtomicU64,
-    /// Served requests per deployed model (index-aligned with
-    /// [`CoordinatorConfig::models`]).
+    /// Accepted requests dropped at claim time (deadline passed).
+    expired: AtomicU64,
+    /// Requests completed under the degrade-policy fallback schedule.
+    degraded: AtomicU64,
+    /// Completed requests per deployed model (index-aligned with
+    /// [`CoordinatorConfig::models`]; degraded completions included).
     served_by_model: Vec<AtomicU64>,
     timing_cache: Mutex<HashMap<DeployKey, TimingEntry>>,
     cache_hits: AtomicU64,
@@ -462,6 +649,12 @@ struct Shared {
     /// shard position, up to [`MAX_SHARDS`]).
     shard_busy_ns: Vec<AtomicU64>,
     latencies: Mutex<LatWindow>,
+    /// Per-model latency windows (index-aligned with
+    /// [`CoordinatorConfig::models`]) behind [`CoordStats::slo_by_model`].
+    model_latencies: Vec<Mutex<LatWindow>>,
+    /// Queue-wait histogram counters ([`QUEUE_AGE_BUCKETS`] log₂-ms
+    /// buckets), bumped whenever a request leaves the queue.
+    queue_age_hist: Vec<AtomicU64>,
     /// Per-worker nanoseconds spent inside batch service.
     busy_ns: Vec<AtomicU64>,
     started: Instant,
@@ -491,6 +684,16 @@ impl Coordinator {
             if let Err(e) = validate_shards(cfg.shards, &cfg.schedule, model) {
                 panic!("invalid coordinator shard count for model {:?}: {e}", model.name());
             }
+            // The degrade fallback substitutes for the default at admission,
+            // so it must be as universally runnable as the default itself.
+            if let Some(policy) = &cfg.degrade {
+                if let Err(e) = validate_schedule(&policy.schedule, model, &cfg.machine) {
+                    panic!("invalid degrade schedule for model {:?}: {e}", model.name());
+                }
+                if let Err(e) = validate_shards(cfg.shards, &policy.schedule, model) {
+                    panic!("invalid degrade schedule for model {:?} at the deployment shard count: {e}", model.name());
+                }
+            }
         }
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -499,6 +702,8 @@ impl Coordinator {
             batch_counter: AtomicU64::new(0),
             served: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
             served_by_model: (0..cfg.models.len()).map(|_| AtomicU64::new(0)).collect(),
             timing_cache: Mutex::new(HashMap::new()),
             cache_hits: AtomicU64::new(0),
@@ -512,6 +717,10 @@ impl Coordinator {
             sync_cycles: AtomicU64::new(0),
             shard_busy_ns: (0..MAX_SHARDS).map(|_| AtomicU64::new(0)).collect(),
             latencies: Mutex::new(LatWindow::new(LAT_WINDOW)),
+            model_latencies: (0..cfg.models.len())
+                .map(|_| Mutex::new(LatWindow::new(LAT_WINDOW)))
+                .collect(),
+            queue_age_hist: (0..QUEUE_AGE_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             busy_ns: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
             started: Instant::now(),
         });
@@ -528,14 +737,18 @@ impl Coordinator {
         Coordinator { shared, cfg, workers }
     }
 
-    /// Submit a request; returns a receiver for the response,
+    /// Submit a request; returns a receiver for the [`ServeResult`],
     /// [`SubmitError::Busy`] when the queue is at capacity, or
     /// [`SubmitError::Invalid`] when the request names an unknown model or
-    /// its schedule/shard count cannot run on this deployment.
+    /// its schedule/shard count cannot run on this deployment. An accepted
+    /// request always gets exactly one reply: the response, or
+    /// [`ServeError::Expired`] if its deadline passes while queued. Under a
+    /// configured [`DegradePolicy`], an eligible submission past the policy
+    /// depth is admitted with its schedule rewritten to the fallback.
     pub fn submit(
         &self,
         req: InferenceRequest,
-    ) -> Result<mpsc::Receiver<InferenceResponse>, SubmitError> {
+    ) -> Result<mpsc::Receiver<ServeResult>, SubmitError> {
         let model_idx = match self.cfg.model_index(req.net.as_deref()) {
             Ok(i) => i,
             Err(reason) => return Err(SubmitError::Invalid { reason }),
@@ -567,13 +780,32 @@ impl Coordinator {
             self.shared.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Busy { depth });
         }
-        q.push_back(Queued { req, model_idx, enqueued: Instant::now(), reply: tx });
+        // Overload degrade: past the policy depth, requests that don't pin
+        // their own schedule or shard count are admitted under the cheaper
+        // fallback instead of riding the default toward BUSY. Rewriting
+        // `req.schedule` here means the DeployKey, precision label, and
+        // batching grouping all follow naturally downstream.
+        let mut req = req;
+        let mut degraded = false;
+        if let Some(policy) = &self.cfg.degrade {
+            if req.schedule.is_none() && req.shards.is_none() && q.len() >= policy.depth {
+                req.schedule = Some(policy.schedule.clone());
+                degraded = true;
+            }
+        }
+        let enqueued = Instant::now();
+        // `checked_add` so an absurd client-supplied deadline (u64::MAX ms)
+        // degenerates to "no deadline" instead of panicking on overflow.
+        let deadline =
+            req.deadline_ms.and_then(|ms| enqueued.checked_add(Duration::from_millis(ms)));
+        q.push_back(Queued { req, model_idx, enqueued, deadline, degraded, reply: tx });
         drop(q);
         self.shared.available.notify_one();
         Ok(rx)
     }
 
-    /// Requests served so far.
+    /// Requests served at their requested schedule so far (degraded
+    /// completions count separately — [`Coordinator::degraded`]).
     pub fn served(&self) -> u64 {
         self.shared.served.load(Ordering::Relaxed)
     }
@@ -581,6 +813,17 @@ impl Coordinator {
     /// Requests rejected by backpressure so far.
     pub fn rejected(&self) -> u64 {
         self.shared.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Accepted requests dropped unserved because their deadline passed
+    /// while they were queued.
+    pub fn expired(&self) -> u64 {
+        self.shared.expired.load(Ordering::Relaxed)
+    }
+
+    /// Requests completed under the degrade-policy fallback schedule.
+    pub fn degraded(&self) -> u64 {
+        self.shared.degraded.load(Ordering::Relaxed)
     }
 
     /// Snapshot of the serving metrics.
@@ -592,6 +835,8 @@ impl Coordinator {
         CoordStats {
             served: self.shared.served.load(Ordering::Relaxed),
             rejected: self.shared.rejected.load(Ordering::Relaxed),
+            expired: self.shared.expired.load(Ordering::Relaxed),
+            degraded: self.shared.degraded.load(Ordering::Relaxed),
             served_by_model: self
                 .cfg
                 .models
@@ -632,6 +877,23 @@ impl Coordinator {
             p50_us,
             p95_us,
             p99_us,
+            queue_age_hist: self
+                .shared
+                .queue_age_hist
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            slo_by_model: self
+                .cfg
+                .models
+                .iter()
+                .zip(self.shared.model_latencies.iter())
+                .map(|(m, w)| {
+                    let [p50_us, p95_us, p99_us] =
+                        w.lock().unwrap().percentiles([0.50, 0.95, 0.99]);
+                    ModelSlo { model: m.name().to_string(), p50_us, p95_us, p99_us }
+                })
+                .collect(),
             utilization: self
                 .shared
                 .busy_ns
@@ -708,21 +970,33 @@ impl WorkerCore {
         self.sim.execute(prog, base).cycles
     }
 
-    /// Functional replay of `prog` on `input`: write input bytes, replay the
-    /// decode-once lowering (values only — bit-identical to
-    /// [`Sim::execute_functional`], cycles come from the timing cache), read
-    /// logits. Returns (logits, argmax).
-    fn infer(&mut self, prog: &CompiledProgram, input: &[u8]) -> (Vec<f32>, usize) {
+    /// Batched functional replay of `prog`: the whole group of same-key
+    /// inputs rides **one** decode-once lowered replay
+    /// ([`Sim::execute_lowered_batch`]) — arena rewound once, init image
+    /// applied once, only the input segment rebound per element. Values
+    /// only (cycles come from the timing cache), and bit-identical to B
+    /// independent single-request replays — `rust/tests/batching.rs` holds
+    /// the differential proof. Returns `(logits, argmax)` per input, in
+    /// order.
+    fn infer_batch(&mut self, prog: &CompiledProgram, inputs: &[&[u8]]) -> Vec<(Vec<f32>, usize)> {
         self.rewind();
         let base = self.sim.alloc(prog.mem_len());
-        let run = self.sim.execute_lowered(prog, base, Some(input));
-        if prog.is_fp32() {
-            let logits = self.sim.read_f32s(run.out_addr, run.out_elems);
-            let am = argmax_of(&logits);
-            (logits, am)
-        } else {
-            widen_logits(&self.sim.read_u8s(run.out_addr, run.out_elems))
-        }
+        let run = self.sim.execute_lowered_batch(prog, base, inputs);
+        run.outputs
+            .iter()
+            .map(|bytes| {
+                if prog.is_fp32() {
+                    let logits: Vec<f32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    let am = argmax_of(&logits);
+                    (logits, am)
+                } else {
+                    widen_logits(bytes)
+                }
+            })
+            .collect()
     }
 }
 
@@ -822,19 +1096,82 @@ fn resolve_cluster(
     ClusterProgram::from_shards(progs).expect("per-shard cache entries form one deployment")
 }
 
-/// Worker: claims batches (size- or timeout-bounded) and serves them on its
-/// persistent simulated core. Timing is resolved per request (requests in
-/// one batch may carry different schedules); the caches make repeats free:
-/// warm timing is a map lookup, warm functional inference is a program
-/// replay with zero kernel emission. Requests with `shards > 1` run on the
-/// worker's lazily-built [`ClusterCores`] pool instead of its single core
-/// (one pool per worker, rebuilt when the shard count changes — bounding
-/// memory at one cluster per worker).
+/// How long `item` has waited if its deadline has passed; `None` while it
+/// is still claimable.
+fn expired_wait(item: &Queued) -> Option<Duration> {
+    let deadline = item.deadline?;
+    let now = Instant::now();
+    if now > deadline {
+        Some(now - item.enqueued)
+    } else {
+        None
+    }
+}
+
+/// Answer an expired request: [`ServeError::Expired`] on its channel, the
+/// `expired` counter, and a queue-age sample — dropped requests are
+/// counted, never silently lost.
+fn expire_item(shared: &Shared, item: Queued, waited: Duration) {
+    shared.expired.fetch_add(1, Ordering::Relaxed);
+    shared.queue_age_hist[queue_age_bucket(waited)].fetch_add(1, Ordering::Relaxed);
+    let _ = item.reply.send(Err(ServeError::Expired {
+        waited_ms: waited.as_millis() as u64,
+        deadline_ms: item.req.deadline_ms.unwrap_or(0),
+    }));
+}
+
+/// Pop the claimable request the scheduler ranks highest: a strictly higher
+/// [`Priority`] always wins, FIFO within a class (the scan keeps the first
+/// of equals). Deadline-expired requests encountered on the way are
+/// answered via [`expire_item`] and skipped. `None` when nothing claimable
+/// remains.
+fn pop_ready(q: &mut VecDeque<Queued>, shared: &Shared) -> Option<Queued> {
+    loop {
+        if q.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        let mut best_prio = q[0].req.prio;
+        for (i, item) in q.iter().enumerate().skip(1) {
+            // Strict `>` keeps the first of equals — FIFO within a class.
+            if item.req.prio > best_prio {
+                best = i;
+                best_prio = item.req.prio;
+            }
+        }
+        let item = q.remove(best).expect("index is in bounds");
+        match expired_wait(&item) {
+            Some(waited) => expire_item(shared, item, waited),
+            None => return Some(item),
+        }
+    }
+}
+
+/// Effective deployment key of a claimed request. A claimed batch
+/// partitions by this before serving, so a multi-input replay only ever
+/// binds same-`(model, schedule, shards)` requests — explicit overrides
+/// that happen to equal the deployment defaults land in the same group as
+/// default requests.
+#[derive(PartialEq)]
+struct GroupKey {
+    model_idx: usize,
+    schedule: PrecisionMap,
+    shards: usize,
+}
+
+/// Worker: claims batches (size- or timeout-bounded, priority-ordered,
+/// deadline-filtered), partitions each claim into [`GroupKey`]-pure groups,
+/// and serves every group on its persistent core. Timing is still resolved
+/// per request (requests in one batch may carry different schedules); the
+/// caches make repeats free: warm timing is a map lookup, warm functional
+/// inference rides the group's single multi-input lowered replay with zero
+/// kernel emission. Requests with `shards > 1` run on the worker's
+/// lazily-built [`ClusterCores`] pool instead of its single core (one pool
+/// per worker, rebuilt when the shard count changes — bounding memory at
+/// one cluster per worker).
 fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
     let mut core = WorkerCore::new(cfg.machine.clone());
     let mut cluster_cores: Option<ClusterCores> = None;
-    let model_fps: Vec<u64> = cfg.models.iter().map(|m| m.fingerprint()).collect();
-    let machine_fp = machine_fingerprint(&cfg.machine);
     loop {
         // Claim a batch.
         let mut batch = Vec::new();
@@ -844,16 +1181,16 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                if !q.is_empty() {
+                if let Some(item) = pop_ready(&mut q, &shared) {
+                    batch.push(item);
                     break;
                 }
                 q = shared.available.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
             }
             // First request in hand; wait up to batch_timeout for more.
-            batch.push(q.pop_front().unwrap());
             let deadline = Instant::now() + cfg.batch_timeout;
             while batch.len() < cfg.batch_size {
-                if let Some(item) = q.pop_front() {
+                if let Some(item) = pop_ready(&mut q, &shared) {
                     batch.push(item);
                     continue;
                 }
@@ -869,132 +1206,216 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
                 }
             }
         }
-        let batch_id = shared.batch_counter.fetch_add(1, Ordering::Relaxed);
         let busy_t0 = Instant::now();
 
-        // Serve the batch on the persistent core(s).
+        // Partition the claim into DeployKey-pure groups (claim order
+        // preserved within each): requests never share a replay — or a
+        // batch_id — across keys.
+        let mut groups: Vec<(GroupKey, Vec<Queued>)> = Vec::new();
         for item in batch {
-            let model = &cfg.models[item.model_idx];
-            let sched = item.req.schedule.as_ref().unwrap_or(&cfg.schedule);
-            let shards = item.req.shards.unwrap_or(cfg.shards);
-            let key = DeployKey {
-                net_fp: model_fps[item.model_idx],
-                machine_fp,
-                schedule: sched.clone(),
-                shards,
+            let gk = GroupKey {
+                model_idx: item.model_idx,
+                schedule: item.req.schedule.clone().unwrap_or_else(|| cfg.schedule.clone()),
+                shards: item.req.shards.unwrap_or(cfg.shards),
             };
-            // Resolve the compiled program(s) when this request needs them:
-            // it carries input bytes (functional replay), or its timing
-            // misses below (TimingOnly replay). Warm timing-only probes
-            // touch neither cache entry's payload.
-            let cached = shared.timing_cache.lock().unwrap().get(&key).copied();
-            let need_progs = item.req.input.is_some() || cached.is_none();
-            let memoize = item.req.input.is_some();
-            // Single-core requests resolve one program; cluster requests a
-            // full shard set (each under its own per-shard cache entry).
-            let (prog, cluster) = if !need_progs {
-                (None, None)
-            } else if shards == 1 {
-                let pkey = ProgKey { deploy: key.clone(), shard: 0 };
-                (Some(resolve_program(&shared, &cfg, model, wid, &pkey, sched, memoize)), None)
-            } else {
-                (None, Some(resolve_cluster(&shared, &cfg, model, wid, &key, sched, memoize)))
-            };
-            // Resolve timing: cache hit is a map lookup, miss is one
-            // TimingOnly replay (per shard core, in parallel, for clusters)
-            // whose result every later request under the same (net,
-            // machine, schedule, shards) key reuses.
-            let (sim_cycles, sync_cycles, timing_cached) = match cached {
-                Some(e) => {
-                    shared.cache_hits.fetch_add(1, Ordering::Relaxed);
-                    (e.sim_cycles, e.sync_cycles, true)
-                }
-                None => {
-                    let t0 = Instant::now();
-                    let (c, sync) = match &cluster {
-                        Some(cp) => {
-                            let t = cluster_timing(cp, &cfg.machine);
-                            (t.total_cycles(), t.sync_cycles)
-                        }
-                        None => (core.timing_cycles(prog.as_deref().unwrap()), 0),
-                    };
-                    shared.replay_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    shared.cache_misses.fetch_add(1, Ordering::Relaxed);
-                    let mut cache = shared.timing_cache.lock().unwrap();
-                    if cache.len() < MAX_TIMING_ENTRIES {
-                        cache.insert(key, TimingEntry { sim_cycles: c, sync_cycles: sync });
-                    }
-                    drop(cache);
-                    (c, sync, false)
-                }
-            };
-            // Account the modeled all-gather once per served cluster request
-            // (timing-only probes included — the model is part of the reply).
-            if shards > 1 {
-                shared.sync_cycles.fetch_add(sync_cycles, Ordering::Relaxed);
+            match groups.iter_mut().find(|(k, _)| *k == gk) {
+                Some((_, g)) => g.push(item),
+                None => groups.push((gk, vec![item])),
             }
-            let device_us = sim_cycles as f64 / (cfg.machine.freq_ghz * 1e3);
-
-            let queue_time = item.enqueued.elapsed();
-            let t0 = Instant::now();
-            let (logits, argmax) = match &item.req.input {
-                Some(bytes) => {
-                    let (l, a) = match &cluster {
-                        Some(cp) => {
-                            // (Re)build this worker's shard-core pool when
-                            // the requested width changes. One pool per
-                            // worker, by choice: caching a pool per shard
-                            // count would bound memory at Σ(2..=8) grown
-                            // arenas *per worker*; traffic alternating
-                            // shard counts pays the rebuild instead.
-                            let rebuild =
-                                cluster_cores.as_ref().map(|cc| cc.count()) != Some(shards);
-                            if rebuild {
-                                cluster_cores = Some(ClusterCores::new(&cfg.machine, shards));
-                            }
-                            let cores = cluster_cores.as_mut().unwrap();
-                            let inf = cores.infer(cp, bytes);
-                            for (j, ns) in inf.shard_busy_ns.iter().enumerate() {
-                                shared.shard_busy_ns[j].fetch_add(*ns, Ordering::Relaxed);
-                            }
-                            widen_logits(&inf.logits)
-                        }
-                        None => core.infer(prog.as_deref().unwrap(), bytes),
-                    };
-                    shared
-                        .replay_ns
-                        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                    (Some(l), Some(a))
-                }
-                None => (None, None),
-            };
-            let service_time = t0.elapsed();
-            let resp = InferenceResponse {
-                id: item.req.id,
-                sim_cycles,
-                device_us,
-                queue_time,
-                service_time,
-                worker: wid,
-                batch_id,
-                timing_cached,
-                precision: sched.label(),
-                model: model.name().to_string(),
-                shards,
-                sync_cycles,
-                logits,
-                argmax,
-            };
-            shared.served.fetch_add(1, Ordering::Relaxed);
-            shared.served_by_model[item.model_idx].fetch_add(1, Ordering::Relaxed);
-            shared
-                .latencies
-                .lock()
-                .unwrap()
-                .push((queue_time + service_time).as_micros() as u64);
-            let _ = item.reply.send(resp);
+        }
+        for (gk, group) in groups {
+            serve_group(wid, &shared, &cfg, &mut core, &mut cluster_cores, gk, group);
         }
         shared.busy_ns[wid].fetch_add(busy_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Serve one [`GroupKey`]-pure group of a claimed batch under its own
+/// `batch_id`. Timing and program resolution stay per request — the cache
+/// counters keep their per-request semantics, and within a group the first
+/// timing miss fills the entry its peers then hit. The batch axis pays off
+/// in the functional phase: all of a single-core group's inputs ride one
+/// multi-input lowered replay ([`WorkerCore::infer_batch`]); cluster
+/// (`shards > 1`) requests keep their per-request replay — the all-gather
+/// runtime owns per-shard arenas of its own.
+fn serve_group(
+    wid: usize,
+    shared: &Shared,
+    cfg: &CoordinatorConfig,
+    core: &mut WorkerCore,
+    cluster_cores: &mut Option<ClusterCores>,
+    gk: GroupKey,
+    group: Vec<Queued>,
+) {
+    let batch_id = shared.batch_counter.fetch_add(1, Ordering::Relaxed);
+    let model = &cfg.models[gk.model_idx];
+    let sched = &gk.schedule;
+    let shards = gk.shards;
+    let key = DeployKey {
+        net_fp: model.fingerprint(),
+        machine_fp: machine_fingerprint(&cfg.machine),
+        schedule: sched.clone(),
+        shards,
+    };
+
+    struct Resolved {
+        item: Queued,
+        sim_cycles: u64,
+        sync_cycles: u64,
+        timing_cached: bool,
+        prog: Option<Arc<CompiledProgram>>,
+        cluster: Option<ClusterProgram>,
+    }
+    let mut resolved: Vec<Resolved> = Vec::with_capacity(group.len());
+    for item in group {
+        // Resolve the compiled program(s) when this request needs them: it
+        // carries input bytes (functional replay), or its timing misses
+        // below (TimingOnly replay). Warm timing-only probes touch neither
+        // cache entry's payload.
+        let cached = shared.timing_cache.lock().unwrap().get(&key).copied();
+        let need_progs = item.req.input.is_some() || cached.is_none();
+        let memoize = item.req.input.is_some();
+        // Single-core requests resolve one program; cluster requests a
+        // full shard set (each under its own per-shard cache entry).
+        let (prog, cluster) = if !need_progs {
+            (None, None)
+        } else if shards == 1 {
+            let pkey = ProgKey { deploy: key.clone(), shard: 0 };
+            (Some(resolve_program(shared, cfg, model, wid, &pkey, sched, memoize)), None)
+        } else {
+            (None, Some(resolve_cluster(shared, cfg, model, wid, &key, sched, memoize)))
+        };
+        // Resolve timing: cache hit is a map lookup, miss is one TimingOnly
+        // replay (per shard core, in parallel, for clusters) whose result
+        // every later request under the same (net, machine, schedule,
+        // shards) key reuses — including the rest of this group.
+        let (sim_cycles, sync_cycles, timing_cached) = match cached {
+            Some(e) => {
+                shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                (e.sim_cycles, e.sync_cycles, true)
+            }
+            None => {
+                let t0 = Instant::now();
+                let (c, sync) = match &cluster {
+                    Some(cp) => {
+                        let t = cluster_timing(cp, &cfg.machine);
+                        (t.total_cycles(), t.sync_cycles)
+                    }
+                    None => (core.timing_cycles(prog.as_deref().unwrap()), 0),
+                };
+                shared.replay_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                shared.cache_misses.fetch_add(1, Ordering::Relaxed);
+                let mut cache = shared.timing_cache.lock().unwrap();
+                if cache.len() < MAX_TIMING_ENTRIES {
+                    cache.insert(key.clone(), TimingEntry { sim_cycles: c, sync_cycles: sync });
+                }
+                drop(cache);
+                (c, sync, false)
+            }
+        };
+        // Account the modeled all-gather once per served cluster request
+        // (timing-only probes included — the model is part of the reply).
+        if shards > 1 {
+            shared.sync_cycles.fetch_add(sync_cycles, Ordering::Relaxed);
+        }
+        resolved.push(Resolved { item, sim_cycles, sync_cycles, timing_cached, prog, cluster });
+    }
+
+    // Queue time stops for the whole group here: execution begins.
+    let queue_times: Vec<Duration> = resolved.iter().map(|r| r.item.enqueued.elapsed()).collect();
+
+    // Functional phase. Single-core inputs share one batched replay (they
+    // finish together, so each rider's service time is the whole pass);
+    // cluster requests replay per request on the worker's shard pool.
+    let mut outcomes: Vec<Option<(Vec<f32>, usize)>> = vec![None; resolved.len()];
+    let mut services: Vec<Duration> = vec![Duration::ZERO; resolved.len()];
+    if shards == 1 {
+        let idxs: Vec<usize> = resolved
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.item.req.input.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if !idxs.is_empty() {
+            let prog =
+                resolved[idxs[0]].prog.clone().expect("functional requests resolve a program");
+            let inputs: Vec<&[u8]> = idxs
+                .iter()
+                .map(|&i| resolved[i].item.req.input.as_deref().expect("filtered on input"))
+                .collect();
+            let t0 = Instant::now();
+            let outs = core.infer_batch(&prog, &inputs);
+            let elapsed = t0.elapsed();
+            shared.replay_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+            for (&i, out) in idxs.iter().zip(outs) {
+                outcomes[i] = Some(out);
+                services[i] = elapsed;
+            }
+        }
+    } else {
+        for (i, r) in resolved.iter().enumerate() {
+            let Some(bytes) = &r.item.req.input else { continue };
+            let cp = r.cluster.as_ref().expect("cluster requests resolve a shard set");
+            // (Re)build this worker's shard-core pool when the requested
+            // width changes. One pool per worker, by choice: caching a pool
+            // per shard count would bound memory at Σ(2..=8) grown arenas
+            // *per worker*; traffic alternating shard counts pays the
+            // rebuild instead.
+            let rebuild = cluster_cores.as_ref().map(|cc| cc.count()) != Some(shards);
+            if rebuild {
+                *cluster_cores = Some(ClusterCores::new(&cfg.machine, shards));
+            }
+            let cores = cluster_cores.as_mut().expect("pool was just built");
+            let t0 = Instant::now();
+            let inf = cores.infer(cp, bytes);
+            services[i] = t0.elapsed();
+            shared.replay_ns.fetch_add(services[i].as_nanos() as u64, Ordering::Relaxed);
+            for (j, ns) in inf.shard_busy_ns.iter().enumerate() {
+                shared.shard_busy_ns[j].fetch_add(*ns, Ordering::Relaxed);
+            }
+            outcomes[i] = Some(widen_logits(&inf.logits));
+        }
+    }
+
+    // Responses + accounting. Every claimed request completes: `served` for
+    // requests at their requested schedule, `degraded` for fallback-schedule
+    // completions (disjoint — the conservation invariant), `served_by_model`
+    // for both.
+    let device_scale = cfg.machine.freq_ghz * 1e3;
+    for (i, r) in resolved.into_iter().enumerate() {
+        let (logits, argmax) = match outcomes[i].take() {
+            Some((l, a)) => (Some(l), Some(a)),
+            None => (None, None),
+        };
+        let resp = InferenceResponse {
+            id: r.item.req.id,
+            sim_cycles: r.sim_cycles,
+            device_us: r.sim_cycles as f64 / device_scale,
+            queue_time: queue_times[i],
+            service_time: services[i],
+            worker: wid,
+            batch_id,
+            timing_cached: r.timing_cached,
+            precision: sched.label(),
+            model: model.name().to_string(),
+            shards,
+            sync_cycles: r.sync_cycles,
+            degraded: r.item.degraded,
+            prio: r.item.req.prio,
+            logits,
+            argmax,
+        };
+        if r.item.degraded {
+            shared.degraded.fetch_add(1, Ordering::Relaxed);
+        } else {
+            shared.served.fetch_add(1, Ordering::Relaxed);
+        }
+        shared.served_by_model[gk.model_idx].fetch_add(1, Ordering::Relaxed);
+        shared.queue_age_hist[queue_age_bucket(queue_times[i])].fetch_add(1, Ordering::Relaxed);
+        let us = (queue_times[i] + services[i]).as_micros() as u64;
+        shared.latencies.lock().unwrap().push(us);
+        shared.model_latencies[gk.model_idx].lock().unwrap().push(us);
+        let _ = r.item.reply.send(Ok(resp));
     }
 }
 
@@ -1011,12 +1432,12 @@ mod tests {
         let rxs: Vec<_> = (0..6)
             .map(|i| {
                 coord
-                    .submit(InferenceRequest { id: i, input: None, net: None, schedule: None, shards: None })
+                    .submit(InferenceRequest { id: i, ..Default::default() })
                     .unwrap()
             })
             .collect();
         let mut responses: Vec<_> =
-            rxs.into_iter().map(|rx| rx.recv_timeout(Duration::from_secs(120)).unwrap()).collect();
+            rxs.into_iter().map(|rx| rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap()).collect();
         responses.sort_by_key(|r| r.id);
         assert_eq!(responses.len(), 6);
         for (i, r) in responses.iter().enumerate() {
@@ -1048,9 +1469,9 @@ mod tests {
         let mut cycles = Vec::new();
         for i in 0..5u64 {
             let rx = coord
-                .submit(InferenceRequest { id: i, input: None, net: None, schedule: None, shards: None })
+                .submit(InferenceRequest { id: i, ..Default::default() })
                 .unwrap();
-            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            let r = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
             cycles.push((r.sim_cycles, r.timing_cached));
         }
         assert!(cycles.iter().all(|&(c, _)| c == cycles[0].0), "cached timing must be stable");
@@ -1070,13 +1491,13 @@ mod tests {
         let coord = Coordinator::start(cfg);
         let n = 32 * 32 * 3;
         let rx_a = coord
-            .submit(InferenceRequest { id: 0, input: Some(vec![0u8; n]), net: None, schedule: None, shards: None })
+            .submit(InferenceRequest { id: 0, input: Some(vec![0u8; n]), ..Default::default() })
             .unwrap();
         let rx_b = coord
-            .submit(InferenceRequest { id: 1, input: Some(vec![200u8; n]), net: None, schedule: None, shards: None })
+            .submit(InferenceRequest { id: 1, input: Some(vec![200u8; n]), ..Default::default() })
             .unwrap();
-        let a = rx_a.recv_timeout(Duration::from_secs(300)).unwrap();
-        let b = rx_b.recv_timeout(Duration::from_secs(300)).unwrap();
+        let a = rx_a.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+        let b = rx_b.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
         let (la, lb) = (a.logits.unwrap(), b.logits.unwrap());
         assert_eq!(la.len(), 100, "demo net classifies over 100 classes");
         assert_eq!(lb.len(), 100);
@@ -1084,9 +1505,9 @@ mod tests {
         assert_ne!(la, lb, "different inputs must produce different logits");
         // Determinism: same input → same logits.
         let rx_c = coord
-            .submit(InferenceRequest { id: 2, input: Some(vec![200u8; n]), net: None, schedule: None, shards: None })
+            .submit(InferenceRequest { id: 2, input: Some(vec![200u8; n]), ..Default::default() })
             .unwrap();
-        let c = rx_c.recv_timeout(Duration::from_secs(300)).unwrap();
+        let c = rx_c.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
         assert_eq!(lb, c.logits.unwrap(), "same input must reproduce the same logits");
         coord.shutdown();
     }
@@ -1098,7 +1519,7 @@ mod tests {
         cfg.max_queue = 0; // every submission rejects deterministically
         let coord = Coordinator::start(cfg);
         let err = coord
-            .submit(InferenceRequest { id: 9, input: None, net: None, schedule: None, shards: None })
+            .submit(InferenceRequest { id: 9, ..Default::default() })
             .unwrap_err();
         assert!(matches!(err, SubmitError::Busy { .. }));
         assert_eq!(coord.rejected(), 1);
@@ -1116,8 +1537,6 @@ mod tests {
         let err = coord
             .submit(InferenceRequest {
                 id: 0,
-                input: None,
-                net: None,
                 schedule: Some(
                     PrecisionMap::uniform(Precision::Sub {
                         abits: 2,
@@ -1126,7 +1545,7 @@ mod tests {
                     })
                     .with("ghost", Precision::Int8),
                 ),
-                shards: None,
+                ..Default::default()
             })
             .unwrap_err();
         assert!(matches!(err, SubmitError::Invalid { .. }), "{err}");
@@ -1134,10 +1553,8 @@ mod tests {
         let err = coord
             .submit(InferenceRequest {
                 id: 1,
-                input: None,
-                net: None,
                 schedule: Some(PrecisionMap::uniform(Precision::Fp32)),
-                shards: None,
+                ..Default::default()
             })
             .unwrap_err();
         assert!(matches!(err, SubmitError::Invalid { .. }), "{err}");
@@ -1154,9 +1571,9 @@ mod tests {
         let coord = Coordinator::start(cfg);
         let get = |id: u64, sched: Option<PrecisionMap>| {
             let rx = coord
-                .submit(InferenceRequest { id, input: None, net: None, schedule: sched, shards: None })
+                .submit(InferenceRequest { id, schedule: sched, ..Default::default() })
                 .unwrap();
-            rx.recv_timeout(Duration::from_secs(120)).unwrap()
+            rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap()
         };
         let int2 = get(0, None); // deployment default: uniform w2a2
         let int8 = get(1, Some(PrecisionMap::uniform(Precision::Int8)));
@@ -1197,8 +1614,8 @@ mod tests {
         let coord = Coordinator::start(cfg);
         let n = 32 * 32 * 3;
         let get = |id: u64, input: Option<Vec<u8>>| {
-            let rx = coord.submit(InferenceRequest { id, input, net: None, schedule: None, shards: None }).unwrap();
-            rx.recv_timeout(Duration::from_secs(300)).unwrap()
+            let rx = coord.submit(InferenceRequest { id, input, ..Default::default() }).unwrap();
+            rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap()
         };
         // Timing miss: compiles a transient program (timing-only schedules
         // are not memoized — they would pin trace-sized artifacts).
@@ -1281,12 +1698,11 @@ mod tests {
                 .submit(InferenceRequest {
                     id,
                     input: Some(input.clone()),
-                    net: None,
                     schedule: sched,
-                    shards: None,
+                    ..Default::default()
                 })
                 .unwrap();
-            rx.recv_timeout(Duration::from_secs(300)).unwrap()
+            rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap()
         };
         // Seed the pinned default entry (functional requests memoize).
         get(0, None);
@@ -1345,12 +1761,11 @@ mod tests {
                 .submit(InferenceRequest {
                     id,
                     input: Some(input.clone()),
-                    net: None,
-                    schedule: None,
                     shards,
+                    ..Default::default()
                 })
                 .unwrap();
-            rx.recv_timeout(Duration::from_secs(300)).unwrap()
+            rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap()
         };
         let single = get(0, None);
         let sharded = get(1, Some(2));
@@ -1390,10 +1805,8 @@ mod tests {
             let err = coord
                 .submit(InferenceRequest {
                     id: 0,
-                    input: None,
-                    net: None,
-                    schedule: None,
                     shards: Some(bad),
+                    ..Default::default()
                 })
                 .unwrap_err();
             assert!(matches!(err, SubmitError::Invalid { .. }), "shards={bad}: {err}");
@@ -1417,13 +1830,11 @@ mod tests {
             let rx = coord
                 .submit(InferenceRequest {
                     id,
-                    input: None,
                     net: net.map(|s| s.to_string()),
-                    schedule: None,
-                    shards: None,
+                    ..Default::default()
                 })
                 .unwrap();
-            rx.recv_timeout(Duration::from_secs(120)).unwrap()
+            rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap()
         };
         let default = get(0, None);
         assert_eq!(default.model, "tiny@100", "no net= selects the first deployment");
@@ -1446,10 +1857,8 @@ mod tests {
         let err = coord
             .submit(InferenceRequest {
                 id: 4,
-                input: None,
                 net: Some("ghost-net".to_string()),
-                schedule: None,
-                shards: None,
+                ..Default::default()
             })
             .unwrap_err();
         assert!(matches!(err, SubmitError::Invalid { .. }), "{err}");
@@ -1560,5 +1969,179 @@ mod tests {
         // Re-inserting an existing key is a no-op (no double insert).
         cache.insert(key("int8"), prog, false, 2);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn queue_age_bucket_boundaries() {
+        // Power-of-two millisecond buckets: 0 = <1ms, i = [2^(i-1), 2^i) ms,
+        // last = everything ≥ 2^(BUCKETS-2) ms.
+        assert_eq!(queue_age_bucket(Duration::ZERO), 0);
+        assert_eq!(queue_age_bucket(Duration::from_micros(999)), 0);
+        assert_eq!(queue_age_bucket(Duration::from_millis(1)), 1);
+        assert_eq!(queue_age_bucket(Duration::from_millis(2)), 2);
+        assert_eq!(queue_age_bucket(Duration::from_millis(3)), 2);
+        assert_eq!(queue_age_bucket(Duration::from_millis(4)), 3);
+        assert_eq!(queue_age_bucket(Duration::from_millis(1023)), QUEUE_AGE_BUCKETS - 2);
+        assert_eq!(queue_age_bucket(Duration::from_millis(1024)), QUEUE_AGE_BUCKETS - 1);
+        assert_eq!(queue_age_bucket(Duration::from_secs(3600)), QUEUE_AGE_BUCKETS - 1);
+    }
+
+    #[test]
+    fn priority_labels_roundtrip() {
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(p.label()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert!(Priority::High > Priority::Normal && Priority::Normal > Priority::Low);
+    }
+
+    #[test]
+    fn deadline_expired_requests_are_dropped_and_counted() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 2;
+        cfg.batch_timeout = Duration::from_millis(1);
+        cfg.models = vec![Arc::new(tiny_serving_net())];
+        let coord = Coordinator::start(cfg);
+        // deadline_ms=0 has always passed by claim time: deterministic
+        // expiry without sleeping in the test.
+        let rxs: Vec<_> = (0..4u64)
+            .map(|id| {
+                coord
+                    .submit(InferenceRequest { id, deadline_ms: Some(0), ..Default::default() })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            match rx.recv_timeout(Duration::from_secs(120)).unwrap() {
+                Err(ServeError::Expired { deadline_ms, .. }) => assert_eq!(deadline_ms, 0),
+                other => panic!("expected expiry, got {other:?}"),
+            }
+        }
+        assert_eq!(coord.expired(), 4);
+        assert_eq!(coord.served(), 0, "expired requests never run");
+        // The worker is still healthy: an undeadlined request is served.
+        let rx = coord.submit(InferenceRequest { id: 99, ..Default::default() }).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+        assert_eq!(r.id, 99);
+        let s = coord.stats();
+        // Conservation: submitted == served + rejected + expired + degraded.
+        assert_eq!(s.served + s.rejected + s.expired + s.degraded, 5);
+        // Expired requests still record their queue age.
+        assert_eq!(s.queue_age_hist.len(), QUEUE_AGE_BUCKETS);
+        assert_eq!(s.queue_age_hist.iter().sum::<u64>(), 5, "4 expired + 1 served");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn degrade_policy_reroutes_to_the_fallback_schedule() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 1;
+        cfg.batch_timeout = Duration::from_millis(1);
+        cfg.models = vec![Arc::new(tiny_serving_net())];
+        // depth 0: every eligible submission degrades — deterministic.
+        cfg.degrade = Some(DegradePolicy {
+            schedule: PrecisionMap::uniform(Precision::Sub {
+                abits: 1,
+                wbits: 1,
+                use_vbitpack: true,
+            }),
+            depth: 0,
+        });
+        let coord = Coordinator::start(cfg);
+        let get = |req: InferenceRequest| {
+            coord
+                .submit(req)
+                .unwrap()
+                .recv_timeout(Duration::from_secs(120))
+                .unwrap()
+                .unwrap()
+        };
+        // A default-schedule request is rerouted to the fallback.
+        let d = get(InferenceRequest { id: 0, ..Default::default() });
+        assert!(d.degraded, "default-schedule request must degrade at depth 0");
+        assert_eq!(d.precision, "w1a1", "degraded responses carry the fallback label");
+        // A request pinning its own schedule is exempt.
+        let pinned = get(InferenceRequest {
+            id: 1,
+            schedule: Some(PrecisionMap::uniform(Precision::Int8)),
+            ..Default::default()
+        });
+        assert!(!pinned.degraded, "explicit schedules are never rewritten");
+        assert_eq!(pinned.precision, "int8");
+        // Counters: served and degraded are disjoint; per-model includes both.
+        assert_eq!(coord.degraded(), 1);
+        assert_eq!(coord.served(), 1);
+        let s = coord.stats();
+        assert_eq!(s.degraded, 1);
+        assert_eq!(s.served, 1);
+        assert_eq!(s.served_by_model[0].1, 2, "per-model counts include degraded completions");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn high_priority_requests_are_claimed_before_low() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 1;
+        cfg.batch_timeout = Duration::from_millis(1);
+        let coord = Coordinator::start(cfg);
+        // Occupy the single worker with a functional request (a timing miss
+        // plus a full replay — a wide window), then queue a low- and a
+        // high-priority probe behind it. The high one must be claimed first.
+        let n = 32 * 32 * 3;
+        let blocker = coord
+            .submit(InferenceRequest { id: 0, input: Some(vec![3u8; n]), ..Default::default() })
+            .unwrap();
+        while coord.stats().queue_depth > 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let low = coord
+            .submit(InferenceRequest { id: 1, prio: Priority::Low, ..Default::default() })
+            .unwrap();
+        let high = coord
+            .submit(InferenceRequest { id: 2, prio: Priority::High, ..Default::default() })
+            .unwrap();
+        blocker.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+        let l = low.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+        let h = high.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+        assert_eq!(h.prio, Priority::High);
+        assert_eq!(l.prio, Priority::Low);
+        assert!(
+            h.batch_id < l.batch_id,
+            "high priority must be claimed first (batch {} vs {})",
+            h.batch_id,
+            l.batch_id
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stats_expose_queue_age_and_per_model_slo() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 1;
+        cfg.batch_timeout = Duration::from_millis(1);
+        cfg.models = vec![Arc::new(tiny_serving_net())];
+        let coord = Coordinator::start(cfg);
+        for id in 0..3u64 {
+            coord
+                .submit(InferenceRequest { id, ..Default::default() })
+                .unwrap()
+                .recv_timeout(Duration::from_secs(120))
+                .unwrap()
+                .unwrap();
+        }
+        let s = coord.stats();
+        assert_eq!(s.queue_age_hist.len(), QUEUE_AGE_BUCKETS);
+        assert_eq!(s.queue_age_hist.iter().sum::<u64>(), 3, "every completion is recorded");
+        assert_eq!(s.slo_by_model.len(), 1);
+        assert_eq!(s.slo_by_model[0].model, "serving-micro@10");
+        assert!(s.slo_by_model[0].p99_us > 0, "the first (miss) request took real time");
+        assert!(s.slo_by_model[0].p99_us >= s.slo_by_model[0].p50_us);
+        assert!(s.slo_by_model[0].p95_us >= s.slo_by_model[0].p50_us);
+        coord.shutdown();
     }
 }

@@ -4,7 +4,8 @@
 //! ```text
 //! PING                      → PONG
 //! MODELS                    → MODELS n=<count> default=<name> models=<a,b,…>
-//! STATS                     → STATS served=<n> rejected=<n>
+//! STATS                     → STATS served=<n> rejected=<n> expired=<n>
+//!                                   degraded=<n>
 //!                                   by_model=<name>:<n>[,<name>:<n>…]
 //!                                   queue_depth=<n>
 //!                                   workers=<n> cache_hits=<n> cache_misses=<n>
@@ -12,15 +13,23 @@
 //!                                   compile_us=<n> replay_us=<n>
 //!                                   compile_by_worker=<c0,c1,…>
 //!                                   sync_cycles=<n> shard_util=<s0,…|->
-//!                                   p50_us=<n> p95_us=<n> p99_us=<n> util=<u0,u1,…>
-//! INFER <id> [net=<name>] [prec=<spec>] [shards=<n>] [<b0,b1,...>]
+//!                                   p50_us=<n> p95_us=<n> p99_us=<n>
+//!                                   queue_age_hist=<c0,…,c11>
+//!                                   slo=<name>:<p50>/<p95>/<p99>[,…]
+//!                                   util=<u0,u1,…>
+//! INFER <id> [net=<name>] [prec=<spec>] [shards=<n>] [deadline_ms=<ms>]
+//!       [prio=<low|normal|high>] [<b0,b1,...>]
 //!                           → OK <id> cycles=<c> device_us=<t> worker=<w>
 //!                                   batch=<b> cached=<0|1> prec=<label>
 //!                                   net=<name> shards=<n> sync_cycles=<s>
+//!                                   prio=<p> degraded=<0|1>
 //!                             with input bytes: plus ` argmax=<k>
 //!                             logits=<v0,v1,…>` — the bytes are run through
 //!                             the functional executor and the real outputs
 //!                             returned
+//!                           → EXPIRED <id> waited_ms=<w> deadline_ms=<d>
+//!                             when the deadline passed while queued (the
+//!                             request was dropped at claim time, unrun)
 //! QUIT                      → closes the connection
 //! ```
 //! The optional `net=` field selects a deployed model by name (`MODELS`
@@ -34,7 +43,16 @@
 //! ([`crate::cluster`]): the inference is partitioned over that many
 //! simulated cores, `cycles=` reports the cluster model (`max` shard
 //! compute + all-gather sync), and the logits are bit-identical to a
-//! single-core run. Malformed requests answer `ERR <reason>`; a full queue
+//! single-core run. The optional `deadline_ms=` field bounds how long the
+//! request may wait in the queue: if the deadline passes before a worker
+//! claims it, the reply is `EXPIRED` (counted in STATS `expired=`) instead
+//! of a late `OK`. The optional `prio=` field (`low`/`normal`/`high`,
+//! default `normal`) orders claims within the queue: higher classes are
+//! claimed first, FIFO within a class. Under a deployment-configured
+//! degrade policy (`serve --degrade`), requests that pin neither `prec=`
+//! nor `shards=` may be rerouted to the cheaper fallback schedule when the
+//! queue is deep — the reply then carries `degraded=1` and the fallback's
+//! `prec=` label. Malformed requests answer `ERR <reason>`; a full queue
 //! answers `BUSY <reason>`. Neither kills the connection — clients keep the
 //! socket and retry. (No JSON library exists in this offline environment; a
 //! line protocol keeps the wire format trivially testable with netcat.)
@@ -47,7 +65,7 @@ use std::time::Duration;
 use crate::error::Result;
 use crate::nn::model::PrecisionMap;
 
-use super::{Coordinator, InferenceRequest, SubmitError};
+use super::{Coordinator, InferenceRequest, Priority, ServeError, SubmitError};
 
 /// Hard cap on explicit input payloads: the shared CIFAR-sized input plane
 /// every model reads a prefix of ([`crate::nn::INPUT_ELEMS`]). Longer
@@ -137,15 +155,25 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                         .collect::<Vec<_>>()
                         .join(",")
                 };
+                let hist: Vec<String> =
+                    s.queue_age_hist.iter().map(|c| c.to_string()).collect();
+                let slo: Vec<String> = s
+                    .slo_by_model
+                    .iter()
+                    .map(|m| format!("{}:{}/{}/{}", m.model, m.p50_us, m.p95_us, m.p99_us))
+                    .collect();
                 writeln!(
                     writer,
-                    "STATS served={} rejected={} by_model={} queue_depth={} workers={} \
+                    "STATS served={} rejected={} expired={} degraded={} by_model={} \
+                     queue_depth={} workers={} \
                      cache_hits={} cache_misses={} prog_hits={} prog_misses={} \
                      compile_us={} replay_us={} compile_by_worker={} \
                      sync_cycles={} shard_util={} \
-                     p50_us={} p95_us={} p99_us={} util={}",
+                     p50_us={} p95_us={} p99_us={} queue_age_hist={} slo={} util={}",
                     s.served,
                     s.rejected,
+                    s.expired,
+                    s.degraded,
                     by_model.join(","),
                     s.queue_depth,
                     s.workers,
@@ -161,6 +189,8 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                     s.p50_us,
                     s.p95_us,
                     s.p99_us,
+                    hist.join(","),
+                    slo.join(","),
                     util.join(",")
                 )?
             }
@@ -179,6 +209,8 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                 let mut net = None;
                 let mut schedule = None;
                 let mut shards = None;
+                let mut deadline_ms = None;
+                let mut prio = None;
                 let mut wire_err = None;
                 while let Some(tok) = next_tok {
                     if let Some(name) = tok.strip_prefix("net=") {
@@ -216,6 +248,34 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                                 break;
                             }
                         }
+                    } else if let Some(spec) = tok.strip_prefix("deadline_ms=") {
+                        if deadline_ms.is_some() {
+                            wire_err = Some("duplicate deadline_ms= field".to_string());
+                            break;
+                        }
+                        match spec.parse::<u64>() {
+                            Ok(ms) => deadline_ms = Some(ms),
+                            Err(_) => {
+                                wire_err = Some(format!(
+                                    "bad deadline_ms field {spec:?} (want milliseconds)"
+                                ));
+                                break;
+                            }
+                        }
+                    } else if let Some(spec) = tok.strip_prefix("prio=") {
+                        if prio.is_some() {
+                            wire_err = Some("duplicate prio= field".to_string());
+                            break;
+                        }
+                        match Priority::parse(spec) {
+                            Some(p) => prio = Some(p),
+                            None => {
+                                wire_err = Some(format!(
+                                    "bad prio field {spec:?} (want low|normal|high)"
+                                ));
+                                break;
+                            }
+                        }
                     } else {
                         break;
                     }
@@ -236,7 +296,16 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                     writeln!(writer, "ERR trailing garbage after input")?;
                     continue;
                 }
-                match coord.submit(InferenceRequest { id, input, net, schedule, shards }) {
+                let req = InferenceRequest {
+                    id,
+                    input,
+                    net,
+                    schedule,
+                    shards,
+                    deadline_ms,
+                    prio: prio.unwrap_or_default(),
+                };
+                match coord.submit(req) {
                     Err(SubmitError::Busy { depth }) => {
                         writeln!(writer, "BUSY queue full (depth {depth})")?
                     }
@@ -244,10 +313,10 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                         writeln!(writer, "ERR invalid request: {reason}")?
                     }
                     Ok(rx) => match rx.recv() {
-                        Ok(r) => {
+                        Ok(Ok(r)) => {
                             let mut reply = format!(
                                 "OK {} cycles={} device_us={:.1} worker={} batch={} cached={} \
-                                 prec={} net={} shards={} sync_cycles={}",
+                                 prec={} net={} shards={} sync_cycles={} prio={} degraded={}",
                                 r.id,
                                 r.sim_cycles,
                                 r.device_us,
@@ -257,7 +326,9 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                                 r.precision,
                                 r.model,
                                 r.shards,
-                                r.sync_cycles
+                                r.sync_cycles,
+                                r.prio.label(),
+                                r.degraded as u8
                             );
                             if let (Some(am), Some(lg)) = (r.argmax, r.logits.as_ref()) {
                                 let csv: Vec<String> =
@@ -266,6 +337,10 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                             }
                             writeln!(writer, "{reply}")?
                         }
+                        Ok(Err(ServeError::Expired { waited_ms, deadline_ms })) => writeln!(
+                            writer,
+                            "EXPIRED {id} waited_ms={waited_ms} deadline_ms={deadline_ms}"
+                        )?,
                         Err(_) => writeln!(writer, "ERR worker dropped")?,
                     },
                 }
@@ -527,6 +602,91 @@ mod tests {
         assert!(line.contains(" argmax="), "{line}");
         let logits_csv = line.split("logits=").nth(1).expect("logits field");
         assert_eq!(logits_csv.split(',').count(), 10, "10-class mlp logits");
+    }
+
+    #[test]
+    fn deadline_and_priority_fields_on_the_wire() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        // A generous deadline and an explicit priority: served normally, the
+        // reply echoes the priority class (order of fields is free).
+        writeln!(client, "INFER 1 deadline_ms=600000 prio=high").unwrap();
+        // deadline_ms=0 has always passed by claim time: deterministic EXPIRED.
+        writeln!(client, "INFER 2 deadline_ms=0").unwrap();
+        // Malformed admission fields answer ERR without killing the connection.
+        writeln!(client, "INFER 3 deadline_ms=soon").unwrap();
+        writeln!(client, "INFER 4 prio=urgent").unwrap();
+        writeln!(client, "INFER 5 deadline_ms=1 deadline_ms=2").unwrap();
+        writeln!(client, "INFER 6 prio=low prio=high").unwrap();
+        writeln!(client, "STATS").unwrap();
+        writeln!(client, "PING").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(8).map(|l| l.unwrap()).collect();
+        assert!(lines[0].starts_with("OK 1 "), "{}", lines[0]);
+        assert!(lines[0].contains(" prio=high"), "{}", lines[0]);
+        assert!(lines[0].contains(" degraded=0"), "{}", lines[0]);
+        assert!(lines[1].starts_with("EXPIRED 2 waited_ms="), "{}", lines[1]);
+        assert!(lines[1].contains(" deadline_ms=0"), "{}", lines[1]);
+        assert!(lines[2].starts_with("ERR bad deadline_ms field"), "{}", lines[2]);
+        assert!(lines[3].starts_with("ERR bad prio field"), "{}", lines[3]);
+        assert!(lines[3].contains("want low|normal|high"), "{}", lines[3]);
+        assert!(lines[4].starts_with("ERR duplicate deadline_ms= field"), "{}", lines[4]);
+        assert!(lines[5].starts_with("ERR duplicate prio= field"), "{}", lines[5]);
+        // STATS counts the expiry and exposes the SLO fields.
+        assert!(lines[6].contains(" expired=1 "), "{}", lines[6]);
+        assert!(lines[6].contains(" degraded=0 "), "{}", lines[6]);
+        assert!(lines[6].contains(" queue_age_hist="), "{}", lines[6]);
+        assert!(lines[6].contains(" slo=tiny@100:"), "{}", lines[6]);
+        let hist_csv = lines[6]
+            .split("queue_age_hist=")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap();
+        assert_eq!(
+            hist_csv.split(',').count(),
+            crate::coordinator::QUEUE_AGE_BUCKETS,
+            "{}",
+            lines[6]
+        );
+        assert_eq!(lines[7], "PONG", "connection survived admission errors");
+    }
+
+    #[test]
+    fn degraded_requests_reply_with_the_fallback_label() {
+        use crate::coordinator::DegradePolicy;
+        use crate::nn::model::Precision;
+        let mut cfg = small_cfg();
+        // depth 0: every eligible request degrades — deterministic.
+        cfg.degrade = Some(DegradePolicy {
+            schedule: PrecisionMap::uniform(Precision::Sub {
+                abits: 1,
+                wbits: 1,
+                use_vbitpack: true,
+            }),
+            depth: 0,
+        });
+        let coord = Arc::new(Coordinator::start(cfg));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, "INFER 1").unwrap(); // eligible: degrades
+        writeln!(client, "INFER 2 prec=int8").unwrap(); // pinned: exempt
+        writeln!(client, "STATS").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(3).map(|l| l.unwrap()).collect();
+        assert!(lines[0].contains(" prec=w1a1 "), "{}", lines[0]);
+        assert!(lines[0].contains(" degraded=1"), "{}", lines[0]);
+        assert!(lines[1].contains(" prec=int8 "), "{}", lines[1]);
+        assert!(lines[1].contains(" degraded=0"), "{}", lines[1]);
+        assert!(lines[2].contains(" served=1 "), "{}", lines[2]);
+        assert!(lines[2].contains(" degraded=1 "), "{}", lines[2]);
+        assert!(lines[2].contains(" by_model=tiny@100:2 "), "{}", lines[2]);
     }
 
     #[test]

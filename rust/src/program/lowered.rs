@@ -477,6 +477,15 @@ impl Sim {
         input: Option<&[u8]>,
     ) -> ProgramRun {
         let delta = self.begin_replay(prog, base, input);
+        self.run_lowered_ops(prog, delta);
+        functional_run(prog, delta)
+    }
+
+    /// One pass over the fused micro-ops at relocation `delta`: the body of
+    /// a lowered replay, after [`Sim::begin_replay`] has prepared the arena.
+    /// Split out so [`Sim::execute_lowered_batch`] can re-run the pass per
+    /// batch element on one shared arena.
+    fn run_lowered_ops(&mut self, prog: &CompiledProgram, delta: u64) {
         let low = prog.lowered();
         for op in &low.ops {
             match op {
@@ -518,8 +527,84 @@ impl Sim {
                 MicroOp::RowSum(rs) => self.machine.exec_row_sum(rs, delta),
             }
         }
-        functional_run(prog, delta)
     }
+
+    /// Replay the decode-once lowering for a whole batch of inputs: the
+    /// serving batch axis. The arena is prepared **once** — one
+    /// [`Sim::begin_replay`] applies the init image (weights, requant
+    /// tables, constants) once for all elements — then per element the
+    /// input segment is rebound, the fused micro-ops run, and the output
+    /// segment is harvested before the next element's pass overwrites the
+    /// shared scratch.
+    ///
+    /// Legality rests on the compiled program's structure (see
+    /// `docs/architecture.md`, "Batched replay"): the trace never writes
+    /// image regions, the input segment is fully rewritten per element, and
+    /// scratch is written before read within one pass — so element `k`'s
+    /// leftovers are invisible to element `k + 1`, and every element's
+    /// output is bit-identical to a standalone [`Sim::execute_lowered`]
+    /// call. `rust/tests/batching.rs` holds the differential proof across
+    /// the model zoo; under `debug_assertions` an image-intactness check
+    /// guards the read-only property at runtime.
+    ///
+    /// Like `execute_lowered`, no timing scoreboard runs — per-request
+    /// cycles come from the serving layer's timing cache.
+    pub fn execute_lowered_batch(
+        &mut self,
+        prog: &CompiledProgram,
+        base: u64,
+        inputs: &[&[u8]],
+    ) -> BatchRun {
+        let delta = self.begin_replay(prog, base, None);
+        let out_addr = prog.out_addr.wrapping_add(delta);
+        let out_len = prog.output_bytes();
+        let mut outputs = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            self.write_request_input(prog, delta, input);
+            self.run_lowered_ops(prog, delta);
+            outputs.push(self.machine.copy_region(out_addr, out_len));
+            #[cfg(debug_assertions)]
+            self.assert_image_intact(prog, delta);
+        }
+        BatchRun { out_addr, out_elems: prog.out_elems, outputs }
+    }
+
+    /// Debug guard for the batched-replay contract: after an element's
+    /// pass, every image chunk outside the input segment must still hold
+    /// its image bytes (the trace treats weights/requant/constants as
+    /// read-only, so one image application serves the whole batch).
+    #[cfg(debug_assertions)]
+    fn assert_image_intact(&self, prog: &CompiledProgram, delta: u64) {
+        let in_lo = prog.input.addr;
+        let in_hi = in_lo + prog.input.elems as u64 * if prog.input.fp32 { 4 } else { 1 };
+        for (addr, bytes) in &prog.image {
+            let (lo, hi) = (*addr, *addr + bytes.len() as u64);
+            if lo < in_hi && in_lo < hi {
+                continue; // the input segment is rebound per element
+            }
+            assert_eq!(
+                self.machine.mem.read(addr.wrapping_add(delta), bytes.len()),
+                &bytes[..],
+                "batched replay contract violated: trace overwrote image bytes at {addr:#x}"
+            );
+        }
+    }
+}
+
+/// One batched lowered replay: what [`Sim::execute_lowered_batch`] returns.
+/// Output bytes are harvested per element because the batch shares one
+/// arena — element `k + 1`'s pass overwrites the scratch and output
+/// segments element `k` wrote.
+pub struct BatchRun {
+    /// Replay-space address of the output segment (compile-space `out_addr`
+    /// plus the relocation delta).
+    pub out_addr: u64,
+    /// Elements in the output segment (the class count for classifiers).
+    pub out_elems: usize,
+    /// Raw output-segment bytes per batch element, in input order: one u8
+    /// activation code per element for integer programs, four little-endian
+    /// f32 bytes per element when [`CompiledProgram::is_fp32`].
+    pub outputs: Vec<Vec<u8>>,
 }
 
 #[cfg(test)]
@@ -573,6 +658,34 @@ mod tests {
             f.machine.mem.read(fb, prog.mem_len() as usize),
             "program memory footprint"
         );
+    }
+
+    #[test]
+    fn batched_replay_matches_independent_singles() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        let prog = compile(&net, &quark, &w2a2()).unwrap();
+        let inputs: Vec<Vec<u8>> = (0..2)
+            .map(|k| {
+                (0..prog.input_elems()).map(|i| ((i * 7 + 3 + k * 53) % 251) as u8).collect()
+            })
+            .collect();
+        let refs: Vec<&[u8]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut b = Sim::with_memory(quark.clone(), 64 << 20);
+        let bb = b.alloc(prog.mem_len());
+        let run = b.execute_lowered_batch(&prog, bb, &refs);
+        assert_eq!(run.outputs.len(), 2);
+        assert_eq!(run.out_elems, prog.out_elems());
+        for (k, input) in inputs.iter().enumerate() {
+            let mut s = Sim::with_memory(quark.clone(), 64 << 20);
+            let sb = s.alloc(prog.mem_len());
+            let sr = s.execute_lowered(&prog, sb, Some(input));
+            assert_eq!(
+                run.outputs[k],
+                s.read_u8s(sr.out_addr, sr.out_elems),
+                "batch element {k} vs an independent single-request replay"
+            );
+        }
     }
 
     #[test]

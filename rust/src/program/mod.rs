@@ -40,13 +40,20 @@
 //! kernel goes through `li_addr`, so replaying at `base ≠ compile base`
 //! just re-bases those immediates (and the image/input/output segments) by
 //! the same delta.
+//!
+//! Programs also carry a *batch axis*: because the input and output
+//! segments are isolated from the (read-only) image regions,
+//! [`crate::sim::Sim::execute_lowered_batch`] binds B request inputs in
+//! turn against one arena — image applied once — and one pass of the fused
+//! micro-ops per element yields B logit vectors, each bit-identical to an
+//! independent single-request replay (`rust/tests/batching.rs`).
 
 pub mod builder;
 pub mod lowered;
 mod replay;
 
 pub use builder::ProgramBuilder;
-pub use lowered::LoweredProgram;
+pub use lowered::{BatchRun, LoweredProgram};
 pub use replay::ProgramRun;
 
 use crate::arch::MachineConfig;
@@ -284,6 +291,13 @@ impl CompiledProgram {
     /// normalized to `[0, 1]`).
     pub fn is_fp32(&self) -> bool {
         self.input.fp32
+    }
+
+    /// Bytes of the output segment a replay harvests per inference: one u8
+    /// activation code per element at integer precisions, four bytes per
+    /// element (little-endian f32) when [`CompiledProgram::is_fp32`].
+    pub fn output_bytes(&self) -> usize {
+        self.out_elems * if self.is_fp32() { 4 } else { 1 }
     }
 
     /// `(shard index, shard count)` of a tensor-parallel shard program;

@@ -215,20 +215,31 @@ impl Sim {
             self.machine.mem.write(addr.wrapping_add(delta), bytes);
         }
         if let Some(bytes) = input {
-            let spec = &prog.input;
-            let addr = spec.addr.wrapping_add(delta);
-            if spec.fp32 {
-                let vals: Vec<f32> = (0..spec.elems)
-                    .map(|i| bytes.get(i).copied().unwrap_or(0) as f32 / 255.0)
-                    .collect();
-                self.write_f32s(addr, &vals);
-            } else {
-                let codes: Vec<u8> = (0..spec.elems)
-                    .map(|i| bytes.get(i).copied().unwrap_or(0).min(spec.qmax))
-                    .collect();
-                self.write_bytes(addr, &codes);
-            }
+            self.write_request_input(prog, delta, bytes);
         }
         delta
+    }
+
+    /// Write one request's input bytes over the program's input segment at
+    /// relocation `delta` (shorter inputs zero-padded, longer truncated,
+    /// codes clamped onto the input consumer grid — the same rules as fresh
+    /// emission). The per-element half of a replay, split out of
+    /// [`Sim::begin_replay`] so a batched replay
+    /// ([`Sim::execute_lowered_batch`]) can rebind the input for each batch
+    /// element without re-applying the shared init image.
+    pub(crate) fn write_request_input(&mut self, prog: &CompiledProgram, delta: u64, bytes: &[u8]) {
+        let spec = &prog.input;
+        let addr = spec.addr.wrapping_add(delta);
+        if spec.fp32 {
+            let vals: Vec<f32> = (0..spec.elems)
+                .map(|i| bytes.get(i).copied().unwrap_or(0) as f32 / 255.0)
+                .collect();
+            self.write_f32s(addr, &vals);
+        } else {
+            let codes: Vec<u8> = (0..spec.elems)
+                .map(|i| bytes.get(i).copied().unwrap_or(0).min(spec.qmax))
+                .collect();
+            self.write_bytes(addr, &codes);
+        }
     }
 }

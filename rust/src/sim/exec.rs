@@ -500,6 +500,13 @@ pub(crate) struct RowSumOp {
 }
 
 impl Machine {
+    /// Copy a region of simulated memory out of the arena. The batched
+    /// lowered replay harvests each element's output segment through this
+    /// before the next element's pass overwrites the shared scratch.
+    pub(crate) fn copy_region(&self, addr: u64, len: usize) -> Vec<u8> {
+        self.mem.read(addr, len).to_vec()
+    }
+
     /// `vmv.v.i vd, 0` + reloc-`li rd` + unit-stride `vse`: zero `len` bytes
     /// of `vd` and of memory at `addr` (already delta-resolved).
     pub(crate) fn exec_fill(&mut self, vd: VReg, rd: Reg, addr: u64, len: usize) {

@@ -1,0 +1,185 @@
+//! The oracle suite continuous batching is judged against:
+//! [`Sim::execute_lowered_batch`] (one arena, one image application, one
+//! pass of fused micro-ops per batch element) must be indistinguishable
+//! from B independent [`Sim::execute_lowered`] single-request replays and
+//! from the naive-i128 host golden model —
+//!
+//! * **bit-exact logits** for every `nn::zoo` entry at {w2a2, w1a1, mixed,
+//!   int8} schedules, at batch sizes **B ∈ {1, 4, 16}**,
+//! * at **relocated base addresses** (two fresh bases plus a worker-style
+//!   dirty-arena replay),
+//! * and against **cluster sharding** at {1, 2} shards — the tensor-
+//!   parallel path must gather exactly what every batch element produced.
+//!
+//! Batch inputs cycle through 4 distinct images, so a B=16 run doubles as
+//! a determinism check: elements 4..16 re-run earlier inputs over an arena
+//! dirtied by the intervening ones and must reproduce their logits. Deep
+//! graphs run on `Full`-mode-affordable prefixes ([`zoo::model_head`] /
+//! 10-class variants) — the same trade `rust/tests/lowered_differential.rs`
+//! makes.
+
+use quark::arch::MachineConfig;
+use quark::cluster::{compile_cluster, ClusterCores};
+use quark::nn::golden::run_golden;
+use quark::nn::model::{Precision, PrecisionMap};
+use quark::nn::{zoo, NetGraph};
+use quark::program::compile;
+use quark::sim::Sim;
+
+const W2A2: Precision = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
+const W1A1: Precision = Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true };
+
+/// Batch element `k`'s input image: a distinct deterministic pattern per
+/// `k` (k = 0 matches no other suite's input, so cross-suite cache effects
+/// cannot mask a bug).
+fn test_input(k: usize) -> Vec<u8> {
+    (0..32 * 32 * 3).map(|i| ((i * 11 + 5 + k * 37) % 251) as u8).collect()
+}
+
+/// Number of distinct images per combination; larger batches cycle.
+const DISTINCT: usize = 4;
+
+/// Every registered model at a `Full`-mode-affordable profile: shallow
+/// graphs whole (10-class variants keep the classifier small), deep ResNets
+/// as a stem + first-residual-block head.
+fn affordable_zoo() -> Vec<NetGraph> {
+    zoo::entries()
+        .iter()
+        .map(|e| match e.name {
+            "resnet18-cifar" => zoo::model_head("resnet18-cifar@10", 4).unwrap(),
+            "resnet34-cifar" => zoo::model_head("resnet34-cifar@10", 3).unwrap(),
+            name => zoo::model(&format!("{name}@10")).unwrap(),
+        })
+        .collect()
+}
+
+/// The acceptance schedule matrix: uniform w2a2 / w1a1 / int8 plus the
+/// registry's mixed schedule for this graph.
+fn schedules(net: &NetGraph) -> Vec<(&'static str, PrecisionMap)> {
+    vec![
+        ("w2a2", PrecisionMap::uniform(W2A2)),
+        ("w1a1", PrecisionMap::uniform(W1A1)),
+        ("mixed", zoo::mixed_schedule(net)),
+        ("int8", PrecisionMap::uniform(Precision::Int8)),
+    ]
+}
+
+/// Reference logits for the `DISTINCT` images: each one checked against the
+/// i128 golden model through an independent single-request lowered replay.
+fn reference_logits(
+    net: &NetGraph,
+    sched: &PrecisionMap,
+    prog: &quark::program::CompiledProgram,
+    ctx: &str,
+) -> Vec<Vec<u8>> {
+    (0..DISTINCT)
+        .map(|k| {
+            let input = test_input(k);
+            let golden = run_golden(net, sched, Some(&input));
+            let mut sim = Sim::new(MachineConfig::quark(4));
+            let base = sim.alloc(prog.mem_len());
+            let run = sim.execute_lowered(prog, base, Some(&input));
+            let logits = sim.read_u8s(run.out_addr, run.out_elems);
+            assert_eq!(
+                logits,
+                golden.maps[net.len()],
+                "{ctx}: single-request replay diverges from the i128 golden (input {k})"
+            );
+            logits
+        })
+        .collect()
+}
+
+#[test]
+fn batched_replay_matches_singles_and_golden_across_the_zoo() {
+    for net in affordable_zoo() {
+        for (label, sched) in schedules(&net) {
+            let ctx = format!("{} under {label}", net.name());
+            let prog = compile(&net, &MachineConfig::quark(4), &sched)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let refs = reference_logits(&net, &sched, &prog, &ctx);
+
+            // One shared arena serves every batch size — later batches run
+            // over memory dirtied by earlier ones, like a warm worker.
+            let inputs: Vec<Vec<u8>> = (0..DISTINCT).map(test_input).collect();
+            let mut sim = Sim::new(MachineConfig::quark(4));
+            let base = sim.alloc(prog.mem_len());
+            for b in [1usize, 4, 16] {
+                let views: Vec<&[u8]> =
+                    (0..b).map(|j| inputs[j % DISTINCT].as_slice()).collect();
+                let batch = sim.execute_lowered_batch(&prog, base, &views);
+                assert_eq!(batch.outputs.len(), b, "{ctx}: batch {b} output count");
+                assert_eq!(batch.out_elems, refs[0].len(), "{ctx}: batch {b} logit width");
+                for (j, out) in batch.outputs.iter().enumerate() {
+                    assert_eq!(
+                        out,
+                        &refs[j % DISTINCT],
+                        "{ctx}: batch {b} element {j} diverges from its single-request run"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_replay_relocates_bit_exactly_at_two_bases() {
+    let net = zoo::model("tiny@10").unwrap();
+    let sched = zoo::mixed_schedule(&net);
+    let prog = compile(&net, &MachineConfig::quark(4), &sched).unwrap();
+    let refs = reference_logits(&net, &sched, &prog, "tiny@10 under mixed");
+    let inputs: Vec<Vec<u8>> = (0..DISTINCT).map(test_input).collect();
+    let views: Vec<&[u8]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+    // Base A: the compile-time base (fresh sim, first allocation).
+    let mut sim_a = Sim::new(MachineConfig::quark(4));
+    let base_a = sim_a.alloc(prog.mem_len());
+    let run_a = sim_a.execute_lowered_batch(&prog, base_a, &views);
+    assert_eq!(run_a.outputs, refs);
+
+    // Base B: shifted by a padding allocation — every resolved micro-op
+    // address must follow the delta.
+    let mut sim_b = Sim::new(MachineConfig::quark(4));
+    sim_b.alloc(1 << 16);
+    let base_b = sim_b.alloc(prog.mem_len());
+    assert_ne!(base_a, base_b, "test must exercise a real relocation");
+    let run_b = sim_b.execute_lowered_batch(&prog, base_b, &views);
+    assert_eq!(
+        run_b.out_addr,
+        run_a.out_addr + (base_b - base_a),
+        "reported output address must follow the relocation delta"
+    );
+    assert_eq!(run_b.outputs, refs);
+
+    // Worker-style reuse of a dirty arena at yet another base.
+    let base_c = sim_b.alloc(prog.mem_len());
+    let run_c = sim_b.execute_lowered_batch(&prog, base_c, &views);
+    assert_eq!(run_c.outputs, refs);
+}
+
+#[test]
+fn batched_replay_matches_cluster_shards() {
+    let net = zoo::model_head("quarknet@10", 4).unwrap();
+    let machine = MachineConfig::quark(4);
+    let sched = PrecisionMap::uniform(W2A2);
+    let prog = compile(&net, &machine, &sched).unwrap();
+    let inputs: Vec<Vec<u8>> = (0..DISTINCT).map(test_input).collect();
+    let views: Vec<&[u8]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+    // Single-core batched logits — the reference.
+    let mut sim = Sim::new(machine.clone());
+    let base = sim.alloc(prog.mem_len());
+    let batch = sim.execute_lowered_batch(&prog, base, &views);
+
+    for shards in [1usize, 2] {
+        let cluster = compile_cluster(&net, &machine, &sched, shards).unwrap();
+        let mut cores = ClusterCores::new(&machine, shards);
+        for (j, input) in inputs.iter().enumerate() {
+            assert_eq!(
+                cores.infer(&cluster, input).logits,
+                batch.outputs[j],
+                "cluster at {shards} shard(s) must gather batch element {j}'s logits"
+            );
+        }
+    }
+}

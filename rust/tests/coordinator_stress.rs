@@ -2,14 +2,27 @@
 //! small bounded queue — no deadlock, every accepted request answered,
 //! `served()` consistent with the accepted-submission count, and
 //! backpressure visible under load.
+//!
+//! Admission-control stress rides along: the conservation invariant
+//! (`submitted == served + rejected + expired + degraded`) under 32
+//! concurrent submitters mixing deadlines with degradable traffic,
+//! deadline expiry counted (never lost), degraded requests answered with
+//! the fallback schedule's label, and mixed-DeployKey traffic never
+//! coalesced into one batch.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use quark::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest, SubmitError};
+use quark::coordinator::{
+    Coordinator, CoordinatorConfig, DegradePolicy, InferenceRequest, Priority, ServeError,
+    SubmitError,
+};
+use quark::nn::model::{Precision, PrecisionMap};
 
 const SUBMITTERS: usize = 32;
 const PER_SUBMITTER: u64 = 8;
+
+const W1A1: Precision = Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true };
 
 #[test]
 fn concurrent_submitters_all_get_answers() {
@@ -22,9 +35,10 @@ fn concurrent_submitters_all_get_answers() {
 
     // Warm the timing cache so the storm measures the steady-state path.
     coord
-        .submit(InferenceRequest { id: u64::MAX, input: None, net: None, schedule: None, shards: None })
+        .submit(InferenceRequest { id: u64::MAX, ..Default::default() })
         .unwrap()
         .recv_timeout(Duration::from_secs(120))
+        .unwrap()
         .unwrap();
 
     let handles: Vec<_> = (0..SUBMITTERS)
@@ -36,7 +50,7 @@ fn concurrent_submitters_all_get_answers() {
                     let id = (t as u64) * PER_SUBMITTER + k;
                     // Retry on backpressure until accepted.
                     let rx = loop {
-                        match coord.submit(InferenceRequest { id, input: None, net: None, schedule: None, shards: None }) {
+                        match coord.submit(InferenceRequest { id, ..Default::default() }) {
                             Ok(rx) => break rx,
                             Err(SubmitError::Busy { .. }) => {
                                 std::thread::sleep(Duration::from_millis(1))
@@ -46,7 +60,8 @@ fn concurrent_submitters_all_get_answers() {
                     };
                     let resp = rx
                         .recv_timeout(Duration::from_secs(120))
-                        .expect("response must arrive (no deadlock)");
+                        .expect("response must arrive (no deadlock)")
+                        .expect("undeadlined requests never expire");
                     assert_eq!(resp.id, id);
                     assert!(resp.sim_cycles > 0);
                     ids.push(resp.id);
@@ -75,6 +90,215 @@ fn concurrent_submitters_all_get_answers() {
     assert_eq!(s.cache_misses, 1, "only the warmup batch simulates timing");
     assert!(s.cache_hits >= 1, "the storm is served from the timing cache");
     assert!(s.utilization.len() == 3);
+
+    let coord = Arc::try_unwrap(coord).ok().expect("all clients done");
+    coord.shutdown();
+}
+
+/// Conservation under admission control: every accepted submission ends in
+/// exactly one of {served, expired, degraded}, every rejection is counted,
+/// and client-side tallies agree with the coordinator's counters.
+#[test]
+fn admission_storm_conserves_every_request() {
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.workers = 2;
+    cfg.batch_size = 4;
+    cfg.batch_timeout = Duration::from_millis(2);
+    cfg.max_queue = 8; // tiny: forces BUSY, deep queues, and degrade trips
+    cfg.degrade = Some(DegradePolicy { schedule: PrecisionMap::uniform(W1A1), depth: 4 });
+    let coord = Arc::new(Coordinator::start(cfg));
+
+    let handles: Vec<_> = (0..SUBMITTERS)
+        .map(|t| {
+            let coord = coord.clone();
+            std::thread::spawn(move || {
+                let (mut served, mut rejected, mut expired, mut degraded) = (0u64, 0u64, 0u64, 0u64);
+                for k in 0..PER_SUBMITTER {
+                    let id = (t as u64) * PER_SUBMITTER + k;
+                    // A third of the traffic carries an already-passed
+                    // deadline (deterministic expiry); the rest is
+                    // degrade-eligible default traffic. No retry loop: a
+                    // BUSY is terminal for that request and tallied.
+                    let deadline_ms = if k % 3 == 0 { Some(0) } else { None };
+                    let req = InferenceRequest {
+                        id,
+                        deadline_ms,
+                        prio: match k % 3 {
+                            0 => Priority::High,
+                            1 => Priority::Normal,
+                            _ => Priority::Low,
+                        },
+                        ..Default::default()
+                    };
+                    match coord.submit(req) {
+                        Err(SubmitError::Busy { .. }) => rejected += 1,
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                        Ok(rx) => {
+                            match rx
+                                .recv_timeout(Duration::from_secs(120))
+                                .expect("response must arrive (no deadlock)")
+                            {
+                                Ok(resp) => {
+                                    assert_eq!(resp.id, id);
+                                    if resp.degraded {
+                                        assert_eq!(
+                                            resp.precision, "w1a1",
+                                            "degraded requests run the fallback schedule"
+                                        );
+                                        degraded += 1;
+                                    } else {
+                                        served += 1;
+                                    }
+                                }
+                                Err(ServeError::Expired { deadline_ms, .. }) => {
+                                    assert_eq!(deadline_ms, 0, "only deadline_ms=0 expires here");
+                                    expired += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                (served, rejected, expired, degraded)
+            })
+        })
+        .collect();
+
+    let (mut served, mut rejected, mut expired, mut degraded) = (0u64, 0u64, 0u64, 0u64);
+    for h in handles {
+        let (s, r, e, d) = h.join().expect("submitter thread must not panic");
+        served += s;
+        rejected += r;
+        expired += e;
+        degraded += d;
+    }
+    let total = (SUBMITTERS as u64) * PER_SUBMITTER;
+    assert_eq!(
+        served + rejected + expired + degraded,
+        total,
+        "every submission lands in exactly one bucket"
+    );
+    // The coordinator's counters agree with the client-side tallies.
+    assert_eq!(coord.served(), served);
+    assert_eq!(coord.rejected(), rejected);
+    assert_eq!(coord.expired(), expired);
+    assert_eq!(coord.degraded(), degraded);
+    let s = coord.stats();
+    assert_eq!(s.served + s.rejected + s.expired + s.degraded, total, "conservation");
+    assert_eq!(s.queue_depth, 0, "queue drains completely");
+    // Per-model counts include degraded completions but not drops.
+    let by_model: u64 = s.served_by_model.iter().map(|(_, n)| n).sum();
+    assert_eq!(by_model, served + degraded);
+    // Every dequeue (completion or expiry) recorded its queue age.
+    assert_eq!(s.queue_age_hist.iter().sum::<u64>(), served + degraded + expired);
+
+    let coord = Arc::try_unwrap(coord).ok().expect("all clients done");
+    coord.shutdown();
+}
+
+/// Deadline expiry is counted, never lost: with every request carrying an
+/// already-passed deadline, nothing runs, nothing deadlocks, and the
+/// expired counter accounts for all of them.
+#[test]
+fn expired_requests_are_counted_not_lost() {
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.workers = 1;
+    cfg.batch_size = 4;
+    cfg.batch_timeout = Duration::from_millis(1);
+    let coord = Coordinator::start(cfg);
+    let n = 24u64;
+    let rxs: Vec<_> = (0..n)
+        .map(|id| {
+            coord
+                .submit(InferenceRequest { id, deadline_ms: Some(0), ..Default::default() })
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let res = rx.recv_timeout(Duration::from_secs(120)).expect("expiry must be answered");
+        assert!(
+            matches!(res, Err(ServeError::Expired { .. })),
+            "deadline_ms=0 must expire, got {res:?}"
+        );
+    }
+    assert_eq!(coord.expired(), n);
+    assert_eq!(coord.served(), 0, "expired requests never run");
+    assert_eq!(coord.degraded(), 0);
+    coord.shutdown();
+}
+
+/// Mixed-DeployKey traffic is never coalesced: requests claimed into one
+/// worker batch are split into per-key groups, so every batch_id maps to
+/// exactly one (model, schedule, shards) triple.
+#[test]
+fn batches_never_mix_deploy_keys() {
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.workers = 1;
+    cfg.batch_size = 8;
+    // A long fill window so the probes below are claimed as ONE batch.
+    cfg.batch_timeout = Duration::from_millis(500);
+    cfg.models.push(Arc::new(quark::nn::zoo::model("mlp@10").unwrap()));
+    let coord = Arc::new(Coordinator::start(cfg));
+
+    // Occupy the single worker with a functional request so the probes
+    // queue up behind it and get claimed together.
+    let n = 32 * 32 * 3;
+    let blocker = coord
+        .submit(InferenceRequest { id: 999, input: Some(vec![7u8; n]), ..Default::default() })
+        .unwrap();
+    while coord.stats().queue_depth > 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // Eight probes alternating between two deployed models (two distinct
+    // DeployKeys), plus a schedule override making a third key.
+    let rxs: Vec<_> = (0..8u64)
+        .map(|id| {
+            let req = match id % 3 {
+                0 => InferenceRequest { id, ..Default::default() },
+                1 => InferenceRequest { id, net: Some("mlp@10".into()), ..Default::default() },
+                _ => InferenceRequest {
+                    id,
+                    schedule: Some(PrecisionMap::uniform(Precision::Int8)),
+                    ..Default::default()
+                },
+            };
+            coord.submit(req).unwrap()
+        })
+        .collect();
+    blocker.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+    let resps: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap())
+        .collect();
+
+    // Same batch_id ⇒ same (model, precision, shards): groups never span keys.
+    for a in &resps {
+        for b in &resps {
+            if a.batch_id == b.batch_id {
+                assert_eq!(a.model, b.model, "batch {} mixes models", a.batch_id);
+                assert_eq!(a.precision, b.precision, "batch {} mixes schedules", a.batch_id);
+                assert_eq!(a.shards, b.shards, "batch {} mixes shard counts", a.batch_id);
+            }
+        }
+    }
+    // The probes really were claimed together: at least one per-key group
+    // holds 2+ requests (8 probes over 3 keys cannot all be singletons
+    // when claimed as one batch).
+    let max_group = resps
+        .iter()
+        .map(|r| resps.iter().filter(|o| o.batch_id == r.batch_id).count())
+        .max()
+        .unwrap();
+    assert!(max_group >= 2, "expected some per-key batching, got max group {max_group}");
+    // And the two models never share a batch id.
+    let tiny_ids: Vec<u64> =
+        resps.iter().filter(|r| r.model == "tiny@100").map(|r| r.batch_id).collect();
+    let mlp_ids: Vec<u64> =
+        resps.iter().filter(|r| r.model == "mlp@10").map(|r| r.batch_id).collect();
+    assert!(!tiny_ids.is_empty() && !mlp_ids.is_empty());
+    assert!(
+        tiny_ids.iter().all(|id| !mlp_ids.contains(id)),
+        "models must never share a batch: tiny {tiny_ids:?} vs mlp {mlp_ids:?}"
+    );
 
     let coord = Arc::try_unwrap(coord).ok().expect("all clients done");
     coord.shutdown();

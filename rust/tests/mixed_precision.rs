@@ -161,8 +161,8 @@ fn mixed_resnet18_serves_between_uniform_baselines_via_coordinator() {
     cfg.batch_timeout = Duration::from_millis(1);
     let coord = Coordinator::start(cfg);
     let get = |id: u64, sched: Option<PrecisionMap>| {
-        let rx = coord.submit(InferenceRequest { id, input: None, net: None, schedule: sched, shards: None }).unwrap();
-        rx.recv_timeout(Duration::from_secs(600)).unwrap()
+        let rx = coord.submit(InferenceRequest { id, schedule: sched, ..Default::default() }).unwrap();
+        rx.recv_timeout(Duration::from_secs(600)).unwrap().unwrap()
     };
     let int8 = get(0, None); // deployment default: uniform int8
     let mixed = get(1, Some(mixed_map));
@@ -196,9 +196,9 @@ fn mixed_schedule_functional_inference_produces_real_logits() {
     let input = vec![200u8; 32 * 32 * 3];
     let get = |id: u64, sched: Option<PrecisionMap>| {
         let rx = coord
-            .submit(InferenceRequest { id, input: Some(input.clone()), net: None, schedule: sched, shards: None })
+            .submit(InferenceRequest { id, input: Some(input.clone()), schedule: sched, ..Default::default() })
             .unwrap();
-        rx.recv_timeout(Duration::from_secs(300)).unwrap()
+        rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap()
     };
     let a = get(0, Some(mixed.clone()));
     let b = get(1, Some(mixed.clone()));
