@@ -132,6 +132,12 @@ fn main() {
         let t0 = Instant::now();
         let low = prog.lowered();
         let lower_s = t0.elapsed().as_secs_f64();
+        // Insert-time cost of the static verifier (cached afterwards, like
+        // the lowering): the gate must stay a once-per-deployment expense.
+        let t0 = Instant::now();
+        let verify_ok = prog.verify_report().ok();
+        let verify_us = t0.elapsed().as_secs_f64() * 1e6;
+        assert!(verify_ok, "bench artifacts must pass the static verifier");
         let fused = low.fused_fraction();
         let (base_rps, base_am) = baseline_rps(&net, sched, &input, n_base);
         let (rep_rps, rep_am) = replay_rps(&prog, &input, n_replay, false);
@@ -155,7 +161,8 @@ fn main() {
                 .field("lowered_vs_replay", lratio)
                 .field("fused_fraction", fused)
                 .field("compile_s", compile_s)
-                .field("lower_s", lower_s),
+                .field("lower_s", lower_s)
+                .field("verify_us", verify_us),
         );
         ratios.push((label, ratio, lratio));
     }

@@ -7,6 +7,8 @@
 //!                [--machine <ara-4l|quark-4l|quark-8l>] [--size N] [--channels C]
 //! repro program [--net <spec>] [--precision <spec>]
 //!               [--machine <ara-4l|quark-4l|quark-8l>] [--fast]
+//! repro verify [--net <spec>] [--prec <spec>] [--shards N]
+//!              [--machine <ara-4l|quark-4l|quark-8l>] [--fast]
 //! repro cluster [--net <spec>] [--shards 1,2,4,8] [--fast]
 //! repro models
 //! repro crosscheck [--artifact artifacts/qgemm.hlo.txt] [--seed S]
@@ -30,6 +32,15 @@
 //! vital signs (trace length, image size, memory footprint), then
 //! cross-checks a timed replay against one fresh kernel emission — cycle
 //! counts must agree exactly — and reports the wall-clock ratio.
+//!
+//! `repro verify` runs the static program verifier
+//! ([`crate::program::verify`]) across deployments: every zoo model ×
+//! {w2a2, w1a1, mixed, int8} × shard counts {1, 2, 4} by default, or one
+//! combination pinned with `--net` / `--prec` / `--shards`. Combinations a
+//! model cannot deploy (e.g. too few layers for the shard count) are
+//! reported `n/a` and skipped; every compiled artifact's `VerifyReport` is
+//! printed through the same printer `repro program` uses, and the command
+//! fails if any deployment produces findings.
 //!
 //! `repro cluster` (alias `repro report cluster`) runs the tensor-parallel
 //! strong-scaling sweep ([`crate::report::cluster`]): modeled latency at
@@ -113,6 +124,7 @@ pub fn main() -> Result<()> {
         Some("report") => cmd_report(pos.get(1).map(|s| s.as_str()).unwrap_or("all"), &flags),
         Some("simulate") => cmd_simulate(&flags),
         Some("program") => cmd_program(&flags),
+        Some("verify") => cmd_verify(&flags),
         Some("cluster") => cmd_cluster(&flags),
         Some("models") => {
             println!("{:<16} {:>8} {:>7} {:>6}  about", "name", "classes", "layers", "fast");
@@ -140,7 +152,7 @@ pub fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: repro <report|simulate|program|cluster|models|crosscheck|serve|phys> …\n\
+                "usage: repro <report|simulate|program|verify|cluster|models|crosscheck|serve|phys> …\n\
                  see rust/src/cli.rs or README.md for full syntax"
             );
             Ok(())
@@ -351,6 +363,12 @@ fn cmd_program(flags: &HashMap<String, String>) -> Result<()> {
     println!("init image     : {:.1} KiB", prog.image_bytes() as f64 / 1024.0);
     println!("memory footprint: {:.1} KiB", prog.mem_len() as f64 / 1024.0);
     println!("compile time   : {:.3} s (once per deployment)", compile_s);
+    // Verifier vitals through the shared `VerifyReport` printer (`repro
+    // verify` prints the same report across the zoo).
+    println!("{}", prog.verify_report());
+    if !prog.verify_report().ok() {
+        bail!("the compiler produced an artifact the static verifier rejects");
+    }
 
     // Fresh emission (the run-every-request baseline) …
     let mut fresh_sim = Sim::new(machine.clone());
@@ -375,6 +393,102 @@ fn cmd_program(flags: &HashMap<String, String>) -> Result<()> {
     println!("device cycles  : {replay} (replay == fresh emission ✓)");
     println!("fresh emission : {fresh_s:.3} s host wall-clock per run");
     println!("timed replay   : {replay_s:.3} s host wall-clock per run ({:.2}x)", fresh_s / replay_s.max(1e-9));
+    Ok(())
+}
+
+/// Static-verifier sweep: compile every requested (model, schedule, shard)
+/// deployment and print its [`crate::program::VerifyReport`] through the
+/// shared printer. Exits non-zero if any artifact produces findings — the
+/// CI gate over the whole zoo.
+fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::nn::model::ShardPlan;
+    use crate::program::{compile, compile_shard};
+
+    let machine =
+        machine_by_name(flags.get("machine").map(|s| s.as_str()).unwrap_or("quark-4l"))?;
+    let fast = flags.contains_key("fast");
+    // Workload set: one model under --net, else the full zoo registry.
+    let nets: Vec<NetGraph> = match flags.get("net") {
+        Some(spec) => match zoo::model_profile(spec, fast) {
+            Ok(n) => vec![n],
+            Err(e) => bail!("bad --net: {e}"),
+        },
+        None => zoo::entries()
+            .iter()
+            .map(|e| zoo::model_profile(e.name, fast).expect("registry entries are valid"))
+            .collect(),
+    };
+    let shard_counts: Vec<usize> = match flags.get("shards") {
+        Some(s) => vec![s.parse().with_context(|| format!("bad --shards {s:?}"))?],
+        None => vec![1, 2, 4],
+    };
+    let (mut passed, mut failed, mut skipped) = (0usize, 0usize, 0usize);
+    for net in &nets {
+        // Schedule matrix: one spec under --prec, else the acceptance set
+        // ("mixed" = the registry's per-model mixed schedule).
+        let scheds: Vec<(String, PrecisionMap)> = match flags.get("prec").map(|s| s.as_str()) {
+            Some("mixed") => vec![("mixed".to_string(), zoo::mixed_schedule(net))],
+            Some(spec) => match PrecisionMap::parse(spec) {
+                Ok(m) => vec![(spec.to_string(), m)],
+                Err(e) => bail!("bad --prec: {e}"),
+            },
+            None => vec![
+                ("w2a2".to_string(), PrecisionMap::parse("w2a2").expect("known spec")),
+                ("w1a1".to_string(), PrecisionMap::parse("w1a1").expect("known spec")),
+                ("mixed".to_string(), zoo::mixed_schedule(net)),
+                ("int8".to_string(), PrecisionMap::parse("int8").expect("known spec")),
+            ],
+        };
+        for (label, sched) in &scheds {
+            for &n in &shard_counts {
+                let ctx = format!("{} · {label} · shards={n}", net.name());
+                if let Err(e) = sched
+                    .validate(net)
+                    .and_then(|_| sched.validate_machine(net, &machine))
+                    .and_then(|_| crate::coordinator::validate_shards(n, sched, net))
+                {
+                    println!("{ctx}: n/a ({e})");
+                    skipped += 1;
+                    continue;
+                }
+                let mut ok = true;
+                if n == 1 {
+                    let prog = match compile(net, &machine, sched) {
+                        Ok(p) => p,
+                        Err(e) => bail!("{ctx}: compile failed: {e}"),
+                    };
+                    println!("{ctx}\n{}", prog.verify_report());
+                    ok = prog.verify_report().ok();
+                } else {
+                    let plan = match ShardPlan::derive(net, n) {
+                        Ok(p) => p,
+                        Err(e) => bail!("{ctx}: shard plan failed: {e}"),
+                    };
+                    println!("{ctx}");
+                    for shard in 0..n {
+                        let prog = match compile_shard(net, &machine, sched, &plan, shard) {
+                            Ok(p) => p,
+                            Err(e) => bail!("{ctx}: shard {shard} compile failed: {e}"),
+                        };
+                        println!("shard {shard}: {}", prog.verify_report());
+                        ok &= prog.verify_report().ok();
+                    }
+                }
+                if ok {
+                    passed += 1;
+                } else {
+                    failed += 1;
+                }
+            }
+        }
+    }
+    println!(
+        "\nverified {} deployment(s): {passed} passed, {failed} failed, {skipped} n/a",
+        passed + failed
+    );
+    if failed > 0 {
+        bail!("{failed} deployment(s) failed static verification");
+    }
     Ok(())
 }
 

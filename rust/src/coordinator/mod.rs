@@ -524,6 +524,13 @@ pub struct CoordStats {
     /// timing-cache hits without input resolve no program.
     pub program_hits: u64,
     pub program_misses: u64,
+    /// Compiled artifacts rejected by the static verifier
+    /// ([`crate::program::verify`]) at program-cache insert. A rejected
+    /// artifact is never cached: each request that resolves it recompiles
+    /// (so this can exceed the number of distinct bad deployments), and
+    /// its batched replays fall back to the per-element dynamic isolation
+    /// check instead of the verifier's batch-safety proof.
+    pub verify_fails: u64,
     /// Total wall-clock µs spent compiling programs (cold path) vs
     /// replaying them (warm path) — the compile-once/run-many ratio.
     pub compile_us: u64,
@@ -639,6 +646,12 @@ struct Shared {
     program_cache: Mutex<ProgramCache>,
     program_hits: AtomicU64,
     program_misses: AtomicU64,
+    /// Freshly compiled artifacts the static verifier rejected at
+    /// cache-insert time. A failing artifact is never cached — every
+    /// request that needs it recompiles (and recounts here), and its
+    /// replays keep the always-on dynamic isolation check because the
+    /// batch-safety proof is absent.
+    verify_fails: AtomicU64,
     compile_ns: AtomicU64,
     replay_ns: AtomicU64,
     /// Program compiles attributed to the worker that performed them.
@@ -711,6 +724,7 @@ impl Coordinator {
             program_cache: Mutex::new(ProgramCache::new()),
             program_hits: AtomicU64::new(0),
             program_misses: AtomicU64::new(0),
+            verify_fails: AtomicU64::new(0),
             compile_ns: AtomicU64::new(0),
             replay_ns: AtomicU64::new(0),
             compile_by_worker: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
@@ -850,6 +864,7 @@ impl Coordinator {
             cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
             program_hits: self.shared.program_hits.load(Ordering::Relaxed),
             program_misses: self.shared.program_misses.load(Ordering::Relaxed),
+            verify_fails: self.shared.verify_fails.load(Ordering::Relaxed),
             compile_us: self.shared.compile_ns.load(Ordering::Relaxed) / 1_000,
             replay_us: self.shared.replay_ns.load(Ordering::Relaxed) / 1_000,
             compile_by_worker: self
@@ -1059,13 +1074,23 @@ fn resolve_program(
         // Force the decode-once lowering before the entry becomes visible,
         // so warm replays never pay the lowering walk.
         prog.lowered();
-        let pinned = *sched == cfg.schedule && key.deploy.shards == cfg.shards;
-        shared.program_cache.lock().unwrap().insert(
-            key.clone(),
-            prog.clone(),
-            pinned,
-            MAX_PROGRAM_ENTRIES,
-        );
+        // Gate the cache on the static verifier: a failing artifact is
+        // never memoized, so no later request can hit it warm. This
+        // request still runs it — with no cached `VerifyReport` claiming
+        // batch safety, `execute_lowered_batch` keeps the per-element
+        // dynamic isolation check, so serving stays safe even for an
+        // artifact the prover rejected.
+        if prog.verify_report().ok() {
+            let pinned = *sched == cfg.schedule && key.deploy.shards == cfg.shards;
+            shared.program_cache.lock().unwrap().insert(
+                key.clone(),
+                prog.clone(),
+                pinned,
+                MAX_PROGRAM_ENTRIES,
+            );
+        } else {
+            shared.verify_fails.fetch_add(1, Ordering::Relaxed);
+        }
     }
     prog
 }
@@ -1635,6 +1660,7 @@ mod tests {
         let s = coord.stats();
         assert_eq!(s.program_misses, 2, "first functional request compiles + memoizes");
         assert_eq!(s.program_hits, 1, "second functional request hits the cache");
+        assert_eq!(s.verify_fails, 0, "compiler-produced artifacts pass the static verifier");
         assert!(s.replay_us > 0, "replay time must be accounted");
         // Every compile is attributable: the single worker paid for both.
         assert_eq!(s.compile_by_worker, vec![2], "Σ compile_by_worker == program_misses");

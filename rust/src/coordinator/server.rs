@@ -10,6 +10,7 @@
 //!                                   queue_depth=<n>
 //!                                   workers=<n> cache_hits=<n> cache_misses=<n>
 //!                                   prog_hits=<n> prog_misses=<n>
+//!                                   verify_fails=<n>
 //!                                   compile_us=<n> replay_us=<n>
 //!                                   compile_by_worker=<c0,c1,…>
 //!                                   sync_cycles=<n> shard_util=<s0,…|->
@@ -167,6 +168,7 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                     "STATS served={} rejected={} expired={} degraded={} by_model={} \
                      queue_depth={} workers={} \
                      cache_hits={} cache_misses={} prog_hits={} prog_misses={} \
+                     verify_fails={} \
                      compile_us={} replay_us={} compile_by_worker={} \
                      sync_cycles={} shard_util={} \
                      p50_us={} p95_us={} p99_us={} queue_age_hist={} slo={} util={}",
@@ -181,6 +183,7 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                     s.cache_misses,
                     s.program_hits,
                     s.program_misses,
+                    s.verify_fails,
                     s.compile_us,
                     s.replay_us,
                     cbw.join(","),
@@ -399,6 +402,7 @@ mod tests {
             "cache_hits=",
             "prog_hits=",
             "prog_misses=",
+            "verify_fails=",
             "compile_us=",
             "replay_us=",
             "compile_by_worker=",

@@ -161,6 +161,7 @@ impl ProgramBuilder {
             shard_segs: emitted.shard_segs,
             vlen_bits: self.sim.cfg.vlen_bits,
             lowered: std::sync::OnceLock::new(),
+            verify: std::sync::OnceLock::new(),
         }
     }
 }

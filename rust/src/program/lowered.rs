@@ -538,14 +538,21 @@ impl Sim {
     /// shared scratch.
     ///
     /// Legality rests on the compiled program's structure (see
-    /// `docs/architecture.md`, "Batched replay"): the trace never writes
-    /// image regions, the input segment is fully rewritten per element, and
-    /// scratch is written before read within one pass — so element `k`'s
-    /// leftovers are invisible to element `k + 1`, and every element's
-    /// output is bit-identical to a standalone [`Sim::execute_lowered`]
-    /// call. `rust/tests/batching.rs` holds the differential proof across
-    /// the model zoo; under `debug_assertions` an image-intactness check
-    /// guards the read-only property at runtime.
+    /// `docs/architecture.md`, "Batched replay" and "Static verification"):
+    /// the trace never writes image regions, the input segment is fully
+    /// rewritten per element, and scratch is written before read within one
+    /// pass — so element `k`'s leftovers are invisible to element `k + 1`,
+    /// and every element's output is bit-identical to a standalone
+    /// [`Sim::execute_lowered`] call. `rust/tests/batching.rs` holds the
+    /// differential proof across the model zoo.
+    ///
+    /// Cross-request isolation is enforced in **every** build profile: when
+    /// the static verifier proved the read-only-image property
+    /// ([`CompiledProgram::verify_report`],
+    /// [`crate::program::VerifyReport::batch_safe`]) the per-element image
+    /// scan is skipped in release (debug builds keep it as an oracle for the
+    /// proof itself); an unproven program pays the always-on scan instead of
+    /// silently losing the guarantee.
     ///
     /// Like `execute_lowered`, no timing scoreboard runs — per-request
     /// cycles come from the serving layer's timing cache.
@@ -558,22 +565,26 @@ impl Sim {
         let delta = self.begin_replay(prog, base, None);
         let out_addr = prog.out_addr.wrapping_add(delta);
         let out_len = prog.output_bytes();
+        let proven = prog.verify_report().batch_safe();
         let mut outputs = Vec::with_capacity(inputs.len());
         for input in inputs {
             self.write_request_input(prog, delta, input);
             self.run_lowered_ops(prog, delta);
             outputs.push(self.machine.copy_region(out_addr, out_len));
-            #[cfg(debug_assertions)]
-            self.assert_image_intact(prog, delta);
+            if cfg!(debug_assertions) || !proven {
+                self.assert_image_intact(prog, delta);
+            }
         }
         BatchRun { out_addr, out_elems: prog.out_elems, outputs }
     }
 
-    /// Debug guard for the batched-replay contract: after an element's
-    /// pass, every image chunk outside the input segment must still hold
-    /// its image bytes (the trace treats weights/requant/constants as
-    /// read-only, so one image application serves the whole batch).
-    #[cfg(debug_assertions)]
+    /// Guard for the batched-replay contract: after an element's pass,
+    /// every image chunk outside the input segment must still hold its
+    /// image bytes (the trace treats weights/requant/constants as
+    /// read-only, so one image application serves the whole batch). Runs
+    /// per element in debug builds as the oracle for the verifier's
+    /// batch-safety proof, and in release builds whenever the proof is
+    /// absent.
     fn assert_image_intact(&self, prog: &CompiledProgram, delta: u64) {
         let in_lo = prog.input.addr;
         let in_hi = in_lo + prog.input.elems as u64 * if prog.input.fp32 { 4 } else { 1 };

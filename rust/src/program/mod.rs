@@ -51,10 +51,12 @@
 pub mod builder;
 pub mod lowered;
 mod replay;
+pub mod verify;
 
 pub use builder::ProgramBuilder;
 pub use lowered::{BatchRun, LoweredProgram};
 pub use replay::ProgramRun;
+pub use verify::{Finding, FindingClass, VerifyReport};
 
 use crate::arch::MachineConfig;
 use crate::isa::instr::Instr;
@@ -232,6 +234,10 @@ pub struct CompiledProgram {
     /// The coordinator forces it at cache-insert time so warm replays never
     /// pay the lowering cost.
     pub(crate) lowered: std::sync::OnceLock<LoweredProgram>,
+    /// Lazily built static-verification report ([`verify::verify`]). Forced
+    /// alongside the lowering at cache-insert time; a failing artifact is
+    /// never served from the warm path.
+    pub(crate) verify: std::sync::OnceLock<VerifyReport>,
 }
 
 impl CompiledProgram {
@@ -318,6 +324,16 @@ impl CompiledProgram {
     pub fn lowered(&self) -> &LoweredProgram {
         self.lowered.get_or_init(|| lowered::lower(self, self.vlen_bits))
     }
+
+    /// The static-verification report for this artifact, built on first use
+    /// and cached for the program's lifetime ([`verify::verify`]): replay /
+    /// relocation / segment / fused-op safety findings plus the
+    /// batch-isolation proof [`VerifyReport::batch_safe`] that lets
+    /// [`crate::sim::Sim::execute_lowered_batch`] skip its per-element image
+    /// scan.
+    pub fn verify_report(&self) -> &VerifyReport {
+        self.verify.get_or_init(|| verify::verify(self))
+    }
 }
 
 /// Compile `net` for `machine` under `schedule` into a reusable
@@ -334,7 +350,16 @@ pub fn compile(
 ) -> Result<CompiledProgram, String> {
     schedule.validate(net)?;
     schedule.validate_machine(net, machine)?;
-    Ok(ProgramBuilder::new(machine.clone()).build(net, schedule))
+    let prog = ProgramBuilder::new(machine.clone()).build(net, schedule);
+    // Debug builds verify every freshly compiled artifact; release serving
+    // relies on the coordinator's cache-insert gate instead.
+    #[cfg(debug_assertions)]
+    debug_assert!(
+        prog.verify_report().ok(),
+        "compile produced an unverifiable artifact:\n{}",
+        prog.verify_report()
+    );
+    Ok(prog)
 }
 
 /// Compile shard `shard` of a tensor-parallel cluster deployment: the same
@@ -367,7 +392,14 @@ pub fn compile_shard(
     if shard >= plan.shards() {
         return Err(format!("shard {shard} out of range (plan has {})", plan.shards()));
     }
-    Ok(ProgramBuilder::new(machine.clone()).build_sharded(net, schedule, plan, shard))
+    let prog = ProgramBuilder::new(machine.clone()).build_sharded(net, schedule, plan, shard);
+    #[cfg(debug_assertions)]
+    debug_assert!(
+        prog.verify_report().ok(),
+        "compile_shard produced an unverifiable artifact:\n{}",
+        prog.verify_report()
+    );
+    Ok(prog)
 }
 
 #[cfg(test)]

@@ -12,7 +12,12 @@
 //! Relocation: `base` need not equal the compile-time base. The uniform
 //! delta is applied to every [`Sim::li_addr`]-marked immediate, every image
 //! chunk, and the input/output segments. All other address arithmetic in
-//! the trace is register-relative and needs no rewriting.
+//! the trace is register-relative and needs no rewriting. That every
+//! address-bearing immediate is actually *in* the relocation table (so no
+//! load or store silently misses the delta at a shifted base) is not an
+//! article of faith: the static verifier ([`super::verify`]) proves it per
+//! artifact by tracking value provenance through the trace, alongside the
+//! segment and def-before-use disciplines this replay relies on.
 
 use crate::isa::instr::{Instr, ScalarOp};
 use crate::kernels::KernelRun;

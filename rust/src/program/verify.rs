@@ -1,0 +1,1517 @@
+//! Static program verification: prove replay, relocation, and
+//! batch-isolation safety of a [`CompiledProgram`] *before* it is served.
+//!
+//! The warm serving path rests on legality conditions that were previously
+//! argued informally (lowered fusion side conditions, the batched-replay
+//! "trace never writes image regions" contract) or checked only by
+//! debug-build tripwires. This module machine-checks them once per artifact
+//! with an abstract interpretation over the recorded trace plus a structural
+//! audit of the decode-once lowering — the same move Quark itself
+//! (arXiv 2302.05996) makes by relying on statically-known sub-byte
+//! encodings instead of runtime checks.
+//!
+//! What the pass proves (one [`Finding`] per violation, never a panic):
+//!
+//! * **[`FindingClass::VState`]** — every vector instruction executes under a
+//!   `vsetvli`-established `(vl, vtype)`; `vbitpack` stays inside its
+//!   architectural envelope.
+//! * **[`FindingClass::Relocation`]** — every scalar value used as a memory
+//!   address is rooted in a relocation-marked `li` plus statically foldable
+//!   arithmetic, so re-basing the program moves *every* access; the table
+//!   itself is sorted, in range, and points at `li`s.
+//! * **[`FindingClass::RegUninit`]** — def-before-use for scalar, FP, and
+//!   vector registers on every data-bearing operand. (Scalar ALU results on
+//!   undefined inputs propagate "undefined" instead of being flagged at the
+//!   ALU — the emitters' trace-driven loop counters are decremented without
+//!   initialization and never observed.)
+//! * **[`FindingClass::UninitRead`]** — byte-granular def-before-use for
+//!   memory: the init image, the input segment, host runtime writes (shard
+//!   res-slice fills and all-gathers), and prior trace stores are the only
+//!   legal read sources.
+//! * **[`FindingClass::Segments`]** — segment discipline: input, output,
+//!   image, per-layer [`ShardSeg`](super::ShardSeg) regions are in-bounds and the output (and
+//!   every layer map) is fully written before harvest; the output segment
+//!   never aliases read-only image bytes.
+//! * **[`FindingClass::FusedOp`]** — the lowering tiles the trace exactly,
+//!   reproduces deterministically from the trace (discharging `Interp`-range
+//!   resume-state equivalence), and every fused op's legality side condition
+//!   (`PlaneMac` `acc != w`, `RowSum` vacc-span disjointness, `vbitpack`
+//!   envelope, no `x0` address registers) holds.
+//!
+//! The payoff beyond gating: a clean report whose trace (and modeled runtime
+//! effects) never touched an image byte outside the input segment is a
+//! *batch-safety proof* ([`VerifyReport::batch_safe`]) —
+//! [`crate::sim::Sim::execute_lowered_batch`] can then skip its per-element
+//! image scan while release builds finally get the isolation guarantee for
+//! unproven programs (see `program/lowered.rs`).
+//!
+//! New emission backends (Sparq sparse kernels, LUT kernels — ROADMAP items
+//! 3–4) extend the pass by construction: any instruction they emit is either
+//! already in the vocabulary modeled here or a new `Instr` variant that
+//! fails to compile until this walker learns its read/write sets.
+
+use std::fmt;
+
+use crate::isa::instr::{AluOp, Instr, ScalarOp, VMemKind, VOp};
+use crate::isa::reg::{FReg, Reg, VReg};
+use crate::isa::vtype::VType;
+
+use super::lowered::{lower, MicroOp};
+use super::CompiledProgram;
+
+/// Cap on recorded findings; the rest are counted in
+/// [`VerifyReport::suppressed`] so a pathological artifact cannot balloon
+/// the report.
+const MAX_FINDINGS: usize = 64;
+
+/// Category of a verification failure — the unit negative tests assert on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FindingClass {
+    /// Vector instruction without a live `vsetvli` state (or outside an
+    /// architectural envelope the executor asserts).
+    VState,
+    /// Address not rooted in a relocation-marked `li` (or a malformed
+    /// relocation table): the program would break when re-based.
+    Relocation,
+    /// Register read before any definition reaches it.
+    RegUninit,
+    /// Memory read outside image ⊎ input ⊎ host-runtime ⊎ prior stores.
+    UninitRead,
+    /// Segment-discipline violation (bounds, overlap, or output coverage).
+    Segments,
+    /// Lowered micro-op audit failure (tiling, determinism, or a fused-op
+    /// legality side condition).
+    FusedOp,
+}
+
+impl fmt::Display for FindingClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FindingClass::VState => "vstate",
+            FindingClass::Relocation => "relocation",
+            FindingClass::RegUninit => "reg-uninit",
+            FindingClass::UninitRead => "uninit-read",
+            FindingClass::Segments => "segments",
+            FindingClass::FusedOp => "fused-op",
+        })
+    }
+}
+
+/// One verification failure: class, optional trace index, human detail.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub class: FindingClass,
+    /// Trace index (or lowered-op index for [`FindingClass::FusedOp`]) the
+    /// finding anchors to; `None` for whole-program findings.
+    pub at: Option<usize>,
+    pub detail: String,
+}
+
+/// The structured result of [`verify`]: per-class findings plus the
+/// batch-safety verdict. `Display` is the one report printer shared by
+/// `repro program`, `repro verify`, and the gate diagnostics.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    findings: Vec<Finding>,
+    /// Findings beyond [`MAX_FINDINGS`] counted but not recorded.
+    suppressed: usize,
+    batch_safe: bool,
+    checked_instrs: usize,
+    checked_ops: usize,
+}
+
+impl VerifyReport {
+    /// True when the artifact passed every check.
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty() && self.suppressed == 0
+    }
+
+    /// Proof that one batch element's pass cannot leak into the next:
+    /// no trace instruction (or modeled runtime effect) writes an image byte
+    /// outside the input segment, and the program is not a multi-core shard
+    /// (whose inter-layer gathers are host effects outside the trace, so the
+    /// proof does not extend). Only meaningful when [`VerifyReport::ok`].
+    pub fn batch_safe(&self) -> bool {
+        self.batch_safe
+    }
+
+    pub fn findings(&self) -> &[Finding] {
+        &self.findings
+    }
+
+    /// Total findings, including suppressed ones.
+    pub fn count(&self) -> usize {
+        self.findings.len() + self.suppressed
+    }
+
+    pub fn suppressed(&self) -> usize {
+        self.suppressed
+    }
+
+    /// True if any recorded finding has the given class.
+    pub fn has(&self, class: FindingClass) -> bool {
+        self.findings.iter().any(|f| f.class == class)
+    }
+
+    /// Trace instructions walked by the abstract interpretation.
+    pub fn checked_instrs(&self) -> usize {
+        self.checked_instrs
+    }
+
+    /// Lowered micro-ops audited.
+    pub fn checked_ops(&self) -> usize {
+        self.checked_ops
+    }
+}
+
+impl fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "verify: {} — {} finding(s){} | batch-safe: {} | {} instrs, {} micro-ops checked",
+            if self.ok() { "PASS" } else { "FAIL" },
+            self.count(),
+            if self.suppressed > 0 {
+                format!(" ({} suppressed)", self.suppressed)
+            } else {
+                String::new()
+            },
+            if self.batch_safe { "proven" } else { "no" },
+            self.checked_instrs,
+            self.checked_ops,
+        )?;
+        for finding in &self.findings {
+            match finding.at {
+                Some(i) => writeln!(f, "  [{}] @{}: {}", finding.class, i, finding.detail)?,
+                None => writeln!(f, "  [{}] {}", finding.class, finding.detail)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte-granular shadow memory
+// ---------------------------------------------------------------------------
+
+/// Dense bitmap over the program's memory footprint, one bit per byte,
+/// operated on word-at-a-time.
+struct ByteSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl ByteSet {
+    fn new(len: usize) -> ByteSet {
+        ByteSet { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Bit mask covering bits `[a, b)` of one word, `0 <= a <= b <= 64`.
+    fn mask(a: usize, b: usize) -> u64 {
+        if b - a == 64 {
+            !0
+        } else {
+            ((1u64 << (b - a)) - 1) << a
+        }
+    }
+
+    /// Visit each word overlapping `[lo, lo + n)` as `(word index, mask)`.
+    fn words_of(lo: usize, n: usize) -> impl Iterator<Item = (usize, u64)> {
+        let hi = lo + n;
+        (lo / 64..hi.div_ceil(64)).map(move |w| {
+            let a = lo.max(w * 64) - w * 64;
+            let b = hi.min((w + 1) * 64) - w * 64;
+            (w, ByteSet::mask(a, b))
+        })
+    }
+
+    /// Mark bytes `[lo, lo + n)` (caller guarantees bounds).
+    fn set(&mut self, lo: usize, n: usize) {
+        debug_assert!(lo + n <= self.len);
+        for (w, m) in ByteSet::words_of(lo, n) {
+            self.words[w] |= m;
+        }
+    }
+
+    /// First byte of `[lo, lo + n)` that is *not* marked, if any.
+    fn first_missing(&self, lo: usize, n: usize) -> Option<usize> {
+        debug_assert!(lo + n <= self.len);
+        for (w, m) in ByteSet::words_of(lo, n) {
+            let miss = !self.words[w] & m;
+            if miss != 0 {
+                return Some(w * 64 + miss.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// True if any byte of `[lo, lo + n)` is marked.
+    fn any_set(&self, lo: usize, n: usize) -> bool {
+        debug_assert!(lo + n <= self.len);
+        ByteSet::words_of(lo, n).any(|(w, m)| self.words[w] & m != 0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar value lattice
+// ---------------------------------------------------------------------------
+
+/// Provenance of a scalar value: whether it is rooted in a
+/// relocation-marked `li` (and therefore moves with the program when
+/// re-based) or is a plain constant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Prov {
+    /// Pure constant: identical at every replay base.
+    Const,
+    /// Relocation-rooted address (one `Addr` term ± constants).
+    Addr,
+    /// Anything else (e.g. `Addr + Addr`): not provably relocatable.
+    Mixed,
+}
+
+impl Prov {
+    fn combine(a: Prov, b: Prov) -> Prov {
+        match (a, b) {
+            (Prov::Const, Prov::Const) => Prov::Const,
+            (Prov::Addr, Prov::Const) | (Prov::Const, Prov::Addr) => Prov::Addr,
+            _ => Prov::Mixed,
+        }
+    }
+}
+
+/// Abstract scalar register value.
+#[derive(Clone, Copy, Debug)]
+struct SVal {
+    /// Some definition reaches this register.
+    def: bool,
+    /// Statically folded value, when the def chain is foldable.
+    val: Option<u64>,
+    prov: Prov,
+}
+
+impl SVal {
+    const UNDEF: SVal = SVal { def: false, val: None, prov: Prov::Const };
+
+    fn known(val: u64, prov: Prov) -> SVal {
+        SVal { def: true, val: Some(val), prov }
+    }
+
+    /// Defined but with a value the verifier does not track (loads, CSR
+    /// reads, vector→scalar moves).
+    const OPAQUE: SVal = SVal { def: true, val: None, prov: Prov::Const };
+}
+
+// ---------------------------------------------------------------------------
+// The abstract interpreter
+// ---------------------------------------------------------------------------
+
+struct Walker<'a> {
+    prog: &'a CompiledProgram,
+    findings: Vec<Finding>,
+    suppressed: usize,
+    /// Scalar register lattice (`x0` is hardwired known-zero in accessors).
+    x: [SVal; 32],
+    /// FP register def-before-use bits.
+    fdef: [bool; 32],
+    /// Vector register def-before-use bits, whole-register granularity.
+    vdef: [bool; 32],
+    /// Statically tracked `(vl, vtype)`; `None` until the first `vsetvli`.
+    vstate: Option<(u64, VType)>,
+    /// Bytes a read may legally observe: image ∪ input ∪ runtime ∪ stores.
+    defined: ByteSet,
+    /// Bytes written by the trace or modeled runtime (output coverage).
+    written: ByteSet,
+    /// Image bytes outside the input segment — must stay read-only for the
+    /// batch-safety proof.
+    image_ro: ByteSet,
+    /// A trace or runtime write landed on an `image_ro` byte.
+    image_written: bool,
+    is_reloc: Vec<bool>,
+    vreg_bytes: usize,
+}
+
+impl<'a> Walker<'a> {
+    fn new(prog: &'a CompiledProgram) -> Walker<'a> {
+        let mem_len = prog.mem_len as usize;
+        let mut is_reloc = vec![false; prog.trace.len()];
+        for &r in &prog.reloc {
+            if (r as usize) < is_reloc.len() {
+                is_reloc[r as usize] = true;
+            }
+        }
+        Walker {
+            prog,
+            findings: Vec::new(),
+            suppressed: 0,
+            x: [SVal::UNDEF; 32],
+            fdef: [false; 32],
+            vdef: [false; 32],
+            vstate: None,
+            defined: ByteSet::new(mem_len),
+            written: ByteSet::new(mem_len),
+            image_ro: ByteSet::new(mem_len),
+            image_written: false,
+            is_reloc,
+            vreg_bytes: (prog.vlen_bits / 8).max(1),
+        }
+    }
+
+    fn find(&mut self, class: FindingClass, at: Option<usize>, detail: String) {
+        if self.findings.len() < MAX_FINDINGS {
+            self.findings.push(Finding { class, at, detail });
+        } else {
+            self.suppressed += 1;
+        }
+    }
+
+    // ---- scalar / FP / vector register lattices ----
+
+    fn sreg(&self, r: Reg) -> SVal {
+        if r.0 == 0 {
+            SVal::known(0, Prov::Const)
+        } else {
+            self.x[r.0 as usize & 31]
+        }
+    }
+
+    fn sset(&mut self, r: Reg, v: SVal) {
+        if r.0 != 0 {
+            self.x[r.0 as usize & 31] = v;
+        }
+    }
+
+    fn need_sreg(&mut self, at: usize, r: Reg, what: &str) {
+        if !self.sreg(r).def {
+            self.find(
+                FindingClass::RegUninit,
+                Some(at),
+                format!("{what} reads x{} before any definition", r.0),
+            );
+        }
+    }
+
+    fn need_freg(&mut self, at: usize, r: FReg, what: &str) {
+        if !self.fdef[r.0 as usize & 31] {
+            self.find(
+                FindingClass::RegUninit,
+                Some(at),
+                format!("{what} reads f{} before any definition", r.0),
+            );
+        }
+    }
+
+    /// Register-group span of `bytes` bytes starting at `v`, clamped to the
+    /// file; a group overrunning v31 is a segment finding.
+    fn vspan(&mut self, at: usize, v: VReg, bytes: usize) -> std::ops::Range<usize> {
+        let nregs = bytes.div_ceil(self.vreg_bytes).max(1);
+        let s = v.0 as usize & 31;
+        if s + nregs > 32 {
+            self.find(
+                FindingClass::Segments,
+                Some(at),
+                format!("vector group v{}..+{nregs} overruns the register file", v.0),
+            );
+            return s..32;
+        }
+        s..s + nregs
+    }
+
+    fn vread(&mut self, at: usize, v: VReg, bytes: usize, what: &str) {
+        if bytes == 0 {
+            return;
+        }
+        for r in self.vspan(at, v, bytes) {
+            if !self.vdef[r] {
+                self.find(
+                    FindingClass::RegUninit,
+                    Some(at),
+                    format!("{what} reads v{r} before any definition"),
+                );
+                self.vdef[r] = true; // report once per register
+            }
+        }
+    }
+
+    fn vwrite(&mut self, at: usize, v: VReg, bytes: usize) {
+        if bytes == 0 {
+            return;
+        }
+        for r in self.vspan(at, v, bytes) {
+            self.vdef[r] = true;
+        }
+    }
+
+    // ---- shadow memory ----
+
+    /// Translate a compile-space `[addr, addr + len)` range into footprint
+    /// offsets, or record a segment finding.
+    fn rel_range(&mut self, at: Option<usize>, addr: u64, len: usize, what: &str) -> Option<usize> {
+        let base = self.prog.base;
+        let end = base + self.prog.mem_len;
+        if addr < base || addr > end || len as u64 > end - addr {
+            self.find(
+                FindingClass::Segments,
+                at,
+                format!(
+                    "{what} at {addr:#x}+{len} outside the program footprint \
+                     [{base:#x}, {end:#x})"
+                ),
+            );
+            return None;
+        }
+        Some((addr - base) as usize)
+    }
+
+    fn mem_read(&mut self, at: usize, addr: u64, len: usize, what: &str) {
+        if len == 0 {
+            return;
+        }
+        if let Some(lo) = self.rel_range(Some(at), addr, len, what) {
+            if let Some(miss) = self.defined.first_missing(lo, len) {
+                self.find(
+                    FindingClass::UninitRead,
+                    Some(at),
+                    format!(
+                        "{what} reads uninitialized byte {:#x} (range {addr:#x}+{len})",
+                        self.prog.base + miss as u64
+                    ),
+                );
+                self.defined.set(lo, len); // report the range once
+            }
+        }
+    }
+
+    fn mem_write(&mut self, at: Option<usize>, addr: u64, len: usize, what: &str) {
+        if len == 0 {
+            return;
+        }
+        if let Some(lo) = self.rel_range(at, addr, len, what) {
+            self.defined.set(lo, len);
+            self.written.set(lo, len);
+            if self.image_ro.any_set(lo, len) {
+                self.image_written = true;
+            }
+        }
+    }
+
+    /// Resolve a memory address: base register must be defined,
+    /// relocation-rooted, and statically foldable.
+    fn addr_of(&mut self, at: usize, base: Reg, offset: i64, what: &str) -> Option<u64> {
+        let s = self.sreg(base);
+        if !s.def {
+            self.find(
+                FindingClass::RegUninit,
+                Some(at),
+                format!("{what} addresses through undefined x{}", base.0),
+            );
+            return None;
+        }
+        if s.prov != Prov::Addr {
+            self.find(
+                FindingClass::Relocation,
+                Some(at),
+                format!(
+                    "{what} addresses through x{} whose value is not rooted in a \
+                     relocation-marked li (provenance {:?})",
+                    base.0, s.prov
+                ),
+            );
+            return None;
+        }
+        match s.val {
+            Some(v) => Some(v.wrapping_add(offset as u64)),
+            None => {
+                self.find(
+                    FindingClass::Relocation,
+                    Some(at),
+                    format!("{what} address in x{} is not statically resolvable", base.0),
+                );
+                None
+            }
+        }
+    }
+
+    // ---- static pre-checks ----
+
+    fn input_bytes(&self) -> usize {
+        self.prog.input.elems * if self.prog.input.fp32 { 4 } else { 1 }
+    }
+
+    fn check_segments(&mut self) {
+        let prog = self.prog;
+        let in_len = self.input_bytes();
+        let out_len = prog.output_bytes();
+        // Input / output bounds.
+        if let Some(lo) = self.rel_range(None, prog.input.addr, in_len, "input segment") {
+            self.defined.set(lo, in_len);
+        }
+        self.rel_range(None, prog.out_addr, out_len, "output segment");
+        // Image chunks: in-bounds; defined; read-only outside the input.
+        let (in_lo, in_hi) = (prog.input.addr, prog.input.addr + in_len as u64);
+        for (k, (addr, bytes)) in prog.image.iter().enumerate() {
+            let what = format!("image chunk {k}");
+            let Some(lo) = self.rel_range(None, *addr, bytes.len(), &what) else { continue };
+            self.defined.set(lo, bytes.len());
+            let (clo, chi) = (*addr, *addr + bytes.len() as u64);
+            // Pieces of the chunk outside [in_lo, in_hi) are read-only.
+            let left = (clo, chi.min(in_lo).max(clo));
+            let right = (clo.max(in_hi).min(chi), chi);
+            for (a, b) in [left, right] {
+                if b > a {
+                    self.image_ro.set((a - prog.base) as usize, (b - a) as usize);
+                }
+            }
+        }
+        // Input and output must be distinct segments on any real net.
+        if !prog.layers.is_empty() {
+            let out_hi = prog.out_addr + out_len as u64;
+            if prog.input.addr < out_hi && prog.out_addr < in_hi {
+                self.find(
+                    FindingClass::Segments,
+                    None,
+                    format!(
+                        "input segment {:#x}+{in_len} overlaps output segment {:#x}+{out_len}",
+                        prog.input.addr, prog.out_addr
+                    ),
+                );
+            }
+        }
+        // The harvest segment must not alias read-only image bytes (a batch
+        // would then return stale weights as logits).
+        if let Some(lo) = self.rel_range(None, prog.out_addr, out_len, "output segment") {
+            if out_len > 0 && self.image_ro.any_set(lo, out_len) {
+                self.find(
+                    FindingClass::Segments,
+                    None,
+                    format!(
+                        "output segment {:#x}+{out_len} overlaps read-only image bytes",
+                        prog.out_addr
+                    ),
+                );
+            }
+        }
+        // Layer marks tile the trace.
+        let mut prev = 0usize;
+        for (li, m) in prog.layers.iter().enumerate() {
+            if m.trace_end <= prev || m.trace_end > prog.trace.len() {
+                self.find(
+                    FindingClass::Segments,
+                    None,
+                    format!(
+                        "layer {li} ({}) trace_end {} does not advance within the \
+                         {}-instruction trace",
+                        m.name,
+                        m.trace_end,
+                        prog.trace.len()
+                    ),
+                );
+            }
+            prev = m.trace_end;
+            let bytes = m.out_elems * if prog.input.fp32 { 4 } else { 1 };
+            self.rel_range(None, m.out_addr, bytes, &format!("layer {li} output"));
+        }
+        if let Some(last) = prog.layers.last() {
+            if last.trace_end != prog.trace.len() {
+                self.find(
+                    FindingClass::Segments,
+                    None,
+                    format!(
+                        "layer marks cover {} of {} trace instructions",
+                        last.trace_end,
+                        prog.trace.len()
+                    ),
+                );
+            }
+        }
+        // Relocation table: sorted, in range, pointing at `li`s.
+        let mut last = None::<u32>;
+        for &r in &prog.reloc {
+            if last.is_some_and(|p| r <= p) {
+                self.find(
+                    FindingClass::Relocation,
+                    None,
+                    format!("relocation table not strictly sorted at entry {r}"),
+                );
+            }
+            last = Some(r);
+            match prog.trace.get(r as usize) {
+                Some(Instr::Scalar(ScalarOp::Li { .. })) => {}
+                _ => self.find(
+                    FindingClass::Relocation,
+                    None,
+                    format!("relocation entry {r} does not point at an li"),
+                ),
+            }
+        }
+        // Shard segments: one per layer, regions in-bounds, scratch/gather
+        // regions never alias read-only image bytes.
+        if prog.shard.is_some() && prog.shard_segs.len() != prog.layers.len() {
+            self.find(
+                FindingClass::Segments,
+                None,
+                format!(
+                    "shard program carries {} segments for {} layers",
+                    prog.shard_segs.len(),
+                    prog.layers.len()
+                ),
+            );
+        }
+        for (li, seg) in prog.shard_segs.iter().enumerate() {
+            let regions = [
+                (seg.part_addr, seg.part_elems(), "partial"),
+                (seg.gather_addr, seg.gather_elems(), "gather"),
+            ];
+            for (addr, elems, kind) in regions {
+                let what = format!("layer {li} shard {kind} region");
+                if let Some(lo) = self.rel_range(None, addr, elems, &what) {
+                    if elems > 0 && self.image_ro.any_set(lo, elems) {
+                        self.find(
+                            FindingClass::Segments,
+                            None,
+                            format!("{what} at {addr:#x}+{elems} overlaps read-only image bytes"),
+                        );
+                    }
+                }
+            }
+            if let Some((_, slice_addr)) = seg.res_slice {
+                self.rel_range(
+                    None,
+                    slice_addr,
+                    seg.part_elems(),
+                    &format!("layer {li} residual slice buffer"),
+                );
+            }
+        }
+    }
+
+    // ---- runtime (cluster host) effects modeled into the walk ----
+
+    /// The cluster runtime fills a sharded residual layer's slice buffer
+    /// from the gathered source map *before* the layer's trace range runs.
+    fn apply_res_slice(&mut self, li: usize) {
+        let prog = self.prog;
+        let seg = &prog.shard_segs[li];
+        let Some((src_map, slice_addr)) = seg.res_slice else { return };
+        let src_addr = if src_map == 0 {
+            prog.input.addr
+        } else if let Some(s) = prog.shard_segs.get(src_map - 1) {
+            s.gather_addr
+        } else {
+            self.find(
+                FindingClass::Segments,
+                None,
+                format!("layer {li} residual slice sources nonexistent map {src_map}"),
+            );
+            return;
+        };
+        let full = seg.positions * seg.c_full;
+        if let Some(lo) = self.rel_range(None, src_addr, full, "residual slice source") {
+            if full > 0 {
+                if let Some(miss) = self.defined.first_missing(lo, full) {
+                    self.find(
+                        FindingClass::UninitRead,
+                        None,
+                        format!(
+                            "layer {li} residual slice reads uninitialized source byte {:#x}",
+                            prog.base + miss as u64
+                        ),
+                    );
+                }
+            }
+        }
+        self.mem_write(None, slice_addr, seg.part_elems(), "residual slice fill");
+    }
+
+    /// The cluster runtime all-gathers a partitioned layer *after* its trace
+    /// range: this shard's partial slice must be fully written, then the
+    /// full map materializes at `gather_addr`.
+    fn apply_gather(&mut self, li: usize) {
+        let prog = self.prog;
+        let seg = &prog.shard_segs[li];
+        let part = seg.part_elems();
+        if let Some(lo) = self.rel_range(None, seg.part_addr, part, "all-gather partial slice") {
+            if part > 0 {
+                if let Some(miss) = self.written.first_missing(lo, part) {
+                    self.find(
+                        FindingClass::Segments,
+                        None,
+                        format!(
+                            "layer {li} partial slice byte {:#x} never written before \
+                             the all-gather harvests it",
+                            prog.base + miss as u64
+                        ),
+                    );
+                    self.written.set(lo, part);
+                }
+            }
+        }
+        self.mem_write(None, seg.gather_addr, seg.gather_elems(), "all-gather");
+    }
+
+    // ---- the walk ----
+
+    fn walk_trace(&mut self) {
+        let prog = self.prog;
+        let gathers = prog.shard.map(|(_, n)| n).unwrap_or(1) > 1;
+        let mut cur = 0usize; // layer containing instruction i
+        for i in 0..prog.trace.len() {
+            if cur < prog.shard_segs.len() {
+                let start = if cur == 0 { 0 } else { prog.layers[cur - 1].trace_end };
+                if i == start {
+                    self.apply_res_slice(cur);
+                }
+            }
+            self.step(i, prog.trace[i]);
+            if cur < prog.layers.len() && i + 1 == prog.layers[cur].trace_end {
+                if gathers
+                    && cur < prog.shard_segs.len()
+                    && prog.shard_segs[cur].channels.is_some()
+                {
+                    self.apply_gather(cur);
+                }
+                cur += 1;
+            }
+        }
+    }
+
+    fn step(&mut self, i: usize, instr: Instr) {
+        match instr {
+            Instr::Scalar(op) => self.scalar_op(i, op),
+            Instr::VSetVli { rd, avl, vtype } => {
+                let vl = avl.min(vtype.vlmax(self.prog.vlen_bits) as u64);
+                self.vstate = Some((vl, vtype));
+                self.sset(rd, SVal::known(vl, Prov::Const));
+            }
+            Instr::Vector(v) => self.vector_op(i, v),
+        }
+    }
+
+    fn scalar_op(&mut self, i: usize, op: ScalarOp) {
+        match op {
+            ScalarOp::Li { rd, imm } => {
+                let prov = if self.is_reloc[i] { Prov::Addr } else { Prov::Const };
+                self.sset(rd, SVal::known(imm as u64, prov));
+            }
+            // ALU results on undefined inputs stay undefined rather than
+            // being flagged: the emitters decrement trace-driven loop
+            // counters that are never initialized (and never observed).
+            ScalarOp::Alu { op, rd, rs1, rs2 } => {
+                let (a, b) = (self.sreg(rs1), self.sreg(rs2));
+                self.sset(rd, fold_alu(op, a, b));
+            }
+            ScalarOp::AluImm { op, rd, rs1, imm } => {
+                let a = self.sreg(rs1);
+                self.sset(rd, fold_alu(op, a, SVal::known(imm as u64, Prov::Const)));
+            }
+            ScalarOp::Load { width, rd, base, offset, .. } => {
+                if let Some(addr) = self.addr_of(i, base, offset, "scalar load") {
+                    self.mem_read(i, addr, width.bytes(), "scalar load");
+                }
+                self.sset(rd, SVal::OPAQUE);
+            }
+            ScalarOp::Store { width, rs2, base, offset } => {
+                self.need_sreg(i, rs2, "scalar store");
+                if let Some(addr) = self.addr_of(i, base, offset, "scalar store") {
+                    self.mem_write(Some(i), addr, width.bytes(), "scalar store");
+                }
+            }
+            ScalarOp::Branch { .. } | ScalarOp::Nop => {}
+            ScalarOp::FLoad { rd, base, offset } => {
+                if let Some(addr) = self.addr_of(i, base, offset, "f32 load") {
+                    self.mem_read(i, addr, 4, "f32 load");
+                }
+                self.fdef[rd.0 as usize & 31] = true;
+            }
+            ScalarOp::FStore { rs2, base, offset } => {
+                self.need_freg(i, rs2, "f32 store");
+                if let Some(addr) = self.addr_of(i, base, offset, "f32 store") {
+                    self.mem_write(Some(i), addr, 4, "f32 store");
+                }
+            }
+            ScalarOp::FAlu { rd, rs1, rs2, .. } => {
+                self.need_freg(i, rs1, "f32 alu");
+                self.need_freg(i, rs2, "f32 alu");
+                self.fdef[rd.0 as usize & 31] = true;
+            }
+            ScalarOp::FMadd { rd, rs1, rs2, rs3 } => {
+                for r in [rs1, rs2, rs3] {
+                    self.need_freg(i, r, "fmadd");
+                }
+                self.fdef[rd.0 as usize & 31] = true;
+            }
+            ScalarOp::FCvtWS { rd, rs1 } => {
+                self.need_freg(i, rs1, "fcvt.w.s");
+                self.sset(rd, SVal::OPAQUE);
+            }
+            ScalarOp::FCvtSW { rd, rs1 } => {
+                self.need_sreg(i, rs1, "fcvt.s.w");
+                self.fdef[rd.0 as usize & 31] = true;
+            }
+            ScalarOp::FMvXW { rd, rs1 } => {
+                self.need_freg(i, rs1, "fmv.x.w");
+                self.sset(rd, SVal::OPAQUE);
+            }
+            ScalarOp::FMvWX { rd, rs1 } => {
+                self.need_sreg(i, rs1, "fmv.w.x");
+                self.fdef[rd.0 as usize & 31] = true;
+            }
+            ScalarOp::CsrReadCycle { rd } => self.sset(rd, SVal::OPAQUE),
+        }
+    }
+
+    fn vector_op(&mut self, i: usize, v: VOp) {
+        let Some((vl64, vt)) = self.vstate else {
+            self.find(
+                FindingClass::VState,
+                Some(i),
+                "vector instruction with no vsetvli in effect".to_string(),
+            );
+            // Mark the destination defined to limit cascading reg findings.
+            if let Some(vd) = v.vreg_write() {
+                self.vdef[vd.0 as usize & 31] = true;
+            }
+            return;
+        };
+        let vl = vl64 as usize;
+        let eb = vt.sew.bytes();
+        let body = vl * eb; // byte span of a vl-element operand
+        match v {
+            VOp::Load { kind, eew, vd, base } => {
+                let len = vl * eew.bytes();
+                match kind {
+                    VMemKind::UnitStride => {
+                        if let Some(addr) = self.addr_of(i, base, 0, "vector load") {
+                            self.mem_read(i, addr, len, "vector load");
+                        }
+                    }
+                    VMemKind::Strided { stride } => {
+                        self.strided(i, base, stride, eew.bytes(), vl, false);
+                    }
+                }
+                self.vwrite(i, vd, len);
+            }
+            VOp::Store { kind, eew, vs3, base } => {
+                let len = vl * eew.bytes();
+                self.vread(i, vs3, len, "vector store");
+                match kind {
+                    VMemKind::UnitStride => {
+                        if let Some(addr) = self.addr_of(i, base, 0, "vector store") {
+                            self.mem_write(Some(i), addr, len, "vector store");
+                        }
+                    }
+                    VMemKind::Strided { stride } => {
+                        self.strided(i, base, stride, eew.bytes(), vl, true);
+                    }
+                }
+            }
+            VOp::IVV { vd, vs2, vs1, .. } => {
+                self.vread(i, vs2, body, "vector op");
+                self.vread(i, vs1, body, "vector op");
+                self.vwrite(i, vd, body);
+            }
+            VOp::IVX { vd, vs2, rs1, .. } => {
+                self.need_sreg(i, rs1, "vector vx op");
+                self.vread(i, vs2, body, "vector op");
+                self.vwrite(i, vd, body);
+            }
+            VOp::IVI { vd, vs2, .. } => {
+                self.vread(i, vs2, body, "vector op");
+                self.vwrite(i, vd, body);
+            }
+            VOp::MaccVX { vd, rs1, vs2 } => {
+                self.need_sreg(i, rs1, "vmacc.vx");
+                self.vread(i, vs2, body, "vmacc.vx");
+                self.vread(i, vd, body, "vmacc.vx accumulator");
+                self.vwrite(i, vd, body);
+            }
+            VOp::MaccVV { vd, vs1, vs2 } => {
+                self.vread(i, vs2, body, "vmacc.vv");
+                self.vread(i, vs1, body, "vmacc.vv");
+                self.vread(i, vd, body, "vmacc.vv accumulator");
+                self.vwrite(i, vd, body);
+            }
+            VOp::RedSum { vd, vs2, vs1 } | VOp::FRedSum { vd, vs2, vs1 } => {
+                self.vread(i, vs2, body, "reduction");
+                self.vread(i, vs1, eb, "reduction seed");
+                self.vwrite(i, vd, eb);
+            }
+            VOp::MvXS { rd, vs2 } => {
+                self.vread(i, vs2, eb, "vmv.x.s");
+                self.sset(rd, SVal::OPAQUE);
+            }
+            VOp::MvSX { vd, rs1 } => {
+                self.need_sreg(i, rs1, "vmv.s.x");
+                self.vwrite(i, vd, eb);
+            }
+            VOp::MvVX { vd, rs1 } => {
+                self.need_sreg(i, rs1, "vmv.v.x");
+                self.vwrite(i, vd, body);
+            }
+            VOp::MvVI { vd, .. } => self.vwrite(i, vd, body),
+            VOp::Sext { vd, vs2, frac } | VOp::Zext { vd, vs2, frac } => {
+                let src = vl * (eb / (frac as usize).max(1)).max(1);
+                self.vread(i, vs2, src, "vector widen");
+                self.vwrite(i, vd, body);
+            }
+            // Mask-producing compares write the full mask register.
+            VOp::MseqVI { vd, vs2, .. } | VOp::MsneVI { vd, vs2, .. } => {
+                self.vread(i, vs2, body, "mask compare");
+                self.vwrite(i, vd, self.vreg_bytes);
+            }
+            VOp::FMaccVF { vd, rs1, vs2 } => {
+                self.need_freg(i, rs1, "vfmacc.vf");
+                self.vread(i, vs2, body, "vfmacc.vf");
+                self.vread(i, vd, body, "vfmacc.vf accumulator");
+                self.vwrite(i, vd, body);
+            }
+            VOp::FAddVV { vd, vs2, vs1 } => {
+                self.vread(i, vs2, body, "vfadd.vv");
+                self.vread(i, vs1, body, "vfadd.vv");
+                self.vwrite(i, vd, body);
+            }
+            VOp::FMulVF { vd, vs2, rs1 } | VOp::FMaxVF { vd, vs2, rs1 } => {
+                self.need_freg(i, rs1, "vector vf op");
+                self.vread(i, vs2, body, "vector vf op");
+                self.vwrite(i, vd, body);
+            }
+            VOp::FMvVF { vd, rs1 } => {
+                self.need_freg(i, rs1, "vfmv.v.f");
+                self.vwrite(i, vd, body);
+            }
+            VOp::Popcnt { vd, vs2 } => {
+                self.vread(i, vs2, body, "vpopcnt.v");
+                self.vwrite(i, vd, body);
+            }
+            VOp::Shacc { vd, vs2, .. } => {
+                self.vread(i, vs2, body, "vshacc.vi");
+                self.vread(i, vd, body, "vshacc.vi accumulator");
+                self.vwrite(i, vd, body);
+            }
+            VOp::Bitpack { vd, vs2, bit } => {
+                // Envelope the executor asserts: the plane must fit one
+                // VLEN-bit register and the sliced bit must exist at SEW.
+                if vl > self.prog.vlen_bits || bit as usize >= vt.sew.bits() {
+                    self.find(
+                        FindingClass::VState,
+                        Some(i),
+                        format!(
+                            "vbitpack outside its envelope (vl {vl} vs VLEN {}, bit {bit} \
+                             at sew {} bits)",
+                            self.prog.vlen_bits,
+                            vt.sew.bits()
+                        ),
+                    );
+                }
+                self.vread(i, vs2, body, "vbitpack");
+                // `vd` is deliberately *not* required to be defined: the
+                // packer shifts garbage out after 64/vl calls, so the
+                // emitters legally start from an uninitialized register.
+                self.vwrite(i, vd, self.vreg_bytes);
+            }
+        }
+    }
+
+    /// Conservative per-element model of strided accesses (no current
+    /// emitter uses them; kept total for future backends).
+    fn strided(&mut self, i: usize, base: Reg, stride: Reg, eew: usize, vl: usize, write: bool) {
+        let Some(addr) = self.addr_of(i, base, 0, "strided access") else { return };
+        self.need_sreg(i, stride, "strided access");
+        let Some(step) = self.sreg(stride).val else {
+            self.find(
+                FindingClass::Relocation,
+                Some(i),
+                "strided access with a statically unresolvable stride".to_string(),
+            );
+            return;
+        };
+        for k in 0..vl {
+            let a = addr.wrapping_add((k as u64).wrapping_mul(step));
+            if write {
+                self.mem_write(Some(i), a, eew, "strided store");
+            } else {
+                self.mem_read(i, a, eew, "strided load");
+            }
+        }
+    }
+
+    // ---- post-walk checks ----
+
+    fn check_output_coverage(&mut self) {
+        let prog = self.prog;
+        let out_len = prog.output_bytes();
+        if let Some(lo) = self.rel_range(None, prog.out_addr, out_len, "output segment") {
+            if out_len > 0 {
+                if let Some(miss) = self.written.first_missing(lo, out_len) {
+                    self.find(
+                        FindingClass::Segments,
+                        None,
+                        format!(
+                            "output byte {:#x} never written before harvest",
+                            prog.base + miss as u64
+                        ),
+                    );
+                }
+            }
+        }
+        // Every layer map a replay report exposes must be fully written too.
+        let esz = if prog.input.fp32 { 4 } else { 1 };
+        for (li, m) in prog.layers.iter().enumerate() {
+            let bytes = m.out_elems * esz;
+            if let Some(lo) = self.rel_range(None, m.out_addr, bytes, "layer output") {
+                if bytes > 0 && self.written.first_missing(lo, bytes).is_some() {
+                    self.find(
+                        FindingClass::Segments,
+                        None,
+                        format!("layer {li} ({}) output map is not fully written", m.name),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Audit the decode-once lowering: exact trace tiling, reproducibility
+    /// (which discharges `Interp`-range resume-state equivalence — `lower`
+    /// is a pure function of the trace), and per-op legality conditions.
+    fn check_lowered(&mut self) -> usize {
+        let prog = self.prog;
+        let low = prog.lowered();
+        if lower(prog, prog.vlen_bits).ops != low.ops {
+            self.find(
+                FindingClass::FusedOp,
+                None,
+                "cached lowering does not reproduce from the trace".to_string(),
+            );
+        }
+        let mut cursor = 0usize;
+        for (oi, op) in low.ops.iter().enumerate() {
+            let took = match op {
+                MicroOp::Interp { lo, hi } => {
+                    if *lo as usize != cursor || hi < lo || *hi as usize > prog.trace.len() {
+                        self.find(
+                            FindingClass::FusedOp,
+                            Some(oi),
+                            format!(
+                                "interp range [{lo}, {hi}) does not continue the tiling at \
+                                 {cursor}"
+                            ),
+                        );
+                    }
+                    cursor = (*hi as usize).max(cursor);
+                    continue;
+                }
+                MicroOp::Fill { rd, addr, len, .. } => {
+                    self.fused_reg(oi, *rd, "fill");
+                    self.fused_bounds(oi, *addr, *len, "fill");
+                    3
+                }
+                MicroOp::Copy { rs, src, rd, dst, len, .. } => {
+                    self.fused_reg(oi, *rs, "copy");
+                    self.fused_reg(oi, *rd, "copy");
+                    self.fused_bounds(oi, *src, *len, "copy source");
+                    self.fused_bounds(oi, *dst, *len, "copy destination");
+                    4
+                }
+                MicroOp::LoadUnit { rd, addr, len, .. } => {
+                    self.fused_reg(oi, *rd, "unit load");
+                    self.fused_bounds(oi, *addr, *len, "unit load");
+                    2
+                }
+                MicroOp::StoreUnit { rd, addr, len, .. } => {
+                    self.fused_reg(oi, *rd, "unit store");
+                    self.fused_bounds(oi, *addr, *len, "unit store");
+                    2
+                }
+                MicroOp::PlaneMac { t1, tmp, taps, .. } => {
+                    self.fused_reg(oi, *t1, "plane-mac");
+                    for tap in taps.iter() {
+                        if tap.base == *t1 {
+                            self.find(
+                                FindingClass::FusedOp,
+                                Some(oi),
+                                format!(
+                                    "plane-mac tap base x{} aliases the scratch load \
+                                     register",
+                                    tap.base.0
+                                ),
+                            );
+                        }
+                        if tap.w == *tmp || tap.acc == *tmp {
+                            self.find(
+                                FindingClass::FusedOp,
+                                Some(oi),
+                                format!("plane-mac tap aliases scratch v{}", tmp.0),
+                            );
+                        }
+                        if tap.acc == tap.w {
+                            self.find(
+                                FindingClass::FusedOp,
+                                Some(oi),
+                                format!(
+                                    "plane-mac accumulator v{} aliases its weight plane — \
+                                     the elided scratch write would be observable",
+                                    tap.acc.0
+                                ),
+                            );
+                        }
+                    }
+                    4 * taps.len()
+                }
+                MicroOp::BitpackFast { bit, vl, eb, .. } => {
+                    if *vl > prog.vlen_bits
+                        || (*bit as usize) >= eb * 8
+                        || prog.vlen_bits / 8 > 512
+                    {
+                        self.find(
+                            FindingClass::FusedOp,
+                            Some(oi),
+                            format!("bitpack-fast outside its envelope (vl {vl}, bit {bit})"),
+                        );
+                    }
+                    1
+                }
+                MicroOp::MaccByte { a0, addr, .. } => {
+                    self.fused_reg(oi, *a0, "macc-byte");
+                    self.fused_bounds(oi, *addr, 1, "macc-byte operand");
+                    3
+                }
+                MicroOp::RowSum(rs) => {
+                    if rs.n > 1024 {
+                        self.find(
+                            FindingClass::FusedOp,
+                            Some(oi),
+                            format!("row-sum n {} exceeds the 1024-byte kernel buffer", rs.n),
+                        );
+                    }
+                    self.fused_reg(oi, rs.a0, "row-sum");
+                    self.fused_reg(oi, rs.t1, "row-sum");
+                    self.fused_bounds(oi, rs.src, rs.n, "row-sum source");
+                    self.fused_bounds(oi, rs.dst, 4, "row-sum destination");
+                    // The fused kernel elides vacc's zero-write: element 0 of
+                    // vacc must overlap neither the loaded bytes nor the
+                    // widened u32 span.
+                    let vb = self.vreg_bytes;
+                    let (l0, z0, av) =
+                        (rs.vload.0 as usize * vb, rs.vz.0 as usize * vb, rs.vacc.0 as usize * vb);
+                    let disjoint = |lo: usize, len: usize| av + 4 <= lo || lo + len <= av;
+                    if !(disjoint(l0, rs.n) && disjoint(z0, 4 * rs.n)) {
+                        self.find(
+                            FindingClass::FusedOp,
+                            Some(oi),
+                            format!(
+                                "row-sum accumulator v{} span overlaps its operand spans",
+                                rs.vacc.0
+                            ),
+                        );
+                    }
+                    10
+                }
+            };
+            cursor += took;
+        }
+        if cursor != prog.trace.len() {
+            self.find(
+                FindingClass::FusedOp,
+                None,
+                format!(
+                    "lowering tiles {cursor} of {} trace instructions",
+                    prog.trace.len()
+                ),
+            );
+        }
+        low.ops.len()
+    }
+
+    fn fused_reg(&mut self, oi: usize, r: Reg, what: &str) {
+        if r.0 == 0 {
+            self.find(
+                FindingClass::FusedOp,
+                Some(oi),
+                format!("{what} micro-op addresses through x0"),
+            );
+        }
+    }
+
+    fn fused_bounds(&mut self, oi: usize, addr: u64, len: usize, what: &str) {
+        let base = self.prog.base;
+        let end = base + self.prog.mem_len;
+        if addr < base || addr > end || len as u64 > end - addr {
+            self.find(
+                FindingClass::FusedOp,
+                Some(oi),
+                format!("{what} at {addr:#x}+{len} outside the program footprint"),
+            );
+        }
+    }
+}
+
+/// Statically fold a scalar ALU op over abstract values. Only the ops the
+/// emitters use for address-free arithmetic fold; everything else yields an
+/// opaque (but defined, when both inputs are) result.
+fn fold_alu(op: AluOp, a: SVal, b: SVal) -> SVal {
+    let def = a.def && b.def;
+    let prov = Prov::combine(a.prov, b.prov);
+    let val = match (a.val, b.val) {
+        (Some(x), Some(y)) => match op {
+            AluOp::Add => Some(x.wrapping_add(y)),
+            AluOp::Sub => Some(x.wrapping_sub(y)),
+            AluOp::And => Some(x & y),
+            AluOp::Or => Some(x | y),
+            AluOp::Xor => Some(x ^ y),
+            AluOp::Mul => Some(x.wrapping_mul(y)),
+            _ => None,
+        },
+        _ => None,
+    };
+    SVal { def, val, prov }
+}
+
+/// Run the full verification pass over `prog`. Never panics: every check
+/// lands in the report as a [`Finding`]. Deterministic — a pure function of
+/// the artifact.
+pub fn verify(prog: &CompiledProgram) -> VerifyReport {
+    let mut w = Walker::new(prog);
+    w.check_segments();
+    w.walk_trace();
+    w.check_output_coverage();
+    let checked_ops = w.check_lowered();
+    let single_core = match prog.shard {
+        Some((_, n)) => n == 1,
+        None => true,
+    };
+    let batch_safe = w.findings.is_empty() && w.suppressed == 0 && !w.image_written && single_core;
+    VerifyReport {
+        findings: w.findings,
+        suppressed: w.suppressed,
+        batch_safe,
+        checked_instrs: prog.trace.len(),
+        checked_ops,
+    }
+}
+
+/// Hand-corruption helpers for the negative-case test corpus
+/// (`rust/tests/verify_negative.rs`). Hidden from docs: these construct
+/// deliberately broken artifacts and exist only so tests outside the crate
+/// can build them without exposing `CompiledProgram`'s internals.
+#[doc(hidden)]
+pub mod corrupt {
+    use super::super::lowered::{lower, MicroOp};
+    use super::super::CompiledProgram;
+    use crate::isa::instr::Instr;
+
+    /// Field-by-field duplicate with fresh lazy caches (`CompiledProgram`
+    /// deliberately does not implement `Clone`; corruption needs a scratch
+    /// copy the pristine artifact never sees).
+    pub fn dup(p: &CompiledProgram) -> CompiledProgram {
+        CompiledProgram {
+            net_fp: p.net_fp,
+            machine_fp: p.machine_fp,
+            model_name: p.model_name.clone(),
+            machine_name: p.machine_name.clone(),
+            schedule: p.schedule.clone(),
+            base: p.base,
+            mem_len: p.mem_len,
+            trace: p.trace.clone(),
+            reloc: p.reloc.clone(),
+            image: p.image.clone(),
+            input: p.input.clone(),
+            out_addr: p.out_addr,
+            out_elems: p.out_elems,
+            layers: p.layers.clone(),
+            shard: p.shard,
+            shard_segs: p.shard_segs.clone(),
+            vlen_bits: p.vlen_bits,
+            lowered: std::sync::OnceLock::new(),
+            verify: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Drop a middle relocation-table entry: the `li` it covered still holds
+    /// an address, but the verifier can no longer prove it re-bases →
+    /// `Relocation`.
+    pub fn drop_reloc_entry(p: &CompiledProgram) -> Option<CompiledProgram> {
+        if p.reloc.len() < 3 {
+            return None;
+        }
+        let mut c = dup(p);
+        c.reloc.remove(c.reloc.len() / 2);
+        Some(c)
+    }
+
+    /// Point the output segment into the largest read-only image chunk
+    /// (weights): harvest would return image bytes → `Segments`.
+    pub fn overlap_output_into_image(p: &CompiledProgram) -> Option<CompiledProgram> {
+        let (addr, _) = ro_image_chunk(p)?;
+        let mut c = dup(p);
+        c.out_addr = addr;
+        Some(c)
+    }
+
+    /// Truncate the largest read-only image chunk to half: the trace now
+    /// reads weight bytes the image never defined → `UninitRead`.
+    pub fn truncate_image(p: &CompiledProgram) -> Option<CompiledProgram> {
+        let (addr, len) = ro_image_chunk(p)?;
+        if len < 2 {
+            return None;
+        }
+        let mut c = dup(p);
+        for (a, bytes) in &mut c.image {
+            if *a == addr && bytes.len() == len {
+                bytes.truncate(len / 2);
+                break;
+            }
+        }
+        Some(c)
+    }
+
+    /// Alias a lowered `PlaneMac` tap's accumulator onto its weight plane —
+    /// the fusion side condition the lowering matcher enforces → `FusedOp`.
+    /// `None` when the schedule emits no bit-serial MAC (int8, fp32).
+    pub fn alias_plane_mac_acc(p: &CompiledProgram) -> Option<CompiledProgram> {
+        let c = dup(p);
+        let mut fresh = lower(&c, c.vlen_bits);
+        let mac = fresh.ops.iter_mut().find_map(|op| match op {
+            MicroOp::PlaneMac { taps, .. } => Some(taps),
+            _ => None,
+        })?;
+        mac[0].w = mac[0].acc;
+        let _ = c.lowered.set(fresh);
+        Some(c)
+    }
+
+    /// Remove the first `vsetvli` that governs at least one vector
+    /// instruction: that instruction now executes with no vector state →
+    /// `VState`. Relocation indices and layer trace ends shift down with the
+    /// removed instruction so the rest of the artifact stays consistent.
+    pub fn skip_vsetvli(p: &CompiledProgram) -> Option<CompiledProgram> {
+        let mut idx = None;
+        'outer: for (i, instr) in p.trace.iter().enumerate() {
+            if !matches!(instr, Instr::VSetVli { .. }) {
+                continue;
+            }
+            for later in &p.trace[i + 1..] {
+                match later {
+                    Instr::VSetVli { .. } => continue 'outer,
+                    Instr::Vector(_) => {
+                        idx = Some(i);
+                        break 'outer;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let idx = idx?;
+        let mut c = dup(p);
+        c.trace.remove(idx);
+        for r in &mut c.reloc {
+            if *r as usize > idx {
+                *r -= 1;
+            }
+        }
+        for m in &mut c.layers {
+            if m.trace_end > idx {
+                m.trace_end -= 1;
+            }
+        }
+        Some(c)
+    }
+
+    /// Largest image chunk fully outside the input segment (weights or
+    /// requant tables — bytes the trace reads but never writes).
+    fn ro_image_chunk(p: &CompiledProgram) -> Option<(u64, usize)> {
+        let in_lo = p.input.addr;
+        let in_hi = in_lo + p.input.elems as u64 * if p.input.fp32 { 4 } else { 1 };
+        p.image
+            .iter()
+            .filter(|(a, b)| *a + b.len() as u64 <= in_lo || *a >= in_hi)
+            .max_by_key(|(_, b)| b.len())
+            .map(|(a, b)| (*a, b.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MachineConfig;
+    use crate::coordinator::demo_net;
+    use crate::nn::model::{Precision, PrecisionMap, ShardPlan};
+    use crate::program::{compile, compile_shard};
+
+    fn w2a2() -> PrecisionMap {
+        PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true })
+    }
+
+    #[test]
+    fn pristine_program_verifies_clean_and_batch_safe() {
+        let prog = compile(&demo_net(), &MachineConfig::quark(4), &w2a2()).unwrap();
+        let rep = verify(&prog);
+        assert!(rep.ok(), "pristine demo-net program must verify:\n{rep}");
+        assert!(rep.batch_safe(), "single-core program must prove batch safety");
+        assert_eq!(rep.checked_instrs(), prog.trace_len());
+        assert!(rep.checked_ops() > 0);
+        assert!(format!("{rep}").contains("PASS"));
+    }
+
+    #[test]
+    fn verify_report_is_cached_on_the_program() {
+        let prog = compile(&demo_net(), &MachineConfig::quark(4), &w2a2()).unwrap();
+        let a: *const VerifyReport = prog.verify_report();
+        let b: *const VerifyReport = prog.verify_report();
+        assert_eq!(a, b, "OnceLock must cache the report");
+        assert!(prog.verify_report().ok());
+    }
+
+    #[test]
+    fn shard_programs_verify_but_do_not_claim_batch_safety() {
+        let net = demo_net();
+        let machine = MachineConfig::quark(4);
+        let sched = w2a2();
+        let plan = ShardPlan::derive(&net, 2).unwrap();
+        for shard in 0..2 {
+            let prog = compile_shard(&net, &machine, &sched, &plan, shard).unwrap();
+            let rep = verify(&prog);
+            assert!(rep.ok(), "shard {shard} must verify:\n{rep}");
+            assert!(
+                !rep.batch_safe(),
+                "inter-layer gathers are host effects; the batch proof must not extend"
+            );
+        }
+    }
+
+    #[test]
+    fn corruptions_are_rejected_with_the_right_class() {
+        let prog = compile(&demo_net(), &MachineConfig::quark(4), &w2a2()).unwrap();
+        let cases: [(&str, Option<CompiledProgram>, FindingClass); 5] = [
+            ("drop-reloc", corrupt::drop_reloc_entry(&prog), FindingClass::Relocation),
+            (
+                "overlap-output",
+                corrupt::overlap_output_into_image(&prog),
+                FindingClass::Segments,
+            ),
+            ("alias-plane-mac", corrupt::alias_plane_mac_acc(&prog), FindingClass::FusedOp),
+            ("truncate-image", corrupt::truncate_image(&prog), FindingClass::UninitRead),
+            ("skip-vsetvli", corrupt::skip_vsetvli(&prog), FindingClass::VState),
+        ];
+        for (name, corrupted, class) in cases {
+            let c = corrupted.unwrap_or_else(|| panic!("{name}: corruption not applicable"));
+            let rep = verify(&c);
+            assert!(!rep.ok(), "{name}: corruption must be rejected");
+            assert!(rep.has(class), "{name}: expected a {class} finding, got:\n{rep}");
+            assert!(!rep.batch_safe(), "{name}: a failing artifact is never batch-safe");
+        }
+    }
+
+    #[test]
+    fn byte_set_word_operations() {
+        let mut s = ByteSet::new(200);
+        assert_eq!(s.first_missing(0, 200), Some(0));
+        s.set(3, 70); // crosses a word boundary
+        assert!(s.any_set(0, 10));
+        assert!(!s.any_set(0, 3));
+        assert_eq!(s.first_missing(3, 70), None);
+        assert_eq!(s.first_missing(0, 200), Some(0));
+        assert_eq!(s.first_missing(3, 100), Some(73));
+        s.set(0, 200); // full-range, exercises the 64-bit mask path
+        assert_eq!(s.first_missing(0, 200), None);
+        assert!(s.any_set(199, 1));
+    }
+}

@@ -3,6 +3,15 @@
 //! This is the "does the hardware compute the right numbers" half of the
 //! simulator; `timing.rs` is the "how many cycles" half. Both consume the
 //! same dynamic instruction stream via [`crate::sim::Sim`].
+//!
+//! The static program verifier (`crate::program::verify`) mirrors this
+//! executor's read/write semantics instruction by instruction — `vsetvli`'s
+//! `vl = min(avl, vlmax)`, whole-register vs `vl`-bounded vector writes,
+//! `vbitpack`'s define-on-use of its destination, the byte extents of
+//! unit-stride and strided memory ops. A semantic change here (a new
+//! instruction, a widened write set) must land in the verifier's walker
+//! too, or zoo artifacts will stop verifying — `repro verify` and
+//! `rust/tests/verify_negative.rs` are the tripwires.
 
 use crate::arch::MachineConfig;
 use crate::isa::instr::{AluOp, FAluOp, Instr, ScalarOp, VIOp, VMemKind, VOp};

@@ -1,0 +1,162 @@
+//! Negative corpus for the static program verifier
+//! (`quark::program::verify`): hand-corrupted artifacts must be rejected
+//! with the right finding class, while the pristine artifact passes for
+//! every zoo entry × {w2a2, w1a1, mixed, int8}. The corruption helpers
+//! live in `program::verify::corrupt` so this suite never needs
+//! `CompiledProgram`'s internals.
+//!
+//! The suite also holds the batching-fallback proof: an artifact the
+//! verifier rejects still replays bit-exactly through
+//! `Sim::execute_lowered_batch`, because without a batch-safety proof the
+//! executor keeps its per-element dynamic isolation check in every build
+//! profile.
+//!
+//! Deep ResNets run as truncated heads for `Full`-mode affordability — the
+//! same trade `rust/tests/batching.rs` makes.
+
+use quark::arch::MachineConfig;
+use quark::nn::model::{Precision, PrecisionMap, ShardPlan};
+use quark::nn::{zoo, NetGraph};
+use quark::program::verify::corrupt;
+use quark::program::{compile, compile_shard, CompiledProgram, FindingClass};
+use quark::sim::Sim;
+
+const W2A2: Precision = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
+const W1A1: Precision = Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true };
+
+/// Input image `k`: a distinct deterministic pattern per `k` (matches the
+/// batching suite, so a fallback divergence here isolates the verifier
+/// gate, not the replay).
+fn test_input(k: usize) -> Vec<u8> {
+    (0..32 * 32 * 3).map(|i| ((i * 11 + 5 + k * 37) % 251) as u8).collect()
+}
+
+/// Every registered model at a `Full`-mode-affordable profile.
+fn affordable_zoo() -> Vec<NetGraph> {
+    zoo::entries()
+        .iter()
+        .map(|e| match e.name {
+            "resnet18-cifar" => zoo::model_head("resnet18-cifar@10", 4).unwrap(),
+            "resnet34-cifar" => zoo::model_head("resnet34-cifar@10", 3).unwrap(),
+            name => zoo::model(&format!("{name}@10")).unwrap(),
+        })
+        .collect()
+}
+
+/// The acceptance schedule matrix: uniform w2a2 / w1a1 / int8 plus the
+/// registry's mixed schedule for this graph.
+fn schedules(net: &NetGraph) -> Vec<(&'static str, PrecisionMap)> {
+    vec![
+        ("w2a2", PrecisionMap::uniform(W2A2)),
+        ("w1a1", PrecisionMap::uniform(W1A1)),
+        ("mixed", zoo::mixed_schedule(net)),
+        ("int8", PrecisionMap::uniform(Precision::Int8)),
+    ]
+}
+
+#[test]
+fn pristine_artifacts_pass_for_every_zoo_entry_and_schedule() {
+    for net in affordable_zoo() {
+        for (label, sched) in schedules(&net) {
+            let ctx = format!("{} under {label}", net.name());
+            let prog = compile(&net, &MachineConfig::quark(4), &sched)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let rep = prog.verify_report();
+            assert!(rep.ok(), "{ctx}: pristine artifact must verify clean:\n{rep}");
+            assert!(rep.batch_safe(), "{ctx}: single-core artifact must prove batch safety");
+            assert!(rep.checked_instrs() > 0 && rep.checked_ops() > 0, "{ctx}: empty audit");
+        }
+    }
+}
+
+#[test]
+fn pristine_shard_artifacts_pass_but_never_claim_batch_safety() {
+    let net = zoo::model_head("quarknet@10", 4).unwrap();
+    let machine = MachineConfig::quark(4);
+    let sched = PrecisionMap::uniform(W2A2);
+    let plan = ShardPlan::derive(&net, 2).unwrap();
+    for shard in 0..2 {
+        let prog = compile_shard(&net, &machine, &sched, &plan, shard).unwrap();
+        let rep = prog.verify_report();
+        assert!(rep.ok(), "shard {shard}: pristine shard must verify clean:\n{rep}");
+        assert!(
+            !rep.batch_safe(),
+            "shard {shard}: inter-layer gathers are host effects — the proof must not extend"
+        );
+    }
+}
+
+#[test]
+fn corruptions_are_rejected_with_the_right_class() {
+    use std::collections::HashSet;
+    let net = zoo::model("tiny@10").unwrap();
+    let machine = MachineConfig::quark(4);
+    let mut classes_hit: HashSet<&'static str> = HashSet::new();
+    for (label, sched) in schedules(&net) {
+        let prog = compile(&net, &machine, &sched).unwrap();
+        assert!(prog.verify_report().ok(), "{label}: corpus baseline must be pristine");
+        // Each corruption helper returns `None` when the schedule has no
+        // instance of the construct (e.g. no PlaneMac under int8).
+        let cases: Vec<(&'static str, Option<CompiledProgram>, FindingClass)> = vec![
+            ("drop-reloc-entry", corrupt::drop_reloc_entry(&prog), FindingClass::Relocation),
+            (
+                "overlap-output-into-image",
+                corrupt::overlap_output_into_image(&prog),
+                FindingClass::Segments,
+            ),
+            ("truncate-init-image", corrupt::truncate_image(&prog), FindingClass::UninitRead),
+            ("alias-planemac-acc", corrupt::alias_plane_mac_acc(&prog), FindingClass::FusedOp),
+            ("skip-vsetvli", corrupt::skip_vsetvli(&prog), FindingClass::VState),
+        ];
+        let mut applied = 0;
+        for (name, bad, class) in cases {
+            let Some(bad) = bad else { continue };
+            applied += 1;
+            classes_hit.insert(name);
+            let rep = bad.verify_report();
+            assert!(!rep.ok(), "{label}/{name}: corruption must be rejected:\n{rep}");
+            assert!(
+                rep.has(class),
+                "{label}/{name}: expected a {class} finding, got:\n{rep}"
+            );
+            assert!(!rep.batch_safe(), "{label}/{name}: a failing artifact is never proven");
+        }
+        assert!(applied >= 4, "{label}: only {applied} corruption(s) applicable");
+    }
+    assert_eq!(classes_hit.len(), 5, "all five corruption classes must fire: {classes_hit:?}");
+}
+
+#[test]
+fn unverifiable_artifacts_still_batch_correctly_via_the_dynamic_check() {
+    let net = zoo::model("tiny@10").unwrap();
+    let machine = MachineConfig::quark(4);
+    let sched = PrecisionMap::uniform(W2A2);
+    let prog = compile(&net, &machine, &sched).unwrap();
+    // Dropping a relocation entry fails verification but leaves execution
+    // at the compile-time base untouched (the entry is only consulted when
+    // re-basing) — exactly the shape of artifact the fallback must cover.
+    let bad = corrupt::drop_reloc_entry(&prog).expect("tiny carries ≥3 relocation entries");
+    assert!(!bad.verify_report().ok(), "corruption must invalidate the artifact");
+    assert!(!bad.verify_report().batch_safe(), "no proof → per-element dynamic check");
+
+    let inputs: Vec<Vec<u8>> = (0..4).map(test_input).collect();
+    let views: Vec<&[u8]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+    // Reference: independent single-request replays of the pristine artifact.
+    let refs: Vec<Vec<u8>> = inputs
+        .iter()
+        .map(|input| {
+            let mut sim = Sim::new(machine.clone());
+            let base = sim.alloc(prog.mem_len());
+            let run = sim.execute_lowered(&prog, base, Some(input));
+            sim.read_u8s(run.out_addr, run.out_elems)
+        })
+        .collect();
+
+    // Batched replay of the unverifiable artifact at the compile-time base:
+    // the always-on isolation check guards it, and the logits stay exact.
+    let mut sim = Sim::new(machine.clone());
+    let base = sim.alloc(bad.mem_len());
+    let batch = sim.execute_lowered_batch(&bad, base, &views);
+    assert_eq!(batch.outputs, refs, "fallback-guarded batch diverged from pristine singles");
+}
