@@ -10,6 +10,8 @@
 //! repro verify [--net <spec>] [--prec <spec>] [--shards N]
 //!              [--machine <ara-4l|quark-4l|quark-8l>] [--fast]
 //! repro cluster [--net <spec>] [--shards 1,2,4,8] [--fast]
+//! repro profile [--net <spec>] [--prec <spec|mixed>] [--shards N]
+//!               [--machine <ara-4l|quark-4l|quark-8l>] [--fast] [--out <path>]
 //! repro models
 //! repro crosscheck [--artifact artifacts/qgemm.hlo.txt] [--seed S]
 //! repro serve [--addr 127.0.0.1:7070] [--workers N] [--batch B] [--queue Q]
@@ -17,6 +19,7 @@
 //!             [--models <spec,spec,…>] [--fast]
 //!             [--precision <spec>]      e.g. --precision "w2a2;c1=int8;fc=int8"
 //!             [--degrade <spec>] [--degrade-depth N]
+//!             [--trace <path>]
 //! repro phys
 //! ```
 //!
@@ -62,6 +65,15 @@
 //! submissions that pin neither `prec=` nor `shards=` are admitted under
 //! the cheaper fallback schedule instead of answering `BUSY` — their
 //! replies carry `degraded=1` and STATS counts them separately.
+//!
+//! `repro profile` is the cycle-attribution profiler ([`crate::obs`]): one
+//! timed replay of the chosen deployment, attributed per layer and per
+//! lowered micro-op class, cross-checked against an independent replay
+//! (totals must agree exactly), printed as tables and optionally exported
+//! as Chrome trace-event JSON with `--out` (load in Perfetto or
+//! `chrome://tracing`). `serve --trace <path>` arms the host-side
+//! counterpart: request-lifecycle spans recorded per worker, drained to
+//! `<path>` by the `TRACE` wire command (`docs/observability.md`).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -143,6 +155,7 @@ pub fn main() -> Result<()> {
             Ok(())
         }
         Some("crosscheck") => cmd_crosscheck(&flags),
+        Some("profile") => cmd_profile(&flags),
         Some("serve") => cmd_serve(&flags),
         Some("phys") => {
             let reports = report::table2::generate();
@@ -152,7 +165,7 @@ pub fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: repro <report|simulate|program|verify|cluster|models|crosscheck|serve|phys> …\n\
+                "usage: repro <report|simulate|program|verify|cluster|profile|models|crosscheck|serve|phys> …\n\
                  see rust/src/cli.rs or README.md for full syntax"
             );
             Ok(())
@@ -519,6 +532,103 @@ fn cmd_cluster(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Cycle-attribution profiler: compile one deployment, attribute one timed
+/// replay per layer and per lowered micro-op class ([`crate::obs`]),
+/// cross-check the attribution against an independent replay (exact
+/// equality, layer for layer), print the tables, and optionally export a
+/// Chrome trace (`--out`).
+fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::cluster::{cluster_timing, compile_cluster};
+    use crate::obs;
+    use crate::sim::{Sim, SimMode};
+
+    let machine =
+        machine_by_name(flags.get("machine").map(|s| s.as_str()).unwrap_or("quark-4l"))?;
+    let net = net_from_flags(flags)?;
+    let (label, schedule) = match flags.get("prec").map(|s| s.as_str()).unwrap_or("w2a2") {
+        "mixed" => ("mixed".to_string(), zoo::mixed_schedule(&net)),
+        spec => match PrecisionMap::parse(spec) {
+            Ok(m) => (spec.to_string(), m),
+            Err(e) => bail!("bad --prec: {e}"),
+        },
+    };
+    let shards: usize = match flags.get("shards") {
+        Some(s) => s.parse().with_context(|| format!("bad --shards {s:?}"))?,
+        None => 1,
+    };
+    if let Err(e) = schedule
+        .validate(&net)
+        .and_then(|_| schedule.validate_machine(&net, &machine))
+        .and_then(|_| crate::coordinator::validate_shards(shards, &schedule, &net))
+    {
+        bail!("cannot deploy {} · {label} · shards={shards}: {e}", net.name());
+    }
+    eprintln!("[profile] {} · {label} · shards={shards} on {}…", net.name(), machine.name);
+
+    let (md, sims) = if shards == 1 {
+        let prog = match crate::program::compile(&net, &machine, &schedule) {
+            Ok(p) => p,
+            Err(e) => bail!("compile failed: {e}"),
+        };
+        let profile = obs::profile_on_fresh_core(&prog, &machine);
+        // Independent cross-check: a plain timed replay must agree with the
+        // attribution layer for layer (and therefore in total).
+        let mut sim = Sim::new(machine.clone());
+        sim.set_mode(SimMode::TimingOnly);
+        let base = sim.alloc(prog.mem_len());
+        let run = sim.execute(&prog, base);
+        if run.cycles != profile.total_cycles {
+            bail!(
+                "attribution diverged: replay {} cycles, profile {}",
+                run.cycles,
+                profile.total_cycles
+            );
+        }
+        for (r, l) in run.reports.iter().zip(&profile.layers) {
+            if r.run.cycles != l.cycles {
+                bail!(
+                    "attribution diverged at layer {}: replay {} cycles, profile {}",
+                    r.name,
+                    r.run.cycles,
+                    l.cycles
+                );
+            }
+        }
+        println!("per-layer attribution == timed replay, layer for layer ✓");
+        report::write_report("profile.csv", &report::profile::layers_csv(&profile))?;
+        (report::profile::markdown(&profile), vec![profile])
+    } else {
+        let cluster = match compile_cluster(&net, &machine, &schedule, shards) {
+            Ok(c) => c,
+            Err(e) => bail!("cluster compile failed: {e}"),
+        };
+        let profile = obs::profile_cluster(&cluster, &machine);
+        // Independent cross-check against the serving-path cluster model.
+        let timing = cluster_timing(&cluster, &machine);
+        if timing.total_cycles() != profile.timing.total_cycles() {
+            bail!(
+                "cluster attribution diverged: timing model {} cycles, profile {}",
+                timing.total_cycles(),
+                profile.timing.total_cycles()
+            );
+        }
+        println!("cluster attribution == cluster timing model ✓");
+        let sims = profile.shards.clone();
+        (report::profile::cluster_markdown(&profile), sims)
+    };
+    println!("{md}");
+    report::write_report("profile.md", &md)?;
+    if let Some(path) = flags.get("out") {
+        let json = obs::export::chrome_trace_json(&[], &sims);
+        if let Err(e) = obs::export::validate_chrome_trace(&json) {
+            bail!("internal: exported trace failed validation: {e}");
+        }
+        std::fs::write(path, &json)?;
+        println!("chrome trace → {path}");
+    }
+    Ok(())
+}
+
 fn cmd_crosscheck(flags: &HashMap<String, String>) -> Result<()> {
     let artifact = flags
         .get("artifact")
@@ -619,8 +729,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         }
     }
     cfg.degrade = degrade.map(|schedule| DegradePolicy { schedule, depth: degrade_depth });
+    let trace = flags.get("trace").map(std::path::PathBuf::from);
     let coord = Arc::new(Coordinator::start(cfg));
-    server::serve(coord, &addr)
+    server::serve_traced(coord, &addr, trace)
 }
 
 #[cfg(test)]

@@ -196,7 +196,7 @@ impl ClusterTiming {
 /// Simulated-memory arena for one shard core: the program's footprint plus
 /// slack for the replay-base allocation, floored so small programs don't
 /// thrash reallocation.
-fn shard_mem_bytes(prog: &CompiledProgram) -> usize {
+pub(crate) fn shard_mem_bytes(prog: &CompiledProgram) -> usize {
     ((prog.mem_len() as usize) + (1 << 20)).max(16 << 20)
 }
 
@@ -224,8 +224,10 @@ pub fn cluster_timing(cluster: &ClusterProgram, machine: &MachineConfig) -> Clus
     aggregate_timing(cluster, machine, &per_shard)
 }
 
-/// Fold per-shard per-layer cycles into the cluster model.
-fn aggregate_timing(
+/// Fold per-shard per-layer cycles into the cluster model. Shared with the
+/// cycle attributor ([`crate::obs::profile::profile_cluster`]), whose
+/// aggregated timeline must equal this one exactly.
+pub(crate) fn aggregate_timing(
     cluster: &ClusterProgram,
     machine: &MachineConfig,
     per_shard: &[Vec<u64>],

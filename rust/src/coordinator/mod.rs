@@ -91,13 +91,14 @@ pub mod server;
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::arch::MachineConfig;
 use crate::cluster::{cluster_timing, ClusterCores, ClusterProgram};
 use crate::nn::model::{Precision, PrecisionMap, ShardPlan};
 use crate::nn::{zoo, NetGraph};
+use crate::obs;
 use crate::program::{compile, compile_shard, CompiledProgram};
 use crate::sim::{Sim, SimMode};
 
@@ -431,24 +432,35 @@ impl ProgramCache {
         self.entries.get(key).cloned()
     }
 
-    fn insert(&mut self, key: ProgKey, prog: Arc<CompiledProgram>, pinned: bool, cap: usize) {
+    /// Returns whether the insert evicted a resident entry (the tracing
+    /// hooks turn that into an `Evict` event).
+    fn insert(
+        &mut self,
+        key: ProgKey,
+        prog: Arc<CompiledProgram>,
+        pinned: bool,
+        cap: usize,
+    ) -> bool {
         if self.entries.contains_key(&key) {
-            return; // concurrent miss already inserted the identical artifact
+            return false; // concurrent miss already inserted the identical artifact
         }
         if pinned {
             self.entries.insert(key, prog);
-            return;
+            return false;
         }
+        let mut evicted = false;
         while self.entries.len() >= cap {
             match self.order.pop_front() {
                 Some(old) => {
                     self.entries.remove(&old);
+                    evicted = true;
                 }
-                None => return, // everything resident is pinned; don't insert
+                None => return evicted, // everything resident is pinned; don't insert
             }
         }
         self.order.push_back(key.clone());
         self.entries.insert(key, prog);
+        evicted
     }
 
     #[cfg(test)]
@@ -490,6 +502,14 @@ impl LatWindow {
             let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
             sorted[idx.min(sorted.len() - 1)]
         })
+    }
+
+    /// Smallest and largest sample in the window — the outliers the
+    /// percentile view truncates past p99. `(0, 0)` when no samples yet.
+    fn min_max(&self) -> (u64, u64) {
+        let mut iter = self.samples.iter();
+        let Some(&first) = iter.next() else { return (0, 0) };
+        iter.fold((first, first), |(lo, hi), &s| (lo.min(s), hi.max(s)))
     }
 }
 
@@ -548,11 +568,19 @@ pub struct CoordStats {
     /// `W`·1.0). Trailing never-used positions are trimmed (empty until a
     /// `shards > 1` request runs functionally).
     pub shard_util: Vec<f64>,
+    /// Milliseconds since [`Coordinator::start`].
+    pub uptime_ms: u64,
+    /// Host-trace events dropped on full or contended rings
+    /// ([`crate::obs::Tracer::dropped`]); 0 while tracing is off.
+    pub trace_dropped: u64,
     /// End-to-end (queue + service) latency percentiles in µs over the
-    /// most recent `LAT_WINDOW` responses.
+    /// most recent `LAT_WINDOW` responses, flanked by the window's min/max
+    /// (the outliers the percentile view truncates past p99).
+    pub min_us: u64,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    pub max_us: u64,
     /// Log₂ histogram of queue wait over dequeued requests (served,
     /// degraded, and expired): bucket 0 counts waits under 1 ms, bucket `i`
     /// waits in `[2^(i−1), 2^i)` ms, the last of the [`QUEUE_AGE_BUCKETS`]
@@ -562,17 +590,34 @@ pub struct CoordStats {
     /// aggregate p50/p95/p99), in deployment order, each over that model's
     /// most recent `LAT_WINDOW` responses.
     pub slo_by_model: Vec<ModelSlo>,
+    /// Per-model micro-op-class cycle mix of the deployment-default
+    /// programs ([`ModelClassMix`]), in deployment order.
+    pub class_mix: Vec<ModelClassMix>,
     /// Fraction of wall-clock each worker spent serving batches.
     pub utilization: Vec<f64>,
 }
 
 /// Per-model latency SLO snapshot ([`CoordStats::slo_by_model`]), µs.
+/// `min_us`/`max_us` are the window extremes around the percentiles.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelSlo {
     pub model: String,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    pub min_us: u64,
+    pub max_us: u64,
+}
+
+/// Per-model micro-op-class cycle mix ([`CoordStats::class_mix`]): the
+/// deployment-default single-core program's per-class cycle fractions, in
+/// [`crate::obs::OpClass::ALL`] order. `None` until the model's default
+/// timing has been resolved (first request), or when the deployment default
+/// is sharded (per-shard attribution lives in `repro profile --shards`).
+#[derive(Clone, Debug)]
+pub struct ModelClassMix {
+    pub model: String,
+    pub fractions: Option<[f64; obs::N_CLASSES]>,
 }
 
 /// Buckets of [`CoordStats::queue_age_hist`]: log₂ milliseconds, <1 ms up
@@ -671,6 +716,14 @@ struct Shared {
     /// Per-worker nanoseconds spent inside batch service.
     busy_ns: Vec<AtomicU64>,
     started: Instant,
+    /// Armed by [`Coordinator::enable_tracing`]; while unset (tracing off)
+    /// every hook on the serving path is one pointer check, no allocation.
+    tracer: OnceLock<Arc<obs::Tracer>>,
+    /// Cycle-attribution profile of each model's deployment-default
+    /// single-core program, captured when its timing is first resolved
+    /// (index-aligned with [`CoordinatorConfig::models`]). Feeds the STATS
+    /// class-mix rows and the serve trace's simulated-cycle tracks.
+    profiles: Mutex<Vec<Option<obs::ProgramProfile>>>,
 }
 
 /// The coordinator: owns the batcher + worker threads.
@@ -737,6 +790,8 @@ impl Coordinator {
             queue_age_hist: (0..QUEUE_AGE_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             busy_ns: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
             started: Instant::now(),
+            tracer: OnceLock::new(),
+            profiles: Mutex::new(vec![None; cfg.models.len()]),
         });
         let workers = (0..cfg.workers)
             .map(|wid| {
@@ -812,9 +867,18 @@ impl Coordinator {
         // degenerates to "no deadline" instead of panicking on overflow.
         let deadline =
             req.deadline_ms.and_then(|ms| enqueued.checked_add(Duration::from_millis(ms)));
+        let req_id = req.id;
         q.push_back(Queued { req, model_idx, enqueued, deadline, degraded, reply: tx });
         drop(q);
         self.shared.available.notify_one();
+        if let Some(tr) = self.shared.tracer.get() {
+            let mut ev = obs::TraceEvent::instant(obs::SpanKind::Submit, tr.us_at(enqueued))
+                .with_req(req_id);
+            if degraded {
+                ev = ev.with_label("degraded");
+            }
+            tr.record(tr.admission_track(), ev);
+        }
         Ok(rx)
     }
 
@@ -843,8 +907,10 @@ impl Coordinator {
     /// Snapshot of the serving metrics.
     pub fn stats(&self) -> CoordStats {
         let queue_depth = self.shared.queue.lock().unwrap().len();
-        let [p50_us, p95_us, p99_us] =
-            self.shared.latencies.lock().unwrap().percentiles([0.50, 0.95, 0.99]);
+        let ([p50_us, p95_us, p99_us], (min_us, max_us)) = {
+            let w = self.shared.latencies.lock().unwrap();
+            (w.percentiles([0.50, 0.95, 0.99]), w.min_max())
+        };
         let elapsed_ns = self.shared.started.elapsed().as_nanos().max(1) as f64;
         CoordStats {
             served: self.shared.served.load(Ordering::Relaxed),
@@ -889,9 +955,13 @@ impl Coordinator {
                 }
                 util
             },
+            uptime_ms: self.shared.started.elapsed().as_millis() as u64,
+            trace_dropped: self.shared.tracer.get().map_or(0, |t| t.dropped()),
+            min_us,
             p50_us,
             p95_us,
             p99_us,
+            max_us,
             queue_age_hist: self
                 .shared
                 .queue_age_hist
@@ -904,11 +974,31 @@ impl Coordinator {
                 .iter()
                 .zip(self.shared.model_latencies.iter())
                 .map(|(m, w)| {
-                    let [p50_us, p95_us, p99_us] =
-                        w.lock().unwrap().percentiles([0.50, 0.95, 0.99]);
-                    ModelSlo { model: m.name().to_string(), p50_us, p95_us, p99_us }
+                    let w = w.lock().unwrap();
+                    let [p50_us, p95_us, p99_us] = w.percentiles([0.50, 0.95, 0.99]);
+                    let (min_us, max_us) = w.min_max();
+                    ModelSlo {
+                        model: m.name().to_string(),
+                        p50_us,
+                        p95_us,
+                        p99_us,
+                        min_us,
+                        max_us,
+                    }
                 })
                 .collect(),
+            class_mix: {
+                let profiles = self.shared.profiles.lock().unwrap();
+                self.cfg
+                    .models
+                    .iter()
+                    .zip(profiles.iter())
+                    .map(|(m, p)| ModelClassMix {
+                        model: m.name().to_string(),
+                        fractions: p.as_ref().map(|p| p.class_fractions()),
+                    })
+                    .collect()
+            },
             utilization: self
                 .shared
                 .busy_ns
@@ -920,6 +1010,33 @@ impl Coordinator {
 
     pub fn config(&self) -> &CoordinatorConfig {
         &self.cfg
+    }
+
+    /// Arm request-lifecycle tracing ([`crate::obs`]). Idempotent: the
+    /// first call installs the tracer (one bounded ring per worker plus an
+    /// admission ring, [`obs::DEFAULT_RING_CAP`] events each); later calls
+    /// return the same instance. Until armed, every tracing hook on the
+    /// serving path is a single pointer check and allocates nothing.
+    pub fn enable_tracing(&self) -> Arc<obs::Tracer> {
+        self.shared
+            .tracer
+            .get_or_init(|| Arc::new(obs::Tracer::new(self.cfg.workers, obs::DEFAULT_RING_CAP)))
+            .clone()
+    }
+
+    /// The armed tracer, if [`Coordinator::enable_tracing`] has been
+    /// called; `None` means tracing is off.
+    pub fn tracer(&self) -> Option<Arc<obs::Tracer>> {
+        self.shared.tracer.get().cloned()
+    }
+
+    /// Cycle-attribution profiles of the deployment-default single-core
+    /// programs, per model in deployment order (`None` until that model's
+    /// default timing has been resolved, or when the deployment default is
+    /// sharded). The serve trace exports these as its simulated-cycle
+    /// tracks.
+    pub fn default_profiles(&self) -> Vec<Option<obs::ProgramProfile>> {
+        self.shared.profiles.lock().unwrap().clone()
     }
 
     /// Stop workers and join.
@@ -977,12 +1094,16 @@ impl WorkerCore {
     }
 
     /// One `TimingOnly` replay of `prog` (timing-cache-miss path — still
-    /// zero kernel emission when the program itself was cached).
-    fn timing_cycles(&mut self, prog: &CompiledProgram) -> u64 {
+    /// zero kernel emission when the program itself was cached), attributed
+    /// per layer and per micro-op class as it runs. The profile's
+    /// `total_cycles` is exactly what a plain timing replay would report
+    /// (`obs::profile` asserts the conservation), so the timing cache and
+    /// the attribution tables can never disagree.
+    fn profile(&mut self, prog: &CompiledProgram) -> obs::ProgramProfile {
         self.rewind();
         self.sim.set_mode(SimMode::TimingOnly);
         let base = self.sim.alloc(prog.mem_len());
-        self.sim.execute(prog, base).cycles
+        obs::profile_program(&mut self.sim, prog, base)
     }
 
     /// Batched functional replay of `prog`: the whole group of same-key
@@ -1060,6 +1181,9 @@ fn resolve_program(
     }
     shared.program_misses.fetch_add(1, Ordering::Relaxed);
     shared.compile_by_worker[wid].fetch_add(1, Ordering::Relaxed);
+    let tracer = shared.tracer.get();
+    let key_label =
+        tracer.map(|_| format!("{}|{}|{}", net.name(), sched.label(), key.deploy.shards));
     let t0 = Instant::now();
     let prog = Arc::new(if key.deploy.shards > 1 {
         let plan = ShardPlan::derive(net, key.deploy.shards)
@@ -1069,25 +1193,64 @@ fn resolve_program(
     } else {
         compile(net, &cfg.machine, sched).expect("schedule was validated at submission")
     });
-    shared.compile_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    let compile_dur = t0.elapsed();
+    shared.compile_ns.fetch_add(compile_dur.as_nanos() as u64, Ordering::Relaxed);
+    if let Some(tr) = tracer {
+        let ev = obs::TraceEvent::span(
+            obs::SpanKind::Compile,
+            tr.us_at(t0),
+            compile_dur.as_micros() as u64,
+        )
+        .with_label(key_label.clone().unwrap_or_default());
+        tr.record(wid, ev);
+    }
     if memoize {
         // Force the decode-once lowering before the entry becomes visible,
         // so warm replays never pay the lowering walk.
+        let lower_t0 = Instant::now();
         prog.lowered();
+        if let Some(tr) = tracer {
+            let ev = obs::TraceEvent::span(
+                obs::SpanKind::Lower,
+                tr.us_at(lower_t0),
+                lower_t0.elapsed().as_micros() as u64,
+            )
+            .with_label(key_label.clone().unwrap_or_default());
+            tr.record(wid, ev);
+        }
         // Gate the cache on the static verifier: a failing artifact is
         // never memoized, so no later request can hit it warm. This
         // request still runs it — with no cached `VerifyReport` claiming
         // batch safety, `execute_lowered_batch` keeps the per-element
         // dynamic isolation check, so serving stays safe even for an
         // artifact the prover rejected.
-        if prog.verify_report().ok() {
+        let verify_t0 = Instant::now();
+        let verified = prog.verify_report().ok();
+        if let Some(tr) = tracer {
+            let label = key_label.as_deref().unwrap_or_default();
+            let ev = obs::TraceEvent::span(
+                obs::SpanKind::VerifyGate,
+                tr.us_at(verify_t0),
+                verify_t0.elapsed().as_micros() as u64,
+            )
+            .with_label(format!("{label} {}", if verified { "pass" } else { "FAIL" }));
+            tr.record(wid, ev);
+        }
+        if verified {
             let pinned = *sched == cfg.schedule && key.deploy.shards == cfg.shards;
-            shared.program_cache.lock().unwrap().insert(
+            let evicted = shared.program_cache.lock().unwrap().insert(
                 key.clone(),
                 prog.clone(),
                 pinned,
                 MAX_PROGRAM_ENTRIES,
             );
+            if evicted {
+                if let Some(tr) = tracer {
+                    let ev = obs::TraceEvent::instant(obs::SpanKind::Evict, tr.now_us())
+                        .with_label(key_label.unwrap_or_default());
+                    tr.record(wid, ev);
+                }
+            }
         } else {
             shared.verify_fails.fetch_add(1, Ordering::Relaxed);
         }
@@ -1139,6 +1302,15 @@ fn expired_wait(item: &Queued) -> Option<Duration> {
 fn expire_item(shared: &Shared, item: Queued, waited: Duration) {
     shared.expired.fetch_add(1, Ordering::Relaxed);
     shared.queue_age_hist[queue_age_bucket(waited)].fetch_add(1, Ordering::Relaxed);
+    if let Some(tr) = shared.tracer.get() {
+        let ev = obs::TraceEvent::span(
+            obs::SpanKind::Expire,
+            tr.us_at(item.enqueued),
+            waited.as_micros() as u64,
+        )
+        .with_req(item.req.id);
+        tr.record(tr.admission_track(), ev);
+    }
     let _ = item.reply.send(Err(ServeError::Expired {
         waited_ms: waited.as_millis() as u64,
         deadline_ms: item.req.deadline_ms.unwrap_or(0),
@@ -1276,6 +1448,9 @@ fn serve_group(
     let model = &cfg.models[gk.model_idx];
     let sched = &gk.schedule;
     let shards = gk.shards;
+    let tracer = shared.tracer.get();
+    let assemble_t0 = Instant::now();
+    let key_label = tracer.map(|_| format!("{}|{}|{}", model.name(), sched.label(), shards));
     let key = DeployKey {
         net_fp: model.fingerprint(),
         machine_fp: machine_fingerprint(&cfg.machine),
@@ -1326,7 +1501,20 @@ fn serve_group(
                         let t = cluster_timing(cp, &cfg.machine);
                         (t.total_cycles(), t.sync_cycles)
                     }
-                    None => (core.timing_cycles(prog.as_deref().unwrap()), 0),
+                    None => {
+                        // Timing misses resolve attribution for free: the
+                        // profiled replay costs the same TimingOnly pass and
+                        // yields the per-layer/per-class tables. Keep the
+                        // profile only for the deployment-default key —
+                        // that's what STATS and the serve trace export.
+                        let prog_ref = prog.as_deref().expect("timing misses resolve a program");
+                        let profile = core.profile(prog_ref);
+                        let c = profile.total_cycles;
+                        if *sched == cfg.schedule && shards == cfg.shards {
+                            shared.profiles.lock().unwrap()[gk.model_idx] = Some(profile);
+                        }
+                        (c, 0)
+                    }
                 };
                 shared.replay_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 shared.cache_misses.fetch_add(1, Ordering::Relaxed);
@@ -1344,6 +1532,16 @@ fn serve_group(
             shared.sync_cycles.fetch_add(sync_cycles, Ordering::Relaxed);
         }
         resolved.push(Resolved { item, sim_cycles, sync_cycles, timing_cached, prog, cluster });
+    }
+    if let Some(tr) = tracer {
+        let ev = obs::TraceEvent::span(
+            obs::SpanKind::BatchAssemble,
+            tr.us_at(assemble_t0),
+            assemble_t0.elapsed().as_micros() as u64,
+        )
+        .with_batch(batch_id)
+        .with_label(format!("{} n={}", key_label.as_deref().unwrap_or_default(), resolved.len()));
+        tr.record(wid, ev);
     }
 
     // Queue time stops for the whole group here: execution begins.
@@ -1372,6 +1570,20 @@ fn serve_group(
             let outs = core.infer_batch(&prog, &inputs);
             let elapsed = t0.elapsed();
             shared.replay_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+            if let Some(tr) = tracer {
+                let ev = obs::TraceEvent::span(
+                    obs::SpanKind::Replay,
+                    tr.us_at(t0),
+                    elapsed.as_micros() as u64,
+                )
+                .with_batch(batch_id)
+                .with_label(format!(
+                    "{} n={}",
+                    key_label.as_deref().unwrap_or_default(),
+                    idxs.len()
+                ));
+                tr.record(wid, ev);
+            }
             for (&i, out) in idxs.iter().zip(outs) {
                 outcomes[i] = Some(out);
                 services[i] = elapsed;
@@ -1395,6 +1607,17 @@ fn serve_group(
             let inf = cores.infer(cp, bytes);
             services[i] = t0.elapsed();
             shared.replay_ns.fetch_add(services[i].as_nanos() as u64, Ordering::Relaxed);
+            if let Some(tr) = tracer {
+                let ev = obs::TraceEvent::span(
+                    obs::SpanKind::Replay,
+                    tr.us_at(t0),
+                    services[i].as_micros() as u64,
+                )
+                .with_req(r.item.req.id)
+                .with_batch(batch_id)
+                .with_label(key_label.clone().unwrap_or_default());
+                tr.record(wid, ev);
+            }
             for (j, ns) in inf.shard_busy_ns.iter().enumerate() {
                 shared.shard_busy_ns[j].fetch_add(*ns, Ordering::Relaxed);
             }
@@ -1440,6 +1663,25 @@ fn serve_group(
         let us = (queue_times[i] + services[i]).as_micros() as u64;
         shared.latencies.lock().unwrap().push(us);
         shared.model_latencies[gk.model_idx].lock().unwrap().push(us);
+        if let Some(tr) = tracer {
+            let id = r.item.req.id;
+            let q_start = tr.us_at(r.item.enqueued);
+            let q_us = queue_times[i].as_micros() as u64;
+            let queued = obs::TraceEvent::span(obs::SpanKind::Queue, q_start, q_us)
+                .with_req(id)
+                .with_batch(batch_id);
+            tr.record(wid, queued);
+            let claim = obs::TraceEvent::instant(obs::SpanKind::Claim, q_start + q_us)
+                .with_req(id)
+                .with_batch(batch_id)
+                .with_label(key_label.clone().unwrap_or_default());
+            tr.record(wid, claim);
+            let reply = obs::TraceEvent::instant(obs::SpanKind::Reply, tr.now_us())
+                .with_req(id)
+                .with_batch(batch_id)
+                .with_label(if r.item.degraded { "degraded" } else { "ok" });
+            tr.record(wid, reply);
+        }
         let _ = r.item.reply.send(Ok(resp));
     }
 }
@@ -1965,6 +2207,32 @@ mod tests {
     }
 
     #[test]
+    fn lat_window_min_max_edge_cases() {
+        // Satellite: the min/max companions to the percentile feed.
+        // Empty window: (0, 0), matching the percentile convention.
+        let w = LatWindow::new(4);
+        assert_eq!(w.min_max(), (0, 0));
+        // Single sample: min == max == the sample.
+        let mut w = LatWindow::new(4);
+        w.push(42);
+        assert_eq!(w.min_max(), (42, 42));
+        // Wraparound: the evicted outlier must not linger as the max.
+        let mut w = LatWindow::new(4);
+        w.push(1_000_000);
+        for v in [10, 20, 30, 40] {
+            w.push(v);
+        }
+        assert_eq!(w.min_max(), (10, 40), "extremes track the surviving window only");
+        // Order-insensitive, and min/max agree with p0/p100.
+        let mut w = LatWindow::new(8);
+        for v in [5, 1, 4, 2, 3] {
+            w.push(v);
+        }
+        let (lo, hi) = w.min_max();
+        assert_eq!([lo, hi], w.percentiles([0.0, 1.0]));
+    }
+
+    #[test]
     fn program_cache_eviction_policy_unit() {
         // Unit-level check of the FIFO + pinning policy, independent of the
         // serving path.
@@ -1983,17 +2251,18 @@ mod tests {
             compile(&net, &quark, &PrecisionMap::parse("w2a2").unwrap()).unwrap(),
         );
         let mut cache = ProgramCache::new();
-        cache.insert(key("w2a2"), prog.clone(), true, 2); // pinned default
-        cache.insert(key("w1a1"), prog.clone(), false, 2);
+        assert!(!cache.insert(key("w2a2"), prog.clone(), true, 2)); // pinned default
+        assert!(!cache.insert(key("w1a1"), prog.clone(), false, 2));
         assert_eq!(cache.len(), 2);
-        // At cap: the non-pinned FIFO head (w1a1) is evicted, not the default.
-        cache.insert(key("int8"), prog.clone(), false, 2);
+        // At cap: the non-pinned FIFO head (w1a1) is evicted, not the
+        // default — and the insert reports the eviction (the trace hook).
+        assert!(cache.insert(key("int8"), prog.clone(), false, 2));
         assert_eq!(cache.len(), 2);
         assert!(cache.get(&key("w2a2")).is_some(), "pinned entry survives");
         assert!(cache.get(&key("w1a1")).is_none(), "FIFO head evicted");
         assert!(cache.get(&key("int8")).is_some());
         // Re-inserting an existing key is a no-op (no double insert).
-        cache.insert(key("int8"), prog, false, 2);
+        assert!(!cache.insert(key("int8"), prog, false, 2));
         assert_eq!(cache.len(), 2);
     }
 

@@ -15,9 +15,22 @@
 //!                                   compile_by_worker=<c0,c1,…>
 //!                                   sync_cycles=<n> shard_util=<s0,…|->
 //!                                   p50_us=<n> p95_us=<n> p99_us=<n>
+//!                                   lat_min_us=<n> lat_max_us=<n>
 //!                                   queue_age_hist=<c0,…,c11>
-//!                                   slo=<name>:<p50>/<p95>/<p99>[,…]
+//!                                   slo=<name>:<p50>/<p95>/<p99>/<min>/<max>[,…]
 //!                                   util=<u0,u1,…>
+//!                                   uptime_ms=<n> trace_dropped=<n>
+//!                                   class_mix=<name>:<f0/…/f5|->[,…]
+//! TRACE                     → TRACE events=<n> dropped=<n> sim_tracks=<k>
+//!                                   written=<path|->
+//!                             drains the request-lifecycle trace rings
+//!                             ([`crate::obs`]); with `serve --trace <path>`
+//!                             the drained spans plus the default programs'
+//!                             cycle-attribution profiles are written as
+//!                             Chrome trace-event JSON at `<path>` (and
+//!                             folded stacks at `<path>.folded`), else
+//!                             `written=-`. `ERR tracing disabled` when the
+//!                             server was started without tracing.
 //! INFER <id> [net=<name>] [prec=<spec>] [shards=<n>] [deadline_ms=<ms>]
 //!       [prio=<low|normal|high>] [<b0,b1,...>]
 //!                           → OK <id> cycles=<c> device_us=<t> worker=<w>
@@ -60,6 +73,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -75,20 +89,38 @@ pub const MAX_INPUT_BYTES: usize = crate::nn::INPUT_ELEMS;
 
 /// Serve until the process is killed. Binds `addr` (e.g. "127.0.0.1:7070").
 pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<()> {
+    serve_traced(coord, addr, None)
+}
+
+/// [`serve`] with request-lifecycle tracing armed when `trace` is set: the
+/// coordinator records spans into its bounded rings, and every `TRACE`
+/// command drains them to Chrome trace-event JSON at the given path (plus
+/// folded stacks at `<path>.folded`). `None` leaves tracing off — the
+/// serving path then pays only a pointer check per hook.
+pub fn serve_traced(coord: Arc<Coordinator>, addr: &str, trace: Option<PathBuf>) -> Result<()> {
+    let trace = trace.map(|p| {
+        coord.enable_tracing();
+        Arc::new(p)
+    });
     let listener = TcpListener::bind(addr)?;
     eprintln!(
-        "quark coordinator listening on {addr} ({} workers, machine {}, batch≤{}, queue≤{}, models [{}])",
+        "quark coordinator listening on {addr} ({} workers, machine {}, batch≤{}, queue≤{}, models [{}]{})",
         coord.config().workers,
         coord.config().machine.name,
         coord.config().batch_size,
         coord.config().max_queue,
-        coord.config().models.iter().map(|m| m.name()).collect::<Vec<_>>().join(", ")
+        coord.config().models.iter().map(|m| m.name()).collect::<Vec<_>>().join(", "),
+        match &trace {
+            Some(p) => format!(", tracing → {}", p.display()),
+            None => String::new(),
+        }
     );
     for stream in listener.incoming() {
         let stream = stream?;
         let coord = coord.clone();
+        let trace = trace.clone();
         std::thread::spawn(move || {
-            if let Err(e) = handle_client(coord, stream) {
+            if let Err(e) = handle_client(coord, stream, trace) {
                 eprintln!("client error: {e}");
             }
         });
@@ -112,7 +144,11 @@ fn parse_input(csv: Option<&str>) -> std::result::Result<Option<Vec<u8>>, String
     Ok(Some(bytes))
 }
 
-pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Result<()> {
+pub(crate) fn handle_client(
+    coord: Arc<Coordinator>,
+    stream: TcpStream,
+    trace: Option<Arc<PathBuf>>,
+) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(300)))?;
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -161,7 +197,23 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                 let slo: Vec<String> = s
                     .slo_by_model
                     .iter()
-                    .map(|m| format!("{}:{}/{}/{}", m.model, m.p50_us, m.p95_us, m.p99_us))
+                    .map(|m| {
+                        format!(
+                            "{}:{}/{}/{}/{}/{}",
+                            m.model, m.p50_us, m.p95_us, m.p99_us, m.min_us, m.max_us
+                        )
+                    })
+                    .collect();
+                let class_mix: Vec<String> = s
+                    .class_mix
+                    .iter()
+                    .map(|m| match &m.fractions {
+                        Some(fr) => {
+                            let fs: Vec<String> = fr.iter().map(|f| format!("{f:.3}")).collect();
+                            format!("{}:{}", m.model, fs.join("/"))
+                        }
+                        None => format!("{}:-", m.model),
+                    })
                     .collect();
                 writeln!(
                     writer,
@@ -171,7 +223,9 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                      verify_fails={} \
                      compile_us={} replay_us={} compile_by_worker={} \
                      sync_cycles={} shard_util={} \
-                     p50_us={} p95_us={} p99_us={} queue_age_hist={} slo={} util={}",
+                     p50_us={} p95_us={} p99_us={} lat_min_us={} lat_max_us={} \
+                     queue_age_hist={} slo={} util={} \
+                     uptime_ms={} trace_dropped={} class_mix={}",
                     s.served,
                     s.rejected,
                     s.expired,
@@ -192,11 +246,51 @@ pub(crate) fn handle_client(coord: Arc<Coordinator>, stream: TcpStream) -> Resul
                     s.p50_us,
                     s.p95_us,
                     s.p99_us,
+                    s.min_us,
+                    s.max_us,
                     hist.join(","),
                     slo.join(","),
-                    util.join(",")
+                    util.join(","),
+                    s.uptime_ms,
+                    s.trace_dropped,
+                    class_mix.join(",")
                 )?
             }
+            "TRACE" => match coord.tracer() {
+                None => writeln!(writer, "ERR tracing disabled (serve --trace <path> enables it)")?,
+                Some(tr) => {
+                    let events = tr.drain();
+                    let dropped = tr.dropped();
+                    let profiles: Vec<crate::obs::ProgramProfile> =
+                        coord.default_profiles().into_iter().flatten().collect();
+                    let written = match &trace {
+                        Some(path) => {
+                            let json = crate::obs::export::chrome_trace_json(&events, &profiles);
+                            let folded = crate::obs::export::folded_stacks(&events, &profiles);
+                            let mut folded_path = path.as_os_str().to_owned();
+                            folded_path.push(".folded");
+                            match std::fs::write(path.as_ref(), json)
+                                .and_then(|()| std::fs::write(&folded_path, folded))
+                            {
+                                Ok(()) => path.display().to_string(),
+                                Err(e) => {
+                                    writeln!(writer, "ERR trace write failed: {e}")?;
+                                    continue;
+                                }
+                            }
+                        }
+                        None => "-".to_string(),
+                    };
+                    writeln!(
+                        writer,
+                        "TRACE events={} dropped={} sim_tracks={} written={}",
+                        events.len(),
+                        dropped,
+                        profiles.len(),
+                        written
+                    )?
+                }
+            },
             "QUIT" => break,
             "INFER" => {
                 let id: u64 = match parts.next().and_then(|s| s.parse().ok()) {
@@ -361,11 +455,20 @@ mod tests {
 
     /// Spawn a handler for exactly one client connection; returns its addr.
     fn one_shot_server(coord: Arc<Coordinator>) -> std::net::SocketAddr {
+        one_shot_server_traced(coord, None)
+    }
+
+    /// [`one_shot_server`] with a TRACE output path wired through (the
+    /// caller arms tracing on the coordinator itself).
+    fn one_shot_server_traced(
+        coord: Arc<Coordinator>,
+        trace: Option<Arc<PathBuf>>,
+    ) -> std::net::SocketAddr {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            let _ = handle_client(coord, stream);
+            let _ = handle_client(coord, stream, trace);
         });
         addr
     }
@@ -410,7 +513,12 @@ mod tests {
             "shard_util=",
             "p50_us=",
             "p99_us=",
+            "lat_min_us=",
+            "lat_max_us=",
             "util=",
+            "uptime_ms=",
+            "trace_dropped=0",
+            "class_mix=",
         ] {
             assert!(lines[2].contains(field), "missing {field}: {}", lines[2]);
         }
@@ -691,6 +799,66 @@ mod tests {
         assert!(lines[2].contains(" served=1 "), "{}", lines[2]);
         assert!(lines[2].contains(" degraded=1 "), "{}", lines[2]);
         assert!(lines[2].contains(" by_model=tiny@100:2 "), "{}", lines[2]);
+    }
+
+    #[test]
+    fn trace_answers_err_when_tracing_is_disabled() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, "TRACE").unwrap();
+        writeln!(client, "PING").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(2).map(|l| l.unwrap()).collect();
+        assert!(lines[0].starts_with("ERR tracing disabled"), "{}", lines[0]);
+        assert_eq!(lines[1], "PONG", "TRACE without tracing must not kill the connection");
+    }
+
+    #[test]
+    fn trace_drains_spans_and_writes_a_loadable_chrome_trace() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        coord.enable_tracing();
+        let path =
+            Arc::new(std::env::temp_dir().join(format!("quark_trace_{}.json", std::process::id())));
+        let addr = one_shot_server_traced(coord.clone(), Some(path.clone()));
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        writeln!(client, "INFER 1").unwrap();
+        writeln!(client, "TRACE").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(2).map(|l| l.unwrap()).collect();
+        assert!(lines[0].starts_with("OK 1 "), "{}", lines[0]);
+        assert!(lines[1].starts_with("TRACE events="), "{}", lines[1]);
+        let field = |f: &str| -> String {
+            lines[1].split(f).nth(1).unwrap().split_whitespace().next().unwrap().to_string()
+        };
+        assert!(
+            field("events=").parse::<u64>().unwrap() >= 4,
+            "submit+queue+claim+reply at minimum: {}",
+            lines[1]
+        );
+        assert_eq!(field("dropped="), "0", "{}", lines[1]);
+        assert_eq!(
+            field("sim_tracks="),
+            "1",
+            "the default-schedule timing miss must have profiled the model: {}",
+            lines[1]
+        );
+        assert_eq!(field("written="), path.display().to_string(), "{}", lines[1]);
+        // The written file is a loadable Chrome trace, and the folded
+        // companion carries the simulated-cycle stacks.
+        let json = std::fs::read_to_string(path.as_ref()).unwrap();
+        let n = crate::obs::export::validate_chrome_trace(&json).unwrap();
+        assert!(n > 0, "exported trace carries events");
+        let mut folded = path.as_os_str().to_owned();
+        folded.push(".folded");
+        let folded_txt = std::fs::read_to_string(&folded).unwrap();
+        assert!(folded_txt.contains("sim;tiny@100;"), "{folded_txt}");
+        let _ = std::fs::remove_file(path.as_ref());
+        let _ = std::fs::remove_file(&folded);
     }
 
     #[test]

@@ -30,6 +30,9 @@
 //! * [`runtime`] — PJRT golden-model loader (AOT HLO text from JAX).
 //! * [`coordinator`] — multi-model batching inference server over a pool of
 //!   simulated cores with golden-model cross-checking.
+//! * [`obs`] — dual-clock observability: host request-lifecycle spans and
+//!   simulated-cycle attribution (per-layer, per-micro-op-class), exported
+//!   as Perfetto-loadable Chrome `trace_event` JSON and folded stacks.
 //! * [`report`] — regenerates every table and figure of the paper.
 
 pub mod arch;
@@ -40,6 +43,7 @@ pub mod error;
 pub mod isa;
 pub mod kernels;
 pub mod nn;
+pub mod obs;
 pub mod phys;
 pub mod program;
 pub mod quant;

@@ -1,0 +1,475 @@
+//! One writer, two artifacts.
+//!
+//! * [`chrome_trace_json`] — Chrome `trace_event` JSON (the Perfetto /
+//!   `chrome://tracing` interchange format). Host spans land on process 1
+//!   with one thread per tracer ring; simulated cycles land on process 2
+//!   with two threads per profiled program (per-layer timeline, per-class
+//!   timeline), rendering one cycle as one microsecond. The two clock
+//!   domains share a file but never a track, so wall time and simulated
+//!   time cannot be confused for one another.
+//! * [`folded_stacks`] — `stack;frames count` text, one line per aggregated
+//!   stack, directly consumable by flamegraph tooling. Host frames count
+//!   µs; sim frames count cycles.
+//!
+//! [`validate_chrome_trace`] is a dependency-free JSON syntax check (the
+//! repo bakes in no serde and CI has no `jq`): it parses the full document
+//! and confirms the `traceEvents` array of objects is present.
+
+use std::collections::BTreeMap;
+
+use super::profile::{OpClass, ProgramProfile};
+use super::TraceEvent;
+
+/// Escape `s` as JSON string contents (without the surrounding quotes).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The admission ring's track index, recognized by its events (submit and
+/// expire are only ever recorded there) — keeps the exporters free of any
+/// out-of-band knowledge about the tracer's geometry.
+fn admission_track(host: &[TraceEvent]) -> Option<usize> {
+    use super::SpanKind;
+    host.iter()
+        .find(|e| matches!(e.kind, SpanKind::Submit | SpanKind::Expire))
+        .map(|e| e.track)
+}
+
+fn host_track_name(track: usize, admission: Option<usize>) -> String {
+    if Some(track) == admission {
+        "admission".to_string()
+    } else {
+        format!("worker-{track}")
+    }
+}
+
+fn meta_event(pid: usize, tid: usize, key: &str, name: &str) -> String {
+    format!(
+        "{{\"name\":\"{key}\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        esc(name)
+    )
+}
+
+const HOST_PID: usize = 1;
+const SIM_PID: usize = 2;
+
+/// Render host spans and simulated-cycle profiles as one Chrome
+/// `trace_event` JSON document. `sims` carries one profile per simulated
+/// track (typically the pinned default program of each served model).
+pub fn chrome_trace_json(host: &[TraceEvent], sims: &[ProgramProfile]) -> String {
+    let mut events: Vec<String> = Vec::new();
+    events.push(meta_event(HOST_PID, 0, "process_name", "host (wall clock, \u{3bc}s)"));
+    if !sims.is_empty() {
+        events.push(meta_event(SIM_PID, 0, "process_name", "sim (1 cycle = 1\u{3bc}s)"));
+    }
+
+    let admission = admission_track(host);
+    let mut tracks: Vec<usize> = host.iter().map(|e| e.track).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    for &t in &tracks {
+        events.push(meta_event(HOST_PID, t, "thread_name", &host_track_name(t, admission)));
+    }
+    for e in host {
+        let mut args = String::new();
+        if let Some(id) = e.req {
+            args.push_str(&format!("\"req\":{id},"));
+        }
+        if let Some(id) = e.batch {
+            args.push_str(&format!("\"batch\":{id},"));
+        }
+        if !e.label.is_empty() {
+            args.push_str(&format!("\"key\":\"{}\",", esc(&e.label)));
+        }
+        args.pop(); // trailing comma, if any
+        let phase = if e.dur_us > 0 {
+            format!("\"ph\":\"X\",\"dur\":{}", e.dur_us)
+        } else {
+            "\"ph\":\"i\",\"s\":\"t\"".to_string()
+        };
+        events.push(format!(
+            "{{\"name\":\"{}\",\"cat\":\"host\",{phase},\"pid\":{HOST_PID},\"tid\":{},\
+             \"ts\":{},\"args\":{{{args}}}}}",
+            e.kind.name(),
+            e.track,
+            e.ts_us,
+        ));
+    }
+
+    for (mi, p) in sims.iter().enumerate() {
+        let (tid_layers, tid_classes) = (mi * 2, mi * 2 + 1);
+        let title = format!("{} [{}]", p.model, p.schedule);
+        events.push(meta_event(SIM_PID, tid_layers, "thread_name", &format!("{title} layers")));
+        events.push(meta_event(SIM_PID, tid_classes, "thread_name", &format!("{title} classes")));
+        let mut ts = 0u64;
+        for l in &p.layers {
+            events.push(format!(
+                "{{\"name\":\"{}\",\"cat\":\"sim-layer\",\"ph\":\"X\",\"pid\":{SIM_PID},\
+                 \"tid\":{tid_layers},\"ts\":{ts},\"dur\":{},\
+                 \"args\":{{\"precision\":\"{}\",\"macs\":{}}}}}",
+                esc(&l.name),
+                l.cycles,
+                esc(&l.precision),
+                l.macs,
+            ));
+            ts += l.cycles;
+        }
+        let mut ts = 0u64;
+        for (cls, &cycles) in OpClass::ALL.iter().zip(&p.class_cycles) {
+            if cycles == 0 {
+                continue;
+            }
+            events.push(format!(
+                "{{\"name\":\"{}\",\"cat\":\"sim-class\",\"ph\":\"X\",\"pid\":{SIM_PID},\
+                 \"tid\":{tid_classes},\"ts\":{ts},\"dur\":{cycles},\"args\":{{}}}}",
+                cls.name(),
+            ));
+            ts += cycles;
+        }
+    }
+
+    format!("{{\"traceEvents\":[{}],\"displayTimeUnit\":\"ms\"}}", events.join(","))
+}
+
+/// Render both domains as folded stacks (`stack;frames count`), aggregated
+/// and deterministically ordered. Host counts are µs of span time; sim
+/// counts are cycles.
+pub fn folded_stacks(host: &[TraceEvent], sims: &[ProgramProfile]) -> String {
+    let admission = admission_track(host);
+    let mut agg: BTreeMap<String, u64> = BTreeMap::new();
+    for e in host {
+        if e.dur_us == 0 {
+            continue;
+        }
+        let track = host_track_name(e.track, admission);
+        *agg.entry(format!("host;{track};{}", e.kind.name())).or_default() += e.dur_us;
+    }
+    for p in sims {
+        for l in &p.layers {
+            *agg.entry(format!("sim;{};{}", p.model, l.name)).or_default() += l.cycles;
+        }
+        for (cls, &cycles) in OpClass::ALL.iter().zip(&p.class_cycles) {
+            if cycles > 0 {
+                *agg.entry(format!("sim;{};classes;{}", p.model, cls.name())).or_default() +=
+                    cycles;
+            }
+        }
+    }
+    let mut out = String::new();
+    for (stack, count) in agg {
+        out.push_str(&stack);
+        out.push(' ');
+        out.push_str(&count.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// A parsed JSON value — only as much structure as the validator needs.
+enum Json {
+    Null,
+    Bool,
+    Num,
+    Str,
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, what: &str) -> String {
+        format!("{what} at byte {}", self.i)
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.b.get(self.i) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(|_| Json::Str),
+            Some(b't') => self.literal("true").map(|_| Json::Bool),
+            Some(b'f') => self.literal("false").map(|_| Json::Bool),
+            Some(b'n') => self.literal("null").map(|_| Json::Null),
+            Some(b'-' | b'0'..=b'9') => self.number().map(|_| Json::Num),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<(), String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{lit}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<(), String> {
+        if self.b.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        let digits0 = self.i;
+        while matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+            self.i += 1;
+        }
+        if self.i == digits0 {
+            return Err(self.err("expected digits"));
+        }
+        if self.b.get(self.i) == Some(&b'.') {
+            self.i += 1;
+            let frac0 = self.i;
+            while matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+            if self.i == frac0 {
+                return Err(self.err("expected fraction digits"));
+            }
+        }
+        if matches!(self.b.get(self.i), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.b.get(self.i), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            let exp0 = self.i;
+            while matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+            if self.i == exp0 {
+                return Err(self.err("expected exponent digits"));
+            }
+        }
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.b.get(self.i) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b' | b'f' | b'n' | b'r' | b't') => out.push(' '),
+                        Some(b'u') => {
+                            for k in 1..=4 {
+                                if !self
+                                    .b
+                                    .get(self.i + k)
+                                    .is_some_and(|c| c.is_ascii_hexdigit())
+                                {
+                                    return Err(self.err("bad \\u escape"));
+                                }
+                            }
+                            self.i += 4;
+                            out.push(' ');
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.i += 1;
+                }
+                Some(&c) if c < 0x20 => return Err(self.err("raw control char in string")),
+                Some(_) => {
+                    // Multi-byte UTF-8 is fine: consume the whole char.
+                    let s = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| self.err("invalid UTF-8"))?;
+                    let ch = s.chars().next().unwrap();
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.eat(b':')?;
+            fields.push((key, self.value()?));
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+/// Parse `json` as a full JSON document and confirm it is an object whose
+/// `traceEvents` member is an array of objects (the Chrome `trace_event`
+/// envelope Perfetto loads). Returns the event count.
+pub fn validate_chrome_trace(json: &str) -> Result<usize, String> {
+    let mut p = Parser { b: json.as_bytes(), i: 0 };
+    let doc = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing garbage after document"));
+    }
+    let Json::Obj(fields) = doc else {
+        return Err("top level is not an object".to_string());
+    };
+    let Some((_, events)) = fields.iter().find(|(k, _)| k == "traceEvents") else {
+        return Err("missing traceEvents member".to_string());
+    };
+    let Json::Arr(items) = events else {
+        return Err("traceEvents is not an array".to_string());
+    };
+    for (i, it) in items.iter().enumerate() {
+        if !matches!(it, Json::Obj(_)) {
+            return Err(format!("traceEvents[{i}] is not an object"));
+        }
+    }
+    Ok(items.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SpanKind, TraceEvent};
+    use super::*;
+    use crate::obs::profile::N_CLASSES;
+
+    fn layer(name: &str, cycles: u64) -> crate::obs::profile::LayerCycles {
+        crate::obs::profile::LayerCycles {
+            name: name.to_string(),
+            precision: "w2a2".to_string(),
+            macs: 8,
+            cycles,
+        }
+    }
+
+    fn sample_profile() -> ProgramProfile {
+        let mut class_cycles = [0u64; N_CLASSES];
+        class_cycles[OpClass::PlaneMac.index()] = 70;
+        class_cycles[OpClass::Interp.index()] = 30;
+        ProgramProfile {
+            model: "tiny".to_string(),
+            schedule: "w2a2".to_string(),
+            layers: vec![layer("conv1 \"odd\"", 60), layer("fc", 40)],
+            class_cycles,
+            total_cycles: 100,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_validator() {
+        let host = vec![
+            TraceEvent::instant(SpanKind::Submit, 5).with_req(1),
+            TraceEvent::span(SpanKind::Replay, 10, 42).with_batch(3).with_label("tiny|w2a2|1"),
+        ];
+        let json = chrome_trace_json(&host, &[sample_profile()]);
+        let n = validate_chrome_trace(&json).expect("exported trace must parse");
+        // 2 host events + 2 sim layers + 2 sim classes + metadata.
+        assert!(n >= 6, "expected at least 6 events, got {n}");
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("admission"));
+        assert!(json.contains("worker-0"));
+        assert!(json.contains("tiny [w2a2] layers"));
+        assert!(json.contains("plane_mac"));
+    }
+
+    #[test]
+    fn folded_stacks_aggregate_spans_and_skip_instants() {
+        let host = vec![
+            TraceEvent::instant(SpanKind::Reply, 1),
+            TraceEvent::span(SpanKind::Replay, 0, 10),
+            TraceEvent::span(SpanKind::Replay, 20, 5),
+        ];
+        let folded = folded_stacks(&host, &[sample_profile()]);
+        assert!(folded.contains("host;worker-0;replay 15\n"));
+        assert!(!folded.contains(";reply"));
+        assert!(folded.contains("sim;tiny;fc 40\n"));
+        assert!(folded.contains("sim;tiny;classes;plane_mac 70\n"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        assert!(validate_chrome_trace("").is_err());
+        assert!(validate_chrome_trace("[]").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\":{}}").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\":[1]}").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\":[{}]} x").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\":[{\"a\":1}").is_err());
+        assert_eq!(validate_chrome_trace("{\"traceEvents\":[]}"), Ok(0));
+        assert_eq!(
+            validate_chrome_trace(
+                "{\"traceEvents\":[{\"name\":\"\\u00e9 \\n\",\"ts\":1.5e-3,\"ok\":true}]}"
+            ),
+            Ok(1)
+        );
+    }
+}

@@ -1,0 +1,284 @@
+//! Observability: dual-clock tracing and cycle attribution.
+//!
+//! Two clock domains, one artifact:
+//!
+//! * **Host domain** — request-lifecycle spans in the coordinator
+//!   (submit → queue → claim → batch-assemble → verify-gate → replay →
+//!   reply, plus compile/lower/evict events), recorded by [`Tracer`] into a
+//!   bounded ring per worker. Recording never blocks the serving path: a
+//!   contended or full ring drops the event and bumps `trace_dropped`
+//!   instead of waiting.
+//! * **Simulated domain** — [`profile::profile_program`] attributes a timed
+//!   replay's cycles to the program's layers ([`crate::program`]'s layer
+//!   marks) and to the lowered micro-op classes
+//!   ([`profile::OpClass`]: PlaneMac / RowSum / MaccByte / Bitpack / Interp
+//!   / host-slice), with Σ(per-layer) == Σ(per-class) == total cycles
+//!   enforced, not sampled.
+//!
+//! [`export`] writes both domains through one writer: Chrome `trace_event`
+//! JSON (loadable in Perfetto / `chrome://tracing`, host spans and simulated
+//! cycles as separate process tracks) and folded-stacks text for flamegraph
+//! tooling. See `docs/observability.md`.
+//!
+//! Zero-cost-when-off: the coordinator holds the tracer in a `OnceLock`;
+//! until `serve --trace` arms it, every hook is a single relaxed
+//! pointer-load-and-branch and no event is ever allocated.
+
+pub mod export;
+pub mod profile;
+
+pub use profile::{
+    profile_cluster, profile_on_fresh_core, profile_program, ClusterProfile, LayerCycles, OpClass,
+    ProgramProfile, N_CLASSES,
+};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default per-ring event capacity ([`Tracer::new`]'s `cap`). At ~9 events
+/// per served request this absorbs well over a thousand in-flight requests
+/// per worker between `TRACE` drains.
+pub const DEFAULT_RING_CAP: usize = 16_384;
+
+/// What a host-domain [`TraceEvent`] marks. Span kinds (`dur_us > 0`) cover
+/// the request lifecycle; the rest are instants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Request admitted into the queue (instant, admission track).
+    Submit,
+    /// Time from enqueue to claim (span; ends when a worker claims it).
+    Queue,
+    /// Worker claimed the request into a batch (instant, carries batch id).
+    Claim,
+    /// Group resolution: program + timing caches, per batch (span).
+    BatchAssemble,
+    /// Cold `program::compile` for a cache miss (span).
+    Compile,
+    /// Decode-once lowering of a freshly compiled program (span).
+    Lower,
+    /// Static verifier gate on the insert path (span).
+    VerifyGate,
+    /// Functional replay — batched lowered replay or one cluster inference
+    /// (span; batched requests share one event via the batch id).
+    Replay,
+    /// Response handed to the reply channel (instant; label carries the
+    /// `ok` / `degraded` disposition).
+    Reply,
+    /// Request expired in queue — terminal, no reply span follows
+    /// (recorded as a span covering the time waited).
+    Expire,
+    /// Program-cache eviction caused by this insert (instant).
+    Evict,
+}
+
+impl SpanKind {
+    /// Stable lowercase name used by both exporters.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Submit => "submit",
+            SpanKind::Queue => "queue",
+            SpanKind::Claim => "claim",
+            SpanKind::BatchAssemble => "batch-assemble",
+            SpanKind::Compile => "compile",
+            SpanKind::Lower => "lower",
+            SpanKind::VerifyGate => "verify-gate",
+            SpanKind::Replay => "replay",
+            SpanKind::Reply => "reply",
+            SpanKind::Expire => "expire",
+            SpanKind::Evict => "evict",
+        }
+    }
+}
+
+/// One host-domain event. Timestamps are microseconds since the tracer's
+/// epoch ([`Tracer::now_us`] / [`Tracer::us_at`]).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub kind: SpanKind,
+    /// Start (spans) or occurrence (instants) time, µs since epoch.
+    pub ts_us: u64,
+    /// Span length in µs; 0 marks an instant event.
+    pub dur_us: u64,
+    /// Ring the event was recorded on: worker id, or the admission track
+    /// ([`Tracer::admission_track`]) for submit/expire. Set by
+    /// [`Tracer::record`].
+    pub track: usize,
+    /// Client-chosen request id, when the event belongs to one request.
+    pub req: Option<u64>,
+    /// Coordinator batch id — batched requests share it, tying their
+    /// queue/claim/reply events to one replay span.
+    pub batch: Option<u64>,
+    /// Free-form detail: the DeployKey label (`model|schedule|shards`), the
+    /// reply disposition, etc. Empty when the kind says it all.
+    pub label: String,
+}
+
+impl TraceEvent {
+    /// A span of `dur_us` starting at `ts_us`.
+    pub fn span(kind: SpanKind, ts_us: u64, dur_us: u64) -> TraceEvent {
+        TraceEvent { kind, ts_us, dur_us, track: 0, req: None, batch: None, label: String::new() }
+    }
+
+    /// An instant event at `ts_us`.
+    pub fn instant(kind: SpanKind, ts_us: u64) -> TraceEvent {
+        TraceEvent::span(kind, ts_us, 0)
+    }
+
+    /// Attach the request id.
+    pub fn with_req(mut self, id: u64) -> TraceEvent {
+        self.req = Some(id);
+        self
+    }
+
+    /// Attach the batch id.
+    pub fn with_batch(mut self, id: u64) -> TraceEvent {
+        self.batch = Some(id);
+        self
+    }
+
+    /// Attach a detail label.
+    pub fn with_label(mut self, label: impl Into<String>) -> TraceEvent {
+        self.label = label.into();
+        self
+    }
+}
+
+/// Bounded multi-ring event sink: one ring per worker plus an admission
+/// ring for events raised outside any worker (submit, expire).
+///
+/// The recording path is wait-free with respect to the serving path: it
+/// takes a ring's lock only via `try_lock`, so a concurrent drain (or an
+/// unlucky collision) costs a dropped event — counted in
+/// [`Tracer::dropped`] — never a stall.
+pub struct Tracer {
+    epoch: Instant,
+    rings: Vec<Mutex<VecDeque<TraceEvent>>>,
+    cap: usize,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    /// A tracer with `workers + 1` rings (one per worker, one admission
+    /// ring), each holding at most `cap` events between drains.
+    pub fn new(workers: usize, cap: usize) -> Tracer {
+        let rings = (0..workers + 1).map(|_| Mutex::new(VecDeque::new())).collect();
+        Tracer {
+            epoch: Instant::now(),
+            rings,
+            cap: cap.max(1),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Ring index for events raised outside any worker (submit, expire).
+    pub fn admission_track(&self) -> usize {
+        self.rings.len() - 1
+    }
+
+    /// Microseconds since the tracer's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// µs-since-epoch of an `Instant` captured elsewhere (0 if it predates
+    /// the epoch — e.g. a request enqueued before tracing was armed).
+    pub fn us_at(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record `ev` on `track`'s ring (clamped to the admission ring).
+    /// Never blocks: a contended or full ring drops the event and bumps the
+    /// drop counter instead.
+    pub fn record(&self, track: usize, mut ev: TraceEvent) {
+        let track = track.min(self.rings.len() - 1);
+        match self.rings[track].try_lock() {
+            Ok(mut ring) if ring.len() < self.cap => {
+                ev.track = track;
+                ring.push_back(ev);
+                self.recorded.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Events successfully recorded since construction (drains included).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Events dropped on full or contended rings since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drain every ring, returning all buffered events sorted by start
+    /// timestamp. Drains block-lock each ring in turn (the recording side
+    /// stays non-blocking — it just drops into the counter meanwhile).
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut all = Vec::new();
+        for ring in &self.rings {
+            let mut ring = ring.lock().unwrap();
+            all.extend(ring.drain(..));
+        }
+        all.sort_by_key(|e| (e.ts_us, e.dur_us));
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_capacity_drops_and_counts_instead_of_blocking() {
+        let tr = Tracer::new(1, 4);
+        for i in 0..10 {
+            tr.record(0, TraceEvent::instant(SpanKind::Submit, i));
+        }
+        assert_eq!(tr.recorded(), 4);
+        assert_eq!(tr.dropped(), 6);
+        assert_eq!(tr.drain().len(), 4);
+        // Drained rings accept events again.
+        tr.record(0, TraceEvent::instant(SpanKind::Submit, 99));
+        assert_eq!(tr.drain().len(), 1);
+        assert_eq!(tr.dropped(), 6);
+    }
+
+    #[test]
+    fn drain_merges_rings_sorted_by_timestamp() {
+        let tr = Tracer::new(2, 16);
+        tr.record(1, TraceEvent::instant(SpanKind::Reply, 30));
+        tr.record(0, TraceEvent::span(SpanKind::Queue, 10, 5).with_req(7).with_batch(3));
+        tr.record(tr.admission_track(), TraceEvent::instant(SpanKind::Submit, 20));
+        let evs = tr.drain();
+        let ts: Vec<u64> = evs.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![10, 20, 30]);
+        assert_eq!(evs[0].track, 0);
+        assert_eq!(evs[0].req, Some(7));
+        assert_eq!(evs[0].batch, Some(3));
+        assert_eq!(evs[1].track, tr.admission_track());
+        assert!(tr.drain().is_empty());
+    }
+
+    #[test]
+    fn out_of_range_tracks_clamp_to_the_admission_ring() {
+        let tr = Tracer::new(1, 16);
+        tr.record(usize::MAX, TraceEvent::instant(SpanKind::Expire, 1));
+        let evs = tr.drain();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].track, tr.admission_track());
+    }
+
+    #[test]
+    fn instants_before_the_epoch_saturate_to_zero() {
+        let earlier = Instant::now();
+        let tr = Tracer::new(1, 16);
+        assert_eq!(tr.us_at(earlier), 0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Simulated-clock cycle attribution.
+//!
+//! Timing is a pure function of the instruction stream ([`Sim::execute`]'s
+//! contract), so attribution does not need sampling: one `TimingOnly` walk
+//! of the trace, reading [`Sim::cycles`] at every layer mark
+//! (`CompiledProgram`'s per-layer boundaries) **and** at every lowered
+//! micro-op span boundary (`LoweredProgram::spans`), yields telescoping
+//! deltas that tile the total exactly. [`profile_program`] asserts both
+//! invariants — Σ(per-layer) == Σ(per-class) == total — rather than trusting
+//! them, and the replayed instruction stream is byte-for-byte the one
+//! [`Sim::execute_with_input`] emits, so the totals match serving's cached
+//! timings exactly (asserted across the zoo in
+//! `rust/tests/observability.rs`).
+
+use crate::arch::MachineConfig;
+use crate::cluster::{aggregate_timing, shard_mem_bytes, ClusterProgram, ClusterTiming};
+use crate::program::lowered::MicroOp;
+use crate::program::{relocate, CompiledProgram};
+use crate::sim::{Sim, SimMode};
+
+/// Attribution classes for lowered micro-ops. `Fill`/`Copy`/`LoadUnit`/
+/// `StoreUnit` — the pure data-movement fusions — fold into one
+/// [`OpClass::HostSlice`] bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpClass {
+    /// Bit-serial AND–popcount–accumulate runs (`MicroOp::PlaneMac`).
+    PlaneMac,
+    /// Fused activation row-sums (`MicroOp::RowSum`).
+    RowSum,
+    /// Int8 conv taps (`MicroOp::MaccByte`).
+    MaccByte,
+    /// `vbitpack.vi` through the host fast path (`MicroOp::BitpackFast`).
+    Bitpack,
+    /// Trace ranges still run by the plain interpreter (`MicroOp::Interp`).
+    Interp,
+    /// Host-side data movement: fills, copies, unit-stride loads/stores.
+    HostSlice,
+}
+
+/// Number of attribution classes (the length of [`OpClass::ALL`]).
+pub const N_CLASSES: usize = 6;
+
+impl OpClass {
+    /// Every class, in the order of the `class_cycles` arrays.
+    pub const ALL: [OpClass; N_CLASSES] = [
+        OpClass::PlaneMac,
+        OpClass::RowSum,
+        OpClass::MaccByte,
+        OpClass::Bitpack,
+        OpClass::Interp,
+        OpClass::HostSlice,
+    ];
+
+    /// Stable snake_case name used in exports and STATS rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::PlaneMac => "plane_mac",
+            OpClass::RowSum => "row_sum",
+            OpClass::MaccByte => "macc_byte",
+            OpClass::Bitpack => "bitpack",
+            OpClass::Interp => "interp",
+            OpClass::HostSlice => "host_slice",
+        }
+    }
+
+    /// Index into the `class_cycles` arrays (the [`OpClass::ALL`] order).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    fn of(op: &MicroOp) -> OpClass {
+        match op {
+            MicroOp::PlaneMac { .. } => OpClass::PlaneMac,
+            MicroOp::RowSum(_) => OpClass::RowSum,
+            MicroOp::MaccByte { .. } => OpClass::MaccByte,
+            MicroOp::BitpackFast { .. } => OpClass::Bitpack,
+            MicroOp::Interp { .. } => OpClass::Interp,
+            MicroOp::Fill { .. }
+            | MicroOp::Copy { .. }
+            | MicroOp::LoadUnit { .. }
+            | MicroOp::StoreUnit { .. } => OpClass::HostSlice,
+        }
+    }
+}
+
+/// One layer's share of a timed replay.
+#[derive(Clone, Debug)]
+pub struct LayerCycles {
+    pub name: String,
+    /// The layer's scheduled precision label (e.g. `w2a2`, `int8`, `fp32`).
+    pub precision: String,
+    /// MACs the layer reports (same figure as `LayerReport`).
+    pub macs: u64,
+    pub cycles: u64,
+}
+
+/// Cycle attribution for one compiled program on one core.
+#[derive(Clone, Debug)]
+pub struct ProgramProfile {
+    pub model: String,
+    /// The deployment schedule's label (`PrecisionMap::label`).
+    pub schedule: String,
+    /// Per-layer cycles, in layer order; sums to `total_cycles`.
+    pub layers: Vec<LayerCycles>,
+    /// Per-class cycles in [`OpClass::ALL`] order; sums to `total_cycles`.
+    pub class_cycles: [u64; N_CLASSES],
+    /// Cycles of the whole timed replay — identical to what
+    /// [`Sim::execute`] reports for this program.
+    pub total_cycles: u64,
+}
+
+impl ProgramProfile {
+    /// Per-class fractions of the total (all zero for an empty program).
+    pub fn class_fractions(&self) -> [f64; N_CLASSES] {
+        let mut fracs = [0.0; N_CLASSES];
+        if self.total_cycles > 0 {
+            for (slot, &c) in fracs.iter_mut().zip(&self.class_cycles) {
+                *slot = c as f64 / self.total_cycles as f64;
+            }
+        }
+        fracs
+    }
+}
+
+/// Profile one timed replay of `prog` at `base` on `sim` (honoring the
+/// sim's current mode — callers normally set `TimingOnly`). Emits exactly
+/// the instruction stream of [`Sim::execute`], so cycles, per-layer deltas,
+/// and stats are identical to a plain timed replay; panics if the per-layer
+/// or per-class sums fail to tile the total.
+pub fn profile_program(sim: &mut Sim, prog: &CompiledProgram, base: u64) -> ProgramProfile {
+    let lowered = prog.lowered();
+    let classes: Vec<OpClass> = lowered.ops.iter().map(OpClass::of).collect();
+    let spans = &lowered.spans;
+    debug_assert_eq!(spans.len(), classes.len(), "spans parallel the micro-ops");
+
+    let delta = sim.begin_replay(prog, base, None);
+    let start = sim.cycles();
+    let mut layers = Vec::with_capacity(prog.layers.len());
+    let mut class_cycles = [0u64; N_CLASSES];
+    let (mut reloc_i, mut span_i, mut layer_i) = (0usize, 0usize, 0usize);
+    let (mut c_span, mut c_layer) = (start, start);
+    // Degenerate zero-instruction layers at the very front.
+    while layer_i < prog.layers.len() && prog.layers[layer_i].trace_end == 0 {
+        let mark = &prog.layers[layer_i];
+        layers.push(LayerCycles {
+            name: mark.name.clone(),
+            precision: mark.precision.label(),
+            macs: mark.macs,
+            cycles: 0,
+        });
+        layer_i += 1;
+    }
+    for idx in 0..prog.trace.len() {
+        let instr = prog.trace[idx];
+        let instr = if reloc_i < prog.reloc.len() && prog.reloc[reloc_i] as usize == idx {
+            reloc_i += 1;
+            relocate(instr, delta)
+        } else {
+            instr
+        };
+        sim.emit(instr);
+        let here = (idx + 1) as u32;
+        while span_i < spans.len() && spans[span_i].1 == here {
+            let c = sim.cycles();
+            class_cycles[classes[span_i].index()] += c - c_span;
+            c_span = c;
+            span_i += 1;
+        }
+        while layer_i < prog.layers.len() && prog.layers[layer_i].trace_end == idx + 1 {
+            let mark = &prog.layers[layer_i];
+            // Same boundary-credited MACs as `Sim::execute_with_input`.
+            sim.stats_mut().effective_macs += mark.credited_macs;
+            let c = sim.cycles();
+            layers.push(LayerCycles {
+                name: mark.name.clone(),
+                precision: mark.precision.label(),
+                macs: mark.macs,
+                cycles: c - c_layer,
+            });
+            c_layer = c;
+            layer_i += 1;
+        }
+    }
+    debug_assert_eq!(layer_i, prog.layers.len(), "layer marks must tile the trace");
+    debug_assert_eq!(span_i, spans.len(), "micro-op spans must tile the trace");
+
+    let total_cycles = sim.cycles() - start;
+    let layer_sum: u64 = layers.iter().map(|l| l.cycles).sum();
+    let class_sum: u64 = class_cycles.iter().sum();
+    assert_eq!(layer_sum, total_cycles, "Σ per-layer cycles must equal the replay total");
+    assert_eq!(class_sum, total_cycles, "Σ per-class cycles must equal the replay total");
+    ProgramProfile {
+        model: prog.model().to_string(),
+        schedule: prog.schedule().label(),
+        layers,
+        class_cycles,
+        total_cycles,
+    }
+}
+
+/// Compile-free convenience: profile `prog` on a fresh `TimingOnly` core of
+/// `machine` (the shape `repro profile` and the test suites use).
+pub fn profile_on_fresh_core(prog: &CompiledProgram, machine: &MachineConfig) -> ProgramProfile {
+    let mut sim = Sim::with_memory(machine.clone(), shard_mem_bytes(prog));
+    sim.set_mode(SimMode::TimingOnly);
+    let base = sim.alloc(prog.mem_len());
+    profile_program(&mut sim, prog, base)
+}
+
+/// Cycle attribution for a sharded deployment: one [`ProgramProfile`] per
+/// shard core plus the aggregated cluster timeline — built by the same fold
+/// as [`crate::cluster::cluster_timing`], so `timing.total_cycles()` equals
+/// the coordinator's cached figure exactly.
+#[derive(Clone, Debug)]
+pub struct ClusterProfile {
+    /// Per-shard profiles, in shard order.
+    pub shards: Vec<ProgramProfile>,
+    /// The aggregated per-layer `max(shard) + sync` cycle model.
+    pub timing: ClusterTiming,
+}
+
+impl ClusterProfile {
+    /// Element-wise sum of the shard cores' per-class cycles (core-cycles,
+    /// not latency — shards overlap in time).
+    pub fn class_cycles(&self) -> [u64; N_CLASSES] {
+        let mut sum = [0u64; N_CLASSES];
+        for p in &self.shards {
+            for (slot, &c) in sum.iter_mut().zip(&p.class_cycles) {
+                *slot += c;
+            }
+        }
+        sum
+    }
+}
+
+/// Profile every shard of `cluster` on fresh `TimingOnly` cores and fold
+/// the per-layer cycles into the cluster model.
+pub fn profile_cluster(cluster: &ClusterProgram, machine: &MachineConfig) -> ClusterProfile {
+    let shards: Vec<ProgramProfile> = cluster
+        .shard_programs()
+        .iter()
+        .map(|prog| profile_on_fresh_core(prog, machine))
+        .collect();
+    let per_shard: Vec<Vec<u64>> =
+        shards.iter().map(|p| p.layers.iter().map(|l| l.cycles).collect()).collect();
+    let timing = aggregate_timing(cluster, machine, &per_shard);
+    ClusterProfile { shards, timing }
+}

@@ -78,6 +78,11 @@ pub(crate) enum MicroOp {
 /// [`Sim::execute_lowered`].
 pub struct LoweredProgram {
     pub(crate) ops: Vec<MicroOp>,
+    /// Trace range `[lo, hi)` each micro-op covers, parallel to `ops`.
+    /// Ranges are non-empty and tile the trace in order — the cycle
+    /// attributor ([`crate::obs::profile`]) samples the timing model at
+    /// exactly these boundaries to split the total by micro-op class.
+    pub(crate) spans: Vec<(u32, u32)>,
     fused_instrs: usize,
     interp_instrs: usize,
 }
@@ -117,6 +122,7 @@ pub(crate) fn lower(prog: &CompiledProgram, vlen_bits: usize) -> LoweredProgram 
         is_reloc[r as usize] = true;
     }
     let mut ops = Vec::new();
+    let mut spans: Vec<(u32, u32)> = Vec::new();
     let mut fused_instrs = 0usize;
     // Start of the currently open Interp range, if any.
     let mut pend: Option<u32> = None;
@@ -128,6 +134,7 @@ pub(crate) fn lower(prog: &CompiledProgram, vlen_bits: usize) -> LoweredProgram 
             if let Some((op, took)) = match_at(trace, &is_reloc, i, st_now, vlen_bits) {
                 if let Some(lo) = pend.take() {
                     ops.push(MicroOp::Interp { lo, hi: i as u32 });
+                    spans.push((lo, i as u32));
                 }
                 // RowSum embeds two vsetvli's; carry their result forward.
                 if let MicroOp::RowSum(rs) = &op {
@@ -135,6 +142,7 @@ pub(crate) fn lower(prog: &CompiledProgram, vlen_bits: usize) -> LoweredProgram 
                 }
                 fused_instrs += took;
                 ops.push(op);
+                spans.push((i as u32, (i + took) as u32));
                 i += took;
                 continue;
             }
@@ -149,9 +157,12 @@ pub(crate) fn lower(prog: &CompiledProgram, vlen_bits: usize) -> LoweredProgram 
     }
     if let Some(lo) = pend {
         ops.push(MicroOp::Interp { lo, hi: trace.len() as u32 });
+        spans.push((lo, trace.len() as u32));
     }
+    debug_assert_eq!(spans.len(), ops.len());
+    debug_assert!(spans.windows(2).all(|w| w[0].1 == w[1].0), "spans must tile the trace");
     let interp_instrs = trace.len() - fused_instrs;
-    LoweredProgram { ops, fused_instrs, interp_instrs }
+    LoweredProgram { ops, spans, fused_instrs, interp_instrs }
 }
 
 /// Try every matcher at trace position `i` under statically known

@@ -55,6 +55,7 @@ pub mod verify;
 
 pub use builder::ProgramBuilder;
 pub use lowered::{BatchRun, LoweredProgram};
+pub(crate) use replay::relocate;
 pub use replay::ProgramRun;
 pub use verify::{Finding, FindingClass, VerifyReport};
 

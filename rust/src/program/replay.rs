@@ -66,9 +66,11 @@ pub(crate) fn functional_run(prog: &CompiledProgram, delta: u64) -> ProgramRun {
     }
 }
 
-/// Rebase an `li` whose immediate is a simulated-memory address.
+/// Rebase an `li` whose immediate is a simulated-memory address. Shared
+/// with the cycle attributor ([`crate::obs::profile`]), which must replay
+/// the exact instruction stream [`Sim::execute`] would.
 #[inline]
-fn relocate(instr: Instr, delta: u64) -> Instr {
+pub(crate) fn relocate(instr: Instr, delta: u64) -> Instr {
     match instr {
         Instr::Scalar(ScalarOp::Li { rd, imm }) => {
             Instr::Scalar(ScalarOp::Li { rd, imm: (imm as u64).wrapping_add(delta) as i64 })

@@ -10,6 +10,7 @@
 //! | headline claims | [`summary`] | 5.7×/3.5× speedups, 2.3×/1.9× lane ratios |
 //! | — (beyond the paper) | [`mixed`] | per-layer precision schedule sweep: uniform int8 vs uniform 2-bit vs mixed |
 //! | — (beyond the paper) | [`cluster`] | tensor-parallel strong scaling: ResNet-18 latency at 1/2/4/8 shard cores, with the all-gather sync fraction |
+//! | — (beyond the paper) | [`profile`] | cycle attribution: per-layer and per-micro-op-class tables from [`crate::obs`] profiles |
 //!
 //! Every generator returns its data structure (for tests and benches) and can
 //! render markdown + CSV under `artifacts/reports/`.
@@ -18,6 +19,7 @@ pub mod cluster;
 pub mod fig3;
 pub mod fig4;
 pub mod mixed;
+pub mod profile;
 pub mod summary;
 pub mod table1;
 pub mod table2;

@@ -1,0 +1,190 @@
+//! Markdown/CSV renderers for cycle-attribution profiles
+//! ([`crate::obs::profile`]): the per-layer and per-micro-op-class tables
+//! `repro profile` prints, in the same `md_table` idiom as the paper
+//! regenerators.
+
+use crate::obs::{ClusterProfile, OpClass, ProgramProfile};
+
+use super::{csv, md_table};
+
+/// Per-layer table: name, scheduled precision, MACs, cycles, share of the
+/// replay total.
+pub fn layers_markdown(p: &ProgramProfile) -> String {
+    let total = p.total_cycles.max(1);
+    let mut rows: Vec<Vec<String>> = p
+        .layers
+        .iter()
+        .map(|l| {
+            vec![
+                l.name.clone(),
+                l.precision.clone(),
+                l.macs.to_string(),
+                l.cycles.to_string(),
+                format!("{:.1}%", 100.0 * l.cycles as f64 / total as f64),
+            ]
+        })
+        .collect();
+    rows.push(vec![
+        "**total**".to_string(),
+        p.schedule.clone(),
+        p.layers.iter().map(|l| l.macs).sum::<u64>().to_string(),
+        p.total_cycles.to_string(),
+        "100.0%".to_string(),
+    ]);
+    format!(
+        "### {} · {} — per-layer cycles\n\n{}",
+        p.model,
+        p.schedule,
+        md_table(&["layer", "precision", "MACs", "cycles", "share"], &rows)
+    )
+}
+
+/// Per-class table over one core's cycles (the [`OpClass::ALL`] order).
+/// Zero-cycle classes are kept — a vanished class is itself information.
+pub fn classes_markdown(label: &str, class_cycles: &[u64], total: u64) -> String {
+    let denom = total.max(1);
+    let rows: Vec<Vec<String>> = OpClass::ALL
+        .iter()
+        .map(|cls| {
+            let c = class_cycles[cls.index()];
+            vec![
+                cls.name().to_string(),
+                c.to_string(),
+                format!("{:.1}%", 100.0 * c as f64 / denom as f64),
+            ]
+        })
+        .collect();
+    format!(
+        "### {label} — per-micro-op-class cycles\n\n{}",
+        md_table(&["class", "cycles", "share"], &rows)
+    )
+}
+
+/// Full single-core report: per-layer then per-class tables.
+pub fn markdown(p: &ProgramProfile) -> String {
+    format!(
+        "{}\n{}",
+        layers_markdown(p),
+        classes_markdown(
+            &format!("{} · {}", p.model, p.schedule),
+            &p.class_cycles,
+            p.total_cycles
+        )
+    )
+}
+
+/// CSV of the per-layer rows (one line per layer, plus the total).
+pub fn layers_csv(p: &ProgramProfile) -> String {
+    let mut rows: Vec<Vec<String>> = p
+        .layers
+        .iter()
+        .map(|l| {
+            vec![l.name.clone(), l.precision.clone(), l.macs.to_string(), l.cycles.to_string()]
+        })
+        .collect();
+    rows.push(vec![
+        "total".to_string(),
+        p.schedule.clone(),
+        p.layers.iter().map(|l| l.macs).sum::<u64>().to_string(),
+        p.total_cycles.to_string(),
+    ]);
+    csv(&["layer", "precision", "macs", "cycles"], &rows)
+}
+
+/// Sharded report: the aggregated cluster timeline (per-layer
+/// `max(shard) + sync`), per-shard totals, and the summed per-class mix
+/// (core-cycles — shards overlap in time, so these sum across cores).
+pub fn cluster_markdown(c: &ClusterProfile) -> String {
+    let model = c.shards.first().map(|p| p.model.as_str()).unwrap_or("-");
+    let schedule = c.shards.first().map(|p| p.schedule.as_str()).unwrap_or("-");
+    let total = c.timing.total_cycles().max(1);
+    let mut rows: Vec<Vec<String>> = c
+        .timing
+        .layers
+        .iter()
+        .map(|l| {
+            vec![
+                l.name.clone(),
+                l.compute_cycles.to_string(),
+                l.sync_cycles.to_string(),
+                format!(
+                    "{:.1}%",
+                    100.0 * (l.compute_cycles + l.sync_cycles) as f64 / total as f64
+                ),
+            ]
+        })
+        .collect();
+    rows.push(vec![
+        "**total**".to_string(),
+        c.timing.compute_cycles.to_string(),
+        c.timing.sync_cycles.to_string(),
+        "100.0%".to_string(),
+    ]);
+    let shard_rows: Vec<Vec<String>> = c
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, p)| vec![format!("shard {i}"), p.total_cycles.to_string()])
+        .collect();
+    let class_total: u64 = c.class_cycles().iter().sum();
+    format!(
+        "### {model} · {schedule} · {} shards — cluster timeline\n\n{}\n{}\n{}",
+        c.shards.len(),
+        md_table(&["layer", "max-shard cycles", "sync cycles", "share"], &rows),
+        md_table(&["core", "compute cycles"], &shard_rows),
+        classes_markdown(
+            &format!("{model} · {schedule} · all shard cores"),
+            &c.class_cycles(),
+            class_total
+        )
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{LayerCycles, N_CLASSES};
+
+    fn profile() -> ProgramProfile {
+        ProgramProfile {
+            model: "tiny@2".to_string(),
+            schedule: "w2a2".to_string(),
+            layers: vec![
+                LayerCycles {
+                    name: "c1".to_string(),
+                    precision: "w2a2".to_string(),
+                    macs: 100,
+                    cycles: 60,
+                },
+                LayerCycles {
+                    name: "fc".to_string(),
+                    precision: "int8".to_string(),
+                    macs: 50,
+                    cycles: 40,
+                },
+            ],
+            class_cycles: {
+                let mut c = [0u64; N_CLASSES];
+                c[0] = 70;
+                c[5] = 30;
+                c
+            },
+            total_cycles: 100,
+        }
+    }
+
+    #[test]
+    fn tables_carry_every_layer_and_class_with_an_exact_total() {
+        let md = markdown(&profile());
+        for needle in ["| c1 |", "| fc |", "| **total** |", "| 100 |", "60.0%", "plane_mac"] {
+            assert!(md.contains(needle), "missing {needle:?} in:\n{md}");
+        }
+        // Every class renders, including the zero-cycle ones.
+        for cls in crate::obs::OpClass::ALL {
+            assert!(md.contains(cls.name()), "missing class {} in:\n{md}", cls.name());
+        }
+        let csv = layers_csv(&profile());
+        assert_eq!(csv.lines().count(), 1 + 2 + 1, "header + layers + total");
+        assert!(csv.ends_with("total,w2a2,150,100\n"), "{csv}");
+    }
+}

@@ -223,6 +223,11 @@ fn expired_requests_are_counted_not_lost() {
     assert_eq!(coord.expired(), n);
     assert_eq!(coord.served(), 0, "expired requests never run");
     assert_eq!(coord.degraded(), 0);
+    // Regression: expired requests must land in the queue-age histogram
+    // like served ones do — every admitted request leaves exactly one
+    // age sample, so the buckets sum to n even when nothing was served.
+    let hist_sum: u64 = coord.stats().queue_age_hist.iter().sum();
+    assert_eq!(hist_sum, n, "each expired request contributes one queue-age sample");
     coord.shutdown();
 }
 

@@ -1,0 +1,266 @@
+//! Observability invariants ([`quark::obs`]), in two families:
+//!
+//! * **Span conservation** (host clock): every request the coordinator
+//!   admits leaves a complete, reconcilable lifecycle in the trace — one
+//!   submit→queue→claim→reply chain per served request, one shared batch
+//!   id (and one replay span) per single-core batch, terminal expire spans
+//!   for dropped requests, and event counts that agree with `CoordStats`.
+//! * **Attribution soundness** (simulated clock): the cycle attributor's
+//!   per-layer and per-class sums equal the independent replay totals
+//!   exactly — zoo-wide, across the acceptance schedules, single-core and
+//!   sharded. No tolerance: timing is a pure function of the instruction
+//!   stream, so any drift is a bug.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use quark::arch::MachineConfig;
+use quark::cluster::{cluster_timing, compile_cluster};
+use quark::coordinator::{Coordinator, CoordinatorConfig, DegradePolicy, InferenceRequest};
+use quark::nn::model::{Precision, PrecisionMap};
+use quark::nn::zoo;
+use quark::obs::{self, SpanKind, TraceEvent};
+use quark::program::compile;
+use quark::sim::{Sim, SimMode};
+
+fn small_cfg() -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::demo();
+    cfg.workers = 1;
+    cfg.batch_size = 8;
+    cfg.batch_timeout = Duration::from_millis(2);
+    cfg
+}
+
+fn count(events: &[TraceEvent], kind: SpanKind, req: Option<u64>) -> usize {
+    events.iter().filter(|e| e.kind == kind && (req.is_none() || e.req == req)).count()
+}
+
+#[test]
+fn served_requests_leave_one_complete_lifecycle_chain_each() {
+    let mut cfg = small_cfg();
+    // A long fill window so the riders below are claimed as ONE batch.
+    cfg.batch_timeout = Duration::from_millis(500);
+    let coord = Coordinator::start(cfg);
+    let tracer = coord.enable_tracing();
+
+    // Occupy the single worker with a functional request so the riders
+    // queue up behind it and get claimed together.
+    let input = vec![7u8; 32 * 32 * 3];
+    let blocker = coord
+        .submit(InferenceRequest { id: 100, input: Some(input.clone()), ..Default::default() })
+        .unwrap();
+    while coord.stats().queue_depth > 0 {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let riders: Vec<_> = (0..3u64)
+        .map(|id| {
+            coord
+                .submit(InferenceRequest { id, input: Some(input.clone()), ..Default::default() })
+                .unwrap()
+        })
+        .collect();
+    let blocker_resp =
+        blocker.recv_timeout(Duration::from_secs(120)).expect("blocker answered").unwrap();
+    let rider_resps: Vec<_> = riders
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(120)).expect("rider answered").unwrap())
+        .collect();
+    let batch_id = rider_resps[0].batch_id;
+    assert!(
+        rider_resps.iter().all(|r| r.batch_id == batch_id),
+        "riders queued behind one blocker must be claimed as one batch"
+    );
+    assert_ne!(blocker_resp.batch_id, batch_id, "the blocker rode its own batch");
+
+    let events = tracer.drain();
+    // One complete chain per served request: submit → queue → claim → reply.
+    for id in [100u64, 0, 1, 2] {
+        for kind in [SpanKind::Submit, SpanKind::Queue, SpanKind::Claim, SpanKind::Reply] {
+            assert_eq!(
+                count(&events, kind, Some(id)),
+                1,
+                "request {id} must carry exactly one {} event",
+                kind.name()
+            );
+        }
+    }
+    // Batched requests share one batch span: their queue/claim/reply events
+    // all carry the shared batch id, and exactly one replay span does too.
+    for e in events.iter().filter(|e| e.req.is_some_and(|id| id < 3)) {
+        if e.kind != SpanKind::Submit {
+            assert_eq!(e.batch, Some(batch_id), "{} of a rider", e.kind.name());
+        }
+    }
+    let batch_replays: Vec<_> = events
+        .iter()
+        .filter(|e| e.kind == SpanKind::Replay && e.batch == Some(batch_id))
+        .collect();
+    assert_eq!(batch_replays.len(), 1, "one shared replay span per single-core batch");
+    assert!(batch_replays[0].label.contains("n=3"), "{}", batch_replays[0].label);
+    // Counts reconcile with the coordinator's own accounting.
+    let stats = coord.stats();
+    assert_eq!(count(&events, SpanKind::Reply, None) as u64, stats.served + stats.degraded);
+    assert_eq!(count(&events, SpanKind::Submit, None), 4);
+    assert_eq!(count(&events, SpanKind::Expire, None), 0);
+    assert_eq!(stats.trace_dropped, 0, "nothing here should overflow a ring");
+    // The first functional resolution of the default deployment also filled
+    // the default profile (the serve trace's simulated track).
+    let profiles: Vec<_> = coord.default_profiles().into_iter().flatten().collect();
+    assert_eq!(profiles.len(), 1, "default-schedule timing miss captures the profile");
+    assert_eq!(profiles[0].total_cycles, blocker_resp.sim_cycles, "profile == served timing");
+    coord.shutdown();
+}
+
+#[test]
+fn expired_and_degraded_requests_carry_matching_terminal_events() {
+    let mut cfg = small_cfg();
+    // depth 0: every eligible request degrades — deterministic.
+    cfg.degrade = Some(DegradePolicy {
+        schedule: PrecisionMap::uniform(Precision::Sub { abits: 1, wbits: 1, use_vbitpack: true }),
+        depth: 0,
+    });
+    let coord = Coordinator::start(cfg);
+    let tracer = coord.enable_tracing();
+
+    // deadline_ms=0 has always passed by claim time: deterministic expiry.
+    let expired: Vec<_> = (0..4u64)
+        .map(|id| {
+            coord
+                .submit(InferenceRequest { id, deadline_ms: Some(0), ..Default::default() })
+                .unwrap()
+        })
+        .collect();
+    for rx in expired {
+        let res = rx.recv_timeout(Duration::from_secs(120)).expect("expiry answered");
+        assert!(res.is_err(), "deadline_ms=0 must expire");
+    }
+    // An eligible probe degrades (nothing pinned, depth already exceeded).
+    let rx = coord.submit(InferenceRequest { id: 50, ..Default::default() }).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap().unwrap();
+    assert!(resp.degraded);
+
+    let events = tracer.drain();
+    for id in 0..4u64 {
+        assert_eq!(count(&events, SpanKind::Expire, Some(id)), 1, "request {id}");
+        assert_eq!(count(&events, SpanKind::Submit, Some(id)), 1, "request {id}");
+        // Terminal means terminal: an expired request never reaches a
+        // worker, so no queue/claim/reply events exist for it.
+        for kind in [SpanKind::Queue, SpanKind::Claim, SpanKind::Reply] {
+            assert_eq!(count(&events, kind, Some(id)), 0, "{} of expired {id}", kind.name());
+        }
+    }
+    assert_eq!(count(&events, SpanKind::Expire, None) as u64, coord.stats().expired);
+    // The degraded completion is visible end to end: degradation is decided
+    // at admission, so the submit instant already carries the disposition,
+    // and the reply instant confirms it.
+    let submit = events
+        .iter()
+        .find(|e| e.kind == SpanKind::Submit && e.req == Some(50))
+        .expect("degraded submit");
+    assert_eq!(submit.label, "degraded");
+    let reply = events
+        .iter()
+        .find(|e| e.kind == SpanKind::Reply && e.req == Some(50))
+        .expect("degraded reply");
+    assert_eq!(reply.label, "degraded");
+    coord.shutdown();
+}
+
+#[test]
+fn attribution_sums_equal_replay_totals_across_the_zoo() {
+    let machine = MachineConfig::quark(4);
+    let mut checked = 0usize;
+    for entry in zoo::entries() {
+        let net = zoo::model_profile(entry.name, true).expect("registry entries are valid");
+        let scheds: Vec<(String, PrecisionMap)> = vec![
+            ("w2a2".into(), PrecisionMap::parse("w2a2").unwrap()),
+            ("w1a1".into(), PrecisionMap::parse("w1a1").unwrap()),
+            ("mixed".into(), zoo::mixed_schedule(&net)),
+            ("int8".into(), PrecisionMap::parse("int8").unwrap()),
+        ];
+        for (label, sched) in &scheds {
+            // Single core: per-layer deltas must match an independent timed
+            // replay layer for layer, and both class/layer sums its total.
+            let Ok(prog) = compile(&net, &machine, sched) else {
+                continue; // schedule not deployable on this model: skip
+            };
+            let profile = obs::profile_on_fresh_core(&prog, &machine);
+            let mut sim = Sim::new(machine.clone());
+            sim.set_mode(SimMode::TimingOnly);
+            let base = sim.alloc(prog.mem_len());
+            let run = sim.execute(&prog, base);
+            let ctx = format!("{} · {label}", entry.name);
+            assert_eq!(profile.total_cycles, run.cycles, "{ctx}: total");
+            assert_eq!(profile.layers.len(), run.reports.len(), "{ctx}: layer count");
+            for (l, r) in profile.layers.iter().zip(&run.reports) {
+                assert_eq!(l.cycles, r.run.cycles, "{ctx}: layer {}", l.name);
+                assert_eq!(l.macs, r.run.macs, "{ctx}: layer {} macs", l.name);
+            }
+            let layer_sum: u64 = profile.layers.iter().map(|l| l.cycles).sum();
+            let class_sum: u64 = profile.class_cycles.iter().sum();
+            assert_eq!(layer_sum, profile.total_cycles, "{ctx}: Σ layers");
+            assert_eq!(class_sum, profile.total_cycles, "{ctx}: Σ classes");
+            checked += 1;
+
+            // Sharded: the profiled cluster fold must equal the serving
+            // path's cluster timing model exactly.
+            let Ok(cluster) = compile_cluster(&net, &machine, sched, 2) else {
+                continue; // 2 shards not deployable here: skip
+            };
+            let cprofile = obs::profile_cluster(&cluster, &machine);
+            let timing = cluster_timing(&cluster, &machine);
+            assert_eq!(
+                cprofile.timing.total_cycles(),
+                timing.total_cycles(),
+                "{ctx} · shards=2: total"
+            );
+            assert_eq!(cprofile.timing.sync_cycles, timing.sync_cycles, "{ctx} · shards=2: sync");
+            let shard_class_sum: u64 = cprofile.class_cycles().iter().sum();
+            let shard_total_sum: u64 = cprofile.shards.iter().map(|p| p.total_cycles).sum();
+            assert_eq!(shard_class_sum, shard_total_sum, "{ctx} · shards=2: Σ classes");
+            checked += 1;
+        }
+    }
+    assert!(checked >= 8, "the sweep must actually cover deployments (got {checked})");
+}
+
+#[test]
+fn batched_two_model_serve_run_exports_a_loadable_dual_domain_trace() {
+    let mut cfg = small_cfg();
+    cfg.models.push(Arc::new(zoo::model("mlp@10").unwrap()));
+    let coord = Coordinator::start(cfg);
+    let tracer = coord.enable_tracing();
+
+    let input = vec![9u8; 32 * 32 * 3];
+    let rxs: Vec<_> = (0..4u64)
+        .map(|id| {
+            let net = if id % 2 == 0 { None } else { Some("mlp@10".to_string()) };
+            let req =
+                InferenceRequest { id, net, input: Some(input.clone()), ..Default::default() };
+            coord.submit(req).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(120)).expect("answered").unwrap();
+    }
+
+    let events = tracer.drain();
+    let sims: Vec<_> = coord.default_profiles().into_iter().flatten().collect();
+    assert_eq!(sims.len(), 2, "both deployed models resolved default timing");
+    let json = obs::export::chrome_trace_json(&events, &sims);
+    let n = obs::export::validate_chrome_trace(&json).expect("exported trace must parse");
+    assert!(n >= events.len(), "host events all exported");
+    // Both clock domains are present as separate process tracks.
+    assert!(json.contains("host (wall clock"), "host process track");
+    assert!(json.contains("sim (1 cycle ="), "sim process track");
+    assert!(json.contains("\"cat\":\"sim-layer\""), "per-layer sim spans");
+    assert!(json.contains("\"cat\":\"sim-class\""), "per-class sim spans");
+    for p in &sims {
+        assert!(json.contains(&format!("{} [{}] layers", p.model, p.schedule)), "{}", p.model);
+    }
+    // The folded view carries both domains too.
+    let folded = obs::export::folded_stacks(&events, &sims);
+    assert!(folded.lines().any(|l| l.starts_with("host;")), "{folded}");
+    assert!(folded.lines().any(|l| l.starts_with("sim;")), "{folded}");
+    coord.shutdown();
+}
