@@ -9,9 +9,20 @@
 //! ([`quark::cluster`]), and the rows carry speedup vs the true 1-shard
 //! run plus the Amdahl-style sync fraction.
 //!
+//! A second sweep compares the two parallelism axes on the deep uniform
+//! workload tensor sharding handles worst: `attn-tiny`'s FC-only attention
+//! stack ([`quark::report::cluster::generate_modes`]). Tensor sharding
+//! replicates the per-request activation packing on every shard and pays an
+//! all-gather per layer, so its sustained throughput is 1/latency; the
+//! pipeline completes one request per `max(stage)` period once full.
+//!
 //! Acceptance: ≥1.6x modeled-latency speedup at 4 shards on ResNet-18
-//! w2a2. Pass `--fast` for a truncated 8-layer graph (smoke only; the
-//! assertion is calibrated to the full net and skipped).
+//! w2a2, and pipeline sustained throughput ≥1.5x tensor-parallel at
+//! 4 cores on attn-tiny w2a2. Pass `--fast` for a truncated 8-layer
+//! ResNet graph (smoke only; that assertion is calibrated to the full net
+//! and skipped). The attn-tiny mode sweep always runs the full 23-layer
+//! stack — it is cheap — so `--fast` still smokes the pipeline gate, at a
+//! 1.2x floor (a de-pipelining regression drops the ratio to ~1.0).
 
 #[path = "support/bench_json.rs"]
 mod bench_json;
@@ -19,7 +30,7 @@ mod bench_json;
 use std::time::Instant;
 
 use quark::nn::zoo;
-use quark::report::cluster::{generate, DEFAULT_SHARD_COUNTS};
+use quark::report::cluster::{generate, generate_modes, DEFAULT_SHARD_COUNTS};
 
 fn main() {
     let fast = std::env::args().any(|a| a == "--fast");
@@ -57,7 +68,40 @@ fn main() {
          sweep host wall-clock: {sweep_s:.2} s, shard programs compiled + replayed\n\
          on parallel host threads)"
     );
-    let rows: Vec<_> = rep
+    // Tensor vs pipeline on the deep uniform workload (full attn-tiny in
+    // both modes — 23 small FC layers, cheap either way).
+    let attn = zoo::model("attn-tiny").expect("registry entry");
+    let mode_counts = [1usize, 2, 4];
+    println!(
+        "\n== tensor vs pipeline, {} at {mode_counts:?} cores ==",
+        attn.name()
+    );
+    let t1 = Instant::now();
+    let modes = generate_modes(&attn, &mode_counts);
+    let modes_s = t1.elapsed().as_secs_f64();
+    println!(
+        "{:<10} {:>6} {:>14} {:>11} {:>12} {:>10} {:>10} {:>11}",
+        "schedule", "cores", "tensor cycles", "pipe fill", "pipe period", "pipe hops", "sustained", "stage util"
+    );
+    for r in &modes.rows {
+        println!(
+            "{:<10} {:>6} {:>14} {:>11} {:>12} {:>10} {:>9.2}x {:>11.2}",
+            r.schedule,
+            r.cores,
+            r.tensor_cycles,
+            r.pipeline_fill,
+            r.pipeline_period,
+            r.pipeline_hops,
+            r.sustained_ratio,
+            r.mean_stage_util
+        );
+    }
+    println!(
+        "\n(sustained = tensor latency / pipeline period: requests completed per\n\
+         cycle once the pipe is full, vs one tensor-parallel request at a time.\n\
+         mode sweep host wall-clock: {modes_s:.2} s)"
+    );
+    let mut rows: Vec<_> = rep
         .rows
         .iter()
         .map(|r| {
@@ -69,7 +113,37 @@ fn main() {
                 .field("mean_shard_util", r.mean_shard_util)
         })
         .collect();
+    rows.extend(modes.rows.iter().map(|r| {
+        bench_json::Row::new(&format!("modes_{}_c{}", r.schedule, r.cores))
+            .field("tensor_cycles", r.tensor_cycles as f64)
+            .field("pipeline_fill", r.pipeline_fill as f64)
+            .field("pipeline_period", r.pipeline_period as f64)
+            .field("pipeline_hops", r.pipeline_hops as f64)
+            .field("sustained_ratio", r.sustained_ratio)
+            .field("mean_stage_util", r.mean_stage_util)
+    }));
     bench_json::write("cluster_scaling", if fast { "fast" } else { "full" }, &rows);
+    // Pipeline gate: runs in both modes (the attn-tiny sweep is identical),
+    // with a lower --fast floor so the smoke stays robust while still
+    // catching a de-pipelining regression (ratio ~1.0).
+    let gate = modes
+        .rows
+        .iter()
+        .find(|r| r.schedule == "w2a2" && r.cores == 4)
+        .expect("mode sweep covers w2a2 at 4 cores");
+    let floor = if fast { 1.2 } else { 1.5 };
+    assert!(
+        gate.sustained_ratio >= floor,
+        "acceptance: pipeline sustained throughput ≥{floor}x tensor at 4 cores on \
+         attn-tiny w2a2 (got {:.2}x, period {} vs tensor {})",
+        gate.sustained_ratio,
+        gate.pipeline_period,
+        gate.tensor_cycles
+    );
+    println!(
+        "acceptance: pipeline sustains {:.2}x ≥ {floor}x tensor at 4 cores (attn-tiny w2a2) ✓",
+        gate.sustained_ratio
+    );
     if !fast {
         let r = rep
             .rows

@@ -9,13 +9,15 @@
 //!               [--machine <ara-4l|quark-4l|quark-8l>] [--fast]
 //! repro verify [--net <spec>] [--prec <spec>] [--shards N]
 //!              [--machine <ara-4l|quark-4l|quark-8l>] [--fast]
-//! repro cluster [--net <spec>] [--shards 1,2,4,8] [--fast]
+//! repro cluster [--net <spec>] [--shards 1,2,4,8] [--pipeline] [--fast]
 //! repro profile [--net <spec>] [--prec <spec|mixed>] [--shards N]
+//!               [--stages N]
 //!               [--machine <ara-4l|quark-4l|quark-8l>] [--fast] [--out <path>]
 //! repro models
 //! repro crosscheck [--artifact artifacts/qgemm.hlo.txt] [--seed S]
 //! repro serve [--addr 127.0.0.1:7070] [--workers N] [--batch B] [--queue Q]
 //!             [--machine <ara-4l|quark-4l|quark-8l>] [--shards N]
+//!             [--mode <tensor|pipeline>] [--stages N]
 //!             [--models <spec,spec,…>] [--fast]
 //!             [--precision <spec>]      e.g. --precision "w2a2;c1=int8;fc=int8"
 //!             [--degrade <spec>] [--degrade-depth N]
@@ -50,7 +52,13 @@
 //! 1/2/4/8 shard cores for w2a2 / w1a1 / mixed, with the all-gather sync
 //! fraction. `serve --shards N` makes the coordinator partition every
 //! default inference across N simulated cores (clients can override per
-//! request with the `shards=` wire field).
+//! request with the `shards=` wire field). `repro cluster --pipeline` adds
+//! the tensor-vs-pipeline sustained-throughput comparison
+//! ([`crate::report::cluster::generate_modes`]), and `serve
+//! --mode pipeline --stages N` deploys the coordinator in pipeline-parallel
+//! mode instead: contiguous layer ranges staged across N cores, requests
+//! streamed through bounded activation queues (clients override per request
+//! with the `mode=` / `stages=` wire fields; the two axes don't compose).
 //!
 //! `serve --models a,b,c` deploys several zoo models behind one
 //! coordinator — the first is the default; clients pick per request with
@@ -529,6 +537,31 @@ fn cmd_cluster(flags: &HashMap<String, String>) -> Result<()> {
     println!("{}", rep.markdown());
     report::write_report("cluster.md", &rep.markdown())?;
     report::write_report("cluster.csv", &rep.csv())?;
+    if flags.contains_key("pipeline") {
+        // Stage counts the net cannot form (residual blocks are indivisible)
+        // are reported and skipped, not fatal — cut feasibility is
+        // cost-independent, so unit costs suffice to probe it.
+        use crate::nn::model::StagePlan;
+        let feasible: Vec<usize> = counts
+            .iter()
+            .copied()
+            .filter(|&n| match StagePlan::derive_balanced(&net, n, &vec![1; net.len()]) {
+                Ok(_) => true,
+                Err(e) => {
+                    eprintln!("[cluster] skipping {n} stages: {e}");
+                    false
+                }
+            })
+            .collect();
+        eprintln!(
+            "[cluster] {} tensor-vs-pipeline comparison at {feasible:?} cores…",
+            net.name()
+        );
+        let modes = report::cluster::generate_modes(&net, &feasible);
+        println!("{}", modes.markdown());
+        report::write_report("cluster_modes.md", &modes.markdown())?;
+        report::write_report("cluster_modes.csv", &modes.csv())?;
+    }
     Ok(())
 }
 
@@ -538,7 +571,9 @@ fn cmd_cluster(flags: &HashMap<String, String>) -> Result<()> {
 /// equality, layer for layer), print the tables, and optionally export a
 /// Chrome trace (`--out`).
 fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
-    use crate::cluster::{cluster_timing, compile_cluster};
+    use crate::cluster::{
+        cluster_timing, compile_cluster, compile_pipeline, pipeline_timing, ClusterMode,
+    };
     use crate::obs;
     use crate::sim::{Sim, SimMode};
 
@@ -556,16 +591,47 @@ fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
         Some(s) => s.parse().with_context(|| format!("bad --shards {s:?}"))?,
         None => 1,
     };
+    // `--stages N` (N > 1) profiles the pipeline-parallel deployment; the
+    // two axes don't compose, which validate_parallelism enforces below.
+    let stages: usize = match flags.get("stages") {
+        Some(s) => s.parse().with_context(|| format!("bad --stages {s:?}"))?,
+        None => 1,
+    };
+    let mode = if stages > 1 { ClusterMode::Pipeline } else { ClusterMode::Tensor };
     if let Err(e) = schedule
         .validate(&net)
         .and_then(|_| schedule.validate_machine(&net, &machine))
-        .and_then(|_| crate::coordinator::validate_shards(shards, &schedule, &net))
+        .and_then(|_| crate::coordinator::validate_parallelism(mode, shards, stages, &schedule, &net))
     {
-        bail!("cannot deploy {} · {label} · shards={shards}: {e}", net.name());
+        bail!("cannot deploy {} · {label} · shards={shards} · stages={stages}: {e}", net.name());
     }
-    eprintln!("[profile] {} · {label} · shards={shards} on {}…", net.name(), machine.name);
+    eprintln!(
+        "[profile] {} · {label} · shards={shards} · stages={stages} on {}…",
+        net.name(),
+        machine.name
+    );
 
-    let (md, sims) = if shards == 1 {
+    let (md, sims) = if stages > 1 {
+        // Stream depth for the profiled pipeline's busy/bubble split.
+        const STREAM_TOKENS: u64 = 16;
+        let pipeline = match compile_pipeline(&net, &machine, &schedule, stages) {
+            Ok(p) => p,
+            Err(e) => bail!("pipeline compile failed: {e}"),
+        };
+        let profile = obs::profile_pipeline(&pipeline, &machine, STREAM_TOKENS);
+        // Independent cross-check against the serving-path pipeline model.
+        let timing = pipeline_timing(&pipeline, &machine, STREAM_TOKENS);
+        if timing.total_cycles() != profile.timing.total_cycles() {
+            bail!(
+                "pipeline attribution diverged: timing model {} cycles, profile {}",
+                timing.total_cycles(),
+                profile.timing.total_cycles()
+            );
+        }
+        println!("pipeline attribution == pipeline timing model ✓");
+        let sims = profile.stages.clone();
+        (report::profile::pipeline_markdown(&profile), sims)
+    } else if shards == 1 {
         let prog = match crate::program::compile(&net, &machine, &schedule) {
             Ok(p) => p,
             Err(e) => bail!("compile failed: {e}"),
@@ -673,6 +739,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(s) = flags.get("shards") {
         cfg.shards = s.parse().with_context(|| format!("bad --shards {s:?}"))?;
     }
+    if let Some(m) = flags.get("mode") {
+        match crate::cluster::ClusterMode::parse(m) {
+            Ok(mode) => cfg.mode = mode,
+            Err(e) => bail!("bad --mode: {e}"),
+        }
+    }
+    if let Some(s) = flags.get("stages") {
+        cfg.stages = s.parse().with_context(|| format!("bad --stages {s:?}"))?;
+    }
     // Overload degrade policy: fallback schedule + optional trip depth.
     let degrade = match flags.get("degrade") {
         Some(spec) => match PrecisionMap::parse(spec) {
@@ -713,8 +788,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         {
             bail!("bad --precision for model {:?}: {e}", model.name());
         }
-        if let Err(e) = crate::coordinator::validate_shards(cfg.shards, &cfg.schedule, model) {
-            bail!("bad --shards for model {:?}: {e}", model.name());
+        if let Err(e) = crate::coordinator::validate_parallelism(
+            cfg.mode,
+            cfg.shards,
+            cfg.stages,
+            &cfg.schedule,
+            model,
+        ) {
+            bail!("bad --mode/--shards/--stages for model {:?}: {e}", model.name());
         }
         // The degrade fallback must be deployable everywhere the default is.
         if let Some(map) = &degrade {
@@ -723,7 +804,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             {
                 bail!("bad --degrade for model {:?}: {e}", model.name());
             }
-            if let Err(e) = crate::coordinator::validate_shards(cfg.shards, map, model) {
+            if let Err(e) = crate::coordinator::validate_parallelism(
+                cfg.mode,
+                cfg.shards,
+                cfg.stages,
+                map,
+                model,
+            ) {
                 bail!("bad --degrade for model {:?}: {e}", model.name());
             }
         }

@@ -43,6 +43,13 @@
 //! partial maps. [`cluster_timing`] replays them `TimingOnly` (fresh cores,
 //! also in parallel) and aggregates the cycle model.
 
+pub mod pipeline;
+
+pub use pipeline::{
+    compile_pipeline, hop_cost, pipeline_timing, stage_costs, PipelineCores, PipelineInference,
+    PipelineProgram, PipelineTiming, StageTiming,
+};
+
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
@@ -51,6 +58,49 @@ use crate::nn::model::{PrecisionMap, ShardPlan};
 use crate::nn::NetGraph;
 use crate::program::{compile_shard, CompiledProgram, ShardSeg};
 use crate::sim::{Sim, SimMode};
+
+/// How a multi-core deployment splits one model across its cores — the
+/// scheduling seam future strategies (e.g. Sparq-style sparse kernels) slot
+/// into.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ClusterMode {
+    /// Tensor parallelism: every core works the same layer on a contiguous
+    /// output-channel range, all-gathering activations per layer
+    /// ([`ShardPlan`], this module). Minimizes single-request latency.
+    #[default]
+    Tensor,
+    /// Pipeline parallelism: each core owns a contiguous layer range and
+    /// activations stream between stages
+    /// ([`crate::nn::model::StagePlan`], [`pipeline`]). Maximizes sustained
+    /// throughput on deep uniform stacks.
+    Pipeline,
+}
+
+impl ClusterMode {
+    /// Wire label (the `mode=` request field).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ClusterMode::Tensor => "tensor",
+            ClusterMode::Pipeline => "pipeline",
+        }
+    }
+
+    /// Parse a [`ClusterMode::label`]-format string.
+    ///
+    /// ```
+    /// use quark::cluster::ClusterMode;
+    /// assert_eq!(ClusterMode::parse("tensor"), Ok(ClusterMode::Tensor));
+    /// assert_eq!(ClusterMode::parse("pipeline"), Ok(ClusterMode::Pipeline));
+    /// assert!(ClusterMode::parse("ring").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<ClusterMode, String> {
+        match s {
+            "tensor" => Ok(ClusterMode::Tensor),
+            "pipeline" => Ok(ClusterMode::Pipeline),
+            _ => Err(format!("unknown cluster mode {s:?} (want tensor or pipeline)")),
+        }
+    }
+}
 
 /// A compiled tensor-parallel deployment: one [`CompiledProgram`] per shard
 /// core, all over the same (net, machine, schedule).

@@ -1,0 +1,564 @@
+//! Pipeline parallelism — staged inference across multiple simulated Quark
+//! cores.
+//!
+//! Where tensor sharding ([`crate::cluster`]) puts every core on the *same*
+//! layer and pays an all-gather per layer, pipeline parallelism assigns each
+//! core a contiguous *stage* of layers ([`StagePlan`]) and streams
+//! activations stage-to-stage, so N requests are in flight at once — the
+//! staged-execution regime SPEED (arXiv 2409.14017) argues FC-heavy
+//! multi-precision transformer stacks belong in:
+//!
+//! ```text
+//!             stage 0            stage 1            stage 2
+//! req 0 ─► [layers 0..a] ─q─► [layers a..b] ─q─► [layers b..n] ─► logits 0
+//! req 1 ─►      …        ─q─►      …        ─q─►       …        ─► logits 1
+//!               (bounded activation queues between persistent Sims)
+//! ```
+//!
+//! **Bit-exactness.** Each stage is compiled through the same single-source
+//! `emit_model` routine as every other artifact ([`compile_stage`]): the
+//! deterministic parameter stream is advanced over the stage's skipped
+//! prefix, so in-range layers draw exactly the single-core weights; and
+//! requant grids come from the narrowest-consumer rule over the *full* net,
+//! so the upstream stage's last layer already clamped the hand-off
+//! activation onto the downstream consumer grid — the hand-off is a pure
+//! byte copy that never re-quantizes, exactly like the tensor-mode gather.
+//! Streamed logits are therefore bit-identical to the single-core program
+//! and the naive-i128 host golden model (`rust/tests/pipeline.rs`).
+//!
+//! **Cost model.** Let `e_s = stage_cycles[s] + hop_cycles[s]`, where
+//! [`hop_cost`] charges the stage's output activation over the per-core AXI
+//! link exactly like one step of the tensor-mode ring all-gather
+//! ([`super::sync_cost`]; the last stage has no hop). Then for `N` streamed
+//! requests:
+//!
+//! * fill (first-token latency) = `Σ e_s`,
+//! * steady-state period = `max e_s`,
+//! * total = `fill + (N − 1) · period`,
+//! * per-stage busy = `N · e_s`, bubble = `total − busy` (≥ 0 because
+//!   `total ≥ N · e_s` for every `s`) — [`PipelineTiming`] carries the
+//!   conservation law Σ-checked by [`crate::obs::profile_pipeline`].
+//!
+//! **Host execution.** [`PipelineCores::infer_stream`] runs one persistent
+//! [`Sim`] per stage on its own host thread, connected by *bounded*
+//! activation queues ([`ACT_QUEUE_DEPTH`]-deep [`sync_channel`]s), so
+//! upstream stages naturally back-pressure instead of buffering the whole
+//! request stream.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::arch::MachineConfig;
+use crate::nn::model::{ModelRunner, PrecisionMap, StagePlan};
+use crate::nn::NetGraph;
+use crate::program::{compile_stage, CompiledProgram};
+use crate::sim::{Sim, SimMode};
+
+use super::{shard_mem_bytes, sync_cost};
+
+/// Depth of each bounded inter-stage activation queue: enough to decouple
+/// neighbouring stages' jitter, small enough that back-pressure (not
+/// buffering) governs a long stream.
+pub const ACT_QUEUE_DEPTH: usize = 2;
+
+/// A compiled pipeline-parallel deployment: one [`CompiledProgram`] per
+/// stage core, all over the same (net, machine, schedule), whose layer
+/// ranges tile the source net in order. `Clone` is cheap: the stage
+/// programs are `Arc`-shared (the coordinator clones per request).
+#[derive(Clone)]
+pub struct PipelineProgram {
+    stages: Vec<Arc<CompiledProgram>>,
+}
+
+impl PipelineProgram {
+    /// Assemble from per-stage programs (e.g. the coordinator's per-stage
+    /// cache entries). Programs must be a complete, consistent stage chain:
+    /// contiguous ranges tiling the net from layer 0, one deployment
+    /// identity, and each stage's input segment sized to its predecessor's
+    /// output.
+    pub fn from_stages(stages: Vec<Arc<CompiledProgram>>) -> Result<PipelineProgram, String> {
+        if stages.is_empty() {
+            return Err("a pipeline needs at least one stage program".to_string());
+        }
+        let n = stages.len();
+        let mut expect_lo = 0usize;
+        for (i, p) in stages.iter().enumerate() {
+            let info = p
+                .stage()
+                .ok_or_else(|| format!("program {i} is not a pipeline-stage program"))?;
+            if info.index != i || info.count != n {
+                return Err(format!(
+                    "program {i} is stage {}/{}, expected {i}/{n}",
+                    info.index, info.count
+                ));
+            }
+            if info.lo != expect_lo {
+                return Err(format!(
+                    "stage {i} starts at layer {} but the previous stage ended at {expect_lo}",
+                    info.lo
+                ));
+            }
+            expect_lo = info.hi;
+            if p.net_fingerprint() != stages[0].net_fingerprint()
+                || p.machine_fingerprint() != stages[0].machine_fingerprint()
+                || p.schedule() != stages[0].schedule()
+            {
+                return Err(format!("program {i} belongs to a different deployment"));
+            }
+            if i > 0 && p.input_elems() != stages[i - 1].out_elems() {
+                return Err(format!(
+                    "stage {i} expects {} input elements but stage {} produces {}",
+                    p.input_elems(),
+                    i - 1,
+                    stages[i - 1].out_elems()
+                ));
+            }
+        }
+        Ok(PipelineProgram { stages })
+    }
+
+    /// Number of stage cores.
+    pub fn stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The per-stage programs, in stage order.
+    pub fn stage_programs(&self) -> &[Arc<CompiledProgram>] {
+        &self.stages
+    }
+
+    /// Total layers of the source net (the stages tile it).
+    pub fn layers(&self) -> usize {
+        self.stages.last().and_then(|p| p.stage()).map(|s| s.hi).unwrap_or(0)
+    }
+
+    /// Element count of the final feature map (the logits).
+    pub fn out_elems(&self) -> usize {
+        self.stages.last().expect("non-empty pipeline").out_elems()
+    }
+
+    /// The schedule the pipeline was compiled under.
+    pub fn schedule(&self) -> &PrecisionMap {
+        self.stages[0].schedule()
+    }
+}
+
+/// Per-layer cycle estimates for [`StagePlan::derive_balanced`]: one live
+/// `TimingOnly` emission of `net` under `schedule` (data-independent — no
+/// tensor data is synthesized, the historical cost of a timing sweep).
+pub fn stage_costs(net: &NetGraph, machine: &MachineConfig, schedule: &PrecisionMap) -> Vec<u64> {
+    let mut sim = Sim::new(machine.clone());
+    sim.set_mode(SimMode::TimingOnly);
+    let run = ModelRunner::run_scheduled(&mut sim, net, schedule, None);
+    run.reports.iter().map(|r| r.run.cycles).collect()
+}
+
+/// Compile `net` for `machine` under `schedule`, partitioned into `stages`
+/// pipeline stages balanced on the timing model's per-layer cycle estimates
+/// ([`stage_costs`]). Validates the schedule (like
+/// [`crate::program::compile`]) plus the stage plan (cut validity,
+/// integer-only schedules at > 1 stage). Stage programs are independent, so
+/// they compile on parallel host threads, like [`super::compile_cluster`].
+pub fn compile_pipeline(
+    net: &NetGraph,
+    machine: &MachineConfig,
+    schedule: &PrecisionMap,
+    stages: usize,
+) -> Result<PipelineProgram, String> {
+    schedule.validate(net)?;
+    schedule.validate_machine(net, machine)?;
+    let costs = stage_costs(net, machine, schedule);
+    let plan = StagePlan::derive_balanced(net, stages, &costs)?;
+    plan.validate_schedule(schedule)?;
+    let progs = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..stages)
+            .map(|i| {
+                let plan = &plan;
+                s.spawn(move || compile_stage(net, machine, schedule, plan, i).map(Arc::new))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("stage compile thread panicked"))
+            .collect::<Result<Vec<_>, _>>()
+    })?;
+    PipelineProgram::from_stages(progs)
+}
+
+/// Modeled cycles to move one stage's output activation (`bytes`) to the
+/// next core: exactly one step of the tensor-mode ring all-gather
+/// ([`sync_cost`] at 2 cores) — the slice crosses the AXI link at
+/// `axi_bytes_per_cycle` after a `mem_latency` start-up. 0 when there is no
+/// next stage.
+pub fn hop_cost(cfg: &MachineConfig, bytes: u64) -> u64 {
+    sync_cost(cfg, 2, bytes)
+}
+
+/// One stage of the pipeline cycle model.
+#[derive(Clone, Debug)]
+pub struct StageTiming {
+    /// Layer range `[lo, hi)` the stage executes.
+    pub range: (usize, usize),
+    /// Σ of the stage's per-layer compute cycles.
+    pub compute_cycles: u64,
+    /// Modeled activation-transfer cycles to the next stage ([`hop_cost`];
+    /// 0 for the last stage).
+    pub hop_cycles: u64,
+}
+
+impl StageTiming {
+    /// The stage's contribution to fill and to the steady-state period:
+    /// compute plus its outbound hop.
+    pub fn effective_cycles(&self) -> u64 {
+        self.compute_cycles + self.hop_cycles
+    }
+}
+
+/// The pipeline cycle model for a stream of `tokens` requests — see the
+/// module docs for the fill/period/bubble law.
+#[derive(Clone, Debug)]
+pub struct PipelineTiming {
+    pub stages: Vec<StageTiming>,
+    /// Requests modeled streaming through the pipeline (≥ 1).
+    pub tokens: u64,
+}
+
+impl PipelineTiming {
+    /// First-token latency: Σ per-stage effective cycles.
+    pub fn fill_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.effective_cycles()).sum()
+    }
+
+    /// Steady-state initiation interval: max per-stage effective cycles.
+    pub fn period_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.effective_cycles()).max().unwrap_or(0)
+    }
+
+    /// Modeled end-to-end latency of the whole stream:
+    /// `fill + (tokens − 1) · period`.
+    pub fn total_cycles(&self) -> u64 {
+        self.fill_cycles() + (self.tokens - 1) * self.period_cycles()
+    }
+
+    /// Cycles each stage spends working: `tokens · effective(s)`.
+    pub fn busy_cycles(&self) -> Vec<u64> {
+        self.stages.iter().map(|s| self.tokens * s.effective_cycles()).collect()
+    }
+
+    /// Idle (bubble) cycles each stage spends waiting on the stream:
+    /// `total − busy(s)`, non-negative by construction (`total ≥ tokens ·
+    /// effective(s)` for every stage). Per stage, `busy + bubble == total`
+    /// exactly — the conservation law [`crate::obs::profile_pipeline`]
+    /// asserts.
+    pub fn bubble_cycles(&self) -> Vec<u64> {
+        let total = self.total_cycles();
+        self.busy_cycles().into_iter().map(|b| total - b).collect()
+    }
+
+    /// Modeled utilization of each stage core: busy over total.
+    pub fn stage_utilization(&self) -> Vec<f64> {
+        let total = self.total_cycles().max(1) as f64;
+        self.busy_cycles().into_iter().map(|b| b as f64 / total).collect()
+    }
+}
+
+/// Derive the pipeline cycle model for `pipeline` streaming `tokens`
+/// requests: one `TimingOnly` replay per stage program on parallel host
+/// threads (fresh cores — the cache-miss path, run once per deployment),
+/// hop costs charged per the module cost model.
+pub fn pipeline_timing(
+    pipeline: &PipelineProgram,
+    machine: &MachineConfig,
+    tokens: u64,
+) -> PipelineTiming {
+    assert!(tokens >= 1, "a pipeline stream needs at least one request");
+    let per_stage: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = pipeline
+            .stages
+            .iter()
+            .map(|prog| {
+                s.spawn(move || {
+                    let mut sim = Sim::with_memory(machine.clone(), shard_mem_bytes(prog));
+                    sim.set_mode(SimMode::TimingOnly);
+                    let base = sim.alloc(prog.mem_len());
+                    sim.execute(prog, base).cycles
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("stage timing thread panicked")).collect()
+    });
+    let n = pipeline.stages();
+    let stages = pipeline
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, prog)| {
+            let info = prog.stage().expect("pipeline programs carry stage info");
+            StageTiming {
+                range: (info.lo, info.hi),
+                compute_cycles: per_stage[i],
+                hop_cycles: if i + 1 < n {
+                    hop_cost(machine, prog.output_bytes() as u64)
+                } else {
+                    0
+                },
+            }
+        })
+        .collect();
+    PipelineTiming { stages, tokens }
+}
+
+/// Result of one functional pipeline stream.
+pub struct PipelineInference {
+    /// Per-request logits (u8 codes; pipeline schedules are integer-only),
+    /// in submission order.
+    pub logits: Vec<Vec<u8>>,
+    /// Host wall-clock nanoseconds each stage core spent inside the stream
+    /// (incl. queue waits) — the serving layer's stage-utilization feed.
+    pub stage_busy_ns: Vec<u64>,
+}
+
+struct StageCore {
+    sim: Sim,
+    heap: u64,
+}
+
+/// A pool of persistent stage cores (one [`Sim`] each, bump allocator
+/// rewound between requests — the pipeline analogue of [`super::ClusterCores`]).
+pub struct PipelineCores {
+    machine: MachineConfig,
+    cores: Vec<StageCore>,
+}
+
+impl PipelineCores {
+    /// `count` persistent cores for `machine`. Arenas start minimal and grow
+    /// to fit the first program replayed on them.
+    pub fn new(machine: &MachineConfig, count: usize) -> Self {
+        assert!(count >= 1, "a pipeline needs at least one core");
+        let cores = (0..count)
+            .map(|_| {
+                let sim = Sim::with_memory(machine.clone(), 16 << 20);
+                let heap = sim.machine.mem.brk();
+                StageCore { sim, heap }
+            })
+            .collect();
+        PipelineCores { machine: machine.clone(), cores }
+    }
+
+    pub fn count(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Functional pipeline inference: stream `inputs` through the stage
+    /// cores, one host thread per stage, neighbouring stages connected by
+    /// bounded activation queues. Request order is preserved (queues are
+    /// FIFO and each stage is serial), and every logit vector is
+    /// bit-identical to a single-core [`Sim::execute_functional`] of the
+    /// unstaged program.
+    ///
+    /// Replay preconditions (stage count, machine identity) are checked on
+    /// the caller's thread before any stage thread launches, mirroring
+    /// [`super::ClusterCores::infer`] — a panic inside a stage thread would
+    /// otherwise strand its neighbours on the queues.
+    pub fn infer_stream(
+        &mut self,
+        pipeline: &PipelineProgram,
+        inputs: &[Vec<u8>],
+    ) -> PipelineInference {
+        let n = self.cores.len();
+        assert_eq!(
+            pipeline.stages(),
+            n,
+            "pipeline program has {} stages but this pool has {n} cores",
+            pipeline.stages()
+        );
+        for (core, prog) in self.cores.iter_mut().zip(pipeline.stages.iter()) {
+            assert_eq!(
+                crate::program::machine_fingerprint(&core.sim.cfg),
+                prog.machine_fingerprint(),
+                "stage program compiled for a different machine than this pool"
+            );
+            let need = shard_mem_bytes(prog);
+            if core.sim.machine.mem.size() < need {
+                core.sim = Sim::with_memory(self.machine.clone(), need);
+                core.heap = core.sim.machine.mem.brk();
+            }
+        }
+        if inputs.is_empty() {
+            return PipelineInference { logits: Vec::new(), stage_busy_ns: vec![0; n] };
+        }
+        // Stage s receives from links[s].0 (None for stage 0, which reads
+        // `inputs` directly) and sends into links[s].1 (None for the last
+        // stage, which collects logits).
+        type Link = (Option<Receiver<Vec<u8>>>, Option<SyncSender<Vec<u8>>>);
+        let mut links: Vec<Link> = (0..n).map(|_| (None, None)).collect();
+        for k in 0..n - 1 {
+            let (tx, rx) = sync_channel::<Vec<u8>>(ACT_QUEUE_DEPTH);
+            links[k].1 = Some(tx);
+            links[k + 1].0 = Some(rx);
+        }
+        let results: Vec<(Vec<Vec<u8>>, u64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .cores
+                .iter_mut()
+                .zip(pipeline.stages.iter())
+                .zip(links.into_iter())
+                .map(|((core, prog), (rx, tx))| {
+                    s.spawn(move || {
+                        let t0 = Instant::now();
+                        let mut collected = Vec::new();
+                        for req in inputs {
+                            let bytes: Vec<u8> = match &rx {
+                                None => req.clone(),
+                                Some(rx) => rx.recv().expect("upstream stage hung up early"),
+                            };
+                            core.sim.machine.mem.reset_alloc_to(core.heap);
+                            let base = core.sim.alloc(prog.mem_len());
+                            let run = core.sim.execute_functional(prog, base, Some(&bytes));
+                            let act = core.sim.read_u8s(run.out_addr, run.out_elems);
+                            match &tx {
+                                Some(tx) => {
+                                    tx.send(act).expect("downstream stage hung up early")
+                                }
+                                None => collected.push(act),
+                            }
+                        }
+                        (collected, t0.elapsed().as_nanos() as u64)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("stage replay thread panicked"))
+                .collect()
+        });
+        let stage_busy_ns = results.iter().map(|(_, ns)| *ns).collect();
+        let logits = results.into_iter().last().expect("at least one stage").0;
+        PipelineInference { logits, stage_busy_ns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::demo_net;
+    use crate::nn::model::Precision;
+
+    const W2A2: Precision = Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true };
+
+    #[test]
+    fn compile_pipeline_validates() {
+        let net = demo_net(); // tiny zoo net: 4 convs + pool + fc
+        let quark = MachineConfig::quark(4);
+        let sched = PrecisionMap::uniform(W2A2);
+        assert!(compile_pipeline(&net, &quark, &sched, 0).is_err());
+        assert!(compile_pipeline(&net, &quark, &sched, 64).is_err(), "more stages than layers");
+        let p = compile_pipeline(&net, &quark, &sched, 2).unwrap();
+        assert_eq!(p.stages(), 2);
+        assert_eq!(p.layers(), net.len());
+        assert_eq!(p.out_elems(), net.out_elems());
+        // Stage ranges tile the net and chain their activation segments.
+        let infos: Vec<_> = p.stage_programs().iter().map(|q| q.stage().unwrap()).collect();
+        assert_eq!(infos[0].lo, 0);
+        assert_eq!(infos[0].hi, infos[1].lo);
+        assert_eq!(infos[1].hi, net.len());
+        assert_eq!(p.stage_programs()[1].input_elems(), p.stage_programs()[0].out_elems());
+        // fp32 cannot pipeline at > 1 stage, even on a machine with a vFPU.
+        assert!(compile_pipeline(
+            &net,
+            &MachineConfig::ara(4),
+            &PrecisionMap::uniform(Precision::Fp32),
+            2
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn from_stages_rejects_mismatched_chains() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        let sched = PrecisionMap::uniform(W2A2);
+        let p2 = compile_pipeline(&net, &quark, &sched, 2).unwrap();
+        // Wrong order.
+        let mut progs = p2.stage_programs().to_vec();
+        progs.swap(0, 1);
+        assert!(PipelineProgram::from_stages(progs).is_err());
+        // Incomplete chain.
+        assert!(PipelineProgram::from_stages(p2.stage_programs()[..1].to_vec()).is_err());
+        // Non-stage program.
+        let single = Arc::new(crate::program::compile(&net, &quark, &sched).unwrap());
+        assert!(PipelineProgram::from_stages(vec![single]).is_err());
+    }
+
+    #[test]
+    fn timing_model_fill_period_and_bubbles_conserve() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        let p = compile_pipeline(&net, &quark, &PrecisionMap::uniform(W2A2), 2).unwrap();
+        let t = pipeline_timing(&p, &quark, 8);
+        assert_eq!(t.stages.len(), 2);
+        assert!(t.stages.iter().all(|s| s.compute_cycles > 0));
+        assert!(t.stages[0].hop_cycles > 0, "non-final stage pays its hop");
+        assert_eq!(t.stages[1].hop_cycles, 0, "final stage has no hop");
+        assert_eq!(
+            t.fill_cycles(),
+            t.stages.iter().map(|s| s.effective_cycles()).sum::<u64>()
+        );
+        assert_eq!(t.total_cycles(), t.fill_cycles() + 7 * t.period_cycles());
+        // Conservation: per stage, busy + bubble == total.
+        let (busy, bubbles) = (t.busy_cycles(), t.bubble_cycles());
+        for s in 0..2 {
+            assert_eq!(busy[s] + bubbles[s], t.total_cycles(), "stage {s}");
+        }
+        // The bottleneck stage runs bubble-free in steady state apart from
+        // fill/drain: its bubble is exactly fill − its own effective cycles.
+        let max_s = (0..2).max_by_key(|&s| t.stages[s].effective_cycles()).unwrap();
+        assert_eq!(bubbles[max_s], t.fill_cycles() - t.stages[max_s].effective_cycles());
+        // Sustained throughput beats one-request-at-a-time latency.
+        assert!(t.period_cycles() < t.fill_cycles());
+    }
+
+    #[test]
+    fn single_stage_pipeline_is_the_identity() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        let sched = PrecisionMap::uniform(W2A2);
+        let p = compile_pipeline(&net, &quark, &sched, 1).unwrap();
+        let single = crate::program::compile(&net, &quark, &sched).unwrap();
+        let sp = &p.stage_programs()[0];
+        assert_eq!(sp.trace_len(), single.trace_len());
+        assert_eq!(sp.mem_len(), single.mem_len());
+        assert_eq!(sp.image_bytes(), single.image_bytes());
+        // And the timing model degenerates to the single-core latency.
+        let t = pipeline_timing(&p, &quark, 4);
+        assert_eq!(t.stages[0].hop_cycles, 0);
+        assert_eq!(t.fill_cycles(), t.period_cycles());
+        assert_eq!(t.total_cycles(), 4 * t.fill_cycles());
+    }
+
+    #[test]
+    fn streamed_logits_match_single_core_replay() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        let sched = PrecisionMap::uniform(W2A2);
+        let p = compile_pipeline(&net, &quark, &sched, 3).unwrap();
+        let single = crate::program::compile(&net, &quark, &sched).unwrap();
+        let inputs: Vec<Vec<u8>> = (0..4u8)
+            .map(|r| (0..crate::nn::graph::INPUT_ELEMS).map(|i| (i as u8).wrapping_mul(r + 1)).collect())
+            .collect();
+        let mut cores = PipelineCores::new(&quark, 3);
+        let out = cores.infer_stream(&p, &inputs);
+        assert_eq!(out.logits.len(), 4);
+        assert_eq!(out.stage_busy_ns.len(), 3);
+        let mut sim = Sim::with_memory(quark.clone(), shard_mem_bytes(&single));
+        let heap = sim.machine.mem.brk();
+        for (req, got) in inputs.iter().zip(out.logits.iter()) {
+            sim.machine.mem.reset_alloc_to(heap);
+            let base = sim.alloc(single.mem_len());
+            let run = sim.execute_functional(&single, base, Some(req));
+            let want = sim.read_u8s(run.out_addr, run.out_elems);
+            assert_eq!(got, &want, "pipeline diverged from single-core replay");
+        }
+    }
+}

@@ -95,16 +95,20 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::arch::MachineConfig;
-use crate::cluster::{cluster_timing, ClusterCores, ClusterProgram};
-use crate::nn::model::{Precision, PrecisionMap, ShardPlan};
+use crate::cluster::{
+    cluster_timing, pipeline_timing, stage_costs, ClusterCores, ClusterMode, ClusterProgram,
+    PipelineCores, PipelineProgram,
+};
+use crate::nn::model::{Precision, PrecisionMap, ShardPlan, StagePlan};
 use crate::nn::{zoo, NetGraph};
 use crate::obs;
-use crate::program::{compile, compile_shard, CompiledProgram};
+use crate::program::{compile, compile_shard, compile_stage, CompiledProgram};
 use crate::sim::{Sim, SimMode};
 
 /// Upper bound on per-request shard counts (the cluster runtime spawns one
 /// host thread + one persistent core per shard; 8 matches the widest
-/// configuration the scaling report explores).
+/// configuration the scaling report explores). Pipeline stage counts share
+/// the same bound — either way it caps cores per request.
 pub const MAX_SHARDS: usize = 8;
 
 /// One inference request (CIFAR-sized input codes).
@@ -125,6 +129,15 @@ pub struct InferenceRequest {
     /// Tensor-parallel shard count ([`crate::cluster`]); `None` uses the
     /// deployment default ([`CoordinatorConfig::shards`]), 1 = single core.
     pub shards: Option<usize>,
+    /// Cluster parallelism mode (wire: `mode=tensor|pipeline`); `None` uses
+    /// the deployment default ([`CoordinatorConfig::mode`]). Pipeline mode
+    /// cannot compose with `shards > 1` — the two pick different axes.
+    pub mode: Option<ClusterMode>,
+    /// Pipeline stage count ([`crate::cluster::pipeline`]; wire `stages=`);
+    /// `None` uses the deployment default ([`CoordinatorConfig::stages`]).
+    /// Only meaningful in pipeline mode; bounded by [`MAX_SHARDS`] and the
+    /// model's layer/residual structure.
+    pub stages: Option<usize>,
     /// Queue-wait budget in milliseconds (wire: `deadline_ms=`). If the
     /// request is still queued this long after submission, it is dropped at
     /// claim time with [`ServeError::Expired`] instead of running late.
@@ -147,6 +160,8 @@ impl Default for InferenceRequest {
             net: None,
             schedule: None,
             shards: None,
+            mode: None,
+            stages: None,
             deadline_ms: None,
             prio: Priority::Normal,
         }
@@ -210,11 +225,18 @@ pub struct InferenceResponse {
     /// field `net=`).
     pub model: String,
     /// Shard cores this request's inference was partitioned across (1 =
-    /// classic single-core serving).
+    /// classic single-core serving; always 1 in pipeline mode).
     pub shards: usize,
-    /// Modeled inter-core all-gather cycles included in `sim_cycles`
-    /// (0 when `shards == 1`).
+    /// Modeled inter-core transfer cycles included in `sim_cycles`: the
+    /// all-gather in tensor mode, the Σ of stage-hop activation transfers
+    /// in pipeline mode (0 single-core).
     pub sync_cycles: u64,
+    /// Cluster parallelism mode the request ran under (wire field `mode=`).
+    pub mode: ClusterMode,
+    /// Pipeline stage cores the model was partitioned across (1 outside
+    /// pipeline mode). In pipeline mode `sim_cycles` reports the fill
+    /// latency — one request through every stage, hops included.
+    pub stages: usize,
     /// True when the [`DegradePolicy`] rerouted this request to the
     /// deployment's fallback schedule at admission; `precision` then labels
     /// the fallback, not the deployment default.
@@ -316,6 +338,13 @@ pub struct CoordinatorConfig {
     /// Default tensor-parallel shard count for requests that do not carry
     /// their own (`serve --shards N`; 1 = single-core serving).
     pub shards: usize,
+    /// Default cluster parallelism mode (`serve --mode tensor|pipeline`).
+    /// Pipeline deployments require `shards == 1` — the two axes don't
+    /// compose.
+    pub mode: ClusterMode,
+    /// Default pipeline stage count (`serve --stages N`; only meaningful
+    /// with [`ClusterMode::Pipeline`], 1 = single-core serving).
+    pub stages: usize,
     /// Deployed models, each a validated [`NetGraph`] with a unique name.
     /// The first entry is the default for requests without `net=`
     /// (`serve --models a,b,c`).
@@ -341,6 +370,8 @@ impl CoordinatorConfig {
             batch_timeout: Duration::from_millis(20),
             max_queue: 256,
             shards: 1,
+            mode: ClusterMode::Tensor,
+            stages: 1,
             models: vec![Arc::new(demo_net())],
             degrade: None,
         }
@@ -384,18 +415,21 @@ pub fn demo_net() -> NetGraph {
 pub use crate::program::machine_fingerprint;
 
 /// Cache key shared by the timing cache and the program cache: the
-/// deployment fingerprints plus the (canonical-form) precision schedule and
-/// the tensor-parallel shard count the request ran under.
+/// deployment fingerprints plus the (canonical-form) precision schedule,
+/// the parallelism mode, and the shard/stage counts the request ran under.
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct DeployKey {
     net_fp: u64,
     machine_fp: u64,
     schedule: PrecisionMap,
     shards: usize,
+    mode: ClusterMode,
+    stages: usize,
 }
 
-/// Program-cache key: one entry per *shard program* of a deployment
-/// (`shard` is always 0 for single-core deployments).
+/// Program-cache key: one entry per *shard program* of a tensor deployment
+/// or per *stage program* of a pipeline deployment (`shard` is the shard
+/// index or the stage index; always 0 for single-core deployments).
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct ProgKey {
     deploy: DeployKey,
@@ -404,9 +438,16 @@ struct ProgKey {
 
 #[derive(Clone, Copy)]
 struct TimingEntry {
+    /// Modeled latency of one request: cluster total in tensor mode, fill
+    /// (all stages + hops) in pipeline mode.
     sim_cycles: u64,
-    /// Modeled all-gather cycles included in `sim_cycles` (0 single-core).
+    /// Modeled inter-core transfer cycles included in `sim_cycles`
+    /// (all-gather or Σ stage hops; 0 single-core).
     sync_cycles: u64,
+    /// Pipeline steady-state initiation interval (`max` stage effective
+    /// cycles); 0 outside pipeline mode. With `sim_cycles` (= fill) this
+    /// reconstructs the whole stream model: `total(B) = fill + (B−1)·period`.
+    period_cycles: u64,
 }
 
 /// The compiled-program cache: bounded FIFO with the deployment-default
@@ -568,6 +609,15 @@ pub struct CoordStats {
     /// `W`·1.0). Trailing never-used positions are trimmed (empty until a
     /// `shards > 1` request runs functionally).
     pub shard_util: Vec<f64>,
+    /// Busy core-equivalents per pipeline stage *position*, aggregated over
+    /// every worker's stage pool — the pipeline analogue of `shard_util`
+    /// (empty until a `mode=pipeline stages > 1` request runs functionally).
+    pub stage_util: Vec<f64>,
+    /// Total modeled pipeline bubble (idle) cycles across streamed groups:
+    /// per group of `B` requests, `Σ_s (total − B·e_s)` where
+    /// `total = fill + (B−1)·period` — what non-bottleneck stages spend
+    /// waiting. 0 until a pipeline group is streamed functionally.
+    pub bubble_cycles: u64,
     /// Milliseconds since [`Coordinator::start`].
     pub uptime_ms: u64,
     /// Host-trace events dropped on full or contended rings
@@ -706,6 +756,11 @@ struct Shared {
     /// Per-shard-core nanoseconds spent inside cluster replays (indexed by
     /// shard position, up to [`MAX_SHARDS`]).
     shard_busy_ns: Vec<AtomicU64>,
+    /// Per-stage-core nanoseconds spent inside pipeline streams (indexed by
+    /// stage position, up to [`MAX_SHARDS`]).
+    stage_busy_ns: Vec<AtomicU64>,
+    /// Modeled pipeline bubble cycles accumulated over streamed groups.
+    bubble_cycles: AtomicU64,
     latencies: Mutex<LatWindow>,
     /// Per-model latency windows (index-aligned with
     /// [`CoordinatorConfig::models`]) behind [`CoordStats::slo_by_model`].
@@ -747,8 +802,9 @@ impl Coordinator {
             if let Err(e) = validate_schedule(&cfg.schedule, model, &cfg.machine) {
                 panic!("invalid coordinator schedule for model {:?}: {e}", model.name());
             }
-            if let Err(e) = validate_shards(cfg.shards, &cfg.schedule, model) {
-                panic!("invalid coordinator shard count for model {:?}: {e}", model.name());
+            if let Err(e) = validate_parallelism(cfg.mode, cfg.shards, cfg.stages, &cfg.schedule, model)
+            {
+                panic!("invalid coordinator parallelism for model {:?}: {e}", model.name());
             }
             // The degrade fallback substitutes for the default at admission,
             // so it must be as universally runnable as the default itself.
@@ -756,8 +812,14 @@ impl Coordinator {
                 if let Err(e) = validate_schedule(&policy.schedule, model, &cfg.machine) {
                     panic!("invalid degrade schedule for model {:?}: {e}", model.name());
                 }
-                if let Err(e) = validate_shards(cfg.shards, &policy.schedule, model) {
-                    panic!("invalid degrade schedule for model {:?} at the deployment shard count: {e}", model.name());
+                if let Err(e) = validate_parallelism(
+                    cfg.mode,
+                    cfg.shards,
+                    cfg.stages,
+                    &policy.schedule,
+                    model,
+                ) {
+                    panic!("invalid degrade schedule for model {:?} at the deployment parallelism: {e}", model.name());
                 }
             }
         }
@@ -783,6 +845,8 @@ impl Coordinator {
             compile_by_worker: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
             sync_cycles: AtomicU64::new(0),
             shard_busy_ns: (0..MAX_SHARDS).map(|_| AtomicU64::new(0)).collect(),
+            stage_busy_ns: (0..MAX_SHARDS).map(|_| AtomicU64::new(0)).collect(),
+            bubble_cycles: AtomicU64::new(0),
             latencies: Mutex::new(LatWindow::new(LAT_WINDOW)),
             model_latencies: (0..cfg.models.len())
                 .map(|_| Mutex::new(LatWindow::new(LAT_WINDOW)))
@@ -828,16 +892,24 @@ impl Coordinator {
                 return Err(SubmitError::Invalid { reason });
             }
         }
-        // Validate the *effective* (schedule, shards) pair, not just explicit
-        // overrides: a request overriding only the schedule still runs at the
-        // deployment's shard count (e.g. fp32 on a sharded fp32-capable
-        // deployment must be rejected here, not panic a worker). All-default
-        // requests skip the walk — Coordinator::start validated that pair
-        // against every deployed model.
-        if req.shards.is_some() || req.schedule.is_some() {
+        // Validate the *effective* (schedule, mode, shards, stages) tuple,
+        // not just explicit overrides: a request overriding only the
+        // schedule still runs at the deployment's shard/stage counts (e.g.
+        // fp32 on a sharded fp32-capable deployment must be rejected here,
+        // not panic a worker), and a `mode=pipeline` override composes with
+        // whatever `shards=` rode along. All-default requests skip the
+        // walk — Coordinator::start validated that tuple against every
+        // deployed model.
+        if req.shards.is_some()
+            || req.schedule.is_some()
+            || req.mode.is_some()
+            || req.stages.is_some()
+        {
+            let mode = req.mode.unwrap_or(self.cfg.mode);
             let shards = req.shards.unwrap_or(self.cfg.shards);
+            let stages = req.stages.unwrap_or(self.cfg.stages);
             let sched = req.schedule.as_ref().unwrap_or(&self.cfg.schedule);
-            if let Err(reason) = validate_shards(shards, sched, model) {
+            if let Err(reason) = validate_parallelism(mode, shards, stages, sched, model) {
                 return Err(SubmitError::Invalid { reason });
             }
         }
@@ -857,7 +929,12 @@ impl Coordinator {
         let mut req = req;
         let mut degraded = false;
         if let Some(policy) = &self.cfg.degrade {
-            if req.schedule.is_none() && req.shards.is_none() && q.len() >= policy.depth {
+            if req.schedule.is_none()
+                && req.shards.is_none()
+                && req.mode.is_none()
+                && req.stages.is_none()
+                && q.len() >= policy.depth
+            {
                 req.schedule = Some(policy.schedule.clone());
                 degraded = true;
             }
@@ -955,6 +1032,19 @@ impl Coordinator {
                 }
                 util
             },
+            stage_util: {
+                let mut util: Vec<f64> = self
+                    .shared
+                    .stage_busy_ns
+                    .iter()
+                    .map(|b| b.load(Ordering::Relaxed) as f64 / elapsed_ns)
+                    .collect();
+                while util.last() == Some(&0.0) {
+                    util.pop();
+                }
+                util
+            },
+            bubble_cycles: self.shared.bubble_cycles.load(Ordering::Relaxed),
             uptime_ms: self.shared.started.elapsed().as_millis() as u64,
             trace_dropped: self.shared.tracer.get().map_or(0, |t| t.dropped()),
             min_us,
@@ -1074,6 +1164,53 @@ pub(crate) fn validate_shards(
     ShardPlan::derive(net, shards)?.validate_schedule(sched)
 }
 
+/// Stage-count validation against one deployed model: bounds, cut
+/// feasibility (layer count, residual-block indivisibility), and the
+/// integer-only rule ([`StagePlan`]). Cut *feasibility* does not depend on
+/// the cost vector, so unit costs validate cheaply here; the serving path
+/// re-derives the balanced plan from real cycle estimates at compile time.
+pub(crate) fn validate_stages(
+    stages: usize,
+    sched: &PrecisionMap,
+    net: &NetGraph,
+) -> Result<(), String> {
+    if stages == 0 || stages > MAX_SHARDS {
+        return Err(format!("stage count {stages} out of range (1\u{2013}{MAX_SHARDS})"));
+    }
+    StagePlan::derive_balanced(net, stages, &vec![1; net.len()])?.validate_schedule(sched)
+}
+
+/// Validate one effective `(mode, shards, stages)` parallelism tuple under
+/// `sched` against one deployed model — the single source of truth for the
+/// submit path, [`Coordinator::start`], and the CLI's `serve` checks. The
+/// two axes never compose: tensor mode rejects `stages > 1`, pipeline mode
+/// rejects `shards > 1`.
+pub(crate) fn validate_parallelism(
+    mode: ClusterMode,
+    shards: usize,
+    stages: usize,
+    sched: &PrecisionMap,
+    net: &NetGraph,
+) -> Result<(), String> {
+    match mode {
+        ClusterMode::Tensor => {
+            if stages > 1 {
+                return Err(format!("stages={stages} requires mode=pipeline"));
+            }
+            validate_shards(shards, sched, net)
+        }
+        ClusterMode::Pipeline => {
+            if shards > 1 {
+                return Err(format!(
+                    "pipeline mode does not compose with tensor sharding (shards={shards}); \
+                     pick one parallelism axis"
+                ));
+            }
+            validate_stages(stages, sched, net)
+        }
+    }
+}
+
 /// One worker's persistent simulated core. Constructed once per worker
 /// thread; between model runs only the bump allocator is rewound (the Sim's
 /// VRF, timing state, and 192 MiB memory arena are reused).
@@ -1174,6 +1311,7 @@ fn resolve_program(
     key: &ProgKey,
     sched: &PrecisionMap,
     memoize: bool,
+    stage_plan: &mut Option<StagePlan>,
 ) -> Arc<CompiledProgram> {
     if let Some(p) = shared.program_cache.lock().unwrap().get(key) {
         shared.program_hits.fetch_add(1, Ordering::Relaxed);
@@ -1182,10 +1320,27 @@ fn resolve_program(
     shared.program_misses.fetch_add(1, Ordering::Relaxed);
     shared.compile_by_worker[wid].fetch_add(1, Ordering::Relaxed);
     let tracer = shared.tracer.get();
-    let key_label =
-        tracer.map(|_| format!("{}|{}|{}", net.name(), sched.label(), key.deploy.shards));
+    let key_label = tracer.map(|_| {
+        let width = match key.deploy.mode {
+            ClusterMode::Pipeline => key.deploy.stages,
+            ClusterMode::Tensor => key.deploy.shards,
+        };
+        format!("{}|{}|{}|{}", net.name(), sched.label(), key.deploy.mode.label(), width)
+    });
     let t0 = Instant::now();
-    let prog = Arc::new(if key.deploy.shards > 1 {
+    let prog = Arc::new(if key.deploy.mode == ClusterMode::Pipeline && key.deploy.stages > 1 {
+        // Derive the balanced stage plan once per resolution chain (the
+        // caller threads `stage_plan` across the stage set — the costs
+        // sweep is a full-net TimingOnly emission, deterministic, so every
+        // stage of one deployment cuts identically).
+        let plan = stage_plan.get_or_insert_with(|| {
+            let costs = stage_costs(net, &cfg.machine, sched);
+            StagePlan::derive_balanced(net, key.deploy.stages, &costs)
+                .expect("stage count was validated at submission")
+        });
+        compile_stage(net, &cfg.machine, sched, plan, key.shard)
+            .expect("schedule was validated at submission")
+    } else if key.deploy.shards > 1 {
         let plan = ShardPlan::derive(net, key.deploy.shards)
             .expect("shard count was validated at submission");
         compile_shard(net, &cfg.machine, sched, &plan, key.shard)
@@ -1237,7 +1392,10 @@ fn resolve_program(
             tr.record(wid, ev);
         }
         if verified {
-            let pinned = *sched == cfg.schedule && key.deploy.shards == cfg.shards;
+            let pinned = *sched == cfg.schedule
+                && key.deploy.shards == cfg.shards
+                && key.deploy.mode == cfg.mode
+                && key.deploy.stages == cfg.stages;
             let evicted = shared.program_cache.lock().unwrap().insert(
                 key.clone(),
                 prog.clone(),
@@ -1278,10 +1436,36 @@ fn resolve_cluster(
     let progs: Vec<Arc<CompiledProgram>> = (0..deploy.shards)
         .map(|shard| {
             let key = ProgKey { deploy: deploy.clone(), shard };
-            resolve_program(shared, cfg, net, wid, &key, sched, memoize)
+            resolve_program(shared, cfg, net, wid, &key, sched, memoize, &mut None)
         })
         .collect();
     ClusterProgram::from_shards(progs).expect("per-shard cache entries form one deployment")
+}
+
+/// Resolve the full stage-program set of a pipeline deployment (one
+/// per-stage cache entry each, `ProgKey.shard` doubling as the stage index)
+/// and assemble the [`PipelineProgram`]. The balanced [`StagePlan`] is
+/// derived at most once per resolution (lazily, on the first stage miss);
+/// all-hit resolutions never pay the cost sweep. Misses compile
+/// sequentially on the serving worker for the same memory-bounding reason
+/// as [`resolve_cluster`].
+fn resolve_pipeline(
+    shared: &Shared,
+    cfg: &CoordinatorConfig,
+    net: &NetGraph,
+    wid: usize,
+    deploy: &DeployKey,
+    sched: &PrecisionMap,
+    memoize: bool,
+) -> PipelineProgram {
+    let mut plan: Option<StagePlan> = None;
+    let progs: Vec<Arc<CompiledProgram>> = (0..deploy.stages)
+        .map(|stage| {
+            let key = ProgKey { deploy: deploy.clone(), shard: stage };
+            resolve_program(shared, cfg, net, wid, &key, sched, memoize, &mut plan)
+        })
+        .collect();
+    PipelineProgram::from_stages(progs).expect("per-stage cache entries form one pipeline")
 }
 
 /// How long `item` has waited if its deadline has passed; `None` while it
@@ -1354,6 +1538,8 @@ struct GroupKey {
     model_idx: usize,
     schedule: PrecisionMap,
     shards: usize,
+    mode: ClusterMode,
+    stages: usize,
 }
 
 /// Worker: claims batches (size- or timeout-bounded, priority-ordered,
@@ -1369,6 +1555,7 @@ struct GroupKey {
 fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
     let mut core = WorkerCore::new(cfg.machine.clone());
     let mut cluster_cores: Option<ClusterCores> = None;
+    let mut pipeline_cores: Option<PipelineCores> = None;
     loop {
         // Claim a batch.
         let mut batch = Vec::new();
@@ -1414,6 +1601,8 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
                 model_idx: item.model_idx,
                 schedule: item.req.schedule.clone().unwrap_or_else(|| cfg.schedule.clone()),
                 shards: item.req.shards.unwrap_or(cfg.shards),
+                mode: item.req.mode.unwrap_or(cfg.mode),
+                stages: item.req.stages.unwrap_or(cfg.stages),
             };
             match groups.iter_mut().find(|(k, _)| *k == gk) {
                 Some((_, g)) => g.push(item),
@@ -1421,7 +1610,16 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, cfg: CoordinatorConfig) {
             }
         }
         for (gk, group) in groups {
-            serve_group(wid, &shared, &cfg, &mut core, &mut cluster_cores, gk, group);
+            serve_group(
+                wid,
+                &shared,
+                &cfg,
+                &mut core,
+                &mut cluster_cores,
+                &mut pipeline_cores,
+                gk,
+                group,
+            );
         }
         shared.busy_ns[wid].fetch_add(busy_t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
@@ -1441,6 +1639,7 @@ fn serve_group(
     cfg: &CoordinatorConfig,
     core: &mut WorkerCore,
     cluster_cores: &mut Option<ClusterCores>,
+    pipeline_cores: &mut Option<PipelineCores>,
     gk: GroupKey,
     group: Vec<Queued>,
 ) {
@@ -1448,23 +1647,34 @@ fn serve_group(
     let model = &cfg.models[gk.model_idx];
     let sched = &gk.schedule;
     let shards = gk.shards;
+    let (mode, stages) = (gk.mode, gk.stages);
+    // A 1-stage "pipeline" is served on the single-core path (its emission
+    // is identical — `rust/tests/pipeline.rs` proves it cycle-exact).
+    let pipelined = mode == ClusterMode::Pipeline && stages > 1;
     let tracer = shared.tracer.get();
     let assemble_t0 = Instant::now();
-    let key_label = tracer.map(|_| format!("{}|{}|{}", model.name(), sched.label(), shards));
+    let key_label = tracer.map(|_| {
+        let width = if mode == ClusterMode::Pipeline { stages } else { shards };
+        format!("{}|{}|{}|{}", model.name(), sched.label(), mode.label(), width)
+    });
     let key = DeployKey {
         net_fp: model.fingerprint(),
         machine_fp: machine_fingerprint(&cfg.machine),
         schedule: sched.clone(),
         shards,
+        mode,
+        stages,
     };
 
     struct Resolved {
         item: Queued,
         sim_cycles: u64,
         sync_cycles: u64,
+        period_cycles: u64,
         timing_cached: bool,
         prog: Option<Arc<CompiledProgram>>,
         cluster: Option<ClusterProgram>,
+        pipe: Option<PipelineProgram>,
     }
     let mut resolved: Vec<Resolved> = Vec::with_capacity(group.len());
     for item in group {
@@ -1476,32 +1686,46 @@ fn serve_group(
         let need_progs = item.req.input.is_some() || cached.is_none();
         let memoize = item.req.input.is_some();
         // Single-core requests resolve one program; cluster requests a
-        // full shard set (each under its own per-shard cache entry).
-        let (prog, cluster) = if !need_progs {
-            (None, None)
+        // full shard set, pipeline requests a full stage set (each under
+        // its own per-shard/per-stage cache entry).
+        let (prog, cluster, pipe) = if !need_progs {
+            (None, None, None)
+        } else if pipelined {
+            (None, None, Some(resolve_pipeline(shared, cfg, model, wid, &key, sched, memoize)))
         } else if shards == 1 {
             let pkey = ProgKey { deploy: key.clone(), shard: 0 };
-            (Some(resolve_program(shared, cfg, model, wid, &pkey, sched, memoize)), None)
+            let p = resolve_program(shared, cfg, model, wid, &pkey, sched, memoize, &mut None);
+            (Some(p), None, None)
         } else {
-            (None, Some(resolve_cluster(shared, cfg, model, wid, &key, sched, memoize)))
+            (None, Some(resolve_cluster(shared, cfg, model, wid, &key, sched, memoize)), None)
         };
         // Resolve timing: cache hit is a map lookup, miss is one TimingOnly
-        // replay (per shard core, in parallel, for clusters) whose result
-        // every later request under the same (net, machine, schedule,
-        // shards) key reuses — including the rest of this group.
-        let (sim_cycles, sync_cycles, timing_cached) = match cached {
+        // replay (per shard/stage core, in parallel, for clusters and
+        // pipelines) whose result every later request under the same (net,
+        // machine, schedule, mode, shards, stages) key reuses — including
+        // the rest of this group.
+        let (sim_cycles, sync_cycles, period_cycles, timing_cached) = match cached {
             Some(e) => {
                 shared.cache_hits.fetch_add(1, Ordering::Relaxed);
-                (e.sim_cycles, e.sync_cycles, true)
+                (e.sim_cycles, e.sync_cycles, e.period_cycles, true)
             }
             None => {
                 let t0 = Instant::now();
-                let (c, sync) = match &cluster {
-                    Some(cp) => {
+                let (c, sync, period) = match (&cluster, &pipe) {
+                    (Some(cp), _) => {
                         let t = cluster_timing(cp, &cfg.machine);
-                        (t.total_cycles(), t.sync_cycles)
+                        (t.total_cycles(), t.sync_cycles, 0)
                     }
-                    None => {
+                    (_, Some(pp)) => {
+                        // One request through every stage: fill latency,
+                        // with the Σ of stage hops reported like the
+                        // all-gather, plus the steady-state period so the
+                        // stream model reconstructs for any batch size.
+                        let t = pipeline_timing(pp, &cfg.machine, 1);
+                        let hops: u64 = t.stages.iter().map(|s| s.hop_cycles).sum();
+                        (t.fill_cycles(), hops, t.period_cycles())
+                    }
+                    (None, None) => {
                         // Timing misses resolve attribution for free: the
                         // profiled replay costs the same TimingOnly pass and
                         // yields the per-layer/per-class tables. Keep the
@@ -1510,28 +1734,45 @@ fn serve_group(
                         let prog_ref = prog.as_deref().expect("timing misses resolve a program");
                         let profile = core.profile(prog_ref);
                         let c = profile.total_cycles;
-                        if *sched == cfg.schedule && shards == cfg.shards {
+                        if *sched == cfg.schedule
+                            && shards == cfg.shards
+                            && mode == cfg.mode
+                            && stages == cfg.stages
+                        {
                             shared.profiles.lock().unwrap()[gk.model_idx] = Some(profile);
                         }
-                        (c, 0)
+                        (c, 0, 0)
                     }
                 };
                 shared.replay_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 shared.cache_misses.fetch_add(1, Ordering::Relaxed);
                 let mut cache = shared.timing_cache.lock().unwrap();
                 if cache.len() < MAX_TIMING_ENTRIES {
-                    cache.insert(key.clone(), TimingEntry { sim_cycles: c, sync_cycles: sync });
+                    cache.insert(
+                        key.clone(),
+                        TimingEntry { sim_cycles: c, sync_cycles: sync, period_cycles: period },
+                    );
                 }
                 drop(cache);
-                (c, sync, false)
+                (c, sync, period, false)
             }
         };
-        // Account the modeled all-gather once per served cluster request
-        // (timing-only probes included — the model is part of the reply).
-        if shards > 1 {
+        // Account the modeled inter-core transfers once per served cluster
+        // or pipeline request (timing-only probes included — the model is
+        // part of the reply).
+        if shards > 1 || pipelined {
             shared.sync_cycles.fetch_add(sync_cycles, Ordering::Relaxed);
         }
-        resolved.push(Resolved { item, sim_cycles, sync_cycles, timing_cached, prog, cluster });
+        resolved.push(Resolved {
+            item,
+            sim_cycles,
+            sync_cycles,
+            period_cycles,
+            timing_cached,
+            prog,
+            cluster,
+            pipe,
+        });
     }
     if let Some(tr) = tracer {
         let ev = obs::TraceEvent::span(
@@ -1549,10 +1790,69 @@ fn serve_group(
 
     // Functional phase. Single-core inputs share one batched replay (they
     // finish together, so each rider's service time is the whole pass);
-    // cluster requests replay per request on the worker's shard pool.
+    // cluster requests replay per request on the worker's shard pool;
+    // pipelined requests stream together through the worker's stage pool.
     let mut outcomes: Vec<Option<(Vec<f32>, usize)>> = vec![None; resolved.len()];
     let mut services: Vec<Duration> = vec![Duration::ZERO; resolved.len()];
-    if shards == 1 {
+    if pipelined {
+        let idxs: Vec<usize> = resolved
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.item.req.input.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if !idxs.is_empty() {
+            let pp =
+                resolved[idxs[0]].pipe.clone().expect("functional pipeline requests resolve stages");
+            let inputs: Vec<Vec<u8>> = idxs
+                .iter()
+                .map(|&i| resolved[i].item.req.input.clone().expect("filtered on input"))
+                .collect();
+            // (Re)build this worker's stage-core pool when the requested
+            // depth changes — same single-pool-per-worker policy as the
+            // tensor shard pool.
+            let rebuild = pipeline_cores.as_ref().map(|pc| pc.count()) != Some(stages);
+            if rebuild {
+                *pipeline_cores = Some(PipelineCores::new(&cfg.machine, stages));
+            }
+            let cores = pipeline_cores.as_mut().expect("pool was just built");
+            let t0 = Instant::now();
+            let inf = cores.infer_stream(&pp, &inputs);
+            let elapsed = t0.elapsed();
+            shared.replay_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+            if let Some(tr) = tracer {
+                let ev = obs::TraceEvent::span(
+                    obs::SpanKind::Replay,
+                    tr.us_at(t0),
+                    elapsed.as_micros() as u64,
+                )
+                .with_batch(batch_id)
+                .with_label(format!(
+                    "{} n={}",
+                    key_label.as_deref().unwrap_or_default(),
+                    idxs.len()
+                ));
+                tr.record(wid, ev);
+            }
+            for (j, ns) in inf.stage_busy_ns.iter().enumerate() {
+                shared.stage_busy_ns[j].fetch_add(*ns, Ordering::Relaxed);
+            }
+            // Modeled bubble accounting for this stream: B requests keep
+            // every stage busy B·e_s of the fill + (B−1)·period total, so
+            // Σ bubbles = stages·total − B·fill (per-stage busy + bubble
+            // tiles the total — the conservation law `obs::profile_pipeline`
+            // asserts).
+            let b = idxs.len() as u64;
+            let fill = resolved[idxs[0]].sim_cycles;
+            let period = resolved[idxs[0]].period_cycles;
+            let total = fill + (b - 1) * period;
+            shared.bubble_cycles.fetch_add(stages as u64 * total - b * fill, Ordering::Relaxed);
+            for (&i, logits) in idxs.iter().zip(inf.logits) {
+                outcomes[i] = Some(widen_logits(&logits));
+                services[i] = elapsed;
+            }
+        }
+    } else if shards == 1 {
         let idxs: Vec<usize> = resolved
             .iter()
             .enumerate()
@@ -1648,6 +1948,8 @@ fn serve_group(
             model: model.name().to_string(),
             shards,
             sync_cycles: r.sync_cycles,
+            mode,
+            stages,
             degraded: r.item.degraded,
             prio: r.item.req.prio,
             logits,
@@ -2065,6 +2367,130 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_requests_stream_and_match_single_core_logits() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        cfg.batch_size = 4;
+        cfg.batch_timeout = Duration::from_millis(10);
+        let coord = Coordinator::start(cfg);
+        let n = 32 * 32 * 3;
+        let mk = |seed: usize| -> Vec<u8> {
+            (0..n).map(|i| ((i * 11 + seed * 17 + 5) % 253) as u8).collect()
+        };
+        // Single-core references (their own group: the deploy key differs).
+        let singles: Vec<_> = (0..3usize)
+            .map(|k| {
+                coord
+                    .submit(InferenceRequest {
+                        id: k as u64,
+                        input: Some(mk(k)),
+                        ..Default::default()
+                    })
+                    .unwrap()
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap())
+            .collect();
+        for s in &singles {
+            assert_eq!(s.mode, ClusterMode::Tensor);
+            assert_eq!(s.stages, 1);
+        }
+        // The same inputs as one pipelined stream across two stage cores.
+        let rxs: Vec<_> = (0..3usize)
+            .map(|k| {
+                coord
+                    .submit(InferenceRequest {
+                        id: 100 + k as u64,
+                        input: Some(mk(k)),
+                        mode: Some(ClusterMode::Pipeline),
+                        stages: Some(2),
+                        ..Default::default()
+                    })
+                    .unwrap()
+            })
+            .collect();
+        let mut piped: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap())
+            .collect();
+        piped.sort_by_key(|r| r.id);
+        for (s, p) in singles.iter().zip(&piped) {
+            assert_eq!(p.mode, ClusterMode::Pipeline);
+            assert_eq!(p.stages, 2);
+            assert!(p.sync_cycles > 0, "pipeline replies charge the stage hop");
+            assert_eq!(
+                s.logits, p.logits,
+                "pipelined logits must be bit-identical to single-core"
+            );
+            assert_eq!(s.argmax, p.argmax);
+        }
+        // Pipeline metrics: both stage cores ran, and the stream model
+        // charged fill bubbles (stages ≥ 2 always leaves some).
+        let st = coord.stats();
+        assert_eq!(st.stage_util.len(), 2, "two stage cores ran: {:?}", st.stage_util);
+        assert!(st.stage_util.iter().all(|&u| u > 0.0));
+        assert!(st.bubble_cycles > 0, "a 2-stage stream must report fill bubbles");
+        // A 1-stage "pipeline" serves down the single-core path: identical
+        // logits and cycles, no hop charge, but the mode echoes back.
+        let rx = coord
+            .submit(InferenceRequest {
+                id: 200,
+                input: Some(mk(0)),
+                mode: Some(ClusterMode::Pipeline),
+                stages: Some(1),
+                ..Default::default()
+            })
+            .unwrap();
+        let one = rx.recv_timeout(Duration::from_secs(300)).unwrap().unwrap();
+        assert_eq!(one.mode, ClusterMode::Pipeline);
+        assert_eq!(one.stages, 1);
+        assert_eq!(one.sync_cycles, 0);
+        assert_eq!(one.logits, singles[0].logits);
+        assert_eq!(one.sim_cycles, singles[0].sim_cycles, "stages=1 is cycle-exact");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_parallelism_overrides_are_rejected_at_submission() {
+        let mut cfg = CoordinatorConfig::demo();
+        cfg.workers = 1;
+        let coord = Coordinator::start(cfg);
+        let bad = [
+            // Stages without pipeline mode.
+            InferenceRequest { id: 0, stages: Some(2), ..Default::default() },
+            // Pipeline composed with tensor sharding.
+            InferenceRequest {
+                id: 1,
+                mode: Some(ClusterMode::Pipeline),
+                shards: Some(2),
+                stages: Some(2),
+                ..Default::default()
+            },
+            // Stage counts out of range.
+            InferenceRequest {
+                id: 2,
+                mode: Some(ClusterMode::Pipeline),
+                stages: Some(0),
+                ..Default::default()
+            },
+            InferenceRequest {
+                id: 3,
+                mode: Some(ClusterMode::Pipeline),
+                stages: Some(MAX_SHARDS + 1),
+                ..Default::default()
+            },
+        ];
+        for req in bad {
+            let id = req.id;
+            let err = coord.submit(req).unwrap_err();
+            assert!(matches!(err, SubmitError::Invalid { .. }), "req {id}: {err}");
+        }
+        assert_eq!(coord.rejected(), 0, "Invalid is not backpressure");
+        coord.shutdown();
+    }
+
+    #[test]
     fn invalid_shard_counts_are_rejected_at_submission() {
         let mut cfg = CoordinatorConfig::demo();
         cfg.workers = 1;
@@ -2244,6 +2670,8 @@ mod tests {
                 machine_fp: 2,
                 schedule: PrecisionMap::parse(spec).unwrap(),
                 shards: 1,
+                mode: ClusterMode::Tensor,
+                stages: 1,
             },
             shard: 0,
         };

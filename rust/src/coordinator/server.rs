@@ -14,6 +14,7 @@
 //!                                   compile_us=<n> replay_us=<n>
 //!                                   compile_by_worker=<c0,c1,…>
 //!                                   sync_cycles=<n> shard_util=<s0,…|->
+//!                                   stage_util=<s0,…|-> bubble_cycles=<n>
 //!                                   p50_us=<n> p95_us=<n> p99_us=<n>
 //!                                   lat_min_us=<n> lat_max_us=<n>
 //!                                   queue_age_hist=<c0,…,c11>
@@ -31,12 +32,14 @@
 //!                             folded stacks at `<path>.folded`), else
 //!                             `written=-`. `ERR tracing disabled` when the
 //!                             server was started without tracing.
-//! INFER <id> [net=<name>] [prec=<spec>] [shards=<n>] [deadline_ms=<ms>]
+//! INFER <id> [net=<name>] [prec=<spec>] [mode=<tensor|pipeline>]
+//!       [shards=<n>] [stages=<n>] [deadline_ms=<ms>]
 //!       [prio=<low|normal|high>] [<b0,b1,...>]
 //!                           → OK <id> cycles=<c> device_us=<t> worker=<w>
 //!                                   batch=<b> cached=<0|1> prec=<label>
 //!                                   net=<name> shards=<n> sync_cycles=<s>
-//!                                   prio=<p> degraded=<0|1>
+//!                                   prio=<p> degraded=<0|1> mode=<m>
+//!                                   stages=<n>
 //!                             with input bytes: plus ` argmax=<k>
 //!                             logits=<v0,v1,…>` — the bytes are run through
 //!                             the functional executor and the real outputs
@@ -57,7 +60,16 @@
 //! ([`crate::cluster`]): the inference is partitioned over that many
 //! simulated cores, `cycles=` reports the cluster model (`max` shard
 //! compute + all-gather sync), and the logits are bit-identical to a
-//! single-core run. The optional `deadline_ms=` field bounds how long the
+//! single-core run. The optional `mode=` field selects the parallelism
+//! axis: `tensor` (the default — layers split across shard cores) or
+//! `pipeline` (contiguous layer ranges staged across cores,
+//! [`crate::cluster::pipeline`]); `stages=` sets the pipeline depth.
+//! The two axes don't compose: `mode=pipeline` with `shards=` > 1 (or
+//! `stages=` > 1 without `mode=pipeline`) answers `ERR invalid request`.
+//! Pipelined replies report `cycles=` as the fill latency of one request
+//! through every stage and `sync_cycles=` as the Σ of inter-stage hop
+//! costs; logits remain bit-identical to a single-core run. The optional
+//! `deadline_ms=` field bounds how long the
 //! request may wait in the queue: if the deadline passes before a worker
 //! claims it, the reply is `EXPIRED` (counted in STATS `expired=`) instead
 //! of a late `OK`. The optional `prio=` field (`low`/`normal`/`high`,
@@ -77,6 +89,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::cluster::ClusterMode;
 use crate::error::Result;
 use crate::nn::model::PrecisionMap;
 
@@ -183,15 +196,15 @@ pub(crate) fn handle_client(
                     .collect();
                 let cbw: Vec<String> =
                     s.compile_by_worker.iter().map(|c| c.to_string()).collect();
-                let shard_util = if s.shard_util.is_empty() {
-                    "-".to_string()
-                } else {
-                    s.shard_util
-                        .iter()
-                        .map(|u| format!("{u:.2}"))
-                        .collect::<Vec<_>>()
-                        .join(",")
+                let util_csv = |us: &[f64]| {
+                    if us.is_empty() {
+                        "-".to_string()
+                    } else {
+                        us.iter().map(|u| format!("{u:.2}")).collect::<Vec<_>>().join(",")
+                    }
                 };
+                let shard_util = util_csv(&s.shard_util);
+                let stage_util = util_csv(&s.stage_util);
                 let hist: Vec<String> =
                     s.queue_age_hist.iter().map(|c| c.to_string()).collect();
                 let slo: Vec<String> = s
@@ -222,7 +235,7 @@ pub(crate) fn handle_client(
                      cache_hits={} cache_misses={} prog_hits={} prog_misses={} \
                      verify_fails={} \
                      compile_us={} replay_us={} compile_by_worker={} \
-                     sync_cycles={} shard_util={} \
+                     sync_cycles={} shard_util={} stage_util={} bubble_cycles={} \
                      p50_us={} p95_us={} p99_us={} lat_min_us={} lat_max_us={} \
                      queue_age_hist={} slo={} util={} \
                      uptime_ms={} trace_dropped={} class_mix={}",
@@ -243,6 +256,8 @@ pub(crate) fn handle_client(
                     cbw.join(","),
                     s.sync_cycles,
                     shard_util,
+                    stage_util,
+                    s.bubble_cycles,
                     s.p50_us,
                     s.p95_us,
                     s.p99_us,
@@ -301,11 +316,14 @@ pub(crate) fn handle_client(
                     }
                 };
                 // Optional model selector, per-request precision schedule,
-                // and shard count (any order, each at most once).
+                // parallelism mode, and shard/stage counts (any order, each
+                // at most once).
                 let mut next_tok = parts.next();
                 let mut net = None;
                 let mut schedule = None;
                 let mut shards = None;
+                let mut mode = None;
+                let mut stages = None;
                 let mut deadline_ms = None;
                 let mut prio = None;
                 let mut wire_err = None;
@@ -342,6 +360,31 @@ pub(crate) fn handle_client(
                             Err(_) => {
                                 wire_err =
                                     Some(format!("bad shards field {spec:?} (want an integer)"));
+                                break;
+                            }
+                        }
+                    } else if let Some(spec) = tok.strip_prefix("mode=") {
+                        if mode.is_some() {
+                            wire_err = Some("duplicate mode= field".to_string());
+                            break;
+                        }
+                        match ClusterMode::parse(spec) {
+                            Ok(m) => mode = Some(m),
+                            Err(reason) => {
+                                wire_err = Some(reason);
+                                break;
+                            }
+                        }
+                    } else if let Some(spec) = tok.strip_prefix("stages=") {
+                        if stages.is_some() {
+                            wire_err = Some("duplicate stages= field".to_string());
+                            break;
+                        }
+                        match spec.parse::<usize>() {
+                            Ok(n) => stages = Some(n),
+                            Err(_) => {
+                                wire_err =
+                                    Some(format!("bad stages field {spec:?} (want an integer)"));
                                 break;
                             }
                         }
@@ -399,6 +442,8 @@ pub(crate) fn handle_client(
                     net,
                     schedule,
                     shards,
+                    mode,
+                    stages,
                     deadline_ms,
                     prio: prio.unwrap_or_default(),
                 };
@@ -413,7 +458,8 @@ pub(crate) fn handle_client(
                         Ok(Ok(r)) => {
                             let mut reply = format!(
                                 "OK {} cycles={} device_us={:.1} worker={} batch={} cached={} \
-                                 prec={} net={} shards={} sync_cycles={} prio={} degraded={}",
+                                 prec={} net={} shards={} sync_cycles={} prio={} degraded={} \
+                                 mode={} stages={}",
                                 r.id,
                                 r.sim_cycles,
                                 r.device_us,
@@ -425,7 +471,9 @@ pub(crate) fn handle_client(
                                 r.shards,
                                 r.sync_cycles,
                                 r.prio.label(),
-                                r.degraded as u8
+                                r.degraded as u8,
+                                r.mode.label(),
+                                r.stages
                             );
                             if let (Some(am), Some(lg)) = (r.argmax, r.logits.as_ref()) {
                                 let csv: Vec<String> =
@@ -511,6 +559,8 @@ mod tests {
             "compile_by_worker=",
             "sync_cycles=",
             "shard_util=",
+            "stage_util=",
+            "bubble_cycles=",
             "p50_us=",
             "p99_us=",
             "lat_min_us=",
@@ -566,6 +616,92 @@ mod tests {
         // shards=2 with the explicit default schedule is the same deployment
         // key: identical modeled cycles.
         assert_eq!(field(&lines[1], "cycles="), field(&lines[2], "cycles="));
+    }
+
+    #[test]
+    fn infer_accepts_pipeline_mode_on_the_wire() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        // Timing-only probes: the single-core default, then the same
+        // deployment staged over 2 pipeline cores.
+        writeln!(client, "INFER 1").unwrap();
+        writeln!(client, "INFER 2 mode=pipeline stages=2").unwrap();
+        // mode=tensor is the explicit default; stages=1 pipeline is served
+        // single-core but still echoes the mode.
+        writeln!(client, "INFER 3 mode=tensor").unwrap();
+        writeln!(client, "INFER 4 mode=pipeline stages=1").unwrap();
+        writeln!(client, "STATS").unwrap();
+        writeln!(client, "PING").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(6).map(|l| l.unwrap()).collect();
+        assert!(lines[0].contains(" mode=tensor stages=1"), "{}", lines[0]);
+        assert!(lines[1].contains(" mode=pipeline stages=2"), "{}", lines[1]);
+        assert!(lines[2].contains(" mode=tensor stages=1"), "{}", lines[2]);
+        assert!(lines[3].contains(" mode=pipeline stages=1"), "{}", lines[3]);
+        let field = |l: &str, f: &str| -> u64 {
+            l.split(f).nth(1).unwrap().split_whitespace().next().unwrap().parse().unwrap()
+        };
+        // The pipeline model charges real hop costs; a 1-stage pipeline
+        // has no hops and serves down the single-core path.
+        assert!(field(&lines[1], "sync_cycles=") > 0, "{}", lines[1]);
+        assert_eq!(field(&lines[3], "sync_cycles="), 0, "{}", lines[3]);
+        assert_eq!(
+            field(&lines[3], "cycles="),
+            field(&lines[0], "cycles="),
+            "a 1-stage pipeline is cycle-exact with single-core: {} vs {}",
+            lines[3],
+            lines[0]
+        );
+        // STATS: both stage cores are reported (timing-only probes replay on
+        // stage cores for the timing miss, so utilization may be 0 — the
+        // field just must parse), and bubble_cycles is present.
+        assert!(lines[4].contains(" stage_util="), "{}", lines[4]);
+        assert!(lines[4].contains(" bubble_cycles="), "{}", lines[4]);
+        assert_eq!(lines[5], "PONG");
+    }
+
+    #[test]
+    fn pipeline_error_paths_keep_the_connection_alive() {
+        let coord = Arc::new(Coordinator::start(small_cfg()));
+        let addr = one_shot_server(coord);
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        // Unknown mode label.
+        writeln!(client, "INFER 1 mode=ring").unwrap();
+        // More stages than the net has layers (or than MAX_SHARDS allows).
+        writeln!(client, "INFER 2 mode=pipeline stages=999").unwrap();
+        // Duplicate fields.
+        writeln!(client, "INFER 3 mode=pipeline mode=tensor").unwrap();
+        writeln!(client, "INFER 4 mode=pipeline stages=2 stages=4").unwrap();
+        // Unparsable stage count.
+        writeln!(client, "INFER 5 mode=pipeline stages=deep").unwrap();
+        // Pipeline composed with tensor sharding: one axis only.
+        writeln!(client, "INFER 6 mode=pipeline stages=2 shards=2").unwrap();
+        // Stages without pipeline mode.
+        writeln!(client, "INFER 7 stages=2").unwrap();
+        writeln!(client, "PING").unwrap();
+        writeln!(client, "QUIT").unwrap();
+        let reader = BufReader::new(client.try_clone().unwrap());
+        let lines: Vec<String> = reader.lines().take(8).map(|l| l.unwrap()).collect();
+        assert!(lines[0].starts_with("ERR unknown cluster mode"), "{}", lines[0]);
+        assert!(lines[1].starts_with("ERR invalid request"), "{}", lines[1]);
+        assert!(lines[2].starts_with("ERR duplicate mode= field"), "{}", lines[2]);
+        assert!(lines[3].starts_with("ERR duplicate stages= field"), "{}", lines[3]);
+        assert!(lines[4].starts_with("ERR bad stages field"), "{}", lines[4]);
+        assert!(
+            lines[5].starts_with("ERR invalid request") && lines[5].contains("one parallelism axis"),
+            "{}",
+            lines[5]
+        );
+        assert!(
+            lines[6].starts_with("ERR invalid request") && lines[6].contains("mode=pipeline"),
+            "{}",
+            lines[6]
+        );
+        assert_eq!(lines[7], "PONG", "connection survived all pipeline error paths");
     }
 
     #[test]

@@ -438,6 +438,156 @@ impl ShardPlan {
     }
 }
 
+/// Pipeline-parallel stage plan: which contiguous layer range each stage
+/// core of a pipelined cluster executes ([`crate::cluster::pipeline`]).
+///
+/// The partition rule is classic pipeline parallelism: the network's layers
+/// are split into `stages` contiguous ranges, one per core, and activations
+/// stream stage-to-stage. A cut before layer `l` is *valid* only when no
+/// layer at or after `l` reads a feature map produced before map `l` —
+/// map `l` is the single hand-off activation, so a residual (skip) edge
+/// spanning the cut would force a second cross-stage fetch. Residual blocks
+/// are therefore indivisible, mirroring how [`ShardPlan`] refuses plans its
+/// runtime cannot execute. Ranges are chosen to minimize the maximum
+/// per-stage cycle cost (the pipeline's steady-state period) over the valid
+/// cuts, by dynamic programming on caller-supplied per-layer cycle
+/// estimates from the timing model. At `stages == 1` the single range
+/// covers the whole net and the stage program is emission-identical to the
+/// single-core program.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StagePlan {
+    stages: usize,
+    /// Per stage: contiguous layer range `[lo, hi)`; ranges tile
+    /// `0..layers` in order.
+    ranges: Vec<(usize, usize)>,
+    /// Total layer count of the net the plan was derived for.
+    layers: usize,
+}
+
+impl StagePlan {
+    /// Derive the cost-balanced plan for `net` at `stages` cores, given
+    /// per-layer cycle estimates `costs` (network order). Errors mirror
+    /// [`ShardPlan::derive`]: zero stages, more stages than layers, and
+    /// nets whose residual topology does not admit enough valid cuts are
+    /// all rejected with the human-readable reason.
+    pub fn derive_balanced(
+        net: &NetGraph,
+        stages: usize,
+        costs: &[u64],
+    ) -> Result<StagePlan, String> {
+        let n = net.len();
+        if stages == 0 {
+            return Err("stage count must be ≥ 1".to_string());
+        }
+        if stages > n {
+            return Err(format!(
+                "pipeline wants {stages} stages but the net has only {n} layers"
+            ));
+        }
+        if costs.len() != n {
+            return Err(format!(
+                "cost vector covers {} layers but the net has {n}",
+                costs.len()
+            ));
+        }
+        // Valid cut points. earliest_ref[j] is the oldest feature map layer
+        // `j` reads (its input, or its residual source when older); a cut
+        // before layer `l` is usable iff min over j ≥ l of earliest_ref[j]
+        // is ≥ l, answered for every l by one suffix-min pass.
+        let layers = net.layers();
+        let earliest_ref: Vec<usize> = layers
+            .iter()
+            .map(|l| l.residual_from.map_or(l.input, |r| r.min(l.input)))
+            .collect();
+        let mut cut_ok = vec![false; n + 1];
+        cut_ok[0] = true;
+        cut_ok[n] = true;
+        let mut sufmin = usize::MAX;
+        for l in (1..n).rev() {
+            sufmin = sufmin.min(earliest_ref[l]);
+            cut_ok[l] = sufmin >= l;
+        }
+        // Min-max partition over the valid cuts: dp[s][i] = the smallest
+        // achievable max-stage cost splitting layers 0..i into s stages.
+        let mut prefix = vec![0u64; n + 1];
+        for (i, &c) in costs.iter().enumerate() {
+            prefix[i + 1] = prefix[i] + c;
+        }
+        const INF: u64 = u64::MAX;
+        let mut dp = vec![vec![INF; n + 1]; stages + 1];
+        let mut cut = vec![vec![0usize; n + 1]; stages + 1];
+        dp[0][0] = 0;
+        for s in 1..=stages {
+            for i in s..=n {
+                if !cut_ok[i] {
+                    continue;
+                }
+                for j in (s - 1)..i {
+                    if !cut_ok[j] || dp[s - 1][j] == INF {
+                        continue;
+                    }
+                    let v = dp[s - 1][j].max(prefix[i] - prefix[j]);
+                    if v < dp[s][i] {
+                        dp[s][i] = v;
+                        cut[s][i] = j;
+                    }
+                }
+            }
+        }
+        if dp[stages][n] == INF {
+            let max_stages = (1..n).filter(|&l| cut_ok[l]).count() + 1;
+            return Err(format!(
+                "net supports at most {max_stages} pipeline stages (residual \
+                 blocks are indivisible) — cannot form {stages}"
+            ));
+        }
+        let mut ranges = vec![(0usize, 0usize); stages];
+        let mut i = n;
+        for s in (1..=stages).rev() {
+            let j = cut[s][i];
+            ranges[s - 1] = (j, i);
+            i = j;
+        }
+        Ok(StagePlan { stages, ranges, layers: n })
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stages
+    }
+
+    /// Total layer count of the net the plan covers.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Layer range `[lo, hi)` that `stage` executes.
+    pub fn range(&self, stage: usize) -> (usize, usize) {
+        self.ranges[stage]
+    }
+
+    /// All stage ranges, in stage order (they tile `0..layers`).
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// The stage-boundary analogue of [`ShardPlan::validate_schedule`]: the
+    /// inter-stage hand-off moves raw u8 activation codes, and a handed-off
+    /// map stays on its narrowest-consumer grid ([`map_consumer_bits`],
+    /// computed over the *full* net at compile time) only because the
+    /// transfer never re-quantizes — which holds for the integer schedules.
+    /// fp32 feature maps (4-byte elements, no code grid) cannot pipeline.
+    pub fn validate_schedule(&self, schedule: &PrecisionMap) -> Result<(), String> {
+        if self.stages > 1 && schedule.default_precision() == Precision::Fp32 {
+            return Err(
+                "pipeline parallelism is integer-only: stage hand-offs exchange \
+                 u8 codes on the consumer bit-plane grid, which fp32 maps do not have"
+                    .to_string(),
+            );
+        }
+        Ok(())
+    }
+}
+
 /// `2^bits − 1`: the top of a `bits`-bit unsigned code grid.
 pub fn grid_qmax(bits: u8) -> u32 {
     (1u32 << bits) - 1
@@ -566,7 +716,7 @@ impl ModelRunner {
         schedule: &PrecisionMap,
         input: Option<&[u8]>,
     ) -> ModelRun {
-        let emitted = crate::program::builder::emit_model(sim, net, schedule, input, None);
+        let emitted = crate::program::builder::emit_model(sim, net, schedule, input, None, None);
         ModelRun {
             reports: emitted.reports,
             out_addr: emitted.out_addr,
@@ -769,6 +919,75 @@ mod tests {
     }
 
     #[test]
+    fn stage_plan_balances_costs_over_valid_cuts() {
+        let net = tiny_graph(); // 4 sequential layers, every cut valid
+        let plan = StagePlan::derive_balanced(&net, 2, &[10, 10, 10, 10]).unwrap();
+        assert_eq!(plan.stages(), 2);
+        assert_eq!(plan.layers(), 4);
+        assert_eq!(plan.ranges(), &[(0, 2), (2, 4)]);
+        // A heavy first layer pulls the first cut forward: min-max picks
+        // {30} | {10, 10, 10} over {30, 10} | {10, 10}.
+        let skewed = StagePlan::derive_balanced(&net, 2, &[30, 10, 10, 10]).unwrap();
+        assert_eq!(skewed.ranges(), &[(0, 1), (1, 4)]);
+        // stages == 1: one range covering the whole net.
+        let one = StagePlan::derive_balanced(&net, 1, &[1, 1, 1, 1]).unwrap();
+        assert_eq!(one.ranges(), &[(0, 4)]);
+        // Degenerate requests are rejected with readable reasons.
+        assert!(StagePlan::derive_balanced(&net, 0, &[1, 1, 1, 1]).is_err());
+        let err = StagePlan::derive_balanced(&net, 5, &[1, 1, 1, 1]).unwrap_err();
+        assert!(err.contains("only 4 layers"), "{err}");
+        assert!(StagePlan::derive_balanced(&net, 2, &[1, 1]).is_err(), "cost len");
+    }
+
+    #[test]
+    fn stage_plan_never_cuts_through_a_residual_block() {
+        // stem → c1 → c2(+skip from map 1) → pool → fc: the skip edge spans
+        // map 2, so the cut before layer 2 is invalid; all others are fine.
+        let mut layers = tiny_layers();
+        let c2 = crate::nn::ConvLayer {
+            name: "c2".into(),
+            residual: true,
+            ..match &layers[1].kind {
+                crate::nn::LayerKind::Conv(c) => c.clone(),
+                _ => unreachable!(),
+            }
+        };
+        layers.insert(
+            2,
+            crate::nn::NetLayer {
+                kind: crate::nn::LayerKind::Conv(c2),
+                input: 2,
+                residual_from: Some(1),
+            },
+        );
+        layers[3].input = 3;
+        layers[4].input = 4;
+        let net = NetGraph::new("res-test@10", 10, layers).unwrap();
+        // Uniform costs would prefer the (invalid) cut before layer 2 at 2
+        // stages ({2}|{3} split is impossible): the plan must route around
+        // it.
+        let plan = StagePlan::derive_balanced(&net, 2, &[1; 5]).unwrap();
+        for s in 0..plan.stages() {
+            let (lo, _) = plan.range(s);
+            assert_ne!(lo, 2, "cut through the residual block");
+        }
+        // 4 stages exist (cuts at 1, 3, 4); 5 would need the forbidden cut.
+        assert!(StagePlan::derive_balanced(&net, 4, &[1; 5]).is_ok());
+        let err = StagePlan::derive_balanced(&net, 5, &[1; 5]).unwrap_err();
+        assert!(err.contains("at most 4 pipeline stages"), "{err}");
+    }
+
+    #[test]
+    fn stage_plan_rejects_fp32_at_multiple_stages() {
+        let net = tiny_graph();
+        let two = StagePlan::derive_balanced(&net, 2, &[1; 4]).unwrap();
+        assert!(two.validate_schedule(&PrecisionMap::uniform(Precision::Fp32)).is_err());
+        assert!(two.validate_schedule(&PrecisionMap::uniform(Precision::Int8)).is_ok());
+        let one = StagePlan::derive_balanced(&net, 1, &[1; 4]).unwrap();
+        assert!(one.validate_schedule(&PrecisionMap::uniform(Precision::Fp32)).is_ok());
+    }
+
+    #[test]
     fn netgraph_runner_emits_identically_to_the_raw_layer_list() {
         // Default-path regression guard: driving the shared emission routine
         // through the `NetGraph` wrapper must report exactly the cycle
@@ -791,7 +1010,8 @@ mod tests {
         let via_graph = ModelRunner::run_scheduled(&mut sim_g, &graph, &sched, None);
         let mut sim_r = Sim::new(MachineConfig::quark(4));
         sim_r.set_mode(SimMode::TimingOnly);
-        let via_raw = crate::program::builder::emit_model(&mut sim_r, &raw, &sched, None, None);
+        let via_raw =
+            crate::program::builder::emit_model(&mut sim_r, &raw, &sched, None, None, None);
         assert_eq!(via_graph.reports.len(), via_raw.reports.len());
         for (g, r) in via_graph.reports.iter().zip(via_raw.reports.iter()) {
             assert_eq!(g.name, r.name);

@@ -22,6 +22,7 @@
 //! | `quarknet` | VGG-style plain feedforward (6 convs, stride-2 downsampling) | 100 |
 //! | `mlp` | 3-layer fully-connected stack over the raw input plane | 10 |
 //! | `tiny` | the serving demo net (4 convs + pool + FC) | 100 |
+//! | `attn-tiny` | integer attention-block surrogate (deep uniform FC stack) | 100 |
 //!
 //! All integer-quantized layers keep `K % 64 == 0` (word-aligned bit
 //! planes) and every graph reads the shared [`INPUT_ELEMS`]-byte input
@@ -83,6 +84,14 @@ const ENTRIES: &[ZooEntry] = &[
         about: "serving demo net: 4 convs + pool + FC",
         build: tiny,
         fast_layers: 6,
+    },
+    ZooEntry {
+        name: "attn-tiny",
+        default_classes: 100,
+        about: "integer attention-block surrogate: 3 blocks of QKV/score/FFN GEMMs, \
+                softmax-free requant normalization",
+        build: attn_tiny,
+        fast_layers: 8,
     },
 ];
 
@@ -148,17 +157,40 @@ fn build_graph(e: &ZooEntry, classes: usize, keep: usize) -> Result<NetGraph, St
         .map_err(|err| format!("zoo model {:?} failed validation: {err}", e.name))
 }
 
+/// Parse `name[@classes]`. Every malformed shape is rejected with its own
+/// reason instead of falling through to a misleading "unknown model" (empty
+/// name) or a late range check (zero classes): empty name, empty class
+/// count, non-numeric class count (which also catches trailing garbage like
+/// `tiny@100x` or `tiny@100 extra`), and an explicit zero.
 fn parse_spec(spec: &str) -> Result<(&str, Option<usize>), String> {
     let spec = spec.trim();
-    match spec.split_once('@') {
-        None => Ok((spec, None)),
+    let (name, classes) = match spec.split_once('@') {
+        None => (spec, None),
         Some((name, c)) => {
-            let classes = c
+            if c.is_empty() {
+                return Err(format!(
+                    "bad model spec {spec:?}: empty class count (want name[@classes])"
+                ));
+            }
+            if !c.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(format!(
+                    "bad model spec {spec:?}: class count {c:?} is not a number \
+                     (want name[@classes])"
+                ));
+            }
+            let classes: usize = c
                 .parse()
-                .map_err(|_| format!("bad model spec {spec:?} (want name[@classes])"))?;
-            Ok((name, Some(classes)))
+                .map_err(|_| format!("bad model spec {spec:?}: class count {c:?} out of range"))?;
+            if classes == 0 {
+                return Err(format!("bad model spec {spec:?}: class count must be ≥ 1"));
+            }
+            (name, Some(classes))
         }
+    };
+    if name.is_empty() {
+        return Err(format!("bad model spec {spec:?}: empty model name (want name[@classes])"));
     }
+    Ok((name, classes))
 }
 
 fn conv(name: &str, h: usize, c_in: usize, c_out: usize, stride: usize, quantized: bool) -> ConvLayer {
@@ -221,6 +253,54 @@ fn tiny(num_classes: usize) -> Vec<NetLayer> {
     ]
 }
 
+/// Integer-only attention-block surrogate — the deep *uniform* FC stack the
+/// CNN zoo cannot provide, built for pipeline-parallel scaling
+/// ([`crate::cluster::pipeline`]). One embedding GEMM folds the input plane
+/// to `d_model = 512`, then 3 attention-shaped blocks, then the classifier:
+///
+/// * `q`/`k`/`v` — the projection GEMMs;
+/// * `score` — the QK^T-shaped contraction, run as an int8 GEMM through the
+///   existing matmul kernel (batch-1 serving collapses the sequence axis,
+///   so its `[512 × 512]` shape stands in for the attention map);
+/// * `attn_out` — the output projection;
+/// * `ffn_up`/`ffn_down` — the `512 → 768 → 512` feed-forward pair.
+///
+/// There is no exp/softmax anywhere: normalization is *softmax-free*,
+/// folded into the `score` layer's per-channel requant scale (a
+/// shift-style rescale on the output code grid — the integer-only
+/// normalization trick sub-byte accelerators use in place of a float
+/// softmax). Weights are synthetic everywhere in this codebase, so the
+/// stack is shape- and schedule-true rather than semantics-true: what it
+/// exercises is 23 uniform GEMMs whose K axes (3072/512/768) are all
+/// 64-bit-plane aligned and whose near-equal per-layer cost is exactly the
+/// profile that pipeline stages balance well and tensor sharding cannot
+/// accelerate past one request in flight.
+fn attn_tiny(num_classes: usize) -> Vec<NetLayer> {
+    const D: usize = 512;
+    const FFN: usize = 768;
+    fn push_fc(layers: &mut Vec<NetLayer>, k: usize, n: usize, name: String) {
+        let input = layers.len();
+        layers.push(NetLayer { kind: LayerKind::Fc { k, n, name }, input, residual_from: None });
+    }
+    let mut layers = Vec::with_capacity(23);
+    push_fc(&mut layers, INPUT_ELEMS, D, "embed".into());
+    for b in 0..3 {
+        for (k, n, suffix) in [
+            (D, D, "q"),
+            (D, D, "k"),
+            (D, D, "v"),
+            (D, D, "score"),
+            (D, D, "attn_out"),
+            (D, FFN, "ffn_up"),
+            (FFN, D, "ffn_down"),
+        ] {
+            push_fc(&mut layers, k, n, format!("b{b}_{suffix}"));
+        }
+    }
+    push_fc(&mut layers, D, num_classes, "fc".into());
+    layers
+}
+
 /// The generic mixed schedule for any zoo model: stage-1 convolutions
 /// (`_s1` names) and every FC layer at int8, everything else 2-bit — for
 /// ResNet graphs this is exactly
@@ -270,6 +350,69 @@ mod tests {
         assert!(model("resnet18-cifar@9999").is_err());
         let err = model("bogus").unwrap_err();
         assert!(err.contains("unknown model") && err.contains("resnet18-cifar"), "{err}");
+    }
+
+    #[test]
+    fn malformed_specs_each_get_their_own_rejection() {
+        // Empty name — not "unknown model \"\"".
+        let err = model("@100").unwrap_err();
+        assert!(err.contains("empty model name"), "{err}");
+        let err = model("").unwrap_err();
+        assert!(err.contains("empty model name"), "{err}");
+        let err = model("   ").unwrap_err();
+        assert!(err.contains("empty model name"), "{err}");
+        // Empty class count.
+        let err = model("tiny@").unwrap_err();
+        assert!(err.contains("empty class count"), "{err}");
+        // Non-numeric class count.
+        let err = model("tiny@ten").unwrap_err();
+        assert!(err.contains("not a number"), "{err}");
+        // Trailing garbage after a numeric count.
+        let err = model("tiny@100x").unwrap_err();
+        assert!(err.contains("not a number"), "{err}");
+        let err = model("tiny@100 extra").unwrap_err();
+        assert!(err.contains("not a number"), "{err}");
+        // Sign characters are garbage too (no silent "+100" acceptance).
+        let err = model("tiny@+100").unwrap_err();
+        assert!(err.contains("not a number"), "{err}");
+        // Zero classes — rejected at parse, not by the later range check.
+        let err = model("tiny@0").unwrap_err();
+        assert!(err.contains("must be ≥ 1"), "{err}");
+        // A second '@' lands in the class count and is garbage there.
+        let err = model("tiny@10@10").unwrap_err();
+        assert!(err.contains("not a number"), "{err}");
+        // Absurdly large counts overflow usize and report range, not panic.
+        let err = model("tiny@99999999999999999999999999").unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn attn_tiny_is_a_deep_uniform_fc_stack() {
+        let net = model("attn-tiny").unwrap();
+        assert_eq!(net.len(), 23, "embed + 3×7 block GEMMs + classifier");
+        assert_eq!(net.num_classes(), 100);
+        assert!(
+            net.layers().iter().all(|l| matches!(l.kind, LayerKind::Fc { .. })),
+            "every layer is a GEMM"
+        );
+        assert!(
+            net.layers().iter().all(|l| l.residual_from.is_none()),
+            "no skip edges: every stage cut is valid"
+        );
+        // Deep-uniform: no single layer dominates, so pipeline stages can
+        // balance. The embed GEMM (K = 3072) is the widest; it must still
+        // be under half the total estimated work.
+        let weights: Vec<usize> = net
+            .layers()
+            .iter()
+            .map(|l| match &l.kind {
+                LayerKind::Fc { k, n, .. } => k * n,
+                _ => 0,
+            })
+            .collect();
+        let total: usize = weights.iter().sum();
+        let max = *weights.iter().max().unwrap();
+        assert!(max * 2 < total, "one layer dominates: {max}/{total}");
     }
 
     #[test]

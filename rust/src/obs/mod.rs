@@ -28,8 +28,8 @@ pub mod export;
 pub mod profile;
 
 pub use profile::{
-    profile_cluster, profile_on_fresh_core, profile_program, ClusterProfile, LayerCycles, OpClass,
-    ProgramProfile, N_CLASSES,
+    profile_cluster, profile_on_fresh_core, profile_pipeline, profile_program, ClusterProfile,
+    LayerCycles, OpClass, PipelineProfile, ProgramProfile, N_CLASSES,
 };
 
 use std::collections::VecDeque;

@@ -13,7 +13,10 @@
 //! `rust/tests/observability.rs`).
 
 use crate::arch::MachineConfig;
-use crate::cluster::{aggregate_timing, shard_mem_bytes, ClusterProgram, ClusterTiming};
+use crate::cluster::{
+    aggregate_timing, hop_cost, shard_mem_bytes, ClusterProgram, ClusterTiming, PipelineProgram,
+    PipelineTiming, StageTiming,
+};
 use crate::program::lowered::MicroOp;
 use crate::program::{relocate, CompiledProgram};
 use crate::sim::{Sim, SimMode};
@@ -245,4 +248,122 @@ pub fn profile_cluster(cluster: &ClusterProgram, machine: &MachineConfig) -> Clu
         shards.iter().map(|p| p.layers.iter().map(|l| l.cycles).collect()).collect();
     let timing = aggregate_timing(cluster, machine, &per_shard);
     ClusterProfile { shards, timing }
+}
+
+/// Cycle attribution for a pipeline-parallel deployment: one
+/// [`ProgramProfile`] per stage core plus the fill/period/bubble model
+/// ([`PipelineTiming`]) rebuilt from the profiled compute cycles — the same
+/// figures [`crate::cluster::pipeline_timing`] measures, so the coordinator's
+/// cached timing and the profiler agree exactly.
+#[derive(Clone, Debug)]
+pub struct PipelineProfile {
+    /// Per-stage profiles, in stage order.
+    pub stages: Vec<ProgramProfile>,
+    /// The fill + (tokens − 1) · period cycle model over those stages.
+    pub timing: PipelineTiming,
+}
+
+impl PipelineProfile {
+    /// Element-wise sum of the stage cores' per-class cycles (core-cycles,
+    /// not latency — stages overlap in time once the pipeline fills).
+    pub fn class_cycles(&self) -> [u64; N_CLASSES] {
+        let mut sum = [0u64; N_CLASSES];
+        for p in &self.stages {
+            for (slot, &c) in sum.iter_mut().zip(&p.class_cycles) {
+                *slot += c;
+            }
+        }
+        sum
+    }
+}
+
+/// Profile every stage of `pipeline` on fresh `TimingOnly` cores and fold
+/// the totals into the pipeline model for a stream of `tokens` requests.
+///
+/// Each stage's idle share is attributed explicitly: panics unless, for
+/// every stage, `busy + bubble == total_cycles` — the conservation law the
+/// [`PipelineTiming::bubble_cycles`] docs promise. This is what lets
+/// `repro profile` explain pipeline efficiency (a stage's bubble is exactly
+/// the time it waits on the stream's bottleneck stage plus fill/drain).
+pub fn profile_pipeline(
+    pipeline: &PipelineProgram,
+    machine: &MachineConfig,
+    tokens: u64,
+) -> PipelineProfile {
+    assert!(tokens >= 1, "a pipeline stream needs at least one request");
+    let stages: Vec<ProgramProfile> = pipeline
+        .stage_programs()
+        .iter()
+        .map(|prog| profile_on_fresh_core(prog, machine))
+        .collect();
+    let n = stages.len();
+    let timing = PipelineTiming {
+        stages: pipeline
+            .stage_programs()
+            .iter()
+            .zip(&stages)
+            .enumerate()
+            .map(|(i, (prog, prof))| {
+                let info = prog.stage().expect("pipeline programs carry stage info");
+                StageTiming {
+                    range: (info.lo, info.hi),
+                    compute_cycles: prof.total_cycles,
+                    hop_cycles: if i + 1 < n {
+                        hop_cost(machine, prog.output_bytes() as u64)
+                    } else {
+                        0
+                    },
+                }
+            })
+            .collect(),
+        tokens,
+    };
+    let total = timing.total_cycles();
+    let (busy, bubbles) = (timing.busy_cycles(), timing.bubble_cycles());
+    for s in 0..n {
+        assert_eq!(
+            busy[s] + bubbles[s],
+            total,
+            "stage {s}: busy + bubble cycles must tile the modeled total"
+        );
+    }
+    assert_eq!(
+        busy.iter().sum::<u64>() + bubbles.iter().sum::<u64>(),
+        total * n as u64,
+        "Σ stage busy + bubbles must equal the modeled total across all cores"
+    );
+    PipelineProfile { stages, timing }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{compile_pipeline, pipeline_timing};
+    use crate::coordinator::demo_net;
+    use crate::nn::model::{Precision, PrecisionMap};
+
+    #[test]
+    fn pipeline_profile_agrees_with_the_timing_model() {
+        let net = demo_net();
+        let quark = MachineConfig::quark(4);
+        let sched =
+            PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
+        let p = compile_pipeline(&net, &quark, &sched, 2).unwrap();
+        let prof = profile_pipeline(&p, &quark, 8);
+        let timing = pipeline_timing(&p, &quark, 8);
+        // The profiler replays the exact instruction stream `Sim::execute`
+        // emits, so its per-stage totals match the timing model's.
+        for (s, (got, want)) in prof.timing.stages.iter().zip(timing.stages.iter()).enumerate() {
+            assert_eq!(got.compute_cycles, want.compute_cycles, "stage {s}");
+            assert_eq!(got.hop_cycles, want.hop_cycles, "stage {s}");
+        }
+        assert_eq!(prof.timing.total_cycles(), timing.total_cycles());
+        // Per-stage attribution still tiles each stage's own total.
+        for p in &prof.stages {
+            assert_eq!(p.layers.iter().map(|l| l.cycles).sum::<u64>(), p.total_cycles);
+        }
+        // Class cycles aggregate across stages.
+        let sum: u64 = prof.class_cycles().iter().sum();
+        assert_eq!(sum, prof.stages.iter().map(|p| p.total_cycles).sum::<u64>());
+    }
 }

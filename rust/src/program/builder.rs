@@ -45,7 +45,7 @@ use crate::kernels::Conv2dParams;
 use crate::nn::graph::INPUT_ELEMS;
 use crate::nn::model::{
     grid_qmax, map_consumer_bits, synth_codes, synth_f32, synth_i8, synth_input, synth_rq_params,
-    LayerReport, Precision, PrecisionMap, ShardPlan,
+    LayerReport, Precision, PrecisionMap, ShardPlan, StagePlan,
 };
 use crate::nn::{LayerKind, NetGraph, NetLayer};
 use crate::quant::pack_weight_planes;
@@ -94,7 +94,7 @@ impl ProgramBuilder {
     /// checked entry point); invalid schedules panic exactly like the live
     /// runner.
     pub fn build(self, net: &NetGraph, schedule: &PrecisionMap) -> CompiledProgram {
-        self.build_inner(net, schedule, None)
+        self.build_inner(net, schedule, None, None)
     }
 
     /// Emit one shard of a tensor-parallel deployment (see
@@ -106,7 +106,19 @@ impl ProgramBuilder {
         plan: &ShardPlan,
         shard: usize,
     ) -> CompiledProgram {
-        self.build_inner(net, schedule, Some((plan, shard)))
+        self.build_inner(net, schedule, Some((plan, shard)), None)
+    }
+
+    /// Emit one stage of a pipeline-parallel deployment (see
+    /// [`super::compile_stage`], the checked entry point).
+    pub(crate) fn build_staged(
+        self,
+        net: &NetGraph,
+        schedule: &PrecisionMap,
+        plan: &StagePlan,
+        stage: usize,
+    ) -> CompiledProgram {
+        self.build_inner(net, schedule, None, Some((plan, stage)))
     }
 
     fn build_inner(
@@ -114,9 +126,10 @@ impl ProgramBuilder {
         net: &NetGraph,
         schedule: &PrecisionMap,
         shard: Option<(&ShardPlan, usize)>,
+        stage: Option<(&StagePlan, usize)>,
     ) -> CompiledProgram {
         let base = self.sim.machine.mem.brk();
-        let emitted = emit_model(&mut self.sim, net, schedule, None, shard);
+        let emitted = emit_model(&mut self.sim, net, schedule, None, shard, stage);
         let mem_len = self.sim.machine.mem.brk() - base;
         let rec = self.sim.take_recording();
         let layers = emitted
@@ -158,6 +171,10 @@ impl ProgramBuilder {
             out_elems: emitted.out_elems,
             layers,
             shard: shard.map(|(plan, idx)| (idx, plan.shards())),
+            stage: stage.map(|(plan, idx)| {
+                let (lo, hi) = plan.range(idx);
+                super::StageInfo { index: idx, count: plan.stages(), lo, hi }
+            }),
             shard_segs: emitted.shard_segs,
             vlen_bits: self.sim.cfg.vlen_bits,
             lowered: std::sync::OnceLock::new(),
@@ -185,6 +202,18 @@ fn slice_cols<T: Copy>(w: &[T], n: usize, c0: usize, c1: usize) -> Vec<T> {
 /// `shard` activates tensor-parallel shard emission (recording sims only —
 /// a live sim could not perform the inter-layer all-gather).
 ///
+/// `stage` activates pipeline-parallel stage emission (also recording sims
+/// only, and mutually exclusive with `shard`): only the plan's layer range
+/// `[lo, hi)` is emitted, with the stage's *input segment* standing in for
+/// feature map `lo` (the previous stage's output, written per request by
+/// the pipeline runtime — [`crate::cluster::pipeline`]). Bit-exactness
+/// against the single-core emission rests on two rules: the deterministic
+/// parameter stream is advanced over the *skipped* prefix layers exactly as
+/// if they had been emitted (so in-range layers draw identical weights),
+/// and requant grids come from [`map_consumer_bits`] over the *full* net
+/// (so the upstream stage already clamped the hand-off activation onto this
+/// stage's consumer grid — the input-segment clamp is a no-op).
+///
 /// Panics on schedules that fail [`PrecisionMap::validate`] /
 /// [`PrecisionMap::validate_machine`] — the serving layer pre-validates at
 /// submission, and [`super::compile`] validates before building.
@@ -194,6 +223,7 @@ pub(crate) fn emit_model(
     schedule: &PrecisionMap,
     input: Option<&[u8]>,
     shard: Option<(&ShardPlan, usize)>,
+    stage: Option<(&StagePlan, usize)>,
 ) -> EmittedModel {
     if let Err(e) = schedule.validate(net) {
         panic!("invalid schedule: {e}");
@@ -207,6 +237,19 @@ pub(crate) fn emit_model(
             "sharded emission requires a recording Sim (the gather is host-driven)"
         );
     }
+    if let Some((plan, idx)) = stage {
+        assert!(
+            shard.is_none(),
+            "tensor sharding and pipeline staging cannot combine in one emission"
+        );
+        assert!(
+            sim.is_recording(),
+            "staged emission requires a recording Sim (stage programs exist to be replayed)"
+        );
+        assert!(idx < plan.stages(), "stage {idx} out of range (plan has {})", plan.stages());
+        assert_eq!(plan.layers(), net.len(), "stage plan derived for a different net");
+    }
+    let (stage_lo, stage_hi) = stage.map(|(p, i)| p.range(i)).unwrap_or((0, net.len()));
     let resolved = schedule.resolve(net);
     let consumer_bits = map_consumer_bits(net, &resolved);
     let fp32 = schedule.default_precision() == Precision::Fp32;
@@ -222,36 +265,61 @@ pub(crate) fn emit_model(
 
     // Feature-map addresses; map 0 is the shared CIFAR-sized input plane
     // every model reads a prefix of ([`crate::nn::graph::INPUT_ELEMS`]).
-    let input_elems = INPUT_ELEMS;
-    let in_qmax = grid_qmax(consumer_bits[0]) as u8;
+    // A stage program starting at layer `lo > 0` substitutes map `lo` (the
+    // hand-off activation) as its input segment instead.
+    let input_elems = if stage_lo == 0 { INPUT_ELEMS } else { map_elems(net, stage_lo) };
+    let in_qmax = grid_qmax(consumer_bits[stage_lo]) as u8;
     let in_addr = sim.alloc((input_elems * esz) as u64);
     if write_data {
-        // Draw the synthetic input even when an explicit one overrides it,
-        // so the weight streams below are identical either way.
-        let mut codes = synth_input(&mut seed, input_elems);
-        if let Some(bytes) = input {
-            for (i, c) in codes.iter_mut().enumerate() {
-                *c = bytes.get(i).copied().unwrap_or(0);
+        // Draw the synthetic input even when an explicit one overrides it
+        // (or, for a non-first stage, replaces it entirely), so the weight
+        // streams below are identical either way.
+        let mut codes = synth_input(&mut seed, INPUT_ELEMS);
+        if stage_lo == 0 {
+            if let Some(bytes) = input {
+                for (i, c) in codes.iter_mut().enumerate() {
+                    *c = bytes.get(i).copied().unwrap_or(0);
+                }
             }
-        }
-        if fp32 {
-            let vals: Vec<f32> = codes.iter().map(|&c| c as f32 / 255.0).collect();
-            sim.write_f32s(in_addr, &vals);
+            if fp32 {
+                let vals: Vec<f32> = codes.iter().map(|&c| c as f32 / 255.0).collect();
+                sim.write_f32s(in_addr, &vals);
+            } else {
+                for c in codes.iter_mut() {
+                    *c = (*c).min(in_qmax);
+                }
+                sim.write_bytes(in_addr, &codes);
+            }
         } else {
-            for c in codes.iter_mut() {
-                *c = (*c).min(in_qmax);
+            // The stage input is runtime-provided (the previous stage's
+            // output); record a zeroed segment so replay starts defined.
+            sim.write_bytes(in_addr, &vec![0u8; input_elems]);
+            // Skip-ahead: draw and discard the weights of every layer
+            // before `lo`, keeping the deterministic stream aligned with
+            // the single-core emission.
+            for (li, layer) in net.iter().enumerate().take(stage_lo) {
+                skip_layer_draw(&mut seed, layer, resolved[li]);
             }
-            sim.write_bytes(in_addr, &codes);
         }
     }
-    let mut maps: Vec<u64> = vec![in_addr];
+    // maps[0..stage_lo] are owned by upstream stages and never read here
+    // (the stage-plan cut rule guarantees it); poison them so a violation
+    // fails loudly.
+    let mut maps: Vec<u64> = vec![u64::MAX; stage_lo];
+    maps.push(in_addr);
     let mut reports = Vec::new();
     let mut trace_ends = Vec::new();
     let mut shard_segs = Vec::new();
 
-    for (li, layer) in net.iter().enumerate() {
+    for (li, layer) in net.iter().enumerate().take(stage_hi).skip(stage_lo) {
         let input_addr = maps[layer.input];
+        debug_assert_ne!(input_addr, u64::MAX, "stage reads a map owned by an upstream stage");
         let residual = layer.residual_from.map(|i| maps[i]);
+        debug_assert_ne!(
+            residual.unwrap_or(0),
+            u64::MAX,
+            "stage residual reads a map owned by an upstream stage"
+        );
         let lp = resolved[li];
         let out_qmax = grid_qmax(consumer_bits[li + 1]) as f32;
         // Tensor-parallel slice of this layer, when a plan is active.
@@ -472,4 +540,42 @@ pub(crate) fn emit_model(
 fn rqbuf(sim: &mut Sim, n_full: usize, k: usize, qmax: f32, (c0, c1): (usize, usize)) -> RqBuf {
     let (alphas, betas, biases) = synth_rq_params(n_full, k);
     RqBuf::create(sim, &alphas[c0..c1], &betas[c0..c1], &biases[c0..c1], qmax, 0.0)
+}
+
+/// Logical element count of feature map `idx` (map 0 is the network input;
+/// layer `i` writes map `i + 1`) — the size of a pipeline stage's hand-off
+/// activation.
+fn map_elems(net: &[NetLayer], idx: usize) -> usize {
+    if idx == 0 {
+        return INPUT_ELEMS;
+    }
+    match &net[idx - 1].kind {
+        LayerKind::Conv(c) => c.params.out_h() * c.params.out_w() * c.params.c_out,
+        LayerKind::AvgPool { c, .. } => *c,
+        LayerKind::Fc { n, .. } => *n,
+    }
+}
+
+/// Advance the deterministic parameter stream over one *skipped* layer of a
+/// stage emission: draw (and discard) exactly the values the layer's kernel
+/// path would have drawn, so downstream layers see the single-core stream.
+/// Pooling draws nothing; requant parameters ([`synth_rq_params`]) are
+/// seedless and need no skip.
+fn skip_layer_draw(seed: &mut u64, layer: &NetLayer, precision: Precision) {
+    let (k, n) = match &layer.kind {
+        LayerKind::Conv(c) => (c.params.k(), c.params.c_out),
+        LayerKind::Fc { k, n, .. } => (*k, *n),
+        LayerKind::AvgPool { .. } => return,
+    };
+    match precision {
+        Precision::Fp32 => {
+            let _ = synth_f32(seed, k * n);
+        }
+        Precision::Int8 => {
+            let _ = synth_i8(seed, k * n);
+        }
+        Precision::Sub { wbits, .. } => {
+            let _ = synth_codes(seed, k * n, wbits);
+        }
+    }
 }

@@ -181,6 +181,22 @@ impl ShardSeg {
     }
 }
 
+/// Pipeline-stage identity of a [`compile_stage`] artifact: which contiguous
+/// layer range of the source net this program executes, and where it sits in
+/// the stage sequence. The pipeline runtime ([`crate::cluster::pipeline`])
+/// validates a stage set against these before streaming requests through it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageInfo {
+    /// Stage index in `0..count`.
+    pub index: usize,
+    /// Total stages of the plan this program was compiled under.
+    pub count: usize,
+    /// First layer (inclusive) of the stage's range in the source net.
+    pub lo: usize,
+    /// Last layer (exclusive) of the stage's range in the source net.
+    pub hi: usize,
+}
+
 /// The network-input segment of a program: where replay writes per-request
 /// input bytes, and how they are encoded.
 #[derive(Clone, Debug)]
@@ -226,6 +242,9 @@ pub struct CompiledProgram {
     /// `(shard index, shard count)` for tensor-parallel shard programs
     /// ([`compile_shard`]); `None` for single-core programs.
     pub(crate) shard: Option<(usize, usize)>,
+    /// Stage identity for pipeline-stage programs ([`compile_stage`]);
+    /// `None` for single-core and tensor-shard programs.
+    pub(crate) stage: Option<StageInfo>,
     /// One [`ShardSeg`] per layer on shard programs; empty otherwise.
     pub(crate) shard_segs: Vec<ShardSeg>,
     /// VLEN the program was compiled for — the lowering pass needs it to
@@ -318,6 +337,12 @@ impl CompiledProgram {
         &self.shard_segs
     }
 
+    /// Stage identity of a pipeline-stage program ([`compile_stage`]);
+    /// `None` for single-core and tensor-shard programs.
+    pub fn stage(&self) -> Option<StageInfo> {
+        self.stage
+    }
+
     /// The decode-once lowering of this program's trace, built on first use
     /// and cached for the program's lifetime. [`crate::sim::Sim::execute_lowered`]
     /// replays it; [`crate::sim::Sim::execute_functional`] stays the
@@ -398,6 +423,45 @@ pub fn compile_shard(
     debug_assert!(
         prog.verify_report().ok(),
         "compile_shard produced an unverifiable artifact:\n{}",
+        prog.verify_report()
+    );
+    Ok(prog)
+}
+
+/// Compile stage `stage` of a pipeline-parallel cluster deployment: the same
+/// validated emission as [`compile`], restricted to the plan's contiguous
+/// layer range — the stage's *input segment* is the hand-off activation map
+/// written per request by the pipeline runtime ([`crate::cluster::pipeline`]).
+/// The deterministic parameter stream is advanced over the skipped prefix
+/// layers and requant grids come from the *full* net, so chained stage
+/// programs produce logits bit-identical to the single-core program. At
+/// `plan.stages() == 1` the emission is instruction- and image-identical to
+/// [`compile`].
+pub fn compile_stage(
+    net: &NetGraph,
+    machine: &MachineConfig,
+    schedule: &PrecisionMap,
+    plan: &crate::nn::model::StagePlan,
+    stage: usize,
+) -> Result<CompiledProgram, String> {
+    schedule.validate(net)?;
+    schedule.validate_machine(net, machine)?;
+    plan.validate_schedule(schedule)?;
+    if plan.layers() != net.len() {
+        return Err(format!(
+            "stage plan covers {} layers but the net has {}",
+            plan.layers(),
+            net.len()
+        ));
+    }
+    if stage >= plan.stages() {
+        return Err(format!("stage {stage} out of range (plan has {})", plan.stages()));
+    }
+    let prog = ProgramBuilder::new(machine.clone()).build_staged(net, schedule, plan, stage);
+    #[cfg(debug_assertions)]
+    debug_assert!(
+        prog.verify_report().ok(),
+        "compile_stage produced an unverifiable artifact:\n{}",
         prog.verify_report()
     );
     Ok(prog)

@@ -1318,6 +1318,7 @@ pub mod corrupt {
             out_elems: p.out_elems,
             layers: p.layers.clone(),
             shard: p.shard,
+            stage: p.stage,
             shard_segs: p.shard_segs.clone(),
             vlen_bits: p.vlen_bits,
             lowered: std::sync::OnceLock::new(),

@@ -11,7 +11,9 @@
 //! fraction) and the modeled inter-core all-gather (the sync fraction).
 
 use crate::arch::MachineConfig;
-use crate::cluster::{cluster_timing, compile_cluster, ClusterTiming};
+use crate::cluster::{
+    cluster_timing, compile_cluster, compile_pipeline, pipeline_timing, ClusterTiming,
+};
 use crate::nn::model::{Precision, PrecisionMap};
 use crate::nn::resnet::resnet18_mixed_schedule;
 use crate::nn::{zoo, NetGraph};
@@ -142,6 +144,142 @@ impl ClusterReport {
     }
 }
 
+/// One (schedule, core count) point comparing the two parallelism axes on
+/// the same workload at the same core budget: tensor sharding's per-request
+/// latency (which bounds its sustained throughput — one request occupies
+/// every shard core end to end) vs the pipeline's steady-state period (one
+/// request completes per period once the pipe is full).
+#[derive(Clone, Debug)]
+pub struct ModeRow {
+    pub schedule: String,
+    pub cores: usize,
+    /// Tensor-parallel modeled latency at `cores` shards (= cycles between
+    /// completions under back-to-back requests).
+    pub tensor_cycles: u64,
+    /// Pipeline fill latency at `cores` stages (first-request latency).
+    pub pipeline_fill: u64,
+    /// Pipeline steady-state period (cycles between completions).
+    pub pipeline_period: u64,
+    /// Σ inter-stage hop cycles (charged like the all-gather, per request).
+    pub pipeline_hops: u64,
+    /// `tensor_cycles / pipeline_period` — above 1.0 the pipeline sustains
+    /// more requests per second than tensor sharding on the same cores.
+    pub sustained_ratio: f64,
+    /// Mean modeled stage utilization over a [`STREAM_TOKENS`]-deep stream.
+    pub mean_stage_util: f64,
+}
+
+/// The tensor-vs-pipeline sweep.
+#[derive(Clone, Debug)]
+pub struct ModeReport {
+    pub machine: String,
+    pub net: String,
+    pub rows: Vec<ModeRow>,
+}
+
+/// Stream depth used for the mode sweep's stage-utilization column (deep
+/// enough that fill bubbles stop dominating, small enough to model a
+/// realistic burst).
+pub const STREAM_TOKENS: u64 = 16;
+
+/// Run the tensor-vs-pipeline comparison on `net` at `core_counts`
+/// (Quark-4L, uniform w2a2 and int8 — schedules every zoo model deploys).
+pub fn generate_modes(net: &NetGraph, core_counts: &[usize]) -> ModeReport {
+    let machine = MachineConfig::quark(4);
+    let w2a2 = PrecisionMap::uniform(Precision::Sub { abits: 2, wbits: 2, use_vbitpack: true });
+    let int8 = PrecisionMap::uniform(Precision::Int8);
+    let mut rows = Vec::new();
+    for (label, sched) in [("w2a2", &w2a2), ("int8", &int8)] {
+        for &n in core_counts {
+            let cluster = compile_cluster(net, &machine, sched, n)
+                .unwrap_or_else(|e| panic!("tensor compile {label} at {n} cores: {e}"));
+            let tensor = cluster_timing(&cluster, &machine);
+            let pipeline = compile_pipeline(net, &machine, sched, n)
+                .unwrap_or_else(|e| panic!("pipeline compile {label} at {n} cores: {e}"));
+            let pt = pipeline_timing(&pipeline, &machine, STREAM_TOKENS);
+            let util = pt.stage_utilization();
+            let period = pt.period_cycles();
+            rows.push(ModeRow {
+                schedule: label.to_string(),
+                cores: n,
+                tensor_cycles: tensor.total_cycles(),
+                pipeline_fill: pt.fill_cycles(),
+                pipeline_period: period,
+                pipeline_hops: pt.stages.iter().map(|s| s.hop_cycles).sum(),
+                sustained_ratio: tensor.total_cycles() as f64 / period.max(1) as f64,
+                mean_stage_util: util.iter().sum::<f64>() / util.len().max(1) as f64,
+            });
+        }
+    }
+    ModeReport { machine: machine.name.clone(), net: net.name().to_string(), rows }
+}
+
+impl ModeReport {
+    fn cells(&self) -> Vec<Vec<String>> {
+        self.rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.schedule.clone(),
+                    r.cores.to_string(),
+                    r.tensor_cycles.to_string(),
+                    r.pipeline_fill.to_string(),
+                    r.pipeline_period.to_string(),
+                    r.pipeline_hops.to_string(),
+                    format!("{:.2}", r.sustained_ratio),
+                    format!("{:.2}", r.mean_stage_util),
+                ]
+            })
+            .collect()
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut out = format!(
+            "# Tensor vs pipeline parallelism — {} sustained throughput ({})\n\n",
+            self.net, self.machine
+        );
+        out.push_str(&super::md_table(
+            &[
+                "schedule",
+                "cores",
+                "tensor cycles",
+                "pipe fill",
+                "pipe period",
+                "pipe hops",
+                "sustained ratio",
+                "stage util",
+            ],
+            &self.cells(),
+        ));
+        out.push_str(
+            "\nTensor sharding optimizes per-request latency but replicates the \
+             per-request input packing on every shard and pays an all-gather per \
+             layer; its sustained throughput is 1/latency. The pipeline keeps each \
+             request on one core per stage — under a steady stream a request \
+             completes every `period = max(stage)` cycles, so `sustained ratio = \
+             tensor cycles / pipe period` above 1.0 means the pipeline serves more \
+             requests per second on the same cores (at the cost of fill latency).\n",
+        );
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        super::csv(
+            &[
+                "schedule",
+                "cores",
+                "tensor_cycles",
+                "pipeline_fill",
+                "pipeline_period",
+                "pipeline_hops",
+                "sustained_ratio",
+                "mean_stage_util",
+            ],
+            &self.cells(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +312,30 @@ mod tests {
         let md = rep.markdown();
         assert!(md.contains("strong scaling"));
         assert!(rep.csv().lines().count() == 10);
+    }
+
+    #[test]
+    fn mode_comparison_rows_are_consistent() {
+        let rep = generate_modes(&demo_net(), &[1, 2]);
+        assert_eq!(rep.rows.len(), 4, "2 schedules × 2 core counts");
+        for r in &rep.rows {
+            assert!(r.pipeline_fill >= r.pipeline_period, "fill covers every stage");
+            assert!(r.pipeline_period > 0);
+            if r.cores == 1 {
+                assert_eq!(r.pipeline_hops, 0, "one stage has no hand-offs");
+                assert_eq!(
+                    r.tensor_cycles, r.pipeline_fill,
+                    "{}: at one core both axes are the same single-core run",
+                    r.schedule
+                );
+                assert!((r.sustained_ratio - 1.0).abs() < 1e-9);
+            } else {
+                assert!(r.pipeline_hops > 0, "stage hand-offs are charged");
+                assert!(r.mean_stage_util > 0.0 && r.mean_stage_util <= 1.0);
+            }
+        }
+        let md = rep.markdown();
+        assert!(md.contains("sustained ratio"), "{md}");
+        assert_eq!(rep.csv().lines().count(), 5, "header + 4 rows");
     }
 }

@@ -3,7 +3,7 @@
 //! `repro profile` prints, in the same `md_table` idiom as the paper
 //! regenerators.
 
-use crate::obs::{ClusterProfile, OpClass, ProgramProfile};
+use crate::obs::{ClusterProfile, OpClass, PipelineProfile, ProgramProfile};
 
 use super::{csv, md_table};
 
@@ -135,6 +135,53 @@ pub fn cluster_markdown(c: &ClusterProfile) -> String {
         classes_markdown(
             &format!("{model} · {schedule} · all shard cores"),
             &c.class_cycles(),
+            class_total
+        )
+    )
+}
+
+/// Staged report: per-stage timeline (layer range, compute, hop cost, busy
+/// / bubble split over the profiled stream) and the summed per-class mix
+/// (core-cycles — stages overlap in time, so these sum across cores).
+pub fn pipeline_markdown(p: &PipelineProfile) -> String {
+    let model = p.stages.first().map(|s| s.model.as_str()).unwrap_or("-");
+    let schedule = p.stages.first().map(|s| s.schedule.as_str()).unwrap_or("-");
+    let total = p.timing.total_cycles();
+    let busy = p.timing.busy_cycles();
+    let bubbles = p.timing.bubble_cycles();
+    let util = p.timing.stage_utilization();
+    let stage_rows: Vec<Vec<String>> = p
+        .timing
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            vec![
+                format!("stage {i}"),
+                format!("{}..{}", s.range.0, s.range.1),
+                s.compute_cycles.to_string(),
+                s.hop_cycles.to_string(),
+                busy[i].to_string(),
+                bubbles[i].to_string(),
+                format!("{:.2}", util[i]),
+            ]
+        })
+        .collect();
+    let class_total: u64 = p.class_cycles().iter().sum();
+    format!(
+        "### {model} · {schedule} · {} stages — pipeline timeline \
+         ({} requests streamed: fill {}, period {}, total {total})\n\n{}\n{}",
+        p.stages.len(),
+        p.timing.tokens,
+        p.timing.fill_cycles(),
+        p.timing.period_cycles(),
+        md_table(
+            &["stage", "layers", "compute cycles", "hop cycles", "busy", "bubble", "util"],
+            &stage_rows
+        ),
+        classes_markdown(
+            &format!("{model} · {schedule} · all stage cores"),
+            &p.class_cycles(),
             class_total
         )
     )
